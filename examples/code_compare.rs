@@ -1,0 +1,28 @@
+//! §4.1 code comparison: print the legacy- and portable-built runtime
+//! libraries, diff them, and classify the differences.
+
+use omprt::devrt::{self, RuntimeKind};
+use omprt::ir::printer::{diff_text, print_module};
+use omprt::sim::Arch;
+
+fn main() {
+    for arch in Arch::all() {
+        let legacy = devrt::build(RuntimeKind::Legacy, arch);
+        let portable = devrt::build(RuntimeKind::Portable, arch);
+        let a = print_module(&legacy.ir_library);
+        let b = print_module(&portable.ir_library);
+        let d = diff_text(&a, &b);
+        println!("== {arch} ==");
+        println!("  library text: legacy {} lines, portable {} lines", a.lines().count(), b.lines().count());
+        println!("  differing lines: {} legacy-only, {} portable-only", d.only_a.len(), d.only_b.len());
+        println!("  diff is metadata + symbol mangling only: {}", d.only_metadata_and_mangling());
+        println!("  sample legacy-only lines:");
+        for l in d.only_a.iter().take(4) {
+            println!("    {l}");
+        }
+        println!("  sample portable-only lines:");
+        for l in d.only_b.iter().take(4) {
+            println!("    {l}");
+        }
+    }
+}

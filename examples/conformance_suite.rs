@@ -1,0 +1,19 @@
+//! §4.2 functional testing: run the SOLLVE-analog conformance suite under
+//! every (runtime, arch) configuration and check the reports agree.
+
+use omprt::conformance::run_matrix;
+
+fn main() {
+    let (rows, identical) = run_matrix();
+    for (kind, arch, outcomes) in &rows {
+        let pass = outcomes.iter().filter(|o| o.result.is_ok()).count();
+        println!("{kind:>8} / {arch:<8}: {pass}/{} passed", outcomes.len());
+        for o in outcomes {
+            if let Err(e) = &o.result {
+                println!("  FAIL {}: {e}", o.name);
+            }
+        }
+    }
+    println!("\nreports identical across all configurations: {identical}");
+    assert!(identical);
+}

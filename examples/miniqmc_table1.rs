@@ -1,0 +1,20 @@
+//! Table 1: per-target-region profile of the miniQMC proxy app
+//! (evaluate_vgh, evaluateDetRatios) under both runtime builds.
+//!
+//! Usage: cargo run --release --example miniqmc_table1 [paper]
+
+use omprt::benchmarks::harness::{format_table1, run_table1};
+use omprt::benchmarks::Scale;
+use omprt::runtime::{artifact, ArtifactManifest};
+use omprt::sim::Arch;
+
+fn main() -> Result<(), omprt::util::Error> {
+    let paper = std::env::args().any(|a| a == "paper");
+    let scale = if paper { Scale::Paper } else { Scale::Small };
+    let man = ArtifactManifest::load(&artifact::default_dir())
+        .map_err(|e| omprt::util::Error::Config(format!("run `make artifacts` first: {e}")))?;
+    let rows = run_table1(Arch::Nvptx64, scale, &man)?;
+    println!("Table 1 — miniqmc_sync_move target-region profile (nvprof analog):\n");
+    print!("{}", format_table1(&rows));
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: build a tiny kernel against the portable runtime, offload
+//! it, and read the result back — the smallest end-to-end use of the
+//! public API.
+
+use omprt::coordinator::Coordinator;
+use omprt::devrt::{irlib, RuntimeKind};
+use omprt::hostrt::{DataEnv, MapType};
+use omprt::ir::passes::OptLevel;
+use omprt::ir::{FunctionBuilder, Module, Operand, Type};
+use omprt::sim::{Arch, LaunchConfig};
+
+fn main() -> Result<(), omprt::util::Error> {
+    // 1. A device kernel: every thread atomically adds its id.
+    let mut m = Module::new("quickstart");
+    let mut b = FunctionBuilder::new("sum_ids", &[Type::I64], None).kernel();
+    let out = b.param(0);
+    irlib::emit_spmd_prologue(&mut b);
+    let tid = b.call("gpu.tid.x", &[], Type::I32);
+    b.call("__kmpc_atomic_add", &[out.into(), tid.into()], Type::I32);
+    irlib::emit_spmd_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+
+    // 2. A coordinator = simulated device + the portable runtime build.
+    let c = Coordinator::new(RuntimeKind::Portable, Arch::Nvptx64);
+    let image = c.prepare(m, OptLevel::O2)?; // links dev.rtl + optimizes
+
+    // 3. Map data, offload, read back.
+    let mut env = DataEnv::new(&c.device);
+    let mut out = vec![0u32; 1];
+    let d = env.map(&out, MapType::Tofrom)?;
+    c.run_region(&image, "sum_ids", "quickstart", &[d], LaunchConfig::new(2, 64))?;
+    env.unmap(&mut out)?;
+
+    println!("sum of thread ids over 2 teams x 64 threads = {}", out[0]);
+    assert_eq!(out[0], 2 * (0..64).sum::<u32>());
+    println!("quickstart OK");
+    Ok(())
+}

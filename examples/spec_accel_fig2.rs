@@ -1,0 +1,27 @@
+//! END-TO-END DRIVER (Fig. 2): run the full SPEC ACCEL-analog suite under
+//! the original (legacy) and new (portable) device runtimes, verify every
+//! benchmark against its host reference, and print the comparison table.
+//!
+//! Usage: cargo run --release --example spec_accel_fig2 [paper] [reps]
+
+use omprt::benchmarks::harness::{format_fig2, run_fig2};
+use omprt::benchmarks::Scale;
+use omprt::runtime::{artifact, ArtifactManifest};
+use omprt::sim::Arch;
+
+fn main() -> Result<(), omprt::util::Error> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale = if args.iter().any(|a| a == "paper") { Scale::Paper } else { Scale::Small };
+    let reps: u32 = args.iter().filter_map(|a| a.parse().ok()).next().unwrap_or(5);
+    let man = ArtifactManifest::load(&artifact::default_dir()).ok();
+    if man.is_none() {
+        eprintln!("note: artifacts missing; payload benchmarks skipped (run `make artifacts`)");
+    }
+    let rows = run_fig2(Arch::Nvptx64, scale, reps, man.as_ref())?;
+    println!("Fig. 2 — execution time, original vs new device runtime ({reps} reps):\n");
+    print!("{}", format_fig2(&rows));
+    let worst = rows.iter().map(|r| r.rel).fold(0.0, f64::max);
+    println!("\nmax relative difference: {:.2}% (paper: <1% = noise)", worst * 100.0);
+    assert!(rows.iter().all(|r| r.verified), "verification failure");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+"""AOT lowering: JAX payloads → HLO **text** artifacts + manifest.
+
+Run once by `make artifacts`; the Rust binary is self-contained after.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+published `xla` crate's backend) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_str(shape) -> str:
+    return "x".join(str(d) for d in shape)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower payloads to HLO text")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest_lines = []
+    for name, (fn, in_shapes, out_shape) in sorted(model.PAYLOADS.items()):
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        ins = ", ".join(f'"{shape_str(s)}"' for s in in_shapes)
+        manifest_lines += [
+            f"[{name}]",
+            f'file = "{fname}"',
+            f"inputs = [{ins}]",
+            f'output = "{shape_str(out_shape)}"',
+            "",
+        ]
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    (out_dir / "manifest.toml").write_text("\n".join(manifest_lines))
+    print(f"wrote manifest.toml with {len(model.PAYLOADS)} payloads")
+
+
+if __name__ == "__main__":
+    main()

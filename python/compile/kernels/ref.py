@@ -1,0 +1,48 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain `jax.numpy` ops. pytest (python/tests/) asserts
+`assert_allclose(pallas(x), ref(x))` over hypothesis-generated inputs —
+this is the core correctness signal for the L1 layer.
+"""
+
+import jax.numpy as jnp
+
+# Five-point stencil coefficients (heat diffusion step).
+STENCIL_C = 0.5
+STENCIL_N = 0.125
+
+
+def stencil_tile(inp):
+    """One Jacobi step on a (R+2, C) slab.
+
+    Input rows 0 and R+1 are the halo; output has R rows and the same C
+    columns, with the edge columns (0 and C-1) passed through unchanged so
+    that the result can be written back contiguously.
+    """
+    r = inp.shape[0] - 2
+    center = inp[1 : r + 1, :]
+    up = inp[0:r, :]
+    down = inp[2 : r + 2, :]
+    out = center
+    interior = (
+        STENCIL_C * center[:, 1:-1]
+        + STENCIL_N * (up[:, 1:-1] + down[:, 1:-1] + center[:, :-2] + center[:, 2:])
+    )
+    out = out.at[:, 1:-1].set(interior)
+    return out
+
+
+def vgh_matmul(basis, coef):
+    """miniQMC `evaluate_vgh` core: (10·P, B) basis-derivative planes times
+    (B, O) orbital coefficients → (10·P, O) value/gradient/hessian planes.
+
+    The B-spline gather+weights are evaluated on the device (IR side);
+    the heavy contraction is this matmul — the MXU-shaped part.
+    """
+    return jnp.matmul(basis, coef, preferred_element_type=jnp.float32)
+
+
+def detratio_tile(u, inv_row):
+    """miniQMC `evaluateDetRatios`: ratio_k = dot(u_k, psiM_inv_row)."""
+    return jnp.matmul(u, inv_row)

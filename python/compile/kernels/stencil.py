@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: one Jacobi (5-point) step on a row slab.
+
+The paper's 503.postencil analog offloads row stripes per team; each team
+invokes this kernel on a (R+2, C) input slab (one halo row above and
+below) and receives the R updated rows back (edge columns pass through).
+
+HARDWARE ADAPTATION (DESIGN.md §3): the CUDA version would stage the tile
+in `__shared__` memory per thread block. On TPU-shaped hardware the tile
+*is* the VMEM block: BlockSpec brings the whole slab into VMEM and the
+VPU executes the shifted adds as vector ops — no per-thread indexing.
+`interpret=True` (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(inp_ref, out_ref):
+    x = inp_ref[...]
+    r = x.shape[0] - 2
+    center = x[1 : r + 1, :]
+    up = x[0:r, :]
+    down = x[2 : r + 2, :]
+    interior = ref.STENCIL_C * center[:, 1:-1] + ref.STENCIL_N * (
+        up[:, 1:-1] + down[:, 1:-1] + center[:, :-2] + center[:, 2:]
+    )
+    out = center.at[:, 1:-1].set(interior)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=())
+def stencil_tile(inp):
+    """Pallas entry point; shape (R+2, C) -> (R, C)."""
+    r = inp.shape[0] - 2
+    c = inp.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(inp)
+
+
+# VMEM footprint estimate for DESIGN.md §8 (f32 slab in + tile out).
+def vmem_bytes(r: int, c: int) -> int:
+    return 4 * ((r + 2) * c + r * c)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: the miniQMC `evaluate_vgh` contraction.
+
+(10·P, B) basis/derivative planes × (B, O) orbital coefficients →
+(10·P, O): rows are 10 planes (value, 3 gradients, 6 hessian components)
+for each of P electron positions.
+
+HARDWARE ADAPTATION: the CUDA miniQMC walks B-spline coefficients with
+per-thread gathers into registers; on MXU hardware the profitable shape
+is a dense contraction — the device-IR side evaluates the spline basis
+weights (cheap, divergent) and this kernel does the heavy matmul on the
+systolic array. Tiled over the M dimension so each block's working set
+(one M-tile of `basis` + all of `coef`) fits comfortably in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# M tile: 10 planes × P positions is a multiple of 10; use 40 rows/tile.
+TILE_M = 40
+
+
+def _kernel(basis_ref, coef_ref, out_ref):
+    out_ref[...] = jnp.dot(
+        basis_ref[...], coef_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def vgh_matmul(basis, coef):
+    """Pallas entry point; (M, B) @ (B, O) with M tiled by TILE_M."""
+    m, b = basis.shape
+    _, o = coef.shape
+    assert m % TILE_M == 0, f"M={m} must be a multiple of {TILE_M}"
+    grid = (m // TILE_M,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, b), lambda i: (i, 0)),
+            pl.BlockSpec((b, o), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, o), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+        interpret=True,
+    )(basis, coef)
+
+
+def vmem_bytes(b: int, o: int) -> int:
+    """Per-block VMEM: one basis tile + full coef + one out tile (f32)."""
+    return 4 * (TILE_M * b + b * o + TILE_M * o)
+
+
+def mxu_utilization_estimate(b: int, o: int) -> float:
+    """Fraction of a 128×128 MXU the tile shapes can feed (DESIGN.md §8)."""
+    return min(1.0, b / 128.0) * min(1.0, o / 128.0)

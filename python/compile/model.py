@@ -1,0 +1,69 @@
+"""L2: the JAX compute graphs AOT-compiled into PJRT artifacts.
+
+Each function here is a *payload*: the numeric hot spot of one target
+region of the benchmark suite, calling the L1 Pallas kernels where the
+compute pattern profits from tiling. `aot.py` lowers each payload once to
+HLO text; the Rust coordinator loads and executes them — Python is never
+on the request path.
+
+Payload shapes are fixed at AOT time (one executable per shape, like one
+PTX/GCN kernel per template instantiation in the paper's world) and are
+recorded in artifacts/manifest.toml.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.stencil import stencil_tile as _pallas_stencil
+from .kernels.vgh import vgh_matmul as _pallas_vgh
+
+# ---- shapes (single source of truth; mirrored into manifest.toml) -----
+
+# postencil: 256×256 interior + halo border; 8 teams × 32-row stripes.
+STENCIL_ROWS = 32
+STENCIL_COLS = 258  # 256 interior + 2 halo columns
+
+# miniQMC evaluate_vgh: P positions × 10 planes, B basis, O orbitals.
+VGH_P = 16
+VGH_PLANES = 10
+VGH_B = 64
+VGH_O = 32
+
+# miniQMC evaluateDetRatios: K candidate moves against one inverse row.
+DET_K = 16
+DET_B = 64
+
+
+def stencil_payload(slab):
+    """One Jacobi step on a (STENCIL_ROWS+2, STENCIL_COLS) slab."""
+    return (_pallas_stencil(slab),)
+
+
+def vgh_payload(basis, coef):
+    """(10·P, B) @ (B, O) value/gradient/hessian contraction."""
+    return (_pallas_vgh(basis, coef),)
+
+
+def detratio_payload(u, inv_row):
+    """K determinant ratios: u @ inv_row."""
+    return (ref.detratio_tile(u, inv_row),)
+
+
+#: name -> (fn, input shapes, output shape). aot.py iterates this table.
+PAYLOADS = {
+    "stencil_tile": (
+        stencil_payload,
+        [(STENCIL_ROWS + 2, STENCIL_COLS)],
+        (STENCIL_ROWS, STENCIL_COLS),
+    ),
+    "vgh_tile": (
+        vgh_payload,
+        [(VGH_PLANES * VGH_P, VGH_B), (VGH_B, VGH_O)],
+        (VGH_PLANES * VGH_P, VGH_O),
+    ),
+    "detratio_tile": (
+        detratio_payload,
+        [(DET_K, DET_B), (DET_B,)],
+        (DET_K,),
+    ),
+}

@@ -1,0 +1,92 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes and value ranges; assert_allclose against ref.py
+is the core correctness signal for the kernel layer (the paper's §4.2
+functional testing, applied to our L1).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.stencil import stencil_tile
+from compile.kernels.vgh import vgh_matmul, TILE_M
+
+
+def rng_array(seed, shape, lo=-1.0, hi=1.0):
+    r = np.random.default_rng(seed)
+    return r.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+# ---- stencil ----------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=48),
+    cols=st.integers(min_value=3, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_stencil_matches_ref(rows, cols, seed):
+    slab = rng_array(seed, (rows + 2, cols))
+    got = np.asarray(stencil_tile(jnp.asarray(slab)))
+    want = np.asarray(ref.stencil_tile(jnp.asarray(slab)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_stencil_passes_through_edge_columns():
+    slab = rng_array(7, (10, 16))
+    out = np.asarray(stencil_tile(jnp.asarray(slab)))
+    np.testing.assert_array_equal(out[:, 0], slab[1:-1, 0])
+    np.testing.assert_array_equal(out[:, -1], slab[1:-1, -1])
+
+
+def test_stencil_conserves_constant_field():
+    # A constant field is a fixed point of the diffusion step
+    # (c + 4n == 1 by construction of the coefficients).
+    slab = np.full((12, 20), 3.5, dtype=np.float32)
+    out = np.asarray(stencil_tile(jnp.asarray(slab)))
+    np.testing.assert_allclose(out, 3.5, rtol=1e-6)
+
+
+# ---- vgh matmul -------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mtiles=st.integers(min_value=1, max_value=4),
+    b=st.sampled_from([16, 32, 64]),
+    o=st.sampled_from([8, 32]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_vgh_matmul_matches_ref(mtiles, b, o, seed):
+    m = mtiles * TILE_M
+    basis = rng_array(seed, (m, b))
+    coef = rng_array(seed + 1, (b, o))
+    got = np.asarray(vgh_matmul(jnp.asarray(basis), jnp.asarray(coef)))
+    want = np.asarray(ref.vgh_matmul(jnp.asarray(basis), jnp.asarray(coef)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_vgh_matmul_rejects_untiled_m():
+    basis = jnp.zeros((TILE_M + 1, 16), jnp.float32)
+    coef = jnp.zeros((16, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        vgh_matmul(basis, coef)
+
+
+# ---- detratio ---------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=32),
+    b=st.integers(min_value=1, max_value=128),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_detratio_matches_numpy(k, b, seed):
+    u = rng_array(seed, (k, b))
+    inv_row = rng_array(seed + 2, (b,))
+    got = np.asarray(ref.detratio_tile(jnp.asarray(u), jnp.asarray(inv_row)))
+    want = u @ inv_row
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

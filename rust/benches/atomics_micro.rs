@@ -1,0 +1,70 @@
+//! BENCH (E5): atomic-operation microbenchmark — OpenMP-5.1-constructed
+//! atomics (portable) vs intrinsic atomics (legacy) must have identical
+//! throughput (the performance half of the paper's Listing 3/4 claim).
+
+use omprt::coordinator::Coordinator;
+use omprt::devrt::{irlib, RuntimeKind};
+use omprt::hostrt::{DataEnv, MapType};
+use omprt::ir::passes::OptLevel;
+use omprt::ir::{FunctionBuilder, Module, Operand, Type};
+use omprt::sim::{Arch, LaunchConfig};
+use omprt::util::stats::rel_diff;
+
+fn kernel(op: &'static str, iters: i32) -> Module {
+    let mut m = Module::new("atomics_micro");
+    let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+    let out = b.param(0);
+    irlib::emit_spmd_prologue(&mut b);
+    b.for_range(Operand::i32(0), Operand::i32(iters), Operand::i32(1), |b, _| {
+        match op {
+            "cas" => {
+                b.call("__kmpc_atomic_cas", &[out.into(), Operand::i32(0), Operand::i32(1)], Type::I32);
+            }
+            "inc" => {
+                b.call("__kmpc_atomic_inc", &[out.into(), Operand::i32(1000)], Type::I32);
+            }
+            _ => {
+                b.call(op, &[out.into(), Operand::i32(1)], Type::I32);
+            }
+        }
+    });
+    irlib::emit_spmd_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+fn time_op(kind: RuntimeKind, op: &'static str, iters: i32) -> f64 {
+    let c = Coordinator::new(kind, Arch::Nvptx64);
+    let image = c.prepare(kernel(op, iters), OptLevel::O2).unwrap();
+    let mut env = DataEnv::new(&c.device);
+    let out = vec![0u32; 1];
+    let d = env.map(&out, MapType::Tofrom).unwrap();
+    // warmup
+    c.device.offload(&image, "k", &[d], LaunchConfig::new(2, 64)).unwrap();
+    let mut best = f64::MAX;
+    for _ in 0..5 {
+        let t0 = std::time::Instant::now();
+        c.device.offload(&image, "k", &[d], LaunchConfig::new(2, 64)).unwrap();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let iters = 2000;
+    println!("\n=== atomics microbenchmark (2 teams x 64 thr x {iters} iters, best of 5) ===\n");
+    println!("op                  | Original (ms) | New (ms) | rel.diff");
+    println!("--------------------+---------------+----------+---------");
+    for op in ["__kmpc_atomic_add", "__kmpc_atomic_max", "__kmpc_atomic_exchange", "cas", "inc"] {
+        let a = time_op(RuntimeKind::Legacy, op, iters);
+        let b = time_op(RuntimeKind::Portable, op, iters);
+        println!(
+            "{:<20}| {:>13.3} | {:>8.3} | {:>6.2}%",
+            op,
+            a * 1e3,
+            b * 1e3,
+            rel_diff(a, b) * 100.0
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! BENCH (E1, §4.1): code-comparison statistics for the two runtime
+//! builds on both targets.
+
+use omprt::devrt::{self, RuntimeKind};
+use omprt::ir::printer::{diff_text, print_module};
+use omprt::sim::Arch;
+
+fn main() {
+    println!("\n=== §4.1 code comparison ===\n");
+    for arch in Arch::all() {
+        let legacy = devrt::build(RuntimeKind::Legacy, arch);
+        let portable = devrt::build(RuntimeKind::Portable, arch);
+        let a = print_module(&legacy.ir_library);
+        let b = print_module(&portable.ir_library);
+        let d = diff_text(&a, &b);
+        println!(
+            "{arch:<8}: {:4} lines legacy, {:4} lines portable, {:2}+{:2} differing, \
+             metadata+mangling-only: {}",
+            a.lines().count(),
+            b.lines().count(),
+            d.only_a.len(),
+            d.only_b.len(),
+            d.only_metadata_and_mangling()
+        );
+    }
+}

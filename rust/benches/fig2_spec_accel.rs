@@ -1,0 +1,22 @@
+//! BENCH (paper Fig. 2): SPEC ACCEL-analog execution times, original vs
+//! new device runtime, 5 reps each, with the <1% noise criterion.
+//! (criterion is unavailable offline; this harness prints the same table
+//! the paper's figure plots.)
+
+use omprt::benchmarks::harness::{format_fig2, run_fig2};
+use omprt::benchmarks::Scale;
+use omprt::runtime::{artifact, ArtifactManifest};
+use omprt::sim::Arch;
+
+fn main() {
+    let man = ArtifactManifest::load(&artifact::default_dir()).ok();
+    if man.is_none() {
+        eprintln!("note: artifacts missing; payload benchmarks skipped");
+    }
+    let rows = run_fig2(Arch::Nvptx64, Scale::Paper, 5, man.as_ref()).unwrap();
+    println!("\n=== Fig. 2: execution time, Original vs New runtime (5 reps, paper scale) ===\n");
+    print!("{}", format_fig2(&rows));
+    let worst = rows.iter().map(|r| r.rel).fold(0.0, f64::max);
+    println!("\nmax relative difference: {:.2}% (paper: <1% = noise)", worst * 100.0);
+    assert!(rows.iter().all(|r| r.verified));
+}

@@ -1,0 +1,17 @@
+//! BENCH (paper Table 1): miniqmc_sync_move per-region profile under both
+//! runtime builds.
+
+use omprt::benchmarks::harness::{format_table1, run_table1};
+use omprt::benchmarks::Scale;
+use omprt::runtime::{artifact, ArtifactManifest};
+use omprt::sim::Arch;
+
+fn main() {
+    let Ok(man) = ArtifactManifest::load(&artifact::default_dir()) else {
+        eprintln!("table1 needs artifacts: run `make artifacts`");
+        return;
+    };
+    let rows = run_table1(Arch::Nvptx64, Scale::Paper, &man).unwrap();
+    println!("\n=== Table 1: miniqmc_sync_move target-region profile ===\n");
+    print!("{}", format_table1(&rows));
+}

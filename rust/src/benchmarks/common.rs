@@ -1,0 +1,120 @@
+//! Shared benchmark infrastructure.
+
+use crate::coordinator::Coordinator;
+use crate::ir::{BinOp, CastOp, FunctionBuilder, Operand, Reg, Type};
+use crate::util::Error;
+use std::time::Duration;
+
+/// Problem-size scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized: fast enough for `cargo test` (seconds).
+    Small,
+    /// Benchmark-sized: what `cargo bench` / the Fig.-2 harness runs.
+    Paper,
+}
+
+/// Result of one benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Wall time of the offloaded portion (kernel launches only; data
+    /// setup excluded, as SPEC measures the timed section).
+    pub kernel_wall: Duration,
+    /// Verification against the host reference passed.
+    pub verified: bool,
+    /// A scalar fingerprint of the output (for cross-runtime equality
+    /// checks in the harness).
+    pub checksum: f64,
+}
+
+/// One benchmark of the suite.
+pub trait Benchmark {
+    /// Short name (Fig.-2 row).
+    fn name(&self) -> &'static str;
+    /// Whether the benchmark needs PJRT artifacts attached.
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+    /// Run on an already-configured coordinator; must verify.
+    fn run(&self, c: &Coordinator) -> Result<BenchResult, Error>;
+}
+
+/// Emit `gid = ctaid*ntid + tid` and `stride = ntid*nctaid` (both i32).
+pub fn emit_gid_stride(b: &mut FunctionBuilder) -> (Reg, Reg) {
+    let tid = b.call("gpu.tid.x", &[], Type::I32);
+    let ntid = b.call("gpu.ntid.x", &[], Type::I32);
+    let ctaid = b.call("gpu.ctaid.x", &[], Type::I32);
+    let nctaid = b.call("gpu.nctaid.x", &[], Type::I32);
+    let base = b.mul(ctaid, ntid);
+    let gid = b.add(base, tid);
+    let stride = b.mul(ntid, nctaid);
+    (gid, stride)
+}
+
+/// Emit a `__kmpc_for_static_init_4` call over the *team-local* iteration
+/// space and unpack the packed `[lb, ub)` result into two i32 registers.
+pub fn emit_static_range(
+    b: &mut FunctionBuilder,
+    lower: Operand,
+    upper: Operand,
+) -> (Reg, Reg) {
+    let tid = b.call("omp_get_thread_num", &[], Type::I32);
+    let packed = b.call(
+        "__kmpc_for_static_init_4",
+        &[
+            tid.into(),
+            Operand::i32(crate::devrt::state::SCHED_STATIC as i32),
+            lower,
+            upper,
+            Operand::i32(1),
+        ],
+        Type::I64,
+    );
+    unpack_range(b, packed)
+}
+
+/// Unpack a packed `[lb, ub)` u64 into two i32 registers.
+pub fn unpack_range(b: &mut FunctionBuilder, packed: Reg) -> (Reg, Reg) {
+    let lb = b.cast(CastOp::Trunc, packed, Type::I32);
+    let hi = b.bin(BinOp::LShr, packed, Operand::i64(32));
+    let ub = b.cast(CastOp::Trunc, hi, Type::I32);
+    (lb, ub)
+}
+
+/// Compare two f32 slices with a relative tolerance; returns None when
+/// equal enough, or a description of the first mismatch.
+pub fn compare_f32(got: &[f32], want: &[f32], rtol: f32) -> Option<String> {
+    if got.len() != want.len() {
+        return Some(format!("length {} != {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = rtol * w.abs().max(1.0);
+        if (g - w).abs() > tol {
+            return Some(format!("[{i}]: got {g}, want {w} (tol {tol})"));
+        }
+    }
+    None
+}
+
+/// Fingerprint of an f32 buffer (order-stable).
+pub fn checksum_f32(v: &[f32]) -> f64 {
+    v.iter().enumerate().map(|(i, &x)| x as f64 * (1.0 + (i % 7) as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_f32_tolerance() {
+        assert!(compare_f32(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_none());
+        assert!(compare_f32(&[1.0], &[1.001], 1e-2).is_none());
+        assert!(compare_f32(&[1.0], &[1.1], 1e-3).is_some());
+        assert!(compare_f32(&[1.0], &[1.0, 2.0], 1e-3).is_some());
+    }
+
+    #[test]
+    fn checksum_is_order_sensitive() {
+        assert_ne!(checksum_f32(&[1.0, 2.0]), checksum_f32(&[2.0, 1.0]));
+    }
+}

@@ -1,0 +1,155 @@
+//! The evaluation harnesses that regenerate the paper's Fig. 2 and
+//! Table 1 (used by `examples/` and `rust/benches/`).
+
+use super::{spec_accel, Scale};
+use crate::coordinator::{Coordinator, Profiler};
+use crate::devrt::RuntimeKind;
+use crate::runtime::{ArtifactManifest, PjrtService};
+use crate::sim::Arch;
+use crate::util::stats::rel_diff;
+use crate::util::{Error, Summary};
+
+/// One row of the Fig.-2 comparison.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    /// Benchmark name.
+    pub name: String,
+    /// Mean wall time (s) of the timed section under the original
+    /// (legacy CUDA/HIP-style) runtime.
+    pub original_s: f64,
+    /// Mean wall time (s) under the new (portable OpenMP 5.1) runtime.
+    pub new_s: f64,
+    /// Relative difference |a−b|/max — the paper calls <1 % noise.
+    pub rel: f64,
+    /// Both versions verified against the host reference.
+    pub verified: bool,
+}
+
+/// Run the Fig.-2 experiment: every SPEC-analog benchmark under both
+/// runtime builds, `reps` repetitions each (the paper uses 5), mean
+/// execution time per version.
+pub fn run_fig2(
+    arch: Arch,
+    scale: Scale,
+    reps: u32,
+    manifest: Option<&ArtifactManifest>,
+) -> Result<Vec<Fig2Row>, Error> {
+    let svc = match manifest {
+        Some(_) => Some(PjrtService::start()?),
+        None => None,
+    };
+    let mut rows = vec![];
+    for bench in spec_accel(scale) {
+        if bench.needs_artifacts() && manifest.is_none() {
+            log::warn!("skipping {} (no artifacts)", bench.name());
+            continue;
+        }
+        let mut means = [0f64; 2];
+        let mut verified = true;
+        for (vi, kind) in RuntimeKind::all().into_iter().enumerate() {
+            let mut c = Coordinator::new(kind, arch);
+            if bench.needs_artifacts() {
+                c.attach_artifacts_with(svc.as_ref().unwrap(), manifest.unwrap())?;
+            }
+            // One unmeasured warmup (PJRT compile/JIT, allocator warm-up)
+            // before the timed repetitions, as the paper's methodology
+            // measures steady-state execution. The paper averages 5 runs
+            // on a dedicated Summit node; this testbed is a time-shared
+            // host where OS scheduling noise dominates sub-second runs,
+            // so we report the *median* of the repetitions instead.
+            let w = bench.run(&c)?;
+            verified &= w.verified;
+            let mut samples = Vec::with_capacity(reps as usize);
+            for _ in 0..reps {
+                let r = bench.run(&c)?;
+                verified &= r.verified;
+                samples.push(r.kernel_wall.as_secs_f64());
+            }
+            samples.sort_by(f64::total_cmp);
+            means[vi] = samples[samples.len() / 2];
+        }
+        rows.push(Fig2Row {
+            name: bench.name().to_string(),
+            original_s: means[0],
+            new_s: means[1],
+            rel: rel_diff(means[0], means[1]),
+            verified,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the Fig.-2 rows as a table.
+pub fn format_fig2(rows: &[Fig2Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Benchmark      | Original (s) | New (s) | rel.diff | verified\n");
+    out.push_str("---------------+--------------+---------+----------+---------\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{:<15}| {:>12.4} | {:>7.4} | {:>7.2}% | {}\n",
+            r.name,
+            r.original_s,
+            r.new_s,
+            r.rel * 100.0,
+            if r.verified { "yes" } else { "NO" }
+        ));
+    }
+    out
+}
+
+/// Run the Table-1 experiment: the miniQMC proxy app under both runtimes,
+/// per-region profiles. Returns rows `(region, version, summary)` in the
+/// paper's layout order.
+pub fn run_table1(
+    arch: Arch,
+    scale: Scale,
+    manifest: &ArtifactManifest,
+) -> Result<Vec<(String, String, Summary)>, Error> {
+    let svc = PjrtService::start()?;
+    let mut rows: Vec<(String, String, Summary)> = vec![];
+    let mut per_kind: Vec<(RuntimeKind, Summary, Summary)> = vec![];
+    for kind in RuntimeKind::all() {
+        let mut c = Coordinator::new(kind, arch);
+        c.attach_artifacts_with(&svc, manifest)?;
+        let app = super::miniqmc::MiniQmc::new(scale);
+        let p = app.run_profiled(&c)?;
+        if !p.result.verified {
+            return Err(Error::Verify(format!("miniqmc failed under {kind}")));
+        }
+        per_kind.push((kind, p.vgh, p.det));
+    }
+    for region_idx in 0..2 {
+        for (kind, vgh, det) in &per_kind {
+            let (region, s) = if region_idx == 0 {
+                ("evaluate_vgh", vgh.clone())
+            } else {
+                ("evaluateDetRatios", det.clone())
+            };
+            rows.push((region.to_string(), kind.paper_name().to_string(), s));
+        }
+    }
+    Ok(rows)
+}
+
+/// Render Table 1.
+pub fn format_table1(rows: &[(String, String, Summary)]) -> String {
+    Profiler::table1(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_runs_without_artifacts_on_non_payload_benchmarks() {
+        // Only the IR-only benchmarks run (postencil is skipped).
+        let rows = run_fig2(Arch::Nvptx64, Scale::Small, 1, None).unwrap();
+        assert!(rows.len() >= 5);
+        for r in &rows {
+            assert!(r.verified, "{}", r.name);
+            assert!(r.original_s > 0.0 && r.new_s > 0.0);
+        }
+        let text = format_fig2(&rows);
+        assert!(text.contains("504.polbm"), "{text}");
+    }
+}

@@ -1,0 +1,300 @@
+//! miniQMC proxy-app analog (`miniqmc_sync_move -g "2 2 1"`).
+//!
+//! The paper's Table 1 profiles the two offloaded target regions of the
+//! walker loop:
+//!
+//! * **evaluate_vgh** — B-spline value/gradient/hessian evaluation: the
+//!   team fills the 10 basis-derivative planes from the electron
+//!   positions (divergent polynomial evaluation in device IR), then
+//!   contracts them with the orbital coefficients through the Pallas
+//!   `vgh_tile` payload (MXU-shaped matmul).
+//! * **evaluateDetRatios** — Slater-determinant ratios of candidate
+//!   moves against a row of the inverse matrix (`detratio_tile`).
+//!
+//! The walker loop calls `evaluate_vgh` ≈ 3.5× as often as
+//! `evaluateDetRatios`, matching the call-count ratio in Table 1.
+
+use super::common::{checksum_f32, compare_f32, BenchResult, Benchmark, Scale};
+use crate::coordinator::Coordinator;
+use crate::devrt::irlib;
+use crate::hostrt::{DataEnv, KernelImage, MapType};
+use crate::ir::passes::OptLevel;
+use crate::ir::{AddrSpace, CmpPred, FunctionBuilder, Module, Operand, Type};
+use crate::sim::LaunchConfig;
+use crate::util::{Error, SplitMix64, Summary};
+
+/// Positions per vgh call (matches the AOT payload shapes).
+const P: usize = 16;
+/// Basis functions.
+const B: usize = 64;
+/// Orbitals.
+const O: usize = 32;
+/// Derivative planes (value + 3 grad + 6 hess).
+const PLANES: usize = 10;
+/// Candidate moves per det-ratio call.
+const K: usize = 16;
+
+/// The proxy app.
+pub struct MiniQmc {
+    /// Walker steps; each step issues 7 vgh calls and 2 det calls
+    /// (≈3.5:1, the Table 1 ratio).
+    steps: usize,
+}
+
+impl MiniQmc {
+    /// Configure for a scale.
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Small => MiniQmc { steps: 3 },
+            Scale::Paper => MiniQmc { steps: 40 },
+        }
+    }
+
+    /// Module with both target-region kernels.
+    fn module(&self) -> Module {
+        let mut m = Module::new("miniqmc");
+
+        // evaluate_vgh(out, basis, coef, pos): fill basis then contract.
+        let mut b = FunctionBuilder::new("evaluate_vgh", &[Type::I64; 4], None).kernel();
+        let (out, basis, coef, pos) = (b.param(0), b.param(1), b.param(2), b.param(3));
+        irlib::emit_spmd_prologue(&mut b);
+        let (lb, ub) = super::common::emit_static_range(
+            &mut b,
+            Operand::i32(0),
+            Operand::i32((PLANES * P * B) as i32),
+        );
+        b.for_range(lb, ub, Operand::i32(1), |b, e| {
+            // e = ((plane*P)+p)*B + j
+            let j = b.srem(e, Operand::i32(B as i32));
+            let row = b.sdiv(e, Operand::i32(B as i32));
+            let p = b.srem(row, Operand::i32(P as i32));
+            let plane = b.sdiv(row, Operand::i32(P as i32));
+            // t = pos[p*3 + j%3]
+            let j3 = b.srem(j, Operand::i32(3));
+            let p3 = b.mul(p, Operand::i32(3));
+            let pidx = b.add(p3, j3);
+            let pa = b.index(pos, pidx, 4);
+            let t = b.load(Type::F32, AddrSpace::Global, pa);
+            // s = 0.25·(j+1), q = 0.125·(plane+1); basis = (t·s + q)²·s⁻¹-ish
+            let j1 = b.add(j, Operand::i32(1));
+            let jf = b.cast(crate::ir::CastOp::SIToFP, j1, Type::F32);
+            let s = b.mul(jf, Operand::f32(0.25));
+            let pl1 = b.add(plane, Operand::i32(1));
+            let plf = b.cast(crate::ir::CastOp::SIToFP, pl1, Type::F32);
+            let q = b.mul(plf, Operand::f32(0.125));
+            let ts = b.mul(t, s);
+            let tsq = b.add(ts, q);
+            let val = b.mul(tsq, tsq);
+            let ba = b.index(basis, e, 4);
+            b.store(Type::F32, AddrSpace::Global, ba, val);
+        });
+        b.call_void("__kmpc_barrier", &[]);
+        let tid = b.call("gpu.tid.x", &[], Type::I32);
+        let is0 = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+        b.if_(is0, |b| {
+            b.call_void("payload.vgh_tile", &[out.into(), basis.into(), coef.into()]);
+        });
+        irlib::emit_spmd_epilogue(&mut b);
+        b.ret();
+        m.add_func(b.build());
+
+        // evaluateDetRatios(ratios, u, invrow, pos): fill u then dot.
+        let mut b = FunctionBuilder::new("evaluateDetRatios", &[Type::I64; 4], None).kernel();
+        let (ratios, u, invrow, pos) = (b.param(0), b.param(1), b.param(2), b.param(3));
+        irlib::emit_spmd_prologue(&mut b);
+        let (lb, ub) = super::common::emit_static_range(
+            &mut b,
+            Operand::i32(0),
+            Operand::i32((K * B) as i32),
+        );
+        b.for_range(lb, ub, Operand::i32(1), |b, e| {
+            let j = b.srem(e, Operand::i32(B as i32));
+            let k = b.sdiv(e, Operand::i32(B as i32));
+            let k3 = b.srem(k, Operand::i32(3));
+            let pa = b.index(pos, k3, 4);
+            let t = b.load(Type::F32, AddrSpace::Global, pa);
+            let j1 = b.add(j, Operand::i32(1));
+            let jf = b.cast(crate::ir::CastOp::SIToFP, j1, Type::F32);
+            let tj = b.mul(t, jf);
+            let uv = b.mul(tj, Operand::f32(0.0625));
+            let ua = b.index(u, e, 4);
+            b.store(Type::F32, AddrSpace::Global, ua, uv);
+        });
+        b.call_void("__kmpc_barrier", &[]);
+        let tid = b.call("gpu.tid.x", &[], Type::I32);
+        let is0 = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+        b.if_(is0, |b| {
+            b.call_void("payload.detratio_tile", &[ratios.into(), u.into(), invrow.into()]);
+        });
+        irlib::emit_spmd_epilogue(&mut b);
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    fn host_basis(pos: &[f32], basis: &mut [f32]) {
+        for plane in 0..PLANES {
+            for p in 0..P {
+                for j in 0..B {
+                    let t = pos[p * 3 + j % 3];
+                    let s = (j + 1) as f32 * 0.25;
+                    let q = (plane + 1) as f32 * 0.125;
+                    let v = t * s + q;
+                    basis[(plane * P + p) * B + j] = v * v;
+                }
+            }
+        }
+    }
+
+    fn host_u(pos: &[f32], u: &mut [f32]) {
+        for k in 0..K {
+            for j in 0..B {
+                u[k * B + j] = pos[k % 3] * (j + 1) as f32 * 0.0625;
+            }
+        }
+    }
+}
+
+/// Result of one miniqmc run, including per-region profiles (Table 1).
+pub struct MiniQmcProfile {
+    /// evaluate_vgh summary.
+    pub vgh: Summary,
+    /// evaluateDetRatios summary.
+    pub det: Summary,
+    /// Overall result.
+    pub result: BenchResult,
+}
+
+impl MiniQmc {
+    /// Full run with per-region profiling (the Table 1 harness calls this
+    /// directly; [`Benchmark::run`] wraps it).
+    pub fn run_profiled(&self, c: &Coordinator) -> Result<MiniQmcProfile, Error> {
+        let image: KernelImage = c.prepare(self.module(), OptLevel::O2)?;
+        let mut env = DataEnv::new(&c.device);
+        let mut rng = SplitMix64::new(2021);
+
+        let mut pos = vec![0f32; P * 3];
+        rng.fill_f32(&mut pos, -1.0, 1.0);
+        let mut coef = vec![0f32; B * O];
+        rng.fill_f32(&mut coef, -0.5, 0.5);
+        let mut invrow = vec![0f32; B];
+        rng.fill_f32(&mut invrow, -0.5, 0.5);
+
+        let basis = vec![0f32; PLANES * P * B];
+        let mut vgh_out = vec![0f32; PLANES * P * O];
+        let u = vec![0f32; K * B];
+        let mut ratios = vec![0f32; K];
+
+        let d_pos = env.map(&pos, MapType::To)?;
+        let d_coef = env.map(&coef, MapType::To)?;
+        let d_invrow = env.map(&invrow, MapType::To)?;
+        let d_basis = env.map(&basis, MapType::Alloc)?;
+        let d_vgh_out = env.map(&vgh_out, MapType::From)?;
+        let d_u = env.map(&u, MapType::Alloc)?;
+        let d_ratios = env.map(&ratios, MapType::From)?;
+
+        // Warm both regions once outside the profile (nvprof-style: the
+        // paper's numbers exclude context/JIT initialization).
+        c.run_region(
+            &image,
+            "evaluate_vgh",
+            "warmup",
+            &[d_vgh_out, d_basis, d_coef, d_pos],
+            LaunchConfig::new(1, 64),
+        )?;
+        c.run_region(
+            &image,
+            "evaluateDetRatios",
+            "warmup",
+            &[d_ratios, d_u, d_invrow, d_pos],
+            LaunchConfig::new(1, 64),
+        )?;
+        c.profiler.reset();
+        let mut wall = std::time::Duration::ZERO;
+        for _step in 0..self.steps {
+            // Walker drift on the host, then sync-move offloads.
+            for v in pos.iter_mut() {
+                *v = (*v + 0.01).clamp(-1.0, 1.0);
+            }
+            let bytes: Vec<u8> = pos.iter().flat_map(|f| f.to_le_bytes()).collect();
+            c.device.gmem.write_bytes(d_pos, &bytes)?;
+            for _ in 0..7 {
+                let s = c.run_region(
+                    &image,
+                    "evaluate_vgh",
+                    "evaluate_vgh",
+                    &[d_vgh_out, d_basis, d_coef, d_pos],
+                    LaunchConfig::new(1, 64),
+                )?;
+                wall += s.wall;
+            }
+            for _ in 0..2 {
+                let s = c.run_region(
+                    &image,
+                    "evaluateDetRatios",
+                    "evaluateDetRatios",
+                    &[d_ratios, d_u, d_invrow, d_pos],
+                    LaunchConfig::new(1, 64),
+                )?;
+                wall += s.wall;
+            }
+        }
+        env.unmap(&mut vgh_out)?;
+        env.unmap(&mut ratios)?;
+
+        // Host reference for the final step's outputs.
+        let mut h_basis = vec![0f32; PLANES * P * B];
+        Self::host_basis(&pos, &mut h_basis);
+        let mut h_vgh = vec![0f32; PLANES * P * O];
+        for r in 0..PLANES * P {
+            for o in 0..O {
+                let mut acc = 0f32;
+                for j in 0..B {
+                    acc += h_basis[r * B + j] * coef[j * O + o];
+                }
+                h_vgh[r * O + o] = acc;
+            }
+        }
+        let mut h_u = vec![0f32; K * B];
+        Self::host_u(&pos, &mut h_u);
+        let mut h_ratios = vec![0f32; K];
+        for k in 0..K {
+            h_ratios[k] = (0..B).map(|j| h_u[k * B + j] * invrow[j]).sum();
+        }
+        let verified = compare_f32(&vgh_out, &h_vgh, 1e-3).is_none()
+            && compare_f32(&ratios, &h_ratios, 1e-3).is_none();
+        if !verified {
+            log::error!("miniqmc verify failed");
+        }
+
+        let report = c.profiler.report();
+        let find = |name: &str| {
+            report
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.summary.clone())
+                .unwrap_or_default()
+        };
+        let mut all = vgh_out.clone();
+        all.extend_from_slice(&ratios);
+        Ok(MiniQmcProfile {
+            vgh: find("evaluate_vgh"),
+            det: find("evaluateDetRatios"),
+            result: BenchResult { kernel_wall: wall, verified, checksum: checksum_f32(&all) },
+        })
+    }
+}
+
+impl Benchmark for MiniQmc {
+    fn name(&self) -> &'static str {
+        "miniqmc"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        true
+    }
+
+    fn run(&self, c: &Coordinator) -> Result<BenchResult, Error> {
+        Ok(self.run_profiled(c)?.result)
+    }
+}

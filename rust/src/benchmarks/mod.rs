@@ -1,0 +1,57 @@
+//! The benchmark suite: analogs of the six SPEC ACCEL C benchmarks the
+//! paper runs (Fig. 2) plus the miniQMC proxy app (Table 1).
+//!
+//! Each benchmark implements [`Benchmark`]: it builds its device-IR
+//! kernels (the "application"), maps its data, launches its target
+//! regions through a [`Coordinator`] (which profiles them), and verifies
+//! device results against a host reference — the methodology of the
+//! paper's §4.2/§4.3 (identical functional behaviour, timed end-to-end).
+//!
+//! | name      | SPEC analog    | runtime features stressed              |
+//! |-----------|----------------|----------------------------------------|
+//! | postencil | 503.postencil  | static worksharing, PJRT payload tiles |
+//! | polbm     | 504.polbm      | static worksharing, heavy f32 IR ALU   |
+//! | pomriq    | 514.pomriq     | dynamic dispatch, fsin/fcos, reduction |
+//! | pep       | 552.pep        | thread-local RNG, atomics, reduction   |
+//! | pcg       | 554.pcg        | barriers, tree reductions, SpMV        |
+//! | pbt       | 570.pbt        | static-chunked scheduling, line solves |
+//! | miniqmc   | miniQMC        | generic+SPMD regions, payload matmuls  |
+
+pub mod common;
+pub mod harness;
+pub mod miniqmc;
+pub mod pbt;
+pub mod pcg;
+pub mod pep;
+pub mod polbm;
+pub mod pomriq;
+pub mod postencil;
+
+pub use common::{BenchResult, Benchmark, Scale};
+
+/// All Fig.-2 benchmarks (SPEC ACCEL analogs), in the paper's order.
+pub fn spec_accel(scale: Scale) -> Vec<Box<dyn Benchmark>> {
+    vec![
+        Box::new(postencil::Postencil::new(scale)),
+        Box::new(polbm::Polbm::new(scale)),
+        Box::new(pomriq::Pomriq::new(scale)),
+        Box::new(pep::Pep::new(scale)),
+        Box::new(pcg::Pcg::new(scale)),
+        Box::new(pbt::Pbt::new(scale)),
+    ]
+}
+
+/// Look a benchmark up by name (CLI).
+pub fn by_name(name: &str, scale: Scale) -> Option<Box<dyn Benchmark>> {
+    let b: Box<dyn Benchmark> = match name {
+        "postencil" | "503" => Box::new(postencil::Postencil::new(scale)),
+        "polbm" | "504" => Box::new(polbm::Polbm::new(scale)),
+        "pomriq" | "514" => Box::new(pomriq::Pomriq::new(scale)),
+        "pep" | "552" => Box::new(pep::Pep::new(scale)),
+        "pcg" | "554" => Box::new(pcg::Pcg::new(scale)),
+        "pbt" | "570" => Box::new(pbt::Pbt::new(scale)),
+        "miniqmc" => Box::new(miniqmc::MiniQmc::new(scale)),
+        _ => return None,
+    };
+    Some(b)
+}

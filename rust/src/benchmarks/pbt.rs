@@ -1,0 +1,198 @@
+//! 570.pbt analog: block-tridiagonal line sweeps.
+//!
+//! N independent tridiagonal systems (one per mesh line) solved with the
+//! Thomas algorithm, one line per thread under **static chunked**
+//! scheduling — the line-sweep phase structure of BT.
+
+use super::common::{checksum_f32, compare_f32, unpack_range, BenchResult, Benchmark, Scale};
+use crate::coordinator::Coordinator;
+use crate::devrt::{irlib, state};
+use crate::hostrt::{DataEnv, MapType};
+use crate::ir::passes::OptLevel;
+use crate::ir::{AddrSpace, CmpPred, FunctionBuilder, Module, Operand, Type, UnOp};
+use crate::sim::LaunchConfig;
+use crate::util::{Error, SplitMix64};
+
+/// The benchmark.
+pub struct Pbt {
+    lines: usize,
+    len: usize,
+    teams: u32,
+    block: u32,
+    chunk: i32,
+}
+
+impl Pbt {
+    /// Configure for a scale.
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Small => Pbt { lines: 64, len: 32, teams: 2, block: 32, chunk: 4 },
+            Scale::Paper => Pbt { lines: 1024, len: 64, teams: 6, block: 64, chunk: 4 },
+        }
+    }
+
+    /// Thomas solve per line: diag 4, off-diag −1 (SPD), rhs per line.
+    /// Buffers: rhs (lines×len, in), out (lines×len), cw (lines×len
+    /// scratch for the modified upper diagonal).
+    fn module(&self) -> Module {
+        let len = self.len as i32;
+        let lines = self.lines as i32;
+        let chunk = self.chunk;
+        let mut m = Module::new("pbt");
+        let mut b = FunctionBuilder::new("sweep", &[Type::I64; 3], None).kernel();
+        let (rhs, out, cw) = (b.param(0), b.param(1), b.param(2));
+        irlib::emit_spmd_prologue(&mut b);
+        // Lines are distributed over the *global* thread space (the
+        // `teams distribute parallel for schedule(static, chunk)` shape):
+        // the packed first chunk comes from the worksharing runtime; the
+        // thread then strides by total_threads·chunk.
+        let (gid, total) = super::common::emit_gid_stride(&mut b);
+        let packed = b.call(
+            "__kmpc_for_static_init_4",
+            &[
+                gid.into(),
+                Operand::i32(state::SCHED_STATIC_CHUNKED as i32),
+                Operand::i32(0),
+                Operand::i32(lines),
+                Operand::i32(chunk),
+            ],
+            Type::I64,
+        );
+        let (lb0, ub0) = unpack_range(&mut b, packed);
+        let stride = b.mul(total, Operand::i32(chunk));
+        // for (start = lb0; start < lines; start += nthreads*chunk)
+        let start = b.copy(lb0);
+        let end = b.copy(ub0);
+        b.loop_(|b| {
+            let done = b.cmp(CmpPred::Ge, start, Operand::i32(lines));
+            b.if_(done, |b| b.break_());
+            b.for_range(start, end, Operand::i32(1), |b, line| {
+                let base = b.mul(line, Operand::i32(len));
+                // forward sweep
+                // c'[0] = -1/4 ; d'[0] = rhs[0]/4
+                let b0 = b.index(rhs, base, 4);
+                let d0 = b.load(Type::F32, AddrSpace::Global, b0);
+                let d0p = b.mul(d0, Operand::f32(0.25));
+                let o0 = b.index(out, base, 4);
+                b.store(Type::F32, AddrSpace::Global, o0, d0p);
+                let c0 = b.index(cw, base, 4);
+                b.store(Type::F32, AddrSpace::Global, c0, Operand::f32(-0.25));
+                b.for_range(Operand::i32(1), Operand::i32(len), Operand::i32(1), |b, i| {
+                    let idx = b.add(base, i);
+                    let im1 = b.add(idx, Operand::i32(-1));
+                    let cprev_a = b.index(cw, im1, 4);
+                    let cprev = b.load(Type::F32, AddrSpace::Global, cprev_a);
+                    // denom = 4 - (-1)*c'[i-1] = 4 + c'
+                    let denom = b.add(cprev, Operand::f32(4.0));
+                    let inv = b.un(UnOp::FRcp, denom);
+                    let ca = b.index(cw, idx, 4);
+                    let cv = b.mul(inv, Operand::f32(-1.0));
+                    b.store(Type::F32, AddrSpace::Global, ca, cv);
+                    let ra = b.index(rhs, idx, 4);
+                    let rv = b.load(Type::F32, AddrSpace::Global, ra);
+                    let dprev_a = b.index(out, im1, 4);
+                    let dprev = b.load(Type::F32, AddrSpace::Global, dprev_a);
+                    // d' = (rhs + d'[i-1]) / denom   (a = -1)
+                    let num = b.add(rv, dprev);
+                    let dv = b.mul(num, inv);
+                    let oa = b.index(out, idx, 4);
+                    b.store(Type::F32, AddrSpace::Global, oa, dv);
+                });
+                // back substitution: x[i] = d'[i] - c'[i] x[i+1]
+                let last = b.add(base, Operand::i32(len - 1));
+                let xa = b.index(out, last, 4);
+                let xl = b.load(Type::F32, AddrSpace::Global, xa);
+                let xnext = b.copy(xl);
+                let i = b.copy(Operand::i32(len - 2));
+                b.loop_(|b| {
+                    let neg = b.cmp(CmpPred::Lt, i, Operand::i32(0));
+                    b.if_(neg, |b| b.break_());
+                    let idx = b.add(base, i);
+                    let ca = b.index(cw, idx, 4);
+                    let cv = b.load(Type::F32, AddrSpace::Global, ca);
+                    let oa = b.index(out, idx, 4);
+                    let dv = b.load(Type::F32, AddrSpace::Global, oa);
+                    let cx = b.mul(cv, xnext);
+                    let xv = b.sub(dv, cx);
+                    b.store(Type::F32, AddrSpace::Global, oa, xv);
+                    b.assign(xnext, xv);
+                    let im1 = b.add(i, Operand::i32(-1));
+                    b.assign(i, im1);
+                });
+            });
+            let ns = b.add(start, stride);
+            b.assign(start, ns);
+            let ne0 = b.add(end, stride);
+            let ne = b.bin(crate::ir::BinOp::SMin, ne0, Operand::i32(lines));
+            b.assign(end, ne);
+        });
+        irlib::emit_spmd_epilogue(&mut b);
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    fn rhs(&self) -> Vec<f32> {
+        let mut rng = SplitMix64::new(570);
+        let mut v = vec![0f32; self.lines * self.len];
+        rng.fill_f32(&mut v, -1.0, 1.0);
+        v
+    }
+
+    fn host_ref(&self) -> Vec<f32> {
+        let len = self.len;
+        let rhs = self.rhs();
+        let mut out = vec![0f32; self.lines * len];
+        let mut cw = vec![0f32; len];
+        for line in 0..self.lines {
+            let base = line * len;
+            cw[0] = -0.25;
+            out[base] = rhs[base] * 0.25;
+            for i in 1..len {
+                let inv = 1.0 / (4.0 + cw[i - 1]);
+                cw[i] = -inv;
+                out[base + i] = (rhs[base + i] + out[base + i - 1]) * inv;
+            }
+            for i in (0..len - 1).rev() {
+                out[base + i] -= cw[i] * out[base + i + 1];
+            }
+        }
+        out
+    }
+}
+
+impl Benchmark for Pbt {
+    fn name(&self) -> &'static str {
+        "570.pbt"
+    }
+
+    fn run(&self, c: &Coordinator) -> Result<BenchResult, Error> {
+        let image = c.prepare(self.module(), OptLevel::O2)?;
+        let mut env = DataEnv::new(&c.device);
+        let rhs = self.rhs();
+        let mut out = vec![0f32; self.lines * self.len];
+        let cw = vec![0f32; self.lines * self.len];
+        let args = [
+            env.map(&rhs, MapType::To)?,
+            env.map(&out, MapType::From)?,
+            env.map(&cw, MapType::Alloc)?,
+        ];
+        let stats = c.run_region(
+            &image,
+            "sweep",
+            "pbt.sweep",
+            &args,
+            LaunchConfig::new(self.teams, self.block),
+        )?;
+        env.unmap(&mut out)?;
+        let want = self.host_ref();
+        let verified = match compare_f32(&out, &want, 1e-3) {
+            None => true,
+            Some(msg) => {
+                log::error!("pbt verify failed: {msg}");
+                false
+            }
+        };
+        Ok(BenchResult { kernel_wall: stats.wall, verified, checksum: checksum_f32(&out) })
+    }
+}

@@ -1,0 +1,156 @@
+//! 552.pep analog: embarrassingly parallel Gaussian-pair generation
+//! (NAS EP style).
+//!
+//! Each thread runs a private LCG, produces uniform pairs, applies the
+//! Marsaglia polar test, and histograms accepted pairs into annuli via
+//! `__kmpc_atomic_add` (exercising RNG-heavy ALU + contended atomics).
+//! The host reference replays the identical per-thread sequences, so the
+//! device result must match **exactly**.
+
+use super::common::{BenchResult, Benchmark, Scale};
+use crate::coordinator::Coordinator;
+use crate::devrt::irlib;
+use crate::hostrt::{DataEnv, MapType};
+use crate::ir::passes::OptLevel;
+use crate::ir::{BinOp, CastOp, CmpPred, FunctionBuilder, Module, Operand, Type, UnOp};
+use crate::sim::LaunchConfig;
+use crate::util::Error;
+
+/// LCG constants (numerical recipes).
+const LCG_A: i64 = 1664525;
+const LCG_C: i64 = 1013904223;
+/// Annuli counted.
+const BINS: usize = 8;
+
+/// The benchmark.
+pub struct Pep {
+    pairs_per_thread: usize,
+    teams: u32,
+    block: u32,
+}
+
+impl Pep {
+    /// Configure for a scale.
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Small => Pep { pairs_per_thread: 64, teams: 2, block: 64 },
+            Scale::Paper => Pep { pairs_per_thread: 512, teams: 8, block: 128 },
+        }
+    }
+
+    fn threads(&self) -> usize {
+        (self.teams * self.block) as usize
+    }
+
+    /// Emit `u = lcg_next(state)` returning uniform f32 in [0,1); updates
+    /// `state` (i32 reg) in place.
+    fn emit_lcg_f32(
+        b: &mut FunctionBuilder,
+        state: crate::ir::Reg,
+    ) -> crate::ir::Reg {
+        let mul = b.mul(state, Operand::i32(LCG_A as i32));
+        let next = b.add(mul, Operand::i32(LCG_C as i32));
+        b.assign(state, next);
+        // take the high 24 bits as a [0,1) float: (state >>> 8) / 2^24
+        let hi = b.bin(BinOp::LShr, state, Operand::i32(8));
+        let f = b.cast(CastOp::SIToFP, hi, Type::F32);
+        b.mul(f, Operand::f32(1.0 / (1u32 << 24) as f32))
+    }
+
+    fn module(&self) -> Module {
+        let pairs = self.pairs_per_thread as i32;
+        let mut m = Module::new("pep");
+        let mut b = FunctionBuilder::new("ep", &[Type::I64], None).kernel();
+        let counts = b.param(0);
+        irlib::emit_spmd_prologue(&mut b);
+        let (gid, _) = super::common::emit_gid_stride(&mut b);
+        // per-thread seed = gid*2654435761 + 12345
+        let s0 = b.mul(gid, Operand::i32(-1640531535i32)); // 2654435761 as i32
+        let seed = b.add(s0, Operand::i32(12345));
+        let state = b.copy(seed);
+        b.for_range(Operand::i32(0), Operand::i32(pairs), Operand::i32(1), |b, _| {
+            let u1 = Self::emit_lcg_f32(b, state);
+            let u2 = Self::emit_lcg_f32(b, state);
+            // polar test on (2u-1)
+            let x0 = b.mul(u1, Operand::f32(2.0));
+            let x = b.sub(x0, Operand::f32(1.0));
+            let y0 = b.mul(u2, Operand::f32(2.0));
+            let y = b.sub(y0, Operand::f32(1.0));
+            let xx = b.mul(x, x);
+            let yy = b.mul(y, y);
+            let t = b.add(xx, yy);
+            let accept0 = b.cmp(CmpPred::Lt, t, Operand::f32(1.0));
+            let nonzero = b.cmp(CmpPred::Gt, t, Operand::f32(0.0));
+            let accept = b.bin(BinOp::And, accept0, nonzero);
+            b.if_(accept, |b| {
+                // gaussian magnitude via Box–Muller-polar:
+                // r = sqrt(-2 ln t / t); g = max(|x|, |y|)·r  → annulus ⌊g⌋
+                let lnt = b.un(UnOp::FLog, t);
+                let m2 = b.mul(lnt, Operand::f32(-2.0));
+                let ratio = b.fdiv(m2, t);
+                let r = b.un(UnOp::FSqrt, ratio);
+                let ax = b.un(UnOp::FAbs, x);
+                let ay = b.un(UnOp::FAbs, y);
+                let mx = b.bin(BinOp::FMax, ax, ay);
+                let g = b.mul(mx, r);
+                let bin0 = b.cast(CastOp::FPToSI, g, Type::I32);
+                let bin = b.bin(BinOp::SMin, bin0, Operand::i32(BINS as i32 - 1));
+                let addr = b.index(counts, bin, 4);
+                b.call("__kmpc_atomic_add", &[addr.into(), Operand::i32(1)], Type::I32);
+            });
+        });
+        irlib::emit_spmd_epilogue(&mut b);
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    /// Exact host replay.
+    fn host_ref(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; BINS];
+        for gid in 0..self.threads() as i32 {
+            let mut state = gid.wrapping_mul(-1640531535i32).wrapping_add(12345);
+            let mut next = || {
+                state = state.wrapping_mul(LCG_A as i32).wrapping_add(LCG_C as i32);
+                ((state as u32) >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+            };
+            for _ in 0..self.pairs_per_thread {
+                let u1 = next();
+                let u2 = next();
+                let x = 2.0 * u1 - 1.0;
+                let y = 2.0 * u2 - 1.0;
+                let t = x * x + y * y;
+                if t < 1.0 && t > 0.0 {
+                    let r = (-2.0 * t.ln() / t).sqrt();
+                    let g = x.abs().max(y.abs()) * r;
+                    let bin = (g as i32).min(BINS as i32 - 1);
+                    counts[bin as usize] += 1;
+                }
+            }
+        }
+        counts
+    }
+}
+
+impl Benchmark for Pep {
+    fn name(&self) -> &'static str {
+        "552.pep"
+    }
+
+    fn run(&self, c: &Coordinator) -> Result<BenchResult, Error> {
+        let image = c.prepare(self.module(), OptLevel::O2)?;
+        let mut env = DataEnv::new(&c.device);
+        let mut counts = vec![0u32; BINS];
+        let d_counts = env.map(&counts, MapType::Tofrom)?;
+        let stats =
+            c.run_region(&image, "ep", "pep.ep", &[d_counts], LaunchConfig::new(self.teams, self.block))?;
+        env.unmap(&mut counts)?;
+        let want = self.host_ref();
+        let verified = counts == want;
+        if !verified {
+            log::error!("pep verify failed: got {counts:?}, want {want:?}");
+        }
+        let checksum = counts.iter().map(|&c| c as f64).sum();
+        Ok(BenchResult { kernel_wall: stats.wall, verified, checksum })
+    }
+}

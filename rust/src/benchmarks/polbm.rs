@@ -1,0 +1,231 @@
+//! 504.polbm analog: D2Q9 lattice-Boltzmann (BGK collision + streaming).
+//!
+//! Pure device-IR compute (heavy f32 ALU per site) under static
+//! worksharing; one launch per time step, ping-pong between two
+//! distribution arrays laid out f[q][y][x].
+
+use super::common::{
+    checksum_f32, compare_f32, emit_static_range, BenchResult, Benchmark, Scale,
+};
+use crate::coordinator::Coordinator;
+use crate::devrt::irlib;
+use crate::hostrt::{DataEnv, MapType};
+use crate::ir::passes::OptLevel;
+use crate::ir::{AddrSpace, BinOp, FunctionBuilder, Module, Operand, Type};
+use crate::sim::LaunchConfig;
+use crate::util::{Error, SplitMix64};
+use std::time::Duration;
+
+/// D2Q9 discrete velocities and weights.
+const CX: [i32; 9] = [0, 1, 0, -1, 0, 1, -1, -1, 1];
+const CY: [i32; 9] = [0, 0, 1, 0, -1, 1, 1, -1, -1];
+const W: [f32; 9] = [
+    4.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+];
+const OMEGA: f32 = 1.2;
+
+/// The benchmark.
+pub struct Polbm {
+    nx: usize,
+    ny: usize,
+    iters: usize,
+    teams: u32,
+}
+
+impl Polbm {
+    /// Configure for a scale.
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Small => Polbm { nx: 24, ny: 16, iters: 2, teams: 2 },
+            Scale::Paper => Polbm { nx: 64, ny: 48, iters: 6, teams: 6 },
+        }
+    }
+
+    fn sites(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    /// Collide-and-stream for one site, emitted as IR.
+    fn module(&self) -> Module {
+        let (nx, ny) = (self.nx as i32, self.ny as i32);
+        let sites = self.sites() as i32;
+        let mut m = Module::new("polbm");
+        let mut b = FunctionBuilder::new("step", &[Type::I64, Type::I64], None).kernel();
+        let (fout, fin) = (b.param(0), b.param(1));
+        irlib::emit_spmd_prologue(&mut b);
+        // `distribute` sites across teams, then static worksharing within
+        // the team.
+        let team = b.call("gpu.ctaid.x", &[], Type::I32);
+        let nteams = b.call("gpu.nctaid.x", &[], Type::I32);
+        let nm1 = b.add(nteams, Operand::i32(-1));
+        let spad = b.add(nm1, Operand::i32(sites));
+        let per = b.sdiv(spad, nteams);
+        let lo = b.mul(team, per);
+        let hi0 = b.add(lo, per);
+        let hi = b.bin(BinOp::SMin, hi0, Operand::i32(sites));
+        let (lb, ub) = emit_static_range(&mut b, lo.into(), hi.into());
+        b.for_range(lb, ub, Operand::i32(1), |b, site| {
+            let x = b.srem(site, Operand::i32(nx));
+            let y = b.sdiv(site, Operand::i32(nx));
+            // Load the 9 distributions; accumulate rho, ux, uy.
+            let mut fq = vec![];
+            let rho = b.copy(Operand::f32(0.0));
+            let ux = b.copy(Operand::f32(0.0));
+            let uy = b.copy(Operand::f32(0.0));
+            for q in 0..9 {
+                let off = b.add(site, Operand::i32(q * sites));
+                let addr = b.index(fin, off, 4);
+                let f = b.load(Type::F32, AddrSpace::Global, addr);
+                fq.push(f);
+                let nr = b.add(rho, f);
+                b.assign(rho, nr);
+                if CX[q as usize] != 0 {
+                    let term = b.mul(f, Operand::f32(CX[q as usize] as f32));
+                    let nu = b.add(ux, term);
+                    b.assign(ux, nu);
+                }
+                if CY[q as usize] != 0 {
+                    let term = b.mul(f, Operand::f32(CY[q as usize] as f32));
+                    let nu = b.add(uy, term);
+                    b.assign(uy, nu);
+                }
+            }
+            let inv_rho = b.un(crate::ir::UnOp::FRcp, rho);
+            let uxn = b.mul(ux, inv_rho);
+            let uyn = b.mul(uy, inv_rho);
+            let ux2 = b.mul(uxn, uxn);
+            let uy2 = b.mul(uyn, uyn);
+            let usq0 = b.add(ux2, uy2);
+            let usq = b.mul(usq0, Operand::f32(1.5));
+            // Collide + stream each direction (periodic wrap).
+            for q in 0..9usize {
+                let cu0 = b.mul(uxn, Operand::f32(CX[q] as f32));
+                let cu1 = b.mul(uyn, Operand::f32(CY[q] as f32));
+                let cu = b.add(cu0, cu1);
+                let cu3 = b.mul(cu, Operand::f32(3.0));
+                let cu2 = b.mul(cu3, cu3);
+                let cu2h = b.mul(cu2, Operand::f32(0.5));
+                // feq = w*rho*(1 + 3cu + 4.5cu² − 1.5u²)
+                let t0 = b.add(cu3, Operand::f32(1.0));
+                let t1 = b.add(t0, cu2h);
+                let t2 = b.sub(t1, usq);
+                let wrho = b.mul(rho, Operand::f32(W[q]));
+                let feq = b.mul(wrho, t2);
+                // f' = f + ω(feq − f)
+                let diff = b.sub(feq, fq[q]);
+                let relax = b.mul(diff, Operand::f32(OMEGA));
+                let fnew = b.add(fq[q], relax);
+                // stream to (x+cx, y+cy) with periodic wrap
+                let xs = b.add(x, Operand::i32(CX[q] + nx));
+                let xd = b.srem(xs, Operand::i32(nx));
+                let ys = b.add(y, Operand::i32(CY[q] + ny));
+                let yd = b.srem(ys, Operand::i32(ny));
+                let row = b.mul(yd, Operand::i32(nx));
+                let dsite = b.add(row, xd);
+                let doff = b.add(dsite, Operand::i32(q as i32 * sites));
+                let daddr = b.index(fout, doff, 4);
+                b.store(Type::F32, AddrSpace::Global, daddr, fnew);
+            }
+        });
+        irlib::emit_spmd_epilogue(&mut b);
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    fn host_step(&self, fin: &[f32], fout: &mut [f32]) {
+        let (nx, ny) = (self.nx, self.ny);
+        let sites = self.sites();
+        for site in 0..sites {
+            let (x, y) = (site % nx, site / nx);
+            let mut rho = 0f32;
+            let mut ux = 0f32;
+            let mut uy = 0f32;
+            let mut fq = [0f32; 9];
+            for q in 0..9 {
+                let f = fin[q * sites + site];
+                fq[q] = f;
+                rho += f;
+                ux += f * CX[q] as f32;
+                uy += f * CY[q] as f32;
+            }
+            let inv = 1.0 / rho;
+            let (uxn, uyn) = (ux * inv, uy * inv);
+            let usq = 1.5 * (uxn * uxn + uyn * uyn);
+            for q in 0..9 {
+                let cu3 = 3.0 * (uxn * CX[q] as f32 + uyn * CY[q] as f32);
+                let feq = W[q] * rho * (1.0 + cu3 + 0.5 * cu3 * cu3 - usq);
+                let fnew = fq[q] + OMEGA * (feq - fq[q]);
+                let xd = (x as i32 + CX[q] + nx as i32) as usize % nx;
+                let yd = (y as i32 + CY[q] + ny as i32) as usize % ny;
+                fout[q * sites + yd * nx + xd] = fnew;
+            }
+        }
+    }
+
+    fn init(&self) -> Vec<f32> {
+        let mut rng = SplitMix64::new(504);
+        let sites = self.sites();
+        let mut f = vec![0f32; 9 * sites];
+        for q in 0..9 {
+            for s in 0..sites {
+                f[q * sites + s] = W[q] * (1.0 + 0.05 * (rng.f32() - 0.5));
+            }
+        }
+        f
+    }
+}
+
+impl Benchmark for Polbm {
+    fn name(&self) -> &'static str {
+        "504.polbm"
+    }
+
+    fn run(&self, c: &Coordinator) -> Result<BenchResult, Error> {
+        let image = c.prepare(self.module(), OptLevel::O2)?;
+        let mut env = DataEnv::new(&c.device);
+        let mut a = self.init();
+        let mut bb = a.clone();
+        let d_a = env.map(&a, MapType::Tofrom)?;
+        let d_b = env.map(&bb, MapType::Tofrom)?;
+        let mut wall = Duration::ZERO;
+        let mut bufs = [d_a, d_b];
+        for _ in 0..self.iters {
+            let stats = c.run_region(
+                &image,
+                "step",
+                "polbm.step",
+                &[bufs[1], bufs[0]],
+                LaunchConfig::new(self.teams, 64),
+            )?;
+            wall += stats.wall;
+            bufs.swap(0, 1);
+        }
+        let result: &mut Vec<f32> = if bufs[0] == d_a { &mut a } else { &mut bb };
+        env.update_from(result)?;
+        let got = result.clone();
+
+        let mut h_in = self.init();
+        let mut h_out = h_in.clone();
+        for _ in 0..self.iters {
+            self.host_step(&h_in, &mut h_out);
+            std::mem::swap(&mut h_in, &mut h_out);
+        }
+        let verified = match compare_f32(&got, &h_in, 1e-3) {
+            None => true,
+            Some(msg) => {
+                log::error!("polbm verify failed: {msg}");
+                false
+            }
+        };
+        Ok(BenchResult { kernel_wall: wall, verified, checksum: checksum_f32(&got) })
+    }
+}

@@ -1,0 +1,193 @@
+//! 514.pomriq analog: MRI-Q — non-uniform Fourier reconstruction.
+//!
+//! `Q(x_i) = Σ_k |m_k|² · (cos φ, sin φ)` with `φ = 2π(kx·x + ky·y + kz·z)`.
+//! Points are claimed through **dynamic dispatch** (`__kmpc_dispatch_*`);
+//! the inner k-loop is device-IR `fsin`/`fcos` — the transcendental-heavy
+//! SPEC member.
+
+use super::common::{checksum_f32, compare_f32, unpack_range, BenchResult, Benchmark, Scale};
+use crate::coordinator::Coordinator;
+use crate::devrt::{irlib, state};
+use crate::hostrt::{DataEnv, MapType};
+use crate::ir::passes::OptLevel;
+use crate::ir::{AddrSpace, CmpPred, FunctionBuilder, Module, Operand, Type, UnOp};
+use crate::sim::LaunchConfig;
+use crate::util::{Error, SplitMix64};
+
+/// The benchmark.
+pub struct Pomriq {
+    points: usize,
+    samples: usize,
+    teams: u32,
+}
+
+impl Pomriq {
+    /// Configure for a scale.
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Small => Pomriq { points: 128, samples: 64, teams: 2 },
+            Scale::Paper => Pomriq { points: 1024, samples: 256, teams: 6 },
+        }
+    }
+
+    /// Kernel args: qr, qi, x, y, z, kx, ky, kz, mag (device addrs).
+    fn module(&self) -> Module {
+        let k_n = self.samples as i32;
+        let n = self.points as i32;
+        let mut m = Module::new("pomriq");
+        let params = vec![Type::I64; 9];
+        let mut b = FunctionBuilder::new("computeq", &params, None).kernel();
+        let (qr, qi) = (b.param(0), b.param(1));
+        let (px, py, pz) = (b.param(2), b.param(3), b.param(4));
+        let (kx, ky, kz, mag) = (b.param(5), b.param(6), b.param(7), b.param(8));
+        irlib::emit_spmd_prologue(&mut b);
+        // `distribute` across teams: team t owns [t·per, (t+1)·per), then
+        // dynamic dispatch within the team.
+        let team = b.call("gpu.ctaid.x", &[], Type::I32);
+        let nteams = b.call("gpu.nctaid.x", &[], Type::I32);
+        let nm1 = b.add(nteams, Operand::i32(-1));
+        let npad = b.add(nm1, Operand::i32(n));
+        let per = b.sdiv(npad, nteams);
+        let lo = b.mul(team, per);
+        let hi0 = b.add(lo, per);
+        let hi = b.bin(crate::ir::BinOp::SMin, hi0, Operand::i32(n));
+        let lo64 = b.sext64(lo);
+        let hi64 = b.sext64(hi);
+        b.call_void(
+            "__kmpc_dispatch_init_4",
+            &[
+                lo64.into(),
+                hi64.into(),
+                Operand::i64(4),
+                Operand::i64(state::SCHED_DYNAMIC as i64),
+            ],
+        );
+        b.loop_(|b| {
+            let packed = b.call("__kmpc_dispatch_next_4", &[], Type::I64);
+            let done = b.cmp(CmpPred::Eq, packed, Operand::i64(state::DISPATCH_DONE as i64));
+            b.if_(done, |b| b.break_());
+            let (lb, ub) = unpack_range(b, packed);
+            b.for_range(lb, ub, Operand::i32(1), |b, i| {
+                let xa = b.index(px, i, 4);
+                let x = b.load(Type::F32, AddrSpace::Global, xa);
+                let ya = b.index(py, i, 4);
+                let y = b.load(Type::F32, AddrSpace::Global, ya);
+                let za = b.index(pz, i, 4);
+                let z = b.load(Type::F32, AddrSpace::Global, za);
+                let sr = b.copy(Operand::f32(0.0));
+                let si = b.copy(Operand::f32(0.0));
+                b.for_range(Operand::i32(0), Operand::i32(k_n), Operand::i32(1), |b, k| {
+                    let kxa = b.index(kx, k, 4);
+                    let kxv = b.load(Type::F32, AddrSpace::Global, kxa);
+                    let kya = b.index(ky, k, 4);
+                    let kyv = b.load(Type::F32, AddrSpace::Global, kya);
+                    let kza = b.index(kz, k, 4);
+                    let kzv = b.load(Type::F32, AddrSpace::Global, kza);
+                    let ma = b.index(mag, k, 4);
+                    let mv = b.load(Type::F32, AddrSpace::Global, ma);
+                    let t0 = b.mul(kxv, x);
+                    let t1 = b.mul(kyv, y);
+                    let t2 = b.mul(kzv, z);
+                    let s01 = b.add(t0, t1);
+                    let s = b.add(s01, t2);
+                    let phi = b.mul(s, Operand::f32(2.0 * std::f32::consts::PI));
+                    let c = b.un(UnOp::FCos, phi);
+                    let sn = b.un(UnOp::FSin, phi);
+                    let mc = b.mul(mv, c);
+                    let ms = b.mul(mv, sn);
+                    let nr = b.add(sr, mc);
+                    b.assign(sr, nr);
+                    let ni = b.add(si, ms);
+                    b.assign(si, ni);
+                });
+                let qra = b.index(qr, i, 4);
+                b.store(Type::F32, AddrSpace::Global, qra, sr);
+                let qia = b.index(qi, i, 4);
+                b.store(Type::F32, AddrSpace::Global, qia, si);
+            });
+        });
+        b.call_void("__kmpc_dispatch_fini_4", &[]);
+        irlib::emit_spmd_epilogue(&mut b);
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    fn inputs(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = SplitMix64::new(514);
+        let mut mk = |n: usize, lo: f32, hi: f32| {
+            let mut v = vec![0f32; n];
+            rng.fill_f32(&mut v, lo, hi);
+            v
+        };
+        let x = mk(self.points, -0.5, 0.5);
+        let y = mk(self.points, -0.5, 0.5);
+        let z = mk(self.points, -0.5, 0.5);
+        let kx = mk(self.samples, -1.0, 1.0);
+        let ky = mk(self.samples, -1.0, 1.0);
+        let kz = mk(self.samples, -1.0, 1.0);
+        let mag = mk(self.samples, 0.0, 1.0);
+        (x, y, z, kx, ky, kz, mag)
+    }
+
+    fn host_ref(&self) -> (Vec<f32>, Vec<f32>) {
+        let (x, y, z, kx, ky, kz, mag) = self.inputs();
+        let mut qr = vec![0f32; self.points];
+        let mut qi = vec![0f32; self.points];
+        for i in 0..self.points {
+            let (mut sr, mut si) = (0f32, 0f32);
+            for k in 0..self.samples {
+                let phi =
+                    2.0 * std::f32::consts::PI * (kx[k] * x[i] + ky[k] * y[i] + kz[k] * z[i]);
+                sr += mag[k] * phi.cos();
+                si += mag[k] * phi.sin();
+            }
+            qr[i] = sr;
+            qi[i] = si;
+        }
+        (qr, qi)
+    }
+}
+
+impl Benchmark for Pomriq {
+    fn name(&self) -> &'static str {
+        "514.pomriq"
+    }
+
+    fn run(&self, c: &Coordinator) -> Result<BenchResult, Error> {
+        let image = c.prepare(self.module(), OptLevel::O2)?;
+        let mut env = DataEnv::new(&c.device);
+        let (x, y, z, kx, ky, kz, mag) = self.inputs();
+        let mut qr = vec![0f32; self.points];
+        let mut qi = vec![0f32; self.points];
+        let args = [
+            env.map(&qr, MapType::From)?,
+            env.map(&qi, MapType::From)?,
+            env.map(&x, MapType::To)?,
+            env.map(&y, MapType::To)?,
+            env.map(&z, MapType::To)?,
+            env.map(&kx, MapType::To)?,
+            env.map(&ky, MapType::To)?,
+            env.map(&kz, MapType::To)?,
+            env.map(&mag, MapType::To)?,
+        ];
+        let stats = c.run_region(
+            &image,
+            "computeq",
+            "pomriq.computeQ",
+            &args,
+            LaunchConfig::new(self.teams, 64),
+        )?;
+        env.unmap(&mut qr)?;
+        env.unmap(&mut qi)?;
+
+        let (hr, hi) = self.host_ref();
+        let verified = compare_f32(&qr, &hr, 2e-3).is_none() && compare_f32(&qi, &hi, 2e-3).is_none();
+        if !verified {
+            log::error!("pomriq verify failed");
+        }
+        let mut all = qr.clone();
+        all.extend_from_slice(&qi);
+        Ok(BenchResult { kernel_wall: stats.wall, verified, checksum: checksum_f32(&all) })
+    }
+}

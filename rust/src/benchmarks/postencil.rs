@@ -1,0 +1,143 @@
+//! 503.postencil analog: iterative 2-D Jacobi heat diffusion.
+//!
+//! The grid has a fixed halo border; every time step is one target-region
+//! launch (as `#pragma omp target` per step would be). Teams statically
+//! own 32-row stripes and offload each stripe's step to the Pallas
+//! `stencil_tile` payload (HBM→VMEM tiling per DESIGN.md §3), ping-pong
+//! between two device buffers.
+
+use super::common::{checksum_f32, compare_f32, BenchResult, Benchmark, Scale};
+use crate::coordinator::Coordinator;
+use crate::devrt::irlib;
+use crate::hostrt::{DataEnv, MapType};
+use crate::ir::passes::OptLevel;
+use crate::ir::{CmpPred, FunctionBuilder, Module, Operand, Type};
+use crate::sim::LaunchConfig;
+use crate::util::{Error, SplitMix64};
+use std::time::Duration;
+
+/// Stripe height (rows per team) — must match the AOT payload shape.
+const ROWS_PER_TEAM: usize = 32;
+/// Grid width including the two halo columns — must match the payload.
+const COLS: usize = 258;
+
+/// The benchmark.
+pub struct Postencil {
+    teams: usize,
+    iters: usize,
+}
+
+impl Postencil {
+    /// Configure for a scale.
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Small => Postencil { teams: 2, iters: 2 },
+            Scale::Paper => Postencil { teams: 8, iters: 8 },
+        }
+    }
+
+    fn rows(&self) -> usize {
+        self.teams * ROWS_PER_TEAM
+    }
+
+    /// One kernel launch = one time step: each team calls the payload on
+    /// its stripe.
+    fn module(&self) -> Module {
+        let mut m = Module::new("postencil");
+        let mut b = FunctionBuilder::new("step", &[Type::I64, Type::I64], None).kernel();
+        let (out, inp) = (b.param(0), b.param(1));
+        irlib::emit_spmd_prologue(&mut b);
+        let tid = b.call("gpu.tid.x", &[], Type::I32);
+        let team = b.call("gpu.ctaid.x", &[], Type::I32);
+        let is0 = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+        b.if_(is0, |b| {
+            // stripe r0 = team*ROWS; payload input = rows r0..r0+34 of inp
+            // (inp row 0 is the halo), output rows r0+1.. of out.
+            let r0 = b.mul(team, Operand::i32(ROWS_PER_TEAM as i32));
+            let in_off = b.index(inp, r0, (COLS * 4) as u64);
+            let r1 = b.add(r0, Operand::i32(1));
+            let out_off = b.index(out, r1, (COLS * 4) as u64);
+            b.call_void("payload.stencil_tile", &[out_off.into(), in_off.into()]);
+        });
+        irlib::emit_spmd_epilogue(&mut b);
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    /// Host reference (the SPEC serial version).
+    fn host_step(&self, inp: &[f32], out: &mut [f32]) {
+        let (rows, cols) = (self.rows() + 2, COLS);
+        out.copy_from_slice(inp);
+        for i in 1..rows - 1 {
+            for j in 1..cols - 1 {
+                out[i * cols + j] = 0.5 * inp[i * cols + j]
+                    + 0.125
+                        * (inp[(i - 1) * cols + j]
+                            + inp[(i + 1) * cols + j]
+                            + inp[i * cols + j - 1]
+                            + inp[i * cols + j + 1]);
+            }
+        }
+    }
+
+    fn init_grid(&self) -> Vec<f32> {
+        let mut rng = SplitMix64::new(503);
+        let mut g = vec![0f32; (self.rows() + 2) * COLS];
+        rng.fill_f32(&mut g, 0.0, 1.0);
+        g
+    }
+}
+
+impl Benchmark for Postencil {
+    fn name(&self) -> &'static str {
+        "503.postencil"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        true
+    }
+
+    fn run(&self, c: &Coordinator) -> Result<BenchResult, Error> {
+        let image = c.prepare(self.module(), OptLevel::O2)?;
+        let mut env = DataEnv::new(&c.device);
+        let mut a = self.init_grid();
+        let mut bbuf = a.clone();
+        let d_a = env.map(&a, MapType::Tofrom)?;
+        let d_b = env.map(&bbuf, MapType::Tofrom)?;
+
+        let mut wall = Duration::ZERO;
+        let mut bufs = [d_a, d_b];
+        for _ in 0..self.iters {
+            let stats = c.run_region(
+                &image,
+                "step",
+                "postencil.step",
+                &[bufs[1], bufs[0]],
+                LaunchConfig::new(self.teams as u32, 64),
+            )?;
+            wall += stats.wall;
+            bufs.swap(0, 1);
+        }
+        // result lives in bufs[0]
+        let result_host: &mut Vec<f32> = if bufs[0] == d_a { &mut a } else { &mut bbuf };
+        env.update_from(result_host)?;
+        let got = result_host.clone();
+
+        // Host reference.
+        let mut h_in = self.init_grid();
+        let mut h_out = h_in.clone();
+        for _ in 0..self.iters {
+            self.host_step(&h_in, &mut h_out);
+            std::mem::swap(&mut h_in, &mut h_out);
+        }
+        let verified = match compare_f32(&got, &h_in, 1e-4) {
+            None => true,
+            Some(msg) => {
+                log::error!("postencil verify failed: {msg}");
+                false
+            }
+        };
+        Ok(BenchResult { kernel_wall: wall, verified, checksum: checksum_f32(&got) })
+    }
+}

@@ -1,0 +1,204 @@
+//! The `omprt` command-line launcher (hand-rolled parsing; the offline
+//! crate set has no `clap`).
+//!
+//! ```text
+//! omprt fig2        [--arch A] [--scale small|paper] [--reps N]
+//! omprt table1      [--arch A] [--scale small|paper]
+//! omprt conformance
+//! omprt code-compare
+//! omprt bench NAME  [--arch A] [--runtime legacy|portable] [--scale S]
+//! omprt info
+//! ```
+
+use crate::benchmarks::{by_name, harness, Scale};
+use crate::coordinator::Coordinator;
+use crate::devrt::{self, RuntimeKind};
+use crate::ir::printer::{diff_text, print_module};
+use crate::runtime::{artifact, ArtifactManifest};
+use crate::sim::Arch;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = vec![];
+    let mut flags = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        if let Some(name) = argv[i].strip_prefix("--") {
+            let val = argv.get(i + 1).cloned().unwrap_or_default();
+            flags.insert(name.to_string(), val);
+            i += 2;
+        } else {
+            positional.push(argv[i].clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn arch(&self) -> Arch {
+        self.flags
+            .get("arch")
+            .and_then(|s| Arch::parse(s))
+            .unwrap_or(Arch::Nvptx64)
+    }
+    fn scale(&self) -> Scale {
+        match self.flags.get("scale").map(|s| s.as_str()) {
+            Some("paper") => Scale::Paper,
+            _ => Scale::Small,
+        }
+    }
+    fn reps(&self) -> u32 {
+        self.flags.get("reps").and_then(|s| s.parse().ok()).unwrap_or(5)
+    }
+    fn runtime(&self) -> RuntimeKind {
+        self.flags
+            .get("runtime")
+            .and_then(|s| RuntimeKind::parse(s))
+            .unwrap_or(RuntimeKind::Portable)
+    }
+}
+
+fn load_manifest() -> Option<ArtifactManifest> {
+    ArtifactManifest::load(&artifact::default_dir()).ok()
+}
+
+/// Entry point for `main`; returns the process exit code.
+pub fn main_entry() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return 2;
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
+    match cmd {
+        "fig2" => {
+            let man = load_manifest();
+            if man.is_none() {
+                eprintln!("note: no artifacts/ — payload benchmarks skipped (run `make artifacts`)");
+            }
+            let rows = harness::run_fig2(args.arch(), args.scale(), args.reps(), man.as_ref())?;
+            print!("{}", harness::format_fig2(&rows));
+            let worst = rows.iter().map(|r| r.rel).fold(0.0, f64::max);
+            println!("\nmax relative difference: {:.2}% (paper: <1% = noise)", worst * 100.0);
+            Ok(())
+        }
+        "table1" => {
+            let man = load_manifest().ok_or_else(|| {
+                crate::util::Error::Config("table1 needs artifacts (run `make artifacts`)".into())
+            })?;
+            let rows = harness::run_table1(args.arch(), args.scale(), &man)?;
+            print!("{}", harness::format_table1(&rows));
+            Ok(())
+        }
+        "conformance" => {
+            let (rows, identical) = crate::conformance::run_matrix();
+            for (kind, arch, outcomes) in &rows {
+                let pass = outcomes.iter().filter(|o| o.result.is_ok()).count();
+                println!("{kind:>8} / {arch}: {pass}/{} passed", outcomes.len());
+                for o in outcomes {
+                    if let Err(e) = &o.result {
+                        println!("    FAIL {}: {e}", o.name);
+                    }
+                }
+            }
+            println!("reports identical across configurations: {identical}");
+            Ok(())
+        }
+        "code-compare" => {
+            for arch in Arch::all() {
+                let legacy = devrt::build(RuntimeKind::Legacy, arch);
+                let portable = devrt::build(RuntimeKind::Portable, arch);
+                let d = diff_text(&print_module(&legacy.ir_library), &print_module(&portable.ir_library));
+                println!(
+                    "{arch}: {} legacy-only lines, {} portable-only lines, \
+                     metadata+mangling-only diff: {}",
+                    d.only_a.len(),
+                    d.only_b.len(),
+                    d.only_metadata_and_mangling()
+                );
+            }
+            Ok(())
+        }
+        "bench" => {
+            let name = args
+                .positional
+                .first()
+                .ok_or_else(|| crate::util::Error::Config("bench needs a NAME".into()))?;
+            let bench = by_name(name, args.scale())
+                .ok_or_else(|| crate::util::Error::Config(format!("unknown benchmark `{name}`")))?;
+            let mut c = Coordinator::new(args.runtime(), args.arch());
+            if bench.needs_artifacts() {
+                let man = load_manifest().ok_or_else(|| {
+                    crate::util::Error::Config("benchmark needs artifacts".into())
+                })?;
+                c.attach_artifacts(&man)?;
+            }
+            let r = bench.run(&c)?;
+            println!(
+                "{}: {:.4}s kernel wall, verified={}, checksum={:.6e}",
+                bench.name(),
+                r.kernel_wall.as_secs_f64(),
+                r.verified,
+                r.checksum
+            );
+            Ok(())
+        }
+        "info" => {
+            for arch in Arch::all() {
+                let d = crate::sim::DeviceDesc::for_arch(arch);
+                println!(
+                    "{}-sim: warp={} sms={} shared/block={}KiB global={}MiB",
+                    arch,
+                    arch.warp_width(),
+                    d.sm_count,
+                    d.shared_mem_per_block / 1024,
+                    d.global_mem >> 20
+                );
+            }
+            match load_manifest() {
+                Some(m) => println!("artifacts: {} payloads in {}", m.specs.len(), m.dir.display()),
+                None => println!("artifacts: none (run `make artifacts`)"),
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(crate::util::Error::Config(format!("unknown command `{other}`"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "omprt — portable GPU device runtime (IWOMP'21 reproduction)\n\
+         \n\
+         USAGE: omprt <COMMAND> [flags]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 fig2          run the Fig. 2 experiment (SPEC ACCEL analogs, both runtimes)\n\
+         \x20 table1        run the Table 1 experiment (miniQMC region profiles)\n\
+         \x20 conformance   run the SOLLVE-analog suite on every runtime x arch\n\
+         \x20 code-compare  diff the legacy vs portable runtime library text (par. 4.1)\n\
+         \x20 bench NAME    run one benchmark (postencil|polbm|pomriq|pep|pcg|pbt|miniqmc)\n\
+         \x20 info          device + artifact info\n\
+         \n\
+         FLAGS: --arch nvptx64|amdgcn  --scale small|paper  --reps N  --runtime legacy|portable"
+    );
+}

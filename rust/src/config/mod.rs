@@ -1,0 +1,325 @@
+//! Mini-TOML configuration system.
+//!
+//! The offline crate set has no `serde`/`toml`, so this is a small,
+//! dependency-free parser for the subset we use: sections, string /
+//! integer / float / boolean values, and flat arrays of strings or
+//! integers. Used by benchmark run configs, the CLI defaults, and the
+//! AOT artifact manifest written by `python/compile/aot.py`.
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = "string"
+//! n = 42
+//! x = 1.5
+//! flag = true
+//! dims = [32, 32]
+//! names = ["a", "b"]
+//! ```
+
+use crate::util::Error;
+use std::collections::BTreeMap;
+
+/// A configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntList(Vec<i64>),
+    StrList(Vec<String>),
+}
+
+impl Value {
+    /// String view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// Integer view (accepts Int only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Float view (Int promotes).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// Bool view.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// Integer-list view.
+    pub fn as_int_list(&self) -> Option<&[i64]> {
+        match self {
+            Value::IntList(v) => Some(v),
+            _ => None,
+        }
+    }
+    /// String-list view.
+    pub fn as_str_list(&self) -> Option<&[String]> {
+        match self {
+            Value::StrList(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]` of keys.
+pub type Section = BTreeMap<String, Value>;
+
+/// A parsed configuration document.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    /// Keys before any section header.
+    pub root: Section,
+    /// Sections (BTreeMap: deterministic order).
+    pub sections: BTreeMap<String, Section>,
+}
+
+impl Config {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<Self, Error> {
+        let mut cfg = Config::default();
+        let mut current: Option<String> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                cfg.sections.entry(name.clone()).or_default();
+                current = Some(name);
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(v.trim()).map_err(|m| err(lineno, &m))?;
+            let section = match &current {
+                Some(s) => cfg.sections.get_mut(s).unwrap(),
+                None => &mut cfg.root,
+            };
+            section.insert(key, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// Section accessor.
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.get(name)
+    }
+
+    /// `section.key` lookup (root when `section` is None).
+    pub fn get(&self, section: Option<&str>, key: &str) -> Option<&Value> {
+        match section {
+            Some(s) => self.sections.get(s).and_then(|sec| sec.get(key)),
+            None => self.root.get(key),
+        }
+    }
+
+    /// Typed helper: integer with default.
+    pub fn int_or(&self, section: Option<&str>, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    /// Typed helper: string with default.
+    pub fn str_or<'a>(&'a self, section: Option<&str>, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    /// Serialize back to text (used to write the artifact manifest).
+    pub fn to_text(&self) -> String {
+        fn write_section(out: &mut String, s: &Section) {
+            for (k, v) in s {
+                out.push_str(&format!("{k} = {}\n", render(v)));
+            }
+        }
+        let mut out = String::new();
+        write_section(&mut out, &self.root);
+        for (name, s) in &self.sections {
+            out.push_str(&format!("\n[{name}]\n"));
+            write_section(&mut out, s);
+        }
+        out
+    }
+}
+
+fn render(v: &Value) -> String {
+    match v {
+        Value::Str(s) => format!("\"{s}\""),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => {
+            if f.fract() == 0.0 {
+                format!("{f:.1}")
+            } else {
+                f.to_string()
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+        Value::IntList(v) => {
+            format!("[{}]", v.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(", "))
+        }
+        Value::StrList(v) => {
+            format!("[{}]", v.iter().map(|s| format!("\"{s}\"")).collect::<Vec<_>>().join(", "))
+        }
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::IntList(vec![]));
+        }
+        let items: Vec<&str> = inner.split(',').map(|i| i.trim()).collect();
+        if items[0].starts_with('"') {
+            let mut out = vec![];
+            for it in items {
+                match parse_value(it)? {
+                    Value::Str(s) => out.push(s),
+                    _ => return Err("mixed array".into()),
+                }
+            }
+            return Ok(Value::StrList(out));
+        }
+        let mut out = vec![];
+        for it in items {
+            out.push(it.parse::<i64>().map_err(|e| format!("bad int `{it}`: {e}"))?);
+        }
+        return Ok(Value::IntList(out));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+        # top comment
+        title = "omprt"
+        reps = 5
+
+        [postencil]
+        grid = [512, 512]
+        iters = 100
+        tol = 1.0e-5
+        verify = true
+        names = ["a", "b"]  # trailing comment
+    "#;
+
+    #[test]
+    fn parses_root_and_sections() {
+        let c = Config::parse(DOC).unwrap();
+        assert_eq!(c.root["title"], Value::Str("omprt".into()));
+        assert_eq!(c.root["reps"], Value::Int(5));
+        let s = c.section("postencil").unwrap();
+        assert_eq!(s["grid"], Value::IntList(vec![512, 512]));
+        assert_eq!(s["iters"], Value::Int(100));
+        assert_eq!(s["verify"], Value::Bool(true));
+        assert_eq!(s["names"], Value::StrList(vec!["a".into(), "b".into()]));
+        assert!((s["tol"].as_float().unwrap() - 1e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comment_inside_string_is_preserved() {
+        let c = Config::parse("k = \"a # b\"").unwrap();
+        assert_eq!(c.root["k"], Value::Str("a # b".into()));
+    }
+
+    #[test]
+    fn typed_helpers_have_defaults() {
+        let c = Config::parse(DOC).unwrap();
+        assert_eq!(c.int_or(Some("postencil"), "iters", 1), 100);
+        assert_eq!(c.int_or(Some("postencil"), "missing", 7), 7);
+        assert_eq!(c.str_or(None, "title", "x"), "omprt");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Config::parse("\n\nbad line").unwrap_err().to_string();
+        assert!(e.contains("line 3"), "{e}");
+    }
+
+    #[test]
+    fn roundtrips_through_to_text() {
+        let c = Config::parse(DOC).unwrap();
+        let again = Config::parse(&c.to_text()).unwrap();
+        assert_eq!(c, again);
+    }
+
+    #[test]
+    fn rejects_malformed_values() {
+        assert!(Config::parse("k = \"unterminated").is_err());
+        assert!(Config::parse("k = [1, 2").is_err());
+        assert!(Config::parse("k = nope").is_err());
+        assert!(Config::parse("[]").is_err());
+    }
+}

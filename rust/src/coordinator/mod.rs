@@ -1,0 +1,108 @@
+//! The coordinator: ties the host runtime, PJRT service and profiler into
+//! the launch pipeline benchmarks drive, and owns the `nvprof`-analog
+//! per-region profiler that regenerates the paper's Table 1 columns.
+
+pub mod profiler;
+
+pub use profiler::{Profiler, RegionReport};
+
+use crate::devrt::RuntimeKind;
+use crate::hostrt::{KernelImage, OffloadDevice};
+use crate::ir::passes::OptLevel;
+use crate::ir::Module;
+use crate::runtime::{install_payloads, ArtifactManifest, PjrtService};
+use crate::sim::{Arch, LaunchConfig, LaunchStats};
+use crate::util::Error;
+
+/// One device + its profiler + (optionally) the PJRT payload service.
+pub struct Coordinator {
+    /// The offload device (runtime build + memory).
+    pub device: OffloadDevice,
+    /// Per-region profiler.
+    pub profiler: Profiler,
+    /// PJRT service handle, if artifacts were attached.
+    pub pjrt: Option<PjrtService>,
+}
+
+impl Coordinator {
+    /// A coordinator without PJRT payloads.
+    pub fn new(kind: RuntimeKind, arch: Arch) -> Self {
+        Coordinator { device: OffloadDevice::new(kind, arch), profiler: Profiler::new(), pjrt: None }
+    }
+
+    /// Attach AOT artifacts: starts (or reuses) a PJRT service, compiles
+    /// every artifact, installs `payload.*` bindings.
+    pub fn attach_artifacts(&mut self, manifest: &ArtifactManifest) -> Result<(), Error> {
+        let svc = match &self.pjrt {
+            Some(s) => s.clone(),
+            None => {
+                let s = PjrtService::start()?;
+                self.pjrt = Some(s.clone());
+                s
+            }
+        };
+        install_payloads(self.device.bindings_mut(), &svc, manifest)?;
+        Ok(())
+    }
+
+    /// Attach artifacts re-using an existing PJRT service (PJRT startup
+    /// is expensive; benchmark harnesses share one service across the
+    /// legacy/portable coordinators they compare).
+    pub fn attach_artifacts_with(
+        &mut self,
+        svc: &PjrtService,
+        manifest: &ArtifactManifest,
+    ) -> Result<(), Error> {
+        self.pjrt = Some(svc.clone());
+        install_payloads(self.device.bindings_mut(), svc, manifest)?;
+        Ok(())
+    }
+
+    /// Device-code compilation step (Fig. 1).
+    pub fn prepare(&self, app: Module, opt: OptLevel) -> Result<KernelImage, Error> {
+        self.device.prepare(app, opt)
+    }
+
+    /// Launch a target region under the profiler. `region` is the name
+    /// `nvprof` would show (e.g. `evaluate_vgh`).
+    pub fn run_region(
+        &self,
+        image: &KernelImage,
+        kernel: &str,
+        region: &str,
+        args: &[u64],
+        cfg: LaunchConfig,
+    ) -> Result<LaunchStats, Error> {
+        let (r, elapsed) =
+            crate::util::stats::timed(|| self.device.offload(image, kernel, args, cfg));
+        self.profiler.record(region, elapsed);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::FunctionBuilder;
+
+    fn empty_kernel() -> Module {
+        let mut m = Module::new("t");
+        let mut b = FunctionBuilder::new("k", &[], None).kernel();
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    #[test]
+    fn run_region_records_profile() {
+        let c = Coordinator::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let image = c.prepare(empty_kernel(), OptLevel::O2).unwrap();
+        for _ in 0..3 {
+            c.run_region(&image, "k", "r1", &[], LaunchConfig::new(1, 32)).unwrap();
+        }
+        let report = c.profiler.report();
+        let r1 = report.iter().find(|r| r.name == "r1").unwrap();
+        assert_eq!(r1.summary.count(), 3);
+        assert!(r1.summary.avg_us() > 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! The `nvprof`-analog per-region profiler.
+//!
+//! Accumulates, per target region, the exact columns of the paper's
+//! Table 1: total Time (ms), #Calls, Avg/Min/Max (µs).
+
+use crate::util::Summary;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Region-keyed profiler (thread-safe).
+#[derive(Default)]
+pub struct Profiler {
+    regions: Mutex<BTreeMap<String, Summary>>,
+}
+
+/// One row of the profiler report.
+#[derive(Debug, Clone)]
+pub struct RegionReport {
+    /// Region name (Table 1 "Target Region").
+    pub name: String,
+    /// Accumulated statistics.
+    pub summary: Summary,
+}
+
+impl Profiler {
+    /// Empty profiler.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample for `region`.
+    pub fn record(&self, region: &str, d: Duration) {
+        let mut map = self.regions.lock().unwrap();
+        map.entry(region.to_string()).or_default().record(d);
+    }
+
+    /// Time a closure under a region.
+    pub fn time<R>(&self, region: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.record(region, t0.elapsed());
+        r
+    }
+
+    /// Snapshot all regions (sorted by name).
+    pub fn report(&self) -> Vec<RegionReport> {
+        self.regions
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, summary)| RegionReport { name: name.clone(), summary: summary.clone() })
+            .collect()
+    }
+
+    /// Clear all accumulated data.
+    pub fn reset(&self) {
+        self.regions.lock().unwrap().clear();
+    }
+
+    /// Format a report in the layout of the paper's Table 1.
+    ///
+    /// ```text
+    /// Target Region      | Version  | Time (ms) | # Calls | Avg (us) | Min (us) | Max (us)
+    /// evaluate_vgh       | Original |   1376.23 |   64512 |   21.309 |   19.744 |   32.384
+    /// ```
+    pub fn table1(rows: &[(String, String, Summary)]) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "Target Region      | Version  | Time (ms) | # Calls | Avg (us) | Min (us) | Max (us)\n",
+        );
+        out.push_str(
+            "-------------------+----------+-----------+---------+----------+----------+---------\n",
+        );
+        for (region, version, s) in rows {
+            out.push_str(&format!(
+                "{:<19}| {:<9}| {:>10.2} | {:>7} | {:>8.3} | {:>8.3} | {:>8.3}\n",
+                region,
+                version,
+                s.total_ms(),
+                s.count(),
+                s.avg_us(),
+                s.min_us(),
+                s.max_us()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let p = Profiler::new();
+        p.record("a", Duration::from_micros(10));
+        p.record("a", Duration::from_micros(30));
+        p.record("b", Duration::from_micros(5));
+        let r = p.report();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].name, "a");
+        assert_eq!(r[0].summary.count(), 2);
+        assert!((r[0].summary.avg_us() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let p = Profiler::new();
+        let v = p.time("r", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(p.report()[0].summary.count(), 1);
+    }
+
+    #[test]
+    fn table1_layout_contains_columns() {
+        let mut s = Summary::new();
+        s.record(Duration::from_micros(21));
+        let text = Profiler::table1(&[("evaluate_vgh".into(), "Original".into(), s)]);
+        assert!(text.contains("Target Region"), "{text}");
+        assert!(text.contains("evaluate_vgh"), "{text}");
+        assert!(text.contains("# Calls"), "{text}");
+    }
+
+    #[test]
+    fn reset_clears() {
+        let p = Profiler::new();
+        p.record("a", Duration::from_micros(1));
+        p.reset();
+        assert!(p.report().is_empty());
+    }
+
+    #[test]
+    fn profiler_is_thread_safe() {
+        let p = std::sync::Arc::new(Profiler::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let p = p.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        p.record("x", Duration::from_nanos(100));
+                    }
+                });
+            }
+        });
+        assert_eq!(p.report()[0].summary.count(), 4000);
+    }
+}

@@ -1,0 +1,167 @@
+//! The device-runtime object: what a "build" of the runtime produces and
+//! what the host runtime consumes when preparing a kernel image.
+
+use crate::ir::{linker, passes, Module};
+use crate::sim::{Arch, Bindings};
+use crate::util::Error;
+
+/// Which runtime implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RuntimeKind {
+    /// The original CUDA/HIP-style build (paper §2.1).
+    Legacy,
+    /// The OpenMP 5.1 portable build (paper §3).
+    Portable,
+}
+
+impl RuntimeKind {
+    /// Display name used in reports ("Original" / "New", as in Fig. 2 and
+    /// Table 1 of the paper).
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            RuntimeKind::Legacy => "Original",
+            RuntimeKind::Portable => "New",
+        }
+    }
+
+    /// Both kinds.
+    pub fn all() -> [RuntimeKind; 2] {
+        [RuntimeKind::Legacy, RuntimeKind::Portable]
+    }
+
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "legacy" | "original" | "cuda" | "hip" => Some(RuntimeKind::Legacy),
+            "portable" | "new" | "openmp" | "omp" => Some(RuntimeKind::Portable),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RuntimeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RuntimeKind::Legacy => "legacy",
+            RuntimeKind::Portable => "portable",
+        })
+    }
+}
+
+/// A built device runtime: Rust bindings for the control-heavy entry
+/// points plus the IR library linked into application kernels.
+pub struct DeviceRuntime {
+    /// Which build this is.
+    pub kind: RuntimeKind,
+    /// Target architecture.
+    pub arch: Arch,
+    /// Producer string (recorded as module metadata — part of the
+    /// "semantically unimportant" diff of §4.1).
+    pub producer: String,
+    /// The `dev.rtl.bc` analog.
+    pub ir_library: Module,
+    /// Host-side bindings (`__kmpc_target_init`, worksharing, allocator…).
+    pub bindings: Bindings,
+}
+
+impl DeviceRuntime {
+    /// Link the runtime library into an application module and run the
+    /// optimization pipeline (the Fig. 1 "device code compilation" step).
+    /// Returns the pass statistics.
+    pub fn link_and_optimize(
+        &self,
+        app: &mut Module,
+        level: passes::OptLevel,
+    ) -> Result<passes::PassStats, Error> {
+        app.target = Some(format!("{}-sim", self.arch.name()));
+        linker::link(app, &self.ir_library)?;
+        let stats = passes::optimize(app, level);
+        linker::check_resolved(app, linker::default_environment_symbol)?;
+        crate::ir::verify::verify_module(app)?;
+        Ok(stats)
+    }
+
+    /// The canonical API surface both builds must provide (checked by the
+    /// conformance suite).
+    pub fn canonical_symbols() -> &'static [&'static str] {
+        &[
+            "__kmpc_atomic_add",
+            "__kmpc_atomic_max",
+            "__kmpc_atomic_exchange",
+            "__kmpc_atomic_cas",
+            "__kmpc_atomic_inc",
+            "__kmpc_flush",
+            "__kmpc_parallel_51",
+            "__kmpc_worker_loop",
+            "__kmpc_reduce_add_f64",
+            "__kmpc_reduce_add_f32",
+            "__kmpc_reduce_max_f64",
+            "__kmpc_warp_reduce_add_u32",
+            "omp_get_thread_num",
+            "omp_get_num_threads",
+            "omp_get_team_num",
+            "omp_get_num_teams",
+        ]
+    }
+
+    /// The binding symbols both builds must install.
+    pub fn binding_symbols() -> &'static [&'static str] {
+        &[
+            "__kmpc_target_init",
+            "__kmpc_target_deinit",
+            "__kmpc_parallel_begin",
+            "__kmpc_parallel_end",
+            "__kmpc_barrier",
+            "__kmpc_barrier_simple_spmd",
+            "__kmpc_for_static_init_4",
+            "__kmpc_dispatch_init_4",
+            "__kmpc_dispatch_next_4",
+            "__kmpc_dispatch_fini_4",
+            "__kmpc_alloc_shared",
+            "__kmpc_free_shared",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing_and_names() {
+        assert_eq!(RuntimeKind::parse("cuda"), Some(RuntimeKind::Legacy));
+        assert_eq!(RuntimeKind::parse("openmp"), Some(RuntimeKind::Portable));
+        assert_eq!(RuntimeKind::parse("x"), None);
+        assert_eq!(RuntimeKind::Legacy.paper_name(), "Original");
+        assert_eq!(RuntimeKind::Portable.paper_name(), "New");
+    }
+
+    #[test]
+    fn both_builds_provide_full_api_surface() {
+        for kind in RuntimeKind::all() {
+            for arch in Arch::all() {
+                let rt = crate::devrt::build(kind, arch);
+                for sym in DeviceRuntime::canonical_symbols() {
+                    assert!(
+                        rt.ir_library.funcs.contains_key(*sym),
+                        "{kind} on {arch} missing IR symbol {sym}"
+                    );
+                }
+                for sym in DeviceRuntime::binding_symbols() {
+                    assert!(
+                        rt.bindings.get(sym).is_some(),
+                        "{kind} on {arch} missing binding {sym}"
+                    );
+                }
+                crate::ir::verify::verify_module(&rt.ir_library).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn producers_differ_between_builds() {
+        let l = crate::devrt::build(RuntimeKind::Legacy, Arch::Nvptx64);
+        let p = crate::devrt::build(RuntimeKind::Portable, Arch::Nvptx64);
+        assert_ne!(l.producer, p.producer);
+    }
+}

@@ -1,0 +1,135 @@
+//! The **legacy** device runtime: the pre-port structure (paper §2.1).
+//!
+//! One specialized build per target, generated from common source through
+//! a macro — the Rust analog of Listing 1's `DEVICE`/`SHARED` macro trick:
+//! the `legacy_target!` expansion *is* the "compile the same source once
+//! as CUDA, once as HIP" step, with the target-dependent spellings
+//! (vendor fence/increment intrinsics, impl-symbol mangling) substituted
+//! per expansion. Each expanded module is a self-contained per-target
+//! runtime, exactly like the old `nvptx`/`amdgcn` source trees.
+
+use super::api::{DeviceRuntime, RuntimeKind};
+use super::bindings_impl as common; // the shared *source*; macro instantiates per target
+use super::irlib::{self, AtomicsFlavor, TargetParts};
+use crate::sim::{Arch, Bindings};
+use std::sync::Arc;
+
+/// Expand a per-target legacy runtime module.
+///
+/// `$mangle` plays the role of the CUDA/HIP name mangling of the macro
+/// build (`__kmpc_impl_foo$nvptx`); `$fence`/`$inc` are the vendor
+/// intrinsics the target-dependent sources call.
+macro_rules! legacy_target {
+    ($modname:ident, $arch:expr, $sfx:literal, $dialect:literal, $fence:literal, $inc:literal) => {
+        /// The macro-expanded per-target runtime (see module docs).
+        pub mod $modname {
+            use super::*;
+
+            /// Impl-symbol mangling of this target's macro build.
+            pub fn mangle(base: &str) -> String {
+                format!("{base}${}", $sfx)
+            }
+
+            /// The target-dependent sources: fence + atomicInc.
+            pub fn target_parts() -> TargetParts {
+                let tf = mangle("__kmpc_impl_threadfence");
+                let inc = mangle("__kmpc_impl_atomic_inc");
+                TargetParts {
+                    threadfence: irlib::threadfence_body(&tf, $fence),
+                    threadfence_name: tf,
+                    atomic_inc: irlib::atomic_inc_body(&inc, $inc),
+                    atomic_inc_name: inc,
+                }
+            }
+
+            /// Producer string recorded in module metadata.
+            pub fn producer() -> String {
+                format!("devrt-legacy 0.1 ({} macro build, {})", $dialect, $arch.name())
+            }
+
+            /// Install this target's copy of the runtime bindings.
+            /// (The bodies are the macro-shared source — compiled "twice",
+            /// once per expansion, like the original runtime.)
+            pub fn install_bindings(b: &mut Bindings) {
+                b.bind("__kmpc_target_init", Arc::new(common::target_init));
+                b.bind("__kmpc_target_deinit", Arc::new(common::target_deinit));
+                b.bind("__kmpc_parallel_begin", Arc::new(common::parallel_begin));
+                b.bind("__kmpc_parallel_end", Arc::new(common::parallel_end));
+                b.bind("__kmpc_barrier", Arc::new(common::barrier));
+                b.bind("__kmpc_barrier_simple_spmd", Arc::new(common::barrier));
+                b.bind("__kmpc_for_static_init_4", Arc::new(common::for_static_init));
+                b.bind("__kmpc_dispatch_init_4", Arc::new(common::dispatch_init));
+                b.bind("__kmpc_dispatch_next_4", Arc::new(common::dispatch_next));
+                b.bind("__kmpc_dispatch_fini_4", Arc::new(common::dispatch_fini));
+                b.bind("__kmpc_alloc_shared", Arc::new(common::alloc_shared));
+                b.bind("__kmpc_free_shared", Arc::new(common::free_shared));
+            }
+
+            /// Build the complete legacy runtime for this target.
+            pub fn build() -> DeviceRuntime {
+                let mut bindings = Bindings::new();
+                install_bindings(&mut bindings);
+                let ir_library = irlib::build_library(
+                    $arch,
+                    &producer(),
+                    &mangle,
+                    target_parts(),
+                    AtomicsFlavor::Intrinsic,
+                );
+                DeviceRuntime {
+                    kind: RuntimeKind::Legacy,
+                    arch: $arch,
+                    producer: producer(),
+                    ir_library,
+                    bindings,
+                }
+            }
+        }
+    };
+}
+
+legacy_target!(nvptx, Arch::Nvptx64, "nvptx", "cuda", "nvvm.membar.gl", "nvvm.atom.inc.u32");
+legacy_target!(amdgcn, Arch::Amdgcn, "amdgcn", "hip", "amdgcn.s.waitcnt", "amdgcn.atomic.inc32");
+
+/// Build the legacy runtime for `arch`.
+pub fn build(arch: Arch) -> DeviceRuntime {
+    match arch {
+        Arch::Nvptx64 => nvptx::build(),
+        Arch::Amdgcn => amdgcn::build(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_target_mangling_differs() {
+        assert_eq!(nvptx::mangle("__kmpc_impl_x"), "__kmpc_impl_x$nvptx");
+        assert_eq!(amdgcn::mangle("__kmpc_impl_x"), "__kmpc_impl_x$amdgcn");
+    }
+
+    #[test]
+    fn nvptx_build_uses_cuda_intrinsics() {
+        let rt = nvptx::build();
+        let inc = &rt.ir_library.funcs["__kmpc_impl_atomic_inc$nvptx"];
+        assert!(inc.callees().contains("nvvm.atom.inc.u32"));
+        assert!(rt.producer.contains("cuda"));
+    }
+
+    #[test]
+    fn amdgcn_build_uses_hip_intrinsics() {
+        let rt = amdgcn::build();
+        let inc = &rt.ir_library.funcs["__kmpc_impl_atomic_inc$amdgcn"];
+        assert!(inc.callees().contains("amdgcn.atomic.inc32"));
+        assert!(rt.producer.contains("hip"));
+    }
+
+    #[test]
+    fn legacy_library_has_no_variant_mangling() {
+        let rt = build(Arch::Nvptx64);
+        for name in rt.ir_library.funcs.keys() {
+            assert!(!name.contains(".ompvariant."), "{name}");
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! The OpenMP **device runtime** — the paper's contribution.
+//!
+//! Two interchangeable builds of the same runtime API:
+//!
+//! * [`legacy`] — the *original* structure (paper §2.1): one
+//!   hand-specialized copy per target, generated from shared source via
+//!   macros (the `DEVICE`/`SHARED` trick of Listing 1), compiled "as CUDA"
+//!   for `nvptx64` and "as HIP" for `amdgcn`.
+//! * [`portable`] — the *new* structure (paper §3): a single common part
+//!   (written once), with the small target-dependent surface expressed as
+//!   `declare variant` functions resolved by the [`variant`] engine
+//!   (including the paper's `match_any` extension), and atomics
+//!   constructed from OpenMP 5.1 `atomic [compare] capture seq_cst`
+//!   statements ([`omp_atomic`], Listings 3–4).
+//!
+//! Each build yields a [`api::DeviceRuntime`]: a set of Rust *bindings*
+//! for the control-heavy entry points (`__kmpc_target_init`, worksharing,
+//! …) plus an **IR library** (the `dev.rtl.bc` analog) that the linker
+//! merges into application kernels so the optimizer can specialize it —
+//! the co-optimization flow of the paper's Fig. 1.
+
+pub mod api;
+pub mod bindings_impl;
+pub mod irlib;
+pub mod legacy;
+pub mod omp_atomic;
+pub mod portable;
+pub mod state;
+pub mod variant;
+
+pub use api::{DeviceRuntime, RuntimeKind};
+
+use crate::sim::Arch;
+
+/// Build a runtime of the given kind for an architecture.
+pub fn build(kind: RuntimeKind, arch: Arch) -> DeviceRuntime {
+    match kind {
+        RuntimeKind::Legacy => legacy::build(arch),
+        RuntimeKind::Portable => portable::build(arch),
+    }
+}

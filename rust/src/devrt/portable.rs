@@ -1,0 +1,175 @@
+//! The **portable** device runtime: the paper's new structure (§3).
+//!
+//! One common part (written once — [`super::bindings_impl`] and the
+//! common functions of [`super::irlib`]), with the target-dependent
+//! surface reduced to two `declare variant` sets:
+//!
+//! * `__kmpc_impl_threadfence` — Listing 2's `__kmpc_flush` path;
+//! * `__kmpc_impl_atomic_inc` — Listing 4, including the `match_any`
+//!   extension so one definition covers `arch(nvptx, nvptx64)`.
+//!
+//! All other atomics are *expressed in OpenMP 5.1* (`atomic [compare]
+//! capture seq_cst`, Listing 3) and lowered by [`super::omp_atomic`] to
+//! the same instructions the legacy build emits directly.
+
+use super::api::{DeviceRuntime, RuntimeKind};
+use super::bindings_impl as common;
+use super::irlib::{self, AtomicsFlavor, TargetParts};
+use super::variant::{Selector, Variant, VariantRegistry, VariantSet};
+use crate::ir::Type;
+use crate::sim::{Arch, Bindings};
+use std::sync::Arc;
+
+/// Producer string recorded in module metadata.
+pub fn producer(arch: Arch) -> String {
+    format!("devrt-portable 0.1 (openmp 5.1 build, {})", arch.name())
+}
+
+/// Install the common bindings (single source for every target — the
+/// point of the port).
+pub fn install_bindings(b: &mut Bindings) {
+    b.bind("__kmpc_target_init", Arc::new(common::target_init));
+    b.bind("__kmpc_target_deinit", Arc::new(common::target_deinit));
+    b.bind("__kmpc_parallel_begin", Arc::new(common::parallel_begin));
+    b.bind("__kmpc_parallel_end", Arc::new(common::parallel_end));
+    b.bind("__kmpc_barrier", Arc::new(common::barrier));
+    b.bind("__kmpc_barrier_simple_spmd", Arc::new(common::barrier));
+    b.bind("__kmpc_for_static_init_4", Arc::new(common::for_static_init));
+    b.bind("__kmpc_dispatch_init_4", Arc::new(common::dispatch_init));
+    b.bind("__kmpc_dispatch_next_4", Arc::new(common::dispatch_next));
+    b.bind("__kmpc_dispatch_fini_4", Arc::new(common::dispatch_fini));
+    b.bind("__kmpc_alloc_shared", Arc::new(common::alloc_shared));
+    b.bind("__kmpc_free_shared", Arc::new(common::free_shared));
+}
+
+/// The portable build's `declare variant` registry (paper Listing 4
+/// structure: a trapping base + per-vendor variants, Nvidia's using
+/// `match_any` over `arch(nvptx, nvptx64)`).
+pub fn variant_registry() -> VariantRegistry {
+    let mut reg = VariantRegistry::new();
+
+    reg.register(VariantSet {
+        base_name: "__kmpc_impl_threadfence".into(),
+        base: Box::new(|n| irlib::missing_impl_body(n, &[], None)),
+        variants: vec![
+            Variant {
+                selector: Selector::arch_any(&["nvptx", "nvptx64"]),
+                build: Box::new(|n| irlib::threadfence_body(n, "nvvm.membar.gl")),
+            },
+            Variant {
+                selector: Selector::arch("amdgcn"),
+                build: Box::new(|n| irlib::threadfence_body(n, "amdgcn.s.waitcnt")),
+            },
+        ],
+    });
+
+    reg.register(VariantSet {
+        base_name: "__kmpc_impl_atomic_inc".into(),
+        base: Box::new(|n| irlib::missing_impl_body(n, &[Type::I64, Type::I32], Some(Type::I32))),
+        variants: vec![
+            Variant {
+                selector: Selector::arch_any(&["nvptx", "nvptx64"]),
+                build: Box::new(|n| irlib::atomic_inc_body(n, "nvvm.atom.inc.u32")),
+            },
+            Variant {
+                selector: Selector::arch("amdgcn"),
+                build: Box::new(|n| irlib::atomic_inc_body(n, "amdgcn.atomic.inc32")),
+            },
+        ],
+    });
+
+    reg
+}
+
+/// Build the portable runtime for `arch`.
+pub fn build(arch: Arch) -> DeviceRuntime {
+    let mut bindings = Bindings::new();
+    install_bindings(&mut bindings);
+
+    // Resolve the variant sets for this target.
+    let reg = variant_registry();
+    let resolved = reg.resolve_all(arch);
+    let find = |base: &str| {
+        resolved
+            .iter()
+            .find(|(b, _, _)| b == base)
+            .unwrap_or_else(|| panic!("variant set {base} missing"))
+    };
+    let (_, tf_fn, tf_name) = find("__kmpc_impl_threadfence");
+    let (_, inc_fn, inc_name) = find("__kmpc_impl_atomic_inc");
+    let parts = TargetParts {
+        threadfence: tf_fn.clone(),
+        threadfence_name: tf_name.clone(),
+        atomic_inc: inc_fn.clone(),
+        atomic_inc_name: inc_name.clone(),
+    };
+
+    // Common code is unmangled — there is only one source for it.
+    let identity = |s: &str| s.to_string();
+    let ir_library =
+        irlib::build_library(arch, &producer(arch), &identity, parts, AtomicsFlavor::Omp51);
+
+    DeviceRuntime {
+        kind: RuntimeKind::Portable,
+        arch,
+        producer: producer(arch),
+        ir_library,
+        bindings,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_resolution_picks_vendor_impls() {
+        let rt = build(Arch::Nvptx64);
+        // The canonical inc wrapper must call a variant-mangled impl that
+        // carries the match_any context.
+        let wrapper = &rt.ir_library.funcs["__kmpc_atomic_inc"];
+        let callee = wrapper.callees().into_iter().next().unwrap();
+        assert!(callee.contains(".ompvariant."), "{callee}");
+        assert!(callee.contains("match_any"), "{callee}");
+        let impl_fn = &rt.ir_library.funcs[&callee];
+        assert!(impl_fn.callees().contains("nvvm.atom.inc.u32"));
+
+        let rt = build(Arch::Amdgcn);
+        let wrapper = &rt.ir_library.funcs["__kmpc_atomic_inc"];
+        let callee = wrapper.callees().into_iter().next().unwrap();
+        assert!(callee.contains("arch_amdgcn"), "{callee}");
+        let impl_fn = &rt.ir_library.funcs[&callee];
+        assert!(impl_fn.callees().contains("amdgcn.atomic.inc32"));
+    }
+
+    #[test]
+    fn common_symbols_are_unmangled() {
+        let rt = build(Arch::Amdgcn);
+        assert!(rt.ir_library.funcs.contains_key("__kmpc_impl_atomic_add"));
+        assert!(!rt.ir_library.funcs.keys().any(|k| k.contains('$')));
+    }
+
+    #[test]
+    fn portable_library_is_identical_across_archs_modulo_variants() {
+        // The portability claim: the common part is byte-identical for
+        // both targets; only variant-selected functions (and the target
+        // header line) differ.
+        let n = build(Arch::Nvptx64);
+        let a = build(Arch::Amdgcn);
+        let common_n: Vec<&String> =
+            n.ir_library.funcs.keys().filter(|k| !k.contains(".ompvariant.")).collect();
+        let common_a: Vec<&String> =
+            a.ir_library.funcs.keys().filter(|k| !k.contains(".ompvariant.")).collect();
+        assert_eq!(common_n, common_a);
+        for k in common_n {
+            // The atomic_inc/flush wrappers call variant-mangled names
+            // which embed the arch; all other common bodies must match.
+            if k == "__kmpc_atomic_inc" || k == "__kmpc_flush" {
+                continue;
+            }
+            let fa = crate::ir::printer::print_function(&n.ir_library.funcs[k]);
+            let fb = crate::ir::printer::print_function(&a.ir_library.funcs[k]);
+            assert_eq!(fa, fb, "common function {k} differs between targets");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Team-state layout in shared memory.
+//!
+//! The device runtime keeps its per-team state at the base of shared
+//! memory (the loader reserves [`crate::sim::loader::RT_STATE_BYTES`]),
+//! exactly like the real LLVM device runtime keeps its state machine in
+//! `__shared__` storage. Both runtime builds use the same layout — the
+//! layout is part of the (simulated) ABI, not of either implementation.
+
+/// Execution mode: all threads run the region (OpenMP `target teams
+/// distribute parallel for`-style kernels).
+pub const MODE_SPMD: u32 = 0;
+/// Generic mode: one main thread runs the sequential part; worker warps
+/// wait in the state machine (warp specialization, paper ref. [8]).
+pub const MODE_GENERIC: u32 = 1;
+
+/// Roles returned by `__kmpc_target_init` (per lane).
+pub mod role {
+    /// Proceed with the kernel body (SPMD thread, or the generic main).
+    pub const MAIN: u64 = 0;
+    /// Enter the worker state machine (`__kmpc_worker_loop`) and return.
+    pub const WORKER: u64 = 1;
+    /// Exit immediately (inactive lanes of the generic main warp).
+    pub const EXIT: u64 = 2;
+}
+
+// Field offsets (bytes, within the RT-state area at shared address 0).
+
+/// u32 — `MODE_SPMD` / `MODE_GENERIC`.
+pub const EXEC_MODE: u64 = 0;
+/// u32 — set by `__kmpc_target_deinit` to release workers.
+pub const TERMINATE: u64 = 4;
+/// u64 — outlined-function id **plus one** (0 = no region pending).
+pub const PARALLEL_FN: u64 = 8;
+/// u64 — the region's captured-environment pointer (global memory).
+pub const PARALLEL_ARG: u64 = 16;
+/// u32 — threads participating in the current parallel region.
+pub const NUM_THREADS: u64 = 24;
+/// u32 — nesting level (0 outside `parallel`).
+pub const PARALLEL_LEVEL: u64 = 28;
+/// u64 (atomic) — next unclaimed iteration for dynamic/guided dispatch.
+pub const DISPATCH_NEXT: u64 = 32;
+/// u64 — iteration upper bound (exclusive).
+pub const DISPATCH_END: u64 = 40;
+/// u64 — chunk size.
+pub const DISPATCH_CHUNK: u64 = 48;
+/// u32 — dispatch schedule (`SCHED_DYNAMIC` / `SCHED_GUIDED`).
+pub const DISPATCH_SCHED: u64 = 56;
+/// u32 — threads available for parallel regions in this team.
+pub const AVAIL_THREADS: u64 = 60;
+/// u64 (atomic) — `__kmpc_alloc_shared` bump pointer.
+pub const STACK_PTR: u64 = 64;
+/// u64 — arena base (for stack-discipline checks / reset).
+pub const STACK_BASE: u64 = 72;
+/// u64 — base of the per-thread reduction scratch (8 B × block threads).
+pub const REDUCE_BUF: u64 = 80;
+
+/// Schedules understood by `__kmpc_dispatch_init_4`.
+pub const SCHED_DYNAMIC: u32 = 1;
+/// Guided: chunks shrink as `remaining / (2·nthreads)`, floored at the
+/// requested chunk.
+pub const SCHED_GUIDED: u32 = 2;
+
+/// Schedules understood by `__kmpc_for_static_init_4`.
+pub const SCHED_STATIC: u32 = 0;
+/// Static with explicit chunk (thread strides by `nthreads·chunk`).
+pub const SCHED_STATIC_CHUNKED: u32 = 33;
+
+/// Pack a `[lb, ub)` i32 pair into the u64 a binding returns.
+pub fn pack_range(lb: u32, ub: u32) -> u64 {
+    ((ub as u64) << 32) | lb as u64
+}
+
+/// Unpack a `[lb, ub)` pair.
+pub fn unpack_range(v: u64) -> (u32, u32) {
+    (v as u32, (v >> 32) as u32)
+}
+
+/// The "no more work" sentinel from `__kmpc_dispatch_next_4`.
+pub const DISPATCH_DONE: u64 = u64::MAX;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_fit_in_reserved_state() {
+        assert!(REDUCE_BUF + 8 <= crate::sim::loader::RT_STATE_BYTES);
+    }
+
+    #[test]
+    fn offsets_are_naturally_aligned() {
+        for (off, sz) in [
+            (EXEC_MODE, 4u64),
+            (TERMINATE, 4),
+            (PARALLEL_FN, 8),
+            (PARALLEL_ARG, 8),
+            (NUM_THREADS, 4),
+            (PARALLEL_LEVEL, 4),
+            (DISPATCH_NEXT, 8),
+            (DISPATCH_END, 8),
+            (DISPATCH_CHUNK, 8),
+            (DISPATCH_SCHED, 4),
+            (AVAIL_THREADS, 4),
+            (STACK_PTR, 8),
+            (STACK_BASE, 8),
+            (REDUCE_BUF, 8),
+        ] {
+            assert_eq!(off % sz, 0, "offset {off} not {sz}-aligned");
+        }
+    }
+
+    #[test]
+    fn range_packing_roundtrips() {
+        let v = pack_range(17, 123456);
+        assert_eq!(unpack_range(v), (17, 123456));
+        assert_ne!(pack_range(0, 0), DISPATCH_DONE);
+    }
+}

@@ -1,0 +1,333 @@
+//! The `declare variant` dispatch engine (paper §3.2).
+//!
+//! OpenMP 5.0's `declare variant` names a *base* function and a set of
+//! specialized *variants*, each guarded by a context selector such as
+//! `match(device={arch(amdgcn)})`. At compile time the variant whose
+//! selector matches the compilation context (and scores highest) replaces
+//! the base.
+//!
+//! The paper extends the selector set with:
+//! * `extension(match_any)` — the variant matches when **any** listed
+//!   trait property matches (default requires **all**), used to cover
+//!   `arch(nvptx, nvptx64)` with a single definition (Listing 4);
+//! * `extension(match_none)` — the variant matches when **no** listed
+//!   property matches.
+//!
+//! We implement the subset the device runtime needs: the `device={arch}`
+//! selector with those two extensions, and OpenMP's scoring rule (more
+//! specific selectors win; the base is the fallback).
+
+use crate::ir::Function;
+use crate::sim::Arch;
+use std::collections::BTreeMap;
+
+/// Match-kind extensions from the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MatchKind {
+    /// OpenMP default: all listed properties must match the context.
+    #[default]
+    All,
+    /// Paper extension: any listed property matching suffices.
+    Any,
+    /// Paper extension: the variant matches only if nothing matches.
+    None,
+}
+
+/// A context selector: `match(device={arch(<archs>)}, implementation=
+/// {extension(match_any|match_none)})`.
+#[derive(Debug, Clone, Default)]
+pub struct Selector {
+    /// Architecture names listed in `device={arch(...)}`; empty = no
+    /// device selector (matches every context, score 0).
+    pub archs: Vec<String>,
+    /// Extension from `implementation={extension(...)}`.
+    pub kind: MatchKind,
+}
+
+impl Selector {
+    /// `match(device={arch(a)})`.
+    pub fn arch(a: &str) -> Self {
+        Selector { archs: vec![a.to_string()], kind: MatchKind::All }
+    }
+
+    /// `match(device={arch(list)}, implementation={extension(match_any)})`.
+    pub fn arch_any(list: &[&str]) -> Self {
+        Selector { archs: list.iter().map(|s| s.to_string()).collect(), kind: MatchKind::Any }
+    }
+
+    /// `match(device={arch(list)}, implementation={extension(match_none)})`.
+    pub fn arch_none(list: &[&str]) -> Self {
+        Selector { archs: list.iter().map(|s| s.to_string()).collect(), kind: MatchKind::None }
+    }
+
+    /// Does this selector match a compilation context for `arch`?
+    ///
+    /// Note the paper's aliasing: Nvidia contexts expose *both* `nvptx`
+    /// and `nvptx64` trait properties (32/64-bit pointer variants of the
+    /// same ISA family).
+    pub fn matches(&self, arch: Arch) -> bool {
+        if self.archs.is_empty() {
+            return self.kind != MatchKind::None;
+        }
+        let ctx = context_traits(arch);
+        let hits = self.archs.iter().filter(|a| ctx.contains(&a.as_str())).count();
+        match self.kind {
+            MatchKind::All => hits == self.archs.len(),
+            MatchKind::Any => hits > 0,
+            MatchKind::None => hits == 0,
+        }
+    }
+
+    /// OpenMP-style specificity score: number of matched properties
+    /// (a matching variant always beats the base; more properties win).
+    pub fn score(&self, arch: Arch) -> u32 {
+        if !self.matches(arch) {
+            return 0;
+        }
+        let ctx = context_traits(arch);
+        let hits = self.archs.iter().filter(|a| ctx.contains(&a.as_str())).count() as u32;
+        // A match with no device selector scores 1; match_none scores 1.
+        1 + hits
+    }
+
+    /// Render like the pragma, for mangling and diagnostics.
+    pub fn mangle(&self) -> String {
+        let ext = match self.kind {
+            MatchKind::All => "",
+            MatchKind::Any => ".match_any",
+            MatchKind::None => ".match_none",
+        };
+        if self.archs.is_empty() {
+            format!("default{ext}")
+        } else {
+            format!("arch_{}{}", self.archs.join("_"), ext)
+        }
+    }
+}
+
+/// The trait properties an architecture's compilation context exposes.
+pub fn context_traits(arch: Arch) -> Vec<&'static str> {
+    match arch {
+        Arch::Nvptx64 => vec!["nvptx", "nvptx64"],
+        Arch::Amdgcn => vec!["amdgcn"],
+    }
+}
+
+/// A variant definition: a selector plus a function generator. The
+/// generator receives the mangled symbol name it must define (variant
+/// functions get context-mangled names — the mangling §4.1's diff sees).
+pub struct Variant {
+    /// Guarding selector.
+    pub selector: Selector,
+    /// Builds the variant function under the given symbol name.
+    pub build: Box<dyn Fn(&str) -> Function + Send + Sync>,
+}
+
+/// A `declare variant` base function and its registered variants.
+pub struct VariantSet {
+    /// Base symbol name.
+    pub base_name: String,
+    /// Builds the base (fallback) function — for runtime entry points the
+    /// paper's fallback raises a compile/trap error (Listing 4).
+    pub base: Box<dyn Fn(&str) -> Function + Send + Sync>,
+    /// Registered variants.
+    pub variants: Vec<Variant>,
+}
+
+impl VariantSet {
+    /// Resolve for a target: pick the highest-scoring matching variant,
+    /// falling back to the base. Returns the materialized function (with
+    /// its mangled name) and the mangled name itself.
+    pub fn resolve(&self, arch: Arch) -> (Function, String) {
+        let mut best: Option<(&Variant, u32)> = None;
+        for v in &self.variants {
+            let s = v.selector.score(arch);
+            if s > 0 && best.map(|(_, bs)| s > bs).unwrap_or(true) {
+                best = Some((v, s));
+            }
+        }
+        match best {
+            Some((v, _)) => {
+                let mangled = format!("{}.ompvariant.{}", self.base_name, v.selector.mangle());
+                ((v.build)(&mangled), mangled)
+            }
+            None => {
+                let name = self.base_name.clone();
+                ((self.base)(&name), name)
+            }
+        }
+    }
+}
+
+/// Registry of all `declare variant` sets of a runtime build.
+#[derive(Default)]
+pub struct VariantRegistry {
+    sets: BTreeMap<String, VariantSet>,
+}
+
+impl VariantRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a set.
+    pub fn register(&mut self, set: VariantSet) {
+        self.sets.insert(set.base_name.clone(), set);
+    }
+
+    /// Resolve every base for `arch`. Returns, per base name, the
+    /// materialized function and a dispatch-wrapper name mapping
+    /// `base → mangled`.
+    pub fn resolve_all(&self, arch: Arch) -> Vec<(String, Function, String)> {
+        self.sets
+            .values()
+            .map(|s| {
+                let (f, mangled) = s.resolve(arch);
+                (s.base_name.clone(), f, mangled)
+            })
+            .collect()
+    }
+
+    /// Number of registered sets.
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FunctionBuilder, Operand, Type};
+
+    fn const_fn(name: &str, v: i32) -> Function {
+        let mut b = FunctionBuilder::new(name, &[], Some(Type::I32));
+        b.ret_val(Operand::i32(v));
+        b.build()
+    }
+
+    #[test]
+    fn plain_arch_selector_matches_only_that_arch() {
+        let s = Selector::arch("amdgcn");
+        assert!(s.matches(Arch::Amdgcn));
+        assert!(!s.matches(Arch::Nvptx64));
+    }
+
+    #[test]
+    fn default_all_requires_all_traits() {
+        // arch(nvptx, nvptx64) with default ALL semantics: both names are
+        // context traits on Nvidia, so it matches there…
+        let s = Selector { archs: vec!["nvptx".into(), "nvptx64".into()], kind: MatchKind::All };
+        assert!(s.matches(Arch::Nvptx64));
+        // …but mixing vendors can never match under ALL.
+        let s2 = Selector { archs: vec!["nvptx64".into(), "amdgcn".into()], kind: MatchKind::All };
+        assert!(!s2.matches(Arch::Nvptx64));
+        assert!(!s2.matches(Arch::Amdgcn));
+    }
+
+    #[test]
+    fn match_any_covers_either_arch_spelling() {
+        // The paper's Listing 4 use case.
+        let s = Selector::arch_any(&["nvptx", "nvptx64"]);
+        assert!(s.matches(Arch::Nvptx64));
+        assert!(!s.matches(Arch::Amdgcn));
+    }
+
+    #[test]
+    fn match_none_inverts() {
+        let s = Selector::arch_none(&["amdgcn"]);
+        assert!(s.matches(Arch::Nvptx64));
+        assert!(!s.matches(Arch::Amdgcn));
+    }
+
+    #[test]
+    fn resolution_prefers_matching_variant_over_base() {
+        let set = VariantSet {
+            base_name: "f".into(),
+            base: Box::new(|n| const_fn(n, 0)),
+            variants: vec![
+                Variant {
+                    selector: Selector::arch("amdgcn"),
+                    build: Box::new(|n| const_fn(n, 1)),
+                },
+                Variant {
+                    selector: Selector::arch_any(&["nvptx", "nvptx64"]),
+                    build: Box::new(|n| const_fn(n, 2)),
+                },
+            ],
+        };
+        let (f, mangled) = set.resolve(Arch::Amdgcn);
+        assert!(mangled.contains("ompvariant.arch_amdgcn"), "{mangled}");
+        assert_eq!(f.name, mangled);
+        let (_, m2) = set.resolve(Arch::Nvptx64);
+        assert!(m2.contains("match_any"), "{m2}");
+    }
+
+    #[test]
+    fn no_matching_variant_falls_back_to_base() {
+        let set = VariantSet {
+            base_name: "f".into(),
+            base: Box::new(|n| const_fn(n, 0)),
+            variants: vec![Variant {
+                selector: Selector::arch("amdgcn"),
+                build: Box::new(|n| const_fn(n, 1)),
+            }],
+        };
+        let (f, mangled) = set.resolve(Arch::Nvptx64);
+        assert_eq!(mangled, "f");
+        assert_eq!(f.name, "f");
+    }
+
+    #[test]
+    fn higher_specificity_wins() {
+        // arch(nvptx,nvptx64) ALL (score 3) beats arch(nvptx64) (score 2).
+        let set = VariantSet {
+            base_name: "f".into(),
+            base: Box::new(|n| const_fn(n, 0)),
+            variants: vec![
+                Variant {
+                    selector: Selector::arch("nvptx64"),
+                    build: Box::new(|n| const_fn(n, 1)),
+                },
+                Variant {
+                    selector: Selector {
+                        archs: vec!["nvptx".into(), "nvptx64".into()],
+                        kind: MatchKind::All,
+                    },
+                    build: Box::new(|n| const_fn(n, 2)),
+                },
+            ],
+        };
+        let (f, _) = set.resolve(Arch::Nvptx64);
+        // The 2-property variant must be selected.
+        let text = crate::ir::printer::print_function(&f);
+        assert!(text.contains("return 2"), "{text}");
+    }
+
+    #[test]
+    fn registry_resolves_all_sets() {
+        let mut reg = VariantRegistry::new();
+        reg.register(VariantSet {
+            base_name: "a".into(),
+            base: Box::new(|n| const_fn(n, 0)),
+            variants: vec![],
+        });
+        reg.register(VariantSet {
+            base_name: "b".into(),
+            base: Box::new(|n| const_fn(n, 0)),
+            variants: vec![Variant {
+                selector: Selector::arch("amdgcn"),
+                build: Box::new(|n| const_fn(n, 5)),
+            }],
+        });
+        let resolved = reg.resolve_all(Arch::Amdgcn);
+        assert_eq!(resolved.len(), 2);
+        let b = resolved.iter().find(|(base, _, _)| base == "b").unwrap();
+        assert!(b.2.contains("ompvariant"));
+    }
+}

@@ -1,0 +1,355 @@
+//! The host-side offloading runtime — the `__tgt_target` half of the
+//! paper's Fig. 1 compilation flow.
+//!
+//! * [`OffloadDevice`] — a simulated device plus the device runtime build
+//!   selected for it (legacy or portable) and its global memory.
+//! * [`DataEnv`] — the device data environment: `map(to/from/tofrom/
+//!   alloc)` semantics with presence checks and reference counts, like
+//!   `libomptarget`'s mapping table.
+//! * [`OffloadDevice::prepare`] — "device code compilation": link the
+//!   runtime's IR library into the application module, optimize, verify,
+//!   load (assign global addresses).
+//! * [`OffloadDevice::offload`] — `__tgt_target`: launch a kernel with
+//!   mapped arguments; on failure the caller can fall back to the host
+//!   version, as the OpenMP spec requires.
+
+use crate::devrt::{self, DeviceRuntime, RuntimeKind};
+use crate::ir::passes::{OptLevel, PassStats};
+use crate::ir::Module;
+use crate::sim::{
+    launch_kernel, Arch, Bindings, DeviceDesc, GlobalMemory, LaunchConfig, LaunchStats,
+    LoadedModule,
+};
+use crate::util::Error;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A device image ready to launch: the linked + optimized module, loaded
+/// (addresses assigned) into a device's global memory.
+pub struct KernelImage {
+    /// The loaded module.
+    pub module: LoadedModule,
+    /// Optimization statistics from the link step (E6 ablation data).
+    pub opt_stats: PassStats,
+}
+
+/// A simulated offload device with its runtime build.
+pub struct OffloadDevice {
+    /// Device description.
+    pub desc: DeviceDesc,
+    /// Device global memory.
+    pub gmem: Arc<GlobalMemory>,
+    /// The device runtime (legacy or portable build).
+    pub runtime: DeviceRuntime,
+    /// Extra bindings (PJRT payloads) merged at launch.
+    extra_bindings: Bindings,
+}
+
+impl OffloadDevice {
+    /// Create a device of `arch` with the given runtime build.
+    pub fn new(kind: RuntimeKind, arch: Arch) -> Self {
+        let desc = DeviceDesc::for_arch(arch);
+        let gmem = Arc::new(GlobalMemory::new(desc.global_mem));
+        OffloadDevice { desc, gmem, runtime: devrt::build(kind, arch), extra_bindings: Bindings::new() }
+    }
+
+    /// Install additional bindings (e.g. `payload.*` from
+    /// [`crate::runtime::install_payloads`]).
+    pub fn bindings_mut(&mut self) -> &mut Bindings {
+        &mut self.extra_bindings
+    }
+
+    /// Device-code compilation: link `dev.rtl.bc`, optimize, verify, load.
+    pub fn prepare(&self, mut app: Module, opt: OptLevel) -> Result<KernelImage, Error> {
+        let opt_stats = self.runtime.link_and_optimize(&mut app, opt)?;
+        let module = LoadedModule::load(app, &self.gmem)?;
+        Ok(KernelImage { module, opt_stats })
+    }
+
+    /// Merged bindings: runtime entry points + payloads.
+    fn merged_bindings(&self) -> Bindings {
+        let mut b = self.runtime.bindings.clone();
+        for name in self.extra_bindings.names() {
+            b.bind(name.to_string(), self.extra_bindings.get(name).unwrap().clone());
+        }
+        b
+    }
+
+    /// `__tgt_target`: launch `kernel` from `image`.
+    pub fn offload(
+        &self,
+        image: &KernelImage,
+        kernel: &str,
+        args: &[u64],
+        cfg: LaunchConfig,
+    ) -> Result<LaunchStats, Error> {
+        launch_kernel(
+            &self.desc,
+            &image.module,
+            kernel,
+            args,
+            &self.gmem,
+            &self.merged_bindings(),
+            cfg,
+        )
+    }
+
+    /// `__tgt_target` with host fallback: if device launch fails, run the
+    /// host version (the fallback kernel of Fig. 1) and report which path
+    /// executed.
+    pub fn offload_or_fallback(
+        &self,
+        image: &KernelImage,
+        kernel: &str,
+        args: &[u64],
+        cfg: LaunchConfig,
+        host_fallback: impl FnOnce(),
+    ) -> Result<ExecutedOn, Error> {
+        match self.offload(image, kernel, args, cfg) {
+            Ok(_) => Ok(ExecutedOn::Device),
+            Err(e) => {
+                log::warn!("offload of `{kernel}` failed ({e}); running host fallback");
+                host_fallback();
+                Ok(ExecutedOn::HostFallback)
+            }
+        }
+    }
+}
+
+/// Which path executed a target region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutedOn {
+    Device,
+    HostFallback,
+}
+
+/// OpenMP map types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapType {
+    /// Copy host → device at entry.
+    To,
+    /// Copy device → host at exit.
+    From,
+    /// Both.
+    Tofrom,
+    /// Allocate only.
+    Alloc,
+}
+
+struct MapEntry {
+    dev_addr: u64,
+    size: u64,
+    refcount: u32,
+    map_type: MapType,
+}
+
+/// The device data environment (`omp target data` analog) with presence
+/// checks and reference counting.
+pub struct DataEnv {
+    gmem: Arc<GlobalMemory>,
+    entries: HashMap<usize, MapEntry>,
+}
+
+impl DataEnv {
+    /// New environment on a device.
+    pub fn new(device: &OffloadDevice) -> Self {
+        DataEnv { gmem: device.gmem.clone(), entries: HashMap::new() }
+    }
+
+    fn key<T>(host: &[T]) -> usize {
+        host.as_ptr() as usize
+    }
+
+    /// Map a host buffer; returns its device address. If already present
+    /// the refcount is bumped and **no data is moved** (OpenMP presence
+    /// semantics).
+    pub fn map<T: Copy>(&mut self, host: &[T], map_type: MapType) -> Result<u64, Error> {
+        let key = Self::key(host);
+        let size = std::mem::size_of_val(host) as u64;
+        if let Some(e) = self.entries.get_mut(&key) {
+            if e.size != size {
+                return Err(Error::HostRt(format!(
+                    "remapping host buffer with different size ({} vs {})",
+                    e.size, size
+                )));
+            }
+            e.refcount += 1;
+            return Ok(e.dev_addr);
+        }
+        let dev_addr = self.gmem.alloc(size.max(1), 8)?;
+        if matches!(map_type, MapType::To | MapType::Tofrom) {
+            // SAFETY: `host` is a valid &[T] of POD data.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(host.as_ptr() as *const u8, size as usize)
+            };
+            self.gmem.write_bytes(dev_addr, bytes)?;
+        }
+        self.entries.insert(key, MapEntry { dev_addr, size, refcount: 1, map_type });
+        Ok(dev_addr)
+    }
+
+    /// Device address of a mapped buffer.
+    pub fn device_addr<T>(&self, host: &[T]) -> Option<u64> {
+        self.entries.get(&Self::key(host)).map(|e| e.dev_addr)
+    }
+
+    /// Copy device data back into the host buffer (`update from`).
+    pub fn update_from<T: Copy>(&self, host: &mut [T]) -> Result<(), Error> {
+        let e = self
+            .entries
+            .get(&Self::key(host))
+            .ok_or_else(|| Error::HostRt("update_from of unmapped buffer".into()))?;
+        // SAFETY: same POD view as `map`.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(host.as_mut_ptr() as *mut u8, e.size as usize)
+        };
+        self.gmem.read_bytes(e.dev_addr, bytes)
+    }
+
+    /// Unmap (decrement refcount); at zero, `From`/`Tofrom` buffers are
+    /// copied back.
+    pub fn unmap<T: Copy>(&mut self, host: &mut [T]) -> Result<(), Error> {
+        let key = Self::key(host);
+        let e = self
+            .entries
+            .get_mut(&key)
+            .ok_or_else(|| Error::HostRt("unmap of unmapped buffer".into()))?;
+        e.refcount -= 1;
+        if e.refcount == 0 {
+            let (dev_addr, size, map_type) = (e.dev_addr, e.size, e.map_type);
+            self.entries.remove(&key);
+            if matches!(map_type, MapType::From | MapType::Tofrom) {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts_mut(host.as_mut_ptr() as *mut u8, size as usize)
+                };
+                self.gmem.read_bytes(dev_addr, bytes)?;
+            }
+            // Note: the bump allocator does not reclaim; a real device
+            // would free here. Fine for benchmark lifetimes.
+        }
+        Ok(())
+    }
+
+    /// Number of live mappings.
+    pub fn live_mappings(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, FunctionBuilder, Type};
+
+    fn scale_module() -> Module {
+        // kernel scale(buf, n): buf[i] *= 2 for i in tid-strided range
+        let mut m = Module::new("scale");
+        let mut b = FunctionBuilder::new("scale", &[Type::I64, Type::I64], None).kernel();
+        let buf = b.param(0);
+        let n = b.param(1);
+        let tid = b.call("gpu.tid.x", &[], Type::I32);
+        let ntid = b.call("gpu.ntid.x", &[], Type::I32);
+        let ctaid = b.call("gpu.ctaid.x", &[], Type::I32);
+        let nctaid = b.call("gpu.nctaid.x", &[], Type::I32);
+        let base = b.mul(ctaid, ntid);
+        let gid = b.add(base, tid);
+        let total = b.mul(ntid, nctaid);
+        let tid64 = b.sext64(gid);
+        let stride = b.sext64(total);
+        let i = b.copy(tid64);
+        b.loop_(|b| {
+            let done = b.cmp(crate::ir::CmpPred::Ge, i, n);
+            b.if_(done, |b| b.break_());
+            let addr = b.index(buf, i, 4);
+            let v = b.load(Type::F32, AddrSpace::Global, addr);
+            let v2 = b.mul(v, crate::ir::Operand::f32(2.0));
+            b.store(Type::F32, AddrSpace::Global, addr, v2);
+            let nx = b.add(i, stride);
+            b.assign(i, nx);
+        });
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    #[test]
+    fn map_offload_unmap_roundtrip() {
+        for kind in RuntimeKind::all() {
+            let dev = OffloadDevice::new(kind, Arch::Nvptx64);
+            let image = dev.prepare(scale_module(), OptLevel::O2).unwrap();
+            let mut env = DataEnv::new(&dev);
+            let mut host: Vec<f32> = (0..100).map(|i| i as f32).collect();
+            let dptr = env.map(&host, MapType::Tofrom).unwrap();
+            dev.offload(&image, "scale", &[dptr, 100], LaunchConfig::new(2, 32)).unwrap();
+            env.unmap(&mut host).unwrap();
+            for (i, v) in host.iter().enumerate() {
+                assert_eq!(*v, (i * 2) as f32);
+            }
+            assert_eq!(env.live_mappings(), 0);
+        }
+    }
+
+    #[test]
+    fn presence_semantics_refcount() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let mut env = DataEnv::new(&dev);
+        let mut host: Vec<f32> = vec![1.0; 16];
+        let a = env.map(&host, MapType::To).unwrap();
+        // second map of the same buffer: same address, no copy
+        host[0] = 99.0; // would be visible only if re-copied
+        let b = env.map(&host, MapType::To).unwrap();
+        assert_eq!(a, b);
+        let mut probe = vec![0u8; 4];
+        dev.gmem.read_bytes(a, &mut probe).unwrap();
+        assert_eq!(f32::from_le_bytes(probe.try_into().unwrap()), 1.0, "no re-transfer");
+        env.unmap(&mut host).unwrap();
+        assert_eq!(env.live_mappings(), 1, "still mapped after first unmap");
+        env.unmap(&mut host).unwrap();
+        assert_eq!(env.live_mappings(), 0);
+    }
+
+    #[test]
+    fn alloc_map_does_not_transfer() {
+        let dev = OffloadDevice::new(RuntimeKind::Legacy, Arch::Amdgcn);
+        let mut env = DataEnv::new(&dev);
+        let host: Vec<f32> = vec![7.0; 8];
+        let addr = env.map(&host, MapType::Alloc).unwrap();
+        let mut probe = vec![0u8; 4];
+        dev.gmem.read_bytes(addr, &mut probe).unwrap();
+        assert_eq!(probe, [0, 0, 0, 0], "alloc must not copy");
+    }
+
+    #[test]
+    fn update_from_mid_region() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let mut env = DataEnv::new(&dev);
+        let mut host: Vec<u32> = vec![0; 4];
+        let addr = env.map(&host, MapType::To).unwrap();
+        dev.gmem.write_bytes(addr, &42u32.to_le_bytes()).unwrap();
+        env.update_from(&mut host).unwrap();
+        assert_eq!(host[0], 42);
+    }
+
+    #[test]
+    fn unmap_of_unmapped_errors() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let mut env = DataEnv::new(&dev);
+        let mut host = [0f32; 2];
+        assert!(env.unmap(&mut host[..].as_mut()).is_err());
+    }
+
+    #[test]
+    fn host_fallback_runs_on_launch_failure() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let image = dev.prepare(scale_module(), OptLevel::O2).unwrap();
+        let mut ran_fallback = false;
+        // nonexistent kernel name → fallback
+        let on = dev
+            .offload_or_fallback(&image, "nope", &[0, 0], LaunchConfig::new(1, 32), || {
+                ran_fallback = true;
+            })
+            .unwrap();
+        assert_eq!(on, ExecutedOn::HostFallback);
+        assert!(ran_fallback);
+    }
+}

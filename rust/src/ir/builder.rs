@@ -1,0 +1,436 @@
+//! Ergonomic construction of IR functions.
+//!
+//! The device runtime library and every benchmark kernel are written
+//! against this builder; it plays the role of Clang's codegen in the
+//! paper's pipeline (OpenMP / CUDA source → bitcode).
+
+use super::inst::{BinOp, CastOp, CmpPred, Inst, Stmt, UnOp};
+use super::module::{Function, InlineHint, Linkage};
+use super::types::{AddrSpace, Operand, Reg, Type};
+
+/// Builder for a single [`Function`].
+pub struct FunctionBuilder {
+    name: String,
+    num_params: u32,
+    regs: Vec<Type>,
+    ret: Option<Type>,
+    is_kernel: bool,
+    inline: InlineHint,
+    linkage: Linkage,
+    /// Stack of statement frames; `frames[0]` is the function body, deeper
+    /// entries are open `if`/`loop` regions.
+    frames: Vec<Vec<Stmt>>,
+}
+
+impl FunctionBuilder {
+    /// Start a function with the given parameter types.
+    pub fn new(name: impl Into<String>, params: &[Type], ret: Option<Type>) -> Self {
+        FunctionBuilder {
+            name: name.into(),
+            num_params: params.len() as u32,
+            regs: params.to_vec(),
+            ret,
+            is_kernel: false,
+            inline: InlineHint::Default,
+            linkage: Linkage::External,
+            frames: vec![vec![]],
+        }
+    }
+
+    /// Mark as a kernel entry point.
+    pub fn kernel(mut self) -> Self {
+        self.is_kernel = true;
+        self
+    }
+
+    /// Set the inline hint.
+    pub fn inline_hint(mut self, h: InlineHint) -> Self {
+        self.inline = h;
+        self
+    }
+
+    /// Set linkage.
+    pub fn linkage(mut self, l: Linkage) -> Self {
+        self.linkage = l;
+        self
+    }
+
+    /// The i-th parameter register.
+    pub fn param(&self, i: u32) -> Reg {
+        assert!(i < self.num_params, "param {i} out of range");
+        Reg(i)
+    }
+
+    /// Allocate a fresh register of type `ty`.
+    pub fn new_reg(&mut self, ty: Type) -> Reg {
+        let r = Reg(self.regs.len() as u32);
+        self.regs.push(ty);
+        r
+    }
+
+    /// Type of a register.
+    pub fn reg_ty(&self, r: Reg) -> Type {
+        self.regs[r.0 as usize]
+    }
+
+    fn ty_of(&self, o: Operand) -> Type {
+        match o {
+            Operand::Reg(r) => self.reg_ty(r),
+            Operand::Const(c) => c.ty(),
+        }
+    }
+
+    /// Push a raw statement.
+    pub fn push(&mut self, s: Stmt) {
+        self.frames.last_mut().expect("open frame").push(s);
+    }
+
+    /// Push an instruction.
+    pub fn inst(&mut self, i: Inst) {
+        self.push(Stmt::Inst(i));
+    }
+
+    // ---- arithmetic helpers -------------------------------------------
+
+    /// `dst = op a, b` with the result type of `a`.
+    pub fn bin(&mut self, op: BinOp, a: impl Into<Operand>, b: impl Into<Operand>) -> Reg {
+        let a = a.into();
+        let b = b.into();
+        let dst = self.new_reg(self.ty_of(a));
+        self.inst(Inst::Bin { op, dst, a, b });
+        dst
+    }
+
+    /// Integer/float add.
+    pub fn add(&mut self, a: impl Into<Operand>, b: impl Into<Operand>) -> Reg {
+        self.bin(BinOp::Add, a, b)
+    }
+    /// Subtract.
+    pub fn sub(&mut self, a: impl Into<Operand>, b: impl Into<Operand>) -> Reg {
+        self.bin(BinOp::Sub, a, b)
+    }
+    /// Multiply.
+    pub fn mul(&mut self, a: impl Into<Operand>, b: impl Into<Operand>) -> Reg {
+        self.bin(BinOp::Mul, a, b)
+    }
+    /// Signed divide.
+    pub fn sdiv(&mut self, a: impl Into<Operand>, b: impl Into<Operand>) -> Reg {
+        self.bin(BinOp::SDiv, a, b)
+    }
+    /// Unsigned divide.
+    pub fn udiv(&mut self, a: impl Into<Operand>, b: impl Into<Operand>) -> Reg {
+        self.bin(BinOp::UDiv, a, b)
+    }
+    /// Signed remainder.
+    pub fn srem(&mut self, a: impl Into<Operand>, b: impl Into<Operand>) -> Reg {
+        self.bin(BinOp::SRem, a, b)
+    }
+    /// Float divide.
+    pub fn fdiv(&mut self, a: impl Into<Operand>, b: impl Into<Operand>) -> Reg {
+        self.bin(BinOp::FDiv, a, b)
+    }
+
+    /// `dst = op a`.
+    pub fn un(&mut self, op: UnOp, a: impl Into<Operand>) -> Reg {
+        let a = a.into();
+        let dst = self.new_reg(self.ty_of(a));
+        self.inst(Inst::Un { op, dst, a });
+        dst
+    }
+
+    /// Comparison producing an i1.
+    pub fn cmp(&mut self, pred: CmpPred, a: impl Into<Operand>, b: impl Into<Operand>) -> Reg {
+        let a = a.into();
+        let b = b.into();
+        let dst = self.new_reg(Type::I1);
+        self.inst(Inst::Cmp { pred, dst, a, b });
+        dst
+    }
+
+    /// `dst = select cond, a, b`.
+    pub fn select(
+        &mut self,
+        cond: impl Into<Operand>,
+        a: impl Into<Operand>,
+        b: impl Into<Operand>,
+    ) -> Reg {
+        let cond = cond.into();
+        let a = a.into();
+        let b = b.into();
+        let dst = self.new_reg(self.ty_of(a));
+        self.inst(Inst::Select { dst, cond, a, b });
+        dst
+    }
+
+    /// Conversion into `to`.
+    pub fn cast(&mut self, op: CastOp, src: impl Into<Operand>, to: Type) -> Reg {
+        let src = src.into();
+        let dst = self.new_reg(to);
+        self.inst(Inst::Cast { op, dst, src });
+        dst
+    }
+
+    /// i32 → i64 sign extension (the most common cast in kernels).
+    pub fn sext64(&mut self, src: impl Into<Operand>) -> Reg {
+        self.cast(CastOp::SExt, src, Type::I64)
+    }
+
+    /// Copy into a fresh register.
+    pub fn copy(&mut self, src: impl Into<Operand>) -> Reg {
+        let src = src.into();
+        let dst = self.new_reg(self.ty_of(src));
+        self.inst(Inst::Copy { dst, src });
+        dst
+    }
+
+    /// Copy into an existing register (mutable-variable style).
+    pub fn assign(&mut self, dst: Reg, src: impl Into<Operand>) {
+        self.inst(Inst::Copy { dst, src: src.into() });
+    }
+
+    // ---- memory -------------------------------------------------------
+
+    /// Typed load.
+    pub fn load(&mut self, ty: Type, space: AddrSpace, addr: impl Into<Operand>) -> Reg {
+        let addr = addr.into();
+        let dst = self.new_reg(ty);
+        self.inst(Inst::Load { dst, ty, space, addr });
+        dst
+    }
+
+    /// Typed store.
+    pub fn store(
+        &mut self,
+        ty: Type,
+        space: AddrSpace,
+        addr: impl Into<Operand>,
+        val: impl Into<Operand>,
+    ) {
+        self.inst(Inst::Store { ty, space, addr: addr.into(), val: val.into() });
+    }
+
+    /// Address of a module global.
+    pub fn global_addr(&mut self, name: impl Into<String>) -> Reg {
+        let dst = self.new_reg(Type::I64);
+        self.inst(Inst::GlobalAddr { dst, name: name.into() });
+        dst
+    }
+
+    /// `base + index * scale` in i64 — the array-indexing idiom.
+    pub fn index(
+        &mut self,
+        base: impl Into<Operand>,
+        idx: impl Into<Operand>,
+        scale: u64,
+    ) -> Reg {
+        let idx = idx.into();
+        let idx64 = if self.ty_of(idx) == Type::I64 {
+            idx
+        } else {
+            Operand::Reg(self.sext64(idx))
+        };
+        let scaled = self.bin(BinOp::Mul, idx64, Operand::i64(scale as i64));
+        self.bin(BinOp::Add, base.into(), scaled)
+    }
+
+    // ---- calls --------------------------------------------------------
+
+    /// Call with a result.
+    pub fn call(&mut self, callee: impl Into<String>, args: &[Operand], ret: Type) -> Reg {
+        let dst = self.new_reg(ret);
+        self.inst(Inst::Call { dst: Some(dst), callee: callee.into(), args: args.to_vec() });
+        dst
+    }
+
+    /// Call without a result.
+    pub fn call_void(&mut self, callee: impl Into<String>, args: &[Operand]) {
+        self.inst(Inst::Call { dst: None, callee: callee.into(), args: args.to_vec() });
+    }
+
+    /// Device trap.
+    pub fn trap(&mut self, msg: impl Into<String>) {
+        self.inst(Inst::Trap { msg: msg.into() });
+    }
+
+    // ---- structured control -------------------------------------------
+
+    /// `if cond { then } else { else_ }`.
+    pub fn if_else(
+        &mut self,
+        cond: impl Into<Operand>,
+        then_: impl FnOnce(&mut Self),
+        else_: impl FnOnce(&mut Self),
+    ) {
+        let cond = cond.into();
+        self.frames.push(vec![]);
+        then_(self);
+        let t = self.frames.pop().unwrap();
+        self.frames.push(vec![]);
+        else_(self);
+        let e = self.frames.pop().unwrap();
+        self.push(Stmt::If { cond, then_: t, else_: e });
+    }
+
+    /// `if cond { then }`.
+    pub fn if_(&mut self, cond: impl Into<Operand>, then_: impl FnOnce(&mut Self)) {
+        self.if_else(cond, then_, |_| {});
+    }
+
+    /// `loop { body }` — exit with [`Self::break_`].
+    pub fn loop_(&mut self, body: impl FnOnce(&mut Self)) {
+        self.frames.push(vec![]);
+        body(self);
+        let b = self.frames.pop().unwrap();
+        self.push(Stmt::Loop { body: b });
+    }
+
+    /// Break out of the innermost loop.
+    pub fn break_(&mut self) {
+        self.push(Stmt::Break);
+    }
+
+    /// Continue the innermost loop.
+    pub fn continue_(&mut self) {
+        self.push(Stmt::Continue);
+    }
+
+    /// `while cond(b) { body }` — the condition closure re-evaluates every
+    /// iteration (lowered to `loop { c = cond; if !c break; body }`).
+    pub fn while_(
+        &mut self,
+        cond: impl Fn(&mut Self) -> Operand,
+        body: impl FnOnce(&mut Self),
+    ) {
+        self.loop_(|b| {
+            let c = cond(b);
+            let not_c = b.cmp(CmpPred::Eq, c, Operand::bool(false));
+            b.if_(not_c, |b| b.break_());
+            body(b);
+        });
+    }
+
+    /// Counted i32 loop `for (iv = start; iv < end; iv += step)`.
+    /// `start`/`end`/`step` may be registers or constants; `step` must be
+    /// positive.
+    pub fn for_range(
+        &mut self,
+        start: impl Into<Operand>,
+        end: impl Into<Operand>,
+        step: impl Into<Operand>,
+        body: impl FnOnce(&mut Self, Reg),
+    ) {
+        let start = start.into();
+        let end = end.into();
+        let step = step.into();
+        let iv = self.copy(start);
+        self.loop_(|b| {
+            let in_range = b.cmp(CmpPred::Lt, iv, end);
+            let done = b.cmp(CmpPred::Eq, in_range, Operand::bool(false));
+            b.if_(done, |b| b.break_());
+            body(b, iv);
+            let next = b.add(iv, step);
+            b.assign(iv, next);
+        });
+    }
+
+    /// Return void.
+    pub fn ret(&mut self) {
+        self.push(Stmt::Return(None));
+    }
+
+    /// Return a value.
+    pub fn ret_val(&mut self, v: impl Into<Operand>) {
+        self.push(Stmt::Return(Some(v.into())));
+    }
+
+    /// Finish the function. Appends a trailing `return` for void functions
+    /// that did not end with one.
+    pub fn build(mut self) -> Function {
+        assert_eq!(self.frames.len(), 1, "unclosed control region in `{}`", self.name);
+        let mut body = self.frames.pop().unwrap();
+        if self.ret.is_none() && !matches!(body.last(), Some(Stmt::Return(_))) {
+            body.push(Stmt::Return(None));
+        }
+        Function {
+            name: self.name,
+            num_params: self.num_params,
+            regs: self.regs,
+            ret: self.ret,
+            body,
+            is_kernel: self.is_kernel,
+            inline: self.inline,
+            linkage: self.linkage,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_are_leading_regs() {
+        let b = FunctionBuilder::new("f", &[Type::I32, Type::I64], Some(Type::I32));
+        assert_eq!(b.param(0), Reg(0));
+        assert_eq!(b.param(1), Reg(1));
+        assert_eq!(b.reg_ty(Reg(1)), Type::I64);
+    }
+
+    #[test]
+    fn build_appends_void_return() {
+        let mut b = FunctionBuilder::new("f", &[], None);
+        b.copy(Operand::i32(1));
+        let f = b.build();
+        assert!(matches!(f.body.last(), Some(Stmt::Return(None))));
+    }
+
+    #[test]
+    fn if_else_nests_frames() {
+        let mut b = FunctionBuilder::new("f", &[Type::I1], None);
+        let p = b.param(0);
+        b.if_else(
+            p,
+            |b| {
+                b.copy(Operand::i32(1));
+            },
+            |b| {
+                b.copy(Operand::i32(2));
+            },
+        );
+        let f = b.build();
+        match &f.body[0] {
+            Stmt::If { then_, else_, .. } => {
+                assert_eq!(then_.len(), 1);
+                assert_eq!(else_.len(), 1);
+            }
+            other => panic!("expected If, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn for_range_produces_loop_with_break() {
+        let mut b = FunctionBuilder::new("f", &[], None);
+        b.for_range(Operand::i32(0), Operand::i32(10), Operand::i32(1), |b, iv| {
+            b.add(iv, Operand::i32(0));
+        });
+        let f = b.build();
+        let has_loop = f.body.iter().any(|s| matches!(s, Stmt::Loop { .. }));
+        assert!(has_loop, "{:?}", f.body);
+    }
+
+    #[test]
+    #[should_panic(expected = "param 2 out of range")]
+    fn param_out_of_range_panics() {
+        let b = FunctionBuilder::new("f", &[Type::I32], None);
+        let _ = b.param(2);
+    }
+
+    #[test]
+    fn index_scales_and_extends() {
+        let mut b = FunctionBuilder::new("f", &[Type::I64, Type::I32], None);
+        let base = b.param(0);
+        let i = b.param(1);
+        let addr = b.index(base, i, 4);
+        assert_eq!(b.reg_ty(addr), Type::I64);
+    }
+}

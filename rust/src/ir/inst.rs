@@ -1,0 +1,510 @@
+//! Instructions and structured statements of the device IR.
+
+use super::types::{AddrSpace, Operand, Reg, Type};
+use std::fmt;
+
+/// Binary operations. Integer semantics are wrapping; division by zero is
+/// a device trap. Signed/unsigned variants are explicit (the register file
+/// stores raw bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    SDiv,
+    UDiv,
+    SRem,
+    URem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    LShr,
+    AShr,
+    SMin,
+    SMax,
+    UMin,
+    UMax,
+    /// Float-only.
+    FDiv,
+    FMin,
+    FMax,
+}
+
+impl BinOp {
+    /// Mnemonic used by the printer.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            BinOp::Add => "add",
+            BinOp::Sub => "sub",
+            BinOp::Mul => "mul",
+            BinOp::SDiv => "sdiv",
+            BinOp::UDiv => "udiv",
+            BinOp::SRem => "srem",
+            BinOp::URem => "urem",
+            BinOp::And => "and",
+            BinOp::Or => "or",
+            BinOp::Xor => "xor",
+            BinOp::Shl => "shl",
+            BinOp::LShr => "lshr",
+            BinOp::AShr => "ashr",
+            BinOp::SMin => "smin",
+            BinOp::SMax => "smax",
+            BinOp::UMin => "umin",
+            BinOp::UMax => "umax",
+            BinOp::FDiv => "fdiv",
+            BinOp::FMin => "fmin",
+            BinOp::FMax => "fmax",
+        }
+    }
+}
+
+/// Unary operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    /// Integer two's-complement negate / float negate (by dst type).
+    Neg,
+    /// Bitwise not (ints).
+    Not,
+    /// |x| (floats).
+    FAbs,
+    FSqrt,
+    FExp,
+    FLog,
+    FSin,
+    FCos,
+    FFloor,
+    /// 1/x (floats) — distinct op so the interpreter can model the GPU
+    /// fast-reciprocal path.
+    FRcp,
+}
+
+impl UnOp {
+    /// Mnemonic used by the printer.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            UnOp::Neg => "neg",
+            UnOp::Not => "not",
+            UnOp::FAbs => "fabs",
+            UnOp::FSqrt => "fsqrt",
+            UnOp::FExp => "fexp",
+            UnOp::FLog => "flog",
+            UnOp::FSin => "fsin",
+            UnOp::FCos => "fcos",
+            UnOp::FFloor => "ffloor",
+            UnOp::FRcp => "frcp",
+        }
+    }
+}
+
+/// Comparison predicates. `U*` are unsigned integer orders; `Lt`..`Ge` are
+/// signed for ints and ordered for floats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpPred {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    ULt,
+    ULe,
+    UGt,
+    UGe,
+}
+
+impl CmpPred {
+    /// Mnemonic used by the printer.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            CmpPred::Eq => "eq",
+            CmpPred::Ne => "ne",
+            CmpPred::Lt => "lt",
+            CmpPred::Le => "le",
+            CmpPred::Gt => "gt",
+            CmpPred::Ge => "ge",
+            CmpPred::ULt => "ult",
+            CmpPred::ULe => "ule",
+            CmpPred::UGt => "ugt",
+            CmpPred::UGe => "uge",
+        }
+    }
+}
+
+/// Conversions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CastOp {
+    SExt,
+    ZExt,
+    Trunc,
+    SIToFP,
+    FPToSI,
+    FPExt,
+    FPTrunc,
+    /// Same-width reinterpret.
+    Bitcast,
+}
+
+impl CastOp {
+    /// Mnemonic used by the printer.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            CastOp::SExt => "sext",
+            CastOp::ZExt => "zext",
+            CastOp::Trunc => "trunc",
+            CastOp::SIToFP => "sitofp",
+            CastOp::FPToSI => "fptosi",
+            CastOp::FPExt => "fpext",
+            CastOp::FPTrunc => "fptrunc",
+            CastOp::Bitcast => "bitcast",
+        }
+    }
+}
+
+/// A non-control instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inst {
+    /// `dst = op a, b`
+    Bin { op: BinOp, dst: Reg, a: Operand, b: Operand },
+    /// `dst = op a`
+    Un { op: UnOp, dst: Reg, a: Operand },
+    /// `dst = cmp.pred a, b` (dst is i1)
+    Cmp { pred: CmpPred, dst: Reg, a: Operand, b: Operand },
+    /// `dst = select cond, a, b`
+    Select { dst: Reg, cond: Operand, a: Operand, b: Operand },
+    /// `dst = cast.op src` (dst type is the target type)
+    Cast { op: CastOp, dst: Reg, src: Operand },
+    /// `dst = src` — used by the inliner for argument binding.
+    Copy { dst: Reg, src: Operand },
+    /// `dst = load.<ty> space[addr]`
+    Load { dst: Reg, ty: Type, space: AddrSpace, addr: Operand },
+    /// `store.<ty> space[addr], val`
+    Store { ty: Type, space: AddrSpace, addr: Operand, val: Operand },
+    /// `dst = &@global` — address of a module global in its space.
+    GlobalAddr { dst: Reg, name: String },
+    /// `dst = call @callee(args...)`
+    ///
+    /// Resolution at execution time: module function → device-runtime
+    /// binding → target intrinsic → trap. Intrinsics are calls with
+    /// reserved names (`gpu.*`, `nvvm.*`, `amdgcn.*`, `payload.*`).
+    Call { dst: Option<Reg>, callee: String, args: Vec<Operand> },
+    /// `dst = call_indirect fn_id(args...)` — indirect call through a
+    /// function id produced by the `gpu.funcref.<name>` pseudo-intrinsic.
+    /// This is how outlined parallel regions are dispatched by the
+    /// generic-mode state machine (warp specialization, paper ref. [8]).
+    /// `fn_id` must be warp-uniform at execution time.
+    CallIndirect { dst: Option<Reg>, fn_id: Operand, args: Vec<Operand> },
+    /// Device-side trap with a message (the fallback `declare variant`
+    /// body of the paper's Listing 4 compiles to this).
+    Trap { msg: String },
+}
+
+impl Inst {
+    /// Destination register, if any.
+    pub fn dst(&self) -> Option<Reg> {
+        match self {
+            Inst::Bin { dst, .. }
+            | Inst::Un { dst, .. }
+            | Inst::Cmp { dst, .. }
+            | Inst::Select { dst, .. }
+            | Inst::Cast { dst, .. }
+            | Inst::Copy { dst, .. }
+            | Inst::Load { dst, .. }
+            | Inst::GlobalAddr { dst, .. } => Some(*dst),
+            Inst::Call { dst, .. } | Inst::CallIndirect { dst, .. } => *dst,
+            Inst::Store { .. } | Inst::Trap { .. } => None,
+        }
+    }
+
+    /// True if removing the instruction (when its result is unused) would
+    /// change program behaviour.
+    pub fn has_side_effect(&self) -> bool {
+        matches!(
+            self,
+            Inst::Store { .. } | Inst::Call { .. } | Inst::CallIndirect { .. } | Inst::Trap { .. }
+        )
+    }
+
+    /// Operands read by this instruction.
+    pub fn operands(&self) -> Vec<Operand> {
+        match self {
+            Inst::Bin { a, b, .. } | Inst::Cmp { a, b, .. } => vec![*a, *b],
+            Inst::Un { a, .. } => vec![*a],
+            Inst::Select { cond, a, b, .. } => vec![*cond, *a, *b],
+            Inst::Cast { src, .. } | Inst::Copy { src, .. } => vec![*src],
+            Inst::Load { addr, .. } => vec![*addr],
+            Inst::Store { addr, val, .. } => vec![*addr, *val],
+            Inst::GlobalAddr { .. } | Inst::Trap { .. } => vec![],
+            Inst::Call { args, .. } => args.clone(),
+            Inst::CallIndirect { fn_id, args, .. } => {
+                let mut v = vec![*fn_id];
+                v.extend_from_slice(args);
+                v
+            }
+        }
+    }
+
+    /// Apply `f` to every operand in place.
+    pub fn map_operands(&mut self, mut f: impl FnMut(&mut Operand)) {
+        match self {
+            Inst::Bin { a, b, .. } | Inst::Cmp { a, b, .. } => {
+                f(a);
+                f(b);
+            }
+            Inst::Un { a, .. } => f(a),
+            Inst::Select { cond, a, b, .. } => {
+                f(cond);
+                f(a);
+                f(b);
+            }
+            Inst::Cast { src, .. } | Inst::Copy { src, .. } => f(src),
+            Inst::Load { addr, .. } => f(addr),
+            Inst::Store { addr, val, .. } => {
+                f(addr);
+                f(val);
+            }
+            Inst::GlobalAddr { .. } | Inst::Trap { .. } => {}
+            Inst::Call { args, .. } => {
+                for a in args {
+                    f(a);
+                }
+            }
+            Inst::CallIndirect { fn_id, args, .. } => {
+                f(fn_id);
+                for a in args {
+                    f(a);
+                }
+            }
+        }
+    }
+
+    /// Rewrite the destination register through `f`.
+    pub fn map_dst(&mut self, f: impl Fn(Reg) -> Reg) {
+        match self {
+            Inst::Bin { dst, .. }
+            | Inst::Un { dst, .. }
+            | Inst::Cmp { dst, .. }
+            | Inst::Select { dst, .. }
+            | Inst::Cast { dst, .. }
+            | Inst::Copy { dst, .. }
+            | Inst::Load { dst, .. }
+            | Inst::GlobalAddr { dst, .. } => *dst = f(*dst),
+            Inst::Call { dst, .. } | Inst::CallIndirect { dst, .. } => {
+                if let Some(d) = dst {
+                    *d = f(*d);
+                }
+            }
+            Inst::Store { .. } | Inst::Trap { .. } => {}
+        }
+    }
+}
+
+/// A structured statement. Function bodies are trees of these; the SIMT
+/// interpreter executes them lockstep per warp with divergence masks.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    Inst(Inst),
+    /// Two-armed conditional; lanes partition by `cond`.
+    If { cond: Operand, then_: Vec<Stmt>, else_: Vec<Stmt> },
+    /// Infinite loop; exits via `Break` (or `Return`).
+    Loop { body: Vec<Stmt> },
+    /// Exit the innermost enclosing loop.
+    Break,
+    /// Jump to the next iteration of the innermost enclosing loop.
+    Continue,
+    /// Return from the function.
+    Return(Option<Operand>),
+}
+
+impl Stmt {
+    /// Visit every instruction in the subtree.
+    pub fn visit_insts<'a>(&'a self, f: &mut impl FnMut(&'a Inst)) {
+        match self {
+            Stmt::Inst(i) => f(i),
+            Stmt::If { then_, else_, .. } => {
+                for s in then_ {
+                    s.visit_insts(f);
+                }
+                for s in else_ {
+                    s.visit_insts(f);
+                }
+            }
+            Stmt::Loop { body } => {
+                for s in body {
+                    s.visit_insts(f);
+                }
+            }
+            Stmt::Break | Stmt::Continue | Stmt::Return(_) => {}
+        }
+    }
+
+    /// Visit every instruction mutably.
+    pub fn visit_insts_mut(&mut self, f: &mut impl FnMut(&mut Inst)) {
+        match self {
+            Stmt::Inst(i) => f(i),
+            Stmt::If { then_, else_, .. } => {
+                for s in then_ {
+                    s.visit_insts_mut(f);
+                }
+                for s in else_ {
+                    s.visit_insts_mut(f);
+                }
+            }
+            Stmt::Loop { body } => {
+                for s in body {
+                    s.visit_insts_mut(f);
+                }
+            }
+            Stmt::Break | Stmt::Continue | Stmt::Return(_) => {}
+        }
+    }
+
+    /// Operands read directly by this statement's head (not the subtree).
+    pub fn head_operands(&self) -> Vec<Operand> {
+        match self {
+            Stmt::Inst(i) => i.operands(),
+            Stmt::If { cond, .. } => vec![*cond],
+            Stmt::Return(Some(v)) => vec![*v],
+            _ => vec![],
+        }
+    }
+}
+
+impl fmt::Display for Inst {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Inst::Bin { op, dst, a, b } => write!(f, "{dst} = {} {a}, {b}", op.mnemonic()),
+            Inst::Un { op, dst, a } => write!(f, "{dst} = {} {a}", op.mnemonic()),
+            Inst::Cmp { pred, dst, a, b } => {
+                write!(f, "{dst} = cmp.{} {a}, {b}", pred.mnemonic())
+            }
+            Inst::Select { dst, cond, a, b } => write!(f, "{dst} = select {cond}, {a}, {b}"),
+            Inst::Cast { op, dst, src } => write!(f, "{dst} = {} {src}", op.mnemonic()),
+            Inst::Copy { dst, src } => write!(f, "{dst} = copy {src}"),
+            Inst::Load { dst, ty, space, addr } => {
+                write!(f, "{dst} = load.{ty} {space}[{addr}]")
+            }
+            Inst::Store { ty, space, addr, val } => {
+                write!(f, "store.{ty} {space}[{addr}], {val}")
+            }
+            Inst::GlobalAddr { dst, name } => write!(f, "{dst} = addr_of @{name}"),
+            Inst::Call { dst, callee, args } => {
+                if let Some(d) = dst {
+                    write!(f, "{d} = call @{callee}(")?;
+                } else {
+                    write!(f, "call @{callee}(")?;
+                }
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{a}")?;
+                }
+                write!(f, ")")
+            }
+            Inst::CallIndirect { dst, fn_id, args } => {
+                if let Some(d) = dst {
+                    write!(f, "{d} = call_indirect {fn_id}(")?;
+                } else {
+                    write!(f, "call_indirect {fn_id}(")?;
+                }
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{a}")?;
+                }
+                write!(f, ")")
+            }
+            Inst::Trap { msg } => write!(f, "trap \"{msg}\""),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::{Const, Operand, Reg};
+
+    #[test]
+    fn dst_and_side_effects() {
+        let add = Inst::Bin {
+            op: BinOp::Add,
+            dst: Reg(3),
+            a: Operand::i32(1),
+            b: Operand::Reg(Reg(2)),
+        };
+        assert_eq!(add.dst(), Some(Reg(3)));
+        assert!(!add.has_side_effect());
+
+        let st = Inst::Store {
+            ty: Type::F32,
+            space: AddrSpace::Global,
+            addr: Operand::i64(0),
+            val: Operand::f32(1.0),
+        };
+        assert_eq!(st.dst(), None);
+        assert!(st.has_side_effect());
+    }
+
+    #[test]
+    fn display_forms() {
+        let i = Inst::Bin {
+            op: BinOp::Mul,
+            dst: Reg(1),
+            a: Operand::Reg(Reg(0)),
+            b: Operand::Const(Const::I32(4)),
+        };
+        assert_eq!(i.to_string(), "%r1 = mul %r0, 4");
+
+        let c = Inst::Call {
+            dst: Some(Reg(2)),
+            callee: "gpu.tid.x".into(),
+            args: vec![],
+        };
+        assert_eq!(c.to_string(), "%r2 = call @gpu.tid.x()");
+    }
+
+    #[test]
+    fn visit_insts_walks_nested_structure() {
+        let body = Stmt::Loop {
+            body: vec![
+                Stmt::If {
+                    cond: Operand::bool(true),
+                    then_: vec![Stmt::Inst(Inst::Copy {
+                        dst: Reg(0),
+                        src: Operand::i32(1),
+                    })],
+                    else_: vec![Stmt::Break],
+                },
+                Stmt::Inst(Inst::Copy { dst: Reg(1), src: Operand::i32(2) }),
+            ],
+        };
+        let mut n = 0;
+        body.visit_insts(&mut |_| n += 1);
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn map_operands_rewrites_all() {
+        let mut i = Inst::Select {
+            dst: Reg(5),
+            cond: Operand::Reg(Reg(1)),
+            a: Operand::Reg(Reg(2)),
+            b: Operand::Reg(Reg(3)),
+        };
+        i.map_operands(|o| {
+            if let Operand::Reg(r) = o {
+                *o = Operand::Reg(Reg(r.0 + 10));
+            }
+        });
+        assert_eq!(
+            i.operands(),
+            vec![
+                Operand::Reg(Reg(11)),
+                Operand::Reg(Reg(12)),
+                Operand::Reg(Reg(13))
+            ]
+        );
+    }
+}

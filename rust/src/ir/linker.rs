@@ -1,0 +1,211 @@
+//! Module linker — the step marked "link dev.rtl.bc" in the paper's
+//! Fig. 1: application kernel modules are linked against the device
+//! runtime's IR library before optimization.
+
+use super::module::{Linkage, Module};
+use crate::util::Error;
+use std::collections::BTreeSet;
+
+/// Link `lib` into `app` (in place).
+///
+/// Rules (LLVM-linker-like, reduced to what we need):
+/// * a strong definition replaces a weak one (either direction);
+/// * two strong definitions of the same symbol are an error;
+/// * `Internal` symbols from the library are renamed on collision;
+/// * metadata keys from the library are imported under their own name
+///   when absent (first writer wins — metadata is not semantic).
+pub fn link(app: &mut Module, lib: &Module) -> Result<(), Error> {
+    // Functions.
+    for (name, f) in &lib.funcs {
+        match app.funcs.get(name) {
+            None => {
+                app.add_func(f.clone());
+            }
+            Some(existing) => {
+                let e_weak = existing.linkage == Linkage::Weak;
+                let l_weak = f.linkage == Linkage::Weak;
+                match (e_weak, l_weak) {
+                    (true, false) => {
+                        app.add_func(f.clone());
+                    }
+                    (_, true) => { /* keep existing */ }
+                    (false, false) => {
+                        if f.linkage == Linkage::Internal || existing.linkage == Linkage::Internal
+                        {
+                            // Internal collision: rename the incoming one.
+                            let mut renamed = f.clone();
+                            renamed.name = format!("{name}.{}", short_hash(&lib.name));
+                            app.add_func(renamed);
+                        } else {
+                            return Err(Error::Link(format!(
+                                "duplicate strong definition of @{name} \
+                                 (app `{}` vs lib `{}`)",
+                                app.name, lib.name
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Globals.
+    for (name, g) in &lib.globals {
+        match app.globals.get(name) {
+            None => app.add_global(g.clone()),
+            Some(existing) => {
+                let e_weak = existing.linkage == Linkage::Weak;
+                let l_weak = g.linkage == Linkage::Weak;
+                match (e_weak, l_weak) {
+                    (true, false) => app.add_global(g.clone()),
+                    (_, true) => {}
+                    (false, false) => {
+                        return Err(Error::Link(format!(
+                            "duplicate strong definition of global @{name}"
+                        )))
+                    }
+                }
+            }
+        }
+    }
+    // Metadata: import absent keys.
+    for (k, v) in &lib.meta {
+        app.meta.entry(k.clone()).or_insert_with(|| v.clone());
+    }
+    // Externs: keep only still-unresolved ones.
+    let mut ext: BTreeSet<String> = app.externs.union(&lib.externs).cloned().collect();
+    let defined = app.defined_symbols();
+    ext.retain(|s| !defined.contains(s));
+    app.externs = ext;
+    Ok(())
+}
+
+/// After linking, every remaining undefined symbol must be acceptable to
+/// the execution environment (intrinsics, runtime bindings, payloads).
+pub fn check_resolved(
+    m: &Module,
+    is_environment_symbol: impl Fn(&str) -> bool,
+) -> Result<(), Error> {
+    let undefined: Vec<String> = m
+        .undefined_symbols()
+        .into_iter()
+        .filter(|s| !is_environment_symbol(s))
+        .collect();
+    if undefined.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::Link(format!(
+            "unresolved symbols in module `{}`: {}",
+            m.name,
+            undefined.join(", ")
+        )))
+    }
+}
+
+/// Symbols the simulator environment always provides: target intrinsics
+/// (`gpu.*`, `nvvm.*`, `amdgcn.*`), PJRT payloads (`payload.*`) and
+/// runtime bindings (`__kmpc_*`, `omp_*`).
+pub fn default_environment_symbol(s: &str) -> bool {
+    s.starts_with("gpu.")
+        || s.starts_with("nvvm.")
+        || s.starts_with("amdgcn.")
+        || s.starts_with("payload.")
+        || s.starts_with("__kmpc_")
+        || s.starts_with("omp_")
+}
+
+fn short_hash(s: &str) -> String {
+    let mut h: u32 = 2166136261;
+    for b in s.bytes() {
+        h ^= b as u32;
+        h = h.wrapping_mul(16777619);
+    }
+    format!("{h:08x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FunctionBuilder;
+    use crate::ir::module::{Function, Linkage};
+    use crate::ir::types::{Operand, Type};
+
+    fn func(name: &str, linkage: Linkage, ret_const: i32) -> Function {
+        let mut b = FunctionBuilder::new(name, &[], Some(Type::I32)).linkage(linkage);
+        b.ret_val(Operand::i32(ret_const));
+        b.build()
+    }
+
+    #[test]
+    fn strong_replaces_weak() {
+        let mut app = Module::new("app");
+        app.add_func(func("f", Linkage::Weak, 0));
+        let mut lib = Module::new("lib");
+        lib.add_func(func("f", Linkage::External, 7));
+        link(&mut app, &lib).unwrap();
+        let text = crate::ir::printer::print_function(&app.funcs["f"]);
+        assert!(text.contains("return 7"), "{text}");
+    }
+
+    #[test]
+    fn weak_does_not_replace_strong() {
+        let mut app = Module::new("app");
+        app.add_func(func("f", Linkage::External, 1));
+        let mut lib = Module::new("lib");
+        lib.add_func(func("f", Linkage::Weak, 9));
+        link(&mut app, &lib).unwrap();
+        let text = crate::ir::printer::print_function(&app.funcs["f"]);
+        assert!(text.contains("return 1"), "{text}");
+    }
+
+    #[test]
+    fn duplicate_strong_is_an_error() {
+        let mut app = Module::new("app");
+        app.add_func(func("f", Linkage::External, 1));
+        let mut lib = Module::new("lib");
+        lib.add_func(func("f", Linkage::External, 2));
+        assert!(link(&mut app, &lib).is_err());
+    }
+
+    #[test]
+    fn internal_collision_renames() {
+        let mut app = Module::new("app");
+        app.add_func(func("helper", Linkage::Internal, 1));
+        let mut lib = Module::new("lib");
+        lib.add_func(func("helper", Linkage::Internal, 2));
+        link(&mut app, &lib).unwrap();
+        assert_eq!(app.funcs.len(), 2);
+    }
+
+    #[test]
+    fn externs_shrink_after_link() {
+        let mut app = Module::new("app");
+        let mut k = FunctionBuilder::new("k", &[], None).kernel();
+        k.call_void("lib_fn", &[]);
+        k.ret();
+        app.add_func(k.build());
+        app.declare_extern("lib_fn");
+        let mut lib = Module::new("lib");
+        lib.add_func(func("lib_fn", Linkage::External, 0));
+        link(&mut app, &lib).unwrap();
+        assert!(app.externs.is_empty());
+        check_resolved(&app, default_environment_symbol).unwrap();
+    }
+
+    #[test]
+    fn unresolved_non_environment_symbol_fails_check() {
+        let mut app = Module::new("app");
+        let mut k = FunctionBuilder::new("k", &[], None).kernel();
+        k.call_void("mystery", &[]);
+        k.ret();
+        app.add_func(k.build());
+        assert!(check_resolved(&app, default_environment_symbol).is_err());
+    }
+
+    #[test]
+    fn intrinsic_and_runtime_symbols_are_environment() {
+        for s in ["gpu.tid.x", "nvvm.atom.inc.u32", "amdgcn.atomic.inc32", "payload.stencil", "__kmpc_barrier", "omp_get_thread_num"] {
+            assert!(default_environment_symbol(s), "{s}");
+        }
+        assert!(!default_environment_symbol("random_fn"));
+    }
+}

@@ -1,0 +1,36 @@
+//! `omp_ir` — the device intermediate representation.
+//!
+//! This is the reproduction's analog of LLVM bitcode in the paper's Fig. 1:
+//! application kernels are built (or "compiled") into IR modules, the
+//! device runtime ships a *library* of IR functions (`dev.rtl.bc` analog),
+//! and the [`linker`] links the two so that [`passes`] can optimize the
+//! runtime *together with* the application — the co-optimization property
+//! §2.3 of the paper calls out as the reason the runtime must be shipped
+//! as bitcode rather than a binary.
+//!
+//! Shape of the IR:
+//!
+//! * virtual-register machine (registers are mutable, LLVM-after-reg2mem
+//!   style) with **structured control flow** (`if`/`loop`/`break`/
+//!   `continue`) — structured regions keep warp-divergence handling in the
+//!   SIMT interpreter simple and total;
+//! * calls are symbolic; resolution order at execution time is
+//!   module-local function → device-runtime binding → target intrinsic,
+//!   which is exactly the link-time picture of the paper (common code →
+//!   runtime → per-target intrinsics);
+//! * a deterministic textual form ([`printer`]) — the object §4.1's code
+//!   comparison diffs.
+
+pub mod builder;
+pub mod inst;
+pub mod linker;
+pub mod module;
+pub mod passes;
+pub mod printer;
+pub mod types;
+pub mod verify;
+
+pub use builder::FunctionBuilder;
+pub use inst::{BinOp, CastOp, CmpPred, Inst, Stmt, UnOp};
+pub use module::{Function, Global, Linkage, Module};
+pub use types::{AddrSpace, Const, Operand, Reg, Type};

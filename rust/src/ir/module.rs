@@ -1,0 +1,287 @@
+//! Functions, globals and modules.
+
+use super::inst::Stmt;
+use super::types::{AddrSpace, Type};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Symbol linkage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Linkage {
+    /// Visible to the linker; at most one strong definition per program.
+    External,
+    /// Module-private; renamed on collision when linking.
+    Internal,
+    /// May be replaced by a strong definition (used for the paper's
+    /// fallback `declare variant` bases, Listing 4).
+    Weak,
+}
+
+/// Inlining hint on a function (the runtime library marks its hot leaf
+/// functions `Always`, mirroring `__attribute__((always_inline))` in the
+/// real device runtime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InlineHint {
+    Default,
+    Always,
+    Never,
+}
+
+/// A module-level global variable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Global {
+    /// Symbol name.
+    pub name: String,
+    /// Address space the global lives in.
+    pub space: AddrSpace,
+    /// Size in bytes.
+    pub size: u64,
+    /// Alignment in bytes (power of two).
+    pub align: u64,
+    /// Optional initializer (global space only; must match `size`).
+    pub init: Option<Vec<u8>>,
+    /// The paper's `loader_uninitialized` attribute: when true the global
+    /// is materialized without default initialization (shared-space
+    /// globals must set this — the runtime initializes them on demand).
+    pub uninit: bool,
+    /// Linkage.
+    pub linkage: Linkage,
+}
+
+/// A function: typed virtual registers + a structured body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Function {
+    /// Symbol name.
+    pub name: String,
+    /// Number of leading registers that are parameters.
+    pub num_params: u32,
+    /// Types of all registers; `regs[0..num_params]` are the parameters.
+    pub regs: Vec<Type>,
+    /// Return type (None = void).
+    pub ret: Option<Type>,
+    /// Structured body.
+    pub body: Vec<Stmt>,
+    /// True if this is a kernel entry point (launchable from the host).
+    pub is_kernel: bool,
+    /// Inlining hint.
+    pub inline: InlineHint,
+    /// Linkage.
+    pub linkage: Linkage,
+}
+
+impl Function {
+    /// Parameter types.
+    pub fn param_types(&self) -> &[Type] {
+        &self.regs[..self.num_params as usize]
+    }
+
+    /// Count instructions in the body (used by inline heuristics and the
+    /// code-comparison report).
+    pub fn inst_count(&self) -> usize {
+        let mut n = 0;
+        for s in &self.body {
+            s.visit_insts(&mut |_| n += 1);
+        }
+        n
+    }
+
+    /// Names of all callees referenced by the body.
+    pub fn callees(&self) -> BTreeSet<String> {
+        let mut out = BTreeSet::new();
+        for s in &self.body {
+            s.visit_insts(&mut |i| {
+                if let super::inst::Inst::Call { callee, .. } = i {
+                    out.insert(callee.clone());
+                }
+            });
+        }
+        out
+    }
+}
+
+/// A module: the unit of linking — the analog of an LLVM bitcode file in
+/// the paper's compilation flow (Fig. 1).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Module {
+    /// Module name (shows up in the printed header).
+    pub name: String,
+    /// Target triple-analog, e.g. `nvptx64-sim` / `amdgcn-sim`; None for
+    /// target-agnostic (pre-variant-resolution) libraries.
+    pub target: Option<String>,
+    /// Globals by name (BTreeMap ⇒ deterministic print order).
+    pub globals: BTreeMap<String, Global>,
+    /// Functions by name.
+    pub funcs: BTreeMap<String, Function>,
+    /// Declared-but-undefined symbols the linker must resolve.
+    pub externs: BTreeSet<String>,
+    /// Free-form metadata — the "semantically unimportant" part of §4.1's
+    /// diff (producer string, build mode, …).
+    pub meta: BTreeMap<String, String>,
+}
+
+impl Module {
+    /// Empty module.
+    pub fn new(name: impl Into<String>) -> Self {
+        Module { name: name.into(), ..Default::default() }
+    }
+
+    /// Add (or replace) a function.
+    pub fn add_func(&mut self, f: Function) {
+        self.externs.remove(&f.name);
+        self.funcs.insert(f.name.clone(), f);
+    }
+
+    /// Add a global.
+    pub fn add_global(&mut self, g: Global) {
+        self.externs.remove(&g.name);
+        self.globals.insert(g.name.clone(), g);
+    }
+
+    /// Declare an external symbol.
+    pub fn declare_extern(&mut self, name: impl Into<String>) {
+        let name = name.into();
+        if !self.funcs.contains_key(&name) && !self.globals.contains_key(&name) {
+            self.externs.insert(name);
+        }
+    }
+
+    /// All kernel entry points.
+    pub fn kernels(&self) -> impl Iterator<Item = &Function> {
+        self.funcs.values().filter(|f| f.is_kernel)
+    }
+
+    /// Total shared-space bytes required by this module's globals
+    /// (the static `__shared__` footprint of a kernel).
+    pub fn shared_globals_size(&self) -> u64 {
+        let mut off = 0u64;
+        for g in self.globals.values().filter(|g| g.space == AddrSpace::Shared) {
+            off = off.next_multiple_of(g.align.max(1)) + g.size;
+        }
+        off
+    }
+
+    /// Symbols defined by this module.
+    pub fn defined_symbols(&self) -> BTreeSet<String> {
+        self.funcs.keys().chain(self.globals.keys()).cloned().collect()
+    }
+
+    /// Symbols referenced but not defined: declared externs plus any
+    /// callee that has no local definition (intrinsics included — the
+    /// caller filters those).
+    pub fn undefined_symbols(&self) -> BTreeSet<String> {
+        let defined = self.defined_symbols();
+        let mut out: BTreeSet<String> =
+            self.externs.iter().filter(|s| !defined.contains(*s)).cloned().collect();
+        for f in self.funcs.values() {
+            for c in f.callees() {
+                if !defined.contains(&c) {
+                    out.insert(c);
+                }
+            }
+        }
+        out
+    }
+
+    /// FNV-1a hash of the printed text — a cheap fingerprint used by the
+    /// §4.1 code-comparison harness.
+    pub fn digest(&self) -> u64 {
+        let text = super::printer::print_module(self);
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in text.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::{Inst, Stmt};
+    use crate::ir::types::{Operand, Reg};
+
+    fn leaf(name: &str, callee: Option<&str>) -> Function {
+        let mut body = vec![];
+        if let Some(c) = callee {
+            body.push(Stmt::Inst(Inst::Call { dst: None, callee: c.into(), args: vec![] }));
+        }
+        body.push(Stmt::Return(None));
+        Function {
+            name: name.into(),
+            num_params: 0,
+            regs: vec![],
+            ret: None,
+            body,
+            is_kernel: false,
+            inline: InlineHint::Default,
+            linkage: Linkage::External,
+        }
+    }
+
+    #[test]
+    fn add_func_clears_extern() {
+        let mut m = Module::new("t");
+        m.declare_extern("f");
+        assert!(m.externs.contains("f"));
+        m.add_func(leaf("f", None));
+        assert!(!m.externs.contains("f"));
+    }
+
+    #[test]
+    fn undefined_symbols_include_unresolved_callees() {
+        let mut m = Module::new("t");
+        m.add_func(leaf("caller", Some("missing")));
+        assert!(m.undefined_symbols().contains("missing"));
+        m.add_func(leaf("missing", None));
+        assert!(m.undefined_symbols().is_empty());
+    }
+
+    #[test]
+    fn shared_footprint_respects_alignment() {
+        let mut m = Module::new("t");
+        m.add_global(Global {
+            name: "a".into(),
+            space: AddrSpace::Shared,
+            size: 3,
+            align: 1,
+            init: None,
+            uninit: true,
+            linkage: Linkage::Internal,
+        });
+        m.add_global(Global {
+            name: "b".into(),
+            space: AddrSpace::Shared,
+            size: 8,
+            align: 8,
+            init: None,
+            uninit: true,
+            linkage: Linkage::Internal,
+        });
+        // a at 0..3, b aligned to 8 → 8..16
+        assert_eq!(m.shared_globals_size(), 16);
+    }
+
+    #[test]
+    fn digest_changes_with_content() {
+        let mut a = Module::new("m");
+        let mut b = Module::new("m");
+        a.add_func(leaf("f", None));
+        b.add_func(leaf("f", Some("g")));
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn inst_count_counts_nested() {
+        let mut f = leaf("f", Some("g"));
+        f.body.insert(
+            0,
+            Stmt::If {
+                cond: Operand::bool(true),
+                then_: vec![Stmt::Inst(Inst::Copy { dst: Reg(0), src: Operand::i32(0) })],
+                else_: vec![],
+            },
+        );
+        f.regs.push(crate::ir::Type::I32);
+        assert_eq!(f.inst_count(), 2);
+    }
+}

@@ -1,0 +1,479 @@
+//! Constant folding + single-def constant propagation.
+//!
+//! Registers are mutable cells, so full SCCP is out of scope; instead we
+//! (1) fold any instruction whose operands are all constants, and
+//! (2) propagate constants from registers that are assigned exactly once
+//! in the whole function. Combined with the inliner this is enough to
+//! specialize the runtime library's argument-dependent paths — the
+//! paper's "specializing a generic runtime" effect.
+
+use crate::ir::inst::{BinOp, CastOp, CmpPred, Inst, Stmt, UnOp};
+use crate::ir::module::{Function, Module};
+use crate::ir::types::{Const, Operand, Reg, Type};
+use std::collections::HashMap;
+
+/// Run over every function; returns instructions folded/propagated.
+pub fn run(m: &mut Module) -> usize {
+    let mut n = 0;
+    for f in m.funcs.values_mut() {
+        n += run_function(f);
+    }
+    n
+}
+
+fn run_function(f: &mut Function) -> usize {
+    let mut folded = 0;
+
+    // Pass 1: fold all-const instructions into Copy-of-const.
+    for s in &mut f.body {
+        s.visit_insts_mut(&mut |i| {
+            if let Some(c) = eval_inst(i) {
+                if !matches!(i, Inst::Copy { src: Operand::Const(_), .. }) {
+                    let dst = i.dst().expect("foldable inst has dst");
+                    *i = Inst::Copy { dst, src: Operand::Const(c) };
+                    folded += 1;
+                }
+            }
+        });
+    }
+
+    // Pass 2: single-def constant propagation.
+    let mut def_count: HashMap<Reg, usize> = HashMap::new();
+    let mut const_def: HashMap<Reg, Const> = HashMap::new();
+    for s in &f.body {
+        s.visit_insts(&mut |i| {
+            if let Some(d) = i.dst() {
+                *def_count.entry(d).or_insert(0) += 1;
+                if let Inst::Copy { src: Operand::Const(c), .. } = i {
+                    const_def.insert(d, *c);
+                }
+            }
+        });
+    }
+    let prop: HashMap<Reg, Const> = const_def
+        .into_iter()
+        .filter(|(r, _)| def_count.get(r) == Some(&1))
+        .collect();
+    if !prop.is_empty() {
+        for s in &mut f.body {
+            propagate_stmt(s, &prop, &mut folded);
+        }
+    }
+
+    // Pass 3: If with constant condition → splice the taken arm.
+    let body = std::mem::take(&mut f.body);
+    f.body = fold_branches(body, &mut folded);
+
+    folded
+}
+
+fn propagate_stmt(s: &mut Stmt, prop: &HashMap<Reg, Const>, folded: &mut usize) {
+    let subst = |o: &mut Operand, folded: &mut usize| {
+        if let Operand::Reg(r) = o {
+            if let Some(c) = prop.get(r) {
+                *o = Operand::Const(*c);
+                *folded += 1;
+            }
+        }
+    };
+    match s {
+        Stmt::Inst(i) => {
+            // Do not rewrite the dst-defining Copy itself into a self-copy.
+            i.map_operands(|o| subst(o, folded));
+        }
+        Stmt::If { cond, then_, else_ } => {
+            subst(cond, folded);
+            for t in then_ {
+                propagate_stmt(t, prop, folded);
+            }
+            for e in else_ {
+                propagate_stmt(e, prop, folded);
+            }
+        }
+        Stmt::Loop { body } => {
+            for b in body {
+                propagate_stmt(b, prop, folded);
+            }
+        }
+        Stmt::Return(Some(v)) => subst(v, folded),
+        _ => {}
+    }
+}
+
+fn fold_branches(body: Vec<Stmt>, folded: &mut usize) -> Vec<Stmt> {
+    let mut out = Vec::with_capacity(body.len());
+    for s in body {
+        match s {
+            Stmt::If { cond: Operand::Const(Const::I1(c)), then_, else_ } => {
+                *folded += 1;
+                let taken = if c { then_ } else { else_ };
+                out.extend(fold_branches(taken, folded));
+            }
+            Stmt::If { cond, then_, else_ } => {
+                let t = fold_branches(then_, folded);
+                let e = fold_branches(else_, folded);
+                out.push(Stmt::If { cond, then_: t, else_: e });
+            }
+            Stmt::Loop { body } => {
+                let b = fold_branches(body, folded);
+                out.push(Stmt::Loop { body: b });
+            }
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// Evaluate an instruction whose operands are all constants.
+/// Shared with tests that cross-check the SIMT interpreter's scalar ALU.
+pub fn eval_inst(i: &Inst) -> Option<Const> {
+    match i {
+        Inst::Bin { op, a: Operand::Const(a), b: Operand::Const(b), .. } => eval_bin(*op, *a, *b),
+        Inst::Un { op, a: Operand::Const(a), .. } => eval_un(*op, *a),
+        Inst::Cmp { pred, a: Operand::Const(a), b: Operand::Const(b), .. } => {
+            eval_cmp(*pred, *a, *b).map(Const::I1)
+        }
+        Inst::Select {
+            cond: Operand::Const(Const::I1(c)),
+            a: Operand::Const(a),
+            b: Operand::Const(b),
+            ..
+        } => Some(if *c { *a } else { *b }),
+        Inst::Cast { op, src: Operand::Const(s), dst } => {
+            let _ = dst;
+            eval_cast(*op, *s, cast_target_ty(i)?)
+        }
+        Inst::Copy { src: Operand::Const(c), .. } => Some(*c),
+        _ => None,
+    }
+}
+
+/// The cast target type is the dst register's type — but passes don't see
+/// the register table here, so casts carry enough info only when the
+/// target is deducible. We conservatively only fold casts where the
+/// operation implies the target.
+fn cast_target_ty(i: &Inst) -> Option<Type> {
+    if let Inst::Cast { op, src: Operand::Const(s), .. } = i {
+        Some(match (op, s.ty()) {
+            (CastOp::SExt, Type::I32) | (CastOp::ZExt, Type::I32) => Type::I64,
+            (CastOp::SExt, Type::I1) | (CastOp::ZExt, Type::I1) => Type::I32,
+            (CastOp::Trunc, Type::I64) => Type::I32,
+            (CastOp::SIToFP, _) => Type::F64, // ambiguous — skip f32 targets
+            (CastOp::FPExt, Type::F32) => Type::F64,
+            (CastOp::FPTrunc, Type::F64) => Type::F32,
+            _ => return None,
+        })
+    } else {
+        None
+    }
+}
+
+/// Constant binary evaluation.
+pub fn eval_bin(op: BinOp, a: Const, b: Const) -> Option<Const> {
+    use BinOp::*;
+    use Const as C;
+    Some(match (a, b) {
+        (C::I32(x), C::I32(y)) => C::I32(match op {
+            Add => x.wrapping_add(y),
+            Sub => x.wrapping_sub(y),
+            Mul => x.wrapping_mul(y),
+            SDiv => {
+                if y == 0 {
+                    return None;
+                }
+                x.wrapping_div(y)
+            }
+            UDiv => {
+                if y == 0 {
+                    return None;
+                }
+                ((x as u32) / (y as u32)) as i32
+            }
+            SRem => {
+                if y == 0 {
+                    return None;
+                }
+                x.wrapping_rem(y)
+            }
+            URem => {
+                if y == 0 {
+                    return None;
+                }
+                ((x as u32) % (y as u32)) as i32
+            }
+            And => x & y,
+            Or => x | y,
+            Xor => x ^ y,
+            Shl => x.wrapping_shl(y as u32),
+            LShr => ((x as u32).wrapping_shr(y as u32)) as i32,
+            AShr => x.wrapping_shr(y as u32),
+            SMin => x.min(y),
+            SMax => x.max(y),
+            UMin => ((x as u32).min(y as u32)) as i32,
+            UMax => ((x as u32).max(y as u32)) as i32,
+            FDiv | FMin | FMax => return None,
+        }),
+        (C::I64(x), C::I64(y)) => C::I64(match op {
+            Add => x.wrapping_add(y),
+            Sub => x.wrapping_sub(y),
+            Mul => x.wrapping_mul(y),
+            SDiv => {
+                if y == 0 {
+                    return None;
+                }
+                x.wrapping_div(y)
+            }
+            UDiv => {
+                if y == 0 {
+                    return None;
+                }
+                ((x as u64) / (y as u64)) as i64
+            }
+            SRem => {
+                if y == 0 {
+                    return None;
+                }
+                x.wrapping_rem(y)
+            }
+            URem => {
+                if y == 0 {
+                    return None;
+                }
+                ((x as u64) % (y as u64)) as i64
+            }
+            And => x & y,
+            Or => x | y,
+            Xor => x ^ y,
+            Shl => x.wrapping_shl(y as u32),
+            LShr => ((x as u64).wrapping_shr(y as u32)) as i64,
+            AShr => x.wrapping_shr(y as u32),
+            SMin => x.min(y),
+            SMax => x.max(y),
+            UMin => ((x as u64).min(y as u64)) as i64,
+            UMax => ((x as u64).max(y as u64)) as i64,
+            FDiv | FMin | FMax => return None,
+        }),
+        (C::F32(x), C::F32(y)) => C::F32(match op {
+            Add => x + y,
+            Sub => x - y,
+            Mul => x * y,
+            FDiv => x / y,
+            FMin => x.min(y),
+            FMax => x.max(y),
+            _ => return None,
+        }),
+        (C::F64(x), C::F64(y)) => C::F64(match op {
+            Add => x + y,
+            Sub => x - y,
+            Mul => x * y,
+            FDiv => x / y,
+            FMin => x.min(y),
+            FMax => x.max(y),
+            _ => return None,
+        }),
+        (C::I1(x), C::I1(y)) => C::I1(match op {
+            And => x & y,
+            Or => x | y,
+            Xor => x ^ y,
+            _ => return None,
+        }),
+        _ => return None,
+    })
+}
+
+/// Constant unary evaluation.
+pub fn eval_un(op: UnOp, a: Const) -> Option<Const> {
+    use Const as C;
+    use UnOp::*;
+    Some(match a {
+        C::I32(x) => match op {
+            Neg => C::I32(x.wrapping_neg()),
+            Not => C::I32(!x),
+            _ => return None,
+        },
+        C::I64(x) => match op {
+            Neg => C::I64(x.wrapping_neg()),
+            Not => C::I64(!x),
+            _ => return None,
+        },
+        C::F32(x) => C::F32(match op {
+            Neg => -x,
+            FAbs => x.abs(),
+            FSqrt => x.sqrt(),
+            FExp => x.exp(),
+            FLog => x.ln(),
+            FSin => x.sin(),
+            FCos => x.cos(),
+            FFloor => x.floor(),
+            FRcp => 1.0 / x,
+            Not => return None,
+        }),
+        C::F64(x) => C::F64(match op {
+            Neg => -x,
+            FAbs => x.abs(),
+            FSqrt => x.sqrt(),
+            FExp => x.exp(),
+            FLog => x.ln(),
+            FSin => x.sin(),
+            FCos => x.cos(),
+            FFloor => x.floor(),
+            FRcp => 1.0 / x,
+            Not => return None,
+        }),
+        C::I1(x) => match op {
+            Not => C::I1(!x),
+            _ => return None,
+        },
+    })
+}
+
+/// Constant comparison evaluation.
+pub fn eval_cmp(pred: CmpPred, a: Const, b: Const) -> Option<bool> {
+    use CmpPred::*;
+    use Const as C;
+    match (a, b) {
+        (C::I32(x), C::I32(y)) => Some(match pred {
+            Eq => x == y,
+            Ne => x != y,
+            Lt => x < y,
+            Le => x <= y,
+            Gt => x > y,
+            Ge => x >= y,
+            ULt => (x as u32) < (y as u32),
+            ULe => (x as u32) <= (y as u32),
+            UGt => (x as u32) > (y as u32),
+            UGe => (x as u32) >= (y as u32),
+        }),
+        (C::I64(x), C::I64(y)) => Some(match pred {
+            Eq => x == y,
+            Ne => x != y,
+            Lt => x < y,
+            Le => x <= y,
+            Gt => x > y,
+            Ge => x >= y,
+            ULt => (x as u64) < (y as u64),
+            ULe => (x as u64) <= (y as u64),
+            UGt => (x as u64) > (y as u64),
+            UGe => (x as u64) >= (y as u64),
+        }),
+        (C::F32(x), C::F32(y)) => Some(match pred {
+            Eq => x == y,
+            Ne => x != y,
+            Lt => x < y,
+            Le => x <= y,
+            Gt => x > y,
+            Ge => x >= y,
+            _ => return None,
+        }),
+        (C::F64(x), C::F64(y)) => Some(match pred {
+            Eq => x == y,
+            Ne => x != y,
+            Lt => x < y,
+            Le => x <= y,
+            Gt => x > y,
+            Ge => x >= y,
+            _ => return None,
+        }),
+        (C::I1(x), C::I1(y)) => Some(match pred {
+            Eq => x == y,
+            Ne => x != y,
+            _ => return None,
+        }),
+        _ => None,
+    }
+}
+
+/// Constant cast evaluation.
+pub fn eval_cast(op: CastOp, s: Const, to: Type) -> Option<Const> {
+    use CastOp::*;
+    use Const as C;
+    Some(match (op, s, to) {
+        (SExt, C::I32(x), Type::I64) => C::I64(x as i64),
+        (ZExt, C::I32(x), Type::I64) => C::I64(x as u32 as i64),
+        (SExt, C::I1(x), Type::I32) | (ZExt, C::I1(x), Type::I32) => C::I32(x as i32),
+        (Trunc, C::I64(x), Type::I32) => C::I32(x as i32),
+        (SIToFP, C::I32(x), Type::F64) => C::F64(x as f64),
+        (SIToFP, C::I64(x), Type::F64) => C::F64(x as f64),
+        (FPExt, C::F32(x), Type::F64) => C::F64(x as f64),
+        (FPTrunc, C::F64(x), Type::F32) => C::F32(x as f32),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FunctionBuilder;
+    use crate::ir::printer::print_function;
+    use crate::ir::verify::verify_module;
+
+    #[test]
+    fn folds_constant_arithmetic() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[], Some(Type::I32));
+        let a = f.add(Operand::i32(40), Operand::i32(2));
+        f.ret_val(a);
+        m.add_func(f.build());
+        let n = run(&mut m);
+        assert!(n >= 1);
+        verify_module(&m).unwrap();
+        let text = print_function(&m.funcs["f"]);
+        assert!(text.contains("42"), "{text}");
+    }
+
+    #[test]
+    fn division_by_zero_is_not_folded() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[], Some(Type::I32));
+        let a = f.sdiv(Operand::i32(1), Operand::i32(0));
+        f.ret_val(a);
+        m.add_func(f.build());
+        run(&mut m);
+        let text = print_function(&m.funcs["f"]);
+        assert!(text.contains("sdiv"), "div-by-zero must stay a runtime trap: {text}");
+    }
+
+    #[test]
+    fn const_branch_is_spliced() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[], Some(Type::I32));
+        f.if_else(
+            Operand::bool(true),
+            |b| b.ret_val(Operand::i32(1)),
+            |b| b.ret_val(Operand::i32(2)),
+        );
+        m.add_func(f.build());
+        run(&mut m);
+        let text = print_function(&m.funcs["f"]);
+        assert!(!text.contains("if"), "{text}");
+        assert!(text.contains("return 1"), "{text}");
+    }
+
+    #[test]
+    fn multiply_assigned_reg_is_not_propagated() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[Type::I1], Some(Type::I32));
+        let p = f.param(0);
+        let v = f.copy(Operand::i32(1));
+        f.if_(p, |b| b.assign(v, Operand::i32(2)));
+        f.ret_val(v);
+        m.add_func(f.build());
+        run(&mut m);
+        let text = print_function(&m.funcs["f"]);
+        // v is assigned twice; the return must still read the register.
+        assert!(text.contains("return %r"), "{text}");
+    }
+
+    #[test]
+    fn eval_bin_wrapping_and_unsigned() {
+        assert_eq!(eval_bin(BinOp::Add, Const::I32(i32::MAX), Const::I32(1)), Some(Const::I32(i32::MIN)));
+        assert_eq!(eval_bin(BinOp::UDiv, Const::I32(-2), Const::I32(2)), Some(Const::I32(0x7FFF_FFFF)));
+        assert_eq!(eval_bin(BinOp::UMax, Const::I32(-1), Const::I32(1)), Some(Const::I32(-1)));
+    }
+
+    #[test]
+    fn eval_cmp_signed_vs_unsigned() {
+        assert_eq!(eval_cmp(CmpPred::Lt, Const::I32(-1), Const::I32(1)), Some(true));
+        assert_eq!(eval_cmp(CmpPred::ULt, Const::I32(-1), Const::I32(1)), Some(false));
+    }
+}

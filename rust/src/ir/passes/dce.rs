@@ -1,0 +1,178 @@
+//! Dead-code elimination.
+//!
+//! Removes side-effect-free instructions whose results are never read,
+//! collapses `if` statements with two empty arms, and removes loops whose
+//! body is a single unconditional `break`. Runs to a bounded fixpoint.
+
+use crate::ir::inst::Stmt;
+use crate::ir::module::Module;
+use crate::ir::types::{Operand, Reg};
+use std::collections::HashSet;
+
+/// Run the pass; returns the number of statements removed.
+pub fn run(m: &mut Module) -> usize {
+    let mut removed = 0;
+    for f in m.funcs.values_mut() {
+        loop {
+            // Collect every register read anywhere.
+            let mut used: HashSet<Reg> = HashSet::new();
+            for s in &f.body {
+                collect_uses(s, &mut used);
+            }
+            let body = std::mem::take(&mut f.body);
+            let mut round = 0;
+            f.body = sweep(body, &used, &mut round);
+            removed += round;
+            if round == 0 {
+                break;
+            }
+        }
+    }
+    removed
+}
+
+fn collect_uses(s: &Stmt, used: &mut HashSet<Reg>) {
+    for o in s.head_operands() {
+        if let Operand::Reg(r) = o {
+            used.insert(r);
+        }
+    }
+    match s {
+        Stmt::If { then_, else_, .. } => {
+            for t in then_ {
+                collect_uses(t, used);
+            }
+            for e in else_ {
+                collect_uses(e, used);
+            }
+        }
+        Stmt::Loop { body } => {
+            for b in body {
+                collect_uses(b, used);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn sweep(body: Vec<Stmt>, used: &HashSet<Reg>, removed: &mut usize) -> Vec<Stmt> {
+    let mut out = Vec::with_capacity(body.len());
+    for s in body {
+        match s {
+            Stmt::Inst(i) => {
+                let dead = !i.has_side_effect()
+                    && i.dst().map(|d| !used.contains(&d)).unwrap_or(true);
+                if dead {
+                    *removed += 1;
+                } else {
+                    out.push(Stmt::Inst(i));
+                }
+            }
+            Stmt::If { cond, then_, else_ } => {
+                let t = sweep(then_, used, removed);
+                let e = sweep(else_, used, removed);
+                if t.is_empty() && e.is_empty() {
+                    *removed += 1; // cond evaluation is pure; drop the if
+                } else {
+                    out.push(Stmt::If { cond, then_: t, else_: e });
+                }
+            }
+            Stmt::Loop { body } => {
+                let b = sweep(body, used, removed);
+                if matches!(b.as_slice(), [Stmt::Break]) {
+                    *removed += 1;
+                } else {
+                    out.push(Stmt::Loop { body: b });
+                }
+            }
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FunctionBuilder;
+    use crate::ir::printer::print_function;
+    use crate::ir::types::{Operand, Type};
+    use crate::ir::verify::verify_module;
+    use crate::ir::AddrSpace;
+
+    #[test]
+    fn unused_pure_inst_is_removed() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[], None);
+        f.add(Operand::i32(1), Operand::i32(2)); // dead
+        f.ret();
+        m.add_func(f.build());
+        let n = run(&mut m);
+        assert_eq!(n, 1);
+        verify_module(&m).unwrap();
+    }
+
+    #[test]
+    fn store_is_never_removed() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[Type::I64], None);
+        let p = f.param(0);
+        f.store(Type::I32, AddrSpace::Global, p, Operand::i32(0));
+        f.ret();
+        m.add_func(f.build());
+        assert_eq!(run(&mut m), 0);
+    }
+
+    #[test]
+    fn call_without_result_is_kept() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[], None);
+        f.call_void("gpu.barrier0", &[]);
+        f.ret();
+        m.add_func(f.build());
+        assert_eq!(run(&mut m), 0);
+    }
+
+    #[test]
+    fn dead_chain_collapses_transitively() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[], None);
+        let a = f.add(Operand::i32(1), Operand::i32(2));
+        let b = f.mul(a, Operand::i32(3));
+        let _c = f.sub(b, Operand::i32(4));
+        f.ret();
+        m.add_func(f.build());
+        let n = run(&mut m);
+        assert_eq!(n, 3);
+        let text = print_function(&m.funcs["f"]);
+        assert!(!text.contains("add"), "{text}");
+    }
+
+    #[test]
+    fn empty_if_is_dropped_but_used_cond_chain_stays_consistent() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[Type::I1], None);
+        let p = f.param(0);
+        f.if_(p, |_| {});
+        f.ret();
+        m.add_func(f.build());
+        let n = run(&mut m);
+        assert!(n >= 1);
+        verify_module(&m).unwrap();
+        let text = print_function(&m.funcs["f"]);
+        assert!(!text.contains("if"), "{text}");
+    }
+
+    #[test]
+    fn loop_of_single_break_is_dropped() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("f", &[], None);
+        f.loop_(|b| b.break_());
+        f.ret();
+        m.add_func(f.build());
+        let n = run(&mut m);
+        assert!(n >= 1);
+        let text = print_function(&m.funcs["f"]);
+        assert!(!text.contains("loop"), "{text}");
+    }
+}

@@ -1,0 +1,301 @@
+//! Inliner.
+//!
+//! Inlines calls to module-local functions that are marked
+//! `alwaysinline`, or that are small (≤ [`SMALL_THRESHOLD`] instructions)
+//! and not marked `noinline`. Only *single-exit* bodies are inlined — the
+//! runtime library is authored to satisfy this (a trailing `return` and no
+//! early returns), which mirrors how the real device runtime's hot leaves
+//! are structured for inlining.
+
+use crate::ir::inst::{Inst, Stmt};
+use crate::ir::module::{Function, InlineHint, Module};
+use crate::ir::types::{Operand, Reg};
+use std::collections::BTreeMap;
+
+/// Functions at or below this instruction count inline by default.
+pub const SMALL_THRESHOLD: usize = 24;
+
+/// Maximum inlining rounds (bounds growth on call chains).
+const MAX_ROUNDS: usize = 8;
+
+/// Run the pass; returns the number of call sites inlined.
+pub fn run(m: &mut Module) -> usize {
+    let mut total = 0;
+    for _ in 0..MAX_ROUNDS {
+        let inlined = run_round(m);
+        total += inlined;
+        if inlined == 0 {
+            break;
+        }
+    }
+    total
+}
+
+fn run_round(m: &mut Module) -> usize {
+    // Snapshot inlinable callees.
+    let candidates: BTreeMap<String, Function> = m
+        .funcs
+        .iter()
+        .filter(|(_, f)| is_inlinable(f))
+        .map(|(n, f)| (n.clone(), f.clone()))
+        .collect();
+    if candidates.is_empty() {
+        return 0;
+    }
+    let mut inlined = 0;
+    let names: Vec<String> = m.funcs.keys().cloned().collect();
+    for name in names {
+        let mut f = m.funcs.remove(&name).unwrap();
+        // Never inline a function into itself.
+        let body = std::mem::take(&mut f.body);
+        f.body = splice_block(body, &mut f, &candidates, &name, &mut inlined);
+        m.funcs.insert(name, f);
+    }
+    inlined
+}
+
+/// A function is inlinable when single-exit and hinted/small.
+pub fn is_inlinable(f: &Function) -> bool {
+    if f.is_kernel || f.inline == InlineHint::Never {
+        return false;
+    }
+    let wanted = f.inline == InlineHint::Always || f.inst_count() <= SMALL_THRESHOLD;
+    wanted && single_exit(f)
+}
+
+/// Single exit: exactly one `Return`, and it is the last top-level stmt.
+fn single_exit(f: &Function) -> bool {
+    let mut returns = 0usize;
+    for s in &f.body {
+        count_returns(s, &mut returns);
+    }
+    returns == 1 && matches!(f.body.last(), Some(Stmt::Return(_)))
+}
+
+fn count_returns(s: &Stmt, n: &mut usize) {
+    match s {
+        Stmt::Return(_) => *n += 1,
+        Stmt::If { then_, else_, .. } => {
+            for t in then_ {
+                count_returns(t, n);
+            }
+            for e in else_ {
+                count_returns(e, n);
+            }
+        }
+        Stmt::Loop { body } => {
+            for b in body {
+                count_returns(b, n);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn splice_block(
+    body: Vec<Stmt>,
+    caller: &mut Function,
+    candidates: &BTreeMap<String, Function>,
+    caller_name: &str,
+    inlined: &mut usize,
+) -> Vec<Stmt> {
+    let mut out = Vec::with_capacity(body.len());
+    for s in body {
+        match s {
+            Stmt::Inst(Inst::Call { dst, callee, args })
+                if callee != caller_name && candidates.contains_key(&callee) =>
+            {
+                let callee_fn = &candidates[&callee];
+                inline_call(&mut out, caller, callee_fn, dst, &args);
+                *inlined += 1;
+            }
+            Stmt::Inst(i) => out.push(Stmt::Inst(i)),
+            Stmt::If { cond, then_, else_ } => {
+                let t = splice_block(then_, caller, candidates, caller_name, inlined);
+                let e = splice_block(else_, caller, candidates, caller_name, inlined);
+                out.push(Stmt::If { cond, then_: t, else_: e });
+            }
+            Stmt::Loop { body } => {
+                let b = splice_block(body, caller, candidates, caller_name, inlined);
+                out.push(Stmt::Loop { body: b });
+            }
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// Splice one call site: bind params with copies, remap callee registers
+/// above the caller's register space, rewrite the trailing return into an
+/// assignment of the call's destination.
+fn inline_call(
+    out: &mut Vec<Stmt>,
+    caller: &mut Function,
+    callee: &Function,
+    dst: Option<Reg>,
+    args: &[Operand],
+) {
+    let offset = caller.regs.len() as u32;
+    caller.regs.extend_from_slice(&callee.regs);
+    let remap = |r: Reg| Reg(r.0 + offset);
+
+    for (i, a) in args.iter().enumerate() {
+        out.push(Stmt::Inst(Inst::Copy { dst: Reg(offset + i as u32), src: *a }));
+    }
+
+    let mut body = callee.body.clone();
+    let trailing = body.pop(); // the single Return
+    remap_block(&mut body, offset);
+    out.extend(body);
+
+    match trailing {
+        Some(Stmt::Return(Some(mut v))) => {
+            remap_operand(&mut v, offset);
+            if let Some(d) = dst {
+                out.push(Stmt::Inst(Inst::Copy { dst: d, src: v }));
+            }
+        }
+        Some(Stmt::Return(None)) => {}
+        other => unreachable!("single-exit invariant violated: {other:?}"),
+    }
+    let _ = remap; // silence if optimized differently
+}
+
+fn remap_block(body: &mut [Stmt], offset: u32) {
+    for s in body {
+        remap_stmt(s, offset);
+    }
+}
+
+fn remap_stmt(s: &mut Stmt, offset: u32) {
+    match s {
+        Stmt::Inst(i) => {
+            i.map_dst(|r| Reg(r.0 + offset));
+            i.map_operands(|o| remap_operand(o, offset));
+        }
+        Stmt::If { cond, then_, else_ } => {
+            remap_operand(cond, offset);
+            remap_block(then_, offset);
+            remap_block(else_, offset);
+        }
+        Stmt::Loop { body } => remap_block(body, offset),
+        Stmt::Return(Some(v)) => remap_operand(v, offset),
+        _ => {}
+    }
+}
+
+fn remap_operand(o: &mut Operand, offset: u32) {
+    if let Operand::Reg(r) = o {
+        *r = Reg(r.0 + offset);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FunctionBuilder;
+    use crate::ir::types::Type;
+    use crate::ir::verify::verify_module;
+
+    fn add_one_lib(hint: InlineHint) -> Function {
+        let mut f = FunctionBuilder::new("add_one", &[Type::I32], Some(Type::I32));
+        let p = f.param(0);
+        let v = f.add(p, Operand::i32(1));
+        f.ret_val(v);
+        f.inline_hint(hint).build()
+    }
+
+    fn caller_of(callee: &str) -> Function {
+        let mut k = FunctionBuilder::new("main", &[], Some(Type::I32));
+        let r = k.call(callee, &[Operand::i32(1)], Type::I32);
+        let r2 = k.call(callee, &[Operand::Reg(r)], Type::I32);
+        k.ret_val(r2);
+        k.build()
+    }
+
+    #[test]
+    fn inlines_both_call_sites() {
+        let mut m = Module::new("t");
+        m.add_func(add_one_lib(InlineHint::Always));
+        m.add_func(caller_of("add_one"));
+        let n = run(&mut m);
+        assert_eq!(n, 2);
+        verify_module(&m).unwrap();
+        assert!(!m.funcs["main"].callees().contains("add_one"));
+    }
+
+    #[test]
+    fn noinline_is_respected() {
+        let mut m = Module::new("t");
+        m.add_func(add_one_lib(InlineHint::Never));
+        m.add_func(caller_of("add_one"));
+        assert_eq!(run(&mut m), 0);
+    }
+
+    #[test]
+    fn multi_exit_function_is_not_inlined() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("maybe", &[Type::I1], Some(Type::I32));
+        let p = f.param(0);
+        f.if_(p, |b| b.ret_val(Operand::i32(1)));
+        f.ret_val(Operand::i32(0));
+        m.add_func(f.inline_hint(InlineHint::Always).build());
+        m.add_func(caller_of("maybe"));
+        assert_eq!(run(&mut m), 0);
+    }
+
+    #[test]
+    fn recursion_is_not_inlined_into_itself() {
+        let mut m = Module::new("t");
+        let mut f = FunctionBuilder::new("rec", &[Type::I32], Some(Type::I32));
+        let p = f.param(0);
+        let r = f.call("rec", &[Operand::Reg(p)], Type::I32);
+        f.ret_val(r);
+        m.add_func(f.inline_hint(InlineHint::Always).build());
+        // One round may try; it must not loop forever or self-splice.
+        let n = run(&mut m);
+        assert_eq!(n, 0);
+        verify_module(&m).unwrap();
+    }
+
+    #[test]
+    fn chained_inlining_reaches_fixpoint() {
+        // a calls b calls c; all alwaysinline.
+        let mut m = Module::new("t");
+        let mut c = FunctionBuilder::new("c", &[Type::I32], Some(Type::I32));
+        let p = c.param(0);
+        let v = c.mul(p, Operand::i32(3));
+        c.ret_val(v);
+        m.add_func(c.inline_hint(InlineHint::Always).build());
+
+        let mut b = FunctionBuilder::new("b", &[Type::I32], Some(Type::I32));
+        let p = b.param(0);
+        let v = b.call("c", &[Operand::Reg(p)], Type::I32);
+        b.ret_val(v);
+        m.add_func(b.inline_hint(InlineHint::Always).build());
+
+        let mut a = FunctionBuilder::new("a", &[Type::I32], Some(Type::I32));
+        let p = a.param(0);
+        let v = a.call("b", &[Operand::Reg(p)], Type::I32);
+        a.ret_val(v);
+        m.add_func(a.build());
+
+        run(&mut m);
+        verify_module(&m).unwrap();
+        assert!(!m.funcs["a"].callees().contains("b"));
+        assert!(!m.funcs["a"].callees().contains("c"));
+    }
+
+    #[test]
+    fn kernel_entry_is_never_inlined_away() {
+        let mut m = Module::new("t");
+        let mut k = FunctionBuilder::new("kern", &[], None).kernel();
+        k.ret();
+        m.add_func(k.inline_hint(InlineHint::Always).build());
+        let mut main = FunctionBuilder::new("main", &[], None);
+        main.call_void("kern", &[]);
+        main.ret();
+        m.add_func(main.build());
+        assert_eq!(run(&mut m), 0);
+    }
+}

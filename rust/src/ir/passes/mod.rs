@@ -1,0 +1,105 @@
+//! IR optimization passes.
+//!
+//! The paper's §2.3 motivates shipping the device runtime as bitcode so it
+//! can be "optimized together with the application, effectively
+//! specializing a generic runtime as needed". These passes reproduce that
+//! pipeline: after the [`crate::ir::linker`] merges the runtime library
+//! into an application kernel module, [`optimize`] inlines the library's
+//! `alwaysinline` leaves (the atomics of Listings 3/4, `__kmpc_flush`,
+//! thread-id helpers), folds constants, and strips dead code.
+
+pub mod constfold;
+pub mod dce;
+pub mod inline;
+
+use super::module::Module;
+
+/// Optimization level. `O0` leaves calls out-of-line (the ablation
+/// baseline of E6); `O2` is the default pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptLevel {
+    O0,
+    O2,
+}
+
+/// Run the standard pipeline. Returns pass statistics.
+pub fn optimize(m: &mut Module, level: OptLevel) -> PassStats {
+    let mut stats = PassStats::default();
+    if level == OptLevel::O0 {
+        return stats;
+    }
+    // inline → (constfold → dce) to fixpoint (bounded).
+    stats.inlined = inline::run(m);
+    for _ in 0..4 {
+        let folded = constfold::run(m);
+        let removed = dce::run(m);
+        stats.folded += folded;
+        stats.removed += removed;
+        if folded == 0 && removed == 0 {
+            break;
+        }
+    }
+    stats
+}
+
+/// Counters reported by [`optimize`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    /// Call sites inlined.
+    pub inlined: usize,
+    /// Instructions constant-folded.
+    pub folded: usize,
+    /// Instructions removed as dead.
+    pub removed: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FunctionBuilder;
+    use crate::ir::module::InlineHint;
+    use crate::ir::types::{Operand, Type};
+    use crate::ir::verify::verify_module;
+
+    /// lib: f(x) = x + 1 (alwaysinline); app: kernel calls f(41).
+    fn linked_module() -> Module {
+        let mut m = Module::new("app");
+        let mut f = FunctionBuilder::new("f", &[Type::I32], Some(Type::I32));
+        let p = f.param(0);
+        let v = f.add(p, Operand::i32(1));
+        f.ret_val(v);
+        m.add_func(f.inline_hint(InlineHint::Always).build());
+
+        let mut k = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+        let r = k.call("f", &[Operand::i32(41)], Type::I32);
+        let addr = k.param(0);
+        k.store(Type::I32, crate::ir::AddrSpace::Global, addr, r);
+        k.ret();
+        m.add_func(k.build());
+        m
+    }
+
+    #[test]
+    fn o0_is_identity() {
+        let mut m = linked_module();
+        let before = crate::ir::printer::print_module(&m);
+        let s = optimize(&mut m, OptLevel::O0);
+        assert_eq!(s, PassStats::default());
+        assert_eq!(before, crate::ir::printer::print_module(&m));
+    }
+
+    #[test]
+    fn o2_inlines_folds_and_verifies() {
+        let mut m = linked_module();
+        let s = optimize(&mut m, OptLevel::O2);
+        assert!(s.inlined >= 1, "{s:?}");
+        assert!(s.folded >= 1, "{s:?}");
+        verify_module(&m).unwrap();
+        // After inlining + folding, the kernel should store the constant 42
+        // without calling @f.
+        let k = &m.funcs["k"];
+        assert!(!k.callees().contains("f"), "call survived: {:?}", k.callees());
+        let text = crate::ir::printer::print_function(k);
+        assert!(text.contains("42"), "{text}");
+    }
+}

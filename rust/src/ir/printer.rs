@@ -1,0 +1,306 @@
+//! Deterministic textual form of IR modules.
+//!
+//! This text is the object of the paper's §4.1 experiment: the library
+//! "compiled" by the legacy (CUDA/HIP-style) runtime build and by the
+//! portable (OpenMP-style) build is printed and diffed; the expectation —
+//! reproduced in `examples/code_compare.rs` — is that differences are
+//! confined to metadata lines, symbol mangling of variant functions, and
+//! statement ordering from inlining.
+
+use super::inst::Stmt;
+use super::module::{Function, Global, InlineHint, Linkage, Module};
+use std::fmt::Write as _;
+
+fn linkage_str(l: Linkage) -> &'static str {
+    match l {
+        Linkage::External => "",
+        Linkage::Internal => "internal ",
+        Linkage::Weak => "weak ",
+    }
+}
+
+/// Print a whole module.
+pub fn print_module(m: &Module) -> String {
+    let mut out = String::new();
+    let target = m.target.as_deref().unwrap_or("generic");
+    let _ = writeln!(out, "; module '{}' target {}", m.name, target);
+    for (k, v) in &m.meta {
+        let _ = writeln!(out, "; meta {k} = \"{v}\"");
+    }
+    for e in &m.externs {
+        let _ = writeln!(out, "declare @{e}");
+    }
+    for g in m.globals.values() {
+        let _ = writeln!(out, "{}", print_global(g));
+    }
+    for f in m.funcs.values() {
+        out.push_str(&print_function(f));
+    }
+    out
+}
+
+/// Print one global.
+pub fn print_global(g: &Global) -> String {
+    let init = match (&g.init, g.uninit) {
+        (_, true) => "uninit".to_string(),
+        (Some(bytes), false) => format!("init({} bytes)", bytes.len()),
+        (None, false) => "zeroinit".to_string(),
+    };
+    format!(
+        "{}global @{} : [{} x i8] addrspace({}) align {} {}",
+        linkage_str(g.linkage),
+        g.name,
+        g.size,
+        g.space,
+        g.align,
+        init
+    )
+}
+
+/// Print one function.
+pub fn print_function(f: &Function) -> String {
+    let mut out = String::new();
+    let kind = if f.is_kernel { "kernel " } else { "" };
+    let inline = match f.inline {
+        InlineHint::Default => "",
+        InlineHint::Always => "alwaysinline ",
+        InlineHint::Never => "noinline ",
+    };
+    let mut sig = String::new();
+    for i in 0..f.num_params {
+        if i > 0 {
+            sig.push_str(", ");
+        }
+        let _ = write!(sig, "%r{}: {}", i, f.regs[i as usize]);
+    }
+    let ret = f.ret.map(|t| format!(" -> {t}")).unwrap_or_default();
+    let _ = writeln!(
+        out,
+        "define {}{}{}@{}({}){} {{",
+        linkage_str(f.linkage),
+        inline,
+        kind,
+        f.name,
+        sig,
+        ret
+    );
+    for s in &f.body {
+        print_stmt(&mut out, s, 1);
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn print_stmt(out: &mut String, s: &Stmt, depth: usize) {
+    let pad = "  ".repeat(depth);
+    match s {
+        Stmt::Inst(i) => {
+            let _ = writeln!(out, "{pad}{i}");
+        }
+        Stmt::If { cond, then_, else_ } => {
+            let _ = writeln!(out, "{pad}if {cond} {{");
+            for t in then_ {
+                print_stmt(out, t, depth + 1);
+            }
+            if else_.is_empty() {
+                let _ = writeln!(out, "{pad}}}");
+            } else {
+                let _ = writeln!(out, "{pad}}} else {{");
+                for e in else_ {
+                    print_stmt(out, e, depth + 1);
+                }
+                let _ = writeln!(out, "{pad}}}");
+            }
+        }
+        Stmt::Loop { body } => {
+            let _ = writeln!(out, "{pad}loop {{");
+            for b in body {
+                print_stmt(out, b, depth + 1);
+            }
+            let _ = writeln!(out, "{pad}}}");
+        }
+        Stmt::Break => {
+            let _ = writeln!(out, "{pad}break");
+        }
+        Stmt::Continue => {
+            let _ = writeln!(out, "{pad}continue");
+        }
+        Stmt::Return(None) => {
+            let _ = writeln!(out, "{pad}return");
+        }
+        Stmt::Return(Some(v)) => {
+            let _ = writeln!(out, "{pad}return {v}");
+        }
+    }
+}
+
+/// A structural diff of two printed modules, reported as the §4.1 harness
+/// needs it: lines only in `a`, lines only in `b`, classified.
+#[derive(Debug, Default)]
+pub struct TextDiff {
+    /// Lines unique to the first module.
+    pub only_a: Vec<String>,
+    /// Lines unique to the second module.
+    pub only_b: Vec<String>,
+}
+
+impl TextDiff {
+    /// True when the printed forms are identical.
+    pub fn identical(&self) -> bool {
+        self.only_a.is_empty() && self.only_b.is_empty()
+    }
+
+    /// True when every differing line is "semantically unimportant" in the
+    /// paper's sense: metadata/comments, or symbol-name lines that match
+    /// after demangling (variant suffixes / target suffixes stripped).
+    pub fn only_metadata_and_mangling(&self) -> bool {
+        let norm = |l: &String| normalize_line(l);
+        let a: Vec<Option<String>> = self.only_a.iter().map(norm).collect();
+        let b: Vec<Option<String>> = self.only_b.iter().map(norm).collect();
+        // Every surviving normalized line from one side must appear on the
+        // other (ordering from inlining is also tolerated, per the paper).
+        let a_set: std::collections::BTreeSet<_> = a.iter().flatten().cloned().collect();
+        let b_set: std::collections::BTreeSet<_> = b.iter().flatten().cloned().collect();
+        a_set == b_set
+    }
+}
+
+/// Strip metadata lines entirely (→ None) and demangle symbol suffixes so
+/// that `__kmpc_atomic_add$nvptx` and `__kmpc_atomic_add.ompvariant.arch_nvptx64`
+/// normalize to the same text.
+pub fn normalize_line(line: &str) -> Option<String> {
+    let t = line.trim();
+    if t.starts_with(';') {
+        return None; // comments / metadata
+    }
+    Some(demangle(t))
+}
+
+/// Remove the two mangling schemes the two runtime builds use.
+pub fn demangle(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(pos) = rest.find('@') {
+        out.push_str(&rest[..=pos]);
+        rest = &rest[pos + 1..];
+        let end = rest
+            .find(|c: char| !(c.is_alphanumeric() || c == '_' || c == '.' || c == '$'))
+            .unwrap_or(rest.len());
+        let sym = &rest[..end];
+        out.push_str(&demangle_symbol(sym));
+        rest = &rest[end..];
+    }
+    out.push_str(rest);
+    out
+}
+
+/// Strip `$target` (legacy macro-build mangling) and `.ompvariant.<ctx>`
+/// (portable variant mangling) suffixes from one symbol.
+pub fn demangle_symbol(sym: &str) -> String {
+    let s = match sym.find(".ompvariant.") {
+        Some(i) => &sym[..i],
+        None => sym,
+    };
+    match s.find('$') {
+        Some(i) => s[..i].to_string(),
+        None => s.to_string(),
+    }
+}
+
+/// Line-multiset diff of two printed modules.
+pub fn diff_text(a: &str, b: &str) -> TextDiff {
+    use std::collections::BTreeMap;
+    let mut counts: BTreeMap<&str, i64> = BTreeMap::new();
+    for l in a.lines() {
+        *counts.entry(l).or_insert(0) += 1;
+    }
+    for l in b.lines() {
+        *counts.entry(l).or_insert(0) -= 1;
+    }
+    let mut d = TextDiff::default();
+    for (l, c) in counts {
+        if c > 0 {
+            for _ in 0..c {
+                d.only_a.push(l.to_string());
+            }
+        } else if c < 0 {
+            for _ in 0..-c {
+                d.only_b.push(l.to_string());
+            }
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FunctionBuilder;
+    use crate::ir::types::{Operand, Type};
+
+    fn sample_module(meta: &str, sym: &str) -> Module {
+        let mut m = Module::new("t");
+        m.meta.insert("producer".into(), meta.into());
+        let mut b = FunctionBuilder::new(sym, &[Type::I32], Some(Type::I32));
+        let p = b.param(0);
+        let v = b.add(p, Operand::i32(1));
+        b.ret_val(v);
+        m.add_func(b.build());
+        m
+    }
+
+    #[test]
+    fn print_is_deterministic() {
+        let m = sample_module("x", "f");
+        assert_eq!(print_module(&m), print_module(&m));
+    }
+
+    #[test]
+    fn identical_modules_have_empty_diff() {
+        let a = sample_module("x", "f");
+        let d = diff_text(&print_module(&a), &print_module(&a));
+        assert!(d.identical());
+    }
+
+    #[test]
+    fn metadata_only_diff_is_tolerated() {
+        let a = sample_module("legacy build", "f");
+        let b = sample_module("portable build", "f");
+        let d = diff_text(&print_module(&a), &print_module(&b));
+        assert!(!d.identical());
+        assert!(d.only_metadata_and_mangling());
+    }
+
+    #[test]
+    fn mangling_diff_is_tolerated() {
+        let a = sample_module("p", "__kmpc_atomic_add$nvptx");
+        let b = sample_module("p", "__kmpc_atomic_add.ompvariant.arch_nvptx64");
+        let d = diff_text(&print_module(&a), &print_module(&b));
+        assert!(!d.identical());
+        assert!(d.only_metadata_and_mangling(), "{d:?}");
+    }
+
+    #[test]
+    fn semantic_diff_is_not_tolerated() {
+        let mut a = sample_module("p", "f");
+        let b = sample_module("p", "f");
+        // change a constant in `a`
+        let f = a.funcs.get_mut("f").unwrap();
+        f.body[0] = crate::ir::Stmt::Inst(crate::ir::Inst::Bin {
+            op: crate::ir::BinOp::Add,
+            dst: crate::ir::Reg(1),
+            a: Operand::Reg(crate::ir::Reg(0)),
+            b: Operand::i32(2),
+        });
+        let d = diff_text(&print_module(&a), &print_module(&b));
+        assert!(!d.identical());
+        assert!(!d.only_metadata_and_mangling());
+    }
+
+    #[test]
+    fn demangle_symbol_variants() {
+        assert_eq!(demangle_symbol("f$amdgcn"), "f");
+        assert_eq!(demangle_symbol("f.ompvariant.arch_nvptx64"), "f");
+        assert_eq!(demangle_symbol("plain"), "plain");
+    }
+}

@@ -1,0 +1,242 @@
+//! Scalar types, constants, registers and operands of the device IR.
+
+use std::fmt;
+
+/// Scalar value types. Pointers are represented as `I64` byte addresses;
+/// the address space is a property of the memory *operation* (as on GPUs,
+//  where the same integer may address global or shared storage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Type {
+    /// 1-bit boolean.
+    I1,
+    /// 32-bit integer (signedness is per-operation).
+    I32,
+    /// 64-bit integer (also used for addresses).
+    I64,
+    /// IEEE-754 single.
+    F32,
+    /// IEEE-754 double.
+    F64,
+}
+
+impl Type {
+    /// Byte width of the type in device memory.
+    pub fn size(self) -> u64 {
+        match self {
+            Type::I1 => 1,
+            Type::I32 | Type::F32 => 4,
+            Type::I64 | Type::F64 => 8,
+        }
+    }
+
+    /// True for the two float types.
+    pub fn is_float(self) -> bool {
+        matches!(self, Type::F32 | Type::F64)
+    }
+
+    /// True for the integer types (including i1).
+    pub fn is_int(self) -> bool {
+        !self.is_float()
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Type::I1 => "i1",
+            Type::I32 => "i32",
+            Type::I64 => "i64",
+            Type::F32 => "f32",
+            Type::F64 => "f64",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Memory address spaces of the simulated device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrSpace {
+    /// Device global memory (visible to all blocks, atomics live here).
+    Global,
+    /// Per-block shared memory (CUDA `__shared__` / the paper's
+    /// `omp_cgroup_mem_alloc` allocator target).
+    Shared,
+}
+
+impl fmt::Display for AddrSpace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            AddrSpace::Global => "global",
+            AddrSpace::Shared => "shared",
+        })
+    }
+}
+
+/// A virtual register id, local to a [`crate::ir::Function`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub u32);
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%r{}", self.0)
+    }
+}
+
+/// Compile-time constant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Const {
+    I1(bool),
+    I32(i32),
+    I64(i64),
+    F32(f32),
+    F64(f64),
+}
+
+impl Const {
+    /// Type of the constant.
+    pub fn ty(self) -> Type {
+        match self {
+            Const::I1(_) => Type::I1,
+            Const::I32(_) => Type::I32,
+            Const::I64(_) => Type::I64,
+            Const::F32(_) => Type::F32,
+            Const::F64(_) => Type::F64,
+        }
+    }
+
+    /// Raw 64-bit encoding, as stored in interpreter lanes.
+    pub fn to_bits(self) -> u64 {
+        match self {
+            Const::I1(b) => b as u64,
+            Const::I32(v) => v as u32 as u64,
+            Const::I64(v) => v as u64,
+            Const::F32(v) => v.to_bits() as u64,
+            Const::F64(v) => v.to_bits(),
+        }
+    }
+
+    /// Decode from raw bits for a given type.
+    pub fn from_bits(ty: Type, bits: u64) -> Const {
+        match ty {
+            Type::I1 => Const::I1(bits & 1 != 0),
+            Type::I32 => Const::I32(bits as u32 as i32),
+            Type::I64 => Const::I64(bits as i64),
+            Type::F32 => Const::F32(f32::from_bits(bits as u32)),
+            Type::F64 => Const::F64(f64::from_bits(bits)),
+        }
+    }
+}
+
+impl fmt::Display for Const {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Const::I1(b) => write!(f, "{b}"),
+            Const::I32(v) => write!(f, "{v}"),
+            Const::I64(v) => write!(f, "{v}"),
+            // `{:?}` keeps a trailing `.0` so floats stay floats in text.
+            Const::F32(v) => write!(f, "{v:?}"),
+            Const::F64(v) => write!(f, "{v:?}"),
+        }
+    }
+}
+
+/// Instruction operand: a register or an immediate constant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Operand {
+    Reg(Reg),
+    Const(Const),
+}
+
+impl Operand {
+    /// Immediate i32.
+    pub fn i32(v: i32) -> Self {
+        Operand::Const(Const::I32(v))
+    }
+    /// Immediate i64.
+    pub fn i64(v: i64) -> Self {
+        Operand::Const(Const::I64(v))
+    }
+    /// Immediate f32.
+    pub fn f32(v: f32) -> Self {
+        Operand::Const(Const::F32(v))
+    }
+    /// Immediate f64.
+    pub fn f64(v: f64) -> Self {
+        Operand::Const(Const::F64(v))
+    }
+    /// Immediate bool.
+    pub fn bool(v: bool) -> Self {
+        Operand::Const(Const::I1(v))
+    }
+
+    /// The register, if this operand is one.
+    pub fn as_reg(self) -> Option<Reg> {
+        match self {
+            Operand::Reg(r) => Some(r),
+            Operand::Const(_) => None,
+        }
+    }
+
+    /// The constant, if this operand is one.
+    pub fn as_const(self) -> Option<Const> {
+        match self {
+            Operand::Const(c) => Some(c),
+            Operand::Reg(_) => None,
+        }
+    }
+}
+
+impl fmt::Display for Operand {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Operand::Reg(r) => write!(f, "{r}"),
+            Operand::Const(c) => write!(f, "{c}"),
+        }
+    }
+}
+
+impl From<Reg> for Operand {
+    fn from(r: Reg) -> Self {
+        Operand::Reg(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_sizes() {
+        assert_eq!(Type::I1.size(), 1);
+        assert_eq!(Type::I32.size(), 4);
+        assert_eq!(Type::F32.size(), 4);
+        assert_eq!(Type::I64.size(), 8);
+        assert_eq!(Type::F64.size(), 8);
+    }
+
+    #[test]
+    fn const_bits_roundtrip() {
+        for c in [
+            Const::I1(true),
+            Const::I32(-7),
+            Const::I64(i64::MIN),
+            Const::F32(3.25),
+            Const::F64(-0.0),
+        ] {
+            let back = Const::from_bits(c.ty(), c.to_bits());
+            assert_eq!(format!("{c}"), format!("{back}"));
+        }
+    }
+
+    #[test]
+    fn negative_i32_encodes_zero_extended_over_32_bits() {
+        // i32 lanes must not leak sign bits into the upper half.
+        assert_eq!(Const::I32(-1).to_bits(), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn float_display_keeps_decimal_point() {
+        assert_eq!(Const::F32(2.0).to_string(), "2.0");
+        assert_eq!(Const::F64(-1.5).to_string(), "-1.5");
+    }
+}

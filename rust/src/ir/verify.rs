@@ -1,0 +1,365 @@
+//! Module verifier: structural and type checks run before a module is
+//! accepted by the loader (and after every pass in debug builds).
+
+use super::inst::{BinOp, CastOp, Inst, Stmt, UnOp};
+use super::module::{Function, Module};
+use super::types::{AddrSpace, Operand, Reg, Type};
+use crate::util::Error;
+
+/// Verify a whole module.
+pub fn verify_module(m: &Module) -> Result<(), Error> {
+    for g in m.globals.values() {
+        if g.align == 0 || !g.align.is_power_of_two() {
+            return Err(Error::Ir(format!("global @{}: alignment {} not a power of two", g.name, g.align)));
+        }
+        if let Some(init) = &g.init {
+            if init.len() as u64 != g.size {
+                return Err(Error::Ir(format!(
+                    "global @{}: initializer is {} bytes but size is {}",
+                    g.name,
+                    init.len(),
+                    g.size
+                )));
+            }
+            if g.space == AddrSpace::Shared {
+                return Err(Error::Ir(format!(
+                    "global @{}: shared-space globals cannot carry initializers \
+                     (use `uninit` — the loader_uninitialized model)",
+                    g.name
+                )));
+            }
+        }
+        if g.space == AddrSpace::Shared && !g.uninit {
+            return Err(Error::Ir(format!(
+                "global @{}: shared-space global must be marked uninit \
+                 (default-initialized team-shared globals are unsupported, §3.1)",
+                g.name
+            )));
+        }
+    }
+    for f in m.funcs.values() {
+        verify_function(f).map_err(|e| match e {
+            Error::Ir(msg) => Error::Ir(format!("in @{}: {msg}", f.name)),
+            other => other,
+        })?;
+    }
+    Ok(())
+}
+
+/// Verify one function.
+pub fn verify_function(f: &Function) -> Result<(), Error> {
+    if (f.num_params as usize) > f.regs.len() {
+        return Err(Error::Ir(format!(
+            "num_params {} exceeds register count {}",
+            f.num_params,
+            f.regs.len()
+        )));
+    }
+    let cx = Cx { f };
+    cx.check_block(&f.body, 0)?;
+    // A value-returning function must not fall off the end.
+    if f.ret.is_some() && !always_returns(&f.body) {
+        return Err(Error::Ir("value-returning function may fall off the end".into()));
+    }
+    Ok(())
+}
+
+/// Conservative "all paths return" check.
+fn always_returns(body: &[Stmt]) -> bool {
+    for s in body {
+        match s {
+            Stmt::Return(_) => return true,
+            Stmt::If { then_, else_, .. } => {
+                if always_returns(then_) && always_returns(else_) {
+                    return true;
+                }
+            }
+            // A loop with no break must exit via return; treat a loop whose
+            // body contains no Break at its own nesting level as terminal
+            // if it contains a Return anywhere.
+            Stmt::Loop { body: lb } => {
+                if !has_break_at_level(lb) && contains_return(lb) {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+fn has_break_at_level(body: &[Stmt]) -> bool {
+    body.iter().any(|s| match s {
+        Stmt::Break => true,
+        Stmt::If { then_, else_, .. } => has_break_at_level(then_) || has_break_at_level(else_),
+        // Breaks inside nested loops bind to the inner loop.
+        Stmt::Loop { .. } => false,
+        _ => false,
+    })
+}
+
+fn contains_return(body: &[Stmt]) -> bool {
+    body.iter().any(|s| match s {
+        Stmt::Return(_) => true,
+        Stmt::If { then_, else_, .. } => contains_return(then_) || contains_return(else_),
+        Stmt::Loop { body } => contains_return(body),
+        _ => false,
+    })
+}
+
+struct Cx<'a> {
+    f: &'a Function,
+}
+
+impl<'a> Cx<'a> {
+    fn reg_ty(&self, r: Reg) -> Result<Type, Error> {
+        self.f
+            .regs
+            .get(r.0 as usize)
+            .copied()
+            .ok_or_else(|| Error::Ir(format!("register {r} out of range")))
+    }
+
+    fn op_ty(&self, o: Operand) -> Result<Type, Error> {
+        match o {
+            Operand::Reg(r) => self.reg_ty(r),
+            Operand::Const(c) => Ok(c.ty()),
+        }
+    }
+
+    fn check_block(&self, body: &[Stmt], loop_depth: u32) -> Result<(), Error> {
+        for s in body {
+            self.check_stmt(s, loop_depth)?;
+        }
+        Ok(())
+    }
+
+    fn check_stmt(&self, s: &Stmt, loop_depth: u32) -> Result<(), Error> {
+        match s {
+            Stmt::Inst(i) => self.check_inst(i),
+            Stmt::If { cond, then_, else_ } => {
+                if self.op_ty(*cond)? != Type::I1 {
+                    return Err(Error::Ir(format!("if condition {cond} is not i1")));
+                }
+                self.check_block(then_, loop_depth)?;
+                self.check_block(else_, loop_depth)
+            }
+            Stmt::Loop { body } => self.check_block(body, loop_depth + 1),
+            Stmt::Break | Stmt::Continue => {
+                if loop_depth == 0 {
+                    return Err(Error::Ir("break/continue outside of a loop".into()));
+                }
+                Ok(())
+            }
+            Stmt::Return(v) => match (v, self.f.ret) {
+                (None, None) => Ok(()),
+                (Some(v), Some(rt)) => {
+                    let vt = self.op_ty(*v)?;
+                    if vt != rt {
+                        return Err(Error::Ir(format!("return type {vt} != declared {rt}")));
+                    }
+                    Ok(())
+                }
+                (None, Some(_)) => Err(Error::Ir("missing return value".into())),
+                (Some(_), None) => Err(Error::Ir("void function returns a value".into())),
+            },
+        }
+    }
+
+    fn check_inst(&self, i: &Inst) -> Result<(), Error> {
+        // Register ranges for everything first.
+        if let Some(d) = i.dst() {
+            self.reg_ty(d)?;
+        }
+        for o in i.operands() {
+            self.op_ty(o)?;
+        }
+        match i {
+            Inst::Bin { op, dst, a, b } => {
+                let (td, ta, tb) = (self.reg_ty(*dst)?, self.op_ty(*a)?, self.op_ty(*b)?);
+                if ta != td || tb != td {
+                    return Err(Error::Ir(format!("bin {i}: operand/dst type mismatch")));
+                }
+                let float_only = matches!(op, BinOp::FDiv | BinOp::FMin | BinOp::FMax);
+                let int_only = !float_only
+                    && !matches!(op, BinOp::Add | BinOp::Sub | BinOp::Mul);
+                if float_only && !td.is_float() {
+                    return Err(Error::Ir(format!("bin {i}: float op on {td}")));
+                }
+                if int_only && !td.is_int() {
+                    return Err(Error::Ir(format!("bin {i}: int op on {td}")));
+                }
+            }
+            Inst::Un { op, dst, a } => {
+                let (td, ta) = (self.reg_ty(*dst)?, self.op_ty(*a)?);
+                if ta != td {
+                    return Err(Error::Ir(format!("un {i}: operand/dst type mismatch")));
+                }
+                let float_only = !matches!(op, UnOp::Neg | UnOp::Not);
+                if float_only && !td.is_float() {
+                    return Err(Error::Ir(format!("un {i}: float op on {td}")));
+                }
+                if matches!(op, UnOp::Not) && !td.is_int() {
+                    return Err(Error::Ir(format!("un {i}: not on {td}")));
+                }
+            }
+            Inst::Cmp { dst, a, b, .. } => {
+                if self.reg_ty(*dst)? != Type::I1 {
+                    return Err(Error::Ir(format!("cmp {i}: dst must be i1")));
+                }
+                if self.op_ty(*a)? != self.op_ty(*b)? {
+                    return Err(Error::Ir(format!("cmp {i}: operand types differ")));
+                }
+            }
+            Inst::Select { dst, cond, a, b } => {
+                if self.op_ty(*cond)? != Type::I1 {
+                    return Err(Error::Ir(format!("select {i}: cond must be i1")));
+                }
+                let td = self.reg_ty(*dst)?;
+                if self.op_ty(*a)? != td || self.op_ty(*b)? != td {
+                    return Err(Error::Ir(format!("select {i}: arm/dst type mismatch")));
+                }
+            }
+            Inst::Cast { op, dst, src } => {
+                let (td, ts) = (self.reg_ty(*dst)?, self.op_ty(*src)?);
+                let ok = match op {
+                    CastOp::SExt | CastOp::ZExt => ts.is_int() && td.is_int() && td.size() >= ts.size(),
+                    CastOp::Trunc => ts.is_int() && td.is_int() && td.size() <= ts.size(),
+                    CastOp::SIToFP => ts.is_int() && td.is_float(),
+                    CastOp::FPToSI => ts.is_float() && td.is_int(),
+                    CastOp::FPExt => ts == Type::F32 && td == Type::F64,
+                    CastOp::FPTrunc => ts == Type::F64 && td == Type::F32,
+                    CastOp::Bitcast => ts.size() == td.size(),
+                };
+                if !ok {
+                    return Err(Error::Ir(format!("cast {i}: invalid {ts} -> {td}")));
+                }
+            }
+            Inst::Copy { dst, src } => {
+                if self.reg_ty(*dst)? != self.op_ty(*src)? {
+                    return Err(Error::Ir(format!("copy {i}: type mismatch")));
+                }
+            }
+            Inst::Load { ty, dst, addr, .. } => {
+                if self.reg_ty(*dst)? != *ty {
+                    return Err(Error::Ir(format!("load {i}: dst type != load type")));
+                }
+                if self.op_ty(*addr)? != Type::I64 {
+                    return Err(Error::Ir(format!("load {i}: address must be i64")));
+                }
+            }
+            Inst::Store { addr, val, ty, .. } => {
+                if self.op_ty(*addr)? != Type::I64 {
+                    return Err(Error::Ir(format!("store {i}: address must be i64")));
+                }
+                if self.op_ty(*val)? != *ty {
+                    return Err(Error::Ir(format!("store {i}: value type != store type")));
+                }
+            }
+            Inst::GlobalAddr { dst, .. } => {
+                if self.reg_ty(*dst)? != Type::I64 {
+                    return Err(Error::Ir(format!("addr_of {i}: dst must be i64")));
+                }
+            }
+            Inst::CallIndirect { fn_id, .. } => {
+                if self.op_ty(*fn_id)? != Type::I64 {
+                    return Err(Error::Ir(format!("call_indirect {i}: fn id must be i64")));
+                }
+            }
+            Inst::Call { .. } | Inst::Trap { .. } => {}
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FunctionBuilder;
+    use crate::ir::module::{Global, Linkage};
+    use crate::ir::types::Operand;
+
+    #[test]
+    fn valid_function_passes() {
+        let mut b = FunctionBuilder::new("f", &[Type::I32], Some(Type::I32));
+        let p = b.param(0);
+        let v = b.add(p, Operand::i32(1));
+        b.ret_val(v);
+        assert!(verify_function(&b.build()).is_ok());
+    }
+
+    #[test]
+    fn type_mismatch_is_rejected() {
+        let mut b = FunctionBuilder::new("f", &[Type::I32], None);
+        let p = b.param(0);
+        // Manually construct a bad add: i32 + f32.
+        let dst = b.new_reg(Type::I32);
+        b.inst(Inst::Bin { op: BinOp::Add, dst, a: Operand::Reg(p), b: Operand::f32(1.0) });
+        b.ret();
+        assert!(verify_function(&b.build()).is_err());
+    }
+
+    #[test]
+    fn break_outside_loop_is_rejected() {
+        let mut b = FunctionBuilder::new("f", &[], None);
+        b.break_();
+        b.ret();
+        assert!(verify_function(&b.build()).is_err());
+    }
+
+    #[test]
+    fn fallthrough_of_value_function_is_rejected() {
+        let mut b = FunctionBuilder::new("f", &[], Some(Type::I32));
+        b.copy(Operand::i32(1));
+        // no return
+        let f = b.build();
+        assert!(verify_function(&f).is_err());
+    }
+
+    #[test]
+    fn branch_covered_returns_pass() {
+        let mut b = FunctionBuilder::new("f", &[Type::I1], Some(Type::I32));
+        let p = b.param(0);
+        b.if_else(p, |b| b.ret_val(Operand::i32(1)), |b| b.ret_val(Operand::i32(2)));
+        assert!(verify_function(&b.build()).is_ok());
+    }
+
+    #[test]
+    fn shared_global_must_be_uninit() {
+        let mut m = Module::new("t");
+        m.add_global(Global {
+            name: "s".into(),
+            space: AddrSpace::Shared,
+            size: 4,
+            align: 4,
+            init: None,
+            uninit: false,
+            linkage: Linkage::Internal,
+        });
+        assert!(verify_module(&m).is_err());
+    }
+
+    #[test]
+    fn initializer_size_checked() {
+        let mut m = Module::new("t");
+        m.add_global(Global {
+            name: "g".into(),
+            space: AddrSpace::Global,
+            size: 8,
+            align: 8,
+            init: Some(vec![0; 4]),
+            uninit: false,
+            linkage: Linkage::External,
+        });
+        assert!(verify_module(&m).is_err());
+    }
+
+    #[test]
+    fn loop_with_unconditional_return_counts_as_returning() {
+        let mut b = FunctionBuilder::new("f", &[], Some(Type::I32));
+        b.loop_(|b| {
+            b.ret_val(Operand::i32(7));
+        });
+        assert!(verify_function(&b.build()).is_ok());
+    }
+}

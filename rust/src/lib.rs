@@ -1,0 +1,48 @@
+//! # omprt — a portable GPU device runtime, reproduced from
+//! *"Experience Report: Writing A Portable GPU Runtime with OpenMP 5.1"*
+//! (Tian, Chesterfield, Doerfert, Chapman — IWOMP 2021).
+//!
+//! The crate contains, bottom-up:
+//!
+//! * [`util`] — error type, deterministic PRNG, statistics, an in-house
+//!   property-testing helper (the offline crate set has no `proptest`).
+//! * [`ir`] — a small SSA device IR with a textual form: the analog of the
+//!   LLVM bitcode (`dev.rtl.bc`) the paper links into application kernels,
+//!   plus inline/DCE/const-fold passes and a linker.
+//! * [`sim`] — `gpusim`, a warp-lockstep SIMT simulator with two targets,
+//!   `nvptx64-sim` (warp = 32) and `amdgcn-sim` (wavefront = 64): the
+//!   stand-in for the V100/MI100 GPUs the paper ran on.
+//! * [`devrt`] — **the paper's contribution**: the OpenMP *device* runtime.
+//!   Two interchangeable implementations: `legacy` (CUDA/HIP-style, one
+//!   hand-specialized copy per target, macro glue) and `portable`
+//!   (one common part + a `declare variant` dispatch engine and OpenMP 5.1
+//!   `atomic compare capture` constructions).
+//! * [`hostrt`] — the host-side offloading runtime (`__tgt_target` analog):
+//!   offload-entry registry, device data environment with mapping
+//!   semantics (`to`/`from`/`tofrom`/`alloc`/`delete` + reference counts),
+//!   host fallback.
+//! * [`runtime`] — the PJRT bridge: loads AOT-compiled HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them on the CPU
+//!   PJRT client. Python never runs on the request path.
+//! * [`coordinator`] — launch pipeline, the `nvprof`-analog region
+//!   profiler, metrics.
+//! * [`benchmarks`] — the SPEC ACCEL analogs (postencil, polbm, pomriq,
+//!   pep, pcg, pbt) and the miniQMC proxy app with its two target regions
+//!   (`evaluate_vgh`, `evaluateDetRatios`).
+//! * [`conformance`] — the SOLLVE-V&V-analog functional test suite.
+//! * [`config`] / [`cli`] — a mini-TOML config system and the CLI.
+
+pub mod benchmarks;
+pub mod cli;
+pub mod conformance;
+pub mod config;
+pub mod coordinator;
+pub mod devrt;
+pub mod hostrt;
+pub mod ir;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, util::Error>;

@@ -1,0 +1,4 @@
+//! `omprt` binary entry point.
+fn main() {
+    std::process::exit(omprt::cli::main_entry());
+}

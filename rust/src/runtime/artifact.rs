@@ -1,0 +1,138 @@
+//! AOT artifact manifest.
+//!
+//! `make artifacts` runs `python/compile/aot.py`, which lowers each L2
+//! JAX function (calling the L1 Pallas kernels) to **HLO text** and
+//! writes `artifacts/manifest.toml` describing every artifact: file,
+//! input shapes, output shape. This module parses that manifest; the
+//! [`super::pjrt::PjrtService`] compiles the files on load.
+
+use crate::config::{Config, Value};
+use crate::util::Error;
+use std::path::{Path, PathBuf};
+
+/// One compiled computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    /// Payload name (kernels call `payload.<name>`).
+    pub name: String,
+    /// HLO text file, relative to the manifest.
+    pub file: PathBuf,
+    /// Input tensor shapes (f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output tensor shape (f32).
+    pub output: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    /// Elements of input `i`.
+    pub fn input_elems(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+
+    /// Elements of the output.
+    pub fn output_elems(&self) -> usize {
+        self.output.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    /// Directory the manifest lives in (file paths resolve against it).
+    pub dir: PathBuf,
+    /// Artifacts by name.
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `dir/manifest.toml`.
+    pub fn load(dir: &Path) -> Result<Self, Error> {
+        let cfg = Config::load(&dir.join("manifest.toml"))?;
+        Self::from_config(dir, &cfg)
+    }
+
+    /// Parse from an already-loaded config document.
+    pub fn from_config(dir: &Path, cfg: &Config) -> Result<Self, Error> {
+        let mut specs = vec![];
+        for (name, sec) in &cfg.sections {
+            let file = sec
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| Error::Config(format!("[{name}] missing `file`")))?;
+            let parse_shape = |s: &str| -> Result<Vec<usize>, Error> {
+                s.split('x')
+                    .map(|d| {
+                        d.trim()
+                            .parse::<usize>()
+                            .map_err(|e| Error::Config(format!("[{name}] bad shape `{s}`: {e}")))
+                    })
+                    .collect()
+            };
+            let inputs = sec
+                .get("inputs")
+                .and_then(Value::as_str_list)
+                .ok_or_else(|| Error::Config(format!("[{name}] missing `inputs`")))?
+                .iter()
+                .map(|s| parse_shape(s))
+                .collect::<Result<Vec<_>, _>>()?;
+            let output = parse_shape(
+                sec.get("output")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| Error::Config(format!("[{name}] missing `output`")))?,
+            )?;
+            specs.push(ArtifactSpec { name: name.clone(), file: dir.join(file), inputs, output });
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), specs })
+    }
+
+    /// Look up by name.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+}
+
+/// Default artifacts directory (workspace-relative, overridable via
+/// `OMPRT_ARTIFACTS`).
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("OMPRT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"
+        [stencil_tile]
+        file = "stencil_tile.hlo.txt"
+        inputs = ["34x34"]
+        output = "32x32"
+
+        [detratio]
+        file = "detratio.hlo.txt"
+        inputs = ["16x64", "64"]
+        output = "16"
+    "#;
+
+    #[test]
+    fn parses_specs_and_shapes() {
+        let cfg = Config::parse(MANIFEST).unwrap();
+        let m = ArtifactManifest::from_config(Path::new("/tmp/a"), &cfg).unwrap();
+        assert_eq!(m.specs.len(), 2);
+        let s = m.spec("stencil_tile").unwrap();
+        assert_eq!(s.inputs, vec![vec![34, 34]]);
+        assert_eq!(s.output_elems(), 32 * 32);
+        assert!(s.file.starts_with("/tmp/a"));
+        let d = m.spec("detratio").unwrap();
+        assert_eq!(d.inputs.len(), 2);
+        assert_eq!(d.input_elems(1), 64);
+        assert_eq!(d.output, vec![16]);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let cfg = Config::parse("[x]\nfile = \"f\"").unwrap();
+        assert!(ArtifactManifest::from_config(Path::new("."), &cfg).is_err());
+    }
+}

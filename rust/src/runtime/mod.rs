@@ -1,0 +1,17 @@
+//! The PJRT bridge — loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` (JAX / Pallas, build time only) and executes
+//! them from the Rust request path.
+//!
+//! The `xla` crate's client types are `Rc`-based (`!Send`), so a single
+//! dedicated **service thread** owns the `PjRtClient` and every compiled
+//! executable; the rest of the system (including warp threads hitting
+//! `payload.*` call sites) talks to it through channels. This serializes
+//! payload launches, which is also the honest model of one device stream.
+
+pub mod artifact;
+pub mod payload;
+pub mod pjrt;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec};
+pub use payload::install_payloads;
+pub use pjrt::PjrtService;

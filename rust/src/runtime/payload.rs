@@ -1,0 +1,95 @@
+//! `payload.*` bindings: the bridge from device IR call sites to the
+//! PJRT-compiled artifacts.
+//!
+//! Calling convention (fixed, documented in DESIGN.md §6): a kernel calls
+//!
+//! ```text
+//! call @payload.<name>(out_addr, in0_addr, in1_addr, …)
+//! ```
+//!
+//! with warp-uniform global-memory addresses. The binding gathers the f32
+//! input tensors from device global memory, executes the artifact on the
+//! PJRT service thread, and scatters the f32 result to `out_addr`. This
+//! plays the role of the per-target PTX/GCN code the vendor compilers
+//! produced in the paper's pipeline — one compiled artifact per target
+//! variant, selected at load time.
+
+use super::artifact::ArtifactManifest;
+use super::pjrt::PjrtService;
+use crate::sim::Bindings;
+use crate::util::Error;
+use std::sync::Arc;
+
+/// Read an f32 tensor from device global memory.
+fn gather_f32(
+    gmem: &crate::sim::memory::MemRegion,
+    addr: u64,
+    elems: usize,
+) -> Result<Vec<f32>, Error> {
+    let mut bytes = vec![0u8; elems * 4];
+    gmem.read_bytes(addr, &mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Write an f32 tensor to device global memory.
+fn scatter_f32(
+    gmem: &crate::sim::memory::MemRegion,
+    addr: u64,
+    data: &[f32],
+) -> Result<(), Error> {
+    let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+    gmem.write_bytes(addr, &bytes)
+}
+
+/// Compile every artifact in `manifest` and install one binding per
+/// payload.
+pub fn install_payloads(
+    bindings: &mut Bindings,
+    svc: &PjrtService,
+    manifest: &ArtifactManifest,
+) -> Result<(), Error> {
+    for spec in &manifest.specs {
+        svc.load(spec)?;
+        let spec = spec.clone();
+        let svc = svc.clone();
+        bindings.bind(
+            format!("payload.{}", spec.name),
+            Arc::new(move |env, args, mask| {
+                let first = mask.trailing_zeros() as usize;
+                let expected = 1 + spec.inputs.len();
+                if args.len() != expected {
+                    return Err(Error::Pjrt(format!(
+                        "payload.{}: expected {expected} args (out + {} inputs), got {}",
+                        spec.name,
+                        spec.inputs.len(),
+                        args.len()
+                    )));
+                }
+                let out_addr = args[0][first];
+                let mut inputs = Vec::with_capacity(spec.inputs.len());
+                for (i, _) in spec.inputs.iter().enumerate() {
+                    let addr = args[1 + i][first];
+                    inputs.push(gather_f32(env.gmem, addr, spec.input_elems(i))?);
+                }
+                let out = svc.execute(&spec.name, inputs)?;
+                scatter_f32(env.gmem, out_addr, &out)?;
+                Ok(None)
+            }),
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let gmem = crate::sim::GlobalMemory::new(1 << 16);
+        let addr = gmem.alloc(16, 8).unwrap();
+        scatter_f32(&gmem, addr, &[1.0, -2.5, 3.25, 0.0]).unwrap();
+        let v = gather_f32(&gmem, addr, 4).unwrap();
+        assert_eq!(v, vec![1.0, -2.5, 3.25, 0.0]);
+    }
+}

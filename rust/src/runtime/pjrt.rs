@@ -1,0 +1,283 @@
+//! The PJRT service thread.
+//!
+//! Owns the CPU `PjRtClient` and all compiled executables. HLO **text**
+//! is the interchange format: jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use super::artifact::ArtifactSpec;
+use crate::util::Error;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// A request to the service thread.
+enum Request {
+    /// Compile an artifact (idempotent per name).
+    Load { spec: ArtifactSpec, reply: mpsc::Sender<Result<(), String>> },
+    /// Execute a loaded artifact on f32 inputs.
+    Exec { name: String, inputs: Vec<Vec<f32>>, reply: mpsc::Sender<Result<Vec<f32>, String>> },
+    /// Stop the thread.
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the PJRT service.
+#[derive(Clone)]
+pub struct PjrtService {
+    tx: mpsc::Sender<Request>,
+    /// Keep the join handle alive for the process lifetime.
+    _thread: Arc<ServiceThread>,
+}
+
+struct ServiceThread {
+    tx: mpsc::Sender<Request>,
+    handle: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for ServiceThread {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl PjrtService {
+    /// Start the service (one PJRT CPU client).
+    pub fn start() -> Result<Self, Error> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<String, String>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(rx, ready_tx))
+            .map_err(|e| Error::Pjrt(format!("cannot spawn pjrt thread: {e}")))?;
+        match ready_rx.recv() {
+            Ok(Ok(platform)) => {
+                log::info!("pjrt service ready on {platform}");
+            }
+            Ok(Err(e)) => return Err(Error::Pjrt(e)),
+            Err(_) => return Err(Error::Pjrt("pjrt service died during startup".into())),
+        }
+        Ok(PjrtService {
+            tx: tx.clone(),
+            _thread: Arc::new(ServiceThread { tx, handle: std::sync::Mutex::new(Some(handle)) }),
+        })
+    }
+
+    /// Compile an artifact (no-op if already loaded under that name).
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<(), Error> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Load { spec: spec.clone(), reply })
+            .map_err(|_| Error::Pjrt("pjrt service gone".into()))?;
+        rx.recv().map_err(|_| Error::Pjrt("pjrt service gone".into()))?.map_err(Error::Pjrt)
+    }
+
+    /// Execute a loaded artifact.
+    pub fn execute(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<f32>, Error> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec { name: name.to_string(), inputs, reply })
+            .map_err(|_| Error::Pjrt("pjrt service gone".into()))?;
+        rx.recv().map_err(|_| Error::Pjrt("pjrt service gone".into()))?.map_err(Error::Pjrt)
+    }
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+fn service_main(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<String, String>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(c.platform_name()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("PjRtClient::cpu failed: {e}")));
+            return;
+        }
+    };
+    let mut loaded: HashMap<String, Loaded> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Load { spec, reply } => {
+                let r = if loaded.contains_key(&spec.name) {
+                    Ok(())
+                } else {
+                    compile(&client, &spec).map(|exe| {
+                        loaded.insert(spec.name.clone(), Loaded { exe, spec });
+                    })
+                };
+                let _ = reply.send(r);
+            }
+            Request::Exec { name, inputs, reply } => {
+                let r = match loaded.get(&name) {
+                    None => Err(format!("payload `{name}` not loaded")),
+                    Some(l) => execute(l, inputs),
+                };
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn compile(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<xla::PjRtLoadedExecutable, String> {
+    let path = spec
+        .file
+        .to_str()
+        .ok_or_else(|| format!("non-utf8 artifact path {:?}", spec.file))?;
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| format!("parse {path}: {e}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| format!("compile {}: {e}", spec.name))
+}
+
+fn execute(l: &Loaded, inputs: Vec<Vec<f32>>) -> Result<Vec<f32>, String> {
+    if inputs.len() != l.spec.inputs.len() {
+        return Err(format!(
+            "payload `{}`: expected {} inputs, got {}",
+            l.spec.name,
+            l.spec.inputs.len(),
+            inputs.len()
+        ));
+    }
+    let mut literals = Vec::with_capacity(inputs.len());
+    for (i, data) in inputs.iter().enumerate() {
+        let want = l.spec.input_elems(i);
+        if data.len() != want {
+            return Err(format!(
+                "payload `{}` input {i}: expected {want} elems, got {}",
+                l.spec.name,
+                data.len()
+            ));
+        }
+        let shape: Vec<i64> = l.spec.inputs[i].iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(data)
+            .reshape(&shape)
+            .map_err(|e| format!("reshape input {i}: {e}"))?;
+        literals.push(lit);
+    }
+    let result = l
+        .exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| format!("execute {}: {e}", l.spec.name))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| format!("fetch result: {e}"))?;
+    // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+    let out = lit.to_tuple1().map_err(|e| format!("untuple: {e}"))?;
+    let v = out.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))?;
+    if v.len() != l.spec.output_elems() {
+        return Err(format!(
+            "payload `{}`: output has {} elems, manifest says {}",
+            l.spec.name,
+            v.len(),
+            l.spec.output_elems()
+        ));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// HLO text for fn(x, y) = (x·y + 2,) over f32[2,2] — captured from
+    /// the reference round-trip (gen_hlo.py). Lets the PJRT path be
+    /// tested without Python in the loop.
+    const MATMUL_HLO: &str = r#"HloModule xla_computation_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.8 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.4 = f32[] constant(2)
+  broadcast.5 = f32[2,2]{1,0} broadcast(constant.4), dimensions={}
+  add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)
+  ROOT tuple.7 = (f32[2,2]{1,0}) tuple(add.6)
+}
+"#;
+
+    fn write_artifact() -> (tempdir::TempDirGuard, ArtifactSpec) {
+        let dir = tempdir::guard("pjrt_test");
+        let path = dir.path.join("matmul.hlo.txt");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(MATMUL_HLO.as_bytes()).unwrap();
+        let spec = ArtifactSpec {
+            name: "matmul".into(),
+            file: path,
+            inputs: vec![vec![2, 2], vec![2, 2]],
+            output: vec![2, 2],
+        };
+        (dir, spec)
+    }
+
+    /// Minimal tempdir helper (no tempfile crate offline).
+    mod tempdir {
+        pub struct TempDirGuard {
+            pub path: std::path::PathBuf,
+        }
+        impl Drop for TempDirGuard {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.path);
+            }
+        }
+        pub fn guard(tag: &str) -> TempDirGuard {
+            let path = std::env::temp_dir().join(format!(
+                "omprt_{tag}_{}_{:?}",
+                std::process::id(),
+                std::thread::current().id()
+            ));
+            std::fs::create_dir_all(&path).unwrap();
+            TempDirGuard { path }
+        }
+    }
+
+    #[test]
+    fn service_loads_and_executes_hlo_text() {
+        let (_dir, spec) = write_artifact();
+        let svc = PjrtService::start().unwrap();
+        svc.load(&spec).unwrap();
+        // loading twice is fine
+        svc.load(&spec).unwrap();
+        let out = svc
+            .execute("matmul", vec![vec![1., 2., 3., 4.], vec![1., 1., 1., 1.]])
+            .unwrap();
+        assert_eq!(out, vec![5., 5., 9., 9.]);
+    }
+
+    #[test]
+    fn execute_checks_input_arity_and_shape() {
+        let (_dir, spec) = write_artifact();
+        let svc = PjrtService::start().unwrap();
+        svc.load(&spec).unwrap();
+        assert!(svc.execute("matmul", vec![vec![1., 2., 3., 4.]]).is_err());
+        assert!(svc.execute("matmul", vec![vec![1.], vec![1.]]).is_err());
+        assert!(svc.execute("unknown", vec![]).is_err());
+    }
+
+    #[test]
+    fn service_is_usable_from_many_threads() {
+        let (_dir, spec) = write_artifact();
+        let svc = PjrtService::start().unwrap();
+        svc.load(&spec).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let svc = svc.clone();
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        let out = svc
+                            .execute("matmul", vec![vec![1., 0., 0., 1.], vec![1., 2., 3., 4.]])
+                            .unwrap();
+                        assert_eq!(out, vec![3., 4., 5., 6.]);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! Device descriptors for the two simulated targets.
+
+use std::fmt;
+
+/// Simulated device architectures. The two the paper targets, §3: Nvidia
+/// (`nvptx64`) and AMD (`amdgcn`). Warp width is the semantically visible
+/// difference (32 vs 64 — the paper's footnote 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Nvptx64,
+    Amdgcn,
+}
+
+impl Arch {
+    /// Target-triple-ish name used in module headers and variant matching.
+    pub fn name(self) -> &'static str {
+        match self {
+            Arch::Nvptx64 => "nvptx64",
+            Arch::Amdgcn => "amdgcn",
+        }
+    }
+
+    /// Warp (Nvidia) / wavefront (AMD) width in lanes.
+    pub fn warp_width(self) -> u32 {
+        match self {
+            Arch::Nvptx64 => 32,
+            Arch::Amdgcn => 64,
+        }
+    }
+
+    /// All supported architectures.
+    pub fn all() -> [Arch; 2] {
+        [Arch::Nvptx64, Arch::Amdgcn]
+    }
+
+    /// Parse from a name (accepts the paper's `nvptx` alias too).
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s {
+            "nvptx64" | "nvptx" | "nvptx64-sim" => Some(Arch::Nvptx64),
+            "amdgcn" | "amdgcn-sim" => Some(Arch::Amdgcn),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Arch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Static description of a simulated device.
+#[derive(Debug, Clone)]
+pub struct DeviceDesc {
+    /// Architecture (fixes warp width + intrinsic namespace).
+    pub arch: Arch,
+    /// Number of block slots executing concurrently ("SMs"/"CUs"). The
+    /// launcher schedules blocks over this many pool workers.
+    pub sm_count: u32,
+    /// Shared memory per block, bytes.
+    pub shared_mem_per_block: u64,
+    /// Global memory size, bytes.
+    pub global_mem: u64,
+    /// Maximum threads per block.
+    pub max_threads_per_block: u32,
+}
+
+impl DeviceDesc {
+    /// A V100-flavoured `nvptx64-sim` device, scaled for a host CPU.
+    pub fn nvptx64() -> Self {
+        DeviceDesc {
+            arch: Arch::Nvptx64,
+            sm_count: host_parallelism(),
+            shared_mem_per_block: 96 * 1024,
+            global_mem: 512 * 1024 * 1024,
+            max_threads_per_block: 1024,
+        }
+    }
+
+    /// An MI100-flavoured `amdgcn-sim` device.
+    pub fn amdgcn() -> Self {
+        DeviceDesc {
+            arch: Arch::Amdgcn,
+            sm_count: host_parallelism(),
+            shared_mem_per_block: 64 * 1024,
+            global_mem: 512 * 1024 * 1024,
+            max_threads_per_block: 1024,
+        }
+    }
+
+    /// Descriptor for an arch.
+    pub fn for_arch(arch: Arch) -> Self {
+        match arch {
+            Arch::Nvptx64 => Self::nvptx64(),
+            Arch::Amdgcn => Self::amdgcn(),
+        }
+    }
+
+    /// Warps per block for a given block size.
+    pub fn warps_for(&self, threads_per_block: u32) -> u32 {
+        threads_per_block.div_ceil(self.arch.warp_width())
+    }
+}
+
+/// Number of worker threads used to execute blocks.
+pub fn host_parallelism() -> u32 {
+    std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warp_widths_differ_by_arch() {
+        assert_eq!(Arch::Nvptx64.warp_width(), 32);
+        assert_eq!(Arch::Amdgcn.warp_width(), 64);
+    }
+
+    #[test]
+    fn parse_accepts_paper_aliases() {
+        assert_eq!(Arch::parse("nvptx"), Some(Arch::Nvptx64));
+        assert_eq!(Arch::parse("nvptx64"), Some(Arch::Nvptx64));
+        assert_eq!(Arch::parse("amdgcn"), Some(Arch::Amdgcn));
+        assert_eq!(Arch::parse("gfx908"), None);
+    }
+
+    #[test]
+    fn warps_for_rounds_up() {
+        let d = DeviceDesc::nvptx64();
+        assert_eq!(d.warps_for(32), 1);
+        assert_eq!(d.warps_for(33), 2);
+        assert_eq!(d.warps_for(1024), 32);
+        let a = DeviceDesc::amdgcn();
+        assert_eq!(a.warps_for(65), 2);
+    }
+}

@@ -1,0 +1,231 @@
+//! Target intrinsics — the "few compiler intrinsics" the paper's runtime
+//! bottoms out in (§3.2).
+//!
+//! Namespaces:
+//! * `gpu.*` — common intrinsics available on every target (thread ids,
+//!   barriers, fences, shuffles, generic atomics);
+//! * `nvvm.*` — Nvidia-only (e.g. `nvvm.atom.inc.u32`, Listing 4);
+//! * `amdgcn.*` — AMD-only (e.g. `amdgcn.atomic.inc32`).
+//!
+//! Calling a vendor intrinsic on the wrong architecture is a device trap —
+//! this is what makes the legacy runtime's per-target source split and the
+//! portable runtime's variant dispatch *observable* in tests.
+
+use super::device::Arch;
+use super::interp::{lanes, CallEnv};
+use crate::ir::AddrSpace;
+use crate::util::Error;
+
+/// Dispatch an intrinsic call. `args[arg][lane]`, `mask` = active lanes.
+/// Returns per-lane results for value-producing intrinsics.
+pub fn dispatch(
+    name: &str,
+    env: &CallEnv<'_>,
+    args: &[Vec<u64>],
+    mask: u64,
+) -> Result<Option<Vec<u64>>, Error> {
+    let width = env.width();
+    let w = width as usize;
+
+    // Vendor-namespace gate.
+    if name.starts_with("nvvm.") && env.desc.arch != Arch::Nvptx64 {
+        return Err(Error::trap(
+            "intrinsic",
+            format!("`{name}` is an nvptx intrinsic but the target is {}", env.desc.arch),
+        ));
+    }
+    if name.starts_with("amdgcn.") && env.desc.arch != Arch::Amdgcn {
+        return Err(Error::trap(
+            "intrinsic",
+            format!("`{name}` is an amdgcn intrinsic but the target is {}", env.desc.arch),
+        ));
+    }
+
+    let uniform = |v: u64| Some(vec![v; w]);
+
+    match name {
+        // ---- thread hierarchy ----------------------------------------
+        "gpu.tid.x" => {
+            let mut out = vec![0u64; w];
+            for lane in lanes(mask, width) {
+                out[lane as usize] = env.tid(lane) as u64;
+            }
+            Ok(Some(out))
+        }
+        "gpu.ntid.x" => Ok(uniform(env.block_dim as u64)),
+        "gpu.ctaid.x" => Ok(uniform(env.block_id as u64)),
+        "gpu.nctaid.x" => Ok(uniform(env.grid_dim as u64)),
+        "gpu.lane.id" => {
+            let mut out = vec![0u64; w];
+            for lane in lanes(mask, width) {
+                out[lane as usize] = lane as u64;
+            }
+            Ok(Some(out))
+        }
+        "gpu.warp.id" => Ok(uniform(env.warp_id as u64)),
+        "gpu.nwarps" => Ok(uniform(env.num_warps as u64)),
+        "gpu.warpsize" => Ok(uniform(width as u64)),
+
+        // ---- synchronization ------------------------------------------
+        "gpu.barrier0" => {
+            env.barrier.wait()?;
+            Ok(None)
+        }
+        "gpu.membar" | "gpu.membar.gl" | "gpu.membar.cta" => {
+            std::sync::atomic::fence(std::sync::atomic::Ordering::SeqCst);
+            Ok(None)
+        }
+        "gpu.warp.sync" => Ok(None), // lockstep: already synchronous
+
+        // ---- warp collectives -----------------------------------------
+        "gpu.shfl.idx.b32" => {
+            let (val, src) = (&args[0], &args[1]);
+            let mut out = vec![0u64; w];
+            for lane in lanes(mask, width) {
+                let s = (src[lane as usize] as u32) % width;
+                out[lane as usize] = val[s as usize] & 0xFFFF_FFFF;
+            }
+            Ok(Some(out))
+        }
+        "gpu.shfl.down.b32" => {
+            let (val, delta) = (&args[0], &args[1]);
+            let mut out = vec![0u64; w];
+            for lane in lanes(mask, width) {
+                let s = lane + delta[lane as usize] as u32;
+                let s = if s < width { s } else { lane };
+                out[lane as usize] = val[s as usize] & 0xFFFF_FFFF;
+            }
+            Ok(Some(out))
+        }
+        "gpu.ballot" => {
+            let pred = &args[0];
+            let mut bits = 0u64;
+            for lane in lanes(mask, width) {
+                if pred[lane as usize] & 1 != 0 {
+                    bits |= 1 << lane;
+                }
+            }
+            Ok(uniform(bits))
+        }
+        "gpu.activemask" => Ok(uniform(mask)),
+        "gpu.lanemask.lt" => {
+            let mut out = vec![0u64; w];
+            for lane in lanes(mask, width) {
+                out[lane as usize] = (1u64 << lane) - 1;
+            }
+            Ok(Some(out))
+        }
+
+        // ---- generic atomics (addr space in the name) ------------------
+        _ if name.starts_with("gpu.atom.") => atomic(name, env, args, mask),
+
+        // ---- vendor atomics (paper Listing 4) --------------------------
+        "nvvm.atom.inc.u32" | "amdgcn.atomic.inc32" => {
+            let mut out = vec![0u64; w];
+            for lane in lanes(mask, width) {
+                let addr = args[0][lane as usize];
+                let e = args[1][lane as usize] as u32;
+                out[lane as usize] = env.gmem.atomic_inc_u32(addr, e)? as u64;
+            }
+            Ok(Some(out))
+        }
+        // Vendor fences used by the legacy runtime's per-target sources.
+        "nvvm.membar.gl" | "amdgcn.s.waitcnt" => {
+            std::sync::atomic::fence(std::sync::atomic::Ordering::SeqCst);
+            Ok(None)
+        }
+
+        // ---- misc -------------------------------------------------------
+        "gpu.clock" => {
+            let now = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap_or_default()
+                .as_nanos() as u64;
+            Ok(uniform(now))
+        }
+        _ => Err(Error::trap("intrinsic", format!("unknown intrinsic `{name}`"))),
+    }
+}
+
+/// `gpu.atom.<op>.<ty>[.shared]` — atomics on global (default) or shared
+/// memory. Lanes are serialized in lane order within the warp (hardware
+/// serializes conflicting atomics too; order is unspecified there, fixed
+/// here for reproducibility).
+fn atomic(
+    name: &str,
+    env: &CallEnv<'_>,
+    args: &[Vec<u64>],
+    mask: u64,
+) -> Result<Option<Vec<u64>>, Error> {
+    let width = env.width();
+    let w = width as usize;
+    let rest = name.strip_prefix("gpu.atom.").unwrap();
+    let (rest, space) = match rest.strip_suffix(".shared") {
+        Some(r) => (r, AddrSpace::Shared),
+        None => (rest, AddrSpace::Global),
+    };
+    let region = env.region(space);
+    let mut out = vec![0u64; w];
+    for lane in lanes(mask, width) {
+        let l = lane as usize;
+        let addr = args[0][l];
+        let old = match rest {
+            "add.u32" => region.atomic_add_u32(addr, args[1][l] as u32)? as u64,
+            "add.u64" => region.atomic_add_u64(addr, args[1][l])?,
+            "add.f32" => {
+                // CAS-loop float add (how GPUs without native f32 atomic
+                // add implement it, and how the runtime's fallback works).
+                let mut cur = region.atomic_load_u32(addr)?;
+                loop {
+                    let new = (f32::from_bits(cur) + f32::from_bits(args[1][l] as u32)).to_bits();
+                    let got = region.atomic_cas_u32(addr, cur, new)?;
+                    if got == cur {
+                        break cur as u64;
+                    }
+                    cur = got;
+                }
+            }
+            "umax.u32" => region.atomic_umax_u32(addr, args[1][l] as u32)? as u64,
+            "exch.u32" => region.atomic_exchange_u32(addr, args[1][l] as u32)? as u64,
+            "exch.u64" => region.atomic_exchange_u64(addr, args[1][l])?,
+            "cas.u32" => {
+                region.atomic_cas_u32(addr, args[1][l] as u32, args[2][l] as u32)? as u64
+            }
+            "cas.u64" => region.atomic_cas_u64(addr, args[1][l], args[2][l])?,
+            "load.u32" => region.atomic_load_u32(addr)? as u64,
+            "store.u32" => {
+                region.atomic_store_u32(addr, args[1][l] as u32)?;
+                0
+            }
+            other => {
+                return Err(Error::trap("intrinsic", format!("unknown atomic `gpu.atom.{other}`")))
+            }
+        };
+        out[lane as usize] = old;
+    }
+    Ok(Some(out))
+}
+
+/// Check whether `name` is a known intrinsic *for an architecture* —
+/// used by the conformance suite to validate variant resolution.
+pub fn is_valid_for(name: &str, arch: Arch) -> bool {
+    match arch {
+        Arch::Nvptx64 => !name.starts_with("amdgcn."),
+        Arch::Amdgcn => !name.starts_with("nvvm."),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vendor_namespace_validity() {
+        assert!(is_valid_for("nvvm.atom.inc.u32", Arch::Nvptx64));
+        assert!(!is_valid_for("nvvm.atom.inc.u32", Arch::Amdgcn));
+        assert!(is_valid_for("amdgcn.atomic.inc32", Arch::Amdgcn));
+        assert!(!is_valid_for("amdgcn.atomic.inc32", Arch::Nvptx64));
+        assert!(is_valid_for("gpu.barrier0", Arch::Nvptx64));
+        assert!(is_valid_for("gpu.barrier0", Arch::Amdgcn));
+    }
+}

@@ -1,0 +1,529 @@
+//! Kernel launching: block scheduling over a worker pool, warp threads,
+//! block barriers, and the runtime-binding registry.
+
+use super::device::DeviceDesc;
+use super::interp::{CallEnv, Interp};
+use super::loader::LoadedModule;
+use super::memory::{GlobalMemory, SharedMemory};
+use crate::util::Error;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Signature of a host-side runtime binding (`__kmpc_*` entry points
+/// implemented in Rust, and `payload.*` PJRT executions). Called once per
+/// *warp* reaching the call, with per-lane arguments and the active mask.
+/// Returns per-lane results when the callee produces a value.
+pub type RtFn =
+    Arc<dyn Fn(&CallEnv<'_>, &[Vec<u64>], u64) -> Result<Option<Vec<u64>>, Error> + Send + Sync>;
+
+/// Registry of runtime bindings, looked up by symbol name after module
+/// functions and before intrinsics.
+#[derive(Clone, Default)]
+pub struct Bindings {
+    map: HashMap<String, RtFn>,
+}
+
+impl Bindings {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a binding.
+    pub fn bind(&mut self, name: impl Into<String>, f: RtFn) {
+        self.map.insert(name.into(), f);
+    }
+
+    /// Look up a binding.
+    pub fn get(&self, name: &str) -> Option<&RtFn> {
+        self.map.get(name)
+    }
+
+    /// Number of installed bindings.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Names of all bindings (sorted, for diagnostics).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.map.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// A reusable block-wide barrier with dynamic membership: warps that
+/// finish the kernel `leave()` and stop counting toward the barrier
+/// (CUDA's `__syncthreads` UB-for-exited-threads becomes well-defined
+/// "exited warps don't participate"). Poisoning wakes all waiters with an
+/// error so one trapped warp cannot deadlock the block.
+pub struct BlockBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    participants: u32,
+    arrived: u32,
+    epoch: u64,
+    poisoned: bool,
+}
+
+/// How long a warp may wait at a block barrier before the simulator calls
+/// it a deadlock (divergent barriers are UB on hardware; we trap instead).
+const BARRIER_TIMEOUT: Duration = Duration::from_secs(20);
+
+impl BlockBarrier {
+    /// Barrier over `participants` warps.
+    pub fn new(participants: u32) -> Self {
+        BlockBarrier {
+            state: Mutex::new(BarrierState { participants, arrived: 0, epoch: 0, poisoned: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Arrive and wait for the rest of the block.
+    pub fn wait(&self) -> Result<(), Error> {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned {
+            return Err(Error::trap("barrier", "block poisoned by a trapped warp"));
+        }
+        st.arrived += 1;
+        if st.arrived >= st.participants {
+            st.arrived = 0;
+            st.epoch += 1;
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let epoch = st.epoch;
+        loop {
+            let (guard, timeout) = self.cv.wait_timeout(st, BARRIER_TIMEOUT).unwrap();
+            st = guard;
+            if st.poisoned {
+                return Err(Error::trap("barrier", "block poisoned by a trapped warp"));
+            }
+            if st.epoch != epoch {
+                return Ok(());
+            }
+            if timeout.timed_out() {
+                st.poisoned = true;
+                self.cv.notify_all();
+                return Err(Error::trap(
+                    "barrier",
+                    "barrier timeout — divergent __syncthreads (some warps never arrived)",
+                ));
+            }
+        }
+    }
+
+    /// A warp finished the kernel: stop counting it.
+    pub fn leave(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.participants = st.participants.saturating_sub(1);
+        if st.participants > 0 && st.arrived >= st.participants {
+            st.arrived = 0;
+            st.epoch += 1;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Wake all waiters with an error (a warp trapped).
+    pub fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Launch geometry (1-D grid and block — sufficient for the benchmark
+/// suite; multi-dim indexing is linearized by kernels).
+#[derive(Debug, Clone, Copy)]
+pub struct LaunchConfig {
+    /// Number of blocks (OpenMP teams).
+    pub grid_dim: u32,
+    /// Threads per block.
+    pub block_dim: u32,
+}
+
+impl LaunchConfig {
+    /// Convenience constructor.
+    pub fn new(grid_dim: u32, block_dim: u32) -> Self {
+        LaunchConfig { grid_dim, block_dim }
+    }
+}
+
+/// Counters collected during a launch.
+#[derive(Debug, Default)]
+pub struct LaunchStats {
+    /// Lane-instructions executed (sum of active lanes over all insts).
+    pub lane_ops: u64,
+    /// Warp-level interpreter steps.
+    pub warp_steps: u64,
+    /// Blocks executed.
+    pub blocks: u32,
+    /// Wall-clock duration of the launch.
+    pub wall: Duration,
+}
+
+/// Shared mutable counters (updated by warp threads at coarse granularity).
+#[derive(Default)]
+pub struct StatsCollector {
+    pub lane_ops: AtomicU64,
+    pub warp_steps: AtomicU64,
+}
+
+/// Execute `kernel` from `module` over the launch grid.
+///
+/// Each block runs on a pool worker ("SM"); each warp of a block is a host
+/// thread so that block barriers can suspend it. Kernel arguments are
+/// broadcast to all lanes.
+pub fn launch_kernel(
+    desc: &DeviceDesc,
+    module: &LoadedModule,
+    kernel: &str,
+    args: &[u64],
+    gmem: &GlobalMemory,
+    bindings: &Bindings,
+    cfg: LaunchConfig,
+) -> Result<LaunchStats, Error> {
+    let f = module
+        .func(kernel)
+        .ok_or_else(|| Error::DevRt(format!("kernel `{kernel}` not found in module `{}`", module.module.name)))?
+        .clone();
+    if !f.is_kernel {
+        return Err(Error::DevRt(format!("function `{kernel}` is not a kernel entry")));
+    }
+    if f.num_params as usize != args.len() {
+        return Err(Error::DevRt(format!(
+            "kernel `{kernel}` expects {} args, got {}",
+            f.num_params,
+            args.len()
+        )));
+    }
+    if cfg.block_dim == 0 || cfg.grid_dim == 0 {
+        return Err(Error::DevRt("launch with empty grid or block".into()));
+    }
+    if cfg.block_dim > desc.max_threads_per_block {
+        return Err(Error::DevRt(format!(
+            "block_dim {} exceeds device limit {}",
+            cfg.block_dim, desc.max_threads_per_block
+        )));
+    }
+
+    let width = desc.arch.warp_width();
+    let warps_per_block = cfg.block_dim.div_ceil(width);
+    let stats = StatsCollector::default();
+    let first_error: Mutex<Option<Error>> = Mutex::new(None);
+    let next_block = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+
+    let workers = desc.sm_count.min(cfg.grid_dim).max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let b = next_block.fetch_add(1, Ordering::Relaxed);
+                if b >= cfg.grid_dim as usize || first_error.lock().unwrap().is_some() {
+                    return;
+                }
+                if let Err(e) = run_block(
+                    desc, module, &f, args, gmem, bindings, cfg, b as u32, warps_per_block, &stats,
+                ) {
+                    let mut slot = first_error.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                }
+            });
+        }
+    });
+
+    if let Some(e) = first_error.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(LaunchStats {
+        lane_ops: stats.lane_ops.load(Ordering::Relaxed),
+        warp_steps: stats.warp_steps.load(Ordering::Relaxed),
+        blocks: cfg.grid_dim,
+        wall: t0.elapsed(),
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_block(
+    desc: &DeviceDesc,
+    module: &LoadedModule,
+    f: &Arc<crate::ir::Function>,
+    args: &[u64],
+    gmem: &GlobalMemory,
+    bindings: &Bindings,
+    cfg: LaunchConfig,
+    block_id: u32,
+    warps_per_block: u32,
+    stats: &StatsCollector,
+) -> Result<(), Error> {
+    let smem = SharedMemory::new(desc.shared_mem_per_block);
+    let barrier = BlockBarrier::new(warps_per_block);
+    let width = desc.arch.warp_width();
+    let block_error: Mutex<Option<Error>> = Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        for warp_id in 0..warps_per_block {
+            let smem = &smem;
+            let barrier = &barrier;
+            let block_error = &block_error;
+            scope.spawn(move || {
+                let env = CallEnv {
+                    desc,
+                    module,
+                    gmem,
+                    smem,
+                    barrier,
+                    bindings,
+                    block_id,
+                    grid_dim: cfg.grid_dim,
+                    block_dim: cfg.block_dim,
+                    warp_id,
+                    num_warps: warps_per_block,
+                };
+                // Active lanes: those whose linear tid is inside block_dim.
+                let base = warp_id * width;
+                let mut mask: u64 = 0;
+                for lane in 0..width {
+                    if base + lane < cfg.block_dim {
+                        mask |= 1 << lane;
+                    }
+                }
+                let interp = Interp::new(&env, stats);
+                let arg_lanes: Vec<Vec<u64>> =
+                    args.iter().map(|&a| vec![a; width as usize]).collect();
+                let r = interp.run_function(f, &arg_lanes, mask);
+                barrier.leave();
+                if let Err(e) = r {
+                    barrier.poison();
+                    let mut slot = block_error.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                }
+            });
+        }
+    });
+
+    match block_error.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_releases_all_participants() {
+        let b = Arc::new(BlockBarrier::new(4));
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut hs = vec![];
+        for _ in 0..4 {
+            let b = b.clone();
+            let c = counter.clone();
+            hs.push(std::thread::spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                b.wait().unwrap();
+                // after the barrier everyone must see all arrivals
+                assert_eq!(c.load(Ordering::SeqCst), 4);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn leaving_warp_unblocks_barrier() {
+        let b = Arc::new(BlockBarrier::new(2));
+        let b2 = b.clone();
+        let waiter = std::thread::spawn(move || b2.wait());
+        std::thread::sleep(Duration::from_millis(50));
+        b.leave(); // the other warp exits the kernel instead of arriving
+        waiter.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn poison_wakes_waiters_with_error() {
+        let b = Arc::new(BlockBarrier::new(2));
+        let b2 = b.clone();
+        let waiter = std::thread::spawn(move || b2.wait());
+        std::thread::sleep(Duration::from_millis(50));
+        b.poison();
+        assert!(waiter.join().unwrap().is_err());
+    }
+
+    use super::super::device::DeviceDesc;
+    use super::super::loader::LoadedModule;
+    use super::super::memory::GlobalMemory;
+    use crate::ir::{AddrSpace, CmpPred, FunctionBuilder, Module, Operand, Type};
+
+    /// kernel saxpy(out, x, y, a_bits, n): out[i] = a*x[i] + y[i] for each
+    /// thread's strided range — exercises ids, loops, loads, stores, casts.
+    fn saxpy_module() -> Module {
+        let mut m = Module::new("saxpy");
+        let mut b = FunctionBuilder::new(
+            "saxpy",
+            &[Type::I64, Type::I64, Type::I64, Type::I64, Type::I64],
+            None,
+        )
+        .kernel();
+        let (out, x, y, a_bits, n) = (b.param(0), b.param(1), b.param(2), b.param(3), b.param(4));
+        let a32 = b.cast(crate::ir::CastOp::Trunc, a_bits, Type::I32);
+        let a = b.cast(crate::ir::CastOp::Bitcast, a32, Type::F32);
+        let tid = b.call("gpu.tid.x", &[], Type::I32);
+        let ntid = b.call("gpu.ntid.x", &[], Type::I32);
+        let ctaid = b.call("gpu.ctaid.x", &[], Type::I32);
+        let nctaid = b.call("gpu.nctaid.x", &[], Type::I32);
+        let block_base = b.mul(ctaid, ntid);
+        let gid = b.add(block_base, tid);
+        let stride = b.mul(ntid, nctaid);
+        let gid64 = b.sext64(gid);
+        let stride64 = b.sext64(stride);
+        let i = b.copy(gid64);
+        b.loop_(|b| {
+            let done = b.cmp(CmpPred::Ge, i, n);
+            b.if_(done, |b| b.break_());
+            let xi_addr = b.index(x, i, 4);
+            let yi_addr = b.index(y, i, 4);
+            let oi_addr = b.index(out, i, 4);
+            let xv = b.load(Type::F32, AddrSpace::Global, xi_addr);
+            let yv = b.load(Type::F32, AddrSpace::Global, yi_addr);
+            let ax = b.mul(a, xv);
+            let s = b.add(ax, yv);
+            b.store(Type::F32, AddrSpace::Global, oi_addr, s);
+            let next = b.add(i, stride64);
+            b.assign(i, next);
+        });
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    fn run_saxpy(desc: &DeviceDesc, n: usize, grid: u32, block: u32) {
+        let gmem = GlobalMemory::new(16 << 20);
+        let lm = LoadedModule::load(saxpy_module(), &gmem).unwrap();
+        let bytes = (n * 4) as u64;
+        let out = gmem.alloc(bytes, 8).unwrap();
+        let x = gmem.alloc(bytes, 8).unwrap();
+        let y = gmem.alloc(bytes, 8).unwrap();
+        let xs: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let ys: Vec<f32> = (0..n).map(|i| (i * 2) as f32).collect();
+        let as_bytes = |v: &[f32]| -> Vec<u8> { v.iter().flat_map(|f| f.to_le_bytes()).collect() };
+        gmem.write_bytes(x, &as_bytes(&xs)).unwrap();
+        gmem.write_bytes(y, &as_bytes(&ys)).unwrap();
+        let a = 0.5f32;
+        let stats = launch_kernel(
+            desc,
+            &lm,
+            "saxpy",
+            &[out, x, y, a.to_bits() as u64, n as u64],
+            &gmem,
+            &Bindings::new(),
+            LaunchConfig::new(grid, block),
+        )
+        .unwrap();
+        assert!(stats.lane_ops > 0);
+        let mut buf = vec![0u8; n * 4];
+        gmem.read_bytes(out, &mut buf).unwrap();
+        for i in 0..n {
+            let got = f32::from_le_bytes(buf[i * 4..i * 4 + 4].try_into().unwrap());
+            let want = a * xs[i] + ys[i];
+            assert_eq!(got, want, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn saxpy_runs_on_nvptx_sim() {
+        run_saxpy(&DeviceDesc::nvptx64(), 1000, 4, 64);
+    }
+
+    #[test]
+    fn saxpy_runs_on_amdgcn_sim() {
+        run_saxpy(&DeviceDesc::amdgcn(), 777, 3, 128);
+    }
+
+    #[test]
+    fn saxpy_handles_partial_warps_and_single_thread() {
+        run_saxpy(&DeviceDesc::nvptx64(), 65, 2, 33);
+        run_saxpy(&DeviceDesc::nvptx64(), 10, 1, 1);
+    }
+
+    #[test]
+    fn launch_rejects_bad_configs() {
+        let gmem = GlobalMemory::new(1 << 20);
+        let desc = DeviceDesc::nvptx64();
+        let lm = LoadedModule::load(saxpy_module(), &gmem).unwrap();
+        let b = Bindings::new();
+        let err = launch_kernel(&desc, &lm, "nope", &[], &gmem, &b, LaunchConfig::new(1, 1));
+        assert!(err.is_err());
+        let err = launch_kernel(&desc, &lm, "saxpy", &[], &gmem, &b, LaunchConfig::new(1, 1));
+        assert!(err.is_err(), "wrong arg count must fail");
+        let err = launch_kernel(
+            &desc,
+            &lm,
+            "saxpy",
+            &[0, 0, 0, 0, 0],
+            &gmem,
+            &b,
+            LaunchConfig::new(1, 4096),
+        );
+        assert!(err.is_err(), "oversized block must fail");
+    }
+
+    #[test]
+    fn trap_in_one_warp_fails_launch_without_deadlock() {
+        let mut m = Module::new("trap");
+        let mut b = FunctionBuilder::new("t", &[], None).kernel();
+        let tid = b.call("gpu.tid.x", &[], Type::I32);
+        let is_w1 = b.cmp(CmpPred::Ge, tid, Operand::i32(32));
+        // warp 1 traps, warp 0 waits at a barrier → poison must wake it.
+        b.if_else(
+            is_w1,
+            |b| b.trap("boom"),
+            |b| b.call_void("gpu.barrier0", &[]),
+        );
+        b.ret();
+        m.add_func(b.build());
+        let gmem = GlobalMemory::new(1 << 20);
+        let desc = DeviceDesc::nvptx64();
+        let lm = LoadedModule::load(m, &gmem).unwrap();
+        let r = launch_kernel(
+            &desc,
+            &lm,
+            "t",
+            &[],
+            &gmem,
+            &Bindings::new(),
+            LaunchConfig::new(1, 64),
+        );
+        match r {
+            Err(Error::Trap { msg, .. }) => assert!(msg.contains("boom") || msg.contains("poisoned"), "{msg}"),
+            other => panic!("expected trap, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bindings_register_and_resolve() {
+        let mut b = Bindings::new();
+        assert!(b.is_empty());
+        b.bind("__kmpc_test", Arc::new(|_, _, _| Ok(None)));
+        assert_eq!(b.len(), 1);
+        assert!(b.get("__kmpc_test").is_some());
+        assert!(b.get("other").is_none());
+        assert_eq!(b.names(), vec!["__kmpc_test"]);
+    }
+}

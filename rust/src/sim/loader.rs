@@ -1,0 +1,189 @@
+//! Module loading: verifies a linked module, places its globals, and
+//! produces the executable image the launcher interprets.
+//!
+//! Address assignment:
+//! * **global-space** globals are bump-allocated in device global memory
+//!   and their initializers written (zero-fill unless `uninit`);
+//! * **shared-space** globals are assigned offsets *after* the runtime
+//!   state area of each block's shared memory (layout below), fresh per
+//!   block at launch;
+//! * functions get dense indices used by `call_indirect` via the
+//!   `gpu.funcref.<name>` pseudo-intrinsic.
+//!
+//! Shared-memory layout per block:
+//! ```text
+//! [0 .. RT_STATE_BYTES)                     device-runtime team state
+//! [RT_STATE_BYTES .. +shared_globals_size)  module shared globals
+//! [.. shared_mem_per_block)                 __kmpc_alloc_shared arena
+//! ```
+
+use super::memory::GlobalMemory;
+use crate::ir::{AddrSpace, Function, Module};
+use crate::util::Error;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Bytes reserved at the base of shared memory for the device runtime's
+/// team state (ICVs, parallel-region descriptor, worksharing iterator,
+/// alloc_shared stack pointer…). The devrt module defines the field
+/// layout; the loader only reserves the space.
+pub const RT_STATE_BYTES: u64 = 256;
+
+/// A verified, address-assigned module ready for launching.
+pub struct LoadedModule {
+    /// The linked module (immutable from here on).
+    pub module: Arc<Module>,
+    /// Device addresses of global-space globals.
+    pub global_addrs: HashMap<String, u64>,
+    /// Shared-memory offsets of shared-space globals (per-block).
+    pub shared_addrs: HashMap<String, u64>,
+    /// First free shared offset after runtime state + shared globals —
+    /// the base of the `__kmpc_alloc_shared` arena.
+    pub shared_arena_base: u64,
+    /// Function name → dense id (for `call_indirect`).
+    pub func_ids: HashMap<String, u64>,
+    /// Dense id → function.
+    pub funcs_by_id: Vec<Arc<Function>>,
+}
+
+impl LoadedModule {
+    /// Verify and load `module`, placing global-space globals into `gmem`.
+    pub fn load(module: Module, gmem: &GlobalMemory) -> Result<Self, Error> {
+        crate::ir::verify::verify_module(&module)?;
+
+        let mut global_addrs = HashMap::new();
+        let mut shared_addrs = HashMap::new();
+        let mut shared_off = RT_STATE_BYTES;
+        for g in module.globals.values() {
+            match g.space {
+                AddrSpace::Global => {
+                    let addr = gmem.alloc(g.size, g.align)?;
+                    if let Some(init) = &g.init {
+                        gmem.write_bytes(addr, init)?;
+                    }
+                    // `uninit` globals keep whatever the allocator handed
+                    // out (zeroed fresh memory — matching a fresh device).
+                    global_addrs.insert(g.name.clone(), addr);
+                }
+                AddrSpace::Shared => {
+                    shared_off = shared_off.next_multiple_of(g.align.max(1));
+                    shared_addrs.insert(g.name.clone(), shared_off);
+                    shared_off += g.size;
+                }
+            }
+        }
+
+        let module = Arc::new(module);
+        let mut func_ids = HashMap::new();
+        let mut funcs_by_id = Vec::new();
+        for (i, (name, f)) in module.funcs.iter().enumerate() {
+            func_ids.insert(name.clone(), i as u64);
+            funcs_by_id.push(Arc::new(f.clone()));
+        }
+
+        Ok(LoadedModule {
+            module,
+            global_addrs,
+            shared_addrs,
+            shared_arena_base: shared_off,
+            func_ids,
+            funcs_by_id,
+        })
+    }
+
+    /// Address of a global, with its space.
+    pub fn global_address(&self, name: &str) -> Option<(AddrSpace, u64)> {
+        if let Some(a) = self.global_addrs.get(name) {
+            return Some((AddrSpace::Global, *a));
+        }
+        self.shared_addrs.get(name).map(|a| (AddrSpace::Shared, *a))
+    }
+
+    /// Function by name.
+    pub fn func(&self, name: &str) -> Option<&Arc<Function>> {
+        self.func_ids.get(name).map(|&id| &self.funcs_by_id[id as usize])
+    }
+
+    /// Function id for `call_indirect`.
+    pub fn func_id(&self, name: &str) -> Option<u64> {
+        self.func_ids.get(name).copied()
+    }
+
+    /// Function by id.
+    pub fn func_by_id(&self, id: u64) -> Option<&Arc<Function>> {
+        self.funcs_by_id.get(id as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::module::{Global, Linkage};
+    use crate::ir::{FunctionBuilder, Module};
+
+    fn module_with_globals() -> Module {
+        let mut m = Module::new("t");
+        m.add_global(Global {
+            name: "g1".into(),
+            space: AddrSpace::Global,
+            size: 16,
+            align: 8,
+            init: Some((0u8..16).collect()),
+            uninit: false,
+            linkage: Linkage::External,
+        });
+        m.add_global(Global {
+            name: "s1".into(),
+            space: AddrSpace::Shared,
+            size: 12,
+            align: 4,
+            init: None,
+            uninit: true,
+            linkage: Linkage::Internal,
+        });
+        let mut k = FunctionBuilder::new("k", &[], None).kernel();
+        k.ret();
+        m.add_func(k.build());
+        m
+    }
+
+    #[test]
+    fn load_places_and_initializes_globals() {
+        let gmem = GlobalMemory::new(1 << 20);
+        let lm = LoadedModule::load(module_with_globals(), &gmem).unwrap();
+        let (space, addr) = lm.global_address("g1").unwrap();
+        assert_eq!(space, AddrSpace::Global);
+        let mut buf = [0u8; 16];
+        gmem.read_bytes(addr, &mut buf).unwrap();
+        assert_eq!(buf[3], 3);
+        let (sspace, soff) = lm.global_address("s1").unwrap();
+        assert_eq!(sspace, AddrSpace::Shared);
+        assert!(soff >= RT_STATE_BYTES);
+        assert_eq!(lm.shared_arena_base, soff + 12);
+    }
+
+    #[test]
+    fn func_ids_are_dense_and_resolvable() {
+        let gmem = GlobalMemory::new(1 << 20);
+        let lm = LoadedModule::load(module_with_globals(), &gmem).unwrap();
+        let id = lm.func_id("k").unwrap();
+        assert_eq!(lm.func_by_id(id).unwrap().name, "k");
+        assert!(lm.func_id("nope").is_none());
+    }
+
+    #[test]
+    fn invalid_module_is_rejected() {
+        let gmem = GlobalMemory::new(1 << 20);
+        let mut m = Module::new("bad");
+        m.add_global(Global {
+            name: "s".into(),
+            space: AddrSpace::Shared,
+            size: 4,
+            align: 4,
+            init: None,
+            uninit: false, // invalid: shared must be uninit
+            linkage: Linkage::Internal,
+        });
+        assert!(LoadedModule::load(m, &gmem).is_err());
+    }
+}

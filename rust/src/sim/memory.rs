@@ -1,0 +1,389 @@
+//! Device memory: global (all blocks) and shared (per block).
+//!
+//! Both are byte-addressed buffers with bounds-checked typed access and
+//! seq-cst atomics at aligned 32/64-bit addresses. Plain loads/stores are
+//! modelled like the hardware models them: data races between lanes are
+//! *device undefined behaviour*; the simulator performs them through
+//! `UnsafeCell` without synchronization, exactly as racy GPU code would
+//! observe arbitrary interleavings. Race-free kernels (all of ours) see
+//! well-defined values.
+
+use crate::util::Error;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A byte-addressed device memory region.
+pub struct MemRegion {
+    data: Box<[UnsafeCell<u8>]>,
+    name: &'static str,
+}
+
+// SAFETY: concurrent access is the simulated device's concern (see module
+// docs); the host-side API only hands out data-race-free views in race-free
+// programs, and atomics go through real `AtomicU32`/`AtomicU64`.
+unsafe impl Sync for MemRegion {}
+unsafe impl Send for MemRegion {}
+
+impl MemRegion {
+    /// Allocate a zeroed region of `size` bytes.
+    pub fn new(size: u64, name: &'static str) -> Self {
+        let mut v = Vec::with_capacity(size as usize);
+        v.resize_with(size as usize, || UnsafeCell::new(0u8));
+        MemRegion { data: v.into_boxed_slice(), name }
+    }
+
+    /// Region size in bytes.
+    pub fn len(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    fn check(&self, addr: u64, size: u64) -> Result<usize, Error> {
+        let end = addr.checked_add(size).ok_or_else(|| {
+            Error::trap("memory", format!("{} address overflow at {addr:#x}", self.name))
+        })?;
+        if end > self.len() {
+            return Err(Error::trap(
+                "memory",
+                format!(
+                    "{} access out of bounds: [{addr:#x}, {end:#x}) of {:#x}",
+                    self.name,
+                    self.len()
+                ),
+            ));
+        }
+        Ok(addr as usize)
+    }
+
+    /// Read `size ∈ {1,4,8}` bytes little-endian into a u64.
+    #[inline]
+    pub fn read_bits(&self, addr: u64, size: u64) -> Result<u64, Error> {
+        let i = self.check(addr, size)?;
+        // SAFETY: bounds checked; races are simulated-device UB (see above).
+        unsafe {
+            let p = self.data.as_ptr().add(i) as *const u8;
+            Ok(match size {
+                1 => p.read() as u64,
+                4 => (p as *const u32).read_unaligned() as u64,
+                8 => (p as *const u64).read_unaligned(),
+                _ => unreachable!("scalar size {size}"),
+            })
+        }
+    }
+
+    /// Write `size ∈ {1,4,8}` bytes little-endian from a u64.
+    #[inline]
+    pub fn write_bits(&self, addr: u64, size: u64, bits: u64) -> Result<(), Error> {
+        let i = self.check(addr, size)?;
+        // SAFETY: as `read_bits`.
+        unsafe {
+            let p = self.data.as_ptr().add(i) as *mut u8;
+            match size {
+                1 => p.write(bits as u8),
+                4 => (p as *mut u32).write_unaligned(bits as u32),
+                8 => (p as *mut u64).write_unaligned(bits),
+                _ => unreachable!("scalar size {size}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Host-side bulk read (used by data mapping).
+    pub fn read_bytes(&self, addr: u64, out: &mut [u8]) -> Result<(), Error> {
+        let i = self.check(addr, out.len() as u64)?;
+        // SAFETY: bounds checked; the host only copies quiesced buffers.
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.data.as_ptr().add(i) as *const u8, out.as_mut_ptr(), out.len());
+        }
+        Ok(())
+    }
+
+    /// Host-side bulk write.
+    pub fn write_bytes(&self, addr: u64, src: &[u8]) -> Result<(), Error> {
+        let i = self.check(addr, src.len() as u64)?;
+        // SAFETY: as `read_bytes`.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.data.as_ptr().add(i) as *mut u8, src.len());
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn atomic_u32(&self, addr: u64) -> Result<&AtomicU32, Error> {
+        let i = self.check(addr, 4)?;
+        if addr % 4 != 0 {
+            return Err(Error::trap("memory", format!("{} misaligned 32-bit atomic at {addr:#x}", self.name)));
+        }
+        // SAFETY: in-bounds, aligned; AtomicU32 has the same layout as u32.
+        unsafe { Ok(AtomicU32::from_ptr(self.data.as_ptr().add(i) as *mut u32)) }
+    }
+
+    #[inline]
+    fn atomic_u64(&self, addr: u64) -> Result<&AtomicU64, Error> {
+        let i = self.check(addr, 8)?;
+        if addr % 8 != 0 {
+            return Err(Error::trap("memory", format!("{} misaligned 64-bit atomic at {addr:#x}", self.name)));
+        }
+        // SAFETY: in-bounds, aligned.
+        unsafe { Ok(AtomicU64::from_ptr(self.data.as_ptr().add(i) as *mut u64)) }
+    }
+
+    // ---- seq-cst atomics (the memory model OpenMP 5.1's seq_cst clause
+    // requires; §3.1 "Atomic Operations") ------------------------------
+
+    /// `fetch_add` on u32.
+    pub fn atomic_add_u32(&self, addr: u64, v: u32) -> Result<u32, Error> {
+        Ok(self.atomic_u32(addr)?.fetch_add(v, Ordering::SeqCst))
+    }
+
+    /// `fetch_add` on u64.
+    pub fn atomic_add_u64(&self, addr: u64, v: u64) -> Result<u64, Error> {
+        Ok(self.atomic_u64(addr)?.fetch_add(v, Ordering::SeqCst))
+    }
+
+    /// unsigned `fetch_max` on u32.
+    pub fn atomic_umax_u32(&self, addr: u64, v: u32) -> Result<u32, Error> {
+        Ok(self.atomic_u32(addr)?.fetch_max(v, Ordering::SeqCst))
+    }
+
+    /// `swap` on u32.
+    pub fn atomic_exchange_u32(&self, addr: u64, v: u32) -> Result<u32, Error> {
+        Ok(self.atomic_u32(addr)?.swap(v, Ordering::SeqCst))
+    }
+
+    /// `swap` on u64.
+    pub fn atomic_exchange_u64(&self, addr: u64, v: u64) -> Result<u64, Error> {
+        Ok(self.atomic_u64(addr)?.swap(v, Ordering::SeqCst))
+    }
+
+    /// `compare_exchange` on u32; returns the old value.
+    pub fn atomic_cas_u32(&self, addr: u64, expected: u32, desired: u32) -> Result<u32, Error> {
+        let a = self.atomic_u32(addr)?;
+        Ok(match a.compare_exchange(expected, desired, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(old) => old,
+            Err(old) => old,
+        })
+    }
+
+    /// `compare_exchange` on u64; returns the old value.
+    pub fn atomic_cas_u64(&self, addr: u64, expected: u64, desired: u64) -> Result<u64, Error> {
+        let a = self.atomic_u64(addr)?;
+        Ok(match a.compare_exchange(expected, desired, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(old) => old,
+            Err(old) => old,
+        })
+    }
+
+    /// CUDA `atomicInc`: `{ v = *x; *x = (v >= e) ? 0 : v+1; return v; }`
+    /// — the one operation OpenMP 5.1 *cannot* express (paper §3.1), kept
+    /// as a native device operation.
+    pub fn atomic_inc_u32(&self, addr: u64, e: u32) -> Result<u32, Error> {
+        let a = self.atomic_u32(addr)?;
+        let mut cur = a.load(Ordering::SeqCst);
+        loop {
+            let next = if cur >= e { 0 } else { cur + 1 };
+            match a.compare_exchange_weak(cur, next, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return Ok(cur),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Plain atomic load (u32).
+    pub fn atomic_load_u32(&self, addr: u64) -> Result<u32, Error> {
+        Ok(self.atomic_u32(addr)?.load(Ordering::SeqCst))
+    }
+
+    /// Plain atomic store (u32).
+    pub fn atomic_store_u32(&self, addr: u64, v: u32) -> Result<(), Error> {
+        self.atomic_u32(addr)?.store(v, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
+/// Global device memory with a bump allocator for host-side `omp_target_alloc`.
+pub struct GlobalMemory {
+    region: MemRegion,
+    // Bump pointer; address 0 is kept unmapped so that 0 can serve as the
+    // device null pointer.
+    next: Mutex<u64>,
+}
+
+impl GlobalMemory {
+    /// Create a device global memory of `size` bytes.
+    pub fn new(size: u64) -> Self {
+        GlobalMemory { region: MemRegion::new(size, "global"), next: Mutex::new(64) }
+    }
+
+    /// Allocate `size` bytes aligned to `align`; returns the device address.
+    pub fn alloc(&self, size: u64, align: u64) -> Result<u64, Error> {
+        let align = align.max(8);
+        let mut next = self.next.lock().unwrap();
+        let addr = next.next_multiple_of(align);
+        let end = addr.checked_add(size).ok_or_else(|| Error::HostRt("allocation overflow".into()))?;
+        if end > self.region.len() {
+            return Err(Error::HostRt(format!(
+                "device out of memory: need {size} bytes, {} free",
+                self.region.len().saturating_sub(*next)
+            )));
+        }
+        *next = end;
+        Ok(addr)
+    }
+
+    /// Bytes currently allocated.
+    pub fn allocated(&self) -> u64 {
+        *self.next.lock().unwrap()
+    }
+
+    /// The underlying region.
+    pub fn region(&self) -> &MemRegion {
+        &self.region
+    }
+}
+
+impl std::ops::Deref for GlobalMemory {
+    type Target = MemRegion;
+    fn deref(&self) -> &MemRegion {
+        &self.region
+    }
+}
+
+/// Per-block shared memory.
+pub struct SharedMemory {
+    region: MemRegion,
+}
+
+impl SharedMemory {
+    /// Create a block's shared memory of `size` bytes.
+    pub fn new(size: u64) -> Self {
+        SharedMemory { region: MemRegion::new(size, "shared") }
+    }
+}
+
+impl std::ops::Deref for SharedMemory {
+    type Target = MemRegion;
+    fn deref(&self) -> &MemRegion {
+        &self.region
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip_all_sizes() {
+        let m = MemRegion::new(64, "t");
+        m.write_bits(0, 1, 0xAB).unwrap();
+        assert_eq!(m.read_bits(0, 1).unwrap(), 0xAB);
+        m.write_bits(4, 4, 0xDEAD_BEEF).unwrap();
+        assert_eq!(m.read_bits(4, 4).unwrap(), 0xDEAD_BEEF);
+        m.write_bits(8, 8, 0x0123_4567_89AB_CDEF).unwrap();
+        assert_eq!(m.read_bits(8, 8).unwrap(), 0x0123_4567_89AB_CDEF);
+    }
+
+    #[test]
+    fn out_of_bounds_traps() {
+        let m = MemRegion::new(8, "t");
+        assert!(m.read_bits(8, 1).is_err());
+        assert!(m.write_bits(5, 4, 0).is_err());
+        assert!(m.read_bits(u64::MAX, 8).is_err());
+    }
+
+    #[test]
+    fn misaligned_atomic_traps() {
+        let m = MemRegion::new(64, "t");
+        assert!(m.atomic_add_u32(2, 1).is_err());
+        assert!(m.atomic_add_u64(4, 1).is_err());
+    }
+
+    #[test]
+    fn atomic_add_returns_old_value() {
+        let m = MemRegion::new(64, "t");
+        m.write_bits(0, 4, 10).unwrap();
+        assert_eq!(m.atomic_add_u32(0, 5).unwrap(), 10);
+        assert_eq!(m.read_bits(0, 4).unwrap(), 15);
+    }
+
+    #[test]
+    fn atomic_inc_wraps_at_threshold() {
+        // CUDA spec: { v = x; x = x >= e ? 0 : x+1; } — paper Listing 4.
+        let m = MemRegion::new(64, "t");
+        m.write_bits(0, 4, 0).unwrap();
+        for expect in [0u64, 1, 2] {
+            assert_eq!(m.atomic_inc_u32(0, 2).unwrap() as u64, expect);
+        }
+        // value reached e=2 → wraps to 0
+        assert_eq!(m.read_bits(0, 4).unwrap(), 0);
+    }
+
+    #[test]
+    fn atomic_cas_only_swaps_on_match() {
+        let m = MemRegion::new(64, "t");
+        m.write_bits(0, 4, 7).unwrap();
+        assert_eq!(m.atomic_cas_u32(0, 3, 9).unwrap(), 7);
+        assert_eq!(m.read_bits(0, 4).unwrap(), 7);
+        assert_eq!(m.atomic_cas_u32(0, 7, 9).unwrap(), 7);
+        assert_eq!(m.read_bits(0, 4).unwrap(), 9);
+    }
+
+    #[test]
+    fn atomic_umax_is_unsigned() {
+        let m = MemRegion::new(64, "t");
+        m.write_bits(0, 4, 5).unwrap();
+        m.atomic_umax_u32(0, 0xFFFF_FFFF).unwrap();
+        assert_eq!(m.read_bits(0, 4).unwrap(), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn concurrent_atomic_adds_do_not_lose_updates() {
+        let m = std::sync::Arc::new(MemRegion::new(64, "t"));
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    m.atomic_add_u32(0, 1).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.read_bits(0, 4).unwrap(), 80_000);
+    }
+
+    #[test]
+    fn global_alloc_is_aligned_and_nonzero() {
+        let g = GlobalMemory::new(4096);
+        let a = g.alloc(100, 8).unwrap();
+        assert!(a >= 64, "address 0..64 reserved as null page");
+        assert_eq!(a % 8, 0);
+        let b = g.alloc(1, 64).unwrap();
+        assert_eq!(b % 64, 0);
+        assert!(b >= a + 100);
+    }
+
+    #[test]
+    fn global_alloc_oom() {
+        let g = GlobalMemory::new(256);
+        assert!(g.alloc(1024, 8).is_err());
+    }
+
+    #[test]
+    fn bulk_bytes_roundtrip() {
+        let m = MemRegion::new(64, "t");
+        let src = [1u8, 2, 3, 4, 5];
+        m.write_bytes(10, &src).unwrap();
+        let mut dst = [0u8; 5];
+        m.read_bytes(10, &mut dst).unwrap();
+        assert_eq!(src, dst);
+    }
+}

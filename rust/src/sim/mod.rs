@@ -1,0 +1,30 @@
+//! `gpusim` — a warp-lockstep SIMT simulator.
+//!
+//! The stand-in for the GPUs the paper ran on (substitution documented in
+//! DESIGN.md §2): it models exactly the execution-model surface the device
+//! runtime's behaviour depends on —
+//!
+//! * a grid of thread **blocks** (OpenMP *teams*), each executed by a pool
+//!   worker; warps within a block run as real host threads so that block
+//!   barriers can suspend them;
+//! * **warps** of 32 (`nvptx64-sim`) or 64 (`amdgcn-sim`) lanes executing
+//!   in lockstep over the device IR, with divergence masks maintained by
+//!   the structured interpreter;
+//! * **global memory** shared by all blocks (with seq-cst atomics) and
+//!   per-block **shared memory** (the `__shared__` / `omp_cgroup_mem_alloc`
+//!   space);
+//! * per-target **intrinsics** (`gpu.*` common, `nvvm.*` / `amdgcn.*`
+//!   vendor-specific) — the small target-dependent surface the paper's
+//!   runtime is built on.
+
+pub mod device;
+pub mod intrinsics;
+pub mod interp;
+pub mod launch;
+pub mod loader;
+pub mod memory;
+
+pub use device::{Arch, DeviceDesc};
+pub use launch::{launch_kernel, Bindings, LaunchConfig, LaunchStats, RtFn};
+pub use loader::LoadedModule;
+pub use memory::{GlobalMemory, SharedMemory};

@@ -1,0 +1,83 @@
+//! Crate error type. One enum so that traps raised deep in the simulator
+//! (out-of-bounds access, divergent barrier, …) carry enough context to be
+//! actionable in tests and conformance reports.
+
+use thiserror::Error;
+
+/// All errors produced by the library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// IR construction or verification failure.
+    #[error("ir error: {0}")]
+    Ir(String),
+
+    /// Link-time resolution failure (missing symbol, duplicate definition).
+    #[error("link error: {0}")]
+    Link(String),
+
+    /// A trap raised by the SIMT interpreter (the GPU-side `abort()`).
+    #[error("device trap in `{func}`: {msg}")]
+    Trap {
+        /// Function in which the trap fired.
+        func: String,
+        /// Human-readable trap reason.
+        msg: String,
+    },
+
+    /// Device runtime misuse (API contract violation).
+    #[error("device runtime error: {0}")]
+    DevRt(String),
+
+    /// Host runtime (offloading/data-mapping) failure.
+    #[error("host runtime error: {0}")]
+    HostRt(String),
+
+    /// PJRT bridge failure (artifact load, compile, execute).
+    #[error("pjrt error: {0}")]
+    Pjrt(String),
+
+    /// Configuration parse/validation error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Benchmark workload verification failure.
+    #[error("verification failed: {0}")]
+    Verify(String),
+
+    /// Wrapped I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand for a device trap.
+    pub fn trap(func: impl Into<String>, msg: impl Into<String>) -> Self {
+        Error::Trap { func: func.into(), msg: msg.into() }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Pjrt(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trap_formats_with_function_context() {
+        let e = Error::trap("__kmpc_barrier", "divergent barrier");
+        let s = e.to_string();
+        assert!(s.contains("__kmpc_barrier"), "{s}");
+        assert!(s.contains("divergent barrier"), "{s}");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

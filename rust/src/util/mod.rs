@@ -1,0 +1,12 @@
+//! Shared utilities: the crate error type, a deterministic PRNG, summary
+//! statistics, and a minimal property-testing harness (the offline build
+//! has no `proptest`; `prop.rs` provides the subset we need).
+
+pub mod error;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+
+pub use error::Error;
+pub use prng::SplitMix64;
+pub use stats::Summary;

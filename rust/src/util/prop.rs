@@ -1,0 +1,101 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline crate set has no `proptest`/`quickcheck`, so this module
+//! provides the subset we rely on: run a property over `N` deterministic
+//! pseudo-random cases and, on failure, report the seed and case index so
+//! the exact case can be replayed. No shrinking — cases are kept small by
+//! construction instead.
+
+use super::prng::SplitMix64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: u32,
+    /// Base seed; each case uses `seed ^ case_index`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs. `gen` receives a fresh
+/// deterministic PRNG per case. Panics (with seed + case index) if the
+/// property returns an `Err`.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut SplitMix64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = SplitMix64::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={:#x}, case={case}, case_seed={case_seed:#x}):\n  input: {input:?}\n  {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// `forall` with the default config.
+pub fn check<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut SplitMix64) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall(Config::default(), gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u32;
+        forall(
+            Config { cases: 17, seed: 1 },
+            |r| r.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        check(|r| r.below(10), |&v| if v < 10 { Err(format!("boom {v}")) } else { Ok(()) });
+    }
+
+    #[test]
+    fn generation_is_deterministic_across_runs() {
+        let mut first: Vec<u64> = vec![];
+        forall(
+            Config { cases: 8, seed: 99 },
+            |r| r.next_u64(),
+            |&v| {
+                first.push(v);
+                Ok(())
+            },
+        );
+        let mut second: Vec<u64> = vec![];
+        forall(
+            Config { cases: 8, seed: 99 },
+            |r| r.next_u64(),
+            |&v| {
+                second.push(v);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

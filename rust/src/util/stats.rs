@@ -1,0 +1,175 @@
+//! Summary statistics for benchmark timing — also the backing store of the
+//! `nvprof`-analog profiler that regenerates the paper's Table 1 columns
+//! (Time, #Calls, Avg, Min, Max).
+
+use std::time::Duration;
+
+/// Online summary of a series of duration samples.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    total_ns: u128,
+    min_ns: u128,
+    max_ns: u128,
+    /// Sum of squared ns for stddev (Welford would be fancier; samples are
+    /// bounded and u128 sums cannot realistically overflow here).
+    sumsq_ns: u128,
+}
+
+impl Summary {
+    /// Empty summary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos();
+        if self.n == 0 {
+            self.min_ns = ns;
+            self.max_ns = ns;
+        } else {
+            self.min_ns = self.min_ns.min(ns);
+            self.max_ns = self.max_ns.max(ns);
+        }
+        self.n += 1;
+        self.total_ns += ns;
+        self.sumsq_ns += ns * ns;
+    }
+
+    /// Merge another summary into this one.
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.n += other.n;
+        self.total_ns += other.total_ns;
+        self.sumsq_ns += other.sumsq_ns;
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Total across samples.
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.total_ns.min(u64::MAX as u128) as u64)
+    }
+
+    /// Total in milliseconds (Table 1 "Time (ms)" column).
+    pub fn total_ms(&self) -> f64 {
+        self.total_ns as f64 / 1e6
+    }
+
+    /// Mean in microseconds (Table 1 "Avg (µs)" column).
+    pub fn avg_us(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.total_ns as f64 / self.n as f64 / 1e3
+    }
+
+    /// Min in microseconds.
+    pub fn min_us(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.min_ns as f64 / 1e3
+    }
+
+    /// Max in microseconds.
+    pub fn max_us(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.max_ns as f64 / 1e3
+    }
+
+    /// Population standard deviation in microseconds.
+    pub fn stddev_us(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let mean = self.total_ns as f64 / self.n as f64;
+        let var = self.sumsq_ns as f64 / self.n as f64 - mean * mean;
+        var.max(0.0).sqrt() / 1e3
+    }
+}
+
+/// Time a closure, returning (result, elapsed).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = std::time::Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Relative difference |a-b| / max(a,b); the paper's Fig. 2 "variance is
+/// less than 1%" criterion is `rel_diff < 0.01`.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    if a == 0.0 && b == 0.0 {
+        return 0.0;
+    }
+    (a - b).abs() / a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_records_min_max_avg() {
+        let mut s = Summary::new();
+        s.record(Duration::from_micros(10));
+        s.record(Duration::from_micros(20));
+        s.record(Duration::from_micros(30));
+        assert_eq!(s.count(), 3);
+        assert!((s.avg_us() - 20.0).abs() < 1e-9);
+        assert!((s.min_us() - 10.0).abs() < 1e-9);
+        assert!((s.max_us() - 30.0).abs() < 1e-9);
+        assert!((s.total_ms() - 0.06).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Summary::new();
+        a.record(Duration::from_micros(5));
+        let mut b = Summary::new();
+        b.record(Duration::from_micros(15));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.avg_us() - 10.0).abs() < 1e-9);
+        assert!((a.min_us() - 5.0).abs() < 1e-9);
+        assert!((a.max_us() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroes() {
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.avg_us(), 0.0);
+        assert_eq!(s.stddev_us(), 0.0);
+    }
+
+    #[test]
+    fn stddev_of_constant_series_is_zero() {
+        let mut s = Summary::new();
+        for _ in 0..10 {
+            s.record(Duration::from_micros(42));
+        }
+        assert!(s.stddev_us() < 1e-6);
+    }
+
+    #[test]
+    fn rel_diff_basics() {
+        assert_eq!(rel_diff(0.0, 0.0), 0.0);
+        assert!((rel_diff(100.0, 99.5) - 0.005).abs() < 1e-12);
+        assert!(rel_diff(1.0, 2.0) > 0.49);
+    }
+}

@@ -1,0 +1,96 @@
+//! Every benchmark verifies against its host reference under BOTH
+//! runtime builds, and produces the same checksum under both — the
+//! functional-equivalence half of the paper's evaluation (§4.2) applied
+//! to the full Fig.-2 suite.
+
+use omprt::benchmarks::{by_name, Scale};
+use omprt::coordinator::Coordinator;
+use omprt::devrt::RuntimeKind;
+use omprt::runtime::{ArtifactManifest, PjrtService};
+use omprt::sim::Arch;
+use std::path::Path;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactManifest::load(&dir).ok()
+}
+
+fn check(name: &str) {
+    let bench = by_name(name, Scale::Small).unwrap();
+    let man = manifest();
+    if bench.needs_artifacts() && man.is_none() {
+        eprintln!("skipping {name}: run `make artifacts` first");
+        return;
+    }
+    let svc = if bench.needs_artifacts() { Some(PjrtService::start().unwrap()) } else { None };
+    let mut checksums = vec![];
+    for kind in RuntimeKind::all() {
+        let mut c = Coordinator::new(kind, Arch::Nvptx64);
+        if let (Some(svc), Some(man)) = (&svc, &man) {
+            if bench.needs_artifacts() {
+                c.attach_artifacts_with(svc, man).unwrap();
+            }
+        }
+        let r = bench.run(&c).unwrap();
+        assert!(r.verified, "{name} failed verification under {kind}");
+        checksums.push((kind, r.checksum));
+    }
+    assert_eq!(
+        checksums[0].1, checksums[1].1,
+        "{name}: checksum differs between runtimes: {checksums:?}"
+    );
+}
+
+#[test]
+fn postencil_verifies_on_both_runtimes() {
+    check("postencil");
+}
+
+#[test]
+fn polbm_verifies_on_both_runtimes() {
+    check("polbm");
+}
+
+#[test]
+fn pomriq_verifies_on_both_runtimes() {
+    check("pomriq");
+}
+
+#[test]
+fn pep_verifies_on_both_runtimes() {
+    check("pep");
+}
+
+#[test]
+fn pcg_verifies_on_both_runtimes() {
+    check("pcg");
+}
+
+#[test]
+fn pbt_verifies_on_both_runtimes() {
+    check("pbt");
+}
+
+#[test]
+fn miniqmc_verifies_on_both_runtimes() {
+    check("miniqmc");
+}
+
+#[test]
+fn miniqmc_profile_has_table1_shape() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let b = omprt::benchmarks::miniqmc::MiniQmc::new(Scale::Small);
+    let mut c = Coordinator::new(RuntimeKind::Portable, Arch::Nvptx64);
+    c.attach_artifacts(&man).unwrap();
+    let p = b.run_profiled(&c).unwrap();
+    assert!(p.result.verified);
+    // 3 steps × 7 and 3 × 2 calls
+    assert_eq!(p.vgh.count(), 21);
+    assert_eq!(p.det.count(), 6);
+    assert!(p.vgh.avg_us() > 0.0);
+    assert!(p.vgh.min_us() <= p.vgh.avg_us());
+    assert!(p.vgh.max_us() >= p.vgh.avg_us());
+}

@@ -1,0 +1,55 @@
+//! §4.2 functional testing: the conformance suite (SOLLVE V&V analog)
+//! must pass, and its full report must be **identical** under the legacy
+//! and portable runtimes on both architectures — "All ran identically
+//! with the new OpenMP runtime as they had using the previous device
+//! runtime."
+
+use omprt::conformance::{run_matrix, run_suite};
+use omprt::coordinator::Coordinator;
+use omprt::devrt::RuntimeKind;
+use omprt::sim::Arch;
+
+#[test]
+fn suite_passes_on_portable_nvptx() {
+    let c = Coordinator::new(RuntimeKind::Portable, Arch::Nvptx64);
+    for o in run_suite(&c) {
+        assert!(o.result.is_ok(), "{}: {:?}", o.name, o.result);
+    }
+}
+
+#[test]
+fn suite_reports_identical_across_runtimes_and_archs() {
+    let (rows, identical) = run_matrix();
+    for (kind, arch, outcomes) in &rows {
+        for o in outcomes {
+            assert!(o.result.is_ok(), "{kind}/{arch} {}: {:?}", o.name, o.result);
+        }
+    }
+    assert!(identical, "conformance observables differ across configurations");
+}
+
+#[test]
+fn expected_observables_spotcheck() {
+    let c = Coordinator::new(RuntimeKind::Legacy, Arch::Amdgcn);
+    let outcomes = run_suite(&c);
+    let get = |name: &str| {
+        outcomes
+            .iter()
+            .find(|o| o.name == name)
+            .unwrap()
+            .result
+            .clone()
+            .unwrap()
+    };
+    // 2 teams × Σ(0..63)
+    assert_eq!(get("atomic.add_sum"), "[4032]");
+    // 100 increments wrapping at 6 → 100 % 7
+    assert_eq!(get("atomic.inc_wraps"), "[2]");
+    // Σ(0..95)
+    assert_eq!(get("reduce.add_f64"), "[4560]");
+    // Σ tid over one block of 128
+    assert_eq!(get("reduce.warp_shuffle_u32"), "[8128]");
+    assert_eq!(get("icv.num_threads"), "[40]");
+    assert_eq!(get("alloc_shared.stack"), "[1]");
+    assert_eq!(get("variant.wrong_arch_intrinsic_traps"), "trapped=true");
+}

@@ -1,0 +1,374 @@
+//! End-to-end integration tests of the device runtime over the SIMT
+//! simulator: generic-mode parallel regions (the warp-specialization
+//! state machine), SPMD kernels, worksharing, reductions, atomics and the
+//! shared-memory allocator — each run under **both** runtime builds on
+//! **both** architectures, asserting identical results (the paper's §4.2
+//! functional-equivalence claim at the API level).
+
+use omprt::devrt::{self, irlib, state, RuntimeKind};
+use omprt::ir::passes::OptLevel;
+use omprt::ir::{AddrSpace, BinOp, CastOp, CmpPred, FunctionBuilder, Module, Operand, Type};
+use omprt::sim::{launch_kernel, Arch, DeviceDesc, GlobalMemory, LaunchConfig, LoadedModule};
+
+/// Build, link against `rt`, optimize, load, launch, and return the
+/// output buffer contents as u32 words.
+fn run(
+    kind: RuntimeKind,
+    arch: Arch,
+    mut module: Module,
+    kernel: &str,
+    out_words: usize,
+    extra_args: &[u64],
+    cfg: LaunchConfig,
+) -> Vec<u32> {
+    let rt = devrt::build(kind, arch);
+    rt.link_and_optimize(&mut module, OptLevel::O2).unwrap();
+    let desc = DeviceDesc::for_arch(arch);
+    let gmem = GlobalMemory::new(64 << 20);
+    let lm = LoadedModule::load(module, &gmem).unwrap();
+    let out = gmem.alloc((out_words * 4) as u64, 8).unwrap();
+    let mut args = vec![out];
+    args.extend_from_slice(extra_args);
+    launch_kernel(&desc, &lm, kernel, &args, &gmem, &rt.bindings, cfg).unwrap();
+    let mut bytes = vec![0u8; out_words * 4];
+    gmem.read_bytes(out, &mut bytes).unwrap();
+    bytes.chunks(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Run under all four (kind × arch) combinations and assert that results
+/// agree; returns the common result.
+fn run_everywhere(
+    mk: impl Fn() -> Module,
+    kernel: &str,
+    out_words: usize,
+    cfg: LaunchConfig,
+) -> Vec<u32> {
+    let mut results = vec![];
+    for kind in RuntimeKind::all() {
+        for arch in Arch::all() {
+            let r = run(kind, arch, mk(), kernel, out_words, &[], cfg);
+            results.push(((kind, arch), r));
+        }
+    }
+    let (first_cfg, first) = &results[0];
+    for (cfg_i, r) in &results[1..] {
+        assert_eq!(r, first, "{cfg_i:?} differs from {first_cfg:?}");
+    }
+    first.clone()
+}
+
+/// Generic-mode kernel: the main thread runs two parallel regions; the
+/// region body writes `tid*2 + round` into out[tid].
+fn generic_parallel_module() -> Module {
+    let mut m = Module::new("generic_parallel");
+
+    // Outlined region: fn(omp_tid: i32, arg: i64) — arg is &out.
+    let mut r = FunctionBuilder::new("region", &[Type::I32, Type::I64], None);
+    let tid = r.param(0);
+    let arg = r.param(1);
+    let round = r.load(Type::I32, AddrSpace::Global, arg); // out[0] holds the round marker... no:
+    let _ = round;
+    // simpler: out[tid] = tid*2 + current value of out[tid] (0 then +1)
+    let addr = r.index(arg, tid, 4);
+    let cur = r.load(Type::I32, AddrSpace::Global, addr);
+    let t2 = r.mul(tid, Operand::i32(2));
+    let v = r.add(t2, cur);
+    let v1 = r.add(v, Operand::i32(1));
+    r.store(Type::I32, AddrSpace::Global, addr, v1);
+    r.ret();
+    m.add_func(r.build());
+
+    let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+    let out = b.param(0);
+    irlib::emit_generic_prologue(&mut b);
+    let fnid = b.call("gpu.funcref.region", &[], Type::I64);
+    let out64 = b.copy(out);
+    b.call_void(
+        "__kmpc_parallel_51",
+        &[fnid.into(), out64.into(), Operand::i32(0)],
+    );
+    // second region: accumulates again
+    b.call_void(
+        "__kmpc_parallel_51",
+        &[fnid.into(), out64.into(), Operand::i32(0)],
+    );
+    irlib::emit_generic_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+#[test]
+fn generic_mode_parallel_regions_execute_on_workers() {
+    // nvptx: width 32, block 128 → avail = 1 + 96 = 97 participants.
+    // Run separately per arch since avail depends on warp width.
+    for kind in RuntimeKind::all() {
+        for arch in Arch::all() {
+            let width = arch.warp_width();
+            let block = 2 * width + 7; // partial last warp
+            let avail = (1 + block - width) as usize;
+            let r = run(
+                kind,
+                arch,
+                generic_parallel_module(),
+                "k",
+                avail,
+                &[],
+                LaunchConfig::new(1, block),
+            );
+            for (tid, &v) in r.iter().enumerate() {
+                // two rounds: (2t + 1) then (2t + (2t+1) + 1) = 4t + 2
+                assert_eq!(v, (4 * tid + 2) as u32, "{kind} {arch} tid {tid}");
+            }
+        }
+    }
+}
+
+/// SPMD kernel exercising static worksharing + block reduction + atomics:
+/// out[0] = atomic sum of all iteration indices of [0, n);
+/// out[1] = f64 tree-reduction of per-thread partial counts;
+/// out[2] = atomic max over (i*7 mod 64);
+/// out[3] = atomicInc counter wrapped at 5.
+fn spmd_workshare_module(n: u32) -> Module {
+    let mut m = Module::new("spmd_ws");
+    let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+    let out = b.param(0);
+    irlib::emit_spmd_prologue(&mut b);
+    let tid = b.call("omp_get_thread_num", &[], Type::I32);
+    let packed = b.call(
+        "__kmpc_for_static_init_4",
+        &[
+            tid.into(),
+            Operand::i32(state::SCHED_STATIC as i32),
+            Operand::i32(0),
+            Operand::i32(n as i32),
+            Operand::i32(1),
+        ],
+        Type::I64,
+    );
+    let lb = b.cast(CastOp::Trunc, packed, Type::I32);
+    let hi = b.bin(BinOp::LShr, packed, Operand::i64(32));
+    let ub = b.cast(CastOp::Trunc, hi, Type::I32);
+    let count = b.copy(Operand::i32(0));
+    b.for_range(lb, ub, Operand::i32(1), |b, i| {
+        b.call("__kmpc_atomic_add", &[out.into(), i.into()], Type::I32);
+        let i7 = b.mul(i, Operand::i32(7));
+        let v = b.bin(BinOp::And, i7, Operand::i32(63));
+        let a2 = b.add(out, Operand::i64(8));
+        b.call("__kmpc_atomic_max", &[a2.into(), v.into()], Type::I32);
+        let a3 = b.add(out, Operand::i64(12));
+        b.call("__kmpc_atomic_inc", &[a3.into(), Operand::i32(4)], Type::I32);
+        let c1 = b.add(count, Operand::i32(1));
+        b.assign(count, c1);
+    });
+    let cf = b.cast(CastOp::SIToFP, count, Type::F64);
+    let total = b.call("__kmpc_reduce_add_f64", &[tid.into(), cf.into()], Type::F64);
+    let ti = b.cast(CastOp::FPToSI, total, Type::I32);
+    let is0 = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+    b.if_(is0, |b| {
+        let a1 = b.add(out, Operand::i64(4));
+        b.store(Type::I32, AddrSpace::Global, a1, ti);
+    });
+    irlib::emit_spmd_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+#[test]
+fn spmd_worksharing_reduction_and_atomics_agree_everywhere() {
+    let n = 1000u32;
+    let r = run_everywhere(|| spmd_workshare_module(n), "k", 4, LaunchConfig::new(1, 128));
+    assert_eq!(r[0], (0..n).sum::<u32>(), "atomic_add sum");
+    assert_eq!(r[1], n, "reduce_add_f64 total iterations");
+    // max of (7i mod 64) over i<1000 → 63 (since gcd(7,64)=1 covers all)
+    assert_eq!(r[2], 63, "atomic_max");
+    // n increments wrapping at 4: counter cycles 0..=4 (period 5)
+    assert_eq!(r[3], (n % 5), "atomic_inc wrap");
+}
+
+/// Dynamic + guided dispatch must cover each iteration exactly once.
+fn dispatch_module(n: u32, sched: u32) -> Module {
+    let mut m = Module::new("dispatch");
+    let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+    let out = b.param(0);
+    irlib::emit_spmd_prologue(&mut b);
+    b.call_void(
+        "__kmpc_dispatch_init_4",
+        &[Operand::i64(0), Operand::i64(n as i64), Operand::i64(7), Operand::i64(sched as i64)],
+    );
+    b.loop_(|b| {
+        let packed = b.call("__kmpc_dispatch_next_4", &[], Type::I64);
+        let done = b.cmp(CmpPred::Eq, packed, Operand::i64(state::DISPATCH_DONE as i64));
+        b.if_(done, |b| b.break_());
+        let lb = b.cast(CastOp::Trunc, packed, Type::I32);
+        let hi = b.bin(BinOp::LShr, packed, Operand::i64(32));
+        let ub = b.cast(CastOp::Trunc, hi, Type::I32);
+        b.for_range(lb, ub, Operand::i32(1), |b, i| {
+            let addr = b.index(out, i, 4);
+            b.call("__kmpc_atomic_add", &[addr.into(), Operand::i32(1)], Type::I32);
+        });
+    });
+    b.call_void("__kmpc_dispatch_fini_4", &[]);
+    irlib::emit_spmd_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+#[test]
+fn dynamic_dispatch_covers_iterations_exactly_once() {
+    let n = 500;
+    let r = run_everywhere(
+        || dispatch_module(n, state::SCHED_DYNAMIC),
+        "k",
+        n as usize,
+        LaunchConfig::new(1, 96),
+    );
+    assert!(r.iter().all(|&v| v == 1), "each iteration exactly once: {r:?}");
+}
+
+#[test]
+fn guided_dispatch_covers_iterations_exactly_once() {
+    let n = 500;
+    let r = run_everywhere(
+        || dispatch_module(n, state::SCHED_GUIDED),
+        "k",
+        n as usize,
+        LaunchConfig::new(1, 96),
+    );
+    assert!(r.iter().all(|&v| v == 1), "{r:?}");
+}
+
+/// alloc_shared: thread 0 allocates a team buffer and publishes its
+/// address through an uninitialized shared global (the
+/// `loader_uninitialized` model of §3.1); threads fill it; thread 0
+/// copies it out.
+fn alloc_shared_module() -> Module {
+    let mut m = Module::new("alloc_shared");
+    m.add_global(omprt::ir::Global {
+        name: "team_buf_ptr".into(),
+        space: AddrSpace::Shared,
+        size: 8,
+        align: 8,
+        init: None,
+        uninit: true,
+        linkage: omprt::ir::Linkage::Internal,
+    });
+    let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+    let out = b.param(0);
+    irlib::emit_spmd_prologue(&mut b);
+    let tid = b.call("gpu.tid.x", &[], Type::I32);
+    let n = b.call("gpu.ntid.x", &[], Type::I32);
+    let nbytes = b.mul(n, Operand::i32(4));
+    let nbytes64 = b.sext64(nbytes);
+    let ptr_slot = b.global_addr("team_buf_ptr");
+    let is_alloc = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+    b.if_(is_alloc, |b| {
+        let alloc = b.call("__kmpc_alloc_shared", &[nbytes64.into()], Type::I64);
+        b.store(Type::I64, AddrSpace::Shared, ptr_slot, alloc);
+    });
+    b.call_void("__kmpc_barrier", &[]);
+    let buf = b.load(Type::I64, AddrSpace::Shared, ptr_slot);
+    let my = b.index(buf, tid, 4);
+    let v = b.mul(tid, Operand::i32(3));
+    b.store(Type::I32, AddrSpace::Shared, my, v);
+    b.call_void("__kmpc_barrier", &[]);
+    // thread 0 copies everything out
+    let is0 = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+    b.if_(is0, |b| {
+        b.for_range(Operand::i32(0), n, Operand::i32(1), |b, i| {
+            let s = b.index(buf, i, 4);
+            let val = b.load(Type::I32, AddrSpace::Shared, s);
+            let d = b.index(out, i, 4);
+            b.store(Type::I32, AddrSpace::Global, d, val);
+        });
+    });
+    b.call_void("__kmpc_barrier", &[]);
+    let nbytes64b = b.sext64(nbytes);
+    let is_freer = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+    b.if_(is_freer, |b| {
+        b.call_void("__kmpc_free_shared", &[nbytes64b.into()]);
+    });
+    irlib::emit_spmd_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+#[test]
+fn alloc_shared_provides_team_visible_memory() {
+    let block = 64;
+    let r = run_everywhere(alloc_shared_module, "k", block, LaunchConfig::new(1, block as u32));
+    for (i, &v) in r.iter().enumerate() {
+        assert_eq!(v, (i * 3) as u32);
+    }
+}
+
+/// Multi-team kernel: every team atomically adds its team number + 1 to
+/// out[0] — checks team ids and cross-team atomics.
+fn teams_module() -> Module {
+    let mut m = Module::new("teams");
+    let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+    let out = b.param(0);
+    irlib::emit_spmd_prologue(&mut b);
+    let tid = b.call("omp_get_thread_num", &[], Type::I32);
+    let is0 = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+    b.if_(is0, |b| {
+        let team = b.call("omp_get_team_num", &[], Type::I32);
+        let t1 = b.add(team, Operand::i32(1));
+        b.call("__kmpc_atomic_add", &[out.into(), t1.into()], Type::I32);
+    });
+    irlib::emit_spmd_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+#[test]
+fn multi_team_launch_sums_team_ids() {
+    let teams = 10u32;
+    let r = run_everywhere(teams_module, "k", 1, LaunchConfig::new(teams, 64));
+    assert_eq!(r[0], (1..=teams).sum::<u32>());
+}
+
+/// omp_get_num_threads ICV semantics: 1 outside parallel (generic), team
+/// size inside.
+#[test]
+fn num_threads_icv_tracks_parallel_region() {
+    let mut m = Module::new("icv");
+    let mut r = FunctionBuilder::new("region", &[Type::I32, Type::I64], None);
+    let tid = r.param(0);
+    let arg = r.param(1);
+    let is0 = r.cmp(CmpPred::Eq, tid, Operand::i32(0));
+    r.if_(is0, |b| {
+        let n = b.call("omp_get_num_threads", &[], Type::I32);
+        let a = b.add(arg, Operand::i64(4));
+        b.store(Type::I32, AddrSpace::Global, a, n);
+    });
+    r.ret();
+    m.add_func(r.build());
+
+    let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+    let out = b.param(0);
+    irlib::emit_generic_prologue(&mut b);
+    let n_outside = b.call("omp_get_num_threads", &[], Type::I32);
+    b.store(Type::I32, AddrSpace::Global, out, n_outside);
+    let fnid = b.call("gpu.funcref.region", &[], Type::I64);
+    b.call_void("__kmpc_parallel_51", &[fnid.into(), out.into(), Operand::i32(5)]);
+    irlib::emit_generic_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+
+    let r = run(
+        RuntimeKind::Portable,
+        Arch::Nvptx64,
+        m,
+        "k",
+        2,
+        &[],
+        LaunchConfig::new(1, 96),
+    );
+    assert_eq!(r[0], 1, "outside parallel");
+    assert_eq!(r[1], 5, "inside parallel with num_threads(5)");
+}

@@ -1,0 +1,126 @@
+//! Integration: AOT artifacts (JAX/Pallas → HLO text) loaded and executed
+//! through the full offload pipeline — host runtime mapping, device IR
+//! kernel calling `payload.*`, PJRT execution — on both runtime builds.
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are missing,
+//! e.g. in a bare `cargo test` before the first build).
+
+use omprt::coordinator::Coordinator;
+use omprt::devrt::{irlib, RuntimeKind};
+use omprt::hostrt::{DataEnv, MapType};
+use omprt::ir::passes::OptLevel;
+use omprt::ir::{CmpPred, FunctionBuilder, Module, Operand, Type};
+use omprt::runtime::ArtifactManifest;
+use omprt::sim::{Arch, LaunchConfig};
+use std::path::Path;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactManifest::load(&dir).ok()
+}
+
+/// Kernel: thread 0 of the (single) team calls the stencil payload once.
+fn stencil_kernel() -> Module {
+    let mut m = Module::new("stencil_call");
+    let mut b = FunctionBuilder::new("k", &[Type::I64, Type::I64], None).kernel();
+    let out = b.param(0);
+    let inp = b.param(1);
+    irlib::emit_spmd_prologue(&mut b);
+    let tid = b.call("gpu.tid.x", &[], Type::I32);
+    let is0 = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+    b.if_(is0, |b| {
+        b.call_void("payload.stencil_tile", &[out.into(), inp.into()]);
+    });
+    irlib::emit_spmd_epilogue(&mut b);
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+#[test]
+fn pallas_stencil_artifact_runs_through_offload_pipeline() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rows = 32usize;
+    let cols = 258usize;
+    // One shared PJRT service across both runtime builds.
+    let svc = omprt::runtime::PjrtService::start().unwrap();
+    for kind in RuntimeKind::all() {
+        let mut c = Coordinator::new(kind, Arch::Nvptx64);
+        c.attach_artifacts_with(&svc, &man).unwrap();
+        let image = c.prepare(stencil_kernel(), OptLevel::O2).unwrap();
+
+        let mut env = DataEnv::new(&c.device);
+        let mut slab = vec![0f32; (rows + 2) * cols];
+        slab[17 * cols + 100] = 1.0; // point source
+        let mut out = vec![0f32; rows * cols];
+        let d_in = env.map(&slab, MapType::To).unwrap();
+        let d_out = env.map(&out, MapType::From).unwrap();
+        c.run_region(&image, "k", "stencil", &[d_out, d_in], LaunchConfig::new(1, 32)).unwrap();
+        env.unmap(&mut out).unwrap();
+        env.unmap(&mut slab).unwrap();
+
+        // Diffusion of the point source (center 0.5, neighbours 0.125).
+        assert_eq!(out[16 * cols + 100], 0.5, "{kind}");
+        assert_eq!(out[15 * cols + 100], 0.125, "{kind}");
+        assert_eq!(out[17 * cols + 100], 0.125, "{kind}");
+        assert_eq!(out[16 * cols + 99], 0.125, "{kind}");
+        assert_eq!(out[16 * cols + 101], 0.125, "{kind}");
+        assert_eq!(out.iter().filter(|&&v| v != 0.0).count(), 5, "{kind}");
+    }
+}
+
+/// vgh payload through the pipeline: compare against a host matmul.
+#[test]
+fn pallas_vgh_artifact_matches_host_matmul() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (m_dim, b_dim, o_dim) = (160usize, 64usize, 32usize);
+    let mut c = Coordinator::new(RuntimeKind::Portable, Arch::Amdgcn);
+    c.attach_artifacts(&man).unwrap();
+
+    let mut mmod = Module::new("vgh_call");
+    let mut b = FunctionBuilder::new("k", &[Type::I64, Type::I64, Type::I64], None).kernel();
+    let (out, basis, coef) = (b.param(0), b.param(1), b.param(2));
+    irlib::emit_spmd_prologue(&mut b);
+    let tid = b.call("gpu.tid.x", &[], Type::I32);
+    let is0 = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+    b.if_(is0, |bb| {
+        bb.call_void("payload.vgh_tile", &[out.into(), basis.into(), coef.into()]);
+    });
+    irlib::emit_spmd_epilogue(&mut b);
+    b.ret();
+    mmod.add_func(b.build());
+    let image = c.prepare(mmod, OptLevel::O2).unwrap();
+
+    let mut rng = omprt::util::SplitMix64::new(42);
+    let mut basis_h = vec![0f32; m_dim * b_dim];
+    let mut coef_h = vec![0f32; b_dim * o_dim];
+    rng.fill_f32(&mut basis_h, -1.0, 1.0);
+    rng.fill_f32(&mut coef_h, -1.0, 1.0);
+    let mut out_h = vec![0f32; m_dim * o_dim];
+
+    let mut env = DataEnv::new(&c.device);
+    let d_basis = env.map(&basis_h, MapType::To).unwrap();
+    let d_coef = env.map(&coef_h, MapType::To).unwrap();
+    let d_out = env.map(&out_h, MapType::From).unwrap();
+    c.run_region(&image, "k", "evaluate_vgh", &[d_out, d_basis, d_coef], LaunchConfig::new(1, 64))
+        .unwrap();
+    env.unmap(&mut out_h).unwrap();
+
+    for i in 0..m_dim {
+        for j in 0..o_dim {
+            let want: f32 =
+                (0..b_dim).map(|k| basis_h[i * b_dim + k] * coef_h[k * o_dim + j]).sum();
+            let got = out_h[i * o_dim + j];
+            assert!(
+                (want - got).abs() <= 1e-3 * want.abs().max(1.0),
+                "({i},{j}): want {want} got {got}"
+            );
+        }
+    }
+}

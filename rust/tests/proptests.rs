@@ -1,0 +1,238 @@
+//! Property-based tests over coordinator/runtime invariants, using the
+//! in-house `util::prop` harness (offline build has no proptest).
+
+use omprt::coordinator::Coordinator;
+use omprt::devrt::{irlib, state, RuntimeKind};
+use omprt::hostrt::{DataEnv, MapType};
+use omprt::ir::passes::OptLevel;
+use omprt::ir::{CmpPred, FunctionBuilder, Module, Operand, Type};
+use omprt::sim::{Arch, LaunchConfig};
+use omprt::util::prop::{forall, Config};
+
+/// Worksharing invariant: for random (n, threads, sched, chunk) the claimed
+/// ranges tile the iteration space exactly once.
+#[test]
+fn prop_worksharing_tiles_iteration_space() {
+    let c = Coordinator::new(RuntimeKind::Portable, Arch::Nvptx64);
+    forall(
+        Config { cases: 12, seed: 0x51AB },
+        |r| {
+            let n = 1 + r.below(300) as i32;
+            let block = [17u32, 32, 48, 64][r.below(4) as usize];
+            let sched = [state::SCHED_DYNAMIC, state::SCHED_GUIDED][r.below(2) as usize];
+            let chunk = 1 + r.below(9) as i64;
+            (n, block, sched, chunk)
+        },
+        |&(n, block, sched, chunk)| {
+            let mut m = Module::new("p");
+            let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+            let out = b.param(0);
+            irlib::emit_spmd_prologue(&mut b);
+            b.call_void(
+                "__kmpc_dispatch_init_4",
+                &[
+                    Operand::i64(0),
+                    Operand::i64(n as i64),
+                    Operand::i64(chunk),
+                    Operand::i64(sched as i64),
+                ],
+            );
+            b.loop_(|b| {
+                let packed = b.call("__kmpc_dispatch_next_4", &[], Type::I64);
+                let done =
+                    b.cmp(CmpPred::Eq, packed, Operand::i64(state::DISPATCH_DONE as i64));
+                b.if_(done, |b| b.break_());
+                let (lb, ub) = omprt::benchmarks::common::unpack_range(b, packed);
+                b.for_range(lb, ub, Operand::i32(1), |b, i| {
+                    let a = b.index(out, i, 4);
+                    b.call("__kmpc_atomic_add", &[a.into(), Operand::i32(1)], Type::I32);
+                });
+            });
+            b.call_void("__kmpc_dispatch_fini_4", &[]);
+            irlib::emit_spmd_epilogue(&mut b);
+            b.ret();
+            m.add_func(b.build());
+
+            let image = c.prepare(m, OptLevel::O2).map_err(|e| e.to_string())?;
+            let mut env = DataEnv::new(&c.device);
+            let mut out = vec![0u32; n as usize];
+            let d = env.map(&out, MapType::Tofrom).map_err(|e| e.to_string())?;
+            c.device
+                .offload(&image, "k", &[d], LaunchConfig::new(1, block))
+                .map_err(|e| e.to_string())?;
+            env.unmap(&mut out).map_err(|e| e.to_string())?;
+            if out.iter().all(|&v| v == 1) {
+                Ok(())
+            } else {
+                Err(format!("coverage broken: {out:?}"))
+            }
+        },
+    );
+}
+
+/// Static schedule invariant (pure binding math, fast): ranges are
+/// contiguous, ordered, within bounds, and sum to the whole space.
+#[test]
+fn prop_static_partition_is_exact() {
+    let c = Coordinator::new(RuntimeKind::Legacy, Arch::Amdgcn);
+    forall(
+        Config { cases: 10, seed: 0xBEEF },
+        |r| {
+            let n = r.below(500) as i32; // may be 0
+            let block = 1 + r.below(128) as u32;
+            (n, block)
+        },
+        |&(n, block)| {
+            let mut m = Module::new("p");
+            let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+            let out = b.param(0);
+            irlib::emit_spmd_prologue(&mut b);
+            let (lb, ub) =
+                omprt::benchmarks::common::emit_static_range(&mut b, Operand::i32(0), Operand::i32(n));
+            b.for_range(lb, ub, Operand::i32(1), |b, i| {
+                let a = b.index(out, i, 4);
+                b.call("__kmpc_atomic_add", &[a.into(), Operand::i32(1)], Type::I32);
+            });
+            irlib::emit_spmd_epilogue(&mut b);
+            b.ret();
+            m.add_func(b.build());
+
+            let image = c.prepare(m, OptLevel::O2).map_err(|e| e.to_string())?;
+            let mut env = DataEnv::new(&c.device);
+            let mut out = vec![0u32; (n as usize).max(1)];
+            let d = env.map(&out, MapType::Tofrom).map_err(|e| e.to_string())?;
+            c.device
+                .offload(&image, "k", &[d], LaunchConfig::new(1, block))
+                .map_err(|e| e.to_string())?;
+            env.unmap(&mut out).map_err(|e| e.to_string())?;
+            if out[..n as usize].iter().all(|&v| v == 1) {
+                Ok(())
+            } else {
+                Err(format!("partition broken for n={n} block={block}: {out:?}"))
+            }
+        },
+    );
+}
+
+/// Atomic equivalence: the OpenMP-5.1-constructed atomics and direct
+/// device atomics produce identical final states for random op sequences.
+#[test]
+fn prop_omp_atomics_equal_intrinsic_atomics() {
+    // Use one coordinator per runtime; drive identical op sequences.
+    let legacy = Coordinator::new(RuntimeKind::Legacy, Arch::Nvptx64);
+    let portable = Coordinator::new(RuntimeKind::Portable, Arch::Nvptx64);
+    forall(
+        Config { cases: 8, seed: 0xA70 },
+        |r| {
+            // sequence of (op, operand) pairs baked into the kernel
+            let ops: Vec<(u8, i32)> = (0..8)
+                .map(|_| (r.below(4) as u8, r.below(100) as i32))
+                .collect();
+            ops
+        },
+        |ops| {
+            let build = |m_name: &str| {
+                let mut m = Module::new(m_name.to_string());
+                let mut b = FunctionBuilder::new("k", &[Type::I64], None).kernel();
+                let out = b.param(0);
+                irlib::emit_spmd_prologue(&mut b);
+                let tid = b.call("gpu.tid.x", &[], Type::I32);
+                let is0 = b.cmp(CmpPred::Eq, tid, Operand::i32(0));
+                b.if_(is0, |b| {
+                    for &(op, v) in ops {
+                        match op {
+                            0 => {
+                                b.call(
+                                    "__kmpc_atomic_add",
+                                    &[out.into(), Operand::i32(v)],
+                                    Type::I32,
+                                );
+                            }
+                            1 => {
+                                b.call(
+                                    "__kmpc_atomic_max",
+                                    &[out.into(), Operand::i32(v)],
+                                    Type::I32,
+                                );
+                            }
+                            2 => {
+                                b.call(
+                                    "__kmpc_atomic_exchange",
+                                    &[out.into(), Operand::i32(v)],
+                                    Type::I32,
+                                );
+                            }
+                            _ => {
+                                b.call(
+                                    "__kmpc_atomic_inc",
+                                    &[out.into(), Operand::i32(v.max(1))],
+                                    Type::I32,
+                                );
+                            }
+                        }
+                    }
+                });
+                irlib::emit_spmd_epilogue(&mut b);
+                b.ret();
+                m.add_func(b.build());
+                m
+            };
+            let run = |c: &Coordinator| -> Result<u32, String> {
+                let image = c.prepare(build("p"), OptLevel::O2).map_err(|e| e.to_string())?;
+                let mut env = DataEnv::new(&c.device);
+                let mut out = vec![0u32; 1];
+                let d = env.map(&out, MapType::Tofrom).map_err(|e| e.to_string())?;
+                c.device
+                    .offload(&image, "k", &[d], LaunchConfig::new(1, 32))
+                    .map_err(|e| e.to_string())?;
+                env.unmap(&mut out).map_err(|e| e.to_string())?;
+                Ok(out[0])
+            };
+            let a = run(&legacy)?;
+            let b = run(&portable)?;
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("legacy={a} portable={b}"))
+            }
+        },
+    );
+}
+
+/// Data-environment invariant: map/unmap with random refcounts never
+/// leaks mappings and roundtrips data.
+#[test]
+fn prop_data_env_refcounts_balance() {
+    let dev = omprt::hostrt::OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+    forall(
+        Config { cases: 30, seed: 0xDA7A },
+        |r| (1 + r.below(40) as usize, 1 + r.below(4) as u32),
+        |&(len, refs)| {
+            let mut env = DataEnv::new(&dev);
+            let mut host: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let mut addr = None;
+            for _ in 0..refs {
+                let a = env.map(&host, MapType::Tofrom).map_err(|e| e.to_string())?;
+                if let Some(prev) = addr {
+                    if prev != a {
+                        return Err("address changed across remap".into());
+                    }
+                }
+                addr = Some(a);
+            }
+            for i in 0..refs {
+                env.unmap(&mut host).map_err(|e| e.to_string())?;
+                let expect_live = i + 1 < refs;
+                if (env.live_mappings() > 0) != expect_live {
+                    return Err(format!("live={} after {} unmaps", env.live_mappings(), i + 1));
+                }
+            }
+            for (i, v) in host.iter().enumerate() {
+                if *v != i as f32 {
+                    return Err(format!("data corrupted at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
