@@ -1,0 +1,88 @@
+//! BENCH: device-pool offload throughput — 1-device vs 4-device mixed
+//! pool, cold vs warm kernel-image cache, in launches/sec.
+//!
+//! The repeated-kernel workload replays the `scale`/`saxpy` conformance
+//! kernels; cold batches pay `prepare` (link + optimize + load) per
+//! device, warm batches should be queue-pop + map + launch only, so the
+//! warm/cold gap is the cache win and the 4-vs-1 gap is the scaling win.
+
+use omprt::devrt::RuntimeKind;
+use omprt::ir::passes::OptLevel;
+use omprt::sched::workload::{saxpy_request, scale_request};
+use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig};
+use omprt::sim::Arch;
+use std::time::Instant;
+
+const BATCH: usize = 256;
+const ELEMS: usize = 256;
+
+/// Submit one mixed batch and wait for every result; returns launches/sec.
+fn run_batch(pool: &DevicePool, batch: usize) -> f64 {
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(batch);
+    for i in 0..batch {
+        let (req, want) = if i % 2 == 0 {
+            let data: Vec<f32> = (0..ELEMS).map(|k| (k + i) as f32).collect();
+            scale_request(&data, Affinity::any(), OptLevel::O2)
+        } else {
+            let x: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
+            let y: Vec<f32> = (0..ELEMS).map(|k| (k + i) as f32).collect();
+            saxpy_request(0.5, &x, &y, Affinity::any(), OptLevel::O2)
+        };
+        handles.push((pool.submit(req).unwrap(), want));
+    }
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        let got = bytes_to_f32(resp.buffers[0].as_ref().unwrap());
+        assert_eq!(got, want, "pool result must match the host reference");
+    }
+    batch as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn bench_pool(name: &str, config: &PoolConfig) -> (f64, f64) {
+    let pool = DevicePool::new(config).unwrap();
+    let cold = run_batch(&pool, BATCH);
+    let warm = run_batch(&pool, BATCH);
+    let m = pool.metrics();
+    let cache = m.cache();
+    println!(
+        "{name:<22} cold {cold:>8.1} launches/s | warm {warm:>8.1} launches/s | \
+         speedup {:.2}x | cache {:.1}% hit ({} hits / {} misses)",
+        warm / cold,
+        cache.hit_rate() * 100.0,
+        cache.hits,
+        cache.misses
+    );
+    (cold, warm)
+}
+
+fn main() {
+    println!(
+        "\n=== pool throughput: {BATCH} requests/batch, {ELEMS} f32 elems, mixed scale/saxpy ===\n"
+    );
+    let (cold1, warm1) = bench_pool(
+        "1 device (portable)",
+        &PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64),
+    );
+    let (cold4, warm4) = bench_pool("4 devices (mixed)", &PoolConfig::mixed4());
+    println!(
+        "\n4-device vs 1-device: cold {:.2}x, warm {:.2}x",
+        cold4 / cold1,
+        warm4 / warm1
+    );
+
+    // The repeated-kernel workload must be cache-friendly: two modules
+    // over the pool's devices.
+    let pool = DevicePool::new(&PoolConfig::mixed4()).unwrap();
+    run_batch(&pool, BATCH);
+    let cache = pool.metrics().cache();
+    assert!(
+        cache.hit_rate() > 0.9,
+        "repeated-kernel batch must exceed 90% hit rate, got {:.1}%",
+        cache.hit_rate() * 100.0
+    );
+    println!(
+        "repeated-kernel batch hit rate: {:.1}% (> 90% required)",
+        cache.hit_rate() * 100.0
+    );
+}

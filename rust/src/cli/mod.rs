@@ -7,6 +7,7 @@
 //! omprt conformance
 //! omprt code-compare
 //! omprt bench NAME  [--arch A] [--runtime legacy|portable] [--scale S]
+//! omprt pool        [--config FILE] [--requests N] [--elems N]
 //! omprt info
 //! ```
 
@@ -159,6 +160,26 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
             );
             Ok(())
         }
+        "pool" => {
+            let pool_cfg = match args.flags.get("config") {
+                Some(path) => {
+                    let doc = crate::config::Config::load(std::path::Path::new(path))?;
+                    crate::sched::PoolConfig::from_config(&doc)?
+                }
+                None => crate::sched::PoolConfig::default(),
+            };
+            let requests = args
+                .flags
+                .get("requests")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(256usize);
+            let elems = args
+                .flags
+                .get("elems")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(256usize);
+            run_pool_demo(&pool_cfg, requests, elems)
+        }
         "info" => {
             for arch in Arch::all() {
                 let d = crate::sim::DeviceDesc::for_arch(arch);
@@ -185,6 +206,63 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
     }
 }
 
+/// The `pool` subcommand: drive a mixed-arch, mixed-runtime device pool
+/// with a mixed workload (`scale` + `saxpy`, rotating affinities), verify
+/// every result against the host reference, print the pool report.
+fn run_pool_demo(
+    pool_cfg: &crate::sched::PoolConfig,
+    requests: usize,
+    elems: usize,
+) -> Result<(), crate::util::Error> {
+    use crate::sched::workload::{saxpy_request, scale_request};
+    use crate::sched::{bytes_to_f32, Affinity};
+
+    let pc = crate::coordinator::PoolCoordinator::new(pool_cfg)?;
+    println!(
+        "pool demo: {} requests x {} elems over devices {:?}",
+        requests,
+        elems,
+        pc.pool.specs().iter().map(|s| s.to_string()).collect::<Vec<_>>()
+    );
+    // Affinities rotate over "anywhere" and every constraint the pool can
+    // actually satisfy.
+    let mut affinities = vec![Affinity::any()];
+    for spec in pc.pool.specs() {
+        affinities.push(Affinity::on_arch(spec.arch));
+        affinities.push(Affinity::on_kind(spec.kind));
+    }
+    let opt = pool_cfg.default_opt;
+    let mut handles = Vec::with_capacity(requests);
+    for r in 0..requests {
+        let affinity = affinities[r % affinities.len()];
+        let (req, want) = if r % 2 == 0 {
+            let data: Vec<f32> = (0..elems).map(|i| (i + r) as f32).collect();
+            scale_request(&data, affinity, opt)
+        } else {
+            let x: Vec<f32> = (0..elems).map(|i| i as f32).collect();
+            let y: Vec<f32> = (0..elems).map(|i| (i + r) as f32).collect();
+            saxpy_request(0.5, &x, &y, affinity, opt)
+        };
+        handles.push((pc.submit(req)?, want));
+    }
+    let mut bad = 0usize;
+    for (h, want) in handles {
+        let resp = h.wait()?;
+        let got = bytes_to_f32(resp.buffers[0].as_ref().expect("output buffer"));
+        if got != want {
+            bad += 1;
+        }
+    }
+    print!("{}", pc.format_report());
+    if bad > 0 {
+        return Err(crate::util::Error::Verify(format!(
+            "{bad}/{requests} pool results differ from the host reference"
+        )));
+    }
+    println!("all {requests} results match the host reference");
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "omprt — portable GPU device runtime (IWOMP'21 reproduction)\n\
@@ -197,8 +275,10 @@ fn print_help() {
          \x20 conformance   run the SOLLVE-analog suite on every runtime x arch\n\
          \x20 code-compare  diff the legacy vs portable runtime library text (par. 4.1)\n\
          \x20 bench NAME    run one benchmark (postencil|polbm|pomriq|pep|pcg|pbt|miniqmc)\n\
+         \x20 pool          drive a mixed device pool (async scheduler + image cache demo)\n\
          \x20 info          device + artifact info\n\
          \n\
-         FLAGS: --arch nvptx64|amdgcn  --scale small|paper  --reps N  --runtime legacy|portable"
+         FLAGS: --arch nvptx64|amdgcn  --scale small|paper  --reps N  --runtime legacy|portable\n\
+         \x20      pool: --config FILE ([pool] table)  --requests N  --elems N"
     );
 }

@@ -1,9 +1,13 @@
 //! The coordinator: ties the host runtime, PJRT service and profiler into
 //! the launch pipeline benchmarks drive, and owns the `nvprof`-analog
 //! per-region profiler that regenerates the paper's Table 1 columns.
+//! [`PoolCoordinator`] is the multi-device variant over
+//! [`crate::sched::DevicePool`].
 
+pub mod pool;
 pub mod profiler;
 
+pub use pool::{PoolCoordinator, PoolRegionReport};
 pub use profiler::{Profiler, RegionReport};
 
 use crate::devrt::RuntimeKind;

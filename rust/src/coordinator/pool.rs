@@ -1,0 +1,145 @@
+//! `PoolCoordinator` — the multi-device analog of [`super::Coordinator`]:
+//! owns a [`DevicePool`], aggregates the per-device `nvprof`-style region
+//! profiles into one report, and renders queue/throughput/cache metrics.
+
+use crate::sched::{DevicePool, OffloadHandle, OffloadRequest, PoolConfig, PoolMetrics};
+use crate::util::{Error, Summary};
+use std::collections::BTreeMap;
+
+/// One aggregated region row: per-device summaries merged.
+#[derive(Debug, Clone)]
+pub struct PoolRegionReport {
+    /// Region name.
+    pub name: String,
+    /// Summary merged across every device that ran the region.
+    pub summary: Summary,
+    /// How many devices contributed samples.
+    pub devices: usize,
+}
+
+/// A pool plus report plumbing.
+pub struct PoolCoordinator {
+    /// The device pool.
+    pub pool: DevicePool,
+}
+
+impl PoolCoordinator {
+    /// Build the pool from a config.
+    pub fn new(config: &PoolConfig) -> Result<PoolCoordinator, Error> {
+        Ok(PoolCoordinator { pool: DevicePool::new(config)? })
+    }
+
+    /// Submit through to the pool.
+    pub fn submit(&self, req: OffloadRequest) -> Result<OffloadHandle, Error> {
+        self.pool.submit(req)
+    }
+
+    /// Current queue/throughput/cache metrics.
+    pub fn metrics(&self) -> PoolMetrics {
+        self.pool.metrics()
+    }
+
+    /// Merge every device's profiler report into per-region totals.
+    pub fn region_report(&self) -> Vec<PoolRegionReport> {
+        let mut merged: BTreeMap<String, (Summary, usize)> = BTreeMap::new();
+        for (_, reports) in self.pool.profiler_reports() {
+            for r in reports {
+                let e = merged.entry(r.name.clone()).or_default();
+                e.0.merge(&r.summary);
+                e.1 += 1;
+            }
+        }
+        merged
+            .into_iter()
+            .map(|(name, (summary, devices))| PoolRegionReport { name, summary, devices })
+            .collect()
+    }
+
+    /// Render the full status report (device table, cache, regions).
+    pub fn format_report(&self) -> String {
+        let m = self.metrics();
+        let cache = m.cache();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "pool: {} devices | queue depth {} | submitted {} | completed {} | failed {}\n",
+            m.devices.len(),
+            m.queue_depth,
+            m.submitted,
+            m.completed,
+            m.failed
+        ));
+        out.push_str(&format!(
+            "throughput: {:.1} launches/s over {:.2}s | image cache: {} hits / {} misses ({:.1}% hit rate)\n",
+            m.throughput_per_sec(),
+            m.uptime.as_secs_f64(),
+            cache.hits,
+            cache.misses,
+            cache.hit_rate() * 100.0
+        ));
+        out.push_str("dev | runtime  | arch    | done  | images | hits/misses\n");
+        out.push_str("----+----------+---------+-------+--------+------------\n");
+        for d in &m.devices {
+            out.push_str(&format!(
+                "{:>3} | {:<8} | {:<7} | {:>5} | {:>6} | {}/{}\n",
+                d.id,
+                d.kind.to_string(),
+                d.arch.to_string(),
+                d.completed,
+                d.cached_images,
+                d.cache.hits,
+                d.cache.misses
+            ));
+        }
+        let regions = self.region_report();
+        if !regions.is_empty() {
+            out.push_str("region            | calls  | avg (us) | total (ms) | devices\n");
+            out.push_str("------------------+--------+----------+------------+--------\n");
+            for r in &regions {
+                out.push_str(&format!(
+                    "{:<18}| {:>6} | {:>8.3} | {:>10.2} | {}\n",
+                    r.name,
+                    r.summary.count(),
+                    r.summary.avg_us(),
+                    r.summary.total_ms(),
+                    r.devices
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::passes::OptLevel;
+    use crate::sched::workload::scale_request;
+    use crate::sched::{bytes_to_f32, Affinity};
+
+    #[test]
+    fn pool_coordinator_aggregates_regions_and_metrics() {
+        let pc = PoolCoordinator::new(&PoolConfig::mixed4()).unwrap();
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+            handles.push((pc.submit(req).unwrap(), want));
+        }
+        for (h, want) in handles {
+            let resp = h.wait().unwrap();
+            assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+        }
+        let m = pc.metrics();
+        assert_eq!(m.submitted, 8);
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.cache().hits + m.cache().misses, 8);
+        let regions = pc.region_report();
+        let scale = regions.iter().find(|r| r.name == "scale").unwrap();
+        assert_eq!(scale.summary.count(), 8);
+        assert!(scale.devices >= 1);
+        let text = pc.format_report();
+        assert!(text.contains("hit rate"), "{text}");
+        assert!(text.contains("scale"), "{text}");
+    }
+}

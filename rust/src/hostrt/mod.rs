@@ -45,12 +45,32 @@ pub struct OffloadDevice {
     extra_bindings: Bindings,
 }
 
+// The device-pool scheduler (`crate::sched`) shares one `OffloadDevice`
+// between a worker thread and metrics readers via `Arc`, and caches
+// `KernelImage`s across launches. Keep both types thread-shareable.
+#[allow(dead_code)]
+fn _assert_pool_types_are_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<OffloadDevice>();
+    check::<KernelImage>();
+}
+
 impl OffloadDevice {
     /// Create a device of `arch` with the given runtime build.
     pub fn new(kind: RuntimeKind, arch: Arch) -> Self {
         let desc = DeviceDesc::for_arch(arch);
         let gmem = Arc::new(GlobalMemory::new(desc.global_mem));
         OffloadDevice { desc, gmem, runtime: devrt::build(kind, arch), extra_bindings: Bindings::new() }
+    }
+
+    /// Architecture of this device.
+    pub fn arch(&self) -> Arch {
+        self.desc.arch
+    }
+
+    /// Runtime build running on this device.
+    pub fn kind(&self) -> RuntimeKind {
+        self.runtime.kind
     }
 
     /// Install additional bindings (e.g. `payload.*` from

@@ -184,14 +184,58 @@ impl Module {
     /// FNV-1a hash of the printed text — a cheap fingerprint used by the
     /// §4.1 code-comparison harness.
     pub fn digest(&self) -> u64 {
+        fnv1a(super::printer::print_module(self).bytes())
+    }
+
+    /// Stable **content** hash: FNV-1a over the printed textual form with
+    /// comment lines (the `; module …` header and `; meta …` lines)
+    /// skipped. Two modules that differ only in name, target annotation or
+    /// metadata — the "semantically unimportant" diff of §4.1 — hash
+    /// equal, while any change to globals, externs or function bodies
+    /// changes the hash. Deterministic across processes (no pointer or
+    /// RandomState input), so it is usable as a persistent cache key; the
+    /// kernel-image cache of [`crate::sched`] keys on it.
+    pub fn content_hash(&self) -> u64 {
         let text = super::printer::print_module(self);
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in text.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
+        let mut h = FNV_OFFSET;
+        for line in text.lines() {
+            if line.starts_with(';') {
+                continue;
+            }
+            for b in line.bytes() {
+                h = fnv1a_step(h, b);
+            }
+            h = fnv1a_step(h, b'\n');
+        }
+        // The printer renders a global initializer as `init(N bytes)`
+        // only; hash the actual bytes too, so two modules differing only
+        // in constant data cannot alias in the kernel-image cache.
+        for g in self.globals.values() {
+            if let Some(init) = &g.init {
+                for &b in init {
+                    h = fnv1a_step(h, b);
+                }
+                h = fnv1a_step(h, 0xFF);
+            }
         }
         h
     }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+#[inline]
+fn fnv1a_step(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+}
+
+/// FNV-1a over a byte stream.
+fn fnv1a(bytes: impl Iterator<Item = u8>) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in bytes {
+        h = fnv1a_step(h, b);
+    }
+    h
 }
 
 #[cfg(test)]
@@ -268,6 +312,67 @@ mod tests {
         a.add_func(leaf("f", None));
         b.add_func(leaf("f", Some("g")));
         assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn content_hash_stable_across_clone_and_print_roundtrips() {
+        let mut m = Module::new("m");
+        m.add_func(leaf("f", Some("g")));
+        m.add_func(leaf("g", None));
+        let h = m.content_hash();
+        // Repeated prints of the same module are deterministic.
+        assert_eq!(h, m.content_hash());
+        // A clone prints identically, so it hashes identically.
+        let c = m.clone();
+        assert_eq!(h, c.content_hash());
+        // Printing must not perturb the module (print round-trip).
+        let _ = crate::ir::printer::print_module(&m);
+        assert_eq!(h, m.content_hash());
+    }
+
+    #[test]
+    fn content_hash_ignores_name_meta_and_target() {
+        let mut a = Module::new("a");
+        a.add_func(leaf("f", None));
+        let mut b = Module::new("b");
+        b.add_func(leaf("f", None));
+        b.meta.insert("producer".into(), "other build".into());
+        b.target = Some("nvptx64-sim".into());
+        assert_eq!(a.content_hash(), b.content_hash(), "header/meta must not matter");
+        // …but the plain digest does see them (§4.1 fingerprint).
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn content_hash_changes_with_content() {
+        let mut a = Module::new("m");
+        a.add_func(leaf("f", None));
+        let mut b = a.clone();
+        b.add_func(leaf("h", None));
+        assert_ne!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn content_hash_sees_global_initializer_bytes() {
+        let with_init = |bytes: Vec<u8>| {
+            let mut m = Module::new("m");
+            m.add_global(Global {
+                name: "c".into(),
+                space: AddrSpace::Global,
+                size: bytes.len() as u64,
+                align: 4,
+                init: Some(bytes),
+                uninit: false,
+                linkage: Linkage::Internal,
+            });
+            m
+        };
+        // Same length, different constant data: must not alias (the
+        // printed text is identical — only the raw bytes differ).
+        let a = with_init(vec![1, 0, 0, 0]);
+        let b = with_init(vec![2, 0, 0, 0]);
+        assert_ne!(a.content_hash(), b.content_hash());
+        assert_eq!(a.content_hash(), with_init(vec![1, 0, 0, 0]).content_hash());
     }
 
     #[test]

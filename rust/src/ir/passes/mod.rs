@@ -15,11 +15,23 @@ pub mod inline;
 use super::module::Module;
 
 /// Optimization level. `O0` leaves calls out-of-line (the ablation
-/// baseline of E6); `O2` is the default pipeline.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// baseline of E6); `O2` is the default pipeline. `Hash` because the
+/// level is part of the kernel-image cache key in [`crate::sched`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OptLevel {
     O0,
     O2,
+}
+
+impl OptLevel {
+    /// Parse from config/CLI text.
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        match s {
+            "O0" | "o0" | "0" => Some(OptLevel::O0),
+            "O2" | "o2" | "2" => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
 }
 
 /// Run the standard pipeline. Returns pass statistics.

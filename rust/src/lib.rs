@@ -25,7 +25,12 @@
 //!   produced by `python/compile/aot.py` and executes them on the CPU
 //!   PJRT client. Python never runs on the request path.
 //! * [`coordinator`] — launch pipeline, the `nvprof`-analog region
-//!   profiler, metrics.
+//!   profiler, metrics; `PoolCoordinator` aggregates per-device profiles
+//!   for the pool.
+//! * [`sched`] — the device-pool offload scheduler: N devices (mixed
+//!   arch, mixed runtime build) behind an async submission queue, with
+//!   affinity-aware least-loaded placement and a kernel-image cache keyed
+//!   by `(module content hash, arch, runtime kind, opt level)`.
 //! * [`benchmarks`] — the SPEC ACCEL analogs (postencil, polbm, pomriq,
 //!   pep, pcg, pbt) and the miniQMC proxy app with its two target regions
 //!   (`evaluate_vgh`, `evaluateDetRatios`).
@@ -41,6 +46,7 @@ pub mod devrt;
 pub mod hostrt;
 pub mod ir;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod util;
 

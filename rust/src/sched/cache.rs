@@ -1,0 +1,202 @@
+//! The kernel-image cache: pay for `prepare` (link + optimize + verify +
+//! load) once per `(module, device configuration)` instead of once per
+//! launch.
+//!
+//! ## Cache-key design
+//!
+//! A prepared [`KernelImage`] is specific to everything that went into
+//! producing it:
+//!
+//! * the **application module content** — hashed with
+//!   [`Module::content_hash`], which digests the printed textual form
+//!   minus comment/metadata lines, so renaming a module or changing its
+//!   producer string does not defeat the cache while any semantic change
+//!   (body, globals, externs) misses;
+//! * the **architecture** — the linked runtime library differs per target
+//!   (variant resolution, warp width);
+//! * the **runtime kind** — legacy and portable builds link different
+//!   library bodies;
+//! * the **optimization level** — `O0` and `O2` images have different
+//!   code.
+//!
+//! The image also embeds device *addresses* (globals are placed in a
+//! specific device's global memory), so each device owns its own cache;
+//! arch/kind are still part of the key so that aggregated metrics from
+//! many caches are unambiguous and so a cache can never serve an image
+//! built for a different configuration even if shared by mistake.
+
+use crate::devrt::RuntimeKind;
+use crate::hostrt::{KernelImage, OffloadDevice};
+use crate::ir::passes::OptLevel;
+use crate::ir::Module;
+use crate::sim::Arch;
+use crate::util::Error;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// What a cached image was built from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// [`Module::content_hash`] of the application module (pre-link).
+    pub content: u64,
+    /// Target architecture.
+    pub arch: Arch,
+    /// Runtime build linked in.
+    pub kind: RuntimeKind,
+    /// Optimization level of the pipeline.
+    pub opt: OptLevel,
+}
+
+impl CacheKey {
+    /// Key for preparing `module` on `device` at `opt`.
+    pub fn for_device(device: &OffloadDevice, module: &Module, opt: OptLevel) -> CacheKey {
+        CacheKey {
+            content: module.content_hash(),
+            arch: device.arch(),
+            kind: device.kind(),
+            opt,
+        }
+    }
+}
+
+/// Hit/miss counters (snapshot).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to run `prepare`.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Hits / (hits + misses); 0 when empty.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A per-device kernel-image cache.
+#[derive(Default)]
+pub struct ImageCache {
+    map: Mutex<HashMap<CacheKey, Arc<KernelImage>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ImageCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Return the image for `(module, device, opt)`, preparing it on a
+    /// miss. The second component is `true` on a hit.
+    ///
+    /// `prepare` runs outside the map lock; the pool runs one worker per
+    /// device, so a duplicate prepare can only happen if a cache is
+    /// shared across callers racing on the same key — in that case the
+    /// first insert wins and the duplicate image is dropped.
+    pub fn get_or_prepare(
+        &self,
+        device: &OffloadDevice,
+        module: &Module,
+        opt: OptLevel,
+    ) -> Result<(Arc<KernelImage>, bool), Error> {
+        let key = CacheKey::for_device(device, module, opt);
+        if let Some(image) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((image.clone(), true));
+        }
+        let image = Arc::new(device.prepare(module.clone(), opt)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        let entry = map.entry(key).or_insert_with(|| image.clone());
+        Ok((entry.clone(), false))
+    }
+
+    /// Number of cached images.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hit/miss snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop all cached images (the bump allocator does not reclaim their
+    /// device memory; this only frees host memory and forces re-prepare).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::FunctionBuilder;
+
+    fn empty_kernel(name: &str) -> Module {
+        let mut m = Module::new(name);
+        let mut b = FunctionBuilder::new("k", &[], None).kernel();
+        b.ret();
+        m.add_func(b.build());
+        m
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let cache = ImageCache::new();
+        let m = empty_kernel("a");
+        let (i1, hit1) = cache.get_or_prepare(&dev, &m, OptLevel::O2).unwrap();
+        let (i2, hit2) = cache.get_or_prepare(&dev, &m, OptLevel::O2).unwrap();
+        assert!(!hit1);
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&i1, &i2), "same image must be served");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn module_name_does_not_defeat_the_cache() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let cache = ImageCache::new();
+        cache.get_or_prepare(&dev, &empty_kernel("a"), OptLevel::O2).unwrap();
+        let (_, hit) = cache.get_or_prepare(&dev, &empty_kernel("b"), OptLevel::O2).unwrap();
+        assert!(hit, "same content under a different module name must hit");
+    }
+
+    #[test]
+    fn opt_level_is_part_of_the_key() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let cache = ImageCache::new();
+        let m = empty_kernel("a");
+        cache.get_or_prepare(&dev, &m, OptLevel::O2).unwrap();
+        let (_, hit) = cache.get_or_prepare(&dev, &m, OptLevel::O0).unwrap();
+        assert!(!hit, "different opt level must miss");
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn hit_rate_reports() {
+        let s = CacheStats { hits: 9, misses: 1 };
+        assert!((s.hit_rate() - 0.9).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+}

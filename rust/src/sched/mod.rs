@@ -1,0 +1,46 @@
+//! `sched` — the device-pool offload scheduler.
+//!
+//! The paper's runtime makes one device target cheap to bring up; this
+//! layer makes *many* devices cheap to drive at once. A [`DevicePool`]
+//! owns N [`crate::hostrt::OffloadDevice`]s — mixed architectures
+//! (`nvptx64-sim`, `amdgcn-sim`) and mixed runtime builds (legacy,
+//! portable) — behind one asynchronous submission queue. Clients
+//! [`DevicePool::submit`] an [`OffloadRequest`] (module + kernel + launch
+//! config + buffer mappings) and immediately get an [`OffloadHandle`]
+//! future; per-device worker threads execute the requests and resolve the
+//! handles.
+//!
+//! ## Placement policy
+//!
+//! Placement is **pull-based least-loaded with affinity filtering**:
+//!
+//! * one worker thread per device pulls from the shared FIFO queue the
+//!   moment its device is free, so work naturally flows to the
+//!   least-loaded device — an idle device never waits behind a busy one;
+//! * each request carries an [`Affinity`] constraint (`arch` and/or
+//!   runtime `kind`, both optional); a worker only claims the oldest job
+//!   its device satisfies, skipping over incompatible ones so a pinned
+//!   job cannot head-of-line-block the rest of the pool;
+//! * a request whose affinity matches no pool device is rejected at
+//!   submit time rather than queued forever.
+//!
+//! ## Kernel-image cache
+//!
+//! `prepare` (link the runtime IR library, optimize, verify, load) is the
+//! expensive half of an offload. Each device worker consults an
+//! [`ImageCache`] keyed by `(module content hash, arch, runtime kind, opt
+//! level)` — see [`cache`] for the key-design rationale — so a kernel
+//! module pays the prepare cost once per device configuration and every
+//! subsequent launch of it is queue-pop + map + launch. Hit/miss counters
+//! aggregate into [`PoolMetrics`] and the
+//! [`crate::coordinator::PoolCoordinator`] report.
+
+pub mod cache;
+pub mod pool;
+pub mod workload;
+
+pub use cache::{CacheKey, CacheStats, ImageCache};
+pub use pool::{
+    bytes_to_f32, f32_to_bytes, Affinity, DeviceMetrics, DevicePool, DeviceSpec, KernelArg,
+    MapBuf, OffloadHandle, OffloadRequest, OffloadResponse, PoolConfig, PoolMetrics,
+};

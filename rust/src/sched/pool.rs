@@ -1,0 +1,699 @@
+//! The device pool: N offload devices fed by one async submission queue.
+//!
+//! Clients [`DevicePool::submit`] an [`OffloadRequest`] and get an
+//! [`OffloadHandle`] back immediately; the launch happens on one of the
+//! pool's worker threads. See the module docs of [`crate::sched`] for the
+//! placement policy.
+
+use super::cache::{CacheStats, ImageCache};
+use crate::config::Config;
+use crate::coordinator::profiler::{Profiler, RegionReport};
+use crate::devrt::RuntimeKind;
+use crate::hostrt::{MapType, OffloadDevice};
+use crate::ir::passes::OptLevel;
+use crate::ir::Module;
+use crate::sim::{Arch, LaunchConfig, LaunchStats};
+use crate::util::Error;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// Which devices may serve a request. `None` fields match anything.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Affinity {
+    /// Restrict to one architecture.
+    pub arch: Option<Arch>,
+    /// Restrict to one runtime build.
+    pub kind: Option<RuntimeKind>,
+}
+
+impl Affinity {
+    /// Runs anywhere.
+    pub fn any() -> Affinity {
+        Affinity::default()
+    }
+
+    /// Pin to an architecture.
+    pub fn on_arch(arch: Arch) -> Affinity {
+        Affinity { arch: Some(arch), kind: None }
+    }
+
+    /// Pin to a runtime kind.
+    pub fn on_kind(kind: RuntimeKind) -> Affinity {
+        Affinity { arch: None, kind: Some(kind) }
+    }
+
+    /// Does a device with `(arch, kind)` satisfy this constraint?
+    pub fn matches(&self, arch: Arch, kind: RuntimeKind) -> bool {
+        self.arch.map_or(true, |a| a == arch) && self.kind.map_or(true, |k| k == kind)
+    }
+}
+
+/// One host buffer mapped for the duration of a pooled offload.
+#[derive(Debug, Clone)]
+pub struct MapBuf {
+    /// Host bytes (copied to the device for `To`/`Tofrom`).
+    pub bytes: Vec<u8>,
+    /// Mapping semantics.
+    pub map_type: MapType,
+}
+
+impl MapBuf {
+    /// Map an f32 slice.
+    pub fn f32(data: &[f32], map_type: MapType) -> MapBuf {
+        MapBuf { bytes: f32_to_bytes(data), map_type }
+    }
+}
+
+/// f32 slice → little-endian bytes.
+pub fn f32_to_bytes(data: &[f32]) -> Vec<u8> {
+    data.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+/// Little-endian bytes → f32 vector.
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// A kernel argument: the device address of a mapped buffer, or an
+/// immediate scalar.
+#[derive(Debug, Clone, Copy)]
+pub enum KernelArg {
+    /// Address of `buffers[i]` after mapping.
+    Buf(usize),
+    /// Immediate 64-bit value.
+    Imm(u64),
+}
+
+/// What a client submits to the pool.
+pub struct OffloadRequest {
+    /// The application module (kernels + globals).
+    pub module: Module,
+    /// Kernel entry point to launch.
+    pub kernel: String,
+    /// Profiler region name (aggregated in the pool report).
+    pub region: String,
+    /// Launch geometry.
+    pub cfg: LaunchConfig,
+    /// Optimization level for `prepare` (part of the cache key).
+    pub opt: OptLevel,
+    /// Host buffers to map.
+    pub buffers: Vec<MapBuf>,
+    /// Kernel arguments in order.
+    pub args: Vec<KernelArg>,
+    /// Placement constraint.
+    pub affinity: Affinity,
+}
+
+/// What the pool hands back when a request completes.
+#[derive(Debug)]
+pub struct OffloadResponse {
+    /// Pool-local id of the device that ran the launch.
+    pub device_id: usize,
+    /// Its architecture.
+    pub arch: Arch,
+    /// Its runtime build.
+    pub kind: RuntimeKind,
+    /// Launch counters.
+    pub stats: LaunchStats,
+    /// Whether the kernel image came out of the cache.
+    pub cache_hit: bool,
+    /// Time the request sat in the queue before a worker picked it up.
+    pub queue_wait: Duration,
+    /// Post-launch contents of each `From`/`Tofrom` buffer (`None` for
+    /// `To`/`Alloc` buffers).
+    pub buffers: Vec<Option<Vec<u8>>>,
+}
+
+/// Future side of a submission; resolves when a worker finishes the
+/// request (or the pool shuts down first).
+pub struct OffloadHandle {
+    rx: mpsc::Receiver<Result<OffloadResponse, Error>>,
+}
+
+impl OffloadHandle {
+    /// Block until the request completes.
+    pub fn wait(self) -> Result<OffloadResponse, Error> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Sched("pool dropped before the request completed".into())),
+        }
+    }
+
+    /// Non-blocking poll; `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<OffloadResponse, Error>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(Error::Sched("pool dropped before the request completed".into())))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool configuration
+// ---------------------------------------------------------------------------
+
+/// One device of the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceSpec {
+    /// Runtime build.
+    pub kind: RuntimeKind,
+    /// Architecture.
+    pub arch: Arch,
+}
+
+impl DeviceSpec {
+    /// Parse `"<kind>:<arch>"`, e.g. `"portable:nvptx64"`.
+    pub fn parse(s: &str) -> Option<DeviceSpec> {
+        let (k, a) = s.split_once(':')?;
+        Some(DeviceSpec { kind: RuntimeKind::parse(k.trim())?, arch: Arch::parse(a.trim())? })
+    }
+}
+
+impl std::fmt::Display for DeviceSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.kind, self.arch)
+    }
+}
+
+/// Pool construction parameters (the `[pool]` config table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolConfig {
+    /// Devices, in pool-id order.
+    pub devices: Vec<DeviceSpec>,
+    /// Default optimization level for requests (callers still set their
+    /// own per-request `opt`; the demo and bench use this).
+    pub default_opt: OptLevel,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig::mixed4()
+    }
+}
+
+impl PoolConfig {
+    /// The canonical 4-device mixed pool: both architectures under both
+    /// runtime builds.
+    pub fn mixed4() -> PoolConfig {
+        PoolConfig {
+            devices: vec![
+                DeviceSpec { kind: RuntimeKind::Portable, arch: Arch::Nvptx64 },
+                DeviceSpec { kind: RuntimeKind::Portable, arch: Arch::Amdgcn },
+                DeviceSpec { kind: RuntimeKind::Legacy, arch: Arch::Nvptx64 },
+                DeviceSpec { kind: RuntimeKind::Legacy, arch: Arch::Amdgcn },
+            ],
+            default_opt: OptLevel::O2,
+        }
+    }
+
+    /// A single-device pool (baseline for the throughput bench).
+    pub fn single(kind: RuntimeKind, arch: Arch) -> PoolConfig {
+        PoolConfig { devices: vec![DeviceSpec { kind, arch }], default_opt: OptLevel::O2 }
+    }
+
+    /// Read the `[pool]` section of a config document:
+    ///
+    /// ```text
+    /// [pool]
+    /// devices = ["portable:nvptx64", "legacy:amdgcn"]
+    /// opt = "O2"
+    /// ```
+    ///
+    /// Missing section or keys fall back to [`PoolConfig::mixed4`].
+    pub fn from_config(cfg: &Config) -> Result<PoolConfig, Error> {
+        let mut out = PoolConfig::mixed4();
+        let Some(sec) = cfg.section("pool") else {
+            return Ok(out);
+        };
+        if let Some(list) = sec.get("devices").and_then(|v| v.as_str_list()) {
+            let mut devices = vec![];
+            for s in list {
+                let spec = DeviceSpec::parse(s).ok_or_else(|| {
+                    Error::Config(format!(
+                        "[pool] bad device `{s}` (want \"<legacy|portable>:<nvptx64|amdgcn>\")"
+                    ))
+                })?;
+                devices.push(spec);
+            }
+            if devices.is_empty() {
+                return Err(Error::Config("[pool] devices list is empty".into()));
+            }
+            out.devices = devices;
+        }
+        if let Some(s) = sec.get("opt").and_then(|v| v.as_str()) {
+            out.default_opt = OptLevel::parse(s)
+                .ok_or_else(|| Error::Config(format!("[pool] bad opt `{s}` (want O0|O2)")))?;
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+struct Job {
+    req: OffloadRequest,
+    reply: mpsc::Sender<Result<OffloadResponse, Error>>,
+    enqueued: Instant,
+}
+
+/// Per-device state shared with the device's worker thread.
+struct DeviceSlot {
+    id: usize,
+    spec: DeviceSpec,
+    device: Arc<OffloadDevice>,
+    cache: ImageCache,
+    profiler: Profiler,
+    inflight: AtomicUsize,
+    completed: AtomicU64,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    slots: Vec<DeviceSlot>,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    started: Instant,
+}
+
+/// A pool of offload devices with per-device worker threads.
+pub struct DevicePool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl DevicePool {
+    /// Build the devices and start one worker thread per device.
+    pub fn new(config: &PoolConfig) -> Result<DevicePool, Error> {
+        if config.devices.is_empty() {
+            return Err(Error::Sched("pool needs at least one device".into()));
+        }
+        let slots: Vec<DeviceSlot> = config
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(id, spec)| DeviceSlot {
+                id,
+                spec: *spec,
+                device: Arc::new(OffloadDevice::new(spec.kind, spec.arch)),
+                cache: ImageCache::new(),
+                profiler: Profiler::new(),
+                inflight: AtomicUsize::new(0),
+                completed: AtomicU64::new(0),
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            slots,
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            started: Instant::now(),
+        });
+        let mut workers = vec![];
+        for id in 0..config.devices.len() {
+            let shared = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pool-dev{id}"))
+                .spawn(move || worker_loop(&shared, id))
+                .map_err(|e| Error::Sched(format!("cannot spawn pool worker: {e}")))?;
+            workers.push(handle);
+        }
+        Ok(DevicePool { shared, workers })
+    }
+
+    /// Number of devices.
+    pub fn device_count(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    /// Device specs in pool-id order.
+    pub fn specs(&self) -> Vec<DeviceSpec> {
+        self.shared.slots.iter().map(|s| s.spec).collect()
+    }
+
+    /// Submit a request; returns a handle resolving to the response.
+    ///
+    /// Fails fast (without enqueueing) when the request is malformed or
+    /// its affinity matches no device in the pool.
+    pub fn submit(&self, req: OffloadRequest) -> Result<OffloadHandle, Error> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(Error::Sched("pool is shut down".into()));
+        }
+        if req.kernel.is_empty() {
+            return Err(Error::Sched("request has no kernel name".into()));
+        }
+        for a in &req.args {
+            if let KernelArg::Buf(i) = a {
+                if *i >= req.buffers.len() {
+                    return Err(Error::Sched(format!(
+                        "arg references buffer {i} but only {} buffers are mapped",
+                        req.buffers.len()
+                    )));
+                }
+            }
+        }
+        if !self
+            .shared
+            .slots
+            .iter()
+            .any(|s| req.affinity.matches(s.spec.arch, s.spec.kind))
+        {
+            return Err(Error::Sched(format!(
+                "affinity {:?} matches no device in the pool ({:?})",
+                req.affinity,
+                self.specs().iter().map(|s| s.to_string()).collect::<Vec<_>>()
+            )));
+        }
+        let (reply, rx) = mpsc::channel();
+        // Count before the job becomes visible so `submitted` never lags
+        // behind `completed` in a metrics snapshot.
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Job { req, reply, enqueued: Instant::now() });
+        }
+        // notify_all: the job may be eligible only for a subset of the
+        // sleeping workers, and notify_one could wake the wrong one.
+        self.shared.cv.notify_all();
+        Ok(OffloadHandle { rx })
+    }
+
+    /// Snapshot of queue/throughput/cache metrics.
+    pub fn metrics(&self) -> PoolMetrics {
+        let queue_depth = self.shared.queue.lock().unwrap().len();
+        let devices: Vec<DeviceMetrics> = self
+            .shared
+            .slots
+            .iter()
+            .map(|s| DeviceMetrics {
+                id: s.id,
+                kind: s.spec.kind,
+                arch: s.spec.arch,
+                inflight: s.inflight.load(Ordering::Relaxed),
+                completed: s.completed.load(Ordering::Relaxed),
+                cache: s.cache.stats(),
+                cached_images: s.cache.len(),
+            })
+            .collect();
+        PoolMetrics {
+            queue_depth,
+            submitted: self.shared.submitted.load(Ordering::Relaxed),
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            failed: self.shared.failed.load(Ordering::Relaxed),
+            uptime: self.shared.started.elapsed(),
+            devices,
+        }
+    }
+
+    /// Per-device profiler reports, in pool-id order.
+    pub fn profiler_reports(&self) -> Vec<(DeviceSpec, Vec<RegionReport>)> {
+        self.shared
+            .slots
+            .iter()
+            .map(|s| (s.spec, s.profiler.report()))
+            .collect()
+    }
+
+    /// Block until every submitted request has completed or failed.
+    /// Intended for tests/benches that stop submitting first; new
+    /// submissions during the wait extend it.
+    pub fn quiesce(&self) {
+        loop {
+            let m = self.metrics();
+            if m.queue_depth == 0 && m.completed + m.failed >= m.submitted {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        // Flip the shutdown predicate while holding the queue mutex: a
+        // worker that already checked `shutdown` and is between that check
+        // and `cv.wait` would otherwise miss this notify forever.
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+            self.shared.cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // Fail any requests still queued so waiting clients unblock with
+        // an error instead of a channel disconnect.
+        let mut q = self.shared.queue.lock().unwrap();
+        while let Some(job) = q.pop_front() {
+            let _ = job
+                .reply
+                .send(Err(Error::Sched("pool shut down before the request ran".into())));
+        }
+    }
+}
+
+/// Worker body: pull the oldest affinity-compatible job, run it, reply.
+fn worker_loop(shared: &Shared, id: usize) {
+    let slot = &shared.slots[id];
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(pos) = q
+                    .iter()
+                    .position(|j| j.req.affinity.matches(slot.spec.arch, slot.spec.kind))
+                {
+                    break q.remove(pos).expect("position is in range");
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        let queue_wait = job.enqueued.elapsed();
+        slot.inflight.fetch_add(1, Ordering::Relaxed);
+        let result = run_job(slot, &job.req, queue_wait);
+        slot.inflight.fetch_sub(1, Ordering::Relaxed);
+        match &result {
+            Ok(_) => {
+                slot.completed.fetch_add(1, Ordering::Relaxed);
+                shared.completed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                shared.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // A dropped handle is fine: the work still ran.
+        let _ = job.reply.send(result);
+    }
+}
+
+/// Execute one request on `slot`: image from cache, map, launch, unmap.
+fn run_job(
+    slot: &DeviceSlot,
+    req: &OffloadRequest,
+    queue_wait: Duration,
+) -> Result<OffloadResponse, Error> {
+    let (image, cache_hit) = slot.cache.get_or_prepare(&slot.device, &req.module, req.opt)?;
+
+    let mut dev_addrs = Vec::with_capacity(req.buffers.len());
+    for b in &req.buffers {
+        let addr = slot.device.gmem.alloc((b.bytes.len() as u64).max(1), 8)?;
+        if matches!(b.map_type, MapType::To | MapType::Tofrom) {
+            slot.device.gmem.write_bytes(addr, &b.bytes)?;
+        }
+        dev_addrs.push(addr);
+    }
+
+    let args: Vec<u64> = req
+        .args
+        .iter()
+        .map(|a| match a {
+            KernelArg::Buf(i) => dev_addrs[*i], // index validated at submit
+            KernelArg::Imm(v) => *v,
+        })
+        .collect();
+
+    let (launch, elapsed) =
+        crate::util::stats::timed(|| slot.device.offload(&image, &req.kernel, &args, req.cfg));
+    slot.profiler.record(&req.region, elapsed);
+    let stats = launch?;
+
+    let mut out = Vec::with_capacity(req.buffers.len());
+    for (b, addr) in req.buffers.iter().zip(&dev_addrs) {
+        if matches!(b.map_type, MapType::From | MapType::Tofrom) {
+            let mut buf = vec![0u8; b.bytes.len()];
+            slot.device.gmem.read_bytes(*addr, &mut buf)?;
+            out.push(Some(buf));
+        } else {
+            out.push(None);
+        }
+    }
+
+    Ok(OffloadResponse {
+        device_id: slot.id,
+        arch: slot.spec.arch,
+        kind: slot.spec.kind,
+        stats,
+        cache_hit,
+        queue_wait,
+        buffers: out,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------------
+
+/// Per-device metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct DeviceMetrics {
+    /// Pool-local device id.
+    pub id: usize,
+    /// Runtime build.
+    pub kind: RuntimeKind,
+    /// Architecture.
+    pub arch: Arch,
+    /// Requests currently executing (0 or 1 with one worker per device).
+    pub inflight: usize,
+    /// Requests completed on this device.
+    pub completed: u64,
+    /// Image-cache counters.
+    pub cache: CacheStats,
+    /// Images currently cached.
+    pub cached_images: usize,
+}
+
+/// Pool-wide metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct PoolMetrics {
+    /// Jobs waiting in the submission queue.
+    pub queue_depth: usize,
+    /// Total requests accepted.
+    pub submitted: u64,
+    /// Total requests completed successfully.
+    pub completed: u64,
+    /// Total requests that failed.
+    pub failed: u64,
+    /// Time since the pool started.
+    pub uptime: Duration,
+    /// Per-device breakdown.
+    pub devices: Vec<DeviceMetrics>,
+}
+
+impl PoolMetrics {
+    /// Aggregated image-cache counters.
+    pub fn cache(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for d in &self.devices {
+            s.hits += d.cache.hits;
+            s.misses += d.cache.misses;
+        }
+        s
+    }
+
+    /// Completed launches per second of pool uptime.
+    pub fn throughput_per_sec(&self) -> f64 {
+        let secs = self.uptime.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affinity_matching() {
+        let any = Affinity::any();
+        assert!(any.matches(Arch::Nvptx64, RuntimeKind::Legacy));
+        let a = Affinity::on_arch(Arch::Amdgcn);
+        assert!(a.matches(Arch::Amdgcn, RuntimeKind::Portable));
+        assert!(!a.matches(Arch::Nvptx64, RuntimeKind::Portable));
+        let k = Affinity::on_kind(RuntimeKind::Legacy);
+        assert!(k.matches(Arch::Nvptx64, RuntimeKind::Legacy));
+        assert!(!k.matches(Arch::Nvptx64, RuntimeKind::Portable));
+    }
+
+    #[test]
+    fn device_spec_parses() {
+        let s = DeviceSpec::parse("portable:nvptx64").unwrap();
+        assert_eq!(s.kind, RuntimeKind::Portable);
+        assert_eq!(s.arch, Arch::Nvptx64);
+        assert_eq!(DeviceSpec::parse("legacy:amdgcn").unwrap().arch, Arch::Amdgcn);
+        assert!(DeviceSpec::parse("nvptx64").is_none());
+        assert!(DeviceSpec::parse("bad:nvptx64").is_none());
+        assert!(DeviceSpec::parse("legacy:gfx9").is_none());
+    }
+
+    #[test]
+    fn pool_config_from_config_document() {
+        let cfg = Config::parse(
+            "[pool]\ndevices = [\"portable:nvptx64\", \"legacy:amdgcn\"]\nopt = \"O0\"",
+        )
+        .unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.devices.len(), 2);
+        assert_eq!(pc.devices[1], DeviceSpec { kind: RuntimeKind::Legacy, arch: Arch::Amdgcn });
+        assert_eq!(pc.default_opt, OptLevel::O0);
+        // Missing section → default mixed pool.
+        let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(pc, PoolConfig::mixed4());
+        // Bad spec errors.
+        let cfg = Config::parse("[pool]\ndevices = [\"warp9:nvptx64\"]").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn f32_byte_roundtrip() {
+        let v = vec![0.0f32, 1.5, -2.25, f32::MAX];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&v)), v);
+    }
+
+    #[test]
+    fn submit_validates_before_enqueue() {
+        let pool = DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64))
+            .unwrap();
+        let req = |affinity| OffloadRequest {
+            module: Module::new("m"),
+            kernel: "k".into(),
+            region: "r".into(),
+            cfg: LaunchConfig::new(1, 32),
+            opt: OptLevel::O2,
+            buffers: vec![],
+            args: vec![KernelArg::Buf(3)],
+            affinity,
+        };
+        // Bad buffer index.
+        assert!(pool.submit(req(Affinity::any())).is_err());
+        // Affinity matching no pool device.
+        let mut r = req(Affinity::on_arch(Arch::Amdgcn));
+        r.args = vec![];
+        assert!(pool.submit(r).is_err());
+        assert_eq!(pool.metrics().submitted, 0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Canned offload workloads for the pool: small device-IR kernels with
+//! host-side reference results, used by the `omprt pool` demo, the
+//! scheduler tests and the throughput bench.
+//!
+//! Two kernel shapes give the image cache a mixed-module workload:
+//! `scale` (one mapped buffer, grid-strided `buf[i] *= 2`) and `saxpy`
+//! (three buffers plus two immediate args).
+
+use super::pool::{Affinity, KernelArg, MapBuf, OffloadRequest};
+use crate::hostrt::MapType;
+use crate::ir::passes::OptLevel;
+use crate::ir::{AddrSpace, CmpPred, FunctionBuilder, Module, Operand, Type};
+use crate::sim::LaunchConfig;
+
+/// Emit `gid`/`stride` (both i64) for a grid-strided loop.
+fn emit_gid_stride64(b: &mut FunctionBuilder) -> (crate::ir::Reg, crate::ir::Reg) {
+    let tid = b.call("gpu.tid.x", &[], Type::I32);
+    let ntid = b.call("gpu.ntid.x", &[], Type::I32);
+    let ctaid = b.call("gpu.ctaid.x", &[], Type::I32);
+    let nctaid = b.call("gpu.nctaid.x", &[], Type::I32);
+    let base = b.mul(ctaid, ntid);
+    let gid = b.add(base, tid);
+    let total = b.mul(ntid, nctaid);
+    let gid64 = b.sext64(gid);
+    let stride64 = b.sext64(total);
+    (gid64, stride64)
+}
+
+/// kernel `scale(buf, n)`: `buf[i] *= 2` over a grid-strided range.
+pub fn scale_module() -> Module {
+    let mut m = Module::new("pool_scale");
+    let mut b = FunctionBuilder::new("scale", &[Type::I64, Type::I64], None).kernel();
+    let buf = b.param(0);
+    let n = b.param(1);
+    let (gid64, stride64) = emit_gid_stride64(&mut b);
+    let i = b.copy(gid64);
+    b.loop_(|b| {
+        let done = b.cmp(CmpPred::Ge, i, n);
+        b.if_(done, |b| b.break_());
+        let addr = b.index(buf, i, 4);
+        let v = b.load(Type::F32, AddrSpace::Global, addr);
+        let v2 = b.mul(v, Operand::f32(2.0));
+        b.store(Type::F32, AddrSpace::Global, addr, v2);
+        let nx = b.add(i, stride64);
+        b.assign(i, nx);
+    });
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+/// kernel `saxpy(out, x, y, a_bits, n)`: `out[i] = a*x[i] + y[i]`.
+pub fn saxpy_module() -> Module {
+    let mut m = Module::new("pool_saxpy");
+    let mut b = FunctionBuilder::new(
+        "saxpy",
+        &[Type::I64, Type::I64, Type::I64, Type::I64, Type::I64],
+        None,
+    )
+    .kernel();
+    let (out, x, y, a_bits, n) =
+        (b.param(0), b.param(1), b.param(2), b.param(3), b.param(4));
+    let a32 = b.cast(crate::ir::CastOp::Trunc, a_bits, Type::I32);
+    let a = b.cast(crate::ir::CastOp::Bitcast, a32, Type::F32);
+    let (gid64, stride64) = emit_gid_stride64(&mut b);
+    let i = b.copy(gid64);
+    b.loop_(|b| {
+        let done = b.cmp(CmpPred::Ge, i, n);
+        b.if_(done, |b| b.break_());
+        let xa = b.index(x, i, 4);
+        let ya = b.index(y, i, 4);
+        let oa = b.index(out, i, 4);
+        let xv = b.load(Type::F32, AddrSpace::Global, xa);
+        let yv = b.load(Type::F32, AddrSpace::Global, ya);
+        let ax = b.mul(a, xv);
+        let s = b.add(ax, yv);
+        b.store(Type::F32, AddrSpace::Global, oa, s);
+        let nx = b.add(i, stride64);
+        b.assign(i, nx);
+    });
+    b.ret();
+    m.add_func(b.build());
+    m
+}
+
+/// A `scale` request over `data`, plus the host-computed expected output.
+pub fn scale_request(
+    data: &[f32],
+    affinity: Affinity,
+    opt: OptLevel,
+) -> (OffloadRequest, Vec<f32>) {
+    let expected = data.iter().map(|v| v * 2.0).collect();
+    let req = OffloadRequest {
+        module: scale_module(),
+        kernel: "scale".into(),
+        region: "scale".into(),
+        cfg: LaunchConfig::new(2, 64),
+        opt,
+        buffers: vec![MapBuf::f32(data, MapType::Tofrom)],
+        args: vec![KernelArg::Buf(0), KernelArg::Imm(data.len() as u64)],
+        affinity,
+    };
+    (req, expected)
+}
+
+/// A `saxpy` request, plus the host-computed expected output.
+pub fn saxpy_request(
+    a: f32,
+    x: &[f32],
+    y: &[f32],
+    affinity: Affinity,
+    opt: OptLevel,
+) -> (OffloadRequest, Vec<f32>) {
+    assert_eq!(x.len(), y.len(), "saxpy operands must have equal length");
+    let expected = x.iter().zip(y).map(|(xv, yv)| a * xv + yv).collect();
+    let req = OffloadRequest {
+        module: saxpy_module(),
+        kernel: "saxpy".into(),
+        region: "saxpy".into(),
+        cfg: LaunchConfig::new(2, 64),
+        opt,
+        buffers: vec![
+            MapBuf::f32(&vec![0.0; x.len()], MapType::From),
+            MapBuf::f32(x, MapType::To),
+            MapBuf::f32(y, MapType::To),
+        ],
+        args: vec![
+            KernelArg::Buf(0),
+            KernelArg::Buf(1),
+            KernelArg::Buf(2),
+            KernelArg::Imm(a.to_bits() as u64),
+            KernelArg::Imm(x.len() as u64),
+        ],
+        affinity,
+    };
+    (req, expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::pool::{bytes_to_f32, DevicePool, PoolConfig};
+    use crate::devrt::RuntimeKind;
+    use crate::sim::Arch;
+
+    #[test]
+    fn scale_and_saxpy_run_on_a_single_device_pool() {
+        let pool =
+            DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)).unwrap();
+
+        let data: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        let resp = pool.submit(req).unwrap().wait().unwrap();
+        let got = bytes_to_f32(resp.buffers[0].as_ref().unwrap());
+        assert_eq!(got, want);
+
+        let x: Vec<f32> = (0..77).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..77).map(|i| (i * 3) as f32).collect();
+        let (req, want) = saxpy_request(0.5, &x, &y, Affinity::any(), OptLevel::O2);
+        let resp = pool.submit(req).unwrap().wait().unwrap();
+        let got = bytes_to_f32(resp.buffers[0].as_ref().unwrap());
+        assert_eq!(got, want);
+        // x/y are To-mapped: no post-state returned.
+        assert!(resp.buffers[1].is_none());
+        assert!(resp.buffers[2].is_none());
+    }
+}

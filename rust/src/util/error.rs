@@ -1,22 +1,22 @@
 //! Crate error type. One enum so that traps raised deep in the simulator
 //! (out-of-bounds access, divergent barrier, …) carry enough context to be
 //! actionable in tests and conformance reports.
+//!
+//! `Display`/`Error` are hand-implemented: the offline crate set has no
+//! `thiserror`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All errors produced by the library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// IR construction or verification failure.
-    #[error("ir error: {0}")]
     Ir(String),
 
     /// Link-time resolution failure (missing symbol, duplicate definition).
-    #[error("link error: {0}")]
     Link(String),
 
     /// A trap raised by the SIMT interpreter (the GPU-side `abort()`).
-    #[error("device trap in `{func}`: {msg}")]
     Trap {
         /// Function in which the trap fired.
         func: String,
@@ -25,34 +25,63 @@ pub enum Error {
     },
 
     /// Device runtime misuse (API contract violation).
-    #[error("device runtime error: {0}")]
     DevRt(String),
 
     /// Host runtime (offloading/data-mapping) failure.
-    #[error("host runtime error: {0}")]
     HostRt(String),
 
     /// PJRT bridge failure (artifact load, compile, execute).
-    #[error("pjrt error: {0}")]
     Pjrt(String),
 
     /// Configuration parse/validation error.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Benchmark workload verification failure.
-    #[error("verification failed: {0}")]
     Verify(String),
 
+    /// Scheduler (device-pool) failure.
+    Sched(String),
+
     /// Wrapped I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Ir(m) => write!(f, "ir error: {m}"),
+            Error::Link(m) => write!(f, "link error: {m}"),
+            Error::Trap { func, msg } => write!(f, "device trap in `{func}`: {msg}"),
+            Error::DevRt(m) => write!(f, "device runtime error: {m}"),
+            Error::HostRt(m) => write!(f, "host runtime error: {m}"),
+            Error::Pjrt(m) => write!(f, "pjrt error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Verify(m) => write!(f, "verification failed: {m}"),
+            Error::Sched(m) => write!(f, "scheduler error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
     /// Shorthand for a device trap.
     pub fn trap(func: impl Into<String>, msg: impl Into<String>) -> Self {
         Error::Trap { func: func.into(), msg: msg.into() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
@@ -79,5 +108,11 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn sched_variant_formats() {
+        let e = Error::Sched("no eligible device".into());
+        assert!(e.to_string().contains("scheduler error"), "{e}");
     }
 }

@@ -1,0 +1,221 @@
+//! Device-pool scheduler integration tests: concurrent mixed-arch,
+//! mixed-runtime offload traffic with results verified against ground
+//! truth, affinity constraints, and kernel-image cache accounting.
+
+use omprt::coordinator::PoolCoordinator;
+use omprt::devrt::RuntimeKind;
+use omprt::ir::passes::OptLevel;
+use omprt::sched::workload::{saxpy_request, scale_request};
+use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig};
+use omprt::sim::Arch;
+
+const CLIENTS: usize = 8;
+const PER_CLIENT: usize = 32;
+
+/// 8 client threads x 32 submissions across a 4-device mixed pool.
+/// Every result must equal the host-computed ground truth, and the
+/// repeated-kernel workload (two distinct modules over four devices)
+/// must exceed a 90% image-cache hit rate.
+#[test]
+fn concurrent_mixed_pool_matches_ground_truth() {
+    let pool = DevicePool::new(&PoolConfig::mixed4()).unwrap();
+    assert_eq!(pool.device_count(), 4);
+
+    std::thread::scope(|scope| {
+        for client in 0..CLIENTS {
+            let pool = &pool;
+            scope.spawn(move || {
+                let affinities = [
+                    Affinity::any(),
+                    Affinity::on_arch(Arch::Nvptx64),
+                    Affinity::on_arch(Arch::Amdgcn),
+                    Affinity::on_kind(RuntimeKind::Legacy),
+                    Affinity::on_kind(RuntimeKind::Portable),
+                ];
+                let mut pending = vec![];
+                for i in 0..PER_CLIENT {
+                    let n = 64 + (client * PER_CLIENT + i) % 64;
+                    let affinity = affinities[(client + i) % affinities.len()];
+                    let (req, want) = if i % 2 == 0 {
+                        let data: Vec<f32> =
+                            (0..n).map(|k| (k + client * 1000 + i) as f32).collect();
+                        scale_request(&data, affinity, OptLevel::O2)
+                    } else {
+                        let x: Vec<f32> = (0..n).map(|k| (k + i) as f32).collect();
+                        let y: Vec<f32> = (0..n).map(|k| (k * 2 + client) as f32).collect();
+                        saxpy_request(0.5, &x, &y, affinity, OptLevel::O2)
+                    };
+                    pending.push((pool.submit(req).unwrap(), want, affinity));
+                }
+                for (handle, want, affinity) in pending {
+                    let resp = handle.wait().unwrap();
+                    assert!(
+                        affinity.matches(resp.arch, resp.kind),
+                        "placement violated affinity {affinity:?}: ran on {}:{}",
+                        resp.kind,
+                        resp.arch
+                    );
+                    let got = bytes_to_f32(resp.buffers[0].as_ref().unwrap());
+                    assert_eq!(got, want, "client result differs from ground truth");
+                }
+            });
+        }
+    });
+
+    let m = pool.metrics();
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert!(total >= 256, "workload must exercise >= 256 requests");
+    assert_eq!(m.submitted, total);
+    assert_eq!(m.completed, total);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.queue_depth, 0);
+    // Two distinct modules over four per-device caches bound the misses.
+    let cache = m.cache();
+    assert_eq!(cache.hits + cache.misses, total);
+    assert!(cache.misses <= 8, "at most 2 modules x 4 devices may miss: {cache:?}");
+    assert!(
+        cache.hit_rate() > 0.9,
+        "repeated-kernel workload must exceed 90% hit rate: {cache:?}"
+    );
+    // The workload pins jobs to each arch and each runtime kind, so both
+    // simulated targets and both runtime builds must have executed work.
+    for arch in Arch::all() {
+        let ran: u64 = m.devices.iter().filter(|d| d.arch == arch).map(|d| d.completed).sum();
+        assert!(ran > 0, "no {arch} device ran anything");
+    }
+    for kind in RuntimeKind::all() {
+        let ran: u64 = m.devices.iter().filter(|d| d.kind == kind).map(|d| d.completed).sum();
+        assert!(ran > 0, "no {kind} device ran anything");
+    }
+    let per_device: u64 = m.devices.iter().map(|d| d.completed).sum();
+    assert_eq!(per_device, total, "per-device counters must add up");
+}
+
+/// The same requests through the mixed pool and through a single-device
+/// pool must produce bit-identical outputs.
+#[test]
+fn pool_results_match_single_device_execution() {
+    let mixed = DevicePool::new(&PoolConfig::mixed4()).unwrap();
+    let single =
+        DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)).unwrap();
+    for i in 0..16 {
+        let n = 50 + i * 7;
+        let data: Vec<f32> = (0..n).map(|k| (k * 3 + i) as f32 * 0.25).collect();
+        let (req_a, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        let (req_b, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        let a = mixed.submit(req_a).unwrap().wait().unwrap();
+        let b = single.submit(req_b).unwrap().wait().unwrap();
+        assert_eq!(
+            a.buffers[0], b.buffers[0],
+            "mixed-pool output differs from single-device execution (iter {i})"
+        );
+    }
+}
+
+/// Hit/miss accounting: first prepare of a module on a device misses,
+/// every subsequent launch of the same content hits; a different module
+/// or opt level misses again.
+#[test]
+fn image_cache_counts_hits_and_misses() {
+    let pool =
+        DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)).unwrap();
+    let data: Vec<f32> = (0..32).map(|i| i as f32).collect();
+    for _ in 0..10 {
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        let resp = pool.submit(req).unwrap().wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let c = pool.metrics().cache();
+    assert_eq!((c.hits, c.misses), (9, 1), "10 identical submissions: 1 miss, 9 hits");
+
+    // A different kernel module misses once, then hits.
+    let x: Vec<f32> = (0..32).map(|i| i as f32).collect();
+    for _ in 0..3 {
+        let (req, want) = saxpy_request(2.0, &x, &x, Affinity::any(), OptLevel::O2);
+        let resp = pool.submit(req).unwrap().wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let c = pool.metrics().cache();
+    assert_eq!((c.hits, c.misses), (11, 2));
+
+    // Same module at a different opt level is a different image.
+    let (req, _) = scale_request(&data, Affinity::any(), OptLevel::O0);
+    pool.submit(req).unwrap().wait().unwrap();
+    let c = pool.metrics().cache();
+    assert_eq!(c.misses, 3, "opt level must be part of the cache key");
+}
+
+/// The first cached response must report a miss, later ones hits.
+#[test]
+fn responses_report_cache_hit_flag() {
+    let pool =
+        DevicePool::new(&PoolConfig::single(RuntimeKind::Legacy, Arch::Amdgcn)).unwrap();
+    let data = vec![1.0f32; 16];
+    let (req, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
+    let first = pool.submit(req).unwrap().wait().unwrap();
+    assert!(!first.cache_hit, "first launch must prepare");
+    let (req, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
+    let second = pool.submit(req).unwrap().wait().unwrap();
+    assert!(second.cache_hit, "second launch must hit the image cache");
+}
+
+/// Arch- and kind-pinned requests run where they were pinned.
+#[test]
+fn affinity_pins_are_honored_per_request() {
+    let pool = DevicePool::new(&PoolConfig::mixed4()).unwrap();
+    let data = vec![3.0f32; 64];
+    for arch in Arch::all() {
+        let (req, want) = scale_request(&data, Affinity::on_arch(arch), OptLevel::O2);
+        let resp = pool.submit(req).unwrap().wait().unwrap();
+        assert_eq!(resp.arch, arch);
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    for kind in RuntimeKind::all() {
+        let (req, want) = scale_request(&data, Affinity::on_kind(kind), OptLevel::O2);
+        let resp = pool.submit(req).unwrap().wait().unwrap();
+        assert_eq!(resp.kind, kind);
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+}
+
+/// A request that fails on-device reports the error through its handle
+/// and does not poison the pool for later requests.
+#[test]
+fn failed_request_reports_error_and_pool_survives() {
+    let pool =
+        DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)).unwrap();
+    let data = vec![1.0f32; 8];
+    let (mut req, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
+    req.kernel = "no_such_kernel".into();
+    let err = pool.submit(req).unwrap().wait();
+    assert!(err.is_err(), "launching a missing kernel must fail");
+    let m = pool.metrics();
+    assert_eq!(m.failed, 1);
+
+    let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    assert_eq!(pool.metrics().completed, 1);
+}
+
+/// The PoolCoordinator merges per-device profiles into region totals that
+/// account for every launch.
+#[test]
+fn pool_coordinator_report_accounts_for_all_launches() {
+    let pc = PoolCoordinator::new(&PoolConfig::mixed4()).unwrap();
+    let data: Vec<f32> = (0..48).map(|i| i as f32).collect();
+    let mut handles = vec![];
+    for _ in 0..24 {
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        handles.push((pc.submit(req).unwrap(), want));
+    }
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let regions = pc.region_report();
+    let scale = regions.iter().find(|r| r.name == "scale").expect("scale region");
+    assert_eq!(scale.summary.count(), 24, "every launch must be profiled");
+    let text = pc.format_report();
+    assert!(text.contains("launches/s"), "{text}");
+}

@@ -1,0 +1,83 @@
+//! Minimal offline shim for the `log` crate facade.
+//!
+//! The offline crate set has no registry access, so this workspace-local
+//! crate provides the five logging macros the codebase uses. `error!`,
+//! `warn!` and `info!` write a leveled line to stderr; `debug!` and
+//! `trace!` evaluate to nothing unless `OMPRT_LOG=debug` is set in the
+//! environment.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Cached answer of "is debug logging enabled" (0 = unknown, 1 = no, 2 = yes).
+static DEBUG_ENABLED: AtomicU8 = AtomicU8::new(0);
+
+/// True when `OMPRT_LOG=debug` (or `trace`) is set.
+pub fn debug_enabled() -> bool {
+    match DEBUG_ENABLED.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let on = matches!(
+                std::env::var("OMPRT_LOG").as_deref(),
+                Ok("debug") | Ok("trace")
+            );
+            DEBUG_ENABLED.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Backend for the macros; not part of the public `log` facade.
+pub fn __emit(level: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{level}] {args}");
+}
+
+/// Log at error level.
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("ERROR", format_args!($($arg)*)) };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("WARN", format_args!($($arg)*)) };
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("INFO", format_args!($($arg)*)) };
+}
+
+/// Log at debug level (enabled by `OMPRT_LOG=debug`).
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::debug_enabled() {
+            $crate::__emit("DEBUG", format_args!($($arg)*))
+        }
+    };
+}
+
+/// Log at trace level (enabled by `OMPRT_LOG=debug`).
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        if $crate::debug_enabled() {
+            $crate::__emit("TRACE", format_args!($($arg)*))
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand_and_run() {
+        crate::error!("e {}", 1);
+        crate::warn!("w");
+        crate::info!("i {}", "x");
+        crate::debug!("d");
+        crate::trace!("t");
+    }
+}

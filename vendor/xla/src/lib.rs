@@ -1,0 +1,852 @@
+//! Minimal offline shim for the `xla` PJRT bindings.
+//!
+//! The real crate wraps `xla_extension`; that shared library is not
+//! available in the offline build environment, so this crate implements
+//! the small API surface `omprt::runtime::pjrt` uses on top of a tiny
+//! **HLO-text interpreter**. It parses the `ENTRY` computation of an HLO
+//! module in textual form and evaluates it over f32 literals.
+//!
+//! Supported opcodes: `parameter`, `constant` (scalar or flat `{..}`
+//! list), `broadcast`, `reshape`, `transpose`, `dot` (1-D/2-D),
+//! elementwise `add`/`subtract`/`multiply`/`divide`/`maximum`/`minimum`/
+//! `negate`/`exponential`, and `tuple`. Anything else reports a clean
+//! error at compile time rather than producing wrong numbers.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (Display is all callers use).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, Error> {
+    Err(Error(msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------------
+
+/// An f32 tensor (or a tuple of tensors, as produced by a ROOT `tuple`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// A rank-1 literal over `data`.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len()], data: data.to_vec(), tuple: None }
+    }
+
+    /// A scalar literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { dims: vec![], data: vec![v], tuple: None }
+    }
+
+    fn tensor(dims: Vec<usize>, data: Vec<f32>) -> Literal {
+        Literal { dims, data, tuple: None }
+    }
+
+    fn tuple_of(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: vec![], tuple: Some(elems) }
+    }
+
+    /// Element count.
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Reinterpret with a new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        if self.tuple.is_some() {
+            return err("reshape of a tuple literal");
+        }
+        let d: Vec<usize> = dims.iter().map(|&x| x as usize).collect();
+        let n: usize = d.iter().product();
+        if n != self.data.len() {
+            return err(format!(
+                "reshape: element count mismatch ({} data vs {:?})",
+                self.data.len(),
+                d
+            ));
+        }
+        Ok(Literal::tensor(d, self.data.clone()))
+    }
+
+    /// Unwrap a 1-tuple (the `return_tuple=True` convention).
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        match self.tuple {
+            Some(mut elems) if elems.len() == 1 => Ok(elems.remove(0)),
+            Some(elems) => err(format!("to_tuple1: tuple has {} elements", elems.len())),
+            None => err("to_tuple1: not a tuple literal"),
+        }
+    }
+
+    /// Copy out the element data.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, Error> {
+        if self.tuple.is_some() {
+            return err("to_vec of a tuple literal");
+        }
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Element types extractable from a [`Literal`] (the shim stores f32).
+pub trait Element {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl Element for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO module handling
+// ---------------------------------------------------------------------------
+
+/// Parsed-enough representation of an HLO module in text form.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("cannot read {path}: {e}")))?;
+        if !text.contains("ENTRY") {
+            return err(format!("{path}: no ENTRY computation in HLO text"));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    /// Build directly from HLO text (test convenience).
+    pub fn from_text(text: &str) -> Result<HloModuleProto, Error> {
+        if !text.contains("ENTRY") {
+            return err("no ENTRY computation in HLO text");
+        }
+        Ok(HloModuleProto { text: text.to_string() })
+    }
+}
+
+/// A computation awaiting compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    text: String,
+}
+
+impl XlaComputation {
+    /// Wrap a proto (the text is compiled by [`PjRtClient::compile`]).
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: proto.text.clone() }
+    }
+}
+
+/// The CPU "client".
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always available: the interpreter *is* the CPU backend.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    /// Platform name, as the real client reports it.
+    pub fn platform_name(&self) -> String {
+        "cpu-hlo-interp".to_string()
+    }
+
+    /// "Compile": parse and validate the ENTRY computation.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        let program = parse_entry(&comp.text)?;
+        // Validate opcodes up front so unsupported modules fail at
+        // compile time, like a real backend would.
+        for inst in &program.insts {
+            if !is_supported(&inst.opcode) {
+                return err(format!("unsupported HLO opcode `{}`", inst.opcode));
+            }
+        }
+        Ok(PjRtLoadedExecutable { program })
+    }
+}
+
+/// A compiled (parsed) executable.
+pub struct PjRtLoadedExecutable {
+    program: Program,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over the given argument literals. The result mirrors the
+    /// real API's `Vec<replica, Vec<output, buffer>>` nesting.
+    pub fn execute<T: AsRef<Literal>>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        let args: Vec<&Literal> = args.iter().map(|a| a.as_ref()).collect();
+        let out = eval(&self.program, &args)?;
+        Ok(vec![vec![PjRtBuffer { literal: out }]])
+    }
+}
+
+/// A device buffer holding one result.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer contents as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Ok(self.literal.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct HloInst {
+    name: String,
+    dims: Vec<usize>,
+    opcode: String,
+    operands: Vec<String>,
+    attrs: HashMap<String, String>,
+    is_root: bool,
+}
+
+#[derive(Debug, Clone)]
+struct Program {
+    insts: Vec<HloInst>,
+}
+
+fn is_supported(op: &str) -> bool {
+    matches!(
+        op,
+        "parameter"
+            | "constant"
+            | "broadcast"
+            | "reshape"
+            | "transpose"
+            | "dot"
+            | "add"
+            | "subtract"
+            | "multiply"
+            | "divide"
+            | "maximum"
+            | "minimum"
+            | "negate"
+            | "exponential"
+            | "tuple"
+    )
+}
+
+/// Extract the lines of the `ENTRY ... { ... }` block.
+fn entry_lines(text: &str) -> Result<Vec<String>, Error> {
+    let start = match text.find("ENTRY") {
+        Some(i) => i,
+        None => return err("no ENTRY computation"),
+    };
+    let open = match text[start..].find('{') {
+        Some(i) => start + i,
+        None => return err("ENTRY has no opening brace"),
+    };
+    // The body ends at the matching close brace; instruction attrs use
+    // braces too ({1,0}, dimensions={..}), so track nesting depth.
+    let mut depth = 0usize;
+    let mut end = None;
+    for (i, c) in text[open..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = Some(open + i);
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let end = match end {
+        Some(e) => e,
+        None => return err("ENTRY has no closing brace"),
+    };
+    Ok(text[open + 1..end]
+        .lines()
+        .map(|l| l.trim().to_string())
+        .filter(|l| !l.is_empty())
+        .collect())
+}
+
+/// Parse `f32[2,2]{1,0}` (or `f32[]`, or a tuple shape) → dims. Tuple
+/// shapes return the dims of the first element (only used for display).
+fn parse_shape_dims(s: &str) -> Result<Vec<usize>, Error> {
+    let s = s.trim().trim_start_matches('(');
+    let lb = match s.find('[') {
+        Some(i) => i,
+        None => return Ok(vec![]), // scalar like `f32` (defensive)
+    };
+    let rb = match s[lb..].find(']') {
+        Some(i) => lb + i,
+        None => return err(format!("bad shape `{s}`")),
+    };
+    let inner = s[lb + 1..rb].trim();
+    if inner.is_empty() {
+        return Ok(vec![]);
+    }
+    inner
+        .split(',')
+        .map(|d| {
+            d.trim()
+                .parse::<usize>()
+                .map_err(|e| Error(format!("bad dim `{d}` in `{s}`: {e}")))
+        })
+        .collect()
+}
+
+/// Split `s` on top-level commas (ignoring commas inside (), {}, []).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = vec![];
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' | '{' | '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' | '}' | ']' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur = String::new();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+/// Parse one instruction line.
+fn parse_inst(line: &str) -> Result<HloInst, Error> {
+    let (is_root, rest) = match line.strip_prefix("ROOT ") {
+        Some(r) => (true, r),
+        None => (false, line),
+    };
+    let (name, rhs) = match rest.split_once('=') {
+        Some((n, r)) => (n.trim().to_string(), r.trim()),
+        None => return err(format!("bad HLO line `{line}`")),
+    };
+    // rhs = <shape> <opcode>(<operands>)[, attr=..]*
+    // The shape ends at the whitespace before the opcode; shapes contain
+    // no spaces in the HLO text JAX emits.
+    let (shape_str, after_shape) = match rhs.split_once(' ') {
+        Some((s, r)) => (s, r.trim()),
+        None => return err(format!("bad HLO rhs `{rhs}`")),
+    };
+    let dims = parse_shape_dims(shape_str)?;
+    let op_paren = match after_shape.find('(') {
+        Some(i) => i,
+        None => return err(format!("no operand list in `{rhs}`")),
+    };
+    let opcode = after_shape[..op_paren].trim().to_string();
+    // Find the matching close paren of the operand list.
+    let mut depth = 0i32;
+    let mut close = None;
+    for (i, c) in after_shape.char_indices() {
+        if i < op_paren {
+            continue;
+        }
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = Some(i);
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let close = match close {
+        Some(c) => c,
+        None => return err(format!("unterminated operand list in `{rhs}`")),
+    };
+    let operand_str = &after_shape[op_paren + 1..close];
+    let operands = split_top_level(operand_str);
+    // Attrs after the close paren: `, key={..}` or `, key=value`.
+    let mut attrs = HashMap::new();
+    let attr_str = after_shape[close + 1..].trim_start_matches(',').trim();
+    for part in split_top_level(attr_str) {
+        if let Some((k, v)) = part.split_once('=') {
+            attrs.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    Ok(HloInst { name, dims, opcode, operands, attrs, is_root })
+}
+
+fn parse_entry(text: &str) -> Result<Program, Error> {
+    let mut insts = vec![];
+    for line in entry_lines(text)? {
+        insts.push(parse_inst(&line)?);
+    }
+    if insts.is_empty() {
+        return err("empty ENTRY computation");
+    }
+    Ok(Program { insts })
+}
+
+/// Parse `{1,0}` / `{}` into a usize list.
+fn parse_int_set(s: &str) -> Result<Vec<usize>, Error> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}').trim();
+    if inner.is_empty() {
+        return Ok(vec![]);
+    }
+    inner
+        .split(',')
+        .map(|d| {
+            d.trim()
+                .parse::<usize>()
+                .map_err(|e| Error(format!("bad int set `{s}`: {e}")))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation
+// ---------------------------------------------------------------------------
+
+fn eval(program: &Program, args: &[&Literal]) -> Result<Literal, Error> {
+    let mut env: HashMap<&str, Literal> = HashMap::new();
+    let mut root: Option<Literal> = None;
+    for inst in &program.insts {
+        let value = eval_inst(inst, &env, args)?;
+        if inst.is_root {
+            root = Some(value.clone());
+        }
+        env.insert(inst.name.as_str(), value);
+    }
+    match root {
+        Some(v) => Ok(v),
+        // No ROOT marker: the last instruction is the root.
+        None => Ok(env[program.insts.last().unwrap().name.as_str()].clone()),
+    }
+}
+
+fn operand<'a>(
+    env: &'a HashMap<&str, Literal>,
+    inst: &HloInst,
+    i: usize,
+) -> Result<&'a Literal, Error> {
+    let name = inst
+        .operands
+        .get(i)
+        .ok_or_else(|| Error(format!("`{}`: missing operand {i}", inst.name)))?;
+    env.get(name.as_str())
+        .ok_or_else(|| Error(format!("`{}`: unknown operand `{name}`", inst.name)))
+}
+
+fn elementwise2(
+    inst: &HloInst,
+    env: &HashMap<&str, Literal>,
+    f: impl Fn(f32, f32) -> f32,
+) -> Result<Literal, Error> {
+    let a = operand(env, inst, 0)?;
+    let b = operand(env, inst, 1)?;
+    if a.data.len() != b.data.len() {
+        return err(format!(
+            "`{}`: elementwise size mismatch ({} vs {})",
+            inst.name,
+            a.data.len(),
+            b.data.len()
+        ));
+    }
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+    Ok(Literal::tensor(inst.dims.clone(), data))
+}
+
+fn elementwise1(
+    inst: &HloInst,
+    env: &HashMap<&str, Literal>,
+    f: impl Fn(f32) -> f32,
+) -> Result<Literal, Error> {
+    let a = operand(env, inst, 0)?;
+    let data = a.data.iter().map(|&x| f(x)).collect();
+    Ok(Literal::tensor(inst.dims.clone(), data))
+}
+
+/// Row-major strides for `dims`.
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+fn eval_inst(
+    inst: &HloInst,
+    env: &HashMap<&str, Literal>,
+    args: &[&Literal],
+) -> Result<Literal, Error> {
+    match inst.opcode.as_str() {
+        "parameter" => {
+            let idx: usize = inst
+                .operands
+                .first()
+                .and_then(|s| s.trim().parse().ok())
+                .ok_or_else(|| Error(format!("`{}`: bad parameter index", inst.name)))?;
+            let a = args
+                .get(idx)
+                .ok_or_else(|| Error(format!("parameter({idx}) but only {} args", args.len())))?;
+            let want: usize = inst.dims.iter().product();
+            if a.data.len() != want {
+                return err(format!(
+                    "parameter({idx}): expected {want} elements, got {}",
+                    a.data.len()
+                ));
+            }
+            Ok(Literal::tensor(inst.dims.clone(), a.data.clone()))
+        }
+        "constant" => {
+            let raw = inst
+                .operands
+                .first()
+                .ok_or_else(|| Error(format!("`{}`: constant without value", inst.name)))?;
+            let vals = parse_constant(raw)?;
+            let want: usize = inst.dims.iter().product();
+            if vals.len() != want {
+                return err(format!(
+                    "`{}`: constant has {} values for shape {:?}",
+                    inst.name,
+                    vals.len(),
+                    inst.dims
+                ));
+            }
+            Ok(Literal::tensor(inst.dims.clone(), vals))
+        }
+        "broadcast" => {
+            let a = operand(env, inst, 0)?;
+            let out_dims = &inst.dims;
+            let map = parse_int_set(inst.attrs.get("dimensions").map(String::as_str).unwrap_or("{}"))?;
+            if map.len() != a.dims.len() {
+                return err(format!(
+                    "`{}`: broadcast dimensions {:?} vs input rank {}",
+                    inst.name,
+                    map,
+                    a.dims.len()
+                ));
+            }
+            let out_n: usize = out_dims.iter().product();
+            let out_strides = strides(out_dims);
+            let in_strides = strides(&a.dims);
+            let mut data = vec![0f32; out_n];
+            for (lin, slot) in data.iter_mut().enumerate() {
+                let mut in_lin = 0usize;
+                for (k, &od) in map.iter().enumerate() {
+                    let coord = (lin / out_strides[od]) % out_dims[od];
+                    in_lin += coord * in_strides[k];
+                }
+                *slot = a.data[in_lin];
+            }
+            Ok(Literal::tensor(out_dims.clone(), data))
+        }
+        "reshape" => {
+            let a = operand(env, inst, 0)?;
+            let want: usize = inst.dims.iter().product();
+            if a.data.len() != want {
+                return err(format!("`{}`: reshape element count mismatch", inst.name));
+            }
+            Ok(Literal::tensor(inst.dims.clone(), a.data.clone()))
+        }
+        "transpose" => {
+            let a = operand(env, inst, 0)?;
+            let perm = parse_int_set(
+                inst.attrs.get("dimensions").map(String::as_str).unwrap_or(""),
+            )?;
+            if perm.len() != a.dims.len() {
+                return err(format!("`{}`: transpose rank mismatch", inst.name));
+            }
+            let out_dims = &inst.dims;
+            let out_strides = strides(out_dims);
+            let in_strides = strides(&a.dims);
+            let mut data = vec![0f32; a.data.len()];
+            for (lin, slot) in data.iter_mut().enumerate() {
+                let mut in_lin = 0usize;
+                for (o, &src_axis) in perm.iter().enumerate() {
+                    let coord = (lin / out_strides[o]) % out_dims[o];
+                    in_lin += coord * in_strides[src_axis];
+                }
+                *slot = a.data[in_lin];
+            }
+            Ok(Literal::tensor(out_dims.clone(), data))
+        }
+        "dot" => {
+            let a = operand(env, inst, 0)?;
+            let b = operand(env, inst, 1)?;
+            let lc = parse_int_set(
+                inst.attrs.get("lhs_contracting_dims").map(String::as_str).unwrap_or("{1}"),
+            )?;
+            let rc = parse_int_set(
+                inst.attrs.get("rhs_contracting_dims").map(String::as_str).unwrap_or("{0}"),
+            )?;
+            dot(inst, a, b, &lc, &rc)
+        }
+        "add" => elementwise2(inst, env, |x, y| x + y),
+        "subtract" => elementwise2(inst, env, |x, y| x - y),
+        "multiply" => elementwise2(inst, env, |x, y| x * y),
+        "divide" => elementwise2(inst, env, |x, y| x / y),
+        "maximum" => elementwise2(inst, env, f32::max),
+        "minimum" => elementwise2(inst, env, f32::min),
+        "negate" => elementwise1(inst, env, |x| -x),
+        "exponential" => elementwise1(inst, env, f32::exp),
+        "tuple" => {
+            let mut elems = vec![];
+            for i in 0..inst.operands.len() {
+                elems.push(operand(env, inst, i)?.clone());
+            }
+            Ok(Literal::tuple_of(elems))
+        }
+        other => err(format!("unsupported HLO opcode `{other}`")),
+    }
+}
+
+/// Parse a constant payload: `2`, `2.5`, `-1e-3`, or `{1, 2, 3}`.
+fn parse_constant(raw: &str) -> Result<Vec<f32>, Error> {
+    let raw = raw.trim();
+    if let Some(inner) = raw.strip_prefix('{') {
+        let inner = inner.trim_end_matches('}');
+        if inner.contains('{') {
+            return err("nested constant arrays are not supported");
+        }
+        if inner.trim().is_empty() {
+            return Ok(vec![]);
+        }
+        return inner
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse::<f32>()
+                    .map_err(|e| Error(format!("bad constant element `{v}`: {e}")))
+            })
+            .collect();
+    }
+    raw.parse::<f32>()
+        .map(|v| vec![v])
+        .map_err(|e| Error(format!("bad constant `{raw}`: {e}")))
+}
+
+/// General 1-D/2-D dot product with single contracting dims.
+fn dot(
+    inst: &HloInst,
+    a: &Literal,
+    b: &Literal,
+    lc: &[usize],
+    rc: &[usize],
+) -> Result<Literal, Error> {
+    if lc.len() != 1 || rc.len() != 1 {
+        return err(format!("`{}`: only single contracting dims supported", inst.name));
+    }
+    let (lc, rc) = (lc[0], rc[0]);
+    match (a.dims.len(), b.dims.len()) {
+        (2, 2) => {
+            if lc != 1 || rc != 0 {
+                return err(format!("`{}`: unsupported dot layout", inst.name));
+            }
+            let (m, k) = (a.dims[0], a.dims[1]);
+            let n = b.dims[1];
+            if b.dims[0] != k {
+                return err(format!("`{}`: dot inner dims differ", inst.name));
+            }
+            let mut out = vec![0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f32;
+                    for p in 0..k {
+                        acc += a.data[i * k + p] * b.data[p * n + j];
+                    }
+                    out[i * n + j] = acc;
+                }
+            }
+            Ok(Literal::tensor(vec![m, n], out))
+        }
+        (2, 1) => {
+            if lc != 1 || rc != 0 {
+                return err(format!("`{}`: unsupported dot layout", inst.name));
+            }
+            let (m, k) = (a.dims[0], a.dims[1]);
+            if b.dims[0] != k {
+                return err(format!("`{}`: dot inner dims differ", inst.name));
+            }
+            let mut out = vec![0f32; m];
+            for (i, slot) in out.iter_mut().enumerate() {
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc += a.data[i * k + p] * b.data[p];
+                }
+                *slot = acc;
+            }
+            Ok(Literal::tensor(vec![m], out))
+        }
+        (1, 2) => {
+            if lc != 0 || rc != 0 {
+                return err(format!("`{}`: unsupported dot layout", inst.name));
+            }
+            let k = a.dims[0];
+            let n = b.dims[1];
+            if b.dims[0] != k {
+                return err(format!("`{}`: dot inner dims differ", inst.name));
+            }
+            let mut out = vec![0f32; n];
+            for (j, slot) in out.iter_mut().enumerate() {
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc += a.data[p] * b.data[p * n + j];
+                }
+                *slot = acc;
+            }
+            Ok(Literal::tensor(vec![n], out))
+        }
+        (1, 1) => {
+            if a.dims[0] != b.dims[0] {
+                return err(format!("`{}`: dot vector lengths differ", inst.name));
+            }
+            let acc = a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum();
+            Ok(Literal::tensor(vec![], vec![acc]))
+        }
+        _ => err(format!("`{}`: dot rank {:?}x{:?} unsupported", inst.name, a.dims, b.dims)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MATMUL: &str = r#"HloModule xla_computation_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.8 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.4 = f32[] constant(2)
+  broadcast.5 = f32[2,2]{1,0} broadcast(constant.4), dimensions={}
+  add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)
+  ROOT tuple.7 = (f32[2,2]{1,0}) tuple(add.6)
+}
+"#;
+
+    fn run(text: &str, args: &[Literal]) -> Literal {
+        let proto = HloModuleProto::from_text(text).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        let out = exe.execute::<Literal>(args).unwrap();
+        out[0][0].to_literal_sync().unwrap()
+    }
+
+    #[test]
+    fn matmul_plus_two_evaluates() {
+        let a = Literal::vec1(&[1., 2., 3., 4.]).reshape(&[2, 2]).unwrap();
+        let b = Literal::vec1(&[1., 1., 1., 1.]).reshape(&[2, 2]).unwrap();
+        let out = run(MATMUL, &[a, b]).to_tuple1().unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![5., 5., 9., 9.]);
+    }
+
+    #[test]
+    fn scalar_broadcast_fills_shape() {
+        let text = r#"HloModule m
+ENTRY e {
+  c = f32[] constant(3)
+  ROOT b = f32[2,3]{1,0} broadcast(c), dimensions={}
+}
+"#;
+        let out = run(text, &[]);
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![3.0; 6]);
+    }
+
+    #[test]
+    fn vector_broadcast_along_dim() {
+        let text = r#"HloModule m
+ENTRY e {
+  p = f32[3]{0} parameter(0)
+  ROOT b = f32[2,3]{1,0} broadcast(p), dimensions={1}
+}
+"#;
+        let out = run(text, &[Literal::vec1(&[1., 2., 3.])]);
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn matvec_dot() {
+        let text = r#"HloModule m
+ENTRY e {
+  a = f32[2,3]{1,0} parameter(0)
+  v = f32[3]{0} parameter(1)
+  ROOT d = f32[2]{0} dot(a, v), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+        let a = Literal::vec1(&[1., 2., 3., 4., 5., 6.]).reshape(&[2, 3]).unwrap();
+        let v = Literal::vec1(&[1., 0., 1.]);
+        let out = run(text, &[a, v]);
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![4., 10.]);
+    }
+
+    #[test]
+    fn transpose_permutes() {
+        let text = r#"HloModule m
+ENTRY e {
+  p = f32[2,3]{1,0} parameter(0)
+  ROOT t = f32[3,2]{1,0} transpose(p), dimensions={1,0}
+}
+"#;
+        let p = Literal::vec1(&[1., 2., 3., 4., 5., 6.]).reshape(&[2, 3]).unwrap();
+        let out = run(text, &[p]);
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn unsupported_opcode_fails_at_compile() {
+        let text = r#"HloModule m
+ENTRY e {
+  p = f32[4]{0} parameter(0)
+  ROOT s = f32[4]{0} sort(p), dimensions={0}
+}
+"#;
+        let proto = HloModuleProto::from_text(text).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        assert!(PjRtClient::cpu().unwrap().compile(&comp).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1., 2., 3.]).reshape(&[2, 2]).is_err());
+        assert!(Literal::vec1(&[1., 2., 3., 4.]).reshape(&[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}
