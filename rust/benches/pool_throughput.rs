@@ -1,14 +1,21 @@
-//! BENCH: device-pool offload throughput — 1-device vs 4-device mixed
-//! pool, cold vs warm kernel-image cache, in launches/sec.
+//! BENCH: device-pool offload throughput.
 //!
-//! The repeated-kernel workload replays the `scale`/`saxpy` conformance
-//! kernels; cold batches pay `prepare` (link + optimize + load) per
-//! device, warm batches should be queue-pop + map + launch only, so the
-//! warm/cold gap is the cache win and the 4-vs-1 gap is the scaling win.
+//! Scenarios:
+//! 1. **scaling** — 1-device vs 4-device mixed pool, cold vs warm image
+//!    cache (the PR-1 baseline numbers, kept for continuity);
+//! 2. **batched small launches** — warm 4-device pool, 256 identical
+//!    small `scale` requests: synchronous per-request submission (one
+//!    round trip per launch) vs async `batch_max=1` vs async
+//!    `batch_max=32`; the batched case must beat the per-request baseline
+//!    by ≥ 2x (batching fuses same-image launches into one grid, so small
+//!    launches stop paying per-launch setup and idle SMs);
+//! 3. **sharded large launch** — one 256K-element `scale` request on a
+//!    single device vs the same request sharded across a 4-device
+//!    uniform pool.
 
 use omprt::devrt::RuntimeKind;
 use omprt::ir::passes::OptLevel;
-use omprt::sched::workload::{saxpy_request, scale_request};
+use omprt::sched::workload::{saxpy_request, scale_request, sharded_scale_request};
 use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig};
 use omprt::sim::Arch;
 use std::time::Instant;
@@ -16,7 +23,8 @@ use std::time::Instant;
 const BATCH: usize = 256;
 const ELEMS: usize = 256;
 
-/// Submit one mixed batch and wait for every result; returns launches/sec.
+/// Submit one mixed batch asynchronously and wait for every result;
+/// returns launches/sec.
 fn run_batch(pool: &DevicePool, batch: usize) -> f64 {
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(batch);
@@ -56,6 +64,109 @@ fn bench_pool(name: &str, config: &PoolConfig) -> (f64, f64) {
     (cold, warm)
 }
 
+/// All-identical small `scale` requests, submitted synchronously (wait
+/// after each submit — the per-request baseline) or asynchronously.
+fn run_small_scales(pool: &DevicePool, count: usize, sync: bool) -> f64 {
+    let data: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
+    let t0 = Instant::now();
+    if sync {
+        for _ in 0..count {
+            let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+            let resp = pool.submit(req).unwrap().wait().unwrap();
+            assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+        }
+    } else {
+        let mut handles = Vec::with_capacity(count);
+        for _ in 0..count {
+            let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+            handles.push((pool.submit(req).unwrap(), want));
+        }
+        for (h, want) in handles {
+            let resp = h.wait().unwrap();
+            assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+        }
+    }
+    count as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn batched_small_launch_scenario() {
+    println!("\n--- batched small launches: {BATCH} x scale({ELEMS}) on a 4-device pool ---");
+    // Per-request baseline: batching off, one request in flight at a time.
+    let per_request = {
+        let pool = DevicePool::new(&PoolConfig::mixed4().with_batch_max(1)).unwrap();
+        run_small_scales(&pool, BATCH, false); // warm the image caches
+        run_small_scales(&pool, BATCH, true)
+    };
+    // Async pipeline, still unbatched.
+    let async_unbatched = {
+        let pool = DevicePool::new(&PoolConfig::mixed4().with_batch_max(1)).unwrap();
+        run_small_scales(&pool, BATCH, false);
+        run_small_scales(&pool, BATCH, false)
+    };
+    // Async + batching: same-image launches fuse into one grid per pop.
+    let (batched, batched_jobs, max_batch) = {
+        let pool = DevicePool::new(&PoolConfig::mixed4().with_batch_max(32)).unwrap();
+        run_small_scales(&pool, BATCH, false);
+        let rate = run_small_scales(&pool, BATCH, false);
+        let m = pool.metrics();
+        let max = m.devices.iter().map(|d| d.max_batch).max().unwrap_or(0);
+        (rate, m.batched_jobs(), max)
+    };
+    println!(
+        "per-request (sync)    {per_request:>8.1} launches/s\n\
+         async, batch_max=1    {async_unbatched:>8.1} launches/s ({:.2}x)\n\
+         async, batch_max=32   {batched:>8.1} launches/s ({:.2}x) | {batched_jobs} jobs coalesced, max batch {max_batch}",
+        async_unbatched / per_request,
+        batched / per_request,
+    );
+    assert!(
+        batched >= 2.0 * per_request,
+        "warm batched throughput must be >= 2x the per-request baseline \
+         (got {batched:.1} vs {per_request:.1} launches/s)"
+    );
+}
+
+fn sharded_large_launch_scenario() {
+    const N: usize = 256 * 1024;
+    println!("\n--- sharded large launch: scale({N}) ---");
+    let data: Vec<f32> = (0..N).map(|k| (k % 1013) as f32).collect();
+
+    let single = DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64))
+        .unwrap();
+    // Warm the cache, then time the unsharded request (ShardSpec present,
+    // but a 1-device pool always falls back to a single shard).
+    let (req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+    single.submit(req).unwrap().wait().unwrap();
+    let t0 = Instant::now();
+    let (req, _) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+    let resp = single.submit(req).unwrap().wait().unwrap();
+    let t_single = t0.elapsed().as_secs_f64();
+    assert_eq!(resp.shards, 1);
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+
+    let quad =
+        DevicePool::new(&PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)).unwrap();
+    let (req, _) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+    quad.submit(req).unwrap().wait().unwrap(); // warm all shards' caches
+    let t0 = Instant::now();
+    let (req, _) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+    let resp = quad.submit(req).unwrap().wait().unwrap();
+    let t_quad = t0.elapsed().as_secs_f64();
+    assert!(resp.shards >= 2, "a 4-device uniform pool must shard, got {}", resp.shards);
+    assert_eq!(
+        bytes_to_f32(resp.buffers[0].as_ref().unwrap()),
+        want,
+        "stitched sharded result must match the host reference"
+    );
+    println!(
+        "1 device: {:.1} ms | 4 devices, {} shards: {:.1} ms | speedup {:.2}x",
+        t_single * 1e3,
+        resp.shards,
+        t_quad * 1e3,
+        t_single / t_quad
+    );
+}
+
 fn main() {
     println!(
         "\n=== pool throughput: {BATCH} requests/batch, {ELEMS} f32 elems, mixed scale/saxpy ===\n"
@@ -85,4 +196,7 @@ fn main() {
         "repeated-kernel batch hit rate: {:.1}% (> 90% required)",
         cache.hit_rate() * 100.0
     );
+
+    batched_small_launch_scenario();
+    sharded_large_launch_scenario();
 }

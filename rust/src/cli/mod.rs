@@ -6,8 +6,9 @@
 //! omprt table1      [--arch A] [--scale small|paper]
 //! omprt conformance
 //! omprt code-compare
-//! omprt bench NAME  [--arch A] [--runtime legacy|portable] [--scale S]
+//! omprt bench NAME  [--arch A] [--runtime legacy|portable] [--scale S] [--pool]
 //! omprt pool        [--config FILE] [--requests N] [--elems N]
+//!                   [--batch N] [--queue-cap N] [--cache-budget BYTES] [--shard-elems N]
 //! omprt info
 //! ```
 
@@ -23,15 +24,22 @@ struct Args {
     flags: std::collections::HashMap<String, String>,
 }
 
+/// Flags that take no value (presence-only switches).
+const BOOL_FLAGS: &[&str] = &["pool"];
+
 fn parse_args(argv: &[String]) -> Args {
     let mut positional = vec![];
     let mut flags = std::collections::HashMap::new();
     let mut i = 0;
     while i < argv.len() {
         if let Some(name) = argv[i].strip_prefix("--") {
-            let val = argv.get(i + 1).cloned().unwrap_or_default();
+            // Boolean switches never consume the next token; value flags
+            // don't swallow a following `--flag` either.
+            let takes_value = !BOOL_FLAGS.contains(&name)
+                && argv.get(i + 1).is_some_and(|v| !v.starts_with("--"));
+            let val = if takes_value { argv[i + 1].clone() } else { String::new() };
             flags.insert(name.to_string(), val);
-            i += 2;
+            i += if takes_value { 2 } else { 1 };
         } else {
             positional.push(argv[i].clone());
             i += 1;
@@ -61,6 +69,32 @@ impl Args {
             .get("runtime")
             .and_then(|s| RuntimeKind::parse(s))
             .unwrap_or(RuntimeKind::Portable)
+    }
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+    fn uint(&self, name: &str) -> Option<u64> {
+        self.flags.get(name).and_then(|s| s.parse().ok())
+    }
+    /// Pool config from `--config` (or defaults) with flag overrides.
+    fn pool_config(&self) -> Result<crate::sched::PoolConfig, crate::util::Error> {
+        let mut cfg = match self.flags.get("config") {
+            Some(path) => {
+                let doc = crate::config::Config::load(std::path::Path::new(path))?;
+                crate::sched::PoolConfig::from_config(&doc)?
+            }
+            None => crate::sched::PoolConfig::default(),
+        };
+        if let Some(b) = self.uint("batch") {
+            cfg.batch_max = (b as usize).max(1);
+        }
+        if let Some(c) = self.uint("queue-cap") {
+            cfg.queue_cap = c as usize;
+        }
+        if let Some(b) = self.uint("cache-budget") {
+            cfg.cache_budget_bytes = b;
+        }
+        Ok(cfg)
     }
 }
 
@@ -141,6 +175,9 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
                 .positional
                 .first()
                 .ok_or_else(|| crate::util::Error::Config("bench needs a NAME".into()))?;
+            if args.has("pool") {
+                return run_bench_pool(name, args);
+            }
             let bench = by_name(name, args.scale())
                 .ok_or_else(|| crate::util::Error::Config(format!("unknown benchmark `{name}`")))?;
             let mut c = Coordinator::new(args.runtime(), args.arch());
@@ -161,13 +198,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
             Ok(())
         }
         "pool" => {
-            let pool_cfg = match args.flags.get("config") {
-                Some(path) => {
-                    let doc = crate::config::Config::load(std::path::Path::new(path))?;
-                    crate::sched::PoolConfig::from_config(&doc)?
-                }
-                None => crate::sched::PoolConfig::default(),
-            };
+            let pool_cfg = args.pool_config()?;
             let requests = args
                 .flags
                 .get("requests")
@@ -178,7 +209,8 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
                 .get("elems")
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(256usize);
-            run_pool_demo(&pool_cfg, requests, elems)
+            let shard_elems = args.uint("shard-elems").map(|n| n as usize);
+            run_pool_demo(&pool_cfg, requests, elems, shard_elems)
         }
         "info" => {
             for arch in Arch::all() {
@@ -206,13 +238,71 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
     }
 }
 
+/// `omprt bench NAME --pool`: run one SPEC-analog benchmark through the
+/// device pool. The benchmark executes on a pool device *lease* — queued
+/// and placed like any other pool job — and its own verification checks
+/// device results against the host reference.
+fn run_bench_pool(name: &str, args: &Args) -> Result<(), crate::util::Error> {
+    use crate::coordinator::PoolCoordinator;
+    use crate::sched::Affinity;
+
+    let probe = by_name(name, args.scale())
+        .ok_or_else(|| crate::util::Error::Config(format!("unknown benchmark `{name}`")))?;
+    if probe.needs_artifacts() {
+        return Err(crate::util::Error::Config(format!(
+            "`{name}` needs PJRT artifacts, which cannot be attached to a shared pool device; \
+             run it without --pool"
+        )));
+    }
+    let pc = PoolCoordinator::new(&args.pool_config()?)?;
+    // Explicit --arch/--runtime flags become affinity pins; otherwise the
+    // benchmark may land on any pool device.
+    let affinity = Affinity {
+        arch: args.flags.get("arch").and_then(|s| crate::sim::Arch::parse(s)),
+        kind: args.flags.get("runtime").and_then(|s| RuntimeKind::parse(s)),
+    };
+    println!(
+        "bench {name} via pool (affinity {affinity:?}) over devices {:?}",
+        pc.pool.specs().iter().map(|s| s.to_string()).collect::<Vec<_>>()
+    );
+    let scale = args.scale();
+    let name_owned = name.to_string();
+    let handle = pc.run_on(affinity, move |lease| {
+        let bench = by_name(&name_owned, scale).expect("name validated before submit");
+        let c = Coordinator::on_device(lease.device.clone());
+        let result = bench.run(&c);
+        // Fold the benchmark's region profile into the device profiler so
+        // the pool report below shows where the time went.
+        lease.profiler.absorb(&c.profiler);
+        (lease.id, lease.spec, result)
+    })?;
+    let (dev_id, spec, result) = handle.wait()?;
+    let r = result?;
+    println!(
+        "{name}: {:.4}s kernel wall, verified={}, checksum={:.6e} (device {dev_id}: {spec})",
+        r.kernel_wall.as_secs_f64(),
+        r.verified,
+        r.checksum
+    );
+    print!("{}", pc.format_report());
+    if !r.verified {
+        return Err(crate::util::Error::Verify(format!(
+            "`{name}` failed verification against the host reference"
+        )));
+    }
+    Ok(())
+}
+
 /// The `pool` subcommand: drive a mixed-arch, mixed-runtime device pool
 /// with a mixed workload (`scale` + `saxpy`, rotating affinities), verify
 /// every result against the host reference, print the pool report.
+/// `--shard-elems N` appends one large sharded `scale` request to
+/// demonstrate the cross-device split.
 fn run_pool_demo(
     pool_cfg: &crate::sched::PoolConfig,
     requests: usize,
     elems: usize,
+    shard_elems: Option<usize>,
 ) -> Result<(), crate::util::Error> {
     use crate::sched::workload::{saxpy_request, scale_request};
     use crate::sched::{bytes_to_f32, Affinity};
@@ -253,6 +343,23 @@ fn run_pool_demo(
             bad += 1;
         }
     }
+    if let Some(n) = shard_elems {
+        use crate::sched::workload::sharded_scale_request;
+        let data: Vec<f32> = (0..n).map(|i| (i % 97) as f32).collect();
+        let (req, want) = sharded_scale_request(&data, Affinity::any(), opt);
+        let resp = pc.submit(req)?.wait()?;
+        let got = bytes_to_f32(resp.buffers[0].as_ref().expect("output buffer"));
+        println!(
+            "sharded scale over {n} elems: {} shard(s) on {}:{}, result {}",
+            resp.shards,
+            resp.kind,
+            resp.arch,
+            if got == want { "matches host reference" } else { "MISMATCH" }
+        );
+        if got != want {
+            bad += 1;
+        }
+    }
     print!("{}", pc.format_report());
     if bad > 0 {
         return Err(crate::util::Error::Verify(format!(
@@ -274,11 +381,13 @@ fn print_help() {
          \x20 table1        run the Table 1 experiment (miniQMC region profiles)\n\
          \x20 conformance   run the SOLLVE-analog suite on every runtime x arch\n\
          \x20 code-compare  diff the legacy vs portable runtime library text (par. 4.1)\n\
-         \x20 bench NAME    run one benchmark (postencil|polbm|pomriq|pep|pcg|pbt|miniqmc)\n\
-         \x20 pool          drive a mixed device pool (async scheduler + image cache demo)\n\
+         \x20 bench NAME    run one benchmark (postencil|polbm|pomriq|pep|pcg|pbt|miniqmc);\n\
+         \x20               --pool routes it through the device pool\n\
+         \x20 pool          drive a mixed device pool (batching/sharding scheduler demo)\n\
          \x20 info          device + artifact info\n\
          \n\
          FLAGS: --arch nvptx64|amdgcn  --scale small|paper  --reps N  --runtime legacy|portable\n\
-         \x20      pool: --config FILE ([pool] table)  --requests N  --elems N"
+         \x20      pool: --config FILE ([pool] table)  --requests N  --elems N\n\
+         \x20            --batch N  --queue-cap N  --cache-budget BYTES  --shard-elems N"
     );
 }

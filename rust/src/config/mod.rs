@@ -46,6 +46,14 @@ impl Value {
             _ => None,
         }
     }
+    /// Non-negative integer view (rejects negatives — used by size/count
+    /// knobs like the `[pool]` table's `queue_cap`/`cache_budget_bytes`).
+    pub fn as_uint(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
     /// Float view (Int promotes).
     pub fn as_float(&self) -> Option<f64> {
         match self {
@@ -300,6 +308,14 @@ mod tests {
         assert_eq!(c.int_or(Some("postencil"), "iters", 1), 100);
         assert_eq!(c.int_or(Some("postencil"), "missing", 7), 7);
         assert_eq!(c.str_or(None, "title", "x"), "omprt");
+    }
+
+    #[test]
+    fn as_uint_rejects_negatives_and_non_ints() {
+        assert_eq!(Value::Int(5).as_uint(), Some(5));
+        assert_eq!(Value::Int(0).as_uint(), Some(0));
+        assert_eq!(Value::Int(-1).as_uint(), None);
+        assert_eq!(Value::Str("5".into()).as_uint(), None);
     }
 
     #[test]

@@ -17,11 +17,17 @@ use crate::ir::Module;
 use crate::runtime::{install_payloads, ArtifactManifest, PjrtService};
 use crate::sim::{Arch, LaunchConfig, LaunchStats};
 use crate::util::Error;
+use std::sync::Arc;
 
 /// One device + its profiler + (optionally) the PJRT payload service.
+///
+/// The device is behind an `Arc` so a coordinator can also wrap a device
+/// *leased from a pool* ([`Coordinator::on_device`], used by
+/// `omprt bench --pool`); artifacts can only be attached while the
+/// coordinator is the device's sole owner.
 pub struct Coordinator {
     /// The offload device (runtime build + memory).
-    pub device: OffloadDevice,
+    pub device: Arc<OffloadDevice>,
     /// Per-region profiler.
     pub profiler: Profiler,
     /// PJRT service handle, if artifacts were attached.
@@ -31,7 +37,26 @@ pub struct Coordinator {
 impl Coordinator {
     /// A coordinator without PJRT payloads.
     pub fn new(kind: RuntimeKind, arch: Arch) -> Self {
-        Coordinator { device: OffloadDevice::new(kind, arch), profiler: Profiler::new(), pjrt: None }
+        Coordinator {
+            device: Arc::new(OffloadDevice::new(kind, arch)),
+            profiler: Profiler::new(),
+            pjrt: None,
+        }
+    }
+
+    /// A coordinator over an existing (possibly shared) device — e.g. a
+    /// pool device lease.
+    pub fn on_device(device: Arc<OffloadDevice>) -> Self {
+        Coordinator { device, profiler: Profiler::new(), pjrt: None }
+    }
+
+    /// Exclusive device access, required to install bindings.
+    fn device_mut(&mut self) -> Result<&mut OffloadDevice, Error> {
+        Arc::get_mut(&mut self.device).ok_or_else(|| {
+            Error::HostRt(
+                "cannot attach artifacts: the device is shared (e.g. leased from a pool)".into(),
+            )
+        })
     }
 
     /// Attach AOT artifacts: starts (or reuses) a PJRT service, compiles
@@ -45,7 +70,7 @@ impl Coordinator {
                 s
             }
         };
-        install_payloads(self.device.bindings_mut(), &svc, manifest)?;
+        install_payloads(self.device_mut()?.bindings_mut(), &svc, manifest)?;
         Ok(())
     }
 
@@ -58,7 +83,7 @@ impl Coordinator {
         manifest: &ArtifactManifest,
     ) -> Result<(), Error> {
         self.pjrt = Some(svc.clone());
-        install_payloads(self.device.bindings_mut(), svc, manifest)?;
+        install_payloads(self.device_mut()?.bindings_mut(), svc, manifest)?;
         Ok(())
     }
 

@@ -34,6 +34,19 @@ impl PoolCoordinator {
         self.pool.submit(req)
     }
 
+    /// Run a closure with a device lease (see [`DevicePool::run_on`]).
+    pub fn run_on<R, F>(
+        &self,
+        affinity: crate::sched::Affinity,
+        f: F,
+    ) -> Result<crate::sched::TaskHandle<R>, Error>
+    where
+        R: Send + 'static,
+        F: FnOnce(&crate::sched::DeviceLease<'_>) -> R + Send + 'static,
+    {
+        self.pool.run_on(affinity, f)
+    }
+
     /// Current queue/throughput/cache metrics.
     pub fn metrics(&self) -> PoolMetrics {
         self.pool.metrics()
@@ -55,39 +68,59 @@ impl PoolCoordinator {
             .collect()
     }
 
-    /// Render the full status report (device table, cache, regions).
+    /// Render the full status report (device table, cache, batching,
+    /// sharding, allocator, regions).
     pub fn format_report(&self) -> String {
         let m = self.metrics();
         let cache = m.cache();
         let mut out = String::new();
+        let cap = if m.queue_cap == 0 { "∞".to_string() } else { m.queue_cap.to_string() };
         out.push_str(&format!(
-            "pool: {} devices | queue depth {} | submitted {} | completed {} | failed {}\n",
+            "pool: {} devices | queue depth {} (peak {}, cap {}) | submitted {} | completed {} | failed {}\n",
             m.devices.len(),
             m.queue_depth,
+            m.peak_queue_depth,
+            cap,
             m.submitted,
             m.completed,
             m.failed
         ));
         out.push_str(&format!(
-            "throughput: {:.1} launches/s over {:.2}s | image cache: {} hits / {} misses ({:.1}% hit rate)\n",
+            "throughput: {:.1} launches/s over {:.2}s | image cache: {} hits / {} misses ({:.1}% hit rate), {} evictions\n",
             m.throughput_per_sec(),
             m.uptime.as_secs_f64(),
             cache.hits,
             cache.misses,
-            cache.hit_rate() * 100.0
+            cache.hit_rate() * 100.0,
+            cache.evictions
         ));
-        out.push_str("dev | runtime  | arch    | done  | images | hits/misses\n");
-        out.push_str("----+----------+---------+-------+--------+------------\n");
+        out.push_str(&format!(
+            "batching: {} jobs coalesced into multi-job batches | sharding: {} requests split into {} shard jobs | device mem live: {} B\n",
+            m.batched_jobs(),
+            m.sharded_requests,
+            m.shard_jobs,
+            m.device_live_bytes()
+        ));
+        out.push_str(
+            "dev | runtime  | arch    | done  | maxbat | images | hits/miss/evict | mem live/peak\n",
+        );
+        out.push_str(
+            "----+----------+---------+-------+--------+--------+-----------------+--------------\n",
+        );
         for d in &m.devices {
             out.push_str(&format!(
-                "{:>3} | {:<8} | {:<7} | {:>5} | {:>6} | {}/{}\n",
+                "{:>3} | {:<8} | {:<7} | {:>5} | {:>6} | {:>6} | {}/{}/{} | {}/{}\n",
                 d.id,
                 d.kind.to_string(),
                 d.arch.to_string(),
                 d.completed,
+                d.max_batch,
                 d.cached_images,
                 d.cache.hits,
-                d.cache.misses
+                d.cache.misses,
+                d.cache.evictions,
+                d.mem.live_bytes,
+                d.mem.peak_bytes
             ));
         }
         let regions = self.region_report();

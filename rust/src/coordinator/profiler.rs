@@ -43,6 +43,17 @@ impl Profiler {
         r
     }
 
+    /// Merge another profiler's accumulated regions into this one. Pool
+    /// device leases use this to fold a leased coordinator's regions
+    /// into the device profiler that feeds the pool report.
+    pub fn absorb(&self, other: &Profiler) {
+        let other = other.report();
+        let mut map = self.regions.lock().unwrap();
+        for r in other {
+            map.entry(r.name).or_default().merge(&r.summary);
+        }
+    }
+
     /// Snapshot all regions (sorted by name).
     pub fn report(&self) -> Vec<RegionReport> {
         self.regions
@@ -121,6 +132,21 @@ mod tests {
         assert!(text.contains("Target Region"), "{text}");
         assert!(text.contains("evaluate_vgh"), "{text}");
         assert!(text.contains("# Calls"), "{text}");
+    }
+
+    #[test]
+    fn absorb_merges_regions() {
+        let a = Profiler::new();
+        let b = Profiler::new();
+        a.record("x", Duration::from_micros(10));
+        b.record("x", Duration::from_micros(30));
+        b.record("y", Duration::from_micros(5));
+        a.absorb(&b);
+        let r = a.report();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].name, "x");
+        assert_eq!(r[0].summary.count(), 2);
+        assert_eq!(r[1].summary.count(), 1);
     }
 
     #[test]

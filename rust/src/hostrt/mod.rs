@@ -17,12 +17,12 @@ use crate::devrt::{self, DeviceRuntime, RuntimeKind};
 use crate::ir::passes::{OptLevel, PassStats};
 use crate::ir::Module;
 use crate::sim::{
-    launch_kernel, Arch, Bindings, DeviceDesc, GlobalMemory, LaunchConfig, LaunchStats,
-    LoadedModule,
+    launch_kernel, launch_kernel_batch, Arch, BatchKernelSpec, Bindings, DeviceDesc,
+    GlobalMemory, LaunchConfig, LaunchStats, LoadedModule,
 };
 use crate::util::Error;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// A device image ready to launch: the linked + optimized module, loaded
 /// (addresses assigned) into a device's global memory.
@@ -43,6 +43,11 @@ pub struct OffloadDevice {
     pub runtime: DeviceRuntime,
     /// Extra bindings (PJRT payloads) merged at launch.
     extra_bindings: Bindings,
+    /// Lazily merged `runtime.bindings + extra_bindings`. Rebuilding this
+    /// map used to happen on **every** launch; caching it takes a HashMap
+    /// clone off the per-launch hot path. Invalidated by
+    /// [`OffloadDevice::bindings_mut`].
+    merged: OnceLock<Bindings>,
 }
 
 // The device-pool scheduler (`crate::sched`) shares one `OffloadDevice`
@@ -60,7 +65,13 @@ impl OffloadDevice {
     pub fn new(kind: RuntimeKind, arch: Arch) -> Self {
         let desc = DeviceDesc::for_arch(arch);
         let gmem = Arc::new(GlobalMemory::new(desc.global_mem));
-        OffloadDevice { desc, gmem, runtime: devrt::build(kind, arch), extra_bindings: Bindings::new() }
+        OffloadDevice {
+            desc,
+            gmem,
+            runtime: devrt::build(kind, arch),
+            extra_bindings: Bindings::new(),
+            merged: OnceLock::new(),
+        }
     }
 
     /// Architecture of this device.
@@ -74,8 +85,10 @@ impl OffloadDevice {
     }
 
     /// Install additional bindings (e.g. `payload.*` from
-    /// [`crate::runtime::install_payloads`]).
+    /// [`crate::runtime::install_payloads`]). Invalidates the cached
+    /// merged-binding table.
     pub fn bindings_mut(&mut self) -> &mut Bindings {
+        self.merged = OnceLock::new();
         &mut self.extra_bindings
     }
 
@@ -86,13 +99,16 @@ impl OffloadDevice {
         Ok(KernelImage { module, opt_stats })
     }
 
-    /// Merged bindings: runtime entry points + payloads.
-    fn merged_bindings(&self) -> Bindings {
-        let mut b = self.runtime.bindings.clone();
-        for name in self.extra_bindings.names() {
-            b.bind(name.to_string(), self.extra_bindings.get(name).unwrap().clone());
-        }
-        b
+    /// Merged bindings: runtime entry points + payloads. Built once and
+    /// cached; every launch of this device shares the same table.
+    fn merged_bindings(&self) -> &Bindings {
+        self.merged.get_or_init(|| {
+            let mut b = self.runtime.bindings.clone();
+            for name in self.extra_bindings.names() {
+                b.bind(name.to_string(), self.extra_bindings.get(name).unwrap().clone());
+            }
+            b
+        })
     }
 
     /// `__tgt_target`: launch `kernel` from `image`.
@@ -109,9 +125,20 @@ impl OffloadDevice {
             kernel,
             args,
             &self.gmem,
-            &self.merged_bindings(),
+            self.merged_bindings(),
             cfg,
         )
+    }
+
+    /// Launch several independent kernels of one `image` as a fused grid
+    /// (see [`crate::sim::launch_kernel_batch`] for the semantics and the
+    /// independence contract). Used by the pool's batch execution path.
+    pub fn offload_batch(
+        &self,
+        image: &KernelImage,
+        items: &[BatchKernelSpec<'_>],
+    ) -> Vec<Result<LaunchStats, Error>> {
+        launch_kernel_batch(&self.desc, &image.module, items, &self.gmem, self.merged_bindings())
     }
 
     /// `__tgt_target` with host fallback: if device launch fails, run the
@@ -244,8 +271,9 @@ impl DataEnv {
                 };
                 self.gmem.read_bytes(dev_addr, bytes)?;
             }
-            // Note: the bump allocator does not reclaim; a real device
-            // would free here. Fine for benchmark lifetimes.
+            // `omp_target_free` analog: return the device block to the
+            // free-list allocator so long-lived pools don't leak.
+            self.gmem.free(dev_addr)?;
         }
         Ok(())
     }
@@ -253,6 +281,17 @@ impl DataEnv {
     /// Number of live mappings.
     pub fn live_mappings(&self) -> usize {
         self.entries.len()
+    }
+}
+
+impl Drop for DataEnv {
+    /// Leaving a data region frees whatever is still mapped (no copy-back
+    /// — that is `unmap`'s job); a dropped environment must not pin
+    /// device memory forever.
+    fn drop(&mut self) {
+        for e in self.entries.values() {
+            let _ = self.gmem.free(e.dev_addr);
+        }
     }
 }
 
@@ -356,6 +395,58 @@ mod tests {
         let mut env = DataEnv::new(&dev);
         let mut host = [0f32; 2];
         assert!(env.unmap(&mut host[..].as_mut()).is_err());
+    }
+
+    #[test]
+    fn unmap_reclaims_device_memory() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let baseline = dev.gmem.allocated();
+        {
+            let mut env = DataEnv::new(&dev);
+            let mut host: Vec<f32> = vec![1.0; 1024];
+            env.map(&host, MapType::Tofrom).unwrap();
+            assert!(dev.gmem.allocated() > baseline, "map must allocate");
+            env.unmap(&mut host).unwrap();
+            assert_eq!(dev.gmem.allocated(), baseline, "unmap must free the device block");
+            // Leave one mapping live: dropping the env must free it too.
+            let other: Vec<f32> = vec![2.0; 64];
+            env.map(&other, MapType::To).unwrap();
+            assert!(dev.gmem.allocated() > baseline);
+        }
+        assert_eq!(dev.gmem.allocated(), baseline, "dropped env must not pin device memory");
+    }
+
+    #[test]
+    fn offload_batch_runs_independent_launches() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let image = dev.prepare(scale_module(), OptLevel::O2).unwrap();
+        let n = 64usize;
+        let mut envs = vec![];
+        let mut hosts: Vec<Vec<f32>> = (0..4)
+            .map(|j| (0..n).map(|i| (i + j) as f32).collect())
+            .collect();
+        let mut addrs = vec![];
+        for host in &hosts {
+            let mut env = DataEnv::new(&dev);
+            addrs.push(env.map(host, MapType::Tofrom).unwrap());
+            envs.push(env);
+        }
+        let args: Vec<[u64; 2]> = addrs.iter().map(|&a| [a, n as u64]).collect();
+        let items: Vec<BatchKernelSpec<'_>> = args
+            .iter()
+            .map(|a| BatchKernelSpec { kernel: "scale", args: a.as_slice(), cfg: LaunchConfig::new(2, 32) })
+            .collect();
+        let results = dev.offload_batch(&image, &items);
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            assert!(r.is_ok(), "batched launch failed: {r:?}");
+        }
+        for (j, (env, host)) in envs.iter().zip(hosts.iter_mut()).enumerate() {
+            env.update_from(host).unwrap();
+            for (i, v) in host.iter().enumerate() {
+                assert_eq!(*v, ((i + j) * 2) as f32, "item {j} lane {i}");
+            }
+        }
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! The kernel-image cache: pay for `prepare` (link + optimize + verify +
 //! load) once per `(module, device configuration)` instead of once per
-//! launch.
+//! launch — now with an LRU eviction policy under a configurable byte
+//! budget, so a long-lived pool serving many distinct modules holds its
+//! host *and* device footprint steady instead of growing forever.
 //!
 //! ## Cache-key design
 //!
@@ -24,6 +26,21 @@
 //! arch/kind are still part of the key so that aggregated metrics from
 //! many caches are unambiguous and so a cache can never serve an image
 //! built for a different configuration even if shared by mistake.
+//!
+//! ## Eviction policy
+//!
+//! Entries carry an approximate byte cost (printed-IR size scaled for
+//! in-memory overhead, plus global initializer bytes). When an insert
+//! pushes the total over the budget, least-recently-used entries are
+//! evicted until it fits; the entry being inserted is never evicted, so a
+//! single oversized image still runs (the cache just holds only it).
+//! When an eviction drops the *last* reference to an image, its
+//! global-space allocations are returned to the device's free-list
+//! allocator — eviction reclaims device memory, not just host memory. An
+//! image still referenced by an in-flight launch at eviction time is
+//! parked on a reclaim list and retried on every later prepare, so its
+//! device globals are freed as soon as the in-flight reference drops
+//! (worst case: at device teardown if the cache never prepares again).
 
 use crate::devrt::RuntimeKind;
 use crate::hostrt::{KernelImage, OffloadDevice};
@@ -60,13 +77,15 @@ impl CacheKey {
     }
 }
 
-/// Hit/miss counters (snapshot).
+/// Hit/miss/eviction counters (snapshot).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CacheStats {
     /// Lookups served from the cache.
     pub hits: u64,
     /// Lookups that had to run `prepare`.
     pub misses: u64,
+    /// Entries evicted to stay under the byte budget.
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -81,18 +100,72 @@ impl CacheStats {
     }
 }
 
-/// A per-device kernel-image cache.
-#[derive(Default)]
+/// Estimated resident cost of a prepared image: printed-IR length scaled
+/// for in-memory representation overhead, plus global initializer data.
+/// An estimate is fine — the budget bounds growth, it is not an ABI.
+fn approx_image_bytes(image: &KernelImage) -> u64 {
+    let text = crate::ir::printer::print_module(&image.module.module);
+    let globals: u64 = image
+        .module
+        .module
+        .globals
+        .values()
+        .map(|g| g.size + g.init.as_ref().map_or(0, |i| i.len() as u64))
+        .sum();
+    (text.len() as u64) * 4 + globals
+}
+
+struct Entry {
+    image: Arc<KernelImage>,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<CacheKey, Entry>,
+    /// Monotone logical clock for LRU ordering.
+    tick: u64,
+    /// Sum of entry byte estimates.
+    bytes: u64,
+}
+
+/// A per-device kernel-image cache with an optional LRU byte budget.
 pub struct ImageCache {
-    map: Mutex<HashMap<CacheKey, Arc<KernelImage>>>,
+    inner: Mutex<CacheInner>,
+    /// Evicted images that were still referenced (in-flight launch) when
+    /// evicted; their device globals are reclaimed on a later prepare,
+    /// once the last outside reference drops.
+    reclaim: Mutex<Vec<Arc<KernelImage>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    /// Byte budget; 0 = unlimited.
+    budget: u64,
+}
+
+impl Default for ImageCache {
+    fn default() -> Self {
+        ImageCache::new()
+    }
 }
 
 impl ImageCache {
-    /// Empty cache.
+    /// Empty cache with no byte budget (never evicts).
     pub fn new() -> Self {
-        Self::default()
+        ImageCache::with_budget(0)
+    }
+
+    /// Empty cache evicting LRU entries past `budget_bytes` (0 =
+    /// unlimited).
+    pub fn with_budget(budget_bytes: u64) -> Self {
+        ImageCache {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0, bytes: 0 }),
+            reclaim: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            budget: budget_bytes,
+        }
     }
 
     /// Return the image for `(module, device, opt)`, preparing it on a
@@ -109,20 +182,98 @@ impl ImageCache {
         opt: OptLevel,
     ) -> Result<(Arc<KernelImage>, bool), Error> {
         let key = CacheKey::for_device(device, module, opt);
-        if let Some(image) = self.map.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok((image.clone(), true));
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((e.image.clone(), true));
+            }
         }
         let image = Arc::new(device.prepare(module.clone(), opt)?);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.map.lock().unwrap();
-        let entry = map.entry(key).or_insert_with(|| image.clone());
-        Ok((entry.clone(), false))
+        let bytes = approx_image_bytes(&image);
+        let mut evicted: Vec<Arc<KernelImage>> = Vec::new();
+        let mut duplicate: Option<Arc<KernelImage>> = None;
+        let out;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key) {
+                // Racing insert won; serve it. The duplicate image's
+                // device globals still need reclaiming (not an eviction).
+                e.last_used = tick;
+                out = e.image.clone();
+                duplicate = Some(image);
+            } else {
+                inner.bytes += bytes;
+                inner
+                    .map
+                    .insert(key, Entry { image: image.clone(), bytes, last_used: tick });
+                if self.budget > 0 {
+                    while inner.bytes > self.budget && inner.map.len() > 1 {
+                        let lru = inner
+                            .map
+                            .iter()
+                            .filter(|(k, _)| **k != key)
+                            .min_by_key(|(_, e)| e.last_used)
+                            .map(|(k, _)| *k);
+                        let Some(lk) = lru else { break };
+                        if let Some(e) = inner.map.remove(&lk) {
+                            inner.bytes -= e.bytes;
+                            evicted.push(e.image);
+                        }
+                    }
+                }
+                out = image;
+            }
+        }
+        self.evictions.fetch_add(evicted.len() as u64, Ordering::Relaxed);
+        if let Some(dup) = duplicate {
+            evicted.push(dup);
+        }
+        self.reclaim_evicted(device, evicted);
+        Ok((out, false))
+    }
+
+    /// Free the device globals of `evicted` images whose last reference
+    /// just dropped; images still referenced (an in-flight launch holds
+    /// the `Arc`) are parked and retried here on every later prepare, so
+    /// their device memory is reclaimed as soon as the reference goes
+    /// away rather than leaking until device teardown.
+    fn reclaim_evicted(&self, device: &OffloadDevice, evicted: Vec<Arc<KernelImage>>) {
+        let mut pending = self.reclaim.lock().unwrap();
+        pending.extend(evicted);
+        let mut still_held = Vec::new();
+        for img in pending.drain(..) {
+            // `try_unwrap` hands the Arc back on failure (unlike
+            // `into_inner`, which would drop our reference and lose the
+            // global addresses for good).
+            match Arc::try_unwrap(img) {
+                Ok(img) => {
+                    for addr in img.module.global_addrs.values() {
+                        let _ = device.gmem.free(*addr);
+                    }
+                }
+                Err(arc) => still_held.push(arc),
+            }
+        }
+        *pending = still_held;
+    }
+
+    /// Record `n` extra hits without a lookup — used by the pool's batch
+    /// execution, where the follower jobs of a batch share the leader's
+    /// image by construction. Keeps `hits + misses == launches`.
+    pub fn note_batched_hits(&self, n: u64) {
+        self.hits.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Number of cached images.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     /// True when nothing is cached.
@@ -130,18 +281,33 @@ impl ImageCache {
         self.len() == 0
     }
 
-    /// Hit/miss snapshot.
+    /// Estimated bytes of all cached images.
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Configured byte budget (0 = unlimited).
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Hit/miss/eviction snapshot.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 
-    /// Drop all cached images (the bump allocator does not reclaim their
-    /// device memory; this only frees host memory and forces re-prepare).
+    /// Drop all cached images. Host-side only: without a device handle
+    /// this cannot return image globals to a device allocator — pool
+    /// teardown drops the devices wholesale instead. Not counted as
+    /// evictions.
     pub fn clear(&self) {
-        self.map.lock().unwrap().clear();
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.bytes = 0;
     }
 }
 
@@ -158,6 +324,24 @@ mod tests {
         m
     }
 
+    /// A kernel module with a device global of `n` initialized bytes —
+    /// prepared images allocate device memory, so eviction has something
+    /// to reclaim.
+    fn kernel_with_global(name: &str, scale: u8, n: usize) -> Module {
+        use crate::ir::module::{Global, Linkage};
+        let mut m = empty_kernel(name);
+        m.add_global(Global {
+            name: format!("g_{scale}"),
+            space: crate::ir::AddrSpace::Global,
+            size: n as u64,
+            align: 8,
+            init: Some(vec![scale; n]),
+            uninit: false,
+            linkage: Linkage::Internal,
+        });
+        m
+    }
+
     #[test]
     fn second_lookup_hits() {
         let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
@@ -171,6 +355,7 @@ mod tests {
         let s = cache.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
         assert_eq!(cache.len(), 1);
+        assert!(cache.bytes() > 0, "entries must carry a byte estimate");
     }
 
     #[test]
@@ -195,8 +380,97 @@ mod tests {
 
     #[test]
     fn hit_rate_reports() {
-        let s = CacheStats { hits: 9, misses: 1 };
+        let s = CacheStats { hits: 9, misses: 1, evictions: 0 };
         assert!((s.hit_rate() - 0.9).abs() < 1e-12);
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn budget_evicts_least_recently_used() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        // Budget of 1 byte: the cache can hold exactly one image (the
+        // just-inserted entry is never evicted).
+        let cache = ImageCache::with_budget(1);
+        let (ma, mb) = (kernel_with_global("a", 1, 64), kernel_with_global("b", 2, 64));
+        cache.get_or_prepare(&dev, &ma, OptLevel::O2).unwrap();
+        assert_eq!(cache.len(), 1);
+        cache.get_or_prepare(&dev, &mb, OptLevel::O2).unwrap();
+        assert_eq!(cache.len(), 1, "over-budget insert must evict the LRU entry");
+        assert_eq!(cache.stats().evictions, 1);
+        // `a` was evicted, so looking it up again re-prepares.
+        let (_, hit) = cache.get_or_prepare(&dev, &ma, OptLevel::O2).unwrap();
+        assert!(!hit, "evicted image must miss");
+        assert_eq!(cache.stats().evictions, 2);
+    }
+
+    #[test]
+    fn lru_order_follows_recency_of_use() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let (ma, mb) = (kernel_with_global("a", 1, 64), kernel_with_global("b", 2, 64));
+        // Budget sized for two small images: prepare a, b, then touch a —
+        // inserting c must evict b (the least recently used), not a.
+        let one = {
+            let probe = ImageCache::new();
+            probe.get_or_prepare(&dev, &ma, OptLevel::O2).unwrap();
+            probe.bytes()
+        };
+        let cache = ImageCache::with_budget(2 * one + one / 2);
+        cache.get_or_prepare(&dev, &ma, OptLevel::O2).unwrap();
+        cache.get_or_prepare(&dev, &mb, OptLevel::O2).unwrap();
+        let (_, hit_a) = cache.get_or_prepare(&dev, &ma, OptLevel::O2).unwrap();
+        assert!(hit_a);
+        let mc = kernel_with_global("c", 3, 64);
+        cache.get_or_prepare(&dev, &mc, OptLevel::O2).unwrap();
+        let (_, hit_a) = cache.get_or_prepare(&dev, &ma, OptLevel::O2).unwrap();
+        assert!(hit_a, "recently-touched entry must survive eviction");
+        let (_, hit_b) = cache.get_or_prepare(&dev, &mb, OptLevel::O2).unwrap();
+        assert!(!hit_b, "LRU entry must have been evicted");
+    }
+
+    #[test]
+    fn eviction_reclaims_device_globals() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let cache = ImageCache::with_budget(1);
+        let baseline = dev.gmem.allocated();
+        cache.get_or_prepare(&dev, &kernel_with_global("a", 1, 4096), OptLevel::O2).unwrap();
+        let with_a = dev.gmem.allocated();
+        assert!(with_a > baseline, "image globals must allocate device memory");
+        // Inserting b evicts a; a's 4 KiB global must come back.
+        cache.get_or_prepare(&dev, &kernel_with_global("b", 2, 4096), OptLevel::O2).unwrap();
+        assert_eq!(
+            dev.gmem.allocated(),
+            with_a,
+            "evicting a and loading an equal-sized b must hold device memory steady"
+        );
+        assert!(cache.stats().evictions >= 1);
+    }
+
+    #[test]
+    fn eviction_with_inflight_reference_reclaims_once_dropped() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let cache = ImageCache::with_budget(1);
+        let (held, _) = cache
+            .get_or_prepare(&dev, &kernel_with_global("a", 1, 4096), OptLevel::O2)
+            .unwrap();
+        let with_a = dev.gmem.allocated();
+        // Evict `a` while a "launch" still holds its image: its device
+        // global cannot be freed yet, so it parks on the reclaim list.
+        cache.get_or_prepare(&dev, &kernel_with_global("b", 2, 4096), OptLevel::O2).unwrap();
+        assert_eq!(dev.gmem.allocated(), with_a + 4096, "held image must not be freed");
+        drop(held);
+        // The next prepare retries the parked reclaim (and evicts b),
+        // leaving only c's global live.
+        cache.get_or_prepare(&dev, &kernel_with_global("c", 3, 4096), OptLevel::O2).unwrap();
+        assert_eq!(dev.gmem.allocated(), with_a, "parked image must be reclaimed after drop");
+    }
+
+    #[test]
+    fn batched_hits_keep_accounting_consistent() {
+        let dev = OffloadDevice::new(RuntimeKind::Portable, Arch::Nvptx64);
+        let cache = ImageCache::new();
+        cache.get_or_prepare(&dev, &empty_kernel("a"), OptLevel::O2).unwrap();
+        cache.note_batched_hits(7);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (7, 1));
     }
 }

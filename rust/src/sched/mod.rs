@@ -24,16 +24,70 @@
 //! * a request whose affinity matches no pool device is rejected at
 //!   submit time rather than queued forever.
 //!
-//! ## Kernel-image cache
+//! ## Batch lifecycle
+//!
+//! When a worker claims the oldest eligible job it also coalesces up to
+//! `[pool] batch_max − 1` *compatible* followers — queued requests with
+//! the same image-cache key (module content hash + opt level; arch and
+//! runtime kind are implied by the device doing the popping). The batch
+//! pays queue synchronization, image lookup (one cache access; follower
+//! jobs are recorded as hits) and profiler bookkeeping once. Batches of
+//! **independent** jobs — images with no global-space globals, so no
+//! launch can observe another through device state — execute as one
+//! *fused grid* ([`crate::sim::launch_kernel_batch`]): every block still
+//! sees exactly the `(ctaid, nctaid, args)` of its own solo launch, but
+//! blocks of different jobs interleave across the device's SMs, so small
+//! grids stop leaving most of the device idle and the per-launch
+//! thread-scope setup is paid once per batch. Images with device globals
+//! fall back to sequential per-job launches inside the batch. Shard jobs
+//! never batch (a batch runs on one device, which would undo the split).
+//!
+//! ## Shard lifecycle
+//!
+//! A request carrying a [`ShardSpec`] (which buffers are partitioned by
+//! element range, which `Imm` argument is the element count) may be split
+//! at submit time: the pool picks the matching architecture with the most
+//! eligible devices, divides the element range evenly, and enqueues one
+//! pinned sub-request per shard — pull-based placement then spreads them
+//! across whichever of those devices are idle. A detached *stitcher*
+//! collects the shard responses, copies each partitioned output into its
+//! element range of the full-size buffer, sums the launch counters (max
+//! for `wall`/`queue_wait`) and resolves the client handle with
+//! `shards = n`. When splitting would drop any shard under
+//! `[pool] shard_min_trips` elements — shard overhead would dominate —
+//! the request runs unsplit on a single device (`shards = 1`).
+//!
+//! ## Backpressure
+//!
+//! The submission queue is bounded by `[pool] queue_cap` (0 = unbounded):
+//! at capacity, [`DevicePool::submit`] blocks until workers drain space,
+//! and [`DevicePool::try_submit`] returns [`TrySubmitError::Full`] with
+//! the request handed back — the `WouldBlock` variant for callers that
+//! shed load instead of waiting. `PoolMetrics::peak_queue_depth` records
+//! the deepest the queue has ever been, so tests can assert boundedness.
+//!
+//! ## Kernel-image cache and eviction
 //!
 //! `prepare` (link the runtime IR library, optimize, verify, load) is the
 //! expensive half of an offload. Each device worker consults an
 //! [`ImageCache`] keyed by `(module content hash, arch, runtime kind, opt
 //! level)` — see [`cache`] for the key-design rationale — so a kernel
 //! module pays the prepare cost once per device configuration and every
-//! subsequent launch of it is queue-pop + map + launch. Hit/miss counters
-//! aggregate into [`PoolMetrics`] and the
+//! subsequent launch of it is queue-pop + map + launch. The cache evicts
+//! least-recently-used images past a `[pool] cache_budget_bytes` budget
+//! (0 = unlimited); evicting the last reference to an image returns its
+//! global-space allocations to the device's free-list allocator, so
+//! long-lived pools hold both host and device footprint steady.
+//! Hit/miss/eviction counters aggregate into [`PoolMetrics`] and the
 //! [`crate::coordinator::PoolCoordinator`] report.
+//!
+//! ## Device leases
+//!
+//! [`DevicePool::run_on`] queues an arbitrary closure as a job; the
+//! worker hands it a [`DeviceLease`] (exclusive use of the device plus
+//! its profiler). This is how multi-launch workloads that do not fit the
+//! single-launch request shape — the SPEC-analog benchmark suite behind
+//! `omprt bench --pool` — run through the pool's scheduler and metrics.
 
 pub mod cache;
 pub mod pool;
@@ -41,6 +95,7 @@ pub mod workload;
 
 pub use cache::{CacheKey, CacheStats, ImageCache};
 pub use pool::{
-    bytes_to_f32, f32_to_bytes, Affinity, DeviceMetrics, DevicePool, DeviceSpec, KernelArg,
-    MapBuf, OffloadHandle, OffloadRequest, OffloadResponse, PoolConfig, PoolMetrics,
+    bytes_to_f32, f32_to_bytes, Affinity, DeviceLease, DeviceMetrics, DevicePool, DeviceSpec,
+    KernelArg, MapBuf, OffloadHandle, OffloadRequest, OffloadResponse, PoolConfig, PoolMetrics,
+    ShardSpec, TaskHandle, TrySubmitError,
 };

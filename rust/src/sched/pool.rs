@@ -3,16 +3,16 @@
 //! Clients [`DevicePool::submit`] an [`OffloadRequest`] and get an
 //! [`OffloadHandle`] back immediately; the launch happens on one of the
 //! pool's worker threads. See the module docs of [`crate::sched`] for the
-//! placement policy.
+//! placement, batching, sharding and backpressure policies.
 
 use super::cache::{CacheStats, ImageCache};
 use crate::config::Config;
 use crate::coordinator::profiler::{Profiler, RegionReport};
 use crate::devrt::RuntimeKind;
-use crate::hostrt::{MapType, OffloadDevice};
+use crate::hostrt::{KernelImage, MapType, OffloadDevice};
 use crate::ir::passes::OptLevel;
 use crate::ir::Module;
-use crate::sim::{Arch, LaunchConfig, LaunchStats};
+use crate::sim::{Arch, BatchKernelSpec, LaunchConfig, LaunchStats, MemStats};
 use crate::util::Error;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -93,6 +93,27 @@ pub enum KernelArg {
     Imm(u64),
 }
 
+/// How to split one large request across several devices.
+///
+/// Sharding needs to know the request's data decomposition: which buffers
+/// are *partitioned* by element range (each shard gets its slice) versus
+/// broadcast whole, and which immediate argument carries the element
+/// count so each shard can be told its own. Grid-strided kernels — every
+/// kernel in this repo — are shardable this way by construction: a shard
+/// is just the same kernel over a smaller `n`.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Indices into `buffers` that are partitioned by element range; all
+    /// other buffers are passed whole to every shard.
+    pub partitioned: Vec<usize>,
+    /// Bytes per element of the partitioned buffers.
+    pub elem_bytes: usize,
+    /// Index into `args` of the `Imm` argument holding the element count.
+    pub count_arg: usize,
+    /// Total element count of the request.
+    pub elems: usize,
+}
+
 /// What a client submits to the pool.
 pub struct OffloadRequest {
     /// The application module (kernels + globals).
@@ -111,25 +132,37 @@ pub struct OffloadRequest {
     pub args: Vec<KernelArg>,
     /// Placement constraint.
     pub affinity: Affinity,
+    /// Optional decomposition for cross-device sharding. `None` (the
+    /// default for all small launches) always runs on one device; with a
+    /// spec, the pool may split the request across idle devices of one
+    /// architecture when it is large enough to amortize the overhead
+    /// (see `[pool] shard_min_trips`).
+    pub shard: Option<ShardSpec>,
 }
 
 /// What the pool hands back when a request completes.
 #[derive(Debug)]
 pub struct OffloadResponse {
-    /// Pool-local id of the device that ran the launch.
+    /// Pool-local id of the device that ran the launch (first shard's
+    /// device for a sharded request).
     pub device_id: usize,
     /// Its architecture.
     pub arch: Arch,
     /// Its runtime build.
     pub kind: RuntimeKind,
-    /// Launch counters.
+    /// Launch counters (summed over shards; `wall` is the max).
     pub stats: LaunchStats,
-    /// Whether the kernel image came out of the cache.
+    /// Whether the kernel image came out of the cache (for shards: all of
+    /// them).
     pub cache_hit: bool,
-    /// Time the request sat in the queue before a worker picked it up.
+    /// Time the request sat in the queue before a worker picked it up
+    /// (max over shards).
     pub queue_wait: Duration,
+    /// How many device shards executed this request (1 = unsharded).
+    pub shards: usize,
     /// Post-launch contents of each `From`/`Tofrom` buffer (`None` for
-    /// `To`/`Alloc` buffers).
+    /// `To`/`Alloc` buffers). Sharded partitioned outputs are stitched
+    /// back into the full-size buffer.
     pub buffers: Vec<Option<Vec<u8>>>,
 }
 
@@ -158,6 +191,56 @@ impl OffloadHandle {
             }
         }
     }
+}
+
+/// Why [`DevicePool::try_submit`] did not accept a request.
+pub enum TrySubmitError {
+    /// The submission queue is at capacity (`[pool] queue_cap`); the
+    /// request is handed back untouched so the caller can retry or shed
+    /// load — the non-blocking `WouldBlock` counterpart of the blocking
+    /// [`DevicePool::submit`].
+    Full(OffloadRequest),
+    /// The request is malformed or unroutable (same checks as `submit`).
+    Rejected(Error),
+}
+
+impl std::fmt::Debug for TrySubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrySubmitError::Full(_) => write!(f, "Full(<request>)"),
+            TrySubmitError::Rejected(e) => write!(f, "Rejected({e})"),
+        }
+    }
+}
+
+/// Handle for a device task submitted with [`DevicePool::run_on`].
+pub struct TaskHandle<R> {
+    rx: mpsc::Receiver<R>,
+}
+
+impl<R> TaskHandle<R> {
+    /// Block until the task ran on a pool device.
+    pub fn wait(self) -> Result<R, Error> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Sched("pool dropped before the task ran".into()))
+    }
+}
+
+/// What a [`DevicePool::run_on`] closure gets: exclusive use of one pool
+/// device (its worker thread is running the closure) plus the device's
+/// profiler, so arbitrary multi-launch workloads — e.g. the SPEC-analog
+/// benchmarks behind `omprt bench --pool` — can execute through the
+/// pool's scheduler without being reshaped into single-launch requests.
+pub struct DeviceLease<'a> {
+    /// Pool-local device id.
+    pub id: usize,
+    /// Device spec.
+    pub spec: DeviceSpec,
+    /// The leased device.
+    pub device: &'a Arc<OffloadDevice>,
+    /// The device's region profiler (feeds the pool report).
+    pub profiler: &'a Profiler,
 }
 
 // ---------------------------------------------------------------------------
@@ -195,6 +278,20 @@ pub struct PoolConfig {
     /// Default optimization level for requests (callers still set their
     /// own per-request `opt`; the demo and bench use this).
     pub default_opt: OptLevel,
+    /// Most queued same-image requests a worker coalesces into one batch
+    /// (1 disables batching).
+    pub batch_max: usize,
+    /// Submission-queue bound; `submit` blocks (and `try_submit` returns
+    /// [`TrySubmitError::Full`]) while the queue is at capacity. 0 =
+    /// unbounded.
+    pub queue_cap: usize,
+    /// Minimum elements each shard must keep; a sharded request that
+    /// cannot give at least 2 shards this many elements runs on a single
+    /// device instead (shard overhead would dominate).
+    pub shard_min_trips: usize,
+    /// Per-device kernel-image cache budget in bytes (LRU eviction past
+    /// it). 0 = unlimited.
+    pub cache_budget_bytes: u64,
 }
 
 impl Default for PoolConfig {
@@ -215,12 +312,48 @@ impl PoolConfig {
                 DeviceSpec { kind: RuntimeKind::Legacy, arch: Arch::Amdgcn },
             ],
             default_opt: OptLevel::O2,
+            batch_max: 16,
+            queue_cap: 1024,
+            shard_min_trips: 4096,
+            cache_budget_bytes: 0,
         }
     }
 
     /// A single-device pool (baseline for the throughput bench).
     pub fn single(kind: RuntimeKind, arch: Arch) -> PoolConfig {
-        PoolConfig { devices: vec![DeviceSpec { kind, arch }], default_opt: OptLevel::O2 }
+        PoolConfig { devices: vec![DeviceSpec { kind, arch }], ..PoolConfig::mixed4() }
+    }
+
+    /// `n` identical devices (the sharding bench/test shape).
+    pub fn uniform(kind: RuntimeKind, arch: Arch, n: usize) -> PoolConfig {
+        PoolConfig {
+            devices: vec![DeviceSpec { kind, arch }; n.max(1)],
+            ..PoolConfig::mixed4()
+        }
+    }
+
+    /// Override the batch limit (1 disables batching).
+    pub fn with_batch_max(mut self, batch_max: usize) -> PoolConfig {
+        self.batch_max = batch_max.max(1);
+        self
+    }
+
+    /// Override the queue bound (0 = unbounded).
+    pub fn with_queue_cap(mut self, queue_cap: usize) -> PoolConfig {
+        self.queue_cap = queue_cap;
+        self
+    }
+
+    /// Override the minimum per-shard element count.
+    pub fn with_shard_min_trips(mut self, trips: usize) -> PoolConfig {
+        self.shard_min_trips = trips.max(1);
+        self
+    }
+
+    /// Override the per-device image-cache budget (0 = unlimited).
+    pub fn with_cache_budget(mut self, bytes: u64) -> PoolConfig {
+        self.cache_budget_bytes = bytes;
+        self
     }
 
     /// Read the `[pool]` section of a config document:
@@ -229,6 +362,10 @@ impl PoolConfig {
     /// [pool]
     /// devices = ["portable:nvptx64", "legacy:amdgcn"]
     /// opt = "O2"
+    /// batch_max = 16          # same-image launches coalesced per pop
+    /// queue_cap = 1024        # submission-queue bound (0 = unbounded)
+    /// shard_min_trips = 4096  # min elements per shard
+    /// cache_budget_bytes = 0  # per-device image-cache LRU budget
     /// ```
     ///
     /// Missing section or keys fall back to [`PoolConfig::mixed4`].
@@ -256,7 +393,29 @@ impl PoolConfig {
             out.default_opt = OptLevel::parse(s)
                 .ok_or_else(|| Error::Config(format!("[pool] bad opt `{s}` (want O0|O2)")))?;
         }
+        out.batch_max = read_uint(sec, "batch_max", out.batch_max as i64, 1)? as usize;
+        out.queue_cap = read_uint(sec, "queue_cap", out.queue_cap as i64, 0)? as usize;
+        out.shard_min_trips =
+            read_uint(sec, "shard_min_trips", out.shard_min_trips as i64, 1)? as usize;
+        out.cache_budget_bytes =
+            read_uint(sec, "cache_budget_bytes", out.cache_budget_bytes as i64, 0)? as u64;
         Ok(out)
+    }
+}
+
+/// Read a non-negative integer `[pool]` key with a minimum-value check.
+fn read_uint(
+    sec: &crate::config::Section,
+    key: &str,
+    default: i64,
+    min: i64,
+) -> Result<i64, Error> {
+    match sec.get(key) {
+        None => Ok(default),
+        Some(v) => match v.as_uint() {
+            Some(u) if u as i64 >= min => Ok(u as i64),
+            _ => Err(Error::Config(format!("[pool] bad {key} `{v:?}` (want integer >= {min})"))),
+        },
     }
 }
 
@@ -264,10 +423,44 @@ impl PoolConfig {
 // The pool
 // ---------------------------------------------------------------------------
 
-struct Job {
+/// The batch-compatibility key: two queued requests can be coalesced on a
+/// device when their image-cache keys agree (arch/kind are implied by the
+/// device doing the popping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct BatchKey {
+    content: u64,
+    opt: OptLevel,
+}
+
+struct OffloadJob {
     req: OffloadRequest,
+    key: BatchKey,
+    /// Shard jobs are never coalesced: a batch runs on one device, which
+    /// would defeat the point of splitting the request.
+    no_batch: bool,
     reply: mpsc::Sender<Result<OffloadResponse, Error>>,
     enqueued: Instant,
+}
+
+type TaskFn = Box<dyn FnOnce(&DeviceLease<'_>) + Send>;
+
+struct TaskJob {
+    affinity: Affinity,
+    run: TaskFn,
+}
+
+enum Job {
+    Offload(OffloadJob),
+    Task(TaskJob),
+}
+
+impl Job {
+    fn affinity(&self) -> Affinity {
+        match self {
+            Job::Offload(j) => j.req.affinity,
+            Job::Task(t) => t.affinity,
+        }
+    }
 }
 
 /// Per-device state shared with the device's worker thread.
@@ -279,16 +472,28 @@ struct DeviceSlot {
     profiler: Profiler,
     inflight: AtomicUsize,
     completed: AtomicU64,
+    batches: AtomicU64,
+    batched_jobs: AtomicU64,
+    max_batch: AtomicUsize,
 }
 
 struct Shared {
     queue: Mutex<VecDeque<Job>>,
+    /// Workers wait here for jobs.
     cv: Condvar,
+    /// Submitters wait here for queue space (when `queue_cap > 0`).
+    space: Condvar,
     shutdown: AtomicBool,
     slots: Vec<DeviceSlot>,
+    batch_max: usize,
+    queue_cap: usize,
+    shard_min_trips: usize,
     submitted: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    sharded_requests: AtomicU64,
+    shard_jobs: AtomicU64,
+    peak_depth: AtomicUsize,
     started: Instant,
 }
 
@@ -312,20 +517,30 @@ impl DevicePool {
                 id,
                 spec: *spec,
                 device: Arc::new(OffloadDevice::new(spec.kind, spec.arch)),
-                cache: ImageCache::new(),
+                cache: ImageCache::with_budget(config.cache_budget_bytes),
                 profiler: Profiler::new(),
                 inflight: AtomicUsize::new(0),
                 completed: AtomicU64::new(0),
+                batches: AtomicU64::new(0),
+                batched_jobs: AtomicU64::new(0),
+                max_batch: AtomicUsize::new(0),
             })
             .collect();
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
+            space: Condvar::new(),
             shutdown: AtomicBool::new(false),
             slots,
+            batch_max: config.batch_max.max(1),
+            queue_cap: config.queue_cap,
+            shard_min_trips: config.shard_min_trips.max(1),
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            sharded_requests: AtomicU64::new(0),
+            shard_jobs: AtomicU64::new(0),
+            peak_depth: AtomicUsize::new(0),
             started: Instant::now(),
         });
         let mut workers = vec![];
@@ -350,11 +565,9 @@ impl DevicePool {
         self.shared.slots.iter().map(|s| s.spec).collect()
     }
 
-    /// Submit a request; returns a handle resolving to the response.
-    ///
-    /// Fails fast (without enqueueing) when the request is malformed or
-    /// its affinity matches no device in the pool.
-    pub fn submit(&self, req: OffloadRequest) -> Result<OffloadHandle, Error> {
+    /// Fail fast when the request is malformed, its affinity matches no
+    /// pool device, or its shard spec is inconsistent.
+    fn validate(&self, req: &OffloadRequest) -> Result<(), Error> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Sched("pool is shut down".into()));
         }
@@ -383,21 +596,296 @@ impl DevicePool {
                 self.specs().iter().map(|s| s.to_string()).collect::<Vec<_>>()
             )));
         }
-        let (reply, rx) = mpsc::channel();
-        // Count before the job becomes visible so `submitted` never lags
-        // behind `completed` in a metrics snapshot.
-        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Job { req, reply, enqueued: Instant::now() });
+        if let Some(spec) = &req.shard {
+            if spec.elem_bytes == 0 || spec.elems == 0 {
+                return Err(Error::Sched("shard spec with zero elems or elem_bytes".into()));
+            }
+            match req.args.get(spec.count_arg) {
+                Some(KernelArg::Imm(_)) => {}
+                _ => {
+                    return Err(Error::Sched(format!(
+                        "shard count_arg {} must index an Imm argument",
+                        spec.count_arg
+                    )))
+                }
+            }
+            let want = spec
+                .elems
+                .checked_mul(spec.elem_bytes)
+                .ok_or_else(|| Error::Sched("shard spec size overflow".into()))?;
+            for &bi in &spec.partitioned {
+                let len = req
+                    .buffers
+                    .get(bi)
+                    .ok_or_else(|| {
+                        Error::Sched(format!("shard partitions missing buffer {bi}"))
+                    })?
+                    .bytes
+                    .len();
+                if len != want {
+                    return Err(Error::Sched(format!(
+                        "partitioned buffer {bi} is {len} bytes, expected {want} \
+                         (elems * elem_bytes)"
+                    )));
+                }
+            }
         }
-        // notify_all: the job may be eligible only for a subset of the
-        // sleeping workers, and notify_one could wake the wrong one.
-        self.shared.cv.notify_all();
+        Ok(())
+    }
+
+    /// Submit a request; returns a handle resolving to the response.
+    ///
+    /// Fails fast (without enqueueing) when the request is malformed or
+    /// its affinity matches no device in the pool. When the pool has a
+    /// `queue_cap`, a full queue makes `submit` **block** until workers
+    /// drain space (backpressure); use [`DevicePool::try_submit`] to shed
+    /// load instead.
+    ///
+    /// A request carrying a [`ShardSpec`] that is large enough (see
+    /// `[pool] shard_min_trips`) is split into per-device shards across
+    /// the matching architecture with the most eligible devices; the
+    /// handle resolves to the stitched response.
+    pub fn submit(&self, req: OffloadRequest) -> Result<OffloadHandle, Error> {
+        self.validate(&req)?;
+        if let Some(plan) = self.shard_plan(&req) {
+            let (jobs, parts) = self.build_shards(&req, &plan);
+            let frx = spawn_stitcher(&req, parts)?;
+            let n = jobs.len();
+            for job in jobs {
+                self.enqueue(Job::Offload(job))?;
+            }
+            self.shared.sharded_requests.fetch_add(1, Ordering::Relaxed);
+            self.shared.shard_jobs.fetch_add(n as u64, Ordering::Relaxed);
+            return Ok(OffloadHandle { rx: frx });
+        }
+        let (reply, rx) = mpsc::channel();
+        let job = make_offload_job(req, reply, false);
+        self.enqueue(Job::Offload(job))?;
         Ok(OffloadHandle { rx })
     }
 
-    /// Snapshot of queue/throughput/cache metrics.
+    /// Non-blocking [`DevicePool::submit`]: when the queue is at capacity
+    /// the request is returned in [`TrySubmitError::Full`] instead of
+    /// blocking. A sharded request is accepted only if **all** its shard
+    /// jobs fit at once.
+    pub fn try_submit(&self, req: OffloadRequest) -> Result<OffloadHandle, TrySubmitError> {
+        if let Err(e) = self.validate(&req) {
+            return Err(TrySubmitError::Rejected(e));
+        }
+        if let Some(plan) = self.shard_plan(&req) {
+            // Cheap capacity check before materializing shard buffers and
+            // spawning the stitcher: under sustained backpressure every
+            // rejected retry would otherwise pay O(data) copies. The
+            // all-or-nothing bulk enqueue below remains authoritative.
+            if self.shared.queue_cap > 0 {
+                let depth = self.shared.queue.lock().unwrap().len();
+                if depth + plan.ranges.len() > self.shared.queue_cap {
+                    return Err(TrySubmitError::Full(req));
+                }
+            }
+            let (jobs, parts) = self.build_shards(&req, &plan);
+            let frx = match spawn_stitcher(&req, parts) {
+                Ok(rx) => rx,
+                Err(e) => return Err(TrySubmitError::Rejected(e)),
+            };
+            let n = jobs.len();
+            if self
+                .try_enqueue_bulk(jobs.into_iter().map(Job::Offload).collect())
+                .is_err()
+            {
+                // Dropping the shard jobs disconnects the stitcher, which
+                // exits; the untouched original goes back to the caller.
+                return Err(TrySubmitError::Full(req));
+            }
+            self.shared.sharded_requests.fetch_add(1, Ordering::Relaxed);
+            self.shared.shard_jobs.fetch_add(n as u64, Ordering::Relaxed);
+            return Ok(OffloadHandle { rx: frx });
+        }
+        let (reply, rx) = mpsc::channel();
+        let job = make_offload_job(req, reply, false);
+        match self.try_enqueue_bulk(vec![Job::Offload(job)]) {
+            Ok(()) => Ok(OffloadHandle { rx }),
+            Err(mut jobs) => match jobs.pop() {
+                Some(Job::Offload(j)) => Err(TrySubmitError::Full(j.req)),
+                _ => unreachable!("bulk enqueue returns the jobs it was given"),
+            },
+        }
+    }
+
+    /// Run an arbitrary closure with exclusive use of one matching pool
+    /// device (a *device lease*). The closure runs on the device's worker
+    /// thread, scheduled like any queued job — this is how whole
+    /// benchmarks route through the pool (`omprt bench --pool`).
+    pub fn run_on<R, F>(&self, affinity: Affinity, f: F) -> Result<TaskHandle<R>, Error>
+    where
+        R: Send + 'static,
+        F: FnOnce(&DeviceLease<'_>) -> R + Send + 'static,
+    {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(Error::Sched("pool is shut down".into()));
+        }
+        if !self
+            .shared
+            .slots
+            .iter()
+            .any(|s| affinity.matches(s.spec.arch, s.spec.kind))
+        {
+            return Err(Error::Sched(format!(
+                "affinity {:?} matches no device in the pool ({:?})",
+                affinity,
+                self.specs().iter().map(|s| s.to_string()).collect::<Vec<_>>()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let run: TaskFn = Box::new(move |lease: &DeviceLease<'_>| {
+            let _ = tx.send(f(lease));
+        });
+        self.enqueue(Job::Task(TaskJob { affinity, run }))?;
+        Ok(TaskHandle { rx })
+    }
+
+    /// Blocking enqueue honoring `queue_cap` backpressure.
+    fn enqueue(&self, job: Job) -> Result<(), Error> {
+        let shared = &self.shared;
+        let mut q = shared.queue.lock().unwrap();
+        if shared.queue_cap > 0 {
+            while q.len() >= shared.queue_cap {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return Err(Error::Sched("pool is shut down".into()));
+                }
+                q = shared.space.wait(q).unwrap();
+            }
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return Err(Error::Sched("pool is shut down".into()));
+        }
+        // Count while holding the queue lock, before the job becomes
+        // visible, so `submitted` never lags behind `completed` in a
+        // metrics snapshot.
+        shared.submitted.fetch_add(1, Ordering::Relaxed);
+        q.push_back(job);
+        let depth = q.len();
+        shared.peak_depth.fetch_max(depth, Ordering::Relaxed);
+        drop(q);
+        // notify_all: the job may be eligible only for a subset of the
+        // sleeping workers, and notify_one could wake the wrong one.
+        shared.cv.notify_all();
+        Ok(())
+    }
+
+    /// All-or-nothing non-blocking enqueue; hands the jobs back when they
+    /// do not fit under `queue_cap`.
+    fn try_enqueue_bulk(&self, jobs: Vec<Job>) -> Result<(), Vec<Job>> {
+        let shared = &self.shared;
+        let mut q = shared.queue.lock().unwrap();
+        if shared.queue_cap > 0 && q.len() + jobs.len() > shared.queue_cap {
+            return Err(jobs);
+        }
+        for job in jobs {
+            shared.submitted.fetch_add(1, Ordering::Relaxed);
+            q.push_back(job);
+        }
+        let depth = q.len();
+        shared.peak_depth.fetch_max(depth, Ordering::Relaxed);
+        drop(q);
+        shared.cv.notify_all();
+        Ok(())
+    }
+
+    /// Decide whether (and how) to shard `req`: pick the matching
+    /// architecture with the most eligible devices, split the element
+    /// range evenly, and fall back to single-device execution when any
+    /// shard would drop under `shard_min_trips` elements.
+    fn shard_plan(&self, req: &OffloadRequest) -> Option<ShardPlan> {
+        let spec = req.shard.as_ref()?;
+        let mut archs: Vec<(Arch, usize)> = vec![];
+        for s in &self.shared.slots {
+            if req.affinity.matches(s.spec.arch, s.spec.kind) {
+                match archs.iter_mut().find(|(a, _)| *a == s.spec.arch) {
+                    Some((_, c)) => *c += 1,
+                    None => archs.push((s.spec.arch, 1)),
+                }
+            }
+        }
+        // First-seen order breaks ties, so the plan is deterministic.
+        let mut best: Option<(Arch, usize)> = None;
+        for (a, c) in archs {
+            if best.map_or(true, |(_, bc)| c > bc) {
+                best = Some((a, c));
+            }
+        }
+        let (arch, ndev) = best?;
+        // Clamp to the queue bound so a sharded request can always be
+        // enqueued whole — otherwise `try_submit` on a pool with
+        // queue_cap < device count would report Full forever, even idle.
+        let cap = if self.shared.queue_cap > 0 { self.shared.queue_cap } else { usize::MAX };
+        let n = ndev.min(spec.elems / self.shared.shard_min_trips).min(cap);
+        if n < 2 {
+            return None;
+        }
+        let base = spec.elems / n;
+        let rem = spec.elems % n;
+        let mut ranges = Vec::with_capacity(n);
+        let mut lo = 0usize;
+        for i in 0..n {
+            let len = base + usize::from(i < rem);
+            ranges.push((lo, lo + len));
+            lo += len;
+        }
+        Some(ShardPlan { arch, ranges })
+    }
+
+    /// Materialize the shard jobs for `req` under `plan`. The original
+    /// request is only borrowed, so a failed enqueue can hand it back.
+    fn build_shards(
+        &self,
+        req: &OffloadRequest,
+        plan: &ShardPlan,
+    ) -> (Vec<OffloadJob>, Vec<ShardPart>) {
+        let spec = req.shard.as_ref().expect("a plan implies a spec");
+        let n = plan.ranges.len();
+        let mut jobs = Vec::with_capacity(n);
+        let mut parts = Vec::with_capacity(n);
+        for &(lo, hi) in &plan.ranges {
+            let buffers: Vec<MapBuf> = req
+                .buffers
+                .iter()
+                .enumerate()
+                .map(|(bi, b)| {
+                    if spec.partitioned.contains(&bi) {
+                        MapBuf {
+                            bytes: b.bytes[lo * spec.elem_bytes..hi * spec.elem_bytes].to_vec(),
+                            map_type: b.map_type,
+                        }
+                    } else {
+                        b.clone()
+                    }
+                })
+                .collect();
+            let mut args = req.args.clone();
+            args[spec.count_arg] = KernelArg::Imm((hi - lo) as u64);
+            let sreq = OffloadRequest {
+                module: req.module.clone(),
+                kernel: req.kernel.clone(),
+                region: req.region.clone(),
+                cfg: LaunchConfig::new(
+                    req.cfg.grid_dim.div_ceil(n as u32).max(1),
+                    req.cfg.block_dim,
+                ),
+                opt: req.opt,
+                buffers,
+                args,
+                affinity: Affinity { arch: Some(plan.arch), kind: req.affinity.kind },
+                shard: None,
+            };
+            let (tx, rx) = mpsc::channel();
+            jobs.push(make_offload_job(sreq, tx, true));
+            parts.push(ShardPart { rx, lo, hi });
+        }
+        (jobs, parts)
+    }
+
+    /// Snapshot of queue/throughput/cache/allocator metrics.
     pub fn metrics(&self) -> PoolMetrics {
         let queue_depth = self.shared.queue.lock().unwrap().len();
         let devices: Vec<DeviceMetrics> = self
@@ -410,15 +898,24 @@ impl DevicePool {
                 arch: s.spec.arch,
                 inflight: s.inflight.load(Ordering::Relaxed),
                 completed: s.completed.load(Ordering::Relaxed),
+                batches: s.batches.load(Ordering::Relaxed),
+                batched_jobs: s.batched_jobs.load(Ordering::Relaxed),
+                max_batch: s.max_batch.load(Ordering::Relaxed),
                 cache: s.cache.stats(),
                 cached_images: s.cache.len(),
+                cache_bytes: s.cache.bytes(),
+                mem: s.device.gmem.stats(),
             })
             .collect();
         PoolMetrics {
             queue_depth,
+            peak_queue_depth: self.shared.peak_depth.load(Ordering::Relaxed),
+            queue_cap: self.shared.queue_cap,
             submitted: self.shared.submitted.load(Ordering::Relaxed),
             completed: self.shared.completed.load(Ordering::Relaxed),
             failed: self.shared.failed.load(Ordering::Relaxed),
+            sharded_requests: self.shared.sharded_requests.load(Ordering::Relaxed),
+            shard_jobs: self.shared.shard_jobs.load(Ordering::Relaxed),
             uptime: self.shared.started.elapsed(),
             devices,
         }
@@ -447,53 +944,289 @@ impl DevicePool {
     }
 }
 
+struct ShardPlan {
+    arch: Arch,
+    ranges: Vec<(usize, usize)>,
+}
+
+struct ShardPart {
+    rx: mpsc::Receiver<Result<OffloadResponse, Error>>,
+    lo: usize,
+    hi: usize,
+}
+
+fn make_offload_job(
+    req: OffloadRequest,
+    reply: mpsc::Sender<Result<OffloadResponse, Error>>,
+    no_batch: bool,
+) -> OffloadJob {
+    let key = BatchKey { content: req.module.content_hash(), opt: req.opt };
+    OffloadJob { req, key, no_batch, reply, enqueued: Instant::now() }
+}
+
+/// Spawn the result-stitcher for a sharded request; resolves the returned
+/// receiver with the assembled response once every shard reported.
+fn spawn_stitcher(
+    req: &OffloadRequest,
+    parts: Vec<ShardPart>,
+) -> Result<mpsc::Receiver<Result<OffloadResponse, Error>>, Error> {
+    let spec = req.shard.as_ref().expect("sharded request has a spec");
+    let buf_meta: Vec<(MapType, usize)> =
+        req.buffers.iter().map(|b| (b.map_type, b.bytes.len())).collect();
+    let partitioned = spec.partitioned.clone();
+    let elem_bytes = spec.elem_bytes;
+    let (ftx, frx) = mpsc::channel();
+    std::thread::Builder::new()
+        .name("pool-stitch".into())
+        .spawn(move || stitch(parts, buf_meta, partitioned, elem_bytes, ftx))
+        .map_err(|e| Error::Sched(format!("cannot spawn shard stitcher: {e}")))?;
+    Ok(frx)
+}
+
+/// Wait for all shard responses and assemble the full-request response:
+/// partitioned outputs are copied into their element ranges, broadcast
+/// outputs come from the first shard, counters are summed (`wall` and
+/// `queue_wait` take the max).
+fn stitch(
+    parts: Vec<ShardPart>,
+    buf_meta: Vec<(MapType, usize)>,
+    partitioned: Vec<usize>,
+    elem_bytes: usize,
+    ftx: mpsc::Sender<Result<OffloadResponse, Error>>,
+) {
+    let mut got: Vec<(OffloadResponse, usize, usize)> = Vec::with_capacity(parts.len());
+    let mut first_err: Option<Error> = None;
+    for part in parts {
+        match part.rx.recv() {
+            Ok(Ok(resp)) => got.push((resp, part.lo, part.hi)),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err =
+                        Some(Error::Sched("shard dropped before the request completed".into()));
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        let _ = ftx.send(Err(e));
+        return;
+    }
+    let mut buffers: Vec<Option<Vec<u8>>> = Vec::with_capacity(buf_meta.len());
+    for (bi, (map_type, full_len)) in buf_meta.iter().enumerate() {
+        if !matches!(map_type, MapType::From | MapType::Tofrom) {
+            buffers.push(None);
+            continue;
+        }
+        if partitioned.contains(&bi) {
+            let mut out = vec![0u8; *full_len];
+            for (resp, lo, hi) in &got {
+                if let Some(src) = &resp.buffers[bi] {
+                    out[lo * elem_bytes..hi * elem_bytes].copy_from_slice(src);
+                }
+            }
+            buffers.push(Some(out));
+        } else {
+            buffers.push(got[0].0.buffers[bi].clone());
+        }
+    }
+    let mut stats = LaunchStats::default();
+    let mut queue_wait = Duration::ZERO;
+    let mut cache_hit = true;
+    for (resp, _, _) in &got {
+        stats.lane_ops += resp.stats.lane_ops;
+        stats.warp_steps += resp.stats.warp_steps;
+        stats.blocks += resp.stats.blocks;
+        if resp.stats.wall > stats.wall {
+            stats.wall = resp.stats.wall;
+        }
+        if resp.queue_wait > queue_wait {
+            queue_wait = resp.queue_wait;
+        }
+        cache_hit &= resp.cache_hit;
+    }
+    let shards = got.len();
+    let first = &got[0].0;
+    let _ = ftx.send(Ok(OffloadResponse {
+        device_id: first.device_id,
+        arch: first.arch,
+        kind: first.kind,
+        stats,
+        cache_hit,
+        queue_wait,
+        shards,
+        buffers,
+    }));
+}
+
 impl Drop for DevicePool {
     fn drop(&mut self) {
         // Flip the shutdown predicate while holding the queue mutex: a
         // worker that already checked `shutdown` and is between that check
-        // and `cv.wait` would otherwise miss this notify forever.
+        // and `cv.wait` would otherwise miss this notify forever. Blocked
+        // submitters (backpressure) are woken the same way.
         {
             let _q = self.shared.queue.lock().unwrap();
             self.shared.shutdown.store(true, Ordering::SeqCst);
             self.shared.cv.notify_all();
+            self.shared.space.notify_all();
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
         // Fail any requests still queued so waiting clients unblock with
-        // an error instead of a channel disconnect.
+        // an error instead of a channel disconnect. (Dropped task jobs
+        // disconnect their handles, which also unblocks their waiters.)
         let mut q = self.shared.queue.lock().unwrap();
         while let Some(job) = q.pop_front() {
-            let _ = job
-                .reply
-                .send(Err(Error::Sched("pool shut down before the request ran".into())));
+            if let Job::Offload(j) = job {
+                let _ = j
+                    .reply
+                    .send(Err(Error::Sched("pool shut down before the request ran".into())));
+            }
         }
     }
 }
 
-/// Worker body: pull the oldest affinity-compatible job, run it, reply.
+/// What a worker popped in one queue visit.
+enum Work {
+    Batch(Vec<OffloadJob>),
+    Task(TaskJob),
+}
+
+/// Worker body: pop the oldest affinity-compatible job — coalescing up to
+/// `batch_max` same-image offload requests behind it — run it, reply.
 fn worker_loop(shared: &Shared, id: usize) {
     let slot = &shared.slots[id];
     loop {
-        let job = {
+        let work = {
             let mut q = shared.queue.lock().unwrap();
-            loop {
+            'wait: loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
                 if let Some(pos) = q
                     .iter()
-                    .position(|j| j.req.affinity.matches(slot.spec.arch, slot.spec.kind))
+                    .position(|j| j.affinity().matches(slot.spec.arch, slot.spec.kind))
                 {
-                    break q.remove(pos).expect("position is in range");
+                    let first = q.remove(pos).expect("position is in range");
+                    match first {
+                        Job::Task(t) => break 'wait Work::Task(t),
+                        Job::Offload(j) => {
+                            let mut batch = vec![j];
+                            if shared.batch_max > 1 && !batch[0].no_batch {
+                                let key = batch[0].key;
+                                // After the removal, the element formerly at
+                                // pos+1 sits at pos: continue scanning there.
+                                let mut i = pos;
+                                while batch.len() < shared.batch_max && i < q.len() {
+                                    let compatible = matches!(
+                                        &q[i],
+                                        Job::Offload(o) if o.key == key
+                                            && !o.no_batch
+                                            && o.req.affinity.matches(slot.spec.arch, slot.spec.kind)
+                                    );
+                                    if compatible {
+                                        match q.remove(i) {
+                                            Some(Job::Offload(o)) => batch.push(o),
+                                            _ => unreachable!("index i held an offload job"),
+                                        }
+                                    } else {
+                                        i += 1;
+                                    }
+                                }
+                            }
+                            break 'wait Work::Batch(batch);
+                        }
+                    }
                 }
                 q = shared.cv.wait(q).unwrap();
             }
         };
-        let queue_wait = job.enqueued.elapsed();
-        slot.inflight.fetch_add(1, Ordering::Relaxed);
-        let result = run_job(slot, &job.req, queue_wait);
-        slot.inflight.fetch_sub(1, Ordering::Relaxed);
+        // Jobs left the queue: wake submitters blocked on a full queue.
+        shared.space.notify_all();
+        match work {
+            Work::Task(task) => {
+                slot.inflight.fetch_add(1, Ordering::Relaxed);
+                let lease = DeviceLease {
+                    id: slot.id,
+                    spec: slot.spec,
+                    device: &slot.device,
+                    profiler: &slot.profiler,
+                };
+                // Leased closures are arbitrary user code; a panic must
+                // not kill this device's worker thread (every job pinned
+                // to the device would starve forever). The panicked
+                // task's handle resolves to an error via its dropped
+                // sender.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (task.run)(&lease)
+                }));
+                slot.inflight.fetch_sub(1, Ordering::Relaxed);
+                match outcome {
+                    Ok(()) => {
+                        slot.completed.fetch_add(1, Ordering::Relaxed);
+                        shared.completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        shared.failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Work::Batch(batch) => run_offload_batch(shared, slot, batch),
+        }
+    }
+}
+
+/// Execute a popped batch (size ≥ 1) on `slot` and reply to every job.
+///
+/// The image lookup/prepare is paid once per batch; follower jobs are
+/// recorded as cache hits (they share the leader's image by
+/// construction). Batches of independent jobs — images without
+/// global-space globals, so no cross-launch device state — execute as one
+/// fused grid via [`OffloadDevice::offload_batch`]; anything else falls
+/// back to per-job sequential launches.
+fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>) {
+    let n = batch.len();
+    slot.inflight.fetch_add(n, Ordering::Relaxed);
+    slot.batches.fetch_add(1, Ordering::Relaxed);
+    if n > 1 {
+        slot.batched_jobs.fetch_add(n as u64, Ordering::Relaxed);
+    }
+    slot.max_batch.fetch_max(n, Ordering::Relaxed);
+    let waits: Vec<Duration> = batch.iter().map(|j| j.enqueued.elapsed()).collect();
+
+    let results: Vec<Result<OffloadResponse, Error>> =
+        match slot.cache.get_or_prepare(&slot.device, &batch[0].req.module, batch[0].req.opt) {
+            Err(e) => {
+                let msg = format!("prepare failed: {e}");
+                batch.iter().map(|_| Err(Error::Sched(msg.clone()))).collect()
+            }
+            Ok((image, first_hit)) => {
+                if n > 1 {
+                    slot.cache.note_batched_hits(n as u64 - 1);
+                }
+                if n > 1 && image.module.global_addrs.is_empty() {
+                    run_fused(slot, &image, &batch, &waits, first_hit)
+                } else {
+                    batch
+                        .iter()
+                        .enumerate()
+                        .map(|(i, job)| {
+                            let hit = if i == 0 { first_hit } else { true };
+                            run_one(slot, &image, &job.req, waits[i], hit)
+                        })
+                        .collect()
+                }
+            }
+        };
+
+    slot.inflight.fetch_sub(n, Ordering::Relaxed);
+    for (job, result) in batch.into_iter().zip(results) {
         match &result {
             Ok(_) => {
                 slot.completed.fetch_add(1, Ordering::Relaxed);
@@ -508,57 +1241,177 @@ fn worker_loop(shared: &Shared, id: usize) {
     }
 }
 
-/// Execute one request on `slot`: image from cache, map, launch, unmap.
-fn run_job(
-    slot: &DeviceSlot,
-    req: &OffloadRequest,
-    queue_wait: Duration,
-) -> Result<OffloadResponse, Error> {
-    let (image, cache_hit) = slot.cache.get_or_prepare(&slot.device, &req.module, req.opt)?;
-
-    let mut dev_addrs = Vec::with_capacity(req.buffers.len());
+/// Map each request buffer into device memory (copying `To`/`Tofrom`
+/// data); on failure everything already mapped is freed.
+fn map_buffers(device: &OffloadDevice, req: &OffloadRequest) -> Result<Vec<u64>, Error> {
+    let mut addrs = Vec::with_capacity(req.buffers.len());
     for b in &req.buffers {
-        let addr = slot.device.gmem.alloc((b.bytes.len() as u64).max(1), 8)?;
-        if matches!(b.map_type, MapType::To | MapType::Tofrom) {
-            slot.device.gmem.write_bytes(addr, &b.bytes)?;
+        match device.gmem.alloc((b.bytes.len() as u64).max(1), 8) {
+            Ok(addr) => {
+                addrs.push(addr);
+                if matches!(b.map_type, MapType::To | MapType::Tofrom) {
+                    if let Err(e) = device.gmem.write_bytes(addr, &b.bytes) {
+                        free_buffers(device, &addrs);
+                        return Err(e);
+                    }
+                }
+            }
+            Err(e) => {
+                free_buffers(device, &addrs);
+                return Err(e);
+            }
         }
-        dev_addrs.push(addr);
     }
+    Ok(addrs)
+}
 
-    let args: Vec<u64> = req
-        .args
+/// Return mapped buffers to the device's free-list allocator.
+fn free_buffers(device: &OffloadDevice, addrs: &[u64]) {
+    for &addr in addrs {
+        let _ = device.gmem.free(addr);
+    }
+}
+
+/// Resolve `KernelArg`s against the mapped device addresses.
+fn resolve_args(req: &OffloadRequest, dev_addrs: &[u64]) -> Vec<u64> {
+    req.args
         .iter()
         .map(|a| match a {
             KernelArg::Buf(i) => dev_addrs[*i], // index validated at submit
             KernelArg::Imm(v) => *v,
         })
-        .collect();
+        .collect()
+}
 
-    let (launch, elapsed) =
-        crate::util::stats::timed(|| slot.device.offload(&image, &req.kernel, &args, req.cfg));
-    slot.profiler.record(&req.region, elapsed);
-    let stats = launch?;
-
+/// Read back `From`/`Tofrom` buffers after a launch.
+fn read_back(
+    device: &OffloadDevice,
+    req: &OffloadRequest,
+    dev_addrs: &[u64],
+) -> Result<Vec<Option<Vec<u8>>>, Error> {
     let mut out = Vec::with_capacity(req.buffers.len());
-    for (b, addr) in req.buffers.iter().zip(&dev_addrs) {
+    for (b, addr) in req.buffers.iter().zip(dev_addrs) {
         if matches!(b.map_type, MapType::From | MapType::Tofrom) {
             let mut buf = vec![0u8; b.bytes.len()];
-            slot.device.gmem.read_bytes(*addr, &mut buf)?;
+            device.gmem.read_bytes(*addr, &mut buf)?;
             out.push(Some(buf));
         } else {
             out.push(None);
         }
     }
+    Ok(out)
+}
 
-    Ok(OffloadResponse {
-        device_id: slot.id,
-        arch: slot.spec.arch,
-        kind: slot.spec.kind,
-        stats,
-        cache_hit,
-        queue_wait,
-        buffers: out,
-    })
+/// Execute one request on `slot`: map, launch, read back, free.
+fn run_one(
+    slot: &DeviceSlot,
+    image: &Arc<KernelImage>,
+    req: &OffloadRequest,
+    queue_wait: Duration,
+    cache_hit: bool,
+) -> Result<OffloadResponse, Error> {
+    let dev_addrs = map_buffers(&slot.device, req)?;
+    let args = resolve_args(req, &dev_addrs);
+    let (launch, elapsed) =
+        crate::util::stats::timed(|| slot.device.offload(image, &req.kernel, &args, req.cfg));
+    slot.profiler.record(&req.region, elapsed);
+    let result = (|| {
+        let stats = launch?;
+        let buffers = read_back(&slot.device, req, &dev_addrs)?;
+        Ok(OffloadResponse {
+            device_id: slot.id,
+            arch: slot.spec.arch,
+            kind: slot.spec.kind,
+            stats,
+            cache_hit,
+            queue_wait,
+            shards: 1,
+            buffers,
+        })
+    })();
+    free_buffers(&slot.device, &dev_addrs);
+    result
+}
+
+/// Execute a batch of independent jobs as one fused grid. Per-job wall
+/// attribution inside a fused grid is not measurable; each job's region
+/// is charged an equal share of the batch.
+fn run_fused(
+    slot: &DeviceSlot,
+    image: &Arc<KernelImage>,
+    batch: &[OffloadJob],
+    waits: &[Duration],
+    first_hit: bool,
+) -> Vec<Result<OffloadResponse, Error>> {
+    let n = batch.len();
+    let mut mapped: Vec<Result<Vec<u64>, Error>> =
+        batch.iter().map(|j| map_buffers(&slot.device, &j.req)).collect();
+
+    // Fused items cover only the successfully mapped jobs.
+    let mut arg_store: Vec<Vec<u64>> = Vec::with_capacity(n);
+    let mut item_of_job: Vec<Option<usize>> = Vec::with_capacity(n);
+    for (i, job) in batch.iter().enumerate() {
+        match &mapped[i] {
+            Ok(addrs) => {
+                item_of_job.push(Some(arg_store.len()));
+                arg_store.push(resolve_args(&job.req, addrs));
+            }
+            Err(_) => item_of_job.push(None),
+        }
+    }
+    let mut items: Vec<BatchKernelSpec<'_>> = Vec::with_capacity(arg_store.len());
+    for (i, job) in batch.iter().enumerate() {
+        if let Some(k) = item_of_job[i] {
+            items.push(BatchKernelSpec {
+                kernel: &job.req.kernel,
+                args: &arg_store[k],
+                cfg: job.req.cfg,
+            });
+        }
+    }
+
+    let (launch_results, elapsed) =
+        crate::util::stats::timed(|| slot.device.offload_batch(image, &items));
+    // Equal-share attribution over the jobs that actually launched;
+    // map-failed jobs ran nothing and are not charged.
+    let share = elapsed / items.len().max(1) as u32;
+
+    let mut launch_iter = launch_results.into_iter();
+    let mut results = Vec::with_capacity(n);
+    for (i, job) in batch.iter().enumerate() {
+        let res = match item_of_job[i] {
+            None => {
+                let e = std::mem::replace(&mut mapped[i], Ok(Vec::new()));
+                Err(e.expect_err("unmapped job carries its map error"))
+            }
+            Some(_) => {
+                slot.profiler.record(&job.req.region, share);
+                match launch_iter.next().expect("one result per fused item") {
+                    Err(e) => Err(e),
+                    Ok(stats) => {
+                        let addrs = mapped[i].as_ref().expect("mapped job has addresses");
+                        read_back(&slot.device, &job.req, addrs).map(|buffers| OffloadResponse {
+                            device_id: slot.id,
+                            arch: slot.spec.arch,
+                            kind: slot.spec.kind,
+                            stats,
+                            cache_hit: if i == 0 { first_hit } else { true },
+                            queue_wait: waits[i],
+                            shards: 1,
+                            buffers,
+                        })
+                    }
+                }
+            }
+        };
+        results.push(res);
+    }
+    for m in &mapped {
+        if let Ok(addrs) = m {
+            free_buffers(&slot.device, addrs);
+        }
+    }
+    results
 }
 
 // ---------------------------------------------------------------------------
@@ -574,14 +1427,25 @@ pub struct DeviceMetrics {
     pub kind: RuntimeKind,
     /// Architecture.
     pub arch: Arch,
-    /// Requests currently executing (0 or 1 with one worker per device).
+    /// Requests currently executing on this device (a whole batch counts
+    /// each of its jobs).
     pub inflight: usize,
     /// Requests completed on this device.
     pub completed: u64,
+    /// Queue pops (each pop executes a batch of ≥ 1 jobs).
+    pub batches: u64,
+    /// Jobs that ran inside a multi-job batch.
+    pub batched_jobs: u64,
+    /// Largest batch popped so far.
+    pub max_batch: usize,
     /// Image-cache counters.
     pub cache: CacheStats,
     /// Images currently cached.
     pub cached_images: usize,
+    /// Estimated bytes of cached images.
+    pub cache_bytes: u64,
+    /// Device global-memory allocator counters.
+    pub mem: MemStats,
 }
 
 /// Pool-wide metrics snapshot.
@@ -589,12 +1453,21 @@ pub struct DeviceMetrics {
 pub struct PoolMetrics {
     /// Jobs waiting in the submission queue.
     pub queue_depth: usize,
-    /// Total requests accepted.
+    /// Deepest the queue has ever been.
+    pub peak_queue_depth: usize,
+    /// Configured queue bound (0 = unbounded).
+    pub queue_cap: usize,
+    /// Total jobs accepted (shard jobs and device tasks count
+    /// individually).
     pub submitted: u64,
-    /// Total requests completed successfully.
+    /// Total jobs completed successfully.
     pub completed: u64,
-    /// Total requests that failed.
+    /// Total jobs that failed.
     pub failed: u64,
+    /// Client requests that were split across devices.
+    pub sharded_requests: u64,
+    /// Shard jobs those requests produced.
+    pub shard_jobs: u64,
     /// Time since the pool started.
     pub uptime: Duration,
     /// Per-device breakdown.
@@ -608,8 +1481,19 @@ impl PoolMetrics {
         for d in &self.devices {
             s.hits += d.cache.hits;
             s.misses += d.cache.misses;
+            s.evictions += d.cache.evictions;
         }
         s
+    }
+
+    /// Jobs coalesced into multi-job batches, pool-wide.
+    pub fn batched_jobs(&self) -> u64 {
+        self.devices.iter().map(|d| d.batched_jobs).sum()
+    }
+
+    /// Bytes live across every device allocator.
+    pub fn device_live_bytes(&self) -> u64 {
+        self.devices.iter().map(|d| d.mem.live_bytes).sum()
     }
 
     /// Completed launches per second of pool uptime.
@@ -653,18 +1537,28 @@ mod tests {
     #[test]
     fn pool_config_from_config_document() {
         let cfg = Config::parse(
-            "[pool]\ndevices = [\"portable:nvptx64\", \"legacy:amdgcn\"]\nopt = \"O0\"",
+            "[pool]\ndevices = [\"portable:nvptx64\", \"legacy:amdgcn\"]\nopt = \"O0\"\n\
+             batch_max = 4\nqueue_cap = 32\nshard_min_trips = 100\ncache_budget_bytes = 65536",
         )
         .unwrap();
         let pc = PoolConfig::from_config(&cfg).unwrap();
         assert_eq!(pc.devices.len(), 2);
         assert_eq!(pc.devices[1], DeviceSpec { kind: RuntimeKind::Legacy, arch: Arch::Amdgcn });
         assert_eq!(pc.default_opt, OptLevel::O0);
+        assert_eq!(pc.batch_max, 4);
+        assert_eq!(pc.queue_cap, 32);
+        assert_eq!(pc.shard_min_trips, 100);
+        assert_eq!(pc.cache_budget_bytes, 65536);
         // Missing section → default mixed pool.
         let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
         assert_eq!(pc, PoolConfig::mixed4());
         // Bad spec errors.
         let cfg = Config::parse("[pool]\ndevices = [\"warp9:nvptx64\"]").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        // Out-of-range knobs error.
+        let cfg = Config::parse("[pool]\nbatch_max = 0").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[pool]\nqueue_cap = -1").unwrap();
         assert!(PoolConfig::from_config(&cfg).is_err());
     }
 
@@ -674,25 +1568,49 @@ mod tests {
         assert_eq!(bytes_to_f32(&f32_to_bytes(&v)), v);
     }
 
-    #[test]
-    fn submit_validates_before_enqueue() {
-        let pool = DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64))
-            .unwrap();
-        let req = |affinity| OffloadRequest {
+    fn base_request(affinity: Affinity) -> OffloadRequest {
+        OffloadRequest {
             module: Module::new("m"),
             kernel: "k".into(),
             region: "r".into(),
             cfg: LaunchConfig::new(1, 32),
             opt: OptLevel::O2,
             buffers: vec![],
-            args: vec![KernelArg::Buf(3)],
+            args: vec![],
             affinity,
-        };
+            shard: None,
+        }
+    }
+
+    #[test]
+    fn submit_validates_before_enqueue() {
+        let pool = DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64))
+            .unwrap();
         // Bad buffer index.
-        assert!(pool.submit(req(Affinity::any())).is_err());
+        let mut r = base_request(Affinity::any());
+        r.args = vec![KernelArg::Buf(3)];
+        assert!(pool.submit(r).is_err());
         // Affinity matching no pool device.
-        let mut r = req(Affinity::on_arch(Arch::Amdgcn));
-        r.args = vec![];
+        let r = base_request(Affinity::on_arch(Arch::Amdgcn));
+        assert!(pool.submit(r).is_err());
+        assert_eq!(pool.metrics().submitted, 0);
+    }
+
+    #[test]
+    fn submit_validates_shard_specs() {
+        let pool = DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64))
+            .unwrap();
+        // count_arg must point at an Imm argument.
+        let mut r = base_request(Affinity::any());
+        r.buffers = vec![MapBuf { bytes: vec![0u8; 32], map_type: MapType::Tofrom }];
+        r.args = vec![KernelArg::Buf(0)];
+        r.shard = Some(ShardSpec { partitioned: vec![0], elem_bytes: 4, count_arg: 0, elems: 8 });
+        assert!(pool.submit(r).is_err());
+        // Partitioned buffer length must equal elems * elem_bytes.
+        let mut r = base_request(Affinity::any());
+        r.buffers = vec![MapBuf { bytes: vec![0u8; 30], map_type: MapType::Tofrom }];
+        r.args = vec![KernelArg::Buf(0), KernelArg::Imm(8)];
+        r.shard = Some(ShardSpec { partitioned: vec![0], elem_bytes: 4, count_arg: 1, elems: 8 });
         assert!(pool.submit(r).is_err());
         assert_eq!(pool.metrics().submitted, 0);
     }

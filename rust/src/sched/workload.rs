@@ -6,7 +6,7 @@
 //! `scale` (one mapped buffer, grid-strided `buf[i] *= 2`) and `saxpy`
 //! (three buffers plus two immediate args).
 
-use super::pool::{Affinity, KernelArg, MapBuf, OffloadRequest};
+use super::pool::{Affinity, KernelArg, MapBuf, OffloadRequest, ShardSpec};
 use crate::hostrt::MapType;
 use crate::ir::passes::OptLevel;
 use crate::ir::{AddrSpace, CmpPred, FunctionBuilder, Module, Operand, Type};
@@ -28,6 +28,13 @@ fn emit_gid_stride64(b: &mut FunctionBuilder) -> (crate::ir::Reg, crate::ir::Reg
 
 /// kernel `scale(buf, n)`: `buf[i] *= 2` over a grid-strided range.
 pub fn scale_module() -> Module {
+    scale_module_by(2.0)
+}
+
+/// kernel `scale(buf, n)`: `buf[i] *= factor`. Distinct factors produce
+/// distinct module contents — and thus distinct image-cache keys — which
+/// the eviction soak uses to generate one-off images on demand.
+pub fn scale_module_by(factor: f32) -> Module {
     let mut m = Module::new("pool_scale");
     let mut b = FunctionBuilder::new("scale", &[Type::I64, Type::I64], None).kernel();
     let buf = b.param(0);
@@ -39,7 +46,7 @@ pub fn scale_module() -> Module {
         b.if_(done, |b| b.break_());
         let addr = b.index(buf, i, 4);
         let v = b.load(Type::F32, AddrSpace::Global, addr);
-        let v2 = b.mul(v, Operand::f32(2.0));
+        let v2 = b.mul(v, Operand::f32(factor));
         b.store(Type::F32, AddrSpace::Global, addr, v2);
         let nx = b.add(i, stride64);
         b.assign(i, nx);
@@ -89,9 +96,19 @@ pub fn scale_request(
     affinity: Affinity,
     opt: OptLevel,
 ) -> (OffloadRequest, Vec<f32>) {
-    let expected = data.iter().map(|v| v * 2.0).collect();
+    scale_request_by(2.0, data, affinity, opt)
+}
+
+/// A `scale`-by-`factor` request (distinct factors → distinct images).
+pub fn scale_request_by(
+    factor: f32,
+    data: &[f32],
+    affinity: Affinity,
+    opt: OptLevel,
+) -> (OffloadRequest, Vec<f32>) {
+    let expected = data.iter().map(|v| v * factor).collect();
     let req = OffloadRequest {
-        module: scale_module(),
+        module: scale_module_by(factor),
         kernel: "scale".into(),
         region: "scale".into(),
         cfg: LaunchConfig::new(2, 64),
@@ -99,7 +116,30 @@ pub fn scale_request(
         buffers: vec![MapBuf::f32(data, MapType::Tofrom)],
         args: vec![KernelArg::Buf(0), KernelArg::Imm(data.len() as u64)],
         affinity,
+        shard: None,
     };
+    (req, expected)
+}
+
+/// A `scale` request over a large buffer with a [`ShardSpec`] attached,
+/// so the pool may split it across devices: buffer 0 is partitioned by
+/// 4-byte elements and `args[1]` carries the element count. The launch
+/// grid scales with the data so a single-device fallback still spreads
+/// work over the device's SMs.
+pub fn sharded_scale_request(
+    data: &[f32],
+    affinity: Affinity,
+    opt: OptLevel,
+) -> (OffloadRequest, Vec<f32>) {
+    let (mut req, expected) = scale_request(data, affinity, opt);
+    let grid = (data.len() as u32).div_ceil(4096).clamp(2, 64);
+    req.cfg = LaunchConfig::new(grid, 64);
+    req.shard = Some(ShardSpec {
+        partitioned: vec![0],
+        elem_bytes: 4,
+        count_arg: 1,
+        elems: data.len(),
+    });
     (req, expected)
 }
 
@@ -132,7 +172,29 @@ pub fn saxpy_request(
             KernelArg::Imm(x.len() as u64),
         ],
         affinity,
+        shard: None,
     };
+    (req, expected)
+}
+
+/// A `saxpy` request with a [`ShardSpec`]: all three buffers partition by
+/// 4-byte elements, `args[4]` carries the element count.
+pub fn sharded_saxpy_request(
+    a: f32,
+    x: &[f32],
+    y: &[f32],
+    affinity: Affinity,
+    opt: OptLevel,
+) -> (OffloadRequest, Vec<f32>) {
+    let (mut req, expected) = saxpy_request(a, x, y, affinity, opt);
+    let grid = (x.len() as u32).div_ceil(4096).clamp(2, 64);
+    req.cfg = LaunchConfig::new(grid, 64);
+    req.shard = Some(ShardSpec {
+        partitioned: vec![0, 1, 2],
+        elem_bytes: 4,
+        count_arg: 4,
+        elems: x.len(),
+    });
     (req, expected)
 }
 

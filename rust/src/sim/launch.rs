@@ -179,20 +179,15 @@ pub struct StatsCollector {
     pub warp_steps: AtomicU64,
 }
 
-/// Execute `kernel` from `module` over the launch grid.
-///
-/// Each block runs on a pool worker ("SM"); each warp of a block is a host
-/// thread so that block barriers can suspend it. Kernel arguments are
-/// broadcast to all lanes.
-pub fn launch_kernel(
+/// Resolve `kernel` in `module` and validate launch parameters — the
+/// shared front half of [`launch_kernel`] and [`launch_kernel_batch`].
+fn resolve_kernel(
     desc: &DeviceDesc,
     module: &LoadedModule,
     kernel: &str,
     args: &[u64],
-    gmem: &GlobalMemory,
-    bindings: &Bindings,
     cfg: LaunchConfig,
-) -> Result<LaunchStats, Error> {
+) -> Result<Arc<crate::ir::Function>, Error> {
     let f = module
         .func(kernel)
         .ok_or_else(|| Error::DevRt(format!("kernel `{kernel}` not found in module `{}`", module.module.name)))?
@@ -216,7 +211,25 @@ pub fn launch_kernel(
             cfg.block_dim, desc.max_threads_per_block
         )));
     }
+    Ok(f)
+}
 
+/// Execute `kernel` from `module` over the launch grid.
+///
+/// Each block runs on a pool worker ("SM"); each warp of a block is a host
+/// thread so that block barriers can suspend it (single-warp blocks run
+/// inline on the SM worker — no barrier partner means no thread is
+/// needed). Kernel arguments are broadcast to all lanes.
+pub fn launch_kernel(
+    desc: &DeviceDesc,
+    module: &LoadedModule,
+    kernel: &str,
+    args: &[u64],
+    gmem: &GlobalMemory,
+    bindings: &Bindings,
+    cfg: LaunchConfig,
+) -> Result<LaunchStats, Error> {
+    let f = resolve_kernel(desc, module, kernel, args, cfg)?;
     let width = desc.arch.warp_width();
     let warps_per_block = cfg.block_dim.div_ceil(width);
     let stats = StatsCollector::default();
@@ -255,6 +268,130 @@ pub fn launch_kernel(
     })
 }
 
+/// One launch of a fused batch: the kernel entry, its broadcast args, and
+/// its own geometry. All items must come from the same loaded module.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchKernelSpec<'a> {
+    /// Kernel entry point.
+    pub kernel: &'a str,
+    /// Kernel arguments (broadcast to all lanes).
+    pub args: &'a [u64],
+    /// Launch geometry of this item.
+    pub cfg: LaunchConfig,
+}
+
+/// Execute several launches of **one loaded module** as a single fused
+/// grid — the device-side half of the pool's launch batching.
+///
+/// Every block of every item observes exactly the `(ctaid, nctaid, args)`
+/// it would see in a solo launch, so fusion is invisible to kernels;
+/// blocks of different items interleave over the device's SM workers,
+/// which is where the throughput win comes from: a small launch whose
+/// grid covers only a couple of SMs no longer leaves the rest idle, and
+/// the per-launch thread-scope setup is paid once per batch instead of
+/// once per launch.
+///
+/// **Caller contract:** items must be independent — the pool only fuses
+/// requests whose image has no global-space globals, so items cannot
+/// observe each other through device memory. Results are per-item; a
+/// failing item does not abort its siblings (their blocks keep running).
+/// `wall` in each item's stats is the whole batch's wall time (per-item
+/// isolation is not measurable inside a fused grid).
+pub fn launch_kernel_batch(
+    desc: &DeviceDesc,
+    module: &LoadedModule,
+    items: &[BatchKernelSpec<'_>],
+    gmem: &GlobalMemory,
+    bindings: &Bindings,
+) -> Vec<Result<LaunchStats, Error>> {
+    // Validate every item up front; invalid ones fail without running and
+    // are excluded from the fused grid.
+    let mut preps: Vec<Option<(Arc<crate::ir::Function>, u32)>> = Vec::with_capacity(items.len());
+    let mut errors: Vec<Mutex<Option<Error>>> = Vec::with_capacity(items.len());
+    let width = desc.arch.warp_width();
+    for it in items {
+        match resolve_kernel(desc, module, it.kernel, it.args, it.cfg) {
+            Ok(f) => {
+                let warps = it.cfg.block_dim.div_ceil(width);
+                preps.push(Some((f, warps)));
+                errors.push(Mutex::new(None));
+            }
+            Err(e) => {
+                preps.push(None);
+                errors.push(Mutex::new(Some(e)));
+            }
+        }
+    }
+
+    // Flat schedule: (item index, block id) for every block of every
+    // valid item, in item order.
+    let mut flat: Vec<(usize, u32)> = Vec::new();
+    for (i, p) in preps.iter().enumerate() {
+        if p.is_some() {
+            for b in 0..items[i].cfg.grid_dim {
+                flat.push((i, b));
+            }
+        }
+    }
+    let stats: Vec<StatsCollector> =
+        (0..items.len()).map(|_| StatsCollector::default()).collect();
+    let cursor = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+
+    if !flat.is_empty() {
+        let workers = desc.sm_count.min(flat.len() as u32).max(1);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let idx = cursor.fetch_add(1, Ordering::Relaxed);
+                    if idx >= flat.len() {
+                        return;
+                    }
+                    let (item, block) = flat[idx];
+                    // A failed item stops scheduling its remaining blocks;
+                    // other items keep going.
+                    if errors[item].lock().unwrap().is_some() {
+                        continue;
+                    }
+                    let (f, warps) = preps[item].as_ref().expect("scheduled item is valid");
+                    if let Err(e) = run_block(
+                        desc,
+                        module,
+                        f,
+                        items[item].args,
+                        gmem,
+                        bindings,
+                        items[item].cfg,
+                        block,
+                        *warps,
+                        &stats[item],
+                    ) {
+                        let mut slot = errors[item].lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    let wall = t0.elapsed();
+    errors
+        .into_iter()
+        .enumerate()
+        .map(|(i, e)| match e.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(LaunchStats {
+                lane_ops: stats[i].lane_ops.load(Ordering::Relaxed),
+                warp_steps: stats[i].warp_steps.load(Ordering::Relaxed),
+                blocks: items[i].cfg.grid_dim,
+                wall,
+            }),
+        })
+        .collect()
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_block(
     desc: &DeviceDesc,
@@ -271,6 +408,37 @@ fn run_block(
     let smem = SharedMemory::new(desc.shared_mem_per_block);
     let barrier = BlockBarrier::new(warps_per_block);
     let width = desc.arch.warp_width();
+
+    // Fast path: a single-warp block has no barrier partner to suspend
+    // for, so the warp runs inline on the SM worker instead of paying a
+    // thread spawn + join — the dominant fixed cost of small launches.
+    if warps_per_block == 1 {
+        let env = CallEnv {
+            desc,
+            module,
+            gmem,
+            smem: &smem,
+            barrier: &barrier,
+            bindings,
+            block_id,
+            grid_dim: cfg.grid_dim,
+            block_dim: cfg.block_dim,
+            warp_id: 0,
+            num_warps: 1,
+        };
+        let mut mask: u64 = 0;
+        for lane in 0..width {
+            if lane < cfg.block_dim {
+                mask |= 1 << lane;
+            }
+        }
+        let interp = Interp::new(&env, stats);
+        let arg_lanes: Vec<Vec<u64>> = args.iter().map(|&a| vec![a; width as usize]).collect();
+        let r = interp.run_function(f, &arg_lanes, mask);
+        barrier.leave();
+        return r.map(|_| ());
+    }
+
     let block_error: Mutex<Option<Error>> = Mutex::new(None);
 
     std::thread::scope(|scope| {

@@ -10,6 +10,7 @@
 
 use crate::util::Error;
 use std::cell::UnsafeCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -28,9 +29,19 @@ unsafe impl Send for MemRegion {}
 impl MemRegion {
     /// Allocate a zeroed region of `size` bytes.
     pub fn new(size: u64, name: &'static str) -> Self {
-        let mut v = Vec::with_capacity(size as usize);
-        v.resize_with(size as usize, || UnsafeCell::new(0u8));
-        MemRegion { data: v.into_boxed_slice(), name }
+        // `vec![0u8; n]` comes zeroed straight from the allocator; the
+        // element-by-element `resize_with` this replaces walked the whole
+        // region (hundreds of MiB per device) at pool bring-up.
+        let v = vec![0u8; size as usize];
+        // SAFETY: UnsafeCell<u8> is repr(transparent) over u8, so the
+        // zeroed byte buffer can be reinterpreted in place; length and
+        // capacity are equal, carried over unchanged, and ownership moves
+        // into the new Vec (the original is not dropped).
+        let data = unsafe {
+            let mut v = std::mem::ManuallyDrop::new(v);
+            Vec::from_raw_parts(v.as_mut_ptr() as *mut UnsafeCell<u8>, v.len(), v.capacity())
+        };
+        MemRegion { data: data.into_boxed_slice(), name }
     }
 
     /// Region size in bytes.
@@ -207,39 +218,167 @@ impl MemRegion {
     }
 }
 
-/// Global device memory with a bump allocator for host-side `omp_target_alloc`.
+/// Snapshot of allocator counters (see [`GlobalMemory::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemStats {
+    /// Region capacity in bytes.
+    pub capacity: u64,
+    /// Bytes in live allocations right now.
+    pub live_bytes: u64,
+    /// High-water mark of `live_bytes`.
+    pub peak_bytes: u64,
+    /// Successful `alloc` calls.
+    pub allocs: u64,
+    /// Successful `free` calls.
+    pub frees: u64,
+    /// Free blocks on the free list (1 when fully coalesced and untouched).
+    pub free_blocks: usize,
+    /// Size of the largest free block (allocation headroom).
+    pub largest_free: u64,
+}
+
+/// Free-list allocator state. Blocks are kept sorted by address and
+/// adjacent blocks are coalesced on free, so steady-state alloc/free
+/// traffic (the pool's per-request buffer maps, `omp_target_free`-analog
+/// reclamation from `hostrt`) does not fragment or leak device memory the
+/// way the original bump allocator did.
+struct AllocState {
+    /// Free blocks `(addr, size)`, sorted by `addr`, never adjacent.
+    free: Vec<(u64, u64)>,
+    /// Live allocations `addr -> size` (sizes after rounding).
+    live: HashMap<u64, u64>,
+    live_bytes: u64,
+    peak_bytes: u64,
+    allocs: u64,
+    frees: u64,
+}
+
+/// Allocation granularity: sizes round up to this, so blocks tile the
+/// region cleanly and coalescing never leaves unusable slivers.
+const ALLOC_GRANULE: u64 = 8;
+
+/// Global device memory with a reclaiming free-list allocator for
+/// host-side `omp_target_alloc` / `omp_target_free` analogs.
 pub struct GlobalMemory {
     region: MemRegion,
-    // Bump pointer; address 0 is kept unmapped so that 0 can serve as the
+    // Address range [0, 64) is kept unmapped so that 0 can serve as the
     // device null pointer.
-    next: Mutex<u64>,
+    state: Mutex<AllocState>,
 }
 
 impl GlobalMemory {
     /// Create a device global memory of `size` bytes.
     pub fn new(size: u64) -> Self {
-        GlobalMemory { region: MemRegion::new(size, "global"), next: Mutex::new(64) }
-    }
-
-    /// Allocate `size` bytes aligned to `align`; returns the device address.
-    pub fn alloc(&self, size: u64, align: u64) -> Result<u64, Error> {
-        let align = align.max(8);
-        let mut next = self.next.lock().unwrap();
-        let addr = next.next_multiple_of(align);
-        let end = addr.checked_add(size).ok_or_else(|| Error::HostRt("allocation overflow".into()))?;
-        if end > self.region.len() {
-            return Err(Error::HostRt(format!(
-                "device out of memory: need {size} bytes, {} free",
-                self.region.len().saturating_sub(*next)
-            )));
+        let free = if size > 64 { vec![(64, size - 64)] } else { vec![] };
+        GlobalMemory {
+            region: MemRegion::new(size, "global"),
+            state: Mutex::new(AllocState {
+                free,
+                live: HashMap::new(),
+                live_bytes: 0,
+                peak_bytes: 0,
+                allocs: 0,
+                frees: 0,
+            }),
         }
-        *next = end;
-        Ok(addr)
     }
 
-    /// Bytes currently allocated.
+    /// Allocate `size` bytes aligned to `align`; returns the device
+    /// address. First-fit over the free list; alignment padding stays on
+    /// the free list rather than being consumed.
+    pub fn alloc(&self, size: u64, align: u64) -> Result<u64, Error> {
+        let align = align.max(ALLOC_GRANULE);
+        let size = size
+            .max(1)
+            .checked_next_multiple_of(ALLOC_GRANULE)
+            .ok_or_else(|| Error::HostRt("allocation overflow".into()))?;
+        let mut st = self.state.lock().unwrap();
+        let mut chosen = None;
+        for (i, &(baddr, bsize)) in st.free.iter().enumerate() {
+            let Some(aligned) = baddr.checked_next_multiple_of(align) else { continue };
+            let pad = aligned - baddr;
+            if pad.checked_add(size).is_some_and(|need| need <= bsize) {
+                chosen = Some((i, aligned));
+                break;
+            }
+        }
+        let Some((i, aligned)) = chosen else {
+            return Err(Error::HostRt(format!(
+                "device out of memory: need {size} bytes ({} live of {} capacity, \
+                 largest free block {})",
+                st.live_bytes,
+                self.region.len(),
+                st.free.iter().map(|b| b.1).max().unwrap_or(0)
+            )));
+        };
+        let (baddr, bsize) = st.free[i];
+        let pad = aligned - baddr;
+        let tail = bsize - pad - size;
+        st.free.remove(i);
+        if tail > 0 {
+            st.free.insert(i, (aligned + size, tail));
+        }
+        if pad > 0 {
+            st.free.insert(i, (baddr, pad));
+        }
+        st.live.insert(aligned, size);
+        st.live_bytes += size;
+        st.peak_bytes = st.peak_bytes.max(st.live_bytes);
+        st.allocs += 1;
+        Ok(aligned)
+    }
+
+    /// Free an allocation returned by [`GlobalMemory::alloc`], coalescing
+    /// with adjacent free blocks. Freeing an address that is not a live
+    /// allocation (including double frees) is an error.
+    pub fn free(&self, addr: u64) -> Result<(), Error> {
+        let mut st = self.state.lock().unwrap();
+        let size = st
+            .live
+            .remove(&addr)
+            .ok_or_else(|| Error::HostRt(format!("free of unallocated device address {addr:#x}")))?;
+        st.live_bytes -= size;
+        st.frees += 1;
+        let pos = st.free.partition_point(|&(a, _)| a < addr);
+        let mut naddr = addr;
+        let mut nsize = size;
+        // Coalesce with the following block…
+        if pos < st.free.len() && naddr + nsize == st.free[pos].0 {
+            nsize += st.free[pos].1;
+            st.free.remove(pos);
+        }
+        // …and with the preceding one.
+        if pos > 0 {
+            let (paddr, psize) = st.free[pos - 1];
+            if paddr + psize == naddr {
+                naddr = paddr;
+                nsize += psize;
+                st.free[pos - 1] = (naddr, nsize);
+                return Ok(());
+            }
+        }
+        st.free.insert(pos, (naddr, nsize));
+        Ok(())
+    }
+
+    /// Bytes in live allocations (reclaimed bytes no longer count — the
+    /// steady-state figure pool soak tests assert on).
     pub fn allocated(&self) -> u64 {
-        *self.next.lock().unwrap()
+        self.state.lock().unwrap().live_bytes
+    }
+
+    /// Allocator counters snapshot.
+    pub fn stats(&self) -> MemStats {
+        let st = self.state.lock().unwrap();
+        MemStats {
+            capacity: self.region.len(),
+            live_bytes: st.live_bytes,
+            peak_bytes: st.peak_bytes,
+            allocs: st.allocs,
+            frees: st.frees,
+            free_blocks: st.free.len(),
+            largest_free: st.free.iter().map(|b| b.1).max().unwrap_or(0),
+        }
     }
 
     /// The underlying region.
@@ -375,6 +514,104 @@ mod tests {
     fn global_alloc_oom() {
         let g = GlobalMemory::new(256);
         assert!(g.alloc(1024, 8).is_err());
+    }
+
+    #[test]
+    fn free_reuses_memory() {
+        let g = GlobalMemory::new(4096);
+        let a = g.alloc(128, 8).unwrap();
+        g.free(a).unwrap();
+        let b = g.alloc(128, 8).unwrap();
+        assert_eq!(a, b, "first-fit must reuse the freed block");
+        let s = g.stats();
+        assert_eq!(s.allocs, 2);
+        assert_eq!(s.frees, 1);
+        assert_eq!(s.live_bytes, 128);
+    }
+
+    #[test]
+    fn allocated_tracks_live_bytes_not_high_water() {
+        let g = GlobalMemory::new(4096);
+        let a = g.alloc(100, 8).unwrap(); // rounds to 104
+        let b = g.alloc(200, 8).unwrap(); // rounds to 200
+        assert_eq!(g.allocated(), 104 + 200);
+        g.free(a).unwrap();
+        assert_eq!(g.allocated(), 200);
+        g.free(b).unwrap();
+        assert_eq!(g.allocated(), 0);
+        assert_eq!(g.stats().peak_bytes, 104 + 200);
+    }
+
+    #[test]
+    fn fragmentation_then_coalesce() {
+        let g = GlobalMemory::new(64 + 4 * 256);
+        let blocks: Vec<u64> = (0..4).map(|_| g.alloc(256, 8).unwrap()).collect();
+        // Free every other block: two holes, no coalescing possible yet.
+        g.free(blocks[0]).unwrap();
+        g.free(blocks[2]).unwrap();
+        assert_eq!(g.stats().free_blocks, 2);
+        // A request larger than a single hole must fail despite enough
+        // total free bytes (external fragmentation).
+        assert!(g.alloc(512, 8).is_err());
+        // Freeing the separators coalesces everything back into one block
+        // that can serve the large request.
+        g.free(blocks[1]).unwrap();
+        g.free(blocks[3]).unwrap();
+        let s = g.stats();
+        assert_eq!(s.free_blocks, 1);
+        assert_eq!(s.largest_free, 4 * 256);
+        assert_eq!(s.live_bytes, 0);
+        let big = g.alloc(1024, 8).unwrap();
+        assert_eq!(big, 64);
+    }
+
+    #[test]
+    fn alignment_padding_stays_allocatable() {
+        let g = GlobalMemory::new(4096);
+        let a = g.alloc(8, 8).unwrap(); // [64, 72)
+        let b = g.alloc(8, 256).unwrap(); // aligned up to 256
+        assert_eq!(b % 256, 0);
+        // The pad between a's end and b must remain on the free list.
+        let c = g.alloc(8, 8).unwrap();
+        assert!(c >= a + 8 && c + 8 <= b, "pad hole must be reused: a={a} b={b} c={c}");
+    }
+
+    #[test]
+    fn double_free_and_unknown_free_error() {
+        let g = GlobalMemory::new(1024);
+        let a = g.alloc(16, 8).unwrap();
+        g.free(a).unwrap();
+        assert!(g.free(a).is_err(), "double free must error");
+        assert!(g.free(0xDEAD).is_err(), "unknown address must error");
+    }
+
+    #[test]
+    fn oom_recovers_after_free() {
+        let g = GlobalMemory::new(64 + 512);
+        let a = g.alloc(512, 8).unwrap();
+        assert!(g.alloc(8, 8).is_err(), "region exhausted");
+        g.free(a).unwrap();
+        assert!(g.alloc(512, 8).is_ok(), "full capacity must be reusable after free");
+    }
+
+    #[test]
+    fn churn_does_not_leak_or_fragment() {
+        let g = GlobalMemory::new(1 << 16);
+        for round in 0..100 {
+            let sizes = [24u64, 1000, 8, 400];
+            let addrs: Vec<u64> = sizes
+                .iter()
+                .map(|&s| g.alloc(s, if round % 2 == 0 { 8 } else { 64 }).unwrap())
+                .collect();
+            for a in addrs {
+                g.free(a).unwrap();
+            }
+        }
+        let s = g.stats();
+        assert_eq!(s.live_bytes, 0);
+        assert_eq!(s.free_blocks, 1, "full coalescing after churn");
+        assert_eq!(s.allocs, 400);
+        assert_eq!(s.frees, 400);
     }
 
     #[test]

@@ -25,6 +25,9 @@ pub mod loader;
 pub mod memory;
 
 pub use device::{Arch, DeviceDesc};
-pub use launch::{launch_kernel, Bindings, LaunchConfig, LaunchStats, RtFn};
+pub use launch::{
+    launch_kernel, launch_kernel_batch, BatchKernelSpec, Bindings, LaunchConfig, LaunchStats,
+    RtFn,
+};
 pub use loader::LoadedModule;
-pub use memory::{GlobalMemory, SharedMemory};
+pub use memory::{GlobalMemory, MemStats, SharedMemory};

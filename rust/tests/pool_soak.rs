@@ -1,0 +1,121 @@
+//! Long-haul pool soak: 1,000 launches over a 4-device mixed pool with a
+//! bounded queue, a small image-cache budget and the reclaiming device
+//! allocator. Asserts the three steady-state properties the PR-2
+//! overhaul exists for:
+//!
+//! * **bounded memory** — the submission queue never exceeds its cap;
+//! * **no allocator leak** — per-device `allocated()` returns to the
+//!   same steady state after 1,000 launches as after the warmup wave
+//!   (the old bump allocator grew monotonically);
+//! * **cache eviction under budget** — one-off kernel modules cycle
+//!   through the budgeted cache, visibly evicting in the
+//!   `PoolCoordinator` report instead of accumulating forever.
+
+use omprt::coordinator::PoolCoordinator;
+use omprt::ir::passes::OptLevel;
+use omprt::sched::workload::{saxpy_request, scale_request, scale_request_by};
+use omprt::sched::{bytes_to_f32, Affinity, PoolConfig};
+
+const TOTAL: usize = 1000;
+const WARMUP: usize = 200;
+const QUEUE_CAP: usize = 64;
+
+/// Build the i-th soak request: mostly the two cache-friendly workload
+/// kernels, with an occasional one-off module (a distinct scale factor →
+/// distinct image-cache key) to exercise eviction under the byte budget.
+fn soak_request(i: usize, elems: usize) -> (omprt::sched::OffloadRequest, Vec<f32>) {
+    let data: Vec<f32> = (0..elems).map(|k| ((k + i) % 83) as f32).collect();
+    if i % 50 == 7 {
+        // One-off image: factor varies per occurrence.
+        scale_request_by(3.0 + (i / 50) as f32, &data, Affinity::any(), OptLevel::O2)
+    } else if i % 2 == 0 {
+        scale_request(&data, Affinity::any(), OptLevel::O2)
+    } else {
+        let y: Vec<f32> = (0..elems).map(|k| (k * 3 % 59) as f32).collect();
+        saxpy_request(0.5, &data, &y, Affinity::any(), OptLevel::O2)
+    }
+}
+
+#[test]
+fn thousand_launch_soak_is_bounded_and_leak_free() {
+    // Cache budget of 1 byte: each device cache holds exactly one image
+    // (the just-inserted one), so every module change evicts — the
+    // harshest steady-state shape for the allocator and cache.
+    let cfg = PoolConfig::mixed4()
+        .with_queue_cap(QUEUE_CAP)
+        .with_batch_max(16)
+        .with_cache_budget(1);
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let run_wave = |lo: usize, hi: usize| {
+        let mut handles = Vec::with_capacity(hi - lo);
+        for i in lo..hi {
+            let (req, want) = soak_request(i, 192);
+            handles.push((pc.submit(req).unwrap(), want));
+        }
+        for (h, want) in handles {
+            let resp = h.wait().unwrap();
+            assert_eq!(
+                bytes_to_f32(resp.buffers[0].as_ref().unwrap()),
+                want,
+                "soak result must match the host reference"
+            );
+        }
+    };
+
+    // Warmup wave, then record the steady-state device footprint.
+    run_wave(0, WARMUP);
+    pc.pool.quiesce();
+    let warm = pc.metrics();
+    let warm_mem: Vec<u64> = warm.devices.iter().map(|d| d.mem.live_bytes).collect();
+
+    // The long haul.
+    run_wave(WARMUP, TOTAL);
+    pc.pool.quiesce();
+
+    let m = pc.metrics();
+    assert_eq!(m.submitted, TOTAL as u64);
+    assert_eq!(m.completed, TOTAL as u64);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.queue_depth, 0);
+
+    // Bounded queue: the cap held for the whole soak.
+    assert!(m.queue_cap == QUEUE_CAP);
+    assert!(
+        m.peak_queue_depth <= QUEUE_CAP,
+        "queue must stay bounded: peak {} > cap {}",
+        m.peak_queue_depth,
+        QUEUE_CAP
+    );
+
+    // No allocator leak: request buffers were all freed, so live device
+    // memory equals the warmup steady state (only cached-image globals
+    // remain, and the budget pins each cache at one image).
+    for (d, warm_live) in m.devices.iter().zip(&warm_mem) {
+        assert_eq!(
+            d.mem.live_bytes, *warm_live,
+            "device {} leaks: {} live bytes after soak vs {} after warmup \
+             ({} allocs / {} frees)",
+            d.id, d.mem.live_bytes, warm_live, d.mem.allocs, d.mem.frees
+        );
+        assert!(d.mem.frees > 0, "device {} never freed anything", d.id);
+    }
+
+    // Evictions happened and are visible in the coordinator report.
+    let cache = m.cache();
+    assert!(
+        cache.evictions > 0,
+        "budgeted cache must evict one-off images: {cache:?}"
+    );
+    let report = pc.format_report();
+    assert!(report.contains("evictions"), "report must surface evictions:\n{report}");
+    assert!(report.contains("peak"), "report must surface peak queue depth:\n{report}");
+
+    // The cache-friendly majority still hits despite the tiny budget:
+    // the two workload images alternate, so hits come from batching and
+    // same-image runs between module switches.
+    assert!(
+        cache.hits + cache.misses == TOTAL as u64,
+        "per-launch cache accounting must add up: {cache:?}"
+    );
+}

@@ -1,12 +1,15 @@
 //! Device-pool scheduler integration tests: concurrent mixed-arch,
 //! mixed-runtime offload traffic with results verified against ground
-//! truth, affinity constraints, and kernel-image cache accounting.
+//! truth, affinity constraints, kernel-image cache accounting, launch
+//! batching, cross-device sharding and queue backpressure.
 
 use omprt::coordinator::PoolCoordinator;
 use omprt::devrt::RuntimeKind;
 use omprt::ir::passes::OptLevel;
-use omprt::sched::workload::{saxpy_request, scale_request};
-use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig};
+use omprt::sched::workload::{
+    saxpy_request, scale_request, sharded_saxpy_request, sharded_scale_request,
+};
+use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig, TrySubmitError};
 use omprt::sim::Arch;
 
 const CLIENTS: usize = 8;
@@ -196,6 +199,232 @@ fn failed_request_reports_error_and_pool_survives() {
     let resp = pool.submit(req).unwrap().wait().unwrap();
     assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
     assert_eq!(pool.metrics().completed, 1);
+}
+
+/// Small same-image requests queued behind a long-running launch are
+/// coalesced into multi-job batches — and every batched result still
+/// matches the host reference.
+#[test]
+fn batching_coalesces_queued_small_launches() {
+    let pool = DevicePool::new(
+        &PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64).with_batch_max(8),
+    )
+    .unwrap();
+    // A long launch occupies the single worker while the small requests
+    // pile up behind it.
+    let big: Vec<f32> = (0..200_000).map(|i| (i % 101) as f32).collect();
+    let (req, big_want) = scale_request(&big, Affinity::any(), OptLevel::O2);
+    let big_handle = pool.submit(req).unwrap();
+    let small: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let mut handles = vec![];
+    for _ in 0..24 {
+        let (req, want) = scale_request(&small, Affinity::any(), OptLevel::O2);
+        handles.push((pool.submit(req).unwrap(), want));
+    }
+    let resp = big_handle.wait().unwrap();
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), big_want);
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let m = pool.metrics();
+    assert_eq!(m.completed, 25);
+    assert_eq!(m.failed, 0);
+    let d = &m.devices[0];
+    assert!(
+        d.max_batch >= 2,
+        "queued same-image requests must coalesce (max batch {})",
+        d.max_batch
+    );
+    assert!(d.max_batch <= 8, "batch_max must bound coalescing (max batch {})", d.max_batch);
+    assert!(d.batched_jobs >= 2);
+    assert!(d.batches < 25, "batching must reduce queue pops ({} pops)", d.batches);
+    // Per-job cache accounting survives batching.
+    let c = m.cache();
+    assert_eq!(c.hits + c.misses, 25);
+    assert_eq!(c.misses, 1, "one module, one device: exactly one prepare");
+}
+
+/// A large request with a ShardSpec splits across the uniform pool's
+/// devices and the stitched result is bit-identical to the host
+/// reference; the per-shard work is visible in the metrics.
+#[test]
+fn sharded_request_splits_and_stitches() {
+    let pool = DevicePool::new(
+        &PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4).with_shard_min_trips(1000),
+    )
+    .unwrap();
+    let n = 64_000;
+    let data: Vec<f32> = (0..n).map(|i| ((i * 7) % 997) as f32 * 0.5).collect();
+    let (req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(resp.shards, 4, "4 idle uniform devices must give 4 shards");
+    assert_eq!(resp.arch, Arch::Nvptx64);
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    let m = pool.metrics();
+    assert_eq!(m.sharded_requests, 1);
+    assert_eq!(m.shard_jobs, 4);
+    assert_eq!(m.submitted, 4, "shard jobs count individually");
+    assert_eq!(m.completed, 4);
+    // Multi-buffer sharding: saxpy partitions all three buffers.
+    let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let y: Vec<f32> = (0..n).map(|i| (i % 31) as f32).collect();
+    let (req, want) = sharded_saxpy_request(0.25, &x, &y, Affinity::any(), OptLevel::O2);
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(resp.shards, 4);
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    // To-mapped inputs still return no post-state.
+    assert!(resp.buffers[1].is_none());
+    assert!(resp.buffers[2].is_none());
+}
+
+/// Below `shard_min_trips` per shard, a sharded request falls back to a
+/// single device (shard overhead would dominate).
+#[test]
+fn sharding_falls_back_below_min_trips() {
+    let pool = DevicePool::new(
+        &PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4).with_shard_min_trips(4096),
+    )
+    .unwrap();
+    let data: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+    let (req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(resp.shards, 1, "small request must not shard");
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    let m = pool.metrics();
+    assert_eq!(m.sharded_requests, 0);
+    assert_eq!(m.submitted, 1);
+}
+
+/// Shards never cross architectures: on the mixed pool a shardable
+/// request splits over one arch's devices only.
+#[test]
+fn sharding_stays_on_one_architecture() {
+    let pool =
+        DevicePool::new(&PoolConfig::mixed4().with_shard_min_trips(1000)).unwrap();
+    let n = 64_000;
+    let data: Vec<f32> = (0..n).map(|i| (i % 41) as f32).collect();
+    let (req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(resp.shards, 2, "mixed4 has 2 devices per arch");
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    // Pinning the arch still shards within it.
+    let (req, want) = sharded_scale_request(&data, Affinity::on_arch(Arch::Amdgcn), OptLevel::O2);
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(resp.shards, 2);
+    assert_eq!(resp.arch, Arch::Amdgcn);
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+}
+
+/// queue_cap bounds the queue: a blocked worker lets the queue fill to
+/// exactly the cap, `try_submit` then reports Full (handing the request
+/// back), and blocking `submit` waits for space instead of growing the
+/// queue. Memory stays bounded: peak depth never exceeds the cap.
+#[test]
+fn backpressure_bounds_the_queue() {
+    let pool = DevicePool::new(
+        &PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)
+            .with_queue_cap(4)
+            .with_batch_max(1),
+    )
+    .unwrap();
+    // Deterministically occupy the single worker with a gated task.
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let task = pool
+        .run_on(Affinity::any(), move |_lease| {
+            let _ = gate_rx.recv();
+        })
+        .unwrap();
+    // Wait until the worker has actually claimed the task.
+    while pool.metrics().queue_depth > 0 || pool.metrics().devices[0].inflight == 0 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let data = vec![1.0f32; 16];
+    // Fill the queue to the cap without blocking.
+    let mut handles = vec![];
+    for _ in 0..4 {
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        match pool.try_submit(req) {
+            Ok(h) => handles.push((h, want)),
+            Err(e) => panic!("queue below cap must accept: {e:?}"),
+        }
+    }
+    assert_eq!(pool.metrics().queue_depth, 4);
+    // At capacity: try_submit must hand the request back.
+    let (req, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
+    let returned = match pool.try_submit(req) {
+        Err(TrySubmitError::Full(r)) => r,
+        other => panic!("expected Full, got {:?}", other.map(|_| "Ok(handle)")),
+    };
+    // A blocking submit parks until the gate opens and space drains.
+    let all_done = std::thread::scope(|scope| {
+        let pool = &pool;
+        let blocker = scope.spawn(move || {
+            let h = pool.submit(returned).unwrap(); // blocks until space
+            h.wait().unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!blocker.is_finished(), "submit must block while the queue is full");
+        gate_tx.send(()).unwrap();
+        blocker.join().unwrap()
+    });
+    assert_eq!(bytes_to_f32(all_done.buffers[0].as_ref().unwrap()), vec![2.0f32; 16]);
+    task.wait().unwrap();
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let m = pool.metrics();
+    assert!(
+        m.peak_queue_depth <= 4,
+        "queue depth must never exceed the cap (peak {})",
+        m.peak_queue_depth
+    );
+    assert_eq!(m.failed, 0);
+}
+
+/// Device leases run arbitrary closures on pool workers with exclusive
+/// device access, scheduled and counted like any job.
+#[test]
+fn device_leases_run_closures_with_affinity() {
+    let pool = DevicePool::new(&PoolConfig::mixed4()).unwrap();
+    let handle = pool
+        .run_on(Affinity::on_arch(Arch::Amdgcn), |lease| {
+            (lease.spec.arch, lease.device.arch())
+        })
+        .unwrap();
+    let (spec_arch, dev_arch) = handle.wait().unwrap();
+    assert_eq!(spec_arch, Arch::Amdgcn);
+    assert_eq!(dev_arch, Arch::Amdgcn);
+    // The worker counts the task completed after the closure returns;
+    // quiesce before reading the counter.
+    pool.quiesce();
+    assert_eq!(pool.metrics().completed, 1);
+    // Unroutable affinity is rejected at submit time.
+    let pool = DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64))
+        .unwrap();
+    assert!(pool.run_on(Affinity::on_arch(Arch::Amdgcn), |_| ()).is_err());
+}
+
+/// A panicking lease closure must not kill the device's worker: the
+/// task's handle errors and the device keeps serving later requests.
+#[test]
+fn panicking_lease_does_not_kill_the_worker() {
+    let pool = DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64))
+        .unwrap();
+    let task = pool
+        .run_on(Affinity::any(), |_lease| -> () { panic!("lease gone wrong") })
+        .unwrap();
+    assert!(task.wait().is_err(), "panicked task must resolve to an error");
+    // The single worker survived: an ordinary request still completes.
+    let data = vec![1.5f32; 8];
+    let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    pool.quiesce();
+    let m = pool.metrics();
+    assert_eq!(m.failed, 1, "the panicked task counts as failed");
+    assert_eq!(m.completed, 1);
 }
 
 /// The PoolCoordinator merges per-device profiles into region totals that
