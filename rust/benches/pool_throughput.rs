@@ -3,24 +3,34 @@
 //! Scenarios:
 //! 1. **scaling** — 1-device vs 4-device mixed pool, cold vs warm image
 //!    cache (the PR-1 baseline numbers, kept for continuity);
-//! 2. **batched small launches** — warm 4-device pool, 256 identical
-//!    small `scale` requests: synchronous per-request submission (one
-//!    round trip per launch) vs async `batch_max=1` vs async
-//!    `batch_max=32`; the batched case must beat the per-request baseline
-//!    by ≥ 2x (batching fuses same-image launches into one grid, so small
-//!    launches stop paying per-launch setup and idle SMs);
+//! 2. **batched small launches** — warm 4-device pool, identical small
+//!    `scale` requests: synchronous per-request submission (one round
+//!    trip per launch) vs async `batch_max=1` vs async `batch_max=32`;
+//!    the batched case must beat the per-request baseline by ≥ 2x;
 //! 3. **sharded large launch** — one 256K-element `scale` request on a
 //!    single device vs the same request sharded across a 4-device
-//!    uniform pool.
+//!    uniform pool;
+//! 4. **adaptive vs static** — 8 concurrent clients on the mixed
+//!    4-device pool: occupancy-driven batch sizing must match or beat
+//!    the static `batch_max=32` configuration;
+//! 5. **fairness** — 8 equal-weight clients with identical fixed
+//!    backlogs on the mixed pool, progress sampled when the first
+//!    client finishes: no client's completion share may fall below half
+//!    its fair share (1/8).
+//!
+//! Results are also written as JSON to `BENCH_pool.json` (override the
+//! path with the `BENCH_POOL_JSON` env var) so CI can archive them.
+//! Pass `--smoke` for a reduced-iteration CI run.
 
 use omprt::devrt::RuntimeKind;
 use omprt::ir::passes::OptLevel;
-use omprt::sched::workload::{saxpy_request, scale_request, sharded_scale_request};
+use omprt::sched::workload::{
+    saxpy_request, scale_request, scale_request_by, sharded_scale_request,
+};
 use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig};
 use omprt::sim::Arch;
 use std::time::Instant;
 
-const BATCH: usize = 256;
 const ELEMS: usize = 256;
 
 /// Submit one mixed batch asynchronously and wait for every result;
@@ -47,10 +57,10 @@ fn run_batch(pool: &DevicePool, batch: usize) -> f64 {
     batch as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn bench_pool(name: &str, config: &PoolConfig) -> (f64, f64) {
+fn bench_pool(name: &str, config: &PoolConfig, batch: usize) -> (f64, f64) {
     let pool = DevicePool::new(config).unwrap();
-    let cold = run_batch(&pool, BATCH);
-    let warm = run_batch(&pool, BATCH);
+    let cold = run_batch(&pool, batch);
+    let warm = run_batch(&pool, batch);
     let m = pool.metrics();
     let cache = m.cache();
     println!(
@@ -89,25 +99,26 @@ fn run_small_scales(pool: &DevicePool, count: usize, sync: bool) -> f64 {
     count as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn batched_small_launch_scenario() {
-    println!("\n--- batched small launches: {BATCH} x scale({ELEMS}) on a 4-device pool ---");
+/// Returns (per_request, async_unbatched, batched32).
+fn batched_small_launch_scenario(batch: usize) -> (f64, f64, f64) {
+    println!("\n--- batched small launches: {batch} x scale({ELEMS}) on a 4-device pool ---");
     // Per-request baseline: batching off, one request in flight at a time.
     let per_request = {
         let pool = DevicePool::new(&PoolConfig::mixed4().with_batch_max(1)).unwrap();
-        run_small_scales(&pool, BATCH, false); // warm the image caches
-        run_small_scales(&pool, BATCH, true)
+        run_small_scales(&pool, batch, false); // warm the image caches
+        run_small_scales(&pool, batch, true)
     };
     // Async pipeline, still unbatched.
     let async_unbatched = {
         let pool = DevicePool::new(&PoolConfig::mixed4().with_batch_max(1)).unwrap();
-        run_small_scales(&pool, BATCH, false);
-        run_small_scales(&pool, BATCH, false)
+        run_small_scales(&pool, batch, false);
+        run_small_scales(&pool, batch, false)
     };
     // Async + batching: same-image launches fuse into one grid per pop.
     let (batched, batched_jobs, max_batch) = {
         let pool = DevicePool::new(&PoolConfig::mixed4().with_batch_max(32)).unwrap();
-        run_small_scales(&pool, BATCH, false);
-        let rate = run_small_scales(&pool, BATCH, false);
+        run_small_scales(&pool, batch, false);
+        let rate = run_small_scales(&pool, batch, false);
         let m = pool.metrics();
         let max = m.devices.iter().map(|d| d.max_batch).max().unwrap_or(0);
         (rate, m.batched_jobs(), max)
@@ -124,12 +135,13 @@ fn batched_small_launch_scenario() {
         "warm batched throughput must be >= 2x the per-request baseline \
          (got {batched:.1} vs {per_request:.1} launches/s)"
     );
+    (per_request, async_unbatched, batched)
 }
 
-fn sharded_large_launch_scenario() {
-    const N: usize = 256 * 1024;
-    println!("\n--- sharded large launch: scale({N}) ---");
-    let data: Vec<f32> = (0..N).map(|k| (k % 1013) as f32).collect();
+/// Returns (t_single_ms, t_quad_ms, shards).
+fn sharded_large_launch_scenario(n: usize) -> (f64, f64, usize) {
+    println!("\n--- sharded large launch: scale({n}) ---");
+    let data: Vec<f32> = (0..n).map(|k| (k % 1013) as f32).collect();
 
     let single = DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64))
         .unwrap();
@@ -165,17 +177,174 @@ fn sharded_large_launch_scenario() {
         t_quad * 1e3,
         t_single / t_quad
     );
+    (t_single * 1e3, t_quad * 1e3, resp.shards)
+}
+
+/// 8 concurrent client threads, each submitting `per_client` mixed small
+/// requests asynchronously; returns aggregate launches/sec.
+fn run_multi_client(pool: &DevicePool, per_client: usize) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for client in 0..8 {
+            let pool = &pool;
+            scope.spawn(move || {
+                let mut handles = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let (mut req, want) = if i % 2 == 0 {
+                        let data: Vec<f32> = (0..ELEMS).map(|k| (k + i) as f32).collect();
+                        scale_request(&data, Affinity::any(), OptLevel::O2)
+                    } else {
+                        let x: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
+                        let y: Vec<f32> = (0..ELEMS).map(|k| (k + client) as f32).collect();
+                        saxpy_request(0.5, &x, &y, Affinity::any(), OptLevel::O2)
+                    };
+                    req.client = format!("client{client}");
+                    handles.push((pool.submit(req).unwrap(), want));
+                }
+                for (h, want) in handles {
+                    let resp = h.wait().unwrap();
+                    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+                }
+            });
+        }
+    });
+    (8 * per_client) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Adaptive occupancy-driven batching vs the static `batch_max=32`
+/// configuration under 8-client contention. Returns (static, adaptive)
+/// launches/sec.
+fn adaptive_vs_static_scenario(per_client: usize) -> (f64, f64) {
+    println!("\n--- adaptive vs static: 8 clients x {per_client} requests, mixed 4-device pool ---");
+    let static_rate = {
+        let pool = DevicePool::new(
+            &PoolConfig::mixed4().with_batch_max(32).with_adaptive(false),
+        )
+        .unwrap();
+        run_multi_client(&pool, per_client); // warm
+        run_multi_client(&pool, per_client)
+    };
+    let (adaptive_rate, stats) = {
+        let pool = DevicePool::new(&PoolConfig::mixed4().with_batch_max(32)).unwrap();
+        run_multi_client(&pool, per_client);
+        let rate = run_multi_client(&pool, per_client);
+        (rate, pool.metrics().adaptive_stats)
+    };
+    println!(
+        "static batch_max=32   {static_rate:>8.1} launches/s\n\
+         adaptive (cap 32)     {adaptive_rate:>8.1} launches/s ({:.2}x) | \
+         {} decisions, avg decided {:.1}, fill efficiency {:.2}",
+        adaptive_rate / static_rate,
+        stats.decisions,
+        stats.avg_decided(),
+        stats.efficiency
+    );
+    assert!(
+        adaptive_rate >= 0.85 * static_rate,
+        "adaptive mode must match or beat static batching within noise \
+         (got {adaptive_rate:.1} vs {static_rate:.1} launches/s)"
+    );
+    (static_rate, adaptive_rate)
+}
+
+/// 8 equal-weight clients, each with an identical fixed backlog
+/// (distinct kernel images, so no cross-client fusing) submitted upfront
+/// from one thread — removing OS thread scheduling from the measurement.
+/// Per-client progress is sampled from the pool's own completion
+/// counters at the moment the *first* client finishes its backlog: under
+/// fair DRR every still-backlogged client has comparable progress at
+/// that instant, while a serve-one-lane-to-exhaustion regression would
+/// show near-zero shares. Returns each client's share of the sampled
+/// completions; no share may fall below half the fair 1/8.
+fn fairness_scenario(per_client: usize) -> Vec<f64> {
+    println!("\n--- fairness: 8 clients x {per_client} requests, mixed 4-device pool ---");
+    let pool = DevicePool::new(&PoolConfig::mixed4()).unwrap();
+    let data: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
+    // Warm each client's image so the sampled window measures
+    // scheduling, not prepare time.
+    for client in 0..8 {
+        let factor = 1.5 + client as f32;
+        let (mut req, want) = scale_request_by(factor, &data, Affinity::any(), OptLevel::O2);
+        req.client = format!("client{client}");
+        let resp = pool.submit(req).unwrap().wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    pool.quiesce();
+    // Submit all backlogs round-robin from this one thread.
+    let mut handles: Vec<Vec<_>> = (0..8).map(|_| vec![]).collect();
+    for _ in 0..per_client {
+        for (client, hs) in handles.iter_mut().enumerate() {
+            let factor = 1.5 + client as f32;
+            let (mut req, want) = scale_request_by(factor, &data, Affinity::any(), OptLevel::O2);
+            req.client = format!("client{client}");
+            hs.push((pool.submit(req).unwrap(), want));
+        }
+    }
+    // Wait for client0's backlog, then sample everyone's progress.
+    for (h, want) in handles.remove(0) {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let m = pool.metrics();
+    // Subtract the one warm-up request each client already completed.
+    let counts: Vec<u64> = (0..8)
+        .map(|client| {
+            let name = format!("client{client}");
+            m.clients
+                .iter()
+                .find(|c| c.client == name)
+                .map_or(0, |c| c.completed)
+                .saturating_sub(1)
+        })
+        .collect();
+    // Drain the rest (and verify every result).
+    for hs in handles {
+        for (h, want) in hs {
+            let resp = h.wait().unwrap();
+            assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+        }
+    }
+    let total: u64 = counts.iter().sum();
+    let shares: Vec<f64> = counts.iter().map(|&c| c as f64 / total.max(1) as f64).collect();
+    let min_share = shares.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "completions at first-finisher: {counts:?} | shares: {} | min {:.3} (fair 0.125)",
+        shares.iter().map(|s| format!("{s:.3}")).collect::<Vec<_>>().join(" "),
+        min_share
+    );
+    assert!(
+        min_share >= 0.5 / 8.0,
+        "no client's share may fall below half its fair share (min {min_share:.3})"
+    );
+    shares
+}
+
+/// Minimal hand-rolled JSON (the offline crate set has no serde).
+fn write_bench_json(path: &str, json: &str) {
+    match std::fs::write(path, json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncannot write {path}: {e}"),
+    }
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // 128 floor: the hit-rate assert below tolerates up to 8 cold misses
+    // (2 modules x 4 devices), which must stay under 10% of the batch.
+    let batch = if smoke { 128 } else { 256 };
+    let shard_n = if smoke { 64 * 1024 } else { 256 * 1024 };
+    let per_client = if smoke { 16 } else { 64 };
+
     println!(
-        "\n=== pool throughput: {BATCH} requests/batch, {ELEMS} f32 elems, mixed scale/saxpy ===\n"
+        "\n=== pool throughput: {batch} requests/batch, {ELEMS} f32 elems, mixed scale/saxpy{} ===\n",
+        if smoke { " [smoke]" } else { "" }
     );
     let (cold1, warm1) = bench_pool(
         "1 device (portable)",
         &PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64),
+        batch,
     );
-    let (cold4, warm4) = bench_pool("4 devices (mixed)", &PoolConfig::mixed4());
+    let (cold4, warm4) = bench_pool("4 devices (mixed)", &PoolConfig::mixed4(), batch);
     println!(
         "\n4-device vs 1-device: cold {:.2}x, warm {:.2}x",
         cold4 / cold1,
@@ -185,7 +354,7 @@ fn main() {
     // The repeated-kernel workload must be cache-friendly: two modules
     // over the pool's devices.
     let pool = DevicePool::new(&PoolConfig::mixed4()).unwrap();
-    run_batch(&pool, BATCH);
+    run_batch(&pool, batch);
     let cache = pool.metrics().cache();
     assert!(
         cache.hit_rate() > 0.9,
@@ -197,6 +366,28 @@ fn main() {
         cache.hit_rate() * 100.0
     );
 
-    batched_small_launch_scenario();
-    sharded_large_launch_scenario();
+    let (per_request, async_unbatched, batched) = batched_small_launch_scenario(batch);
+    let (t_single_ms, t_quad_ms, shards) = sharded_large_launch_scenario(shard_n);
+    let (static_rate, adaptive_rate) = adaptive_vs_static_scenario(per_client);
+    let shares = fairness_scenario(4 * per_client);
+
+    let min_share = shares.iter().cloned().fold(f64::INFINITY, f64::min);
+    let json = format!(
+        "{{\n  \"bench\": \"pool_throughput\",\n  \"smoke\": {smoke},\n  \
+         \"scaling\": {{\"cold_1dev\": {cold1:.1}, \"warm_1dev\": {warm1:.1}, \
+         \"cold_4dev\": {cold4:.1}, \"warm_4dev\": {warm4:.1}}},\n  \
+         \"batched\": {{\"per_request\": {per_request:.1}, \
+         \"async_unbatched\": {async_unbatched:.1}, \"batched32\": {batched:.1}}},\n  \
+         \"sharded\": {{\"t_single_ms\": {t_single_ms:.2}, \"t_quad_ms\": {t_quad_ms:.2}, \
+         \"shards\": {shards}}},\n  \
+         \"adaptive\": {{\"static32\": {static_rate:.1}, \"adaptive\": {adaptive_rate:.1}, \
+         \"ratio\": {:.3}}},\n  \
+         \"fairness\": {{\"clients\": 8, \"fair_share\": 0.125, \"min_share\": {min_share:.4}, \
+         \"shares\": [{}]}}\n}}\n",
+        adaptive_rate / static_rate,
+        shares.iter().map(|s| format!("{s:.4}")).collect::<Vec<_>>().join(", "),
+    );
+    let path =
+        std::env::var("BENCH_POOL_JSON").unwrap_or_else(|_| "BENCH_pool.json".to_string());
+    write_bench_json(&path, &json);
 }

@@ -6,9 +6,10 @@
 //! omprt table1      [--arch A] [--scale small|paper]
 //! omprt conformance
 //! omprt code-compare
-//! omprt bench NAME  [--arch A] [--runtime legacy|portable] [--scale S] [--pool]
-//! omprt pool        [--config FILE] [--requests N] [--elems N]
+//! omprt bench NAME  [--arch A] [--runtime legacy|portable] [--scale S] [--pool] [--client C]
+//! omprt pool        [--config FILE] [--requests N] [--elems N] [--client C]
 //!                   [--batch N] [--queue-cap N] [--cache-budget BYTES] [--shard-elems N]
+//!                   [--adaptive | --no-adaptive]
 //! omprt info
 //! ```
 
@@ -25,7 +26,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence-only switches).
-const BOOL_FLAGS: &[&str] = &["pool"];
+const BOOL_FLAGS: &[&str] = &["pool", "adaptive", "no-adaptive"];
 
 fn parse_args(argv: &[String]) -> Args {
     let mut positional = vec![];
@@ -94,7 +95,19 @@ impl Args {
         if let Some(b) = self.uint("cache-budget") {
             cfg.cache_budget_bytes = b;
         }
+        // `--no-adaptive` wins when both switches are passed.
+        if self.has("adaptive") {
+            cfg.adaptive = true;
+        }
+        if self.has("no-adaptive") {
+            cfg.adaptive = false;
+        }
         Ok(cfg)
+    }
+
+    /// Client tag for pool submissions (`--client NAME`; "" = default).
+    fn client(&self) -> String {
+        self.flags.get("client").cloned().unwrap_or_default()
     }
 }
 
@@ -210,7 +223,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(256usize);
             let shard_elems = args.uint("shard-elems").map(|n| n as usize);
-            run_pool_demo(&pool_cfg, requests, elems, shard_elems)
+            run_pool_demo(&pool_cfg, requests, elems, shard_elems, &args.client())
         }
         "info" => {
             for arch in Arch::all() {
@@ -267,7 +280,8 @@ fn run_bench_pool(name: &str, args: &Args) -> Result<(), crate::util::Error> {
     );
     let scale = args.scale();
     let name_owned = name.to_string();
-    let handle = pc.run_on(affinity, move |lease| {
+    let client = args.client();
+    let handle = pc.pool.run_on_as(affinity, &client, move |lease| {
         let bench = by_name(&name_owned, scale).expect("name validated before submit");
         let c = Coordinator::on_device(lease.device.clone());
         let result = bench.run(&c);
@@ -303,6 +317,7 @@ fn run_pool_demo(
     requests: usize,
     elems: usize,
     shard_elems: Option<usize>,
+    client: &str,
 ) -> Result<(), crate::util::Error> {
     use crate::sched::workload::{saxpy_request, scale_request};
     use crate::sched::{bytes_to_f32, Affinity};
@@ -325,7 +340,7 @@ fn run_pool_demo(
     let mut handles = Vec::with_capacity(requests);
     for r in 0..requests {
         let affinity = affinities[r % affinities.len()];
-        let (req, want) = if r % 2 == 0 {
+        let (mut req, want) = if r % 2 == 0 {
             let data: Vec<f32> = (0..elems).map(|i| (i + r) as f32).collect();
             scale_request(&data, affinity, opt)
         } else {
@@ -333,6 +348,7 @@ fn run_pool_demo(
             let y: Vec<f32> = (0..elems).map(|i| (i + r) as f32).collect();
             saxpy_request(0.5, &x, &y, affinity, opt)
         };
+        req.client = client.to_string();
         handles.push((pc.submit(req)?, want));
     }
     let mut bad = 0usize;
@@ -346,7 +362,8 @@ fn run_pool_demo(
     if let Some(n) = shard_elems {
         use crate::sched::workload::sharded_scale_request;
         let data: Vec<f32> = (0..n).map(|i| (i % 97) as f32).collect();
-        let (req, want) = sharded_scale_request(&data, Affinity::any(), opt);
+        let (mut req, want) = sharded_scale_request(&data, Affinity::any(), opt);
+        req.client = client.to_string();
         let resp = pc.submit(req)?.wait()?;
         let got = bytes_to_f32(resp.buffers[0].as_ref().expect("output buffer"));
         println!(
@@ -387,7 +404,8 @@ fn print_help() {
          \x20 info          device + artifact info\n\
          \n\
          FLAGS: --arch nvptx64|amdgcn  --scale small|paper  --reps N  --runtime legacy|portable\n\
-         \x20      pool: --config FILE ([pool] table)  --requests N  --elems N\n\
-         \x20            --batch N  --queue-cap N  --cache-budget BYTES  --shard-elems N"
+         \x20      pool: --config FILE ([pool] table)  --requests N  --elems N  --client NAME\n\
+         \x20            --batch N  --queue-cap N  --cache-budget BYTES  --shard-elems N\n\
+         \x20            --adaptive|--no-adaptive (occupancy-driven batch/shard sizing)"
     );
 }

@@ -3,8 +3,11 @@
 //! The offline crate set has no `serde`/`toml`, so this is a small,
 //! dependency-free parser for the subset we use: sections, string /
 //! integer / float / boolean values, and flat arrays of strings or
-//! integers. Used by benchmark run configs, the CLI defaults, and the
-//! AOT artifact manifest written by `python/compile/aot.py`.
+//! integers. Used by benchmark run configs, the CLI defaults, the
+//! AOT artifact manifest written by `python/compile/aot.py`, and the
+//! `[pool]` scheduler table (devices, batching/sharding knobs, and the
+//! `adaptive` / `fairness` / `client_weights` keys — see
+//! [`crate::sched::PoolConfig::from_config`]).
 //!
 //! ```text
 //! # comment

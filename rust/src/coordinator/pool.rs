@@ -68,8 +68,9 @@ impl PoolCoordinator {
             .collect()
     }
 
-    /// Render the full status report (device table, cache, batching,
-    /// sharding, allocator, regions).
+    /// Render the full status report (device table with occupancy,
+    /// cache, batching, adaptive-controller state, sharding, allocator,
+    /// per-client fairness table, regions).
     pub fn format_report(&self) -> String {
         let m = self.metrics();
         let cache = m.cache();
@@ -101,20 +102,32 @@ impl PoolCoordinator {
             m.shard_jobs,
             m.device_live_bytes()
         ));
+        if m.adaptive {
+            let a = &m.adaptive_stats;
+            out.push_str(&format!(
+                "adaptive: on | {} decisions, avg decided batch {:.1} | fused-fill efficiency {:.2}\n",
+                a.decisions,
+                a.avg_decided(),
+                a.efficiency
+            ));
+        } else {
+            out.push_str("adaptive: off (static batch_max / shard fan-out)\n");
+        }
         out.push_str(
-            "dev | runtime  | arch    | done  | maxbat | images | hits/miss/evict | mem live/peak\n",
+            "dev | runtime  | arch    | done  | maxbat | occ%  | images | hits/miss/evict | mem live/peak\n",
         );
         out.push_str(
-            "----+----------+---------+-------+--------+--------+-----------------+--------------\n",
+            "----+----------+---------+-------+--------+-------+--------+-----------------+--------------\n",
         );
         for d in &m.devices {
             out.push_str(&format!(
-                "{:>3} | {:<8} | {:<7} | {:>5} | {:>6} | {:>6} | {}/{}/{} | {}/{}\n",
+                "{:>3} | {:<8} | {:<7} | {:>5} | {:>6} | {:>5.1} | {:>6} | {}/{}/{} | {}/{}\n",
                 d.id,
                 d.kind.to_string(),
                 d.arch.to_string(),
                 d.completed,
                 d.max_batch,
+                d.occupancy * 100.0,
                 d.cached_images,
                 d.cache.hits,
                 d.cache.misses,
@@ -122,6 +135,29 @@ impl PoolCoordinator {
                 d.mem.live_bytes,
                 d.mem.peak_bytes
             ));
+        }
+        if !m.clients.is_empty() {
+            let uptime = m.uptime.as_secs_f64().max(1e-9);
+            out.push_str(
+                "client           | weight | done  | fail | share% | req/s   | avg wait (us) | avg sojourn (us)\n",
+            );
+            out.push_str(
+                "-----------------+--------+-------+------+--------+---------+---------------+-----------------\n",
+            );
+            for c in &m.clients {
+                let name = if c.client.is_empty() { "(default)" } else { &c.client };
+                out.push_str(&format!(
+                    "{:<17}| {:>6.2} | {:>5} | {:>4} | {:>5.1} | {:>7.1} | {:>13.3} | {:>15.3}\n",
+                    name,
+                    c.weight,
+                    c.completed,
+                    c.failed,
+                    m.client_share(&c.client) * 100.0,
+                    c.completed as f64 / uptime,
+                    c.queue_wait.avg_us(),
+                    c.latency.avg_us()
+                ));
+            }
         }
         let regions = self.region_report();
         if !regions.is_empty() {
@@ -174,5 +210,13 @@ mod tests {
         let text = pc.format_report();
         assert!(text.contains("hit rate"), "{text}");
         assert!(text.contains("scale"), "{text}");
+        // The fairness table lists the default client with every request.
+        assert!(text.contains("(default)"), "{text}");
+        let def = m.clients.iter().find(|c| c.client.is_empty()).expect("default client row");
+        assert_eq!(def.completed, 8);
+        assert!((m.client_share("") - 1.0).abs() < 1e-12);
+        // Occupancy and adaptive-controller state surface in the report.
+        assert!(text.contains("occ%"), "{text}");
+        assert!(text.contains("adaptive:"), "{text}");
     }
 }

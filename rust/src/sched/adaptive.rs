@@ -1,0 +1,279 @@
+//! Occupancy-driven adaptive scheduling: pick the effective batch size
+//! and shard fan-out per queue visit from live signals instead of static
+//! `[pool]` knobs.
+//!
+//! The paper's thesis is "portable without a performance penalty"; for
+//! the device pool that means the scheduler cannot run on fixed tuning
+//! constants — a `batch_max` that wins under a deep queue adds latency
+//! under a shallow one, and a shard fan-out equal to the device count
+//! serializes behind busy devices. This module holds the *policy*:
+//!
+//! * [`decide_batch_max`] — how many same-image jobs a worker should try
+//!   to coalesce on this visit, from queue depth, idle-device count and
+//!   the recent *fused-grid efficiency* (how full past batches actually
+//!   came out relative to what the controller asked for);
+//! * [`decide_shard_fanout`] — how many ways to split a sharded request,
+//!   preferring *idle* devices (which the pool then reserves for the
+//!   split) over the static all-eligible-devices count;
+//! * [`AdaptiveController`] — the tiny mutable state behind those
+//!   decisions: an EWMA of observed batch efficiency plus decision
+//!   counters for the `PoolCoordinator` report.
+//!
+//! Both `decide_*` functions are **pure** (sampled signals in, sizes
+//! out) so the policy is unit-testable without threads or devices.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Signals sampled at one queue visit (under the queue lock, so `depth`
+/// is exact; `idle_devices` is a racy-but-recent atomic sample).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedSignals {
+    /// Jobs currently queued, pool-wide.
+    pub queue_depth: usize,
+    /// Devices with no in-flight work right now (including the sampler).
+    pub idle_devices: usize,
+    /// Total devices in the pool.
+    pub device_count: usize,
+    /// EWMA of observed batch fill: popped jobs / decided limit, in
+    /// `[0, 1]`. 1.0 = every decided slot was filled by a compatible job.
+    pub batch_efficiency: f64,
+}
+
+/// Effective batch limit for one queue visit.
+///
+/// Policy: split the backlog evenly over the idle workers (an idle
+/// worker will pop right behind us, so grabbing the whole queue starves
+/// the parallelism batching is supposed to feed), then shrink by the
+/// observed efficiency — if recent batches came back mostly empty the
+/// queue is key-diverse and a large scan limit only buys O(depth)
+/// compare work. Always within `[1, cap]`; a depth of 0 or 1 degrades
+/// to unbatched pops (lowest latency).
+pub fn decide_batch_max(s: &SchedSignals, cap: usize) -> usize {
+    let cap = cap.max(1);
+    if s.queue_depth <= 1 {
+        return 1;
+    }
+    let share = s.queue_depth.div_ceil(s.idle_devices.max(1));
+    let eff = if s.batch_efficiency.is_finite() {
+        s.batch_efficiency.clamp(0.25, 1.0)
+    } else {
+        1.0
+    };
+    let scaled = ((share as f64) * eff).ceil() as usize;
+    scaled.clamp(1, cap)
+}
+
+/// Shard fan-out for a splittable request.
+///
+/// * `idle_eligible` — idle devices of the chosen architecture (these
+///   are what the pool will reserve);
+/// * `eligible` — all matching devices of that architecture;
+/// * `max_by_elems` — `elems / shard_min_trips`, the most shards that
+///   still give every shard a worthwhile trip count;
+/// * `cap` — hard bound (the queue capacity clamp).
+///
+/// With two or more idle devices the fan-out is the idle count — each
+/// shard lands on a device that can start immediately, so the stitch
+/// finishes in one wave. With fewer than two idle devices the static
+/// fan-out (`eligible`) is used instead: the split still wins once the
+/// busy devices drain, and a fan-out of one would just serialize.
+/// A result `< 2` means "do not shard".
+pub fn decide_shard_fanout(
+    idle_eligible: usize,
+    eligible: usize,
+    max_by_elems: usize,
+    cap: usize,
+) -> usize {
+    let base = if idle_eligible >= 2 { idle_eligible } else { eligible };
+    base.min(max_by_elems).min(cap.max(1))
+}
+
+/// Snapshot of the controller's accumulated state (for reports).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdaptiveStats {
+    /// Queue visits that ran the decision function.
+    pub decisions: u64,
+    /// Sum of decided batch limits (avg = `decided_sum / decisions`).
+    pub decided_sum: u64,
+    /// Current fused-grid efficiency EWMA in `[0, 1]`.
+    pub efficiency: f64,
+}
+
+impl AdaptiveStats {
+    /// Mean decided batch limit (0 when no decisions yet).
+    pub fn avg_decided(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.decided_sum as f64 / self.decisions as f64
+        }
+    }
+}
+
+/// Shared mutable state behind the adaptive policy. All fields are
+/// atomics — workers consult and update it without extra locking.
+pub struct AdaptiveController {
+    /// EWMA of observed batch fill, stored as `f64::to_bits`.
+    efficiency_bits: AtomicU64,
+    decisions: AtomicU64,
+    decided_sum: AtomicU64,
+}
+
+/// EWMA smoothing factor: one observation moves the estimate 20% of the
+/// way — a handful of diverse pops is enough to shrink scan limits, a
+/// handful of full batches restores them.
+const EWMA_ALPHA: f64 = 0.2;
+
+impl Default for AdaptiveController {
+    fn default() -> Self {
+        AdaptiveController::new()
+    }
+}
+
+impl AdaptiveController {
+    /// Fresh controller; efficiency starts optimistic (1.0).
+    pub fn new() -> Self {
+        AdaptiveController {
+            efficiency_bits: AtomicU64::new(1.0f64.to_bits()),
+            decisions: AtomicU64::new(0),
+            decided_sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Current efficiency EWMA.
+    pub fn efficiency(&self) -> f64 {
+        f64::from_bits(self.efficiency_bits.load(Ordering::Relaxed))
+    }
+
+    /// Record the outcome of one decided pop: the worker asked for up to
+    /// `asked` jobs ([`decide_batch_max`]'s answer) and actually popped
+    /// `got`. Counts the decision and, when the pop was batchable
+    /// (`asked > 1`), folds the fill ratio into the efficiency EWMA —
+    /// unbatchable pops carry no signal about key diversity.
+    pub fn record(&self, asked: usize, got: usize) {
+        self.decisions.fetch_add(1, Ordering::Relaxed);
+        self.decided_sum.fetch_add(asked as u64, Ordering::Relaxed);
+        if asked <= 1 {
+            return;
+        }
+        let obs = (got as f64 / asked as f64).clamp(0.0, 1.0);
+        // Racy read-modify-write is fine: the EWMA is a heuristic, and a
+        // lost update just weights a neighbor observation instead.
+        let cur = self.efficiency();
+        let next = cur + EWMA_ALPHA * (obs - cur);
+        self.efficiency_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Counters + current EWMA for the pool report.
+    pub fn stats(&self) -> AdaptiveStats {
+        AdaptiveStats {
+            decisions: self.decisions.load(Ordering::Relaxed),
+            decided_sum: self.decided_sum.load(Ordering::Relaxed),
+            efficiency: self.efficiency(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn signals(depth: usize, idle: usize, eff: f64) -> SchedSignals {
+        SchedSignals {
+            queue_depth: depth,
+            idle_devices: idle,
+            device_count: 4,
+            batch_efficiency: eff,
+        }
+    }
+
+    #[test]
+    fn empty_or_single_queue_never_batches() {
+        assert_eq!(decide_batch_max(&signals(0, 4, 1.0), 32), 1);
+        assert_eq!(decide_batch_max(&signals(1, 0, 1.0), 32), 1);
+    }
+
+    #[test]
+    fn deep_queue_splits_over_idle_devices() {
+        // 64 queued over 4 idle workers: 16 each.
+        assert_eq!(decide_batch_max(&signals(64, 4, 1.0), 32), 16);
+        // Only this worker idle: take up to the cap.
+        assert_eq!(decide_batch_max(&signals(64, 1, 1.0), 32), 32);
+        // Zero sampled idle (racy sample) behaves like one.
+        assert_eq!(decide_batch_max(&signals(64, 0, 1.0), 32), 32);
+    }
+
+    #[test]
+    fn low_efficiency_shrinks_the_scan_limit() {
+        let full = decide_batch_max(&signals(64, 1, 1.0), 32);
+        let diverse = decide_batch_max(&signals(64, 1, 0.25), 32);
+        assert!(diverse < full, "diverse queues must shrink the limit ({diverse} vs {full})");
+        assert!(diverse >= 1);
+        // Efficiency is floored: even 0.0 keeps a quarter of the share.
+        assert_eq!(decide_batch_max(&signals(64, 1, 0.0), 32), 16);
+    }
+
+    #[test]
+    fn decided_limit_is_always_within_bounds() {
+        for depth in [0usize, 1, 2, 5, 17, 1000] {
+            for idle in [0usize, 1, 2, 4] {
+                for eff in [-1.0, 0.0, 0.3, 0.99, 1.0, 2.0, f64::NAN] {
+                    let d = decide_batch_max(&signals(depth, idle, eff), 8);
+                    assert!((1..=8).contains(&d), "decide({depth},{idle},{eff}) = {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_fanout_prefers_idle_devices() {
+        // 3 idle of 4 eligible: split 3 ways, not 4.
+        assert_eq!(decide_shard_fanout(3, 4, 100, 1024), 3);
+        // All idle: the static and adaptive plans agree.
+        assert_eq!(decide_shard_fanout(4, 4, 100, 1024), 4);
+        // Fewer than 2 idle: fall back to the static all-eligible plan.
+        assert_eq!(decide_shard_fanout(1, 4, 100, 1024), 4);
+        assert_eq!(decide_shard_fanout(0, 4, 100, 1024), 4);
+    }
+
+    #[test]
+    fn shard_fanout_respects_elems_and_cap() {
+        // Element budget limits the split.
+        assert_eq!(decide_shard_fanout(4, 4, 3, 1024), 3);
+        // Queue capacity clamps it.
+        assert_eq!(decide_shard_fanout(8, 8, 100, 4), 4);
+        // Too small to split at all.
+        assert!(decide_shard_fanout(4, 4, 1, 1024) < 2);
+    }
+
+    #[test]
+    fn controller_ewma_tracks_observations() {
+        let c = AdaptiveController::new();
+        assert!((c.efficiency() - 1.0).abs() < 1e-12);
+        // Repeated quarter-full batches pull the EWMA down.
+        for _ in 0..32 {
+            c.record(32, 8);
+        }
+        assert!(c.efficiency() < 0.4, "EWMA must approach 0.25: {}", c.efficiency());
+        // Full batches pull it back up.
+        for _ in 0..32 {
+            c.record(32, 32);
+        }
+        assert!(c.efficiency() > 0.8, "EWMA must recover: {}", c.efficiency());
+        // Unbatchable pops carry no efficiency signal.
+        let before = c.efficiency();
+        c.record(1, 1);
+        assert_eq!(c.efficiency(), before);
+    }
+
+    #[test]
+    fn controller_counts_decisions() {
+        let c = AdaptiveController::new();
+        c.record(8, 8);
+        c.record(1, 1);
+        let s = c.stats();
+        assert_eq!(s.decisions, 2);
+        assert_eq!(s.decided_sum, 9);
+        assert!((s.avg_decided() - 4.5).abs() < 1e-12);
+    }
+}

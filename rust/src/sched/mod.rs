@@ -14,48 +14,81 @@
 //!
 //! Placement is **pull-based least-loaded with affinity filtering**:
 //!
-//! * one worker thread per device pulls from the shared FIFO queue the
+//! * one worker thread per device pulls from the shared queue the
 //!   moment its device is free, so work naturally flows to the
 //!   least-loaded device — an idle device never waits behind a busy one;
 //! * each request carries an [`Affinity`] constraint (`arch` and/or
-//!   runtime `kind`, both optional); a worker only claims the oldest job
-//!   its device satisfies, skipping over incompatible ones so a pinned
+//!   runtime `kind`, both optional); a worker only claims jobs its
+//!   device satisfies, skipping over incompatible ones so a pinned
 //!   job cannot head-of-line-block the rest of the pool;
 //! * a request whose affinity matches no pool device is rejected at
 //!   submit time rather than queued forever.
 //!
-//! ## Batch lifecycle
+//! ## Fairness (per-client weighted deficit round robin)
 //!
-//! When a worker claims the oldest eligible job it also coalesces up to
-//! `[pool] batch_max − 1` *compatible* followers — queued requests with
-//! the same image-cache key (module content hash + opt level; arch and
-//! runtime kind are implied by the device doing the popping). The batch
-//! pays queue synchronization, image lookup (one cache access; follower
-//! jobs are recorded as hits) and profiler bookkeeping once. Batches of
-//! **independent** jobs — images with no global-space globals, so no
-//! launch can observe another through device state — execute as one
-//! *fused grid* ([`crate::sim::launch_kernel_batch`]): every block still
-//! sees exactly the `(ctaid, nctaid, args)` of its own solo launch, but
-//! blocks of different jobs interleave across the device's SMs, so small
-//! grids stop leaving most of the device idle and the per-launch
-//! thread-scope setup is paid once per batch. Images with device globals
-//! fall back to sequential per-job launches inside the batch. Shard jobs
-//! never batch (a batch runs on one device, which would undo the split).
+//! Requests carry a `client` tag; the queue keeps one FIFO *lane* per
+//! tag and workers pop by **weighted deficit round robin** over the
+//! lanes, so one chatty client cannot starve the rest. Each lane holds a
+//! *deficit* (pop budget): serving a lane costs 1 per job taken and a
+//! lane may only lead a pop while its deficit is ≥ 1; when no eligible
+//! lane can afford a pop, every backlogged lane is replenished by its
+//! configured *weight* (`[pool] client_weights`, default 1.0) — a
+//! weight-4 client therefore sustains 4x the pull share of a weight-1
+//! client while both are backlogged. Followers coalesced into another
+//! lane's batch are charged to their own lane (bounded borrowing), lanes
+//! reset to zero deficit when they drain, and `[pool] fairness = false`
+//! collapses everything into one lane — the original global FIFO.
+//! Per-client completion counts and wait/latency summaries surface in
+//! [`PoolMetrics::clients`] and the `PoolCoordinator` report.
 //!
-//! ## Shard lifecycle
+//! ## Batch lifecycle (adaptive)
+//!
+//! When a worker claims a lead job it also coalesces *compatible*
+//! followers — queued requests with the same image-cache key (module
+//! content hash + opt level; arch and runtime kind are implied by the
+//! device doing the popping), from any lane. The coalescing limit is
+//! decided **per queue visit**: with `[pool] adaptive = true` (the
+//! default) the worker runs [`adaptive::decide_batch_max`] over live
+//! signals — queue depth, idle-device count and the EWMA of recent
+//! batch fill — so deep queues batch aggressively, shallow queues pop
+//! singles for latency, and key-diverse queues stop paying O(depth)
+//! scans; `[pool] batch_max` remains the hard cap (and the fixed limit
+//! when adaptive is off). The batch pays queue synchronization, image
+//! lookup (one cache access; follower jobs are recorded as hits) and
+//! profiler bookkeeping once. Batches of **independent** jobs — images
+//! with no global-space globals, so no launch can observe another
+//! through device state — execute as one *fused grid*
+//! ([`crate::sim::launch_kernel_batch`]): every block still sees exactly
+//! the `(ctaid, nctaid, args)` of its own solo launch, but blocks of
+//! different jobs interleave across the device's SMs, so small grids
+//! stop leaving most of the device idle and the per-launch thread-scope
+//! setup is paid once per batch. Images with device globals fall back to
+//! sequential per-job launches inside the batch. Shard jobs never batch
+//! (a batch runs on one device, which would undo the split).
+//!
+//! ## Shard lifecycle and the reservation protocol
 //!
 //! A request carrying a [`ShardSpec`] (which buffers are partitioned by
 //! element range, which `Imm` argument is the element count) may be split
-//! at submit time: the pool picks the matching architecture with the most
-//! eligible devices, divides the element range evenly, and enqueues one
-//! pinned sub-request per shard — pull-based placement then spreads them
-//! across whichever of those devices are idle. A detached *stitcher*
-//! collects the shard responses, copies each partitioned output into its
-//! element range of the full-size buffer, sums the launch counters (max
-//! for `wall`/`queue_wait`) and resolves the client handle with
-//! `shards = n`. When splitting would drop any shard under
-//! `[pool] shard_min_trips` elements — shard overhead would dominate —
-//! the request runs unsplit on a single device (`shards = 1`).
+//! at submit time. In adaptive mode the planner prefers the architecture
+//! with the most **idle** devices (no in-flight work, no pending
+//! reservation) and sizes the fan-out to that idle count
+//! ([`adaptive::decide_shard_fanout`]); when enough idle devices exist it
+//! **reserves** them — each shard job is pinned to one concrete device,
+//! every shard enters the queue in a single critical section, and pinned
+//! jobs outrank a worker's DRR scan — so shards cannot interleave with
+//! unrelated pulls that would serialize the stitch. The reservation is
+//! best-effort (the idle sample is racy; a reserved device that claimed
+//! other work in the window simply runs its shard next), and with fewer
+//! than two idle devices the planner falls back to the static policy:
+//! fan-out = all eligible devices of the arch, placement by pull order.
+//! A detached *stitcher* collects the shard responses, copies each
+//! partitioned output into its element range of the full-size buffer,
+//! sums the launch counters (max for `wall`/`queue_wait`) and resolves
+//! the client handle with `shards = n`. When splitting would drop any
+//! shard under `[pool] shard_min_trips` elements — shard overhead would
+//! dominate — the request runs unsplit on a single device
+//! (`shards = 1`).
 //!
 //! ## Backpressure
 //!
@@ -89,13 +122,15 @@
 //! single-launch request shape — the SPEC-analog benchmark suite behind
 //! `omprt bench --pool` — run through the pool's scheduler and metrics.
 
+pub mod adaptive;
 pub mod cache;
 pub mod pool;
 pub mod workload;
 
+pub use adaptive::{AdaptiveController, AdaptiveStats, SchedSignals};
 pub use cache::{CacheKey, CacheStats, ImageCache};
 pub use pool::{
-    bytes_to_f32, f32_to_bytes, Affinity, DeviceLease, DeviceMetrics, DevicePool, DeviceSpec,
-    KernelArg, MapBuf, OffloadHandle, OffloadRequest, OffloadResponse, PoolConfig, PoolMetrics,
-    ShardSpec, TaskHandle, TrySubmitError,
+    bytes_to_f32, f32_to_bytes, Affinity, ClientMetrics, DeviceLease, DeviceMetrics, DevicePool,
+    DeviceSpec, KernelArg, MapBuf, OffloadHandle, OffloadRequest, OffloadResponse, PoolConfig,
+    PoolMetrics, ShardSpec, TaskHandle, TrySubmitError,
 };

@@ -5,6 +5,7 @@
 //! pool's worker threads. See the module docs of [`crate::sched`] for the
 //! placement, batching, sharding and backpressure policies.
 
+use super::adaptive::{decide_batch_max, AdaptiveController, AdaptiveStats, SchedSignals};
 use super::cache::{CacheStats, ImageCache};
 use crate::config::Config;
 use crate::coordinator::profiler::{Profiler, RegionReport};
@@ -13,8 +14,8 @@ use crate::hostrt::{KernelImage, MapType, OffloadDevice};
 use crate::ir::passes::OptLevel;
 use crate::ir::Module;
 use crate::sim::{Arch, BatchKernelSpec, LaunchConfig, LaunchStats, MemStats};
-use crate::util::Error;
-use std::collections::VecDeque;
+use crate::util::{Error, Summary};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -138,6 +139,10 @@ pub struct OffloadRequest {
     /// architecture when it is large enough to amortize the overhead
     /// (see `[pool] shard_min_trips`).
     pub shard: Option<ShardSpec>,
+    /// Multi-tenant fairness tag: requests with the same tag share one
+    /// weighted deficit-round-robin lane (see `[pool] fairness` and
+    /// `client_weights`). Empty = the default client.
+    pub client: String,
 }
 
 /// What the pool hands back when a request completes.
@@ -292,6 +297,19 @@ pub struct PoolConfig {
     /// Per-device kernel-image cache budget in bytes (LRU eviction past
     /// it). 0 = unlimited.
     pub cache_budget_bytes: u64,
+    /// Occupancy-driven adaptive scheduling: workers pick the effective
+    /// batch limit per queue visit (and the shard planner prefers — and
+    /// reserves — idle devices) from live signals instead of the static
+    /// knobs above, which then act as hard caps. See [`crate::sched::adaptive`].
+    pub adaptive: bool,
+    /// Honor per-request client tags with weighted deficit-round-robin
+    /// pull, so one chatty client cannot starve others. `false` collapses
+    /// every request into one FIFO lane (the pre-fairness behavior).
+    pub fairness: bool,
+    /// Per-client scheduling weights (default 1.0). A client with weight
+    /// 4 receives 4x the pull share of a weight-1 client while both are
+    /// backlogged.
+    pub client_weights: Vec<(String, f64)>,
 }
 
 impl Default for PoolConfig {
@@ -316,6 +334,9 @@ impl PoolConfig {
             queue_cap: 1024,
             shard_min_trips: 4096,
             cache_budget_bytes: 0,
+            adaptive: true,
+            fairness: true,
+            client_weights: vec![],
         }
     }
 
@@ -356,6 +377,28 @@ impl PoolConfig {
         self
     }
 
+    /// Enable/disable the adaptive scheduling layer (disabled = static
+    /// `batch_max` / all-eligible shard fan-out, the PR-2 behavior).
+    pub fn with_adaptive(mut self, adaptive: bool) -> PoolConfig {
+        self.adaptive = adaptive;
+        self
+    }
+
+    /// Enable/disable per-client fairness (disabled = one FIFO lane).
+    pub fn with_fairness(mut self, fairness: bool) -> PoolConfig {
+        self.fairness = fairness;
+        self
+    }
+
+    /// Set (or overwrite) one client's scheduling weight.
+    pub fn with_client_weight(mut self, client: &str, weight: f64) -> PoolConfig {
+        match self.client_weights.iter_mut().find(|(c, _)| c == client) {
+            Some((_, w)) => *w = weight,
+            None => self.client_weights.push((client.to_string(), weight)),
+        }
+        self
+    }
+
     /// Read the `[pool]` section of a config document:
     ///
     /// ```text
@@ -366,6 +409,9 @@ impl PoolConfig {
     /// queue_cap = 1024        # submission-queue bound (0 = unbounded)
     /// shard_min_trips = 4096  # min elements per shard
     /// cache_budget_bytes = 0  # per-device image-cache LRU budget
+    /// adaptive = true         # occupancy-driven batch/shard sizing
+    /// fairness = true         # per-client weighted DRR pull
+    /// client_weights = ["miniqmc=4", "batch=1"]  # default weight 1.0
     /// ```
     ///
     /// Missing section or keys fall back to [`PoolConfig::mixed4`].
@@ -399,7 +445,37 @@ impl PoolConfig {
             read_uint(sec, "shard_min_trips", out.shard_min_trips as i64, 1)? as usize;
         out.cache_budget_bytes =
             read_uint(sec, "cache_budget_bytes", out.cache_budget_bytes as i64, 0)? as u64;
+        out.adaptive = read_bool(sec, "adaptive", out.adaptive)?;
+        out.fairness = read_bool(sec, "fairness", out.fairness)?;
+        if let Some(list) = sec.get("client_weights").and_then(|v| v.as_str_list()) {
+            let mut weights = vec![];
+            for s in list {
+                let parsed = s.split_once('=').and_then(|(name, w)| {
+                    let w: f64 = w.trim().parse().ok()?;
+                    (w > 0.0 && w.is_finite()).then(|| (name.trim().to_string(), w))
+                });
+                match parsed {
+                    Some(pair) => weights.push(pair),
+                    None => {
+                        return Err(Error::Config(format!(
+                            "[pool] bad client weight `{s}` (want \"<client>=<positive weight>\")"
+                        )))
+                    }
+                }
+            }
+            out.client_weights = weights;
+        }
         Ok(out)
+    }
+}
+
+/// Read a boolean `[pool]` key.
+fn read_bool(sec: &crate::config::Section, key: &str, default: bool) -> Result<bool, Error> {
+    match sec.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| Error::Config(format!("[pool] bad {key} `{v:?}` (want true|false)"))),
     }
 }
 
@@ -436,8 +512,14 @@ struct OffloadJob {
     req: OffloadRequest,
     key: BatchKey,
     /// Shard jobs are never coalesced: a batch runs on one device, which
-    /// would defeat the point of splitting the request.
-    no_batch: bool,
+    /// would defeat the point of splitting the request. They are also
+    /// excluded from per-client accounting — the stitcher records the
+    /// whole request once instead.
+    is_shard: bool,
+    /// Reserved placement: only the worker with this pool id may claim
+    /// the job (shard-aware placement pins each shard to an idle device
+    /// picked by the planner). `None` = any matching worker.
+    target_device: Option<usize>,
     reply: mpsc::Sender<Result<OffloadResponse, Error>>,
     enqueued: Instant,
 }
@@ -446,7 +528,9 @@ type TaskFn = Box<dyn FnOnce(&DeviceLease<'_>) + Send>;
 
 struct TaskJob {
     affinity: Affinity,
+    client: String,
     run: TaskFn,
+    enqueued: Instant,
 }
 
 enum Job {
@@ -460,6 +544,314 @@ impl Job {
             Job::Offload(j) => j.req.affinity,
             Job::Task(t) => t.affinity,
         }
+    }
+
+    fn client(&self) -> &str {
+        match self {
+            Job::Offload(j) => &j.req.client,
+            Job::Task(t) => &t.client,
+        }
+    }
+
+    fn target_device(&self) -> Option<usize> {
+        match self {
+            Job::Offload(j) => j.target_device,
+            Job::Task(_) => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The submission queue: per-client lanes + weighted deficit round robin
+// ---------------------------------------------------------------------------
+
+/// A lane's deficit never drops below this: followers coalesced into
+/// another lane's batch "borrow" share (their lane is charged without
+/// being the leader), and the floor bounds how long the repayment can
+/// suppress the lane.
+const DEFICIT_FLOOR: f64 = -8.0;
+
+/// One client's FIFO lane plus its deficit-round-robin accounting.
+struct Lane {
+    client: String,
+    weight: f64,
+    /// Pop budget: a lane is eligible to lead a pop while `deficit >= 1`;
+    /// every job taken from the lane (leader or coalesced follower)
+    /// costs 1. Replenished by `weight` per round while backlogged,
+    /// reset to 0 when the lane drains.
+    deficit: f64,
+    jobs: VecDeque<Job>,
+}
+
+impl Lane {
+    /// Cap accumulated budget so a lane whose jobs were ineligible for
+    /// the sampling workers (affinity pins) cannot hoard an unbounded
+    /// burst. Always >= 1 so every lane can eventually lead.
+    fn deficit_cap(&self) -> f64 {
+        (8.0 * self.weight).max(1.0)
+    }
+}
+
+/// The pool's submission queue. Jobs live in per-client FIFO lanes;
+/// workers pop via weighted deficit round robin (one client cannot
+/// starve the rest), coalescing same-image followers across lanes.
+/// With `fairness` off every job lands in one shared lane, which
+/// degenerates to the original global FIFO.
+///
+/// `len`/`peak` are maintained inside the same critical section as the
+/// mutations that change them, so `peak` can never under-report a
+/// transient depth (the PR-2 code sampled `len()` after dropping the
+/// lock).
+struct SchedQueue {
+    lanes: Vec<Lane>,
+    by_client: HashMap<String, usize>,
+    /// Lane index the next DRR scan starts from.
+    cursor: usize,
+    len: usize,
+    peak: usize,
+    fairness: bool,
+    weights: HashMap<String, f64>,
+}
+
+impl SchedQueue {
+    fn new(fairness: bool, client_weights: &[(String, f64)]) -> SchedQueue {
+        SchedQueue {
+            lanes: vec![],
+            by_client: HashMap::new(),
+            cursor: 0,
+            len: 0,
+            peak: 0,
+            fairness,
+            weights: client_weights.iter().cloned().collect(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Lane index for `client`, creating the lane on first use.
+    fn lane_idx(&mut self, client: &str) -> usize {
+        let key = if self.fairness { client } else { "" };
+        if let Some(&i) = self.by_client.get(key) {
+            return i;
+        }
+        // Only lane creation can grow the table, so this is the one spot
+        // that needs to consider reclaiming drained lanes.
+        self.maybe_compact();
+        let weight = self.weights.get(key).copied().unwrap_or(1.0).max(0.01);
+        self.lanes.push(Lane {
+            client: key.to_string(),
+            weight,
+            deficit: 0.0,
+            jobs: VecDeque::new(),
+        });
+        self.by_client.insert(key.to_string(), self.lanes.len() - 1);
+        self.lanes.len() - 1
+    }
+
+    fn push(&mut self, job: Job) {
+        let client = job.client().to_string();
+        let i = self.lane_idx(&client);
+        self.lanes[i].jobs.push_back(job);
+        self.len += 1;
+        self.peak = self.peak.max(self.len);
+    }
+
+    /// Lanes persist per client tag (drained lanes hold no budget, so
+    /// keeping them is semantically free) — but a workload minting
+    /// endless one-off tags would grow the lane table, and every DRR
+    /// scan, without bound. Once the table is large and mostly empty,
+    /// drop the drained lanes and rebuild the index.
+    fn maybe_compact(&mut self) {
+        const COMPACT_LANES: usize = 64;
+        if self.lanes.len() <= COMPACT_LANES {
+            return;
+        }
+        let empties = self.lanes.iter().filter(|l| l.jobs.is_empty()).count();
+        if empties * 2 < self.lanes.len() {
+            return;
+        }
+        self.lanes.retain(|l| !l.jobs.is_empty());
+        self.by_client.clear();
+        for (i, lane) in self.lanes.iter().enumerate() {
+            self.by_client.insert(lane.client.clone(), i);
+        }
+        self.cursor = 0;
+    }
+
+    /// Can the DRR scan claim `job` for the worker of `spec`? Pinned
+    /// jobs are deliberately excluded — they are claimable only through
+    /// [`SchedQueue::pop_pinned`], which is what keeps the pool's
+    /// `reserved` counters balanced.
+    fn eligible(job: &Job, spec: DeviceSpec, _device_id: usize) -> bool {
+        job.affinity().matches(spec.arch, spec.kind) && job.target_device().is_none()
+    }
+
+    /// Remove the oldest job pinned to `device_id` (reserved shard
+    /// placement). Pinned jobs outrank the DRR scan: the planner chose
+    /// this device because it was idle, and the stitch serializes on its
+    /// slowest shard.
+    fn pop_pinned(&mut self, device_id: usize) -> Option<OffloadJob> {
+        for i in 0..self.lanes.len() {
+            let lane = &mut self.lanes[i];
+            if let Some(pos) =
+                lane.jobs.iter().position(|j| j.target_device() == Some(device_id))
+            {
+                let job = lane.jobs.remove(pos).expect("position is in range");
+                lane.deficit = (lane.deficit - 1.0).max(DEFICIT_FLOOR);
+                if lane.jobs.is_empty() {
+                    lane.deficit = 0.0;
+                }
+                self.len -= 1;
+                match job {
+                    Job::Offload(j) => return Some(j),
+                    Job::Task(_) => unreachable!("tasks are never pinned"),
+                }
+            }
+        }
+        None
+    }
+
+    /// Weighted-DRR pop: serve the first lane — in round-robin order
+    /// from the cursor — holding both pop budget and an eligible job;
+    /// coalesce up to `limit - 1` same-key offload followers from all
+    /// lanes (each follower charged to its own lane). Returns `None`
+    /// only when no queued job is eligible for this worker.
+    fn pop(&mut self, spec: DeviceSpec, device_id: usize, limit: usize) -> Option<Work> {
+        for pass in 0..2 {
+            let n = self.lanes.len();
+            for k in 0..n {
+                let i = (self.cursor + k) % n;
+                if self.lanes[i].deficit < 1.0 {
+                    continue;
+                }
+                let Some(pos) = self.lanes[i]
+                    .jobs
+                    .iter()
+                    .position(|j| Self::eligible(j, spec, device_id))
+                else {
+                    continue;
+                };
+                self.cursor = (i + 1) % n;
+                let lane = &mut self.lanes[i];
+                lane.deficit -= 1.0;
+                let job = lane.jobs.remove(pos).expect("position is in range");
+                if lane.jobs.is_empty() {
+                    lane.deficit = 0.0;
+                }
+                self.len -= 1;
+                match job {
+                    Job::Task(t) => return Some(Work::Task(t)),
+                    Job::Offload(leader) => {
+                        let mut batch = vec![leader];
+                        if limit > 1 && !batch[0].is_shard {
+                            self.coalesce(&mut batch, i, spec, limit);
+                        }
+                        return Some(Work::Batch(batch));
+                    }
+                }
+            }
+            if pass == 0 && !self.replenish_for(spec, device_id) {
+                return None;
+            }
+        }
+        None
+    }
+
+    /// Refill pop budgets ahead of a second DRR pass. Returns `false`
+    /// when no queued job is eligible for this worker (nothing to wait
+    /// for from this pop). Weights may be fractional and deficits
+    /// negative (batch borrowing), so the number of `+weight` rounds the
+    /// fastest eligible lane needs to afford a pop is computed in closed
+    /// form, then every backlogged lane advances that many rounds in one
+    /// pass (capping once is equivalent to capping per round — the
+    /// increase is monotone).
+    fn replenish_for(&mut self, spec: DeviceSpec, device_id: usize) -> bool {
+        let mut rounds: f64 = f64::INFINITY;
+        let mut any_eligible = false;
+        for lane in &self.lanes {
+            if !lane.jobs.iter().any(|j| Self::eligible(j, spec, device_id)) {
+                continue;
+            }
+            any_eligible = true;
+            // Rounds this lane needs to reach a deficit of 1.0. Callers
+            // replenish only when no eligible lane can already afford a
+            // pop, so `need` is positive; max(1.0) guards the boundary.
+            let need = 1.0 - lane.deficit;
+            rounds = rounds.min((need / lane.weight).ceil().max(1.0));
+        }
+        if !any_eligible {
+            return false;
+        }
+        for lane in &mut self.lanes {
+            if !lane.jobs.is_empty() {
+                lane.deficit = (lane.deficit + rounds * lane.weight).min(lane.deficit_cap());
+            }
+        }
+        true
+    }
+
+    /// Pull same-key, unpinned, non-shard offload jobs into `batch`,
+    /// starting with the leader's own lane (preserving that client's
+    /// FIFO order) and then the other lanes in cursor order. Followers
+    /// are charged to their own lane's deficit — riding a foreign batch
+    /// still spends that client's share (floored, so the debt is
+    /// bounded).
+    fn coalesce(
+        &mut self,
+        batch: &mut Vec<OffloadJob>,
+        leader_lane: usize,
+        spec: DeviceSpec,
+        limit: usize,
+    ) {
+        let key = batch[0].key;
+        let n = self.lanes.len();
+        for k in 0..n {
+            if batch.len() >= limit {
+                break;
+            }
+            let li = (leader_lane + k) % n;
+            let lane = &mut self.lanes[li];
+            let mut i = 0;
+            while batch.len() < limit && i < lane.jobs.len() {
+                let compatible = matches!(
+                    &lane.jobs[i],
+                    Job::Offload(o) if o.key == key
+                        && !o.is_shard
+                        && o.target_device.is_none()
+                        && o.req.affinity.matches(spec.arch, spec.kind)
+                );
+                if compatible {
+                    match lane.jobs.remove(i) {
+                        Some(Job::Offload(o)) => batch.push(o),
+                        _ => unreachable!("index i held an offload job"),
+                    }
+                    lane.deficit = (lane.deficit - 1.0).max(DEFICIT_FLOOR);
+                    self.len -= 1;
+                } else {
+                    i += 1;
+                }
+            }
+            if lane.jobs.is_empty() {
+                lane.deficit = 0.0;
+            }
+        }
+    }
+
+    /// Remove every queued job (shutdown path).
+    fn drain(&mut self) -> Vec<Job> {
+        let mut out = Vec::with_capacity(self.len);
+        for lane in &mut self.lanes {
+            out.extend(lane.jobs.drain(..));
+            lane.deficit = 0.0;
+        }
+        self.len = 0;
+        out
     }
 }
 
@@ -475,26 +867,84 @@ struct DeviceSlot {
     batches: AtomicU64,
     batched_jobs: AtomicU64,
     max_batch: AtomicUsize,
+    /// Nanoseconds this device's worker spent executing work (occupancy
+    /// = busy / uptime).
+    busy_ns: AtomicU64,
+}
+
+/// Per-client completion accounting (behind `Shared::clients`).
+#[derive(Default)]
+struct ClientAccum {
+    completed: u64,
+    failed: u64,
+    /// Time requests sat queued before a worker claimed them.
+    queue_wait: Summary,
+    /// Submit-to-completion sojourn time.
+    latency: Summary,
 }
 
 struct Shared {
-    queue: Mutex<VecDeque<Job>>,
+    queue: Mutex<SchedQueue>,
     /// Workers wait here for jobs.
     cv: Condvar,
     /// Submitters wait here for queue space (when `queue_cap > 0`).
     space: Condvar,
     shutdown: AtomicBool,
     slots: Vec<DeviceSlot>,
+    /// Static batch limit; the adaptive controller's hard cap.
     batch_max: usize,
     queue_cap: usize,
     shard_min_trips: usize,
+    /// Occupancy-driven batch/shard sizing on/off.
+    adaptive: bool,
+    controller: AdaptiveController,
+    /// Pinned shard jobs queued per device (the reservation table): a
+    /// device with a nonzero count is spoken for and not "idle" to the
+    /// shard planner.
+    reserved: Vec<AtomicUsize>,
+    /// Per-client request accounting, keyed by client tag ("" = the
+    /// default client). Sharded requests are recorded once by their
+    /// stitcher, not per shard job.
+    clients: Mutex<BTreeMap<String, ClientAccum>>,
+    /// Configured weights, for reports (scheduling reads the copy inside
+    /// [`SchedQueue`]).
+    client_weights: Vec<(String, f64)>,
     submitted: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
     sharded_requests: AtomicU64,
     shard_jobs: AtomicU64,
-    peak_depth: AtomicUsize,
     started: Instant,
+}
+
+/// Append one completed/failed request to `map` (the `Shared::clients`
+/// table, locked by the caller). `get_mut` first so the common
+/// already-seen-client path allocates nothing.
+fn record_into(
+    map: &mut BTreeMap<String, ClientAccum>,
+    client: &str,
+    queue_wait: Duration,
+    latency: Duration,
+    ok: bool,
+) {
+    let acc = match map.get_mut(client) {
+        Some(acc) => acc,
+        None => map.entry(client.to_string()).or_default(),
+    };
+    if ok {
+        acc.completed += 1;
+    } else {
+        acc.failed += 1;
+    }
+    acc.queue_wait.record(queue_wait);
+    acc.latency.record(latency);
+}
+
+/// Single-record convenience (task and stitcher paths; the batched reply
+/// loop locks once for the whole batch instead).
+fn record_client(shared: &Shared, client: &str, queue_wait: Duration, latency: Duration, ok: bool) {
+    let mut map = shared.clients.lock().unwrap();
+    record_into(&mut map, client, queue_wait, latency, ok);
 }
 
 /// A pool of offload devices with per-device worker threads.
@@ -524,10 +974,12 @@ impl DevicePool {
                 batches: AtomicU64::new(0),
                 batched_jobs: AtomicU64::new(0),
                 max_batch: AtomicUsize::new(0),
+                busy_ns: AtomicU64::new(0),
             })
             .collect();
+        let reserved = (0..config.devices.len()).map(|_| AtomicUsize::new(0)).collect();
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(SchedQueue::new(config.fairness, &config.client_weights)),
             cv: Condvar::new(),
             space: Condvar::new(),
             shutdown: AtomicBool::new(false),
@@ -535,12 +987,16 @@ impl DevicePool {
             batch_max: config.batch_max.max(1),
             queue_cap: config.queue_cap,
             shard_min_trips: config.shard_min_trips.max(1),
+            adaptive: config.adaptive,
+            controller: AdaptiveController::new(),
+            reserved,
+            clients: Mutex::new(BTreeMap::new()),
+            client_weights: config.client_weights.clone(),
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             sharded_requests: AtomicU64::new(0),
             shard_jobs: AtomicU64::new(0),
-            peak_depth: AtomicUsize::new(0),
             started: Instant::now(),
         });
         let mut workers = vec![];
@@ -649,18 +1105,23 @@ impl DevicePool {
         self.validate(&req)?;
         if let Some(plan) = self.shard_plan(&req) {
             let (jobs, parts) = self.build_shards(&req, &plan);
-            let frx = spawn_stitcher(&req, parts)?;
             let n = jobs.len();
-            for job in jobs {
-                self.enqueue(Job::Offload(job))?;
-            }
+            // Spawn first (so a spawn failure queues nothing), then
+            // enqueue all shard jobs in one critical section — the
+            // reserved devices see their pinned work the moment any of
+            // it is visible — and only then arm the stitcher. A failed
+            // enqueue drops `arm` and the stitcher exits without a
+            // trace.
+            let (frx, arm) = spawn_stitcher(&req, parts, self.shared.clone())?;
+            self.enqueue_bulk(jobs.into_iter().map(Job::Offload).collect())?;
+            let _ = arm.send(());
             self.shared.sharded_requests.fetch_add(1, Ordering::Relaxed);
             self.shared.shard_jobs.fetch_add(n as u64, Ordering::Relaxed);
             return Ok(OffloadHandle { rx: frx });
         }
         let (reply, rx) = mpsc::channel();
-        let job = make_offload_job(req, reply, false);
-        self.enqueue(Job::Offload(job))?;
+        let job = make_offload_job(req, reply, false, None);
+        self.enqueue_bulk(vec![Job::Offload(job)])?;
         Ok(OffloadHandle { rx })
     }
 
@@ -684,25 +1145,28 @@ impl DevicePool {
                 }
             }
             let (jobs, parts) = self.build_shards(&req, &plan);
-            let frx = match spawn_stitcher(&req, parts) {
-                Ok(rx) => rx,
+            let n = jobs.len();
+            // Spawn-then-enqueue-then-arm, exactly as in `submit`.
+            let (frx, arm) = match spawn_stitcher(&req, parts, self.shared.clone()) {
+                Ok(pair) => pair,
                 Err(e) => return Err(TrySubmitError::Rejected(e)),
             };
-            let n = jobs.len();
             if self
                 .try_enqueue_bulk(jobs.into_iter().map(Job::Offload).collect())
                 .is_err()
             {
-                // Dropping the shard jobs disconnects the stitcher, which
-                // exits; the untouched original goes back to the caller.
+                // Dropping `arm` makes the disarmed stitcher exit without
+                // recording anything; the untouched original goes back to
+                // the caller and no metrics show a trace.
                 return Err(TrySubmitError::Full(req));
             }
+            let _ = arm.send(());
             self.shared.sharded_requests.fetch_add(1, Ordering::Relaxed);
             self.shared.shard_jobs.fetch_add(n as u64, Ordering::Relaxed);
             return Ok(OffloadHandle { rx: frx });
         }
         let (reply, rx) = mpsc::channel();
-        let job = make_offload_job(req, reply, false);
+        let job = make_offload_job(req, reply, false, None);
         match self.try_enqueue_bulk(vec![Job::Offload(job)]) {
             Ok(()) => Ok(OffloadHandle { rx }),
             Err(mut jobs) => match jobs.pop() {
@@ -717,6 +1181,21 @@ impl DevicePool {
     /// thread, scheduled like any queued job — this is how whole
     /// benchmarks route through the pool (`omprt bench --pool`).
     pub fn run_on<R, F>(&self, affinity: Affinity, f: F) -> Result<TaskHandle<R>, Error>
+    where
+        R: Send + 'static,
+        F: FnOnce(&DeviceLease<'_>) -> R + Send + 'static,
+    {
+        self.run_on_as(affinity, "", f)
+    }
+
+    /// [`DevicePool::run_on`] with a client tag: the task is scheduled
+    /// and accounted under `client`'s fairness lane.
+    pub fn run_on_as<R, F>(
+        &self,
+        affinity: Affinity,
+        client: &str,
+        f: F,
+    ) -> Result<TaskHandle<R>, Error>
     where
         R: Send + 'static,
         F: FnOnce(&DeviceLease<'_>) -> R + Send + 'static,
@@ -740,16 +1219,47 @@ impl DevicePool {
         let run: TaskFn = Box::new(move |lease: &DeviceLease<'_>| {
             let _ = tx.send(f(lease));
         });
-        self.enqueue(Job::Task(TaskJob { affinity, run }))?;
+        self.enqueue_bulk(vec![Job::Task(TaskJob {
+            affinity,
+            client: client.to_string(),
+            run,
+            enqueued: Instant::now(),
+        })])?;
         Ok(TaskHandle { rx })
     }
 
-    /// Blocking enqueue honoring `queue_cap` backpressure.
-    fn enqueue(&self, job: Job) -> Result<(), Error> {
+    /// Make `job` visible in the queue. Must run with the queue lock
+    /// held: the counters below have to change in the same critical
+    /// section as the push — `submitted` so it never lags `completed` in
+    /// a metrics snapshot, `reserved` so a worker that sees space freed
+    /// can never observe a pinned job without its reservation, and the
+    /// queue's own `peak` so no transient depth escapes it.
+    fn push_locked(&self, q: &mut SchedQueue, job: Job) {
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Some(d) = job.target_device() {
+            self.shared.reserved[d].fetch_add(1, Ordering::Relaxed);
+        }
+        q.push(job);
+    }
+
+    /// Blocking all-or-nothing enqueue honoring `queue_cap`
+    /// backpressure: waits until every job fits (sharded submissions
+    /// enter the queue atomically), then pushes all of them in one
+    /// critical section.
+    fn enqueue_bulk(&self, jobs: Vec<Job>) -> Result<(), Error> {
         let shared = &self.shared;
+        if shared.queue_cap > 0 && jobs.len() > shared.queue_cap {
+            // Cannot ever fit (the shard planner clamps fan-out to the
+            // cap, so this is a programming-error backstop, not a path).
+            return Err(Error::Sched(format!(
+                "{} jobs cannot fit a queue capped at {}",
+                jobs.len(),
+                shared.queue_cap
+            )));
+        }
         let mut q = shared.queue.lock().unwrap();
         if shared.queue_cap > 0 {
-            while q.len() >= shared.queue_cap {
+            while q.len() + jobs.len() > shared.queue_cap {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return Err(Error::Sched("pool is shut down".into()));
                 }
@@ -759,15 +1269,11 @@ impl DevicePool {
         if shared.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Sched("pool is shut down".into()));
         }
-        // Count while holding the queue lock, before the job becomes
-        // visible, so `submitted` never lags behind `completed` in a
-        // metrics snapshot.
-        shared.submitted.fetch_add(1, Ordering::Relaxed);
-        q.push_back(job);
-        let depth = q.len();
-        shared.peak_depth.fetch_max(depth, Ordering::Relaxed);
+        for job in jobs {
+            self.push_locked(&mut q, job);
+        }
         drop(q);
-        // notify_all: the job may be eligible only for a subset of the
+        // notify_all: the jobs may be eligible only for a subset of the
         // sleeping workers, and notify_one could wake the wrong one.
         shared.cv.notify_all();
         Ok(())
@@ -782,47 +1288,82 @@ impl DevicePool {
             return Err(jobs);
         }
         for job in jobs {
-            shared.submitted.fetch_add(1, Ordering::Relaxed);
-            q.push_back(job);
+            self.push_locked(&mut q, job);
         }
-        let depth = q.len();
-        shared.peak_depth.fetch_max(depth, Ordering::Relaxed);
         drop(q);
         shared.cv.notify_all();
         Ok(())
     }
 
     /// Decide whether (and how) to shard `req`: pick the matching
-    /// architecture with the most eligible devices, split the element
-    /// range evenly, and fall back to single-device execution when any
-    /// shard would drop under `shard_min_trips` elements.
+    /// architecture, split the element range evenly, and fall back to
+    /// single-device execution when any shard would drop under
+    /// `shard_min_trips` elements.
+    ///
+    /// In adaptive mode the planner prefers the architecture with the
+    /// most *idle* devices (no in-flight work, no pending reservation),
+    /// sizes the fan-out to that idle count, and — when enough idle
+    /// devices exist — *reserves* them by pinning one shard job to each,
+    /// so shards cannot interleave with unrelated pulls and serialize
+    /// the stitch. The idle sample is racy by design (a device may claim
+    /// other work between the sample and the enqueue); reservations
+    /// only shorten the window, correctness never depends on them. In
+    /// static mode (`adaptive = false`) this is the PR-2 policy: count
+    /// all eligible devices, placement by pull order.
     fn shard_plan(&self, req: &OffloadRequest) -> Option<ShardPlan> {
         let spec = req.shard.as_ref()?;
-        let mut archs: Vec<(Arch, usize)> = vec![];
+        // Matching devices grouped by arch, with the subset that is idle.
+        let mut archs: Vec<(Arch, Vec<usize>, Vec<usize>)> = vec![];
         for s in &self.shared.slots {
-            if req.affinity.matches(s.spec.arch, s.spec.kind) {
-                match archs.iter_mut().find(|(a, _)| *a == s.spec.arch) {
-                    Some((_, c)) => *c += 1,
-                    None => archs.push((s.spec.arch, 1)),
+            if !req.affinity.matches(s.spec.arch, s.spec.kind) {
+                continue;
+            }
+            let idle = s.inflight.load(Ordering::Relaxed) == 0
+                && self.shared.reserved[s.id].load(Ordering::Relaxed) == 0;
+            let entry = match archs.iter_mut().find(|(a, _, _)| *a == s.spec.arch) {
+                Some(e) => e,
+                None => {
+                    archs.push((s.spec.arch, vec![], vec![]));
+                    archs.last_mut().expect("just pushed")
                 }
+            };
+            entry.1.push(s.id);
+            if idle {
+                entry.2.push(s.id);
             }
         }
         // First-seen order breaks ties, so the plan is deterministic.
-        let mut best: Option<(Arch, usize)> = None;
-        for (a, c) in archs {
-            if best.map_or(true, |(_, bc)| c > bc) {
-                best = Some((a, c));
+        let adaptive = self.shared.adaptive;
+        let score = |all: &[usize], idle: &[usize]| {
+            if adaptive {
+                (idle.len(), all.len())
+            } else {
+                (all.len(), 0)
+            }
+        };
+        let mut best: Option<&(Arch, Vec<usize>, Vec<usize>)> = None;
+        for entry in &archs {
+            if best.map_or(true, |b| score(&entry.1, &entry.2) > score(&b.1, &b.2)) {
+                best = Some(entry);
             }
         }
-        let (arch, ndev) = best?;
+        let (arch, all, idle) = best?;
         // Clamp to the queue bound so a sharded request can always be
         // enqueued whole — otherwise `try_submit` on a pool with
         // queue_cap < device count would report Full forever, even idle.
         let cap = if self.shared.queue_cap > 0 { self.shared.queue_cap } else { usize::MAX };
-        let n = ndev.min(spec.elems / self.shared.shard_min_trips).min(cap);
+        let max_by_elems = spec.elems / self.shared.shard_min_trips;
+        let n = if adaptive {
+            super::adaptive::decide_shard_fanout(idle.len(), all.len(), max_by_elems, cap)
+        } else {
+            all.len().min(max_by_elems).min(cap)
+        };
         if n < 2 {
             return None;
         }
+        // Reserve concrete idle devices when the fan-out fits in them.
+        let targets =
+            (adaptive && idle.len() >= n).then(|| idle[..n].to_vec());
         let base = spec.elems / n;
         let rem = spec.elems % n;
         let mut ranges = Vec::with_capacity(n);
@@ -832,7 +1373,7 @@ impl DevicePool {
             ranges.push((lo, lo + len));
             lo += len;
         }
-        Some(ShardPlan { arch, ranges })
+        Some(ShardPlan { arch: *arch, ranges, targets })
     }
 
     /// Materialize the shard jobs for `req` under `plan`. The original
@@ -846,7 +1387,7 @@ impl DevicePool {
         let n = plan.ranges.len();
         let mut jobs = Vec::with_capacity(n);
         let mut parts = Vec::with_capacity(n);
-        for &(lo, hi) in &plan.ranges {
+        for (si, &(lo, hi)) in plan.ranges.iter().enumerate() {
             let buffers: Vec<MapBuf> = req
                 .buffers
                 .iter()
@@ -877,17 +1418,24 @@ impl DevicePool {
                 args,
                 affinity: Affinity { arch: Some(plan.arch), kind: req.affinity.kind },
                 shard: None,
+                client: req.client.clone(),
             };
             let (tx, rx) = mpsc::channel();
-            jobs.push(make_offload_job(sreq, tx, true));
+            let target = plan.targets.as_ref().map(|t| t[si]);
+            jobs.push(make_offload_job(sreq, tx, true, target));
             parts.push(ShardPart { rx, lo, hi });
         }
         (jobs, parts)
     }
 
-    /// Snapshot of queue/throughput/cache/allocator metrics.
+    /// Snapshot of queue/throughput/cache/allocator/fairness metrics.
     pub fn metrics(&self) -> PoolMetrics {
-        let queue_depth = self.shared.queue.lock().unwrap().len();
+        let (queue_depth, peak_queue_depth) = {
+            let q = self.shared.queue.lock().unwrap();
+            (q.len(), q.peak())
+        };
+        let uptime = self.shared.started.elapsed();
+        let uptime_ns = uptime.as_nanos().max(1);
         let devices: Vec<DeviceMetrics> = self
             .shared
             .slots
@@ -897,27 +1445,51 @@ impl DevicePool {
                 kind: s.spec.kind,
                 arch: s.spec.arch,
                 inflight: s.inflight.load(Ordering::Relaxed),
+                reserved: self.shared.reserved[s.id].load(Ordering::Relaxed),
                 completed: s.completed.load(Ordering::Relaxed),
                 batches: s.batches.load(Ordering::Relaxed),
                 batched_jobs: s.batched_jobs.load(Ordering::Relaxed),
                 max_batch: s.max_batch.load(Ordering::Relaxed),
+                occupancy: (s.busy_ns.load(Ordering::Relaxed) as f64 / uptime_ns as f64)
+                    .min(1.0),
                 cache: s.cache.stats(),
                 cached_images: s.cache.len(),
                 cache_bytes: s.cache.bytes(),
                 mem: s.device.gmem.stats(),
             })
             .collect();
+        let clients: Vec<ClientMetrics> = {
+            let map = self.shared.clients.lock().unwrap();
+            map.iter()
+                .map(|(client, acc)| ClientMetrics {
+                    client: client.clone(),
+                    weight: self
+                        .shared
+                        .client_weights
+                        .iter()
+                        .find(|(c, _)| c == client)
+                        .map_or(1.0, |(_, w)| *w),
+                    completed: acc.completed,
+                    failed: acc.failed,
+                    queue_wait: acc.queue_wait.clone(),
+                    latency: acc.latency.clone(),
+                })
+                .collect()
+        };
         PoolMetrics {
             queue_depth,
-            peak_queue_depth: self.shared.peak_depth.load(Ordering::Relaxed),
+            peak_queue_depth,
             queue_cap: self.shared.queue_cap,
             submitted: self.shared.submitted.load(Ordering::Relaxed),
             completed: self.shared.completed.load(Ordering::Relaxed),
             failed: self.shared.failed.load(Ordering::Relaxed),
             sharded_requests: self.shared.sharded_requests.load(Ordering::Relaxed),
             shard_jobs: self.shared.shard_jobs.load(Ordering::Relaxed),
-            uptime: self.shared.started.elapsed(),
+            adaptive: self.shared.adaptive,
+            adaptive_stats: self.shared.controller.stats(),
+            uptime,
             devices,
+            clients,
         }
     }
 
@@ -947,6 +1519,10 @@ impl DevicePool {
 struct ShardPlan {
     arch: Arch,
     ranges: Vec<(usize, usize)>,
+    /// Device ids reserved for the shards (one per range) when the
+    /// adaptive planner found enough idle devices; `None` = placement by
+    /// pull order (static mode, or a busy pool).
+    targets: Option<Vec<usize>>,
 }
 
 struct ShardPart {
@@ -958,29 +1534,60 @@ struct ShardPart {
 fn make_offload_job(
     req: OffloadRequest,
     reply: mpsc::Sender<Result<OffloadResponse, Error>>,
-    no_batch: bool,
+    is_shard: bool,
+    target_device: Option<usize>,
 ) -> OffloadJob {
     let key = BatchKey { content: req.module.content_hash(), opt: req.opt };
-    OffloadJob { req, key, no_batch, reply, enqueued: Instant::now() }
+    OffloadJob { req, key, is_shard, target_device, reply, enqueued: Instant::now() }
 }
 
 /// Spawn the result-stitcher for a sharded request; resolves the returned
-/// receiver with the assembled response once every shard reported.
+/// receiver with the assembled response once every shard reported. The
+/// stitcher also records the request (once, not per shard) in the
+/// per-client accounting on `shared`.
+///
+/// The stitcher starts **disarmed**: it does nothing until the caller
+/// sends on the returned arm channel (after the shard jobs were actually
+/// enqueued) and exits silently — no metrics, no response — if the arm
+/// sender is dropped instead. This keeps both failure orders clean: a
+/// spawn failure happens before anything is enqueued, and an enqueue
+/// failure (`try_submit` Full, shutdown) leaves no phantom per-client
+/// record from a stitcher watching jobs that never ran.
 fn spawn_stitcher(
     req: &OffloadRequest,
     parts: Vec<ShardPart>,
-) -> Result<mpsc::Receiver<Result<OffloadResponse, Error>>, Error> {
+    shared: Arc<Shared>,
+) -> Result<(mpsc::Receiver<Result<OffloadResponse, Error>>, mpsc::Sender<()>), Error> {
     let spec = req.shard.as_ref().expect("sharded request has a spec");
     let buf_meta: Vec<(MapType, usize)> =
         req.buffers.iter().map(|b| (b.map_type, b.bytes.len())).collect();
     let partitioned = spec.partitioned.clone();
     let elem_bytes = spec.elem_bytes;
+    let client = req.client.clone();
+    let enqueued = Instant::now();
     let (ftx, frx) = mpsc::channel();
+    let (arm_tx, arm_rx) = mpsc::channel::<()>();
     std::thread::Builder::new()
         .name("pool-stitch".into())
-        .spawn(move || stitch(parts, buf_meta, partitioned, elem_bytes, ftx))
+        .spawn(move || {
+            if arm_rx.recv().is_err() {
+                return; // never armed: the shard jobs were not enqueued
+            }
+            stitch(parts, buf_meta, partitioned, elem_bytes, ftx, StitchAccount {
+                shared,
+                client,
+                enqueued,
+            })
+        })
         .map_err(|e| Error::Sched(format!("cannot spawn shard stitcher: {e}")))?;
-    Ok(frx)
+    Ok((frx, arm_tx))
+}
+
+/// What the stitcher needs to account the whole request to its client.
+struct StitchAccount {
+    shared: Arc<Shared>,
+    client: String,
+    enqueued: Instant,
 }
 
 /// Wait for all shard responses and assemble the full-request response:
@@ -993,6 +1600,7 @@ fn stitch(
     partitioned: Vec<usize>,
     elem_bytes: usize,
     ftx: mpsc::Sender<Result<OffloadResponse, Error>>,
+    account: StitchAccount,
 ) {
     let mut got: Vec<(OffloadResponse, usize, usize)> = Vec::with_capacity(parts.len());
     let mut first_err: Option<Error> = None;
@@ -1012,6 +1620,17 @@ fn stitch(
             }
         }
     }
+    // Per-client accounting sees the *request* exactly once — its shard
+    // jobs are deliberately skipped at reply time, so fairness metrics
+    // cannot double-count a split request.
+    let max_wait = got.iter().map(|(r, _, _)| r.queue_wait).max().unwrap_or(Duration::ZERO);
+    record_client(
+        &account.shared,
+        &account.client,
+        max_wait,
+        account.enqueued.elapsed(),
+        first_err.is_none(),
+    );
     if let Some(e) = first_err {
         let _ = ftx.send(Err(e));
         return;
@@ -1082,7 +1701,7 @@ impl Drop for DevicePool {
         // an error instead of a channel disconnect. (Dropped task jobs
         // disconnect their handles, which also unblocks their waiters.)
         let mut q = self.shared.queue.lock().unwrap();
-        while let Some(job) = q.pop_front() {
+        for job in q.drain() {
             if let Job::Offload(j) = job {
                 let _ = j
                     .reply
@@ -1098,59 +1717,64 @@ enum Work {
     Task(TaskJob),
 }
 
-/// Worker body: pop the oldest affinity-compatible job — coalescing up to
-/// `batch_max` same-image offload requests behind it — run it, reply.
+/// Worker body, one queue visit per iteration:
+///
+/// 1. claim any shard job *pinned* to this device (reserved placement
+///    outranks everything — the stitch serializes on its slowest shard);
+/// 2. otherwise pick the effective batch limit — the static `batch_max`,
+///    or in adaptive mode [`decide_batch_max`] over the live signals —
+///    and take one weighted-DRR pop (leader + same-image followers);
+/// 3. run it, reply to every job, account per-client completion.
 fn worker_loop(shared: &Shared, id: usize) {
     let slot = &shared.slots[id];
     loop {
-        let work = {
+        let (work, decided) = {
             let mut q = shared.queue.lock().unwrap();
             'wait: loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(pos) = q
-                    .iter()
-                    .position(|j| j.affinity().matches(slot.spec.arch, slot.spec.kind))
-                {
-                    let first = q.remove(pos).expect("position is in range");
-                    match first {
-                        Job::Task(t) => break 'wait Work::Task(t),
-                        Job::Offload(j) => {
-                            let mut batch = vec![j];
-                            if shared.batch_max > 1 && !batch[0].no_batch {
-                                let key = batch[0].key;
-                                // After the removal, the element formerly at
-                                // pos+1 sits at pos: continue scanning there.
-                                let mut i = pos;
-                                while batch.len() < shared.batch_max && i < q.len() {
-                                    let compatible = matches!(
-                                        &q[i],
-                                        Job::Offload(o) if o.key == key
-                                            && !o.no_batch
-                                            && o.req.affinity.matches(slot.spec.arch, slot.spec.kind)
-                                    );
-                                    if compatible {
-                                        match q.remove(i) {
-                                            Some(Job::Offload(o)) => batch.push(o),
-                                            _ => unreachable!("index i held an offload job"),
-                                        }
-                                    } else {
-                                        i += 1;
-                                    }
-                                }
-                            }
-                            break 'wait Work::Batch(batch);
-                        }
+                // `reserved` is incremented in the same critical section
+                // as the pinned push and we hold the queue lock here, so
+                // this guard is exact: the O(queue) pinned scan runs only
+                // when a pinned job for this device actually exists.
+                if shared.reserved[id].load(Ordering::Relaxed) > 0 {
+                    if let Some(job) = q.pop_pinned(id) {
+                        shared.reserved[id].fetch_sub(1, Ordering::Relaxed);
+                        break 'wait (Work::Batch(vec![job]), 1);
                     }
+                }
+                let limit = if shared.adaptive {
+                    let idle = shared
+                        .slots
+                        .iter()
+                        .filter(|s| s.inflight.load(Ordering::Relaxed) == 0)
+                        .count();
+                    let signals = SchedSignals {
+                        queue_depth: q.len(),
+                        idle_devices: idle,
+                        device_count: shared.slots.len(),
+                        batch_efficiency: shared.controller.efficiency(),
+                    };
+                    decide_batch_max(&signals, shared.batch_max)
+                } else {
+                    shared.batch_max
+                };
+                if let Some(work) = q.pop(slot.spec, id, limit) {
+                    break 'wait (work, limit);
                 }
                 q = shared.cv.wait(q).unwrap();
             }
         };
         // Jobs left the queue: wake submitters blocked on a full queue.
+        // notify_all, not notify_one — a batched (or bulk-shard) pop can
+        // free several slots at once, and waking a single submitter
+        // would leave the rest blocked until the *next* pop even though
+        // space exists (the lost-wakeup shape this queue is tested for).
         shared.space.notify_all();
         match work {
             Work::Task(task) => {
+                let queue_wait = task.enqueued.elapsed();
                 slot.inflight.fetch_add(1, Ordering::Relaxed);
                 let lease = DeviceLease {
                     id: slot.id,
@@ -1163,10 +1787,15 @@ fn worker_loop(shared: &Shared, id: usize) {
                 // to the device would starve forever). The panicked
                 // task's handle resolves to an error via its dropped
                 // sender.
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    (task.run)(&lease)
-                }));
+                let (outcome, elapsed) = crate::util::stats::timed(|| {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        (task.run)(&lease)
+                    }))
+                });
                 slot.inflight.fetch_sub(1, Ordering::Relaxed);
+                slot.busy_ns
+                    .fetch_add(elapsed.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+                let ok = outcome.is_ok();
                 match outcome {
                     Ok(()) => {
                         slot.completed.fetch_add(1, Ordering::Relaxed);
@@ -1176,8 +1805,14 @@ fn worker_loop(shared: &Shared, id: usize) {
                         shared.failed.fetch_add(1, Ordering::Relaxed);
                     }
                 }
+                record_client(shared, &task.client, queue_wait, task.enqueued.elapsed(), ok);
             }
-            Work::Batch(batch) => run_offload_batch(shared, slot, batch),
+            Work::Batch(batch) => {
+                if shared.adaptive && !batch[0].is_shard {
+                    shared.controller.record(decided, batch.len());
+                }
+                run_offload_batch(shared, slot, batch);
+            }
         }
     }
 }
@@ -1192,6 +1827,7 @@ fn worker_loop(shared: &Shared, id: usize) {
 /// back to per-job sequential launches.
 fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>) {
     let n = batch.len();
+    let t_busy = Instant::now();
     slot.inflight.fetch_add(n, Ordering::Relaxed);
     slot.batches.fetch_add(1, Ordering::Relaxed);
     if n > 1 {
@@ -1226,7 +1862,11 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
         };
 
     slot.inflight.fetch_sub(n, Ordering::Relaxed);
-    for (job, result) in batch.into_iter().zip(results) {
+    slot.busy_ns
+        .fetch_add(t_busy.elapsed().as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    // One clients-table lock for the whole batch, not one per job.
+    let mut accounts = shared.clients.lock().unwrap();
+    for ((i, job), result) in batch.into_iter().enumerate().zip(results) {
         match &result {
             Ok(_) => {
                 slot.completed.fetch_add(1, Ordering::Relaxed);
@@ -1235,6 +1875,17 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
             Err(_) => {
                 shared.failed.fetch_add(1, Ordering::Relaxed);
             }
+        }
+        // Shard jobs are accounted by their request's stitcher, so the
+        // per-client metrics count split requests once.
+        if !job.is_shard {
+            record_into(
+                &mut accounts,
+                &job.req.client,
+                waits[i],
+                job.enqueued.elapsed(),
+                result.is_ok(),
+            );
         }
         // A dropped handle is fine: the work still ran.
         let _ = job.reply.send(result);
@@ -1430,6 +2081,8 @@ pub struct DeviceMetrics {
     /// Requests currently executing on this device (a whole batch counts
     /// each of its jobs).
     pub inflight: usize,
+    /// Shard jobs queued with this device reserved for them.
+    pub reserved: usize,
     /// Requests completed on this device.
     pub completed: u64,
     /// Queue pops (each pop executes a batch of ≥ 1 jobs).
@@ -1438,6 +2091,9 @@ pub struct DeviceMetrics {
     pub batched_jobs: u64,
     /// Largest batch popped so far.
     pub max_batch: usize,
+    /// Fraction of pool uptime this device's worker spent executing
+    /// work, in `[0, 1]`.
+    pub occupancy: f64,
     /// Image-cache counters.
     pub cache: CacheStats,
     /// Images currently cached.
@@ -1468,13 +2124,52 @@ pub struct PoolMetrics {
     pub sharded_requests: u64,
     /// Shard jobs those requests produced.
     pub shard_jobs: u64,
+    /// Whether the adaptive scheduling layer is on.
+    pub adaptive: bool,
+    /// Adaptive-controller counters (all zero when `adaptive` is off).
+    pub adaptive_stats: AdaptiveStats,
     /// Time since the pool started.
     pub uptime: Duration,
     /// Per-device breakdown.
     pub devices: Vec<DeviceMetrics>,
+    /// Per-client breakdown, sorted by client tag. Counts *requests*
+    /// (a sharded request is one entry) plus device tasks, so totals
+    /// can differ from the job-level `completed`.
+    pub clients: Vec<ClientMetrics>,
+}
+
+/// Per-client fairness metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct ClientMetrics {
+    /// Client tag ("" = the default client).
+    pub client: String,
+    /// Configured scheduling weight (1.0 unless overridden).
+    pub weight: f64,
+    /// Requests completed for this client.
+    pub completed: u64,
+    /// Requests failed for this client.
+    pub failed: u64,
+    /// Time the client's requests sat queued before a worker claimed
+    /// them.
+    pub queue_wait: Summary,
+    /// Submit-to-completion sojourn times.
+    pub latency: Summary,
 }
 
 impl PoolMetrics {
+    /// `client`'s fraction of all client-recorded completions (0 when
+    /// nothing completed). Fair-share comparisons in the fairness tests
+    /// and bench are phrased over this.
+    pub fn client_share(&self, client: &str) -> f64 {
+        let total: u64 = self.clients.iter().map(|c| c.completed).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.clients
+            .iter()
+            .find(|c| c.client == client)
+            .map_or(0.0, |c| c.completed as f64 / total as f64)
+    }
     /// Aggregated image-cache counters.
     pub fn cache(&self) -> CacheStats {
         let mut s = CacheStats::default();
@@ -1538,7 +2233,8 @@ mod tests {
     fn pool_config_from_config_document() {
         let cfg = Config::parse(
             "[pool]\ndevices = [\"portable:nvptx64\", \"legacy:amdgcn\"]\nopt = \"O0\"\n\
-             batch_max = 4\nqueue_cap = 32\nshard_min_trips = 100\ncache_budget_bytes = 65536",
+             batch_max = 4\nqueue_cap = 32\nshard_min_trips = 100\ncache_budget_bytes = 65536\n\
+             adaptive = false\nfairness = false\nclient_weights = [\"qmc=4\", \"batch=0.5\"]",
         )
         .unwrap();
         let pc = PoolConfig::from_config(&cfg).unwrap();
@@ -1549,9 +2245,17 @@ mod tests {
         assert_eq!(pc.queue_cap, 32);
         assert_eq!(pc.shard_min_trips, 100);
         assert_eq!(pc.cache_budget_bytes, 65536);
-        // Missing section → default mixed pool.
+        assert!(!pc.adaptive);
+        assert!(!pc.fairness);
+        assert_eq!(
+            pc.client_weights,
+            vec![("qmc".to_string(), 4.0), ("batch".to_string(), 0.5)]
+        );
+        // Missing section → default mixed pool (adaptive + fairness on).
         let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
         assert_eq!(pc, PoolConfig::mixed4());
+        assert!(pc.adaptive);
+        assert!(pc.fairness);
         // Bad spec errors.
         let cfg = Config::parse("[pool]\ndevices = [\"warp9:nvptx64\"]").unwrap();
         assert!(PoolConfig::from_config(&cfg).is_err());
@@ -1559,6 +2263,13 @@ mod tests {
         let cfg = Config::parse("[pool]\nbatch_max = 0").unwrap();
         assert!(PoolConfig::from_config(&cfg).is_err());
         let cfg = Config::parse("[pool]\nqueue_cap = -1").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        // Malformed adaptive/fairness/weights error.
+        let cfg = Config::parse("[pool]\nadaptive = 3").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[pool]\nclient_weights = [\"qmc\"]").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[pool]\nclient_weights = [\"qmc=-1\"]").unwrap();
         assert!(PoolConfig::from_config(&cfg).is_err());
     }
 
@@ -1579,6 +2290,7 @@ mod tests {
             args: vec![],
             affinity,
             shard: None,
+            client: String::new(),
         }
     }
 
@@ -1594,6 +2306,120 @@ mod tests {
         let r = base_request(Affinity::on_arch(Arch::Amdgcn));
         assert!(pool.submit(r).is_err());
         assert_eq!(pool.metrics().submitted, 0);
+    }
+
+    fn queued_job(client: &str, target: Option<usize>) -> Job {
+        let mut req = base_request(Affinity::any());
+        req.client = client.to_string();
+        let (tx, _rx) = mpsc::channel();
+        Job::Offload(make_offload_job(req, tx, target.is_some(), target))
+    }
+
+    fn pop_client(q: &mut SchedQueue, spec: DeviceSpec, limit: usize) -> Option<String> {
+        match q.pop(spec, 0, limit)? {
+            Work::Batch(batch) => Some(batch[0].req.client.clone()),
+            Work::Task(_) => None,
+        }
+    }
+
+    const SPEC: DeviceSpec = DeviceSpec { kind: RuntimeKind::Portable, arch: Arch::Nvptx64 };
+
+    #[test]
+    fn drr_alternates_between_backlogged_clients() {
+        let mut q = SchedQueue::new(true, &[]);
+        for _ in 0..4 {
+            q.push(queued_job("a", None));
+        }
+        for _ in 0..2 {
+            q.push(queued_job("b", None));
+        }
+        let order: Vec<String> = (0..6).map(|_| pop_client(&mut q, SPEC, 1).unwrap()).collect();
+        assert_eq!(order, ["a", "b", "a", "b", "a", "a"], "chatty a must not starve b");
+        assert!(q.pop(SPEC, 0, 1).is_none());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn drr_weights_skew_the_pull_share() {
+        let mut q = SchedQueue::new(true, &[("a".to_string(), 3.0)]);
+        for _ in 0..6 {
+            q.push(queued_job("a", None));
+            q.push(queued_job("b", None));
+        }
+        let first8: Vec<String> = (0..8).map(|_| pop_client(&mut q, SPEC, 1).unwrap()).collect();
+        let a = first8.iter().filter(|c| *c == "a").count();
+        let b = first8.len() - a;
+        assert!(a >= 2 * b, "weight-3 client must dominate the early pops: {first8:?}");
+    }
+
+    #[test]
+    fn coalescing_crosses_lanes_for_same_image_jobs() {
+        let mut q = SchedQueue::new(true, &[]);
+        q.push(queued_job("a", None));
+        for _ in 0..3 {
+            q.push(queued_job("b", None));
+        }
+        // All four jobs share one module, so a limit-4 pop takes them all.
+        match q.pop(SPEC, 0, 4).unwrap() {
+            Work::Batch(batch) => {
+                assert_eq!(batch.len(), 4);
+                assert_eq!(batch[0].req.client, "a", "leader comes from the served lane");
+            }
+            Work::Task(_) => panic!("expected a batch"),
+        }
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn fairness_off_collapses_to_fifo() {
+        let mut q = SchedQueue::new(false, &[]);
+        q.push(queued_job("a", None));
+        q.push(queued_job("a", None));
+        q.push(queued_job("b", None));
+        let order: Vec<String> = (0..3).map(|_| pop_client(&mut q, SPEC, 1).unwrap()).collect();
+        assert_eq!(order, ["a", "a", "b"], "without fairness the queue is a global FIFO");
+    }
+
+    #[test]
+    fn pinned_jobs_are_invisible_to_other_workers() {
+        let mut q = SchedQueue::new(true, &[]);
+        q.push(queued_job("a", Some(1)));
+        // Worker 0 sees nothing poppable.
+        assert!(q.pop(SPEC, 0, 4).is_none());
+        assert!(q.pop_pinned(0).is_none());
+        // Worker 1 claims it via the pinned path.
+        let job = q.pop_pinned(1).expect("pinned job for device 1");
+        assert_eq!(job.target_device, Some(1));
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn drained_one_off_lanes_are_compacted() {
+        let mut q = SchedQueue::new(true, &[]);
+        for i in 0..200 {
+            q.push(queued_job(&format!("oneoff{i}"), None));
+            let _ = q.pop(SPEC, 0, 1);
+        }
+        assert!(
+            q.lanes.len() <= 130,
+            "drained one-off lanes must be reclaimed ({} lanes)",
+            q.lanes.len()
+        );
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn queue_peak_tracks_depth_under_the_lock() {
+        let mut q = SchedQueue::new(true, &[]);
+        for _ in 0..3 {
+            q.push(queued_job("a", None));
+        }
+        assert_eq!((q.len(), q.peak()), (3, 3));
+        let _ = q.pop(SPEC, 0, 1);
+        q.push(queued_job("b", None));
+        assert_eq!((q.len(), q.peak()), (3, 3));
+        q.push(queued_job("b", None));
+        assert_eq!(q.peak(), 4);
     }
 
     #[test]

@@ -117,6 +117,7 @@ pub fn scale_request_by(
         args: vec![KernelArg::Buf(0), KernelArg::Imm(data.len() as u64)],
         affinity,
         shard: None,
+        client: String::new(),
     };
     (req, expected)
 }
@@ -173,6 +174,7 @@ pub fn saxpy_request(
         ],
         affinity,
         shard: None,
+        client: String::new(),
     };
     (req, expected)
 }

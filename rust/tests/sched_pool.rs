@@ -7,10 +7,11 @@ use omprt::coordinator::PoolCoordinator;
 use omprt::devrt::RuntimeKind;
 use omprt::ir::passes::OptLevel;
 use omprt::sched::workload::{
-    saxpy_request, scale_request, sharded_saxpy_request, sharded_scale_request,
+    saxpy_request, scale_request, scale_request_by, sharded_saxpy_request, sharded_scale_request,
 };
 use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig, TrySubmitError};
 use omprt::sim::Arch;
+use std::time::Duration;
 
 const CLIENTS: usize = 8;
 const PER_CLIENT: usize = 32;
@@ -381,6 +382,248 @@ fn backpressure_bounds_the_queue() {
         m.peak_queue_depth
     );
     assert_eq!(m.failed, 0);
+}
+
+/// Lost-wakeup regression: a single batched pop frees several queue
+/// slots at once, and *every* submitter blocked on the `space` condvar
+/// must observe the space — waking only one (or none) would leave the
+/// rest parked forever even though the queue has room.
+#[test]
+fn batched_pop_unblocks_every_waiting_submitter() {
+    let pool = DevicePool::new(
+        &PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)
+            .with_queue_cap(4)
+            .with_batch_max(8),
+    )
+    .unwrap();
+    // Deterministically occupy the single worker with a gated task.
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let task = pool
+        .run_on(Affinity::any(), move |_lease| {
+            let _ = gate_rx.recv();
+        })
+        .unwrap();
+    while pool.metrics().queue_depth > 0 || pool.metrics().devices[0].inflight == 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Fill the queue to the cap with same-image requests: the worker's
+    // next visit coalesces all four into one pop, freeing 4 slots.
+    let data = vec![1.0f32; 16];
+    let mut handles = vec![];
+    for _ in 0..4 {
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        handles.push((pool.submit(req).unwrap(), want));
+    }
+    assert_eq!(pool.metrics().queue_depth, 4);
+    // Three submitters block on the full queue at once.
+    let blocked = std::thread::scope(|scope| {
+        let pool = &pool;
+        let blockers: Vec<_> = (0..3)
+            .map(|_| {
+                let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+                scope.spawn(move || {
+                    let h = pool.submit(req).unwrap(); // blocks until space
+                    (h.wait().unwrap(), want)
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        for b in &blockers {
+            assert!(!b.is_finished(), "submit must block while the queue is full");
+        }
+        // One batched pop must free enough space for all three.
+        gate_tx.send(()).unwrap();
+        blockers.into_iter().map(|b| b.join().unwrap()).collect::<Vec<_>>()
+    });
+    for (resp, want) in blocked {
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    task.wait().unwrap();
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let m = pool.metrics();
+    assert_eq!(m.failed, 0);
+    assert!(
+        m.peak_queue_depth <= 4,
+        "queue depth must never exceed the cap (peak {})",
+        m.peak_queue_depth
+    );
+}
+
+/// Starvation regression: one chatty client floods a 2-device pool with
+/// a deep backlog, then three quiet clients submit small bursts. With
+/// weighted-DRR fairness the quiet bursts must finish while the chatty
+/// backlog is still draining, and their queue-wait tail must undercut
+/// the chatty tail — under the old global FIFO they would have waited
+/// behind all of it.
+#[test]
+fn quiet_clients_are_not_starved_by_a_chatty_one() {
+    const CHATTY: usize = 400;
+    const QUIET: usize = 8;
+    let pool =
+        DevicePool::new(&PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 2)).unwrap();
+    // Gate both workers so the backlog builds deterministically.
+    let mut gates = vec![];
+    let mut tasks = vec![];
+    for _ in 0..2 {
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        tasks.push(
+            pool.run_on(Affinity::any(), move |_lease| {
+                let _ = rx.recv();
+            })
+            .unwrap(),
+        );
+        gates.push(tx);
+    }
+    while pool.metrics().queue_depth > 0
+        || pool.metrics().devices.iter().any(|d| d.inflight == 0)
+    {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Distinct scale factors → distinct modules per client, so quiet
+    // jobs cannot ride the chatty client's fused batches.
+    let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let mut chatty_handles = vec![];
+    for _ in 0..CHATTY {
+        let (mut req, want) = scale_request_by(1.5, &data, Affinity::any(), OptLevel::O2);
+        req.client = "chatty".into();
+        chatty_handles.push((pool.submit(req).unwrap(), want));
+    }
+    let mut quiet_handles: Vec<Vec<_>> = vec![];
+    for (qi, factor) in [2.5f32, 3.5, 4.5].iter().enumerate() {
+        let mut hs = vec![];
+        for _ in 0..QUIET {
+            let (mut req, want) = scale_request_by(*factor, &data, Affinity::any(), OptLevel::O2);
+            req.client = format!("quiet{qi}");
+            hs.push((pool.submit(req).unwrap(), want));
+        }
+        quiet_handles.push(hs);
+    }
+    for g in gates {
+        g.send(()).unwrap();
+    }
+    // The first quiet burst must complete while the chatty backlog still
+    // drains: two more quiet lanes are backlogged at that point, so DRR
+    // cannot have granted chatty more than a rotation's worth of pops.
+    let mut quiet_waits: Vec<Duration> = vec![];
+    let mut first = true;
+    for hs in quiet_handles {
+        for (h, want) in hs {
+            let resp = h.wait().unwrap();
+            assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+            quiet_waits.push(resp.queue_wait);
+        }
+        if first {
+            first = false;
+            let chatty_done_then = pool
+                .metrics()
+                .clients
+                .iter()
+                .find(|c| c.client == "chatty")
+                .map_or(0, |c| c.completed);
+            assert!(
+                (chatty_done_then as usize) < CHATTY,
+                "all {CHATTY} chatty requests finished before the quiet clients — starved"
+            );
+        }
+    }
+    let mut chatty_waits: Vec<Duration> = vec![];
+    for (h, want) in chatty_handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+        chatty_waits.push(resp.queue_wait);
+    }
+    for t in tasks {
+        t.wait().unwrap();
+    }
+    // Queue waits are recorded by the workers, so these percentiles are
+    // immune to test-thread scheduling: under the old global FIFO the
+    // quiet tail would sit *behind* the whole chatty backlog (quiet p95
+    // >> chatty p50); under DRR it undercuts the chatty median.
+    quiet_waits.sort();
+    chatty_waits.sort();
+    let quiet_p95 = quiet_waits[(quiet_waits.len() * 95 / 100).min(quiet_waits.len() - 1)];
+    let chatty_p50 = chatty_waits[chatty_waits.len() / 2];
+    assert!(
+        quiet_p95 < chatty_p50,
+        "quiet p95 queue wait ({quiet_p95:?}) must undercut the chatty median ({chatty_p50:?})"
+    );
+    // Every client's throughput is visible in the fairness metrics.
+    pool.quiesce();
+    let m = pool.metrics();
+    for qi in 0..3 {
+        let name = format!("quiet{qi}");
+        let row = m.clients.iter().find(|c| c.client == name).expect("quiet client row");
+        assert_eq!(row.completed, QUIET as u64);
+        assert!(m.client_share(&name) > 0.0);
+    }
+}
+
+/// Per-client accounting counts a sharded request once (its stitcher
+/// records it), while job-level pool totals count the shard jobs — and
+/// reservations drain back to zero.
+#[test]
+fn shard_metrics_do_not_double_count() {
+    let pool = DevicePool::new(
+        &PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4).with_shard_min_trips(1000),
+    )
+    .unwrap();
+    let n = 64_000;
+    let data: Vec<f32> = (0..n).map(|i| ((i * 3) % 89) as f32).collect();
+    let (mut req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+    req.client = "shardy".into();
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(resp.shards, 4);
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    pool.quiesce();
+    let m = pool.metrics();
+    // Job-level totals: one entry per shard job, no stitched extras.
+    assert_eq!(m.sharded_requests, 1);
+    assert_eq!(m.shard_jobs, 4);
+    assert_eq!(m.submitted, 4);
+    assert_eq!(m.completed, 4);
+    let per_device: u64 = m.devices.iter().map(|d| d.completed).sum();
+    assert_eq!(per_device, 4, "stitching must not double-count device completions");
+    // Client-level totals: the split request is one request.
+    let row = m.clients.iter().find(|c| c.client == "shardy").expect("client row");
+    assert_eq!((row.completed, row.failed), (1, 0));
+    assert_eq!(row.latency.count(), 1);
+    // Reservations were consumed when the pinned shards were claimed.
+    for d in &m.devices {
+        assert_eq!(d.reserved, 0, "device {} still holds a reservation", d.id);
+    }
+}
+
+/// Static mode (`adaptive = false`, `fairness = false`) preserves the
+/// PR-2 scheduler: fixed batch limit, global FIFO, correct results.
+#[test]
+fn static_mode_still_serves_correct_results() {
+    let pool = DevicePool::new(
+        &PoolConfig::mixed4().with_adaptive(false).with_fairness(false),
+    )
+    .unwrap();
+    let data: Vec<f32> = (0..96).map(|i| i as f32).collect();
+    let mut handles = vec![];
+    for i in 0..32 {
+        let (mut req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        req.client = format!("c{}", i % 4);
+        handles.push((pool.submit(req).unwrap(), want));
+    }
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    pool.quiesce();
+    let m = pool.metrics();
+    assert_eq!(m.completed, 32);
+    assert!(!m.adaptive);
+    assert_eq!(m.adaptive_stats.decisions, 0, "static mode must not consult the controller");
+    // Client tags are still *accounted* even when fairness scheduling
+    // is off (they just share one lane).
+    let total: u64 = m.clients.iter().map(|c| c.completed).sum();
+    assert_eq!(total, 32);
 }
 
 /// Device leases run arbitrary closures on pool workers with exclusive
