@@ -16,7 +16,12 @@
 //! 5. **fairness** — 8 equal-weight clients with identical fixed
 //!    backlogs on the mixed pool, progress sampled when the first
 //!    client finishes: no client's completion share may fall below half
-//!    its fair share (1/8).
+//!    its fair share (1/8);
+//! 6. **SLO** — 1 latency-sensitive client (25ms target, sparse
+//!    sequential requests) + 7 bulk clients (async backlogs), run with
+//!    and without `client_slos`: the SLO client's p95 sojourn must
+//!    undercut the bulk clients' median, while bulk throughput stays
+//!    ≥ 0.8x the fairness-only baseline.
 //!
 //! Results are also written as JSON to `BENCH_pool.json` (override the
 //! path with the `BENCH_POOL_JSON` env var) so CI can archive them.
@@ -29,6 +34,7 @@ use omprt::sched::workload::{
 };
 use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig};
 use omprt::sim::Arch;
+use omprt::util::stats::percentile;
 use std::time::Instant;
 
 const ELEMS: usize = 256;
@@ -319,6 +325,121 @@ fn fairness_scenario(per_client: usize) -> Vec<f64> {
     shares
 }
 
+/// One SLO-scenario run: 7 bulk clients submit async backlogs while the
+/// "slo" client issues sparse sequential submit→wait requests of its own
+/// image. Returns `(slo_p95_us, bulk_median_us, bulk_rate, misses,
+/// preemptions)`; latencies come from the pool's own per-client sojourn
+/// samples, so both sides are measured identically.
+fn slo_run(with_slo: bool, per_client: usize) -> (f64, f64, f64, u64, u64) {
+    const BULK: usize = 7;
+    const SLO_FACTOR: f32 = 9.5; // distinct image for the SLO client
+    let mut cfg = PoolConfig::mixed4();
+    if with_slo {
+        cfg = cfg.with_client_slo("slo", 25.0);
+    }
+    let pool = DevicePool::new(&cfg).unwrap();
+    let data: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
+    // Warm every image across the devices before measuring.
+    let mut warm = vec![];
+    for i in 0..8 {
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        warm.push((pool.submit(req).unwrap(), want));
+        let y: Vec<f32> = (0..ELEMS).map(|k| (k + i) as f32).collect();
+        let (req, want) = saxpy_request(0.5, &data, &y, Affinity::any(), OptLevel::O2);
+        warm.push((pool.submit(req).unwrap(), want));
+        let (req, want) = scale_request_by(SLO_FACTOR, &data, Affinity::any(), OptLevel::O2);
+        warm.push((pool.submit(req).unwrap(), want));
+    }
+    for (h, want) in warm {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    pool.quiesce();
+    // Warm-up traffic ran under the default client tag, so the per-client
+    // samples below cover only the measured window.
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for b in 0..BULK {
+            let pool = &pool;
+            let data = &data;
+            scope.spawn(move || {
+                let mut handles = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let (mut req, want) = if i % 2 == 0 {
+                        scale_request(data, Affinity::any(), OptLevel::O2)
+                    } else {
+                        let y: Vec<f32> = (0..ELEMS).map(|k| (k + b) as f32).collect();
+                        saxpy_request(0.5, data, &y, Affinity::any(), OptLevel::O2)
+                    };
+                    req.client = format!("bulk{b}");
+                    handles.push((pool.submit(req).unwrap(), want));
+                }
+                for (h, want) in handles {
+                    let resp = h.wait().unwrap();
+                    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+                }
+            });
+        }
+        let pool = &pool;
+        let data = &data;
+        scope.spawn(move || {
+            // Sparse, closed-loop: one request in flight at a time, as a
+            // latency-sensitive interactive client behaves. Never fewer
+            // than 16 requests, so the asserted p95 is not just the
+            // worst single sample in smoke mode.
+            for _ in 0..per_client.max(16) {
+                let (mut req, want) =
+                    scale_request_by(SLO_FACTOR, data, Affinity::any(), OptLevel::O2);
+                req.client = "slo".into();
+                let resp = pool.submit(req).unwrap().wait().unwrap();
+                assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+            }
+        });
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = pool.metrics();
+    let slo_p95 = m
+        .clients
+        .iter()
+        .find(|c| c.client == "slo")
+        .expect("slo client metrics")
+        .latency_p95_us();
+    let bulk_samples: Vec<f64> = m
+        .clients
+        .iter()
+        .filter(|c| c.client.starts_with("bulk"))
+        .flat_map(|c| c.latency_samples_us.iter().copied())
+        .collect();
+    let bulk_median = percentile(&bulk_samples, 0.5);
+    let bulk_rate = (BULK * per_client) as f64 / elapsed;
+    let (_, misses) = m.deadline_totals();
+    (slo_p95, bulk_median, bulk_rate, misses, m.preemptions)
+}
+
+/// Deadline-aware scheduling: the SLO client's tail must beat the bulk
+/// median without collapsing bulk throughput.
+fn slo_scenario(per_client: usize) -> (f64, f64, f64, f64, u64, u64) {
+    println!("\n--- SLO: 1 latency client (25ms) + 7 bulk x {per_client}, mixed 4-device pool ---");
+    let (_, _, bulk_base, _, _) = slo_run(false, per_client);
+    let (slo_p95, bulk_median, bulk_slo, misses, preemptions) = slo_run(true, per_client);
+    println!(
+        "slo p95 {slo_p95:>9.1} us | bulk median {bulk_median:>9.1} us | \
+         bulk {bulk_slo:>7.1} launches/s vs baseline {bulk_base:>7.1} ({:.2}x) | \
+         {misses} misses, {preemptions} preemptions",
+        bulk_slo / bulk_base
+    );
+    assert!(
+        slo_p95 < bulk_median,
+        "SLO client's p95 ({slo_p95:.1} us) must undercut the bulk median ({bulk_median:.1} us)"
+    );
+    assert!(
+        bulk_slo >= 0.8 * bulk_base,
+        "bulk throughput under SLOs must stay >= 0.8x the fairness-only baseline \
+         (got {bulk_slo:.1} vs {bulk_base:.1} launches/s)"
+    );
+    (slo_p95, bulk_median, bulk_base, bulk_slo, misses, preemptions)
+}
+
 /// Minimal hand-rolled JSON (the offline crate set has no serde).
 fn write_bench_json(path: &str, json: &str) {
     match std::fs::write(path, json) {
@@ -370,6 +491,8 @@ fn main() {
     let (t_single_ms, t_quad_ms, shards) = sharded_large_launch_scenario(shard_n);
     let (static_rate, adaptive_rate) = adaptive_vs_static_scenario(per_client);
     let shares = fairness_scenario(4 * per_client);
+    let (slo_p95, bulk_median, bulk_base, bulk_slo, misses, preemptions) =
+        slo_scenario(per_client);
 
     let min_share = shares.iter().cloned().fold(f64::INFINITY, f64::min);
     let json = format!(
@@ -383,9 +506,13 @@ fn main() {
          \"adaptive\": {{\"static32\": {static_rate:.1}, \"adaptive\": {adaptive_rate:.1}, \
          \"ratio\": {:.3}}},\n  \
          \"fairness\": {{\"clients\": 8, \"fair_share\": 0.125, \"min_share\": {min_share:.4}, \
-         \"shares\": [{}]}}\n}}\n",
+         \"shares\": [{}]}},\n  \
+         \"slo\": {{\"slo_p95_us\": {slo_p95:.1}, \"bulk_median_us\": {bulk_median:.1}, \
+         \"bulk_rate_baseline\": {bulk_base:.1}, \"bulk_rate_slo\": {bulk_slo:.1}, \
+         \"bulk_ratio\": {:.3}, \"misses\": {misses}, \"preemptions\": {preemptions}}}\n}}\n",
         adaptive_rate / static_rate,
         shares.iter().map(|s| format!("{s:.4}")).collect::<Vec<_>>().join(", "),
+        bulk_slo / bulk_base,
     );
     let path =
         std::env::var("BENCH_POOL_JSON").unwrap_or_else(|_| "BENCH_pool.json".to_string());

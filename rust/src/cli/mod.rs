@@ -7,7 +7,8 @@
 //! omprt conformance
 //! omprt code-compare
 //! omprt bench NAME  [--arch A] [--runtime legacy|portable] [--scale S] [--pool] [--client C]
-//! omprt pool        [--config FILE] [--requests N] [--elems N] [--client C]
+//!                   [--slo-ms MS]
+//! omprt pool        [--config FILE] [--requests N] [--elems N] [--client C] [--slo-ms MS]
 //!                   [--batch N] [--queue-cap N] [--cache-budget BYTES] [--shard-elems N]
 //!                   [--adaptive | --no-adaptive]
 //! omprt info
@@ -101,6 +102,21 @@ impl Args {
         }
         if self.has("no-adaptive") {
             cfg.adaptive = false;
+        }
+        // `--slo-ms MS` declares a latency target for the client named by
+        // `--client` (or the default client): its requests are stamped
+        // with deadlines and pulled earliest-deadline-first once inside
+        // their panic window.
+        if let Some(ms) = self.flags.get("slo-ms") {
+            let ms: f64 = ms.parse().map_err(|_| {
+                crate::util::Error::Config(format!("--slo-ms wants a number of ms, got `{ms}`"))
+            })?;
+            if !(ms > 0.0 && ms.is_finite()) {
+                return Err(crate::util::Error::Config(format!(
+                    "--slo-ms wants a positive finite number of ms, got `{ms}`"
+                )));
+            }
+            cfg = cfg.with_client_slo(&self.client(), ms);
         }
         Ok(cfg)
     }
@@ -406,6 +422,7 @@ fn print_help() {
          FLAGS: --arch nvptx64|amdgcn  --scale small|paper  --reps N  --runtime legacy|portable\n\
          \x20      pool: --config FILE ([pool] table)  --requests N  --elems N  --client NAME\n\
          \x20            --batch N  --queue-cap N  --cache-budget BYTES  --shard-elems N\n\
-         \x20            --adaptive|--no-adaptive (occupancy-driven batch/shard sizing)"
+         \x20            --adaptive|--no-adaptive (occupancy-driven batch/shard sizing)\n\
+         \x20            --slo-ms MS (latency target for --client: deadline-aware EDF pull)"
     );
 }

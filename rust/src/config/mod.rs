@@ -6,7 +6,7 @@
 //! integers. Used by benchmark run configs, the CLI defaults, the
 //! AOT artifact manifest written by `python/compile/aot.py`, and the
 //! `[pool]` scheduler table (devices, batching/sharding knobs, and the
-//! `adaptive` / `fairness` / `client_weights` keys — see
+//! `adaptive` / `fairness` / `client_weights` / `client_slos` keys — see
 //! [`crate::sched::PoolConfig::from_config`]).
 //!
 //! ```text

@@ -113,6 +113,11 @@ impl PoolCoordinator {
         } else {
             out.push_str("adaptive: off (static batch_max / shard fan-out)\n");
         }
+        let (deadlined, missed) = m.deadline_totals();
+        out.push_str(&format!(
+            "slo: {} deadlined requests, {} missed | {} EDF preemptions\n",
+            deadlined, missed, m.preemptions
+        ));
         out.push_str(
             "dev | runtime  | arch    | done  | maxbat | occ%  | images | hits/miss/evict | mem live/peak\n",
         );
@@ -139,23 +144,31 @@ impl PoolCoordinator {
         if !m.clients.is_empty() {
             let uptime = m.uptime.as_secs_f64().max(1e-9);
             out.push_str(
-                "client           | weight | done  | fail | share% | req/s   | avg wait (us) | avg sojourn (us)\n",
+                "client           | weight | slo(ms) | done  | fail | share% | req/s   | avg wait (us) | avg sojourn (us) | p95 (us)  | miss | slack avg (ms)\n",
             );
             out.push_str(
-                "-----------------+--------+-------+------+--------+---------+---------------+-----------------\n",
+                "-----------------+--------+---------+-------+------+--------+---------+---------------+------------------+-----------+------+---------------\n",
             );
             for c in &m.clients {
                 let name = if c.client.is_empty() { "(default)" } else { &c.client };
+                let slo = match c.slo {
+                    Some(t) => format!("{:.1}", t.as_secs_f64() * 1e3),
+                    None => "-".to_string(),
+                };
                 out.push_str(&format!(
-                    "{:<17}| {:>6.2} | {:>5} | {:>4} | {:>5.1} | {:>7.1} | {:>13.3} | {:>15.3}\n",
+                    "{:<17}| {:>6.2} | {:>7} | {:>5} | {:>4} | {:>5.1} | {:>7.1} | {:>13.3} | {:>16.3} | {:>9.1} | {:>4} | {:>13.3}\n",
                     name,
                     c.weight,
+                    slo,
                     c.completed,
                     c.failed,
                     m.client_share(&c.client) * 100.0,
                     c.completed as f64 / uptime,
                     c.queue_wait.avg_us(),
-                    c.latency.avg_us()
+                    c.latency.avg_us(),
+                    c.latency_p95_us(),
+                    c.deadline_miss,
+                    c.slack.avg_us() / 1e3
                 ));
             }
         }
@@ -215,8 +228,15 @@ mod tests {
         let def = m.clients.iter().find(|c| c.client.is_empty()).expect("default client row");
         assert_eq!(def.completed, 8);
         assert!((m.client_share("") - 1.0).abs() < 1e-12);
-        // Occupancy and adaptive-controller state surface in the report.
+        // Occupancy, adaptive-controller and SLO state surface in the
+        // report (miss + slack columns, deadline/preemption line).
         assert!(text.contains("occ%"), "{text}");
         assert!(text.contains("adaptive:"), "{text}");
+        assert!(text.contains("slo:"), "{text}");
+        assert!(text.contains("miss"), "{text}");
+        assert!(text.contains("slack avg"), "{text}");
+        // A best-effort workload has no deadlines and no misses.
+        let (deadlined, missed) = m.deadline_totals();
+        assert_eq!((deadlined, missed), (0, 0));
     }
 }

@@ -29,8 +29,11 @@
 //!   for the pool.
 //! * [`sched`] — the device-pool offload scheduler: N devices (mixed
 //!   arch, mixed runtime build) behind an async submission queue, with
-//!   affinity-aware least-loaded placement and a kernel-image cache keyed
-//!   by `(module content hash, arch, runtime kind, opt level)`.
+//!   affinity-aware least-loaded placement, adaptive launch batching and
+//!   cross-device sharding, per-client weighted-DRR fairness with
+//!   deadline-aware (SLO) preemption, and a kernel-image cache keyed
+//!   by `(module content hash, arch, runtime kind, opt level)`. See
+//!   `ARCHITECTURE.md` at the repo root for the end-to-end picture.
 //! * [`benchmarks`] — the SPEC ACCEL analogs (postencil, polbm, pomriq,
 //!   pep, pcg, pbt) and the miniQMC proxy app with its two target regions
 //!   (`evaluate_vgh`, `evaluateDetRatios`).

@@ -37,6 +37,12 @@ pub struct SchedSignals {
     /// EWMA of observed batch fill: popped jobs / decided limit, in
     /// `[0, 1]`. 1.0 = every decided slot was filled by a compatible job.
     pub batch_efficiency: f64,
+    /// A queued request eligible for this worker is inside its SLO panic
+    /// window (deadline minus predicted service time — see
+    /// [`crate::sched::slo::ServiceEwma`]). Urgent work must not be
+    /// trapped behind a long fused grid, so the decided limit collapses
+    /// to 1 while this holds.
+    pub urgent: bool,
 }
 
 /// Effective batch limit for one queue visit.
@@ -48,8 +54,16 @@ pub struct SchedSignals {
 /// queue is key-diverse and a large scan limit only buys O(depth)
 /// compare work. Always within `[1, cap]`; a depth of 0 or 1 degrades
 /// to unbatched pops (lowest latency).
+///
+/// When `urgent` is set — some eligible lane is inside its SLO panic
+/// window — the limit collapses to 1 regardless of depth: every pop
+/// must return its device to the queue as fast as possible so deadline
+/// work is never stuck behind a fused grid of bulk launches.
 pub fn decide_batch_max(s: &SchedSignals, cap: usize) -> usize {
     let cap = cap.max(1);
+    if s.urgent {
+        return 1;
+    }
     if s.queue_depth <= 1 {
         return 1;
     }
@@ -184,6 +198,7 @@ mod tests {
             idle_devices: idle,
             device_count: 4,
             batch_efficiency: eff,
+            urgent: false,
         }
     }
 
@@ -211,6 +226,18 @@ mod tests {
         assert!(diverse >= 1);
         // Efficiency is floored: even 0.0 keeps a quarter of the share.
         assert_eq!(decide_batch_max(&signals(64, 1, 0.0), 32), 16);
+    }
+
+    #[test]
+    fn urgent_forces_single_pops() {
+        // A deep queue that would normally batch hard collapses to
+        // singles while SLO panic work is visible.
+        let mut s = signals(64, 1, 1.0);
+        s.urgent = true;
+        assert_eq!(decide_batch_max(&s, 32), 1);
+        // ...and recovers the moment the panic clears.
+        s.urgent = false;
+        assert_eq!(decide_batch_max(&s, 32), 32);
     }
 
     #[test]

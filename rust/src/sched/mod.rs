@@ -90,6 +90,36 @@
 //! dominate — the request runs unsplit on a single device
 //! (`shards = 1`).
 //!
+//! ## SLO lifecycle (deadline-aware pull)
+//!
+//! Fairness equalizes *shares*; latency-sensitive clients also need a
+//! bound on *when*. A client may declare a latency target
+//! (`[pool] client_slos = ["name=ms"]`, `--slo-ms` on the CLI) or a
+//! request may carry its own budget ([`OffloadRequest::deadline`], which
+//! wins); either way [`DevicePool::submit`] stamps an **absolute
+//! deadline** on the queued job. Workers then run earliest-deadline-first
+//! *within the fairness envelope*: a lane whose head request is inside
+//! its **panic window** — remaining time to deadline no larger than the
+//! EWMA of recent per-job service time for that image key
+//! ([`slo::ServiceEwma`]) — may preempt the DRR rotation, earliest
+//! deadline first. Three guardrails keep this from degenerating into
+//! priority starvation:
+//!
+//! * the preempting lane is still charged deficit (floored), repaying
+//!   the borrowed share through suppressed rotation turns;
+//! * a **starvation bound**: after 8 consecutive panic pops, workers
+//!   must take one normal DRR pop before preempting again, so
+//!   best-effort lanes always drain;
+//! * the adaptive controller collapses the effective batch limit to 1
+//!   while any eligible lane is in panic (`SchedSignals::urgent`), so
+//!   urgent work is never trapped behind a long fused grid.
+//!
+//! Shard jobs inherit their parent's deadline (a panicking split pulls
+//! all its shards ahead); completion records per-client `deadline_miss`
+//! counts and **signed slack** summaries ([`slo::SlackSummary`]) —
+//! sharded requests judged once by their stitcher — surfaced with p50/p95
+//! sojourn in [`PoolMetrics::clients`] and the `PoolCoordinator` report.
+//!
 //! ## Backpressure
 //!
 //! The submission queue is bounded by `[pool] queue_cap` (0 = unbounded):
@@ -125,10 +155,12 @@
 pub mod adaptive;
 pub mod cache;
 pub mod pool;
+pub mod slo;
 pub mod workload;
 
 pub use adaptive::{AdaptiveController, AdaptiveStats, SchedSignals};
 pub use cache::{CacheKey, CacheStats, ImageCache};
+pub use slo::{ServiceEwma, SlackSummary};
 pub use pool::{
     bytes_to_f32, f32_to_bytes, Affinity, ClientMetrics, DeviceLease, DeviceMetrics, DevicePool,
     DeviceSpec, KernelArg, MapBuf, OffloadHandle, OffloadRequest, OffloadResponse, PoolConfig,

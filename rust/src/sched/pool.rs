@@ -7,6 +7,7 @@
 
 use super::adaptive::{decide_batch_max, AdaptiveController, AdaptiveStats, SchedSignals};
 use super::cache::{CacheStats, ImageCache};
+use super::slo::{ServiceEwma, SlackSummary};
 use crate::config::Config;
 use crate::coordinator::profiler::{Profiler, RegionReport};
 use crate::devrt::RuntimeKind;
@@ -143,6 +144,14 @@ pub struct OffloadRequest {
     /// weighted deficit-round-robin lane (see `[pool] fairness` and
     /// `client_weights`). Empty = the default client.
     pub client: String,
+    /// Per-request latency budget: submit stamps an absolute deadline
+    /// (`now + deadline`) on the queued job, the worker pull may move the
+    /// request ahead of the DRR rotation once it enters its *panic
+    /// window* (deadline minus predicted service time), and completion
+    /// records a deadline-miss / slack sample for the client. `None`
+    /// falls back to the client's `[pool] client_slos` target; with
+    /// neither, the request is best-effort and never preempts.
+    pub deadline: Option<Duration>,
 }
 
 /// What the pool hands back when a request completes.
@@ -310,6 +319,13 @@ pub struct PoolConfig {
     /// 4 receives 4x the pull share of a weight-1 client while both are
     /// backlogged.
     pub client_weights: Vec<(String, f64)>,
+    /// Per-client latency targets (SLOs) in milliseconds. Every request
+    /// from a listed client is stamped with an absolute deadline at
+    /// submit (unless the request carries its own
+    /// [`OffloadRequest::deadline`], which wins), making it eligible for
+    /// panic-window preemption and deadline-miss accounting. Clients not
+    /// listed are best-effort.
+    pub client_slos: Vec<(String, f64)>,
 }
 
 impl Default for PoolConfig {
@@ -337,6 +353,7 @@ impl PoolConfig {
             adaptive: true,
             fairness: true,
             client_weights: vec![],
+            client_slos: vec![],
         }
     }
 
@@ -399,6 +416,16 @@ impl PoolConfig {
         self
     }
 
+    /// Set (or overwrite) one client's latency target (SLO) in
+    /// milliseconds. See [`PoolConfig::client_slos`].
+    pub fn with_client_slo(mut self, client: &str, target_ms: f64) -> PoolConfig {
+        match self.client_slos.iter_mut().find(|(c, _)| c == client) {
+            Some((_, t)) => *t = target_ms,
+            None => self.client_slos.push((client.to_string(), target_ms)),
+        }
+        self
+    }
+
     /// Read the `[pool]` section of a config document:
     ///
     /// ```text
@@ -412,6 +439,7 @@ impl PoolConfig {
     /// adaptive = true         # occupancy-driven batch/shard sizing
     /// fairness = true         # per-client weighted DRR pull
     /// client_weights = ["miniqmc=4", "batch=1"]  # default weight 1.0
+    /// client_slos = ["miniqmc=25"]  # latency targets in ms (SLO clients)
     /// ```
     ///
     /// Missing section or keys fall back to [`PoolConfig::mixed4`].
@@ -464,6 +492,24 @@ impl PoolConfig {
                 }
             }
             out.client_weights = weights;
+        }
+        if let Some(list) = sec.get("client_slos").and_then(|v| v.as_str_list()) {
+            let mut slos = vec![];
+            for s in list {
+                let parsed = s.split_once('=').and_then(|(name, ms)| {
+                    let ms: f64 = ms.trim().parse().ok()?;
+                    (ms > 0.0 && ms.is_finite()).then(|| (name.trim().to_string(), ms))
+                });
+                match parsed {
+                    Some(pair) => slos.push(pair),
+                    None => {
+                        return Err(Error::Config(format!(
+                            "[pool] bad client SLO `{s}` (want \"<client>=<positive ms>\")"
+                        )))
+                    }
+                }
+            }
+            out.client_slos = slos;
         }
         Ok(out)
     }
@@ -520,6 +566,10 @@ struct OffloadJob {
     /// the job (shard-aware placement pins each shard to an idle device
     /// picked by the planner). `None` = any matching worker.
     target_device: Option<usize>,
+    /// Absolute deadline stamped at submit from the request's own budget
+    /// or the client's SLO; shard jobs inherit their parent's. `None` =
+    /// best-effort.
+    deadline: Option<Instant>,
     reply: mpsc::Sender<Result<OffloadResponse, Error>>,
     enqueued: Instant,
 }
@@ -530,6 +580,9 @@ struct TaskJob {
     affinity: Affinity,
     client: String,
     run: TaskFn,
+    /// Stamped from the client's SLO at submit (tasks carry no explicit
+    /// per-request budget).
+    deadline: Option<Instant>,
     enqueued: Instant,
 }
 
@@ -559,6 +612,22 @@ impl Job {
             Job::Task(_) => None,
         }
     }
+
+    fn deadline(&self) -> Option<Instant> {
+        match self {
+            Job::Offload(j) => j.deadline,
+            Job::Task(t) => t.deadline,
+        }
+    }
+
+    /// Image-cache content key for service-time prediction (`None` for
+    /// leased tasks, which have no image).
+    fn image_key(&self) -> Option<u64> {
+        match self {
+            Job::Offload(j) => Some(j.key.content),
+            Job::Task(_) => None,
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -568,8 +637,18 @@ impl Job {
 /// A lane's deficit never drops below this: followers coalesced into
 /// another lane's batch "borrow" share (their lane is charged without
 /// being the leader), and the floor bounds how long the repayment can
-/// suppress the lane.
+/// suppress the lane. Panic-window preemptions charge against the same
+/// floor, so an SLO lane repays borrowed share through suppressed
+/// rotation turns.
 const DEFICIT_FLOOR: f64 = -8.0;
+
+/// Starvation bound for deadline preemption: at most this many
+/// *consecutive* panic-window pops before a worker must take one normal
+/// DRR pop (which resets the streak). A pathological SLO client whose
+/// every request is past deadline therefore drains at most
+/// `PANIC_STREAK_MAX` jobs per best-effort job, and best-effort lanes
+/// always make progress.
+const PANIC_STREAK_MAX: usize = 8;
 
 /// One client's FIFO lane plus its deficit-round-robin accounting.
 struct Lane {
@@ -611,6 +690,11 @@ struct SchedQueue {
     peak: usize,
     fairness: bool,
     weights: HashMap<String, f64>,
+    /// Consecutive panic-window preemptions since the last normal DRR
+    /// pop (any worker). Capped at [`PANIC_STREAK_MAX`] — the starvation
+    /// bound that keeps best-effort lanes draining under deadline
+    /// pressure.
+    panic_streak: usize,
 }
 
 impl SchedQueue {
@@ -623,6 +707,7 @@ impl SchedQueue {
             peak: 0,
             fairness,
             weights: client_weights.iter().cloned().collect(),
+            panic_streak: 0,
         }
     }
 
@@ -717,12 +802,117 @@ impl SchedQueue {
         None
     }
 
-    /// Weighted-DRR pop: serve the first lane — in round-robin order
-    /// from the cursor — holding both pop budget and an eligible job;
-    /// coalesce up to `limit - 1` same-key offload followers from all
-    /// lanes (each follower charged to its own lane). Returns `None`
-    /// only when no queued job is eligible for this worker.
-    fn pop(&mut self, spec: DeviceSpec, device_id: usize, limit: usize) -> Option<Work> {
+    /// The first job of `lane` this worker could claim, if it is inside
+    /// its *panic window* at `now`: the remaining time to its deadline
+    /// is at most the predicted service time for its image
+    /// ([`ServiceEwma`]), i.e. it must start now (or should already have
+    /// started) to meet the deadline. Head-of-lane semantics: lanes are
+    /// FIFO per client, so only the first eligible job is considered — a
+    /// deadline further down a lane cannot jump its own client's earlier
+    /// work.
+    fn head_panic(
+        lane: &Lane,
+        spec: DeviceSpec,
+        device_id: usize,
+        now: Instant,
+        svc: &ServiceEwma,
+    ) -> Option<(usize, Instant)> {
+        let pos = lane.jobs.iter().position(|j| Self::eligible(j, spec, device_id))?;
+        let job = &lane.jobs[pos];
+        let deadline = job.deadline()?;
+        let panicking = deadline
+            .checked_duration_since(now)
+            .map_or(true, |slack| slack <= svc.predict(job.image_key()));
+        panicking.then_some((pos, deadline))
+    }
+
+    /// Is any job this worker could claim inside its panic window right
+    /// now? Consulted before picking the batch limit: urgent work must
+    /// not end up trapped behind a long fused grid, so the adaptive
+    /// controller collapses the limit to 1 while this holds (see
+    /// [`SchedSignals::urgent`]).
+    fn any_panic(
+        &self,
+        spec: DeviceSpec,
+        device_id: usize,
+        now: Instant,
+        svc: &ServiceEwma,
+    ) -> bool {
+        self.lanes
+            .iter()
+            .any(|l| Self::head_panic(l, spec, device_id, now, svc).is_some())
+    }
+
+    /// Earliest-deadline-first preemption *within the fairness
+    /// envelope*: among the lanes whose head job is inside its panic
+    /// window, serve the one with the earliest deadline — ignoring the
+    /// DRR rotation and the lane's pop budget. The lane is still charged
+    /// one deficit per job taken (floored at [`DEFICIT_FLOOR`]), so the
+    /// preempted share is repaid through suppressed rotation turns, and
+    /// the whole path is gated on the [`PANIC_STREAK_MAX`] starvation
+    /// bound: after that many consecutive preemptions, workers fall
+    /// through to a normal DRR pop (which resets the streak) before any
+    /// further deadline work may jump the line.
+    fn pop_panic(
+        &mut self,
+        spec: DeviceSpec,
+        device_id: usize,
+        limit: usize,
+        now: Instant,
+        svc: &ServiceEwma,
+    ) -> Option<Work> {
+        if self.panic_streak >= PANIC_STREAK_MAX {
+            return None;
+        }
+        let mut best: Option<(usize, usize, Instant)> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if let Some((pos, deadline)) = Self::head_panic(lane, spec, device_id, now, svc) {
+                if best.map_or(true, |(_, _, b)| deadline < b) {
+                    best = Some((i, pos, deadline));
+                }
+            }
+        }
+        let (i, pos, _) = best?;
+        self.panic_streak += 1;
+        let lane = &mut self.lanes[i];
+        lane.deficit = (lane.deficit - 1.0).max(DEFICIT_FLOOR);
+        let job = lane.jobs.remove(pos).expect("position is in range");
+        if lane.jobs.is_empty() {
+            lane.deficit = 0.0;
+        }
+        self.len -= 1;
+        match job {
+            Job::Task(t) => Some(Work::Task(t)),
+            Job::Offload(leader) => {
+                let mut batch = vec![leader];
+                if limit > 1 && !batch[0].is_shard {
+                    self.coalesce(&mut batch, i, spec, limit);
+                }
+                Some(Work::Batch(batch))
+            }
+        }
+    }
+
+    /// Pop one unit of work for the worker of `(spec, device_id)`.
+    /// Deadline work inside its panic window goes first (EDF, see
+    /// [`SchedQueue::pop_panic`]); otherwise this is the weighted-DRR
+    /// pop: serve the first lane — in round-robin order from the cursor
+    /// — holding both pop budget and an eligible job; coalesce up to
+    /// `limit - 1` same-key offload followers from all lanes (each
+    /// follower charged to its own lane). The returned flag reports
+    /// whether the pop was a deadline preemption. Returns `None` only
+    /// when no queued job is eligible for this worker.
+    fn pop(
+        &mut self,
+        spec: DeviceSpec,
+        device_id: usize,
+        limit: usize,
+        now: Instant,
+        svc: &ServiceEwma,
+    ) -> Option<(Work, bool)> {
+        if let Some(work) = self.pop_panic(spec, device_id, limit, now, svc) {
+            return Some((work, true));
+        }
         for pass in 0..2 {
             let n = self.lanes.len();
             for k in 0..n {
@@ -738,6 +928,7 @@ impl SchedQueue {
                     continue;
                 };
                 self.cursor = (i + 1) % n;
+                self.panic_streak = 0;
                 let lane = &mut self.lanes[i];
                 lane.deficit -= 1.0;
                 let job = lane.jobs.remove(pos).expect("position is in range");
@@ -746,13 +937,13 @@ impl SchedQueue {
                 }
                 self.len -= 1;
                 match job {
-                    Job::Task(t) => return Some(Work::Task(t)),
+                    Job::Task(t) => return Some((Work::Task(t), false)),
                     Job::Offload(leader) => {
                         let mut batch = vec![leader];
                         if limit > 1 && !batch[0].is_shard {
                             self.coalesce(&mut batch, i, spec, limit);
                         }
-                        return Some(Work::Batch(batch));
+                        return Some((Work::Batch(batch), false));
                     }
                 }
             }
@@ -872,6 +1063,13 @@ struct DeviceSlot {
     busy_ns: AtomicU64,
 }
 
+/// Per-client sojourn samples kept for percentile reporting: a ring of
+/// the most recent this-many samples (the online [`Summary`] keeps
+/// exact lifetime totals regardless). A sliding window — rather than
+/// the first N — so p50/p95 track *current* tail behavior on
+/// long-lived pools, which is what SLO monitoring needs.
+const LATENCY_SAMPLE_CAP: usize = 8192;
+
 /// Per-client completion accounting (behind `Shared::clients`).
 #[derive(Default)]
 struct ClientAccum {
@@ -881,6 +1079,17 @@ struct ClientAccum {
     queue_wait: Summary,
     /// Submit-to-completion sojourn time.
     latency: Summary,
+    /// Ring of the most recent sojourn samples in µs (size
+    /// [`LATENCY_SAMPLE_CAP`]; write position derived from
+    /// `latency.count()`).
+    latency_samples_us: Vec<f64>,
+    /// Requests that carried a deadline (explicit budget or client SLO).
+    deadlines: u64,
+    /// Deadlined requests that completed after their deadline. A sharded
+    /// request counts once (its stitcher records it), not per shard.
+    deadline_miss: u64,
+    /// Signed slack (deadline − completion) over deadlined requests.
+    slack: SlackSummary,
 }
 
 struct Shared {
@@ -909,6 +1118,15 @@ struct Shared {
     /// Configured weights, for reports (scheduling reads the copy inside
     /// [`SchedQueue`]).
     client_weights: Vec<(String, f64)>,
+    /// Per-client latency targets: submit stamps `now + target` as the
+    /// absolute deadline on requests from these clients (unless the
+    /// request carries its own budget).
+    slos: HashMap<String, Duration>,
+    /// Per-image service-time EWMAs feeding panic-window prediction.
+    service: ServiceEwma,
+    /// Queue pops that went through the EDF panic path instead of the
+    /// DRR rotation.
+    preemptions: AtomicU64,
     submitted: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
@@ -919,13 +1137,18 @@ struct Shared {
 
 /// Append one completed/failed request to `map` (the `Shared::clients`
 /// table, locked by the caller). `get_mut` first so the common
-/// already-seen-client path allocates nothing.
+/// already-seen-client path allocates nothing. When the request carried
+/// a `deadline`, its outcome is compared against completion time *here*
+/// — exactly once per request, which is what keeps miss counts correct
+/// for sharded requests (recorded by their stitcher, never per shard).
 fn record_into(
     map: &mut BTreeMap<String, ClientAccum>,
     client: &str,
     queue_wait: Duration,
     latency: Duration,
     ok: bool,
+    deadline: Option<Instant>,
+    completed: Instant,
 ) {
     let acc = match map.get_mut(client) {
         Some(acc) => acc,
@@ -938,13 +1161,45 @@ fn record_into(
     }
     acc.queue_wait.record(queue_wait);
     acc.latency.record(latency);
+    let us = latency.as_secs_f64() * 1e6;
+    if acc.latency_samples_us.len() < LATENCY_SAMPLE_CAP {
+        acc.latency_samples_us.push(us);
+    } else {
+        // `latency.count()` was just incremented, so this walks the ring
+        // one slot per record: the window holds the newest CAP samples.
+        let i = ((acc.latency.count() - 1) % LATENCY_SAMPLE_CAP as u64) as usize;
+        acc.latency_samples_us[i] = us;
+    }
+    if let Some(dl) = deadline {
+        acc.deadlines += 1;
+        // Judged against when the work actually finished (`completed`,
+        // captured by the worker/stitcher before taking this lock), not
+        // the accounting instant — lock contention on the clients table
+        // must not turn met deadlines into recorded misses.
+        match dl.checked_duration_since(completed) {
+            Some(slack) => acc.slack.record_secs(slack.as_secs_f64()),
+            None => {
+                acc.deadline_miss += 1;
+                acc.slack
+                    .record_secs(-completed.saturating_duration_since(dl).as_secs_f64());
+            }
+        }
+    }
 }
 
 /// Single-record convenience (task and stitcher paths; the batched reply
 /// loop locks once for the whole batch instead).
-fn record_client(shared: &Shared, client: &str, queue_wait: Duration, latency: Duration, ok: bool) {
+fn record_client(
+    shared: &Shared,
+    client: &str,
+    queue_wait: Duration,
+    latency: Duration,
+    ok: bool,
+    deadline: Option<Instant>,
+    completed: Instant,
+) {
     let mut map = shared.clients.lock().unwrap();
-    record_into(&mut map, client, queue_wait, latency, ok);
+    record_into(&mut map, client, queue_wait, latency, ok, deadline, completed);
 }
 
 /// A pool of offload devices with per-device worker threads.
@@ -992,6 +1247,14 @@ impl DevicePool {
             reserved,
             clients: Mutex::new(BTreeMap::new()),
             client_weights: config.client_weights.clone(),
+            slos: config
+                .client_slos
+                .iter()
+                .filter(|(_, ms)| *ms > 0.0 && ms.is_finite())
+                .map(|(c, ms)| (c.clone(), Duration::from_secs_f64(ms / 1e3)))
+                .collect(),
+            service: ServiceEwma::new(),
+            preemptions: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
@@ -1101,10 +1364,17 @@ impl DevicePool {
     /// `[pool] shard_min_trips`) is split into per-device shards across
     /// the matching architecture with the most eligible devices; the
     /// handle resolves to the stitched response.
+    ///
+    /// Requests with a latency budget — their own
+    /// [`OffloadRequest::deadline`] or a `[pool] client_slos` target for
+    /// their client — are stamped with an absolute deadline here; shard
+    /// jobs inherit the parent's deadline, so a panicking sharded
+    /// request pulls **all** its shards ahead.
     pub fn submit(&self, req: OffloadRequest) -> Result<OffloadHandle, Error> {
         self.validate(&req)?;
+        let deadline = self.stamp_deadline(&req);
         if let Some(plan) = self.shard_plan(&req) {
-            let (jobs, parts) = self.build_shards(&req, &plan);
+            let (jobs, parts) = self.build_shards(&req, &plan, deadline);
             let n = jobs.len();
             // Spawn first (so a spawn failure queues nothing), then
             // enqueue all shard jobs in one critical section — the
@@ -1112,7 +1382,7 @@ impl DevicePool {
             // it is visible — and only then arm the stitcher. A failed
             // enqueue drops `arm` and the stitcher exits without a
             // trace.
-            let (frx, arm) = spawn_stitcher(&req, parts, self.shared.clone())?;
+            let (frx, arm) = spawn_stitcher(&req, parts, self.shared.clone(), deadline)?;
             self.enqueue_bulk(jobs.into_iter().map(Job::Offload).collect())?;
             let _ = arm.send(());
             self.shared.sharded_requests.fetch_add(1, Ordering::Relaxed);
@@ -1120,9 +1390,19 @@ impl DevicePool {
             return Ok(OffloadHandle { rx: frx });
         }
         let (reply, rx) = mpsc::channel();
-        let job = make_offload_job(req, reply, false, None);
+        let job = make_offload_job(req, reply, false, None, deadline);
         self.enqueue_bulk(vec![Job::Offload(job)])?;
         Ok(OffloadHandle { rx })
+    }
+
+    /// Absolute deadline for `req`, if it has a latency budget: the
+    /// request's own [`OffloadRequest::deadline`] wins over the client's
+    /// configured SLO; neither means best-effort (`None`).
+    fn stamp_deadline(&self, req: &OffloadRequest) -> Option<Instant> {
+        let budget = req
+            .deadline
+            .or_else(|| self.shared.slos.get(&req.client).copied())?;
+        Instant::now().checked_add(budget)
     }
 
     /// Non-blocking [`DevicePool::submit`]: when the queue is at capacity
@@ -1133,6 +1413,7 @@ impl DevicePool {
         if let Err(e) = self.validate(&req) {
             return Err(TrySubmitError::Rejected(e));
         }
+        let deadline = self.stamp_deadline(&req);
         if let Some(plan) = self.shard_plan(&req) {
             // Cheap capacity check before materializing shard buffers and
             // spawning the stitcher: under sustained backpressure every
@@ -1144,10 +1425,10 @@ impl DevicePool {
                     return Err(TrySubmitError::Full(req));
                 }
             }
-            let (jobs, parts) = self.build_shards(&req, &plan);
+            let (jobs, parts) = self.build_shards(&req, &plan, deadline);
             let n = jobs.len();
             // Spawn-then-enqueue-then-arm, exactly as in `submit`.
-            let (frx, arm) = match spawn_stitcher(&req, parts, self.shared.clone()) {
+            let (frx, arm) = match spawn_stitcher(&req, parts, self.shared.clone(), deadline) {
                 Ok(pair) => pair,
                 Err(e) => return Err(TrySubmitError::Rejected(e)),
             };
@@ -1166,7 +1447,7 @@ impl DevicePool {
             return Ok(OffloadHandle { rx: frx });
         }
         let (reply, rx) = mpsc::channel();
-        let job = make_offload_job(req, reply, false, None);
+        let job = make_offload_job(req, reply, false, None, deadline);
         match self.try_enqueue_bulk(vec![Job::Offload(job)]) {
             Ok(()) => Ok(OffloadHandle { rx }),
             Err(mut jobs) => match jobs.pop() {
@@ -1219,10 +1500,19 @@ impl DevicePool {
         let run: TaskFn = Box::new(move |lease: &DeviceLease<'_>| {
             let _ = tx.send(f(lease));
         });
+        // Tasks carry no per-request budget; the client's SLO (if any)
+        // still stamps a deadline so leased benchmarks participate in
+        // panic-window scheduling and miss accounting.
+        let deadline = self
+            .shared
+            .slos
+            .get(client)
+            .and_then(|t| Instant::now().checked_add(*t));
         self.enqueue_bulk(vec![Job::Task(TaskJob {
             affinity,
             client: client.to_string(),
             run,
+            deadline,
             enqueued: Instant::now(),
         })])?;
         Ok(TaskHandle { rx })
@@ -1246,7 +1536,7 @@ impl DevicePool {
     /// backpressure: waits until every job fits (sharded submissions
     /// enter the queue atomically), then pushes all of them in one
     /// critical section.
-    fn enqueue_bulk(&self, jobs: Vec<Job>) -> Result<(), Error> {
+    fn enqueue_bulk(&self, mut jobs: Vec<Job>) -> Result<(), Error> {
         let shared = &self.shared;
         if shared.queue_cap > 0 && jobs.len() > shared.queue_cap {
             // Cannot ever fit (the shard planner clamps fan-out to the
@@ -1258,16 +1548,34 @@ impl DevicePool {
             )));
         }
         let mut q = shared.queue.lock().unwrap();
+        let mut waited = false;
         if shared.queue_cap > 0 {
             while q.len() + jobs.len() > shared.queue_cap {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return Err(Error::Sched("pool is shut down".into()));
                 }
+                waited = true;
                 q = shared.space.wait(q).unwrap();
             }
         }
         if shared.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Sched("pool is shut down".into()));
+        }
+        if waited {
+            // The shard planner's idle sample predates the backpressure
+            // wait: the devices it reserved have almost certainly taken
+            // other work since, and a stale pin would serialize the
+            // stitch behind them while genuinely idle devices sit
+            // blinded (pinned jobs are invisible to the DRR scan). Drop
+            // the pins — placement falls back to pull order, which is
+            // exactly the no-reservation policy. Reservation counters
+            // only ever increment at push time, so stripping here is
+            // consistent.
+            for job in &mut jobs {
+                if let Job::Offload(j) = job {
+                    j.target_device = None;
+                }
+            }
         }
         for job in jobs {
             self.push_locked(&mut q, job);
@@ -1382,6 +1690,7 @@ impl DevicePool {
         &self,
         req: &OffloadRequest,
         plan: &ShardPlan,
+        deadline: Option<Instant>,
     ) -> (Vec<OffloadJob>, Vec<ShardPart>) {
         let spec = req.shard.as_ref().expect("a plan implies a spec");
         let n = plan.ranges.len();
@@ -1419,10 +1728,11 @@ impl DevicePool {
                 affinity: Affinity { arch: Some(plan.arch), kind: req.affinity.kind },
                 shard: None,
                 client: req.client.clone(),
+                deadline: req.deadline,
             };
             let (tx, rx) = mpsc::channel();
             let target = plan.targets.as_ref().map(|t| t[si]);
-            jobs.push(make_offload_job(sreq, tx, true, target));
+            jobs.push(make_offload_job(sreq, tx, true, target, deadline));
             parts.push(ShardPart { rx, lo, hi });
         }
         (jobs, parts)
@@ -1469,10 +1779,15 @@ impl DevicePool {
                         .iter()
                         .find(|(c, _)| c == client)
                         .map_or(1.0, |(_, w)| *w),
+                    slo: self.shared.slos.get(client).copied(),
                     completed: acc.completed,
                     failed: acc.failed,
                     queue_wait: acc.queue_wait.clone(),
                     latency: acc.latency.clone(),
+                    latency_samples_us: acc.latency_samples_us.clone(),
+                    deadlines: acc.deadlines,
+                    deadline_miss: acc.deadline_miss,
+                    slack: acc.slack.clone(),
                 })
                 .collect()
         };
@@ -1487,6 +1802,7 @@ impl DevicePool {
             shard_jobs: self.shared.shard_jobs.load(Ordering::Relaxed),
             adaptive: self.shared.adaptive,
             adaptive_stats: self.shared.controller.stats(),
+            preemptions: self.shared.preemptions.load(Ordering::Relaxed),
             uptime,
             devices,
             clients,
@@ -1536,9 +1852,10 @@ fn make_offload_job(
     reply: mpsc::Sender<Result<OffloadResponse, Error>>,
     is_shard: bool,
     target_device: Option<usize>,
+    deadline: Option<Instant>,
 ) -> OffloadJob {
     let key = BatchKey { content: req.module.content_hash(), opt: req.opt };
-    OffloadJob { req, key, is_shard, target_device, reply, enqueued: Instant::now() }
+    OffloadJob { req, key, is_shard, target_device, deadline, reply, enqueued: Instant::now() }
 }
 
 /// Spawn the result-stitcher for a sharded request; resolves the returned
@@ -1557,6 +1874,7 @@ fn spawn_stitcher(
     req: &OffloadRequest,
     parts: Vec<ShardPart>,
     shared: Arc<Shared>,
+    deadline: Option<Instant>,
 ) -> Result<(mpsc::Receiver<Result<OffloadResponse, Error>>, mpsc::Sender<()>), Error> {
     let spec = req.shard.as_ref().expect("sharded request has a spec");
     let buf_meta: Vec<(MapType, usize)> =
@@ -1577,6 +1895,7 @@ fn spawn_stitcher(
                 shared,
                 client,
                 enqueued,
+                deadline,
             })
         })
         .map_err(|e| Error::Sched(format!("cannot spawn shard stitcher: {e}")))?;
@@ -1588,6 +1907,10 @@ struct StitchAccount {
     shared: Arc<Shared>,
     client: String,
     enqueued: Instant,
+    /// The parent request's deadline: the stitcher judges miss/slack for
+    /// the request as a whole — shard jobs are skipped at reply time, so
+    /// a missed sharded request increments `deadline_miss` exactly once.
+    deadline: Option<Instant>,
 }
 
 /// Wait for all shard responses and assemble the full-request response:
@@ -1623,13 +1946,18 @@ fn stitch(
     // Per-client accounting sees the *request* exactly once — its shard
     // jobs are deliberately skipped at reply time, so fairness metrics
     // cannot double-count a split request.
+    // Completion = the moment the last shard reported, captured before
+    // the clients-table lock so contention cannot skew miss judgments.
+    let done = Instant::now();
     let max_wait = got.iter().map(|(r, _, _)| r.queue_wait).max().unwrap_or(Duration::ZERO);
     record_client(
         &account.shared,
         &account.client,
         max_wait,
-        account.enqueued.elapsed(),
+        done.saturating_duration_since(account.enqueued),
         first_err.is_none(),
+        account.deadline,
+        done,
     );
     if let Some(e) = first_err {
         let _ = ftx.send(Err(e));
@@ -1744,6 +2072,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                         break 'wait (Work::Batch(vec![job]), 1);
                     }
                 }
+                let now = Instant::now();
                 let limit = if shared.adaptive {
                     let idle = shared
                         .slots
@@ -1755,12 +2084,18 @@ fn worker_loop(shared: &Shared, id: usize) {
                         idle_devices: idle,
                         device_count: shared.slots.len(),
                         batch_efficiency: shared.controller.efficiency(),
+                        urgent: q.any_panic(slot.spec, id, now, &shared.service),
                     };
                     decide_batch_max(&signals, shared.batch_max)
                 } else {
                     shared.batch_max
                 };
-                if let Some(work) = q.pop(slot.spec, id, limit) {
+                if let Some((work, preempted)) =
+                    q.pop(slot.spec, id, limit, now, &shared.service)
+                {
+                    if preempted {
+                        shared.preemptions.fetch_add(1, Ordering::Relaxed);
+                    }
                     break 'wait (work, limit);
                 }
                 q = shared.cv.wait(q).unwrap();
@@ -1795,6 +2130,11 @@ fn worker_loop(shared: &Shared, id: usize) {
                 slot.inflight.fetch_sub(1, Ordering::Relaxed);
                 slot.busy_ns
                     .fetch_add(elapsed.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+                // Deliberately NOT recorded into the service EWMA: a
+                // multi-second leased benchmark would poison the global
+                // fallback and make every unseen image key look
+                // permanently panicked.
+                let done = Instant::now();
                 let ok = outcome.is_ok();
                 match outcome {
                     Ok(()) => {
@@ -1805,7 +2145,15 @@ fn worker_loop(shared: &Shared, id: usize) {
                         shared.failed.fetch_add(1, Ordering::Relaxed);
                     }
                 }
-                record_client(shared, &task.client, queue_wait, task.enqueued.elapsed(), ok);
+                record_client(
+                    shared,
+                    &task.client,
+                    queue_wait,
+                    done.saturating_duration_since(task.enqueued),
+                    ok,
+                    task.deadline,
+                    done,
+                );
             }
             Work::Batch(batch) => {
                 if shared.adaptive && !batch[0].is_shard {
@@ -1862,8 +2210,20 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
         };
 
     slot.inflight.fetch_sub(n, Ordering::Relaxed);
+    let busy = t_busy.elapsed();
+    let done = Instant::now();
     slot.busy_ns
-        .fetch_add(t_busy.elapsed().as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+        .fetch_add(busy.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    // One per-job service observation per batch, feeding the panic-window
+    // prediction for this image key. Shard batches are skipped: a shard
+    // runs a fraction of the full request under the same content key,
+    // and folding its time in would teach the predictor that unsharded
+    // runs of the image are several times faster than they are.
+    if !batch[0].is_shard {
+        shared
+            .service
+            .record(Some(batch[0].key.content), busy.as_secs_f64() / n as f64);
+    }
     // One clients-table lock for the whole batch, not one per job.
     let mut accounts = shared.clients.lock().unwrap();
     for ((i, job), result) in batch.into_iter().enumerate().zip(results) {
@@ -1883,8 +2243,10 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
                 &mut accounts,
                 &job.req.client,
                 waits[i],
-                job.enqueued.elapsed(),
+                done.saturating_duration_since(job.enqueued),
                 result.is_ok(),
+                job.deadline,
+                done,
             );
         }
         // A dropped handle is fine: the work still ran.
@@ -2128,6 +2490,9 @@ pub struct PoolMetrics {
     pub adaptive: bool,
     /// Adaptive-controller counters (all zero when `adaptive` is off).
     pub adaptive_stats: AdaptiveStats,
+    /// Queue pops taken through the EDF panic path (deadline work
+    /// jumping the DRR rotation inside its panic window).
+    pub preemptions: u64,
     /// Time since the pool started.
     pub uptime: Duration,
     /// Per-device breakdown.
@@ -2138,13 +2503,15 @@ pub struct PoolMetrics {
     pub clients: Vec<ClientMetrics>,
 }
 
-/// Per-client fairness metrics snapshot.
+/// Per-client fairness + SLO metrics snapshot.
 #[derive(Debug, Clone)]
 pub struct ClientMetrics {
     /// Client tag ("" = the default client).
     pub client: String,
     /// Configured scheduling weight (1.0 unless overridden).
     pub weight: f64,
+    /// Configured latency target (`[pool] client_slos`), if any.
+    pub slo: Option<Duration>,
     /// Requests completed for this client.
     pub completed: u64,
     /// Requests failed for this client.
@@ -2154,6 +2521,32 @@ pub struct ClientMetrics {
     pub queue_wait: Summary,
     /// Submit-to-completion sojourn times.
     pub latency: Summary,
+    /// Raw sojourn samples in µs (capped; see
+    /// [`ClientMetrics::latency_p95_us`]).
+    pub latency_samples_us: Vec<f64>,
+    /// Requests that carried a deadline (explicit budget or client SLO).
+    pub deadlines: u64,
+    /// Deadlined requests that completed past their deadline. Sharded
+    /// requests count once (stitcher-side), never per shard.
+    pub deadline_miss: u64,
+    /// Signed slack (deadline − completion time) over deadlined
+    /// requests: positive = met with room, negative = missed by that
+    /// much. Finite for any finite clock readings.
+    pub slack: SlackSummary,
+}
+
+impl ClientMetrics {
+    /// Median submit-to-completion sojourn in µs (0 with no samples).
+    pub fn latency_p50_us(&self) -> f64 {
+        crate::util::stats::percentile(&self.latency_samples_us, 0.50)
+    }
+
+    /// 95th-percentile sojourn in µs (0 with no samples). Tail latency
+    /// is what SLOs are judged on — the SLO bench compares this against
+    /// bulk clients' medians.
+    pub fn latency_p95_us(&self) -> f64 {
+        crate::util::stats::percentile(&self.latency_samples_us, 0.95)
+    }
 }
 
 impl PoolMetrics {
@@ -2170,6 +2563,13 @@ impl PoolMetrics {
             .find(|c| c.client == client)
             .map_or(0.0, |c| c.completed as f64 / total as f64)
     }
+    /// `(deadlined requests, deadline misses)` summed across clients.
+    pub fn deadline_totals(&self) -> (u64, u64) {
+        self.clients
+            .iter()
+            .fold((0, 0), |(d, m), c| (d + c.deadlines, m + c.deadline_miss))
+    }
+
     /// Aggregated image-cache counters.
     pub fn cache(&self) -> CacheStats {
         let mut s = CacheStats::default();
@@ -2234,7 +2634,8 @@ mod tests {
         let cfg = Config::parse(
             "[pool]\ndevices = [\"portable:nvptx64\", \"legacy:amdgcn\"]\nopt = \"O0\"\n\
              batch_max = 4\nqueue_cap = 32\nshard_min_trips = 100\ncache_budget_bytes = 65536\n\
-             adaptive = false\nfairness = false\nclient_weights = [\"qmc=4\", \"batch=0.5\"]",
+             adaptive = false\nfairness = false\nclient_weights = [\"qmc=4\", \"batch=0.5\"]\n\
+             client_slos = [\"qmc=25\", \"ui=2.5\"]",
         )
         .unwrap();
         let pc = PoolConfig::from_config(&cfg).unwrap();
@@ -2250,6 +2651,10 @@ mod tests {
         assert_eq!(
             pc.client_weights,
             vec![("qmc".to_string(), 4.0), ("batch".to_string(), 0.5)]
+        );
+        assert_eq!(
+            pc.client_slos,
+            vec![("qmc".to_string(), 25.0), ("ui".to_string(), 2.5)]
         );
         // Missing section → default mixed pool (adaptive + fairness on).
         let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
@@ -2271,6 +2676,10 @@ mod tests {
         assert!(PoolConfig::from_config(&cfg).is_err());
         let cfg = Config::parse("[pool]\nclient_weights = [\"qmc=-1\"]").unwrap();
         assert!(PoolConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[pool]\nclient_slos = [\"qmc\"]").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[pool]\nclient_slos = [\"qmc=0\"]").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
     }
 
     #[test]
@@ -2291,6 +2700,7 @@ mod tests {
             affinity,
             shard: None,
             client: String::new(),
+            deadline: None,
         }
     }
 
@@ -2309,14 +2719,19 @@ mod tests {
     }
 
     fn queued_job(client: &str, target: Option<usize>) -> Job {
+        queued_job_dl(client, target, None)
+    }
+
+    fn queued_job_dl(client: &str, target: Option<usize>, deadline: Option<Instant>) -> Job {
         let mut req = base_request(Affinity::any());
         req.client = client.to_string();
         let (tx, _rx) = mpsc::channel();
-        Job::Offload(make_offload_job(req, tx, target.is_some(), target))
+        Job::Offload(make_offload_job(req, tx, target.is_some(), target, deadline))
     }
 
     fn pop_client(q: &mut SchedQueue, spec: DeviceSpec, limit: usize) -> Option<String> {
-        match q.pop(spec, 0, limit)? {
+        let svc = ServiceEwma::new();
+        match q.pop(spec, 0, limit, Instant::now(), &svc)?.0 {
             Work::Batch(batch) => Some(batch[0].req.client.clone()),
             Work::Task(_) => None,
         }
@@ -2335,7 +2750,7 @@ mod tests {
         }
         let order: Vec<String> = (0..6).map(|_| pop_client(&mut q, SPEC, 1).unwrap()).collect();
         assert_eq!(order, ["a", "b", "a", "b", "a", "a"], "chatty a must not starve b");
-        assert!(q.pop(SPEC, 0, 1).is_none());
+        assert!(q.pop(SPEC, 0, 1, Instant::now(), &ServiceEwma::new()).is_none());
         assert_eq!(q.len(), 0);
     }
 
@@ -2360,7 +2775,7 @@ mod tests {
             q.push(queued_job("b", None));
         }
         // All four jobs share one module, so a limit-4 pop takes them all.
-        match q.pop(SPEC, 0, 4).unwrap() {
+        match q.pop(SPEC, 0, 4, Instant::now(), &ServiceEwma::new()).unwrap().0 {
             Work::Batch(batch) => {
                 assert_eq!(batch.len(), 4);
                 assert_eq!(batch[0].req.client, "a", "leader comes from the served lane");
@@ -2385,7 +2800,7 @@ mod tests {
         let mut q = SchedQueue::new(true, &[]);
         q.push(queued_job("a", Some(1)));
         // Worker 0 sees nothing poppable.
-        assert!(q.pop(SPEC, 0, 4).is_none());
+        assert!(q.pop(SPEC, 0, 4, Instant::now(), &ServiceEwma::new()).is_none());
         assert!(q.pop_pinned(0).is_none());
         // Worker 1 claims it via the pinned path.
         let job = q.pop_pinned(1).expect("pinned job for device 1");
@@ -2393,12 +2808,127 @@ mod tests {
         assert_eq!(q.len(), 0);
     }
 
+    /// Pop and return `(client, was_preemption)` for assertions on the
+    /// EDF panic path.
+    fn pop_flag(
+        q: &mut SchedQueue,
+        now: Instant,
+        svc: &ServiceEwma,
+    ) -> Option<(String, bool)> {
+        let (work, preempted) = q.pop(SPEC, 0, 1, now, svc)?;
+        match work {
+            Work::Batch(batch) => Some((batch[0].req.client.clone(), preempted)),
+            Work::Task(_) => None,
+        }
+    }
+
+    #[test]
+    fn panic_lane_preempts_the_drr_rotation() {
+        let mut q = SchedQueue::new(true, &[]);
+        let svc = ServiceEwma::new();
+        // A backlogged best-effort lane that would normally lead the
+        // rotation...
+        for _ in 0..4 {
+            q.push(queued_job("bulk", None));
+        }
+        // ...and one deadlined job already past its deadline.
+        q.push(queued_job_dl("slo", None, Some(Instant::now())));
+        let (client, preempted) = pop_flag(&mut q, Instant::now(), &svc).unwrap();
+        assert_eq!(client, "slo", "panic work must jump the DRR rotation");
+        assert!(preempted, "the pop must be flagged as a preemption");
+        // With the panic drained, normal DRR resumes.
+        let (client, preempted) = pop_flag(&mut q, Instant::now(), &svc).unwrap();
+        assert_eq!((client.as_str(), preempted), ("bulk", false));
+    }
+
+    #[test]
+    fn panic_window_opens_at_predicted_service_time() {
+        let mut q = SchedQueue::new(true, &[]);
+        q.push(queued_job("bulk", None));
+        let job = queued_job_dl("slo", None, Some(Instant::now() + Duration::from_secs(5)));
+        let key = job.image_key().unwrap();
+        q.push(job);
+        // With no service history (predicted service 0) five seconds of
+        // slack looks comfortable: no preemption.
+        let fresh = ServiceEwma::new();
+        assert!(!q.any_panic(SPEC, 0, Instant::now(), &fresh));
+        let (client, preempted) = pop_flag(&mut q, Instant::now(), &fresh).unwrap();
+        assert_eq!((client.as_str(), preempted), ("bulk", false));
+        // A service EWMA slower than the remaining slack opens the panic
+        // window before the deadline itself arrives.
+        let slow = ServiceEwma::new();
+        for _ in 0..8 {
+            slow.record(Some(key), 10.0);
+        }
+        assert!(q.any_panic(SPEC, 0, Instant::now(), &slow));
+        let (client, preempted) = pop_flag(&mut q, Instant::now(), &slow).unwrap();
+        assert_eq!((client.as_str(), preempted), ("slo", true));
+    }
+
+    #[test]
+    fn edf_serves_the_earliest_deadline_first() {
+        let mut q = SchedQueue::new(true, &[]);
+        let svc = ServiceEwma::new();
+        let base = Instant::now();
+        q.push(queued_job_dl("later", None, Some(base + Duration::from_millis(2))));
+        q.push(queued_job_dl("sooner", None, Some(base + Duration::from_millis(1))));
+        // Both are past deadline at pop time: earliest must win even
+        // though "later" was pushed (and would rotate) first.
+        let now = base + Duration::from_millis(10);
+        let (client, preempted) = pop_flag(&mut q, now, &svc).unwrap();
+        assert_eq!((client.as_str(), preempted), ("sooner", true));
+        let (client, _) = pop_flag(&mut q, now, &svc).unwrap();
+        assert_eq!(client, "later");
+    }
+
+    #[test]
+    fn panic_streak_is_bounded_so_best_effort_lanes_drain() {
+        let mut q = SchedQueue::new(true, &[]);
+        let svc = ServiceEwma::new();
+        // A pathological SLO client: every job is already past deadline.
+        for _ in 0..32 {
+            q.push(queued_job_dl("slo", None, Some(Instant::now())));
+        }
+        for _ in 0..4 {
+            q.push(queued_job("bulk", None));
+        }
+        let order: Vec<(String, bool)> =
+            (0..(2 * (PANIC_STREAK_MAX + 1))).map(|_| pop_flag(&mut q, Instant::now(), &svc).unwrap()).collect();
+        // The first PANIC_STREAK_MAX pops may all be preemptions, but the
+        // streak cap forces a normal DRR pop — which must reach the
+        // best-effort lane — before preemption resumes.
+        let bulk_served = order.iter().filter(|(c, _)| c == "bulk").count();
+        assert!(
+            bulk_served >= 2,
+            "best-effort lane must drain under deadline pressure: {order:?}"
+        );
+        for window in order.windows(PANIC_STREAK_MAX + 1) {
+            assert!(
+                window.iter().any(|(_, preempted)| !preempted),
+                "more than {PANIC_STREAK_MAX} consecutive preemptions: {order:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn deadlineless_queues_never_report_panic() {
+        let mut q = SchedQueue::new(true, &[]);
+        let svc = ServiceEwma::new();
+        svc.record(Some(1), 100.0);
+        for _ in 0..4 {
+            q.push(queued_job("a", None));
+        }
+        assert!(!q.any_panic(SPEC, 0, Instant::now(), &svc));
+        let (_, preempted) = pop_flag(&mut q, Instant::now(), &svc).unwrap();
+        assert!(!preempted);
+    }
+
     #[test]
     fn drained_one_off_lanes_are_compacted() {
         let mut q = SchedQueue::new(true, &[]);
         for i in 0..200 {
             q.push(queued_job(&format!("oneoff{i}"), None));
-            let _ = q.pop(SPEC, 0, 1);
+            let _ = q.pop(SPEC, 0, 1, Instant::now(), &ServiceEwma::new());
         }
         assert!(
             q.lanes.len() <= 130,
@@ -2415,7 +2945,7 @@ mod tests {
             q.push(queued_job("a", None));
         }
         assert_eq!((q.len(), q.peak()), (3, 3));
-        let _ = q.pop(SPEC, 0, 1);
+        let _ = q.pop(SPEC, 0, 1, Instant::now(), &ServiceEwma::new());
         q.push(queued_job("b", None));
         assert_eq!((q.len(), q.peak()), (3, 3));
         q.push(queued_job("b", None));

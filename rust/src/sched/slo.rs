@@ -1,0 +1,277 @@
+//! SLO primitives for deadline-aware scheduling: per-image service-time
+//! prediction and signed slack accounting.
+//!
+//! The pool's fairness layer (weighted deficit round robin, see
+//! [`crate::sched`]) equalizes *shares*; it says nothing about *when* a
+//! given client's request runs. This module supplies the two small
+//! mechanisms the deadline layer is built from:
+//!
+//! * [`ServiceEwma`] — an EWMA of observed per-job service time keyed by
+//!   kernel-image content hash, used to predict how long a queued request
+//!   will take once a device picks it up. A request whose remaining time
+//!   to deadline is within this prediction is *in its panic window*: it
+//!   must start now (or sooner) to have any chance of meeting the
+//!   deadline, so the queue lets it preempt the DRR rotation.
+//! * [`SlackSummary`] — an online summary of **signed** slack (deadline
+//!   minus completion time): positive when the deadline was met with room
+//!   to spare, negative when it was missed. The unsigned
+//!   [`crate::util::Summary`] cannot represent misses, hence this type.
+//!
+//! Deadlines themselves are stamped at submit time in
+//! [`crate::sched::DevicePool::submit`] from either the request's own
+//! [`crate::sched::OffloadRequest::deadline`] budget or the client's
+//! configured `[pool] client_slos` target, and the preemption policy
+//! (EDF within the fairness envelope, bounded by a panic-streak cap)
+//! lives in the queue — see the *SLO lifecycle* section of
+//! [`crate::sched`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// EWMA smoothing factor for service-time observations: one observation
+/// moves the estimate 20% of the way, matching the batching controller's
+/// responsiveness (a few launches of a new image are enough to predict
+/// it usefully).
+const ALPHA: f64 = 0.2;
+
+/// Most distinct image keys tracked before the table is reset. One-off
+/// images (the eviction soak mints them on purpose) would otherwise grow
+/// the map without bound; predictions rebuild within a few launches, so
+/// a rare wholesale reset is cheaper than an LRU here.
+const SERVICE_KEY_CAP: usize = 1024;
+
+/// Per-image-key EWMA of observed per-job service time, plus a global
+/// EWMA fallback for work with no per-key history (first launch of an
+/// image, leased tasks).
+///
+/// Workers record one observation per executed *non-shard* batch (batch
+/// wall time divided by batch size); the queue consults
+/// [`ServiceEwma::predict`] to decide whether a deadlined request is
+/// inside its panic window. Shard launches and leased tasks are
+/// deliberately not recorded: a shard covers a fraction of its image's
+/// full request under the same key, and a multi-second leased benchmark
+/// would poison the global fallback into declaring every unseen key
+/// permanently panicked.
+/// All updates are heuristic — a lost race just weights a neighboring
+/// observation — so the table takes a plain mutex and the global EWMA a
+/// relaxed atomic.
+pub struct ServiceEwma {
+    /// key = kernel-image content hash → EWMA of per-job seconds.
+    per_key: Mutex<HashMap<u64, f64>>,
+    /// EWMA across all work, stored as `f64::to_bits`. 0.0 = no
+    /// observation yet (predict 0: nothing panics before its deadline
+    /// has actually arrived, which is the safe cold-start default).
+    global_bits: AtomicU64,
+}
+
+impl Default for ServiceEwma {
+    fn default() -> Self {
+        ServiceEwma::new()
+    }
+}
+
+impl ServiceEwma {
+    /// Empty tracker; predictions start at zero (see `global_bits`).
+    pub fn new() -> ServiceEwma {
+        ServiceEwma {
+            per_key: Mutex::new(HashMap::new()),
+            global_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    /// Fold one per-job service observation into the EWMA for `key`
+    /// (`None` updates only the global estimate). Non-finite or negative
+    /// observations are discarded.
+    pub fn record(&self, key: Option<u64>, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        if let Some(k) = key {
+            let mut map = self.per_key.lock().unwrap();
+            if map.len() >= SERVICE_KEY_CAP && !map.contains_key(&k) {
+                map.clear();
+            }
+            let e = map.entry(k).or_insert(secs);
+            *e += ALPHA * (secs - *e);
+        }
+        let cur = f64::from_bits(self.global_bits.load(Ordering::Relaxed));
+        let next = if cur == 0.0 { secs } else { cur + ALPHA * (secs - cur) };
+        self.global_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Predicted per-job service time for `key`: the key's EWMA when one
+    /// exists, otherwise the global EWMA (0 before any observation).
+    /// Clamped to 60 s so a corrupt observation can never make every
+    /// deadline look unreachable.
+    pub fn predict(&self, key: Option<u64>) -> Duration {
+        let secs = key
+            .and_then(|k| self.per_key.lock().unwrap().get(&k).copied())
+            .unwrap_or_else(|| f64::from_bits(self.global_bits.load(Ordering::Relaxed)));
+        Duration::from_secs_f64(secs.clamp(0.0, 60.0))
+    }
+
+    /// Distinct image keys currently tracked (tests/report only).
+    pub fn tracked_keys(&self) -> usize {
+        self.per_key.lock().unwrap().len()
+    }
+}
+
+/// Online summary of **signed** slack samples: deadline minus completion
+/// time, in microseconds. Positive = met with room, negative = missed by
+/// that much. All statistics are finite for any finite inputs (the
+/// deadline-miss accounting tests assert this).
+#[derive(Debug, Clone, Default)]
+pub struct SlackSummary {
+    n: u64,
+    total_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl SlackSummary {
+    /// Empty summary.
+    pub fn new() -> SlackSummary {
+        SlackSummary::default()
+    }
+
+    /// Record one slack sample in seconds (may be negative: a miss).
+    /// Non-finite samples are discarded so the aggregates stay finite.
+    pub fn record_secs(&mut self, secs: f64) {
+        if !secs.is_finite() {
+            return;
+        }
+        let us = secs * 1e6;
+        if self.n == 0 {
+            self.min_us = us;
+            self.max_us = us;
+        } else {
+            self.min_us = self.min_us.min(us);
+            self.max_us = self.max_us.max(us);
+        }
+        self.n += 1;
+        self.total_us += us;
+    }
+
+    /// Merge another summary into this one.
+    pub fn merge(&mut self, other: &SlackSummary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+        self.n += other.n;
+        self.total_us += other.total_us;
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean slack in microseconds (0 when empty).
+    pub fn avg_us(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.total_us / self.n as f64
+        }
+    }
+
+    /// Smallest (most negative) slack in microseconds.
+    pub fn min_us(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min_us
+        }
+    }
+
+    /// Largest slack in microseconds.
+    pub fn max_us(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max_us
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_ewma_predicts_zero_before_any_observation() {
+        let s = ServiceEwma::new();
+        assert_eq!(s.predict(Some(42)), Duration::ZERO);
+        assert_eq!(s.predict(None), Duration::ZERO);
+    }
+
+    #[test]
+    fn service_ewma_tracks_per_key_and_global() {
+        let s = ServiceEwma::new();
+        for _ in 0..32 {
+            s.record(Some(1), 0.010);
+        }
+        for _ in 0..32 {
+            s.record(Some(2), 0.001);
+        }
+        let p1 = s.predict(Some(1)).as_secs_f64();
+        let p2 = s.predict(Some(2)).as_secs_f64();
+        assert!((p1 - 0.010).abs() < 0.002, "key 1 must converge near 10ms: {p1}");
+        assert!((p2 - 0.001).abs() < 0.001, "key 2 must converge near 1ms: {p2}");
+        // Unknown keys fall back to the global EWMA, which sits between.
+        let g = s.predict(Some(999)).as_secs_f64();
+        assert!(g > 0.0 && g < 0.011, "global fallback in range: {g}");
+    }
+
+    #[test]
+    fn service_ewma_discards_garbage_and_caps_keys() {
+        let s = ServiceEwma::new();
+        s.record(Some(1), f64::NAN);
+        s.record(Some(1), -5.0);
+        assert_eq!(s.predict(Some(1)), Duration::ZERO);
+        // A corrupt huge observation cannot push predictions past 60s.
+        s.record(Some(1), 1e12);
+        assert!(s.predict(Some(1)) <= Duration::from_secs(60));
+        // One-off keys cannot grow the table without bound.
+        for k in 0..3000u64 {
+            s.record(Some(k), 0.001);
+        }
+        assert!(s.tracked_keys() <= SERVICE_KEY_CAP);
+    }
+
+    #[test]
+    fn slack_summary_handles_signed_samples() {
+        let mut s = SlackSummary::new();
+        s.record_secs(0.002); // met by 2ms
+        s.record_secs(-0.001); // missed by 1ms
+        assert_eq!(s.count(), 2);
+        assert!((s.avg_us() - 500.0).abs() < 1e-9);
+        assert!((s.min_us() - -1000.0).abs() < 1e-9);
+        assert!((s.max_us() - 2000.0).abs() < 1e-9);
+        // Aggregates stay finite; garbage is discarded.
+        s.record_secs(f64::INFINITY);
+        s.record_secs(f64::NAN);
+        assert_eq!(s.count(), 2);
+        assert!(s.avg_us().is_finite() && s.min_us().is_finite() && s.max_us().is_finite());
+    }
+
+    #[test]
+    fn slack_summary_merges() {
+        let mut a = SlackSummary::new();
+        a.record_secs(0.001);
+        let mut b = SlackSummary::new();
+        b.record_secs(-0.003);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.min_us() - -3000.0).abs() < 1e-9);
+        assert!((a.max_us() - 1000.0).abs() < 1e-9);
+    }
+}

@@ -118,6 +118,7 @@ pub fn scale_request_by(
         affinity,
         shard: None,
         client: String::new(),
+        deadline: None,
     };
     (req, expected)
 }
@@ -175,6 +176,7 @@ pub fn saxpy_request(
         affinity,
         shard: None,
         client: String::new(),
+        deadline: None,
     };
     (req, expected)
 }

@@ -110,6 +110,21 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     (r, t0.elapsed())
 }
 
+/// Nearest-rank percentile of a sample set: `q` in `[0, 1]` (0.5 =
+/// median, 0.95 = p95). Non-finite samples are ignored; an empty (or
+/// all-garbage) set yields 0. Used by the pool's per-client latency
+/// reporting and the SLO bench assertions, which compare tail latency
+/// rather than means.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut v: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).expect("filtered to finite values"));
+    let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    v[idx]
+}
+
 /// Relative difference |a-b| / max(a,b); the paper's Fig. 2 "variance is
 /// less than 1%" criterion is `rel_diff < 0.01`.
 pub fn rel_diff(a: f64, b: f64) -> f64 {
@@ -164,6 +179,19 @@ mod tests {
             s.record(Duration::from_micros(42));
         }
         assert!(s.stddev_us() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.95), 7.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert!((percentile(&v, 0.5) - 50.0).abs() <= 1.0);
+        assert!((percentile(&v, 0.95) - 95.0).abs() <= 1.0);
+        // Garbage samples are ignored, not propagated.
+        assert!(percentile(&[1.0, f64::NAN, 3.0], 1.0).is_finite());
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! SLO / deadline-accounting integration tests: deadline stamping from
+//! request budgets and client SLO config, miss counting (exactly one
+//! client, sharded requests counted once by their stitcher), signed
+//! slack finiteness, and preemption accounting under mixed traffic.
+
+use omprt::coordinator::PoolCoordinator;
+use omprt::devrt::RuntimeKind;
+use omprt::ir::passes::OptLevel;
+use omprt::sched::workload::{scale_request_by, sharded_scale_request};
+use omprt::sched::{bytes_to_f32, Affinity, ClientMetrics, DevicePool, PoolConfig, PoolMetrics};
+use omprt::sim::Arch;
+use std::time::Duration;
+
+fn client<'m>(m: &'m PoolMetrics, name: &str) -> &'m ClientMetrics {
+    m.clients
+        .iter()
+        .find(|c| c.client == name)
+        .unwrap_or_else(|| panic!("no metrics row for client `{name}`"))
+}
+
+/// An already-expired explicit deadline must count a miss for exactly
+/// the submitting client — and only for its own requests.
+#[test]
+fn missed_deadline_increments_exactly_one_client() {
+    let pool =
+        DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)).unwrap();
+    let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let mut handles = vec![];
+    for i in 0..4 {
+        // Zero budget: the absolute deadline equals the submit instant,
+        // so completion is necessarily late (a deterministic miss).
+        let (mut req, want) = scale_request_by(2.0, &data, Affinity::any(), OptLevel::O2);
+        req.client = "late".into();
+        req.deadline = Some(Duration::ZERO);
+        handles.push((pool.submit(req).unwrap(), want, true));
+        // Interleaved best-effort traffic from another client.
+        let (mut req, want) =
+            scale_request_by(3.0 + i as f32, &data, Affinity::any(), OptLevel::O2);
+        req.client = "calm".into();
+        handles.push((pool.submit(req).unwrap(), want, false));
+    }
+    for (h, want, _) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let m = pool.metrics();
+    let late = client(&m, "late");
+    assert_eq!(late.completed, 4);
+    assert_eq!(late.deadlines, 4, "every zero-budget request carries a deadline");
+    assert_eq!(late.deadline_miss, 4, "every zero-budget request must miss");
+    let calm = client(&m, "calm");
+    assert_eq!(calm.completed, 4);
+    assert_eq!((calm.deadlines, calm.deadline_miss), (0, 0), "no deadline leaks to calm");
+    assert_eq!(m.deadline_totals(), (4, 4));
+}
+
+/// A met deadline records positive slack; slack aggregates are finite
+/// either way (the clock-skew-free simulation invariant).
+#[test]
+fn slack_summaries_are_signed_and_finite() {
+    let pool =
+        DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)).unwrap();
+    let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    // Generous budget: must be met, slack positive.
+    let (mut req, want) = scale_request_by(2.0, &data, Affinity::any(), OptLevel::O2);
+    req.client = "met".into();
+    req.deadline = Some(Duration::from_secs(600));
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    // Zero budget: missed, slack negative.
+    let (mut req, _) = scale_request_by(2.0, &data, Affinity::any(), OptLevel::O2);
+    req.client = "missed".into();
+    req.deadline = Some(Duration::ZERO);
+    pool.submit(req).unwrap().wait().unwrap();
+    let m = pool.metrics();
+    let met = client(&m, "met");
+    assert_eq!((met.deadlines, met.deadline_miss), (1, 0));
+    assert!(met.slack.min_us() > 0.0, "met deadline must record positive slack");
+    let missed = client(&m, "missed");
+    assert_eq!((missed.deadlines, missed.deadline_miss), (1, 1));
+    assert!(missed.slack.max_us() <= 0.0, "missed deadline must record negative slack");
+    for c in [met, missed] {
+        for v in [c.slack.avg_us(), c.slack.min_us(), c.slack.max_us()] {
+            assert!(v.is_finite(), "slack aggregates must be finite: {v}");
+        }
+    }
+}
+
+/// A sharded request that misses its deadline counts ONE miss — the
+/// stitcher judges the request as a whole; shard jobs are skipped.
+#[test]
+fn sharded_miss_counts_once() {
+    let pool = DevicePool::new(
+        &PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4).with_shard_min_trips(1024),
+    )
+    .unwrap();
+    let data: Vec<f32> = (0..32 * 1024).map(|i| (i % 101) as f32).collect();
+    let (mut req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+    req.client = "split".into();
+    req.deadline = Some(Duration::ZERO);
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert!(resp.shards >= 2, "request must actually shard, got {}", resp.shards);
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    let m = pool.metrics();
+    let split = client(&m, "split");
+    assert_eq!(split.completed, 1, "one request, despite {} shards", resp.shards);
+    assert_eq!(
+        (split.deadlines, split.deadline_miss),
+        (1, 1),
+        "the miss must count once, not per shard"
+    );
+    assert!(m.shard_jobs >= 2);
+}
+
+/// `[pool] client_slos` stamps deadlines without the request asking, and
+/// the per-request explicit budget overrides the client target.
+#[test]
+fn client_slo_config_stamps_deadlines() {
+    let pool = DevicePool::new(
+        &PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)
+            .with_client_slo("svc", 600_000.0),
+    )
+    .unwrap();
+    let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    // No explicit budget: the client SLO applies (and is easily met).
+    let (mut req, _) = scale_request_by(2.0, &data, Affinity::any(), OptLevel::O2);
+    req.client = "svc".into();
+    pool.submit(req).unwrap().wait().unwrap();
+    // Explicit zero budget overrides the generous SLO: a miss.
+    let (mut req, _) = scale_request_by(2.0, &data, Affinity::any(), OptLevel::O2);
+    req.client = "svc".into();
+    req.deadline = Some(Duration::ZERO);
+    pool.submit(req).unwrap().wait().unwrap();
+    // Untagged traffic stays best-effort.
+    let (req, _) = scale_request_by(2.0, &data, Affinity::any(), OptLevel::O2);
+    pool.submit(req).unwrap().wait().unwrap();
+    let m = pool.metrics();
+    let svc = client(&m, "svc");
+    assert_eq!(svc.deadlines, 2, "SLO-stamped + explicit-budget requests");
+    assert_eq!(svc.deadline_miss, 1, "only the zero-budget request misses");
+    assert_eq!(svc.slo, Some(Duration::from_secs(600)));
+    let default = client(&m, "");
+    assert_eq!((default.deadlines, default.deadline_miss), (0, 0));
+}
+
+/// Mixed deadline + bulk traffic completes correctly with preemption
+/// enabled, preemptions surface in the metrics, and per-client p95/p50
+/// percentiles are available for every client.
+#[test]
+fn preemption_under_load_keeps_results_correct() {
+    let pc = PoolCoordinator::new(
+        &PoolConfig::mixed4().with_client_slo("rt", 0.001), // 1µs: panics constantly
+    )
+    .unwrap();
+    let data: Vec<f32> = (0..128).map(|i| i as f32).collect();
+    let mut handles = vec![];
+    for i in 0..60 {
+        let client = if i % 4 == 0 { "rt" } else { "bulk" };
+        let factor = if i % 4 == 0 { 2.5 } else { 2.0 };
+        let (mut req, want) = scale_request_by(factor, &data, Affinity::any(), OptLevel::O2);
+        req.client = client.into();
+        handles.push((pc.submit(req).unwrap(), want));
+    }
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let m = pc.metrics();
+    assert_eq!(m.completed, 60);
+    assert_eq!(m.failed, 0);
+    let rt = client(&m, "rt");
+    assert_eq!(rt.deadlines, 15);
+    assert!(rt.latency_p95_us() >= rt.latency_p50_us());
+    assert!(client(&m, "bulk").latency_p95_us() > 0.0);
+    // The starvation bound guarantees bulk progress even though "rt" was
+    // permanently panicking; everything drained, so both held.
+    let text = pc.format_report();
+    assert!(text.contains("slo:"), "{text}");
+    assert!(text.contains("rt"), "{text}");
+}
