@@ -21,7 +21,12 @@
 //!    sequential requests) + 7 bulk clients (async backlogs), run with
 //!    and without `client_slos`: the SLO client's p95 sojourn must
 //!    undercut the bulk clients' median, while bulk throughput stays
-//!    ≥ 0.8x the fairness-only baseline.
+//!    ≥ 0.8x the fairness-only baseline;
+//! 7. **degraded device** — closed-loop sharded requests on a uniform
+//!    4-device pool while device 2 is scripted to wedge (150ms hang per
+//!    launch) mid-run: without the watchdog every stitch serializes on
+//!    the wedged reservation; with quarantine + re-planning, completion
+//!    must beat that no-re-plan baseline.
 //!
 //! Results are also written as JSON to `BENCH_pool.json` (override the
 //! path with the `BENCH_POOL_JSON` env var) so CI can archive them.
@@ -440,6 +445,71 @@ fn slo_scenario(per_client: usize) -> (f64, f64, f64, f64, u64, u64) {
     (slo_p95, bulk_median, bulk_base, bulk_slo, misses, preemptions)
 }
 
+/// Degraded-device scenario: closed-loop sharded `scale` requests over
+/// a uniform 4-device pool whose device 2 is scripted (`sim::fault`) to
+/// hang 150 ms per launch from its 4th launch on. The no-watchdog
+/// baseline re-reserves the wedged device for every stitch (it looks
+/// idle again after each hang); with the health layer the first hang
+/// quarantines it (~2x the 15 ms watchdog floor) and every later
+/// request plans around it. Returns
+/// `(t_noreplan_ms, t_replan_ms, quarantines)`.
+fn degraded_device_scenario(requests: usize) -> (f64, f64, u64) {
+    println!(
+        "\n--- degraded device: {requests} sharded requests, 1 of 4 devices wedged mid-run ---"
+    );
+    let n = 32 * 1024;
+    let data: Vec<f32> = (0..n).map(|k| (k % 1013) as f32).collect();
+    let run = |watchdog: bool| -> (f64, u64) {
+        let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
+            .with_shard_min_trips(2048)
+            .with_watchdog(watchdog)
+            .with_watchdog_min_ms(15)
+            .with_fault_spec("2=stall:150ms:30s@launch:3")
+            .expect("valid fault spec");
+        let pool = DevicePool::new(&cfg).unwrap();
+        // Warm all four image caches before the fault window opens: the
+        // closed loop hands device 2 exactly one shard per request, so
+        // three warm requests leave it at launch index 3 — the trigger.
+        for _ in 0..3 {
+            let (req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+            let resp = pool.submit(req).unwrap().wait().unwrap();
+            assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+        }
+        let t0 = Instant::now();
+        for _ in 0..requests {
+            let (req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
+            let resp = pool.submit(req).unwrap().wait().unwrap();
+            assert_eq!(
+                bytes_to_f32(resp.buffers[0].as_ref().unwrap()),
+                want,
+                "degraded-pool results must stay correct"
+            );
+        }
+        let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        pool.quiesce();
+        let m = pool.metrics();
+        for d in &m.devices {
+            assert_eq!(d.reserved, 0, "reservation leak on device {}", d.id);
+        }
+        (elapsed_ms, m.devices[2].quarantines)
+    };
+    let (t_noreplan, q0) = run(false);
+    assert_eq!(q0, 0, "watchdog off must never quarantine");
+    let (t_replan, q1) = run(true);
+    assert!(q1 >= 1, "the wedged device must end up quarantined");
+    println!(
+        "no-replan {t_noreplan:>7.0} ms | replan {t_replan:>7.0} ms | speedup {:.2}x | \
+         {q1} quarantine(s)",
+        t_noreplan / t_replan
+    );
+    assert!(
+        t_replan < 0.7 * t_noreplan,
+        "re-planning must beat the no-re-plan baseline \
+         (got {t_replan:.0} ms vs {t_noreplan:.0} ms)"
+    );
+    (t_noreplan, t_replan, q1)
+}
+
 /// Minimal hand-rolled JSON (the offline crate set has no serde).
 fn write_bench_json(path: &str, json: &str) {
     match std::fs::write(path, json) {
@@ -493,6 +563,8 @@ fn main() {
     let shares = fairness_scenario(4 * per_client);
     let (slo_p95, bulk_median, bulk_base, bulk_slo, misses, preemptions) =
         slo_scenario(per_client);
+    let (t_noreplan_ms, t_replan_ms, quarantines) =
+        degraded_device_scenario(if smoke { 4 } else { 8 });
 
     let min_share = shares.iter().cloned().fold(f64::INFINITY, f64::min);
     let json = format!(
@@ -509,10 +581,13 @@ fn main() {
          \"shares\": [{}]}},\n  \
          \"slo\": {{\"slo_p95_us\": {slo_p95:.1}, \"bulk_median_us\": {bulk_median:.1}, \
          \"bulk_rate_baseline\": {bulk_base:.1}, \"bulk_rate_slo\": {bulk_slo:.1}, \
-         \"bulk_ratio\": {:.3}, \"misses\": {misses}, \"preemptions\": {preemptions}}}\n}}\n",
+         \"bulk_ratio\": {:.3}, \"misses\": {misses}, \"preemptions\": {preemptions}}},\n  \
+         \"degraded\": {{\"t_noreplan_ms\": {t_noreplan_ms:.1}, \"t_replan_ms\": {t_replan_ms:.1}, \
+         \"speedup\": {:.3}, \"quarantines\": {quarantines}}}\n}}\n",
         adaptive_rate / static_rate,
         shares.iter().map(|s| format!("{s:.4}")).collect::<Vec<_>>().join(", "),
         bulk_slo / bulk_base,
+        t_noreplan_ms / t_replan_ms.max(1e-9),
     );
     let path =
         std::env::var("BENCH_POOL_JSON").unwrap_or_else(|_| "BENCH_pool.json".to_string());

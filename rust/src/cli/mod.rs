@@ -10,7 +10,8 @@
 //!                   [--slo-ms MS]
 //! omprt pool        [--config FILE] [--requests N] [--elems N] [--client C] [--slo-ms MS]
 //!                   [--batch N] [--queue-cap N] [--cache-budget BYTES] [--shard-elems N]
-//!                   [--adaptive | --no-adaptive]
+//!                   [--adaptive | --no-adaptive] [--fault "DEV=SPEC[,...]"]
+//!                   [--no-watchdog] [--watchdog-min-ms MS] [--retry-max N]
 //! omprt info
 //! ```
 
@@ -27,7 +28,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence-only switches).
-const BOOL_FLAGS: &[&str] = &["pool", "adaptive", "no-adaptive"];
+const BOOL_FLAGS: &[&str] = &["pool", "adaptive", "no-adaptive", "watchdog", "no-watchdog"];
 
 fn parse_args(argv: &[String]) -> Args {
     let mut positional = vec![];
@@ -117,6 +118,41 @@ impl Args {
                 )));
             }
             cfg = cfg.with_client_slo(&self.client(), ms);
+        }
+        // `--fault "<dev>=<spec>[,...]"` arms scripted device faults
+        // (stall/slow/fail/die — see `sim::fault` for the grammar), so a
+        // degraded pool can be demoed and benchmarked from the CLI. Like
+        // every other pool flag it *overrides* the config file: the
+        // flag's list replaces `[pool] faults` wholesale (appending
+        // would reject any same-device combination).
+        if let Some(list) = self.flags.get("fault") {
+            cfg.faults = crate::sim::FaultSpec::parse_list(list)?;
+        }
+        // `--no-watchdog` wins when both switches are passed (matching
+        // the `--adaptive`/`--no-adaptive` pair).
+        if self.has("watchdog") {
+            cfg.watchdog = true;
+        }
+        if self.has("no-watchdog") {
+            cfg.watchdog = false;
+        }
+        if let Some(ms) = self.uint("watchdog-min-ms") {
+            // Same validation as the config key (`read_uint` min 1):
+            // the two surfaces must agree on what is legal.
+            if ms == 0 {
+                return Err(crate::util::Error::Config(
+                    "--watchdog-min-ms wants an integer >= 1".into(),
+                ));
+            }
+            cfg.watchdog_min_ms = ms;
+        }
+        if let Some(n) = self.uint("retry-max") {
+            cfg.retry_max = u32::try_from(n).map_err(|_| {
+                crate::util::Error::Config(format!(
+                    "--retry-max wants an integer <= {}, got `{n}`",
+                    u32::MAX
+                ))
+            })?;
         }
         Ok(cfg)
     }
@@ -423,6 +459,8 @@ fn print_help() {
          \x20      pool: --config FILE ([pool] table)  --requests N  --elems N  --client NAME\n\
          \x20            --batch N  --queue-cap N  --cache-budget BYTES  --shard-elems N\n\
          \x20            --adaptive|--no-adaptive (occupancy-driven batch/shard sizing)\n\
-         \x20            --slo-ms MS (latency target for --client: deadline-aware EDF pull)"
+         \x20            --slo-ms MS (latency target for --client: deadline-aware EDF pull)\n\
+         \x20            --fault \"DEV=SPEC[,..]\" (scripted stall/slow/fail/die faults)\n\
+         \x20            --watchdog|--no-watchdog  --watchdog-min-ms MS  --retry-max N (health)"
     );
 }

@@ -5,9 +5,10 @@
 //! integer / float / boolean values, and flat arrays of strings or
 //! integers. Used by benchmark run configs, the CLI defaults, the
 //! AOT artifact manifest written by `python/compile/aot.py`, and the
-//! `[pool]` scheduler table (devices, batching/sharding knobs, and the
-//! `adaptive` / `fairness` / `client_weights` / `client_slos` keys — see
-//! [`crate::sched::PoolConfig::from_config`]).
+//! `[pool]` scheduler table (devices, batching/sharding knobs, the
+//! `adaptive` / `fairness` / `client_weights` / `client_slos` keys, and
+//! the health layer's `faults` / `watchdog` / `watchdog_min_ms` /
+//! `retry_max` keys — see [`crate::sched::PoolConfig::from_config`]).
 //!
 //! ```text
 //! # comment

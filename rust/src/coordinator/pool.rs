@@ -118,18 +118,39 @@ impl PoolCoordinator {
             "slo: {} deadlined requests, {} missed | {} EDF preemptions\n",
             deadlined, missed, m.preemptions
         ));
+        if m.watchdog {
+            let quarantined = m
+                .devices
+                .iter()
+                .filter(|d| d.health == crate::sched::HealthState::Quarantined)
+                .count();
+            out.push_str(&format!(
+                "health: watchdog on | {} quarantined now | {} replans ({} pinned jobs moved) | \
+                 {} retries ({} exhausted) | {} probes, {} readmissions\n",
+                quarantined,
+                m.replans,
+                m.replanned_jobs,
+                m.retries,
+                m.retries_exhausted,
+                m.probes,
+                m.readmissions
+            ));
+        } else {
+            out.push_str("health: watchdog off (stalled devices are waited on)\n");
+        }
         out.push_str(
-            "dev | runtime  | arch    | done  | maxbat | occ%  | images | hits/miss/evict | mem live/peak\n",
+            "dev | runtime  | arch    | hlth | done  | maxbat | occ%  | images | hits/miss/evict | mem live/peak\n",
         );
         out.push_str(
-            "----+----------+---------+-------+--------+-------+--------+-----------------+--------------\n",
+            "----+----------+---------+------+-------+--------+-------+--------+-----------------+--------------\n",
         );
         for d in &m.devices {
             out.push_str(&format!(
-                "{:>3} | {:<8} | {:<7} | {:>5} | {:>6} | {:>5.1} | {:>6} | {}/{}/{} | {}/{}\n",
+                "{:>3} | {:<8} | {:<7} | {:<4} | {:>5} | {:>6} | {:>5.1} | {:>6} | {}/{}/{} | {}/{}\n",
                 d.id,
                 d.kind.to_string(),
                 d.arch.to_string(),
+                d.health.label(),
                 d.completed,
                 d.max_batch,
                 d.occupancy * 100.0,
@@ -140,6 +161,14 @@ impl PoolCoordinator {
                 d.mem.live_bytes,
                 d.mem.peak_bytes
             ));
+        }
+        for d in &m.devices {
+            if let Some(fault) = &d.fault {
+                out.push_str(&format!(
+                    "fault: dev {} scripted `{fault}` | injected {} time(s) | {} quarantine(s)\n",
+                    d.id, d.fault_injected, d.quarantines
+                ));
+            }
         }
         if !m.clients.is_empty() {
             let uptime = m.uptime.as_secs_f64().max(1e-9);
@@ -228,13 +257,25 @@ mod tests {
         let def = m.clients.iter().find(|c| c.client.is_empty()).expect("default client row");
         assert_eq!(def.completed, 8);
         assert!((m.client_share("") - 1.0).abs() < 1e-12);
-        // Occupancy, adaptive-controller and SLO state surface in the
-        // report (miss + slack columns, deadline/preemption line).
+        // Occupancy, adaptive-controller, SLO and health state surface
+        // in the report (miss + slack columns, deadline/preemption and
+        // watchdog lines, per-device health column).
         assert!(text.contains("occ%"), "{text}");
         assert!(text.contains("adaptive:"), "{text}");
         assert!(text.contains("slo:"), "{text}");
         assert!(text.contains("miss"), "{text}");
         assert!(text.contains("slack avg"), "{text}");
+        assert!(text.contains("health: watchdog on"), "{text}");
+        assert!(text.contains("hlth"), "{text}");
+        // A fault-free healthy pool: every device reads `ok`, nothing
+        // quarantined, no retries.
+        assert!(text.contains("| ok "), "{text}");
+        assert_eq!(m.replans, 0);
+        assert_eq!(m.retries, 0);
+        assert!(m
+            .devices
+            .iter()
+            .all(|d| d.health == crate::sched::HealthState::Healthy));
         // A best-effort workload has no deadlines and no misses.
         let (deadlined, missed) = m.deadline_totals();
         assert_eq!((deadlined, missed), (0, 0));

@@ -1,0 +1,426 @@
+//! Device health: the progress-watchdog policy behind quarantine and
+//! shard re-planning.
+//!
+//! Every pool device moves through a small lifecycle:
+//!
+//! ```text
+//!            in-flight age > suspect threshold
+//!   Healthy ───────────────────────────────────▶ Suspect
+//!      ▲  ▲                                        │
+//!      │  │ completes work                         │ age > quarantine threshold,
+//!      │  └────────────────────────────────────────┘ or a fault streak
+//!      │                                           ▼
+//!      └───────────── probe succeeds ───────── Quarantined
+//!                    (re-admission)            (worker claims nothing;
+//!                                               queued pinned shards re-planned)
+//! ```
+//!
+//! Detection is *progress-based*: the monitor compares how long a
+//! device's current work has been in flight against what the service
+//! EWMA predicts it should take (scaled by the batch size), floored by
+//! `[pool] watchdog_min_ms` so cold-start predictions of ~0 cannot
+//! quarantine a healthy device mid-`prepare`. Fast failures take a
+//! second path: [`FAULT_STREAK_QUARANTINE`] consecutive injected-fault
+//! batches quarantine the device without waiting for the watchdog (a
+//! dead device fails in microseconds and would otherwise churn retries
+//! forever). Re-admission is probe-based: the monitor periodically runs
+//! a cheap device probe (fault-layer check plus a global-memory
+//! write/read roundtrip) and returns the device to `Healthy` when it
+//! passes.
+//!
+//! The *mechanisms* this policy drives — worker gating, pinned-shard
+//! re-planning, bounded retry — live in [`crate::sched::pool`]; this
+//! module keeps the pure, unit-testable pieces: the state machine, the
+//! thresholds, and the per-device atomic state block.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::time::Duration;
+
+/// Lifecycle state of one pool device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally.
+    Healthy,
+    /// In-flight work has exceeded the suspect threshold; the device may
+    /// be stalled. Still eligible for DRR pulls (it may just be slow),
+    /// but the shard planner no longer reserves it.
+    Suspect,
+    /// Declared unhealthy: its worker claims no new work, the shard
+    /// planner ignores it, its queued pinned jobs are re-planned, and
+    /// only a successful probe re-admits it.
+    Quarantined,
+}
+
+impl HealthState {
+    fn from_u8(v: u8) -> HealthState {
+        match v {
+            1 => HealthState::Suspect,
+            2 => HealthState::Quarantined,
+            _ => HealthState::Healthy,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Suspect => 1,
+            HealthState::Quarantined => 2,
+        }
+    }
+
+    /// Short fixed-width label for the report device table.
+    pub fn label(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "ok",
+            HealthState::Suspect => "susp",
+            HealthState::Quarantined => "quar",
+        }
+    }
+}
+
+impl std::fmt::Display for HealthState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Suspect => "suspect",
+            HealthState::Quarantined => "quarantined",
+        })
+    }
+}
+
+/// Consecutive fault-injected batch failures that quarantine a device
+/// without waiting for the stall watchdog: a dead device fails fast, so
+/// in-flight age never grows, but three straight device faults are not
+/// noise.
+pub const FAULT_STREAK_QUARANTINE: u32 = 3;
+
+/// In-flight age beyond `SUSPECT_MULT x` the predicted batch service
+/// time marks a device Suspect…
+const SUSPECT_MULT: u32 = 4;
+
+/// …and beyond `QUARANTINE_MULT x` quarantines it.
+const QUARANTINE_MULT: u32 = 8;
+
+/// What the watchdog concludes about one in-flight device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WatchdogVerdict {
+    /// Progressing within expectations.
+    Ok,
+    /// Slower than expected; stop reserving it for shards.
+    Suspect,
+    /// Stalled; quarantine and re-plan.
+    Quarantine,
+}
+
+/// Pure watchdog policy: judge one device's in-flight work.
+///
+/// * `inflight_age` — how long the currently executing batch has been
+///   running;
+/// * `predicted` — the service EWMA's per-job prediction times the
+///   number of jobs in the batch (0 when no history exists);
+/// * `floor` — `[pool] watchdog_min_ms`: the minimum age that may ever
+///   be judged suspect. The quarantine threshold is at least twice it.
+///
+/// Thresholds scale with the *predicted* time so a legitimately long
+/// fused batch is not mistaken for a stall, and are floored so
+/// cold-start predictions of zero cannot condemn a device that is just
+/// paying first-launch `prepare` costs.
+pub fn judge(inflight_age: Duration, predicted: Duration, floor: Duration) -> WatchdogVerdict {
+    let suspect_after = predicted.saturating_mul(SUSPECT_MULT).max(floor);
+    let quarantine_after = predicted
+        .saturating_mul(QUARANTINE_MULT)
+        .max(floor.saturating_mul(2));
+    if inflight_age >= quarantine_after {
+        WatchdogVerdict::Quarantine
+    } else if inflight_age >= suspect_after {
+        WatchdogVerdict::Suspect
+    } else {
+        WatchdogVerdict::Ok
+    }
+}
+
+/// Per-device health block: the state machine plus the progress
+/// timestamps the monitor reads. All fields are atomics — workers and
+/// the monitor touch them without extra locking (transitions are
+/// heuristic; a lost race is re-judged on the next tick).
+#[derive(Default)]
+pub struct DeviceHealth {
+    /// Encoded [`HealthState`].
+    state: AtomicU8,
+    /// Start of the currently executing batch, in nanoseconds since the
+    /// pool started; 0 = idle.
+    busy_since_ns: AtomicU64,
+    /// Jobs in the currently executing batch (sizes the watchdog's
+    /// predicted service time).
+    busy_jobs: AtomicU64,
+    /// Image-content key of the executing batch, valid while
+    /// `busy_has_key` is set — lets the watchdog judge against the
+    /// *per-key* service prediction instead of the global fallback, so
+    /// a legitimately heavy image with established history is never
+    /// mistaken for a stall.
+    busy_key: AtomicU64,
+    /// Whether `busy_key` is meaningful for the current batch (leased
+    /// tasks and keyless work judge against the global estimate).
+    busy_has_key: AtomicU8,
+    /// The device is running a leased task ([`crate::sched::DevicePool::run_on`]):
+    /// arbitrary user code with unbounded legitimate runtime, so the
+    /// stall watchdog must not judge it.
+    lease_depth: AtomicU32,
+    /// Consecutive batches that failed with an injected device fault.
+    fault_streak: AtomicU32,
+    /// Times this device entered quarantine.
+    quarantines: AtomicU64,
+    /// Monitor bookkeeping: last probe instant, ns since pool start.
+    last_probe_ns: AtomicU64,
+}
+
+impl DeviceHealth {
+    /// Fresh healthy block.
+    pub fn new() -> DeviceHealth {
+        DeviceHealth::default()
+    }
+
+    /// Current state.
+    pub fn state(&self) -> HealthState {
+        HealthState::from_u8(self.state.load(Ordering::SeqCst))
+    }
+
+    /// Is the device quarantined right now?
+    pub fn is_quarantined(&self) -> bool {
+        self.state() == HealthState::Quarantined
+    }
+
+    /// Force a state (monitor transitions + tests).
+    pub fn set_state(&self, s: HealthState) {
+        self.state.store(s.as_u8(), Ordering::SeqCst);
+    }
+
+    /// Move Healthy → Suspect (never downgrades a quarantine).
+    pub fn mark_suspect(&self) {
+        let _ = self.state.compare_exchange(
+            HealthState::Healthy.as_u8(),
+            HealthState::Suspect.as_u8(),
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+    }
+
+    /// Move Suspect → Healthy (the suspected stall resolved). A CAS, not
+    /// a store: a concurrent fault-streak quarantine must never be
+    /// overwritten — only a successful probe re-admits.
+    pub fn clear_suspect(&self) {
+        let _ = self.state.compare_exchange(
+            HealthState::Suspect.as_u8(),
+            HealthState::Healthy.as_u8(),
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+    }
+
+    /// Enter quarantine; returns `false` when already quarantined (so
+    /// callers trigger re-planning exactly once per incident).
+    pub fn quarantine(&self) -> bool {
+        let prev = self.state.swap(HealthState::Quarantined.as_u8(), Ordering::SeqCst);
+        let newly = prev != HealthState::Quarantined.as_u8();
+        if newly {
+            self.quarantines.fetch_add(1, Ordering::Relaxed);
+        }
+        newly
+    }
+
+    /// Probe passed: leave quarantine, clear the streak.
+    pub fn readmit(&self) {
+        self.fault_streak.store(0, Ordering::Relaxed);
+        self.set_state(HealthState::Healthy);
+    }
+
+    /// Times this device entered quarantine.
+    pub fn quarantine_count(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    /// Worker: record the start of a batch of `jobs` jobs (`now_ns` is
+    /// nanoseconds since the pool started; stored at ≥ 1 so 0 keeps
+    /// meaning idle). `key` is the batch's image-content key when it has
+    /// one — the watchdog prediction uses it.
+    pub fn begin_work(&self, now_ns: u64, jobs: usize, key: Option<u64>) {
+        self.busy_jobs.store(jobs as u64, Ordering::Relaxed);
+        self.busy_key.store(key.unwrap_or(0), Ordering::Relaxed);
+        self.busy_has_key.store(key.is_some() as u8, Ordering::Relaxed);
+        self.busy_since_ns.store(now_ns.max(1), Ordering::SeqCst);
+    }
+
+    /// Worker: work finished. A clean batch clears the fault streak and
+    /// lifts Suspect (the device made progress); a faulted batch grows
+    /// the streak — a return of `true` tells the caller to quarantine.
+    pub fn end_work(&self, faulted: bool) -> bool {
+        self.busy_since_ns.store(0, Ordering::SeqCst);
+        if faulted {
+            let streak = self.fault_streak.fetch_add(1, Ordering::Relaxed) + 1;
+            streak >= FAULT_STREAK_QUARANTINE
+        } else {
+            self.fault_streak.store(0, Ordering::Relaxed);
+            self.clear_suspect();
+            false
+        }
+    }
+
+    /// Worker: a leased task finished. Leases bypass the fault gate, so
+    /// their completion carries **no signal** about device faults: the
+    /// streak is deliberately left untouched — a dead device
+    /// interleaving leased tasks with failing offload batches must
+    /// still reach [`FAULT_STREAK_QUARANTINE`].
+    pub fn end_lease(&self) {
+        self.busy_since_ns.store(0, Ordering::SeqCst);
+    }
+
+    /// Worker: a leased task is starting/ending on this device. While
+    /// the depth is nonzero the watchdog skips the device entirely.
+    pub fn set_leased(&self, leased: bool) {
+        if leased {
+            self.lease_depth.fetch_add(1, Ordering::SeqCst);
+        } else {
+            self.lease_depth.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Monitor: `(busy_since_ns, jobs, image key)` of the executing
+    /// batch, or `None` when the device is idle or running a leased
+    /// task.
+    pub fn watchable_busy(&self) -> Option<(u64, u64, Option<u64>)> {
+        if self.lease_depth.load(Ordering::SeqCst) != 0 {
+            return None;
+        }
+        let since = self.busy_since_ns.load(Ordering::SeqCst);
+        if since == 0 {
+            return None;
+        }
+        let key = (self.busy_has_key.load(Ordering::Relaxed) != 0)
+            .then(|| self.busy_key.load(Ordering::Relaxed));
+        Some((since, self.busy_jobs.load(Ordering::Relaxed).max(1), key))
+    }
+
+    /// Monitor: last probe instant in ns-since-pool-start.
+    pub fn last_probe_ns(&self) -> u64 {
+        self.last_probe_ns.load(Ordering::Relaxed)
+    }
+
+    /// Monitor: remember when the last probe ran.
+    pub fn set_last_probe_ns(&self, ns: u64) {
+        self.last_probe_ns.store(ns, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn judge_scales_with_prediction_and_floors() {
+        // Cold start (prediction 0): only the floor protects devices.
+        assert_eq!(judge(5 * MS, Duration::ZERO, 25 * MS), WatchdogVerdict::Ok);
+        assert_eq!(judge(30 * MS, Duration::ZERO, 25 * MS), WatchdogVerdict::Suspect);
+        assert_eq!(judge(60 * MS, Duration::ZERO, 25 * MS), WatchdogVerdict::Quarantine);
+        // A long predicted batch raises both thresholds: 40ms in flight
+        // against a 20ms prediction is fine.
+        assert_eq!(judge(40 * MS, 20 * MS, 25 * MS), WatchdogVerdict::Ok);
+        assert_eq!(judge(100 * MS, 20 * MS, 25 * MS), WatchdogVerdict::Suspect);
+        assert_eq!(judge(200 * MS, 20 * MS, 25 * MS), WatchdogVerdict::Quarantine);
+    }
+
+    #[test]
+    fn judge_quarantine_threshold_never_undercuts_suspect() {
+        for pred_ms in [0u64, 1, 10, 100, 10_000] {
+            for floor_ms in [1u64, 25, 500] {
+                let pred = Duration::from_millis(pred_ms);
+                let floor = Duration::from_millis(floor_ms);
+                // Walk the age upward; the verdict must be monotone
+                // Ok → Suspect → Quarantine.
+                let mut seen_suspect = false;
+                let mut seen_quarantine = false;
+                for age_ms in [0u64, 1, 10, 50, 100, 1_000, 100_000, 1_000_000] {
+                    match judge(Duration::from_millis(age_ms), pred, floor) {
+                        WatchdogVerdict::Ok => {
+                            assert!(
+                                !seen_suspect && !seen_quarantine,
+                                "verdict regressed at age {age_ms}ms (pred {pred_ms}ms)"
+                            );
+                        }
+                        WatchdogVerdict::Suspect => {
+                            assert!(!seen_quarantine, "suspect after quarantine");
+                            seen_suspect = true;
+                        }
+                        WatchdogVerdict::Quarantine => seen_quarantine = true,
+                    }
+                }
+                assert!(seen_quarantine, "large ages must quarantine");
+            }
+        }
+    }
+
+    #[test]
+    fn state_machine_transitions() {
+        let h = DeviceHealth::new();
+        assert_eq!(h.state(), HealthState::Healthy);
+        h.mark_suspect();
+        assert_eq!(h.state(), HealthState::Suspect);
+        // Clean completion lifts Suspect.
+        assert!(!h.end_work(false));
+        assert_eq!(h.state(), HealthState::Healthy);
+        // Quarantine reports "newly entered" exactly once.
+        assert!(h.quarantine());
+        assert!(!h.quarantine());
+        assert_eq!(h.quarantine_count(), 1);
+        // mark_suspect must not downgrade a quarantine, and
+        // clear_suspect must not overwrite one (only probes readmit).
+        h.mark_suspect();
+        assert_eq!(h.state(), HealthState::Quarantined);
+        h.clear_suspect();
+        assert_eq!(h.state(), HealthState::Quarantined);
+        h.readmit();
+        assert_eq!(h.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn fault_streak_trips_after_the_cap() {
+        let h = DeviceHealth::new();
+        for i in 0..FAULT_STREAK_QUARANTINE {
+            let trip = h.end_work(true);
+            assert_eq!(trip, i + 1 == FAULT_STREAK_QUARANTINE, "streak {i}");
+        }
+        // A clean batch resets the streak.
+        let h = DeviceHealth::new();
+        assert!(!h.end_work(true));
+        assert!(!h.end_work(false));
+        assert!(!h.end_work(true));
+        assert!(!h.end_work(true));
+        assert!(h.end_work(true));
+        // A completing lease must NOT reset it (leases bypass the fault
+        // gate and carry no health signal).
+        let h = DeviceHealth::new();
+        assert!(!h.end_work(true));
+        assert!(!h.end_work(true));
+        h.end_lease();
+        assert!(h.end_work(true), "lease completion must not break the streak");
+    }
+
+    #[test]
+    fn watchable_busy_skips_idle_and_leased() {
+        let h = DeviceHealth::new();
+        assert_eq!(h.watchable_busy(), None, "idle device");
+        h.begin_work(123, 4, Some(77));
+        assert_eq!(h.watchable_busy(), Some((123, 4, Some(77))));
+        h.set_leased(true);
+        assert_eq!(h.watchable_busy(), None, "leased device is unwatchable");
+        h.set_leased(false);
+        assert_eq!(h.watchable_busy(), Some((123, 4, Some(77))));
+        h.end_work(false);
+        assert_eq!(h.watchable_busy(), None);
+        // Keyless work reports no key; begin_work(0, ..) still reads as
+        // busy (the timestamp is clamped to 1).
+        h.begin_work(0, 1, None);
+        assert_eq!(h.watchable_busy(), Some((1, 1, None)));
+    }
+}

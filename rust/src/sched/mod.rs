@@ -120,6 +120,39 @@
 //! sharded requests judged once by their stitcher — surfaced with p50/p95
 //! sojourn in [`PoolMetrics::clients`] and the `PoolCoordinator` report.
 //!
+//! ## Device health, fault injection and re-planning
+//!
+//! Reserving a device for a shard is a bet that it will stay healthy;
+//! at scale, degraded and stalled devices dominate tail behavior, so the
+//! pool carries the failure half of the scheduler too (see [`health`]
+//! for the state machine and [`crate::sim::fault`] for the scripted
+//! faults that exercise it deterministically):
+//!
+//! * a **progress watchdog** (the `pool-health` thread) compares every
+//!   device's in-flight age against the service EWMA's prediction for
+//!   the executing batch (floored by `[pool] watchdog_min_ms`) and
+//!   marks laggards Suspect — still schedulable, never reserved — then
+//!   Quarantined;
+//! * **quarantine** takes a device out of service: its worker claims
+//!   nothing, the shard planner and the adaptive idle count ignore it,
+//!   and submissions whose affinity matches only quarantined devices
+//!   fail fast instead of waiting on a dead device;
+//! * quarantining **preemptively re-plans** the device's still-queued
+//!   pinned shard jobs onto currently idle healthy devices (reservation
+//!   counters rebalanced in the same critical section), falling back to
+//!   unpinned DRR visibility so any matching worker can claim them;
+//! * jobs that fail with an injected **device fault** are retried on a
+//!   *different* healthy device up to `[pool] retry_max` times, after
+//!   which the original error is surfaced; a fast-failing device is
+//!   quarantined after [`health::FAULT_STREAK_QUARANTINE`] consecutive
+//!   fault batches (it never trips the stall watchdog);
+//! * quarantined devices are **probed** periodically (fault-layer check
+//!   plus a global-memory roundtrip) and re-admitted when the probe
+//!   passes.
+//!
+//! Health states, re-plans, retries and probe counts surface in
+//! [`PoolMetrics`] and the `PoolCoordinator` report.
+//!
 //! ## Backpressure
 //!
 //! The submission queue is bounded by `[pool] queue_cap` (0 = unbounded):
@@ -154,12 +187,14 @@
 
 pub mod adaptive;
 pub mod cache;
+pub mod health;
 pub mod pool;
 pub mod slo;
 pub mod workload;
 
 pub use adaptive::{AdaptiveController, AdaptiveStats, SchedSignals};
 pub use cache::{CacheKey, CacheStats, ImageCache};
+pub use health::{HealthState, WatchdogVerdict};
 pub use slo::{ServiceEwma, SlackSummary};
 pub use pool::{
     bytes_to_f32, f32_to_bytes, Affinity, ClientMetrics, DeviceLease, DeviceMetrics, DevicePool,

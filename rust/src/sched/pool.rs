@@ -7,6 +7,7 @@
 
 use super::adaptive::{decide_batch_max, AdaptiveController, AdaptiveStats, SchedSignals};
 use super::cache::{CacheStats, ImageCache};
+use super::health::{judge, DeviceHealth, HealthState, WatchdogVerdict};
 use super::slo::{ServiceEwma, SlackSummary};
 use crate::config::Config;
 use crate::coordinator::profiler::{Profiler, RegionReport};
@@ -14,7 +15,7 @@ use crate::devrt::RuntimeKind;
 use crate::hostrt::{KernelImage, MapType, OffloadDevice};
 use crate::ir::passes::OptLevel;
 use crate::ir::Module;
-use crate::sim::{Arch, BatchKernelSpec, LaunchConfig, LaunchStats, MemStats};
+use crate::sim::{Arch, BatchKernelSpec, FaultSpec, FaultState, LaunchConfig, LaunchStats, MemStats};
 use crate::util::{Error, Summary};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -326,6 +327,25 @@ pub struct PoolConfig {
     /// panic-window preemption and deadline-miss accounting. Clients not
     /// listed are best-effort.
     pub client_slos: Vec<(String, f64)>,
+    /// Scripted device faults (`[pool] faults = ["<dev>=<spec>"]`, see
+    /// [`crate::sim::fault`] for the grammar): per-device injectable
+    /// stall, slowdown, transient launch failure or permanent death,
+    /// armed at pool construction. Empty = no injection.
+    pub faults: Vec<FaultSpec>,
+    /// Run the health monitor: a progress watchdog that marks stalled
+    /// devices Suspect → Quarantined, re-plans their queued pinned shard
+    /// jobs, and re-admits them via cheap probe launches.
+    pub watchdog: bool,
+    /// Watchdog floor in milliseconds: in-flight work is never judged
+    /// suspect before this age, however small the service prediction
+    /// (protects cold-start `prepare` time). Quarantine needs at least
+    /// twice this age.
+    pub watchdog_min_ms: u64,
+    /// Bounded retry for device-fault failures: a job that failed with
+    /// an injected device fault is retried on a *different* healthy
+    /// device up to this many times before the original error is
+    /// surfaced to the client. 0 disables retry.
+    pub retry_max: u32,
 }
 
 impl Default for PoolConfig {
@@ -354,6 +374,10 @@ impl PoolConfig {
             fairness: true,
             client_weights: vec![],
             client_slos: vec![],
+            faults: vec![],
+            watchdog: true,
+            watchdog_min_ms: 5000,
+            retry_max: 2,
         }
     }
 
@@ -426,6 +450,42 @@ impl PoolConfig {
         self
     }
 
+    /// Arm one scripted device fault (builder hook; the config-file
+    /// equivalent is `[pool] faults`). Faults referencing a device index
+    /// outside the pool are rejected at [`DevicePool::new`].
+    pub fn with_fault(mut self, fault: FaultSpec) -> PoolConfig {
+        self.faults.push(fault);
+        self
+    }
+
+    /// [`PoolConfig::with_fault`] from a spec string (see
+    /// [`crate::sim::fault`] for the grammar), e.g.
+    /// `"2=stall:120ms:10s@launch:40"`.
+    pub fn with_fault_spec(self, spec: &str) -> Result<PoolConfig, Error> {
+        Ok(self.with_fault(FaultSpec::parse(spec)?))
+    }
+
+    /// Enable/disable the health monitor (progress watchdog + quarantine
+    /// + probe re-admission). Disabled = the pre-fault-injection
+    /// behavior: stalled devices are simply waited on.
+    pub fn with_watchdog(mut self, watchdog: bool) -> PoolConfig {
+        self.watchdog = watchdog;
+        self
+    }
+
+    /// Override the watchdog floor (minimum in-flight age before any
+    /// suspect/quarantine judgment; clamped to ≥ 1 ms).
+    pub fn with_watchdog_min_ms(mut self, ms: u64) -> PoolConfig {
+        self.watchdog_min_ms = ms.max(1);
+        self
+    }
+
+    /// Override the device-fault retry cap (0 disables retry).
+    pub fn with_retry_max(mut self, retries: u32) -> PoolConfig {
+        self.retry_max = retries;
+        self
+    }
+
     /// Read the `[pool]` section of a config document:
     ///
     /// ```text
@@ -440,6 +500,10 @@ impl PoolConfig {
     /// fairness = true         # per-client weighted DRR pull
     /// client_weights = ["miniqmc=4", "batch=1"]  # default weight 1.0
     /// client_slos = ["miniqmc=25"]  # latency targets in ms (SLO clients)
+    /// faults = ["2=stall:120ms:10s@launch:40"]  # scripted device faults
+    /// watchdog = true         # stall watchdog + quarantine + probes
+    /// watchdog_min_ms = 5000  # floor below which nothing is suspect
+    /// retry_max = 2           # device-fault retries on another device
     /// ```
     ///
     /// Missing section or keys fall back to [`PoolConfig::mixed4`].
@@ -511,6 +575,20 @@ impl PoolConfig {
             }
             out.client_slos = slos;
         }
+        if let Some(list) = sec.get("faults").and_then(|v| v.as_str_list()) {
+            let mut faults = vec![];
+            for s in list {
+                faults.push(FaultSpec::parse(s)?);
+            }
+            out.faults = faults;
+        }
+        out.watchdog = read_bool(sec, "watchdog", out.watchdog)?;
+        out.watchdog_min_ms =
+            read_uint(sec, "watchdog_min_ms", out.watchdog_min_ms as i64, 1)? as u64;
+        let retry_max = read_uint(sec, "retry_max", out.retry_max as i64, 0)?;
+        out.retry_max = u32::try_from(retry_max).map_err(|_| {
+            Error::Config(format!("[pool] retry_max too large (max {})", u32::MAX))
+        })?;
         Ok(out)
     }
 }
@@ -570,8 +648,20 @@ struct OffloadJob {
     /// or the client's SLO; shard jobs inherit their parent's. `None` =
     /// best-effort.
     deadline: Option<Instant>,
+    /// Devices this job already failed on with an injected device fault
+    /// (bounded retry excludes them; `len()` is the attempt count).
+    tried: Vec<usize>,
+    /// The *first* device-fault message, surfaced to the client when the
+    /// retry cap is exhausted — later failures on other devices must not
+    /// mask the original incident.
+    first_fault: Option<String>,
     reply: mpsc::Sender<Result<OffloadResponse, Error>>,
+    /// When the job entered the queue for its *current* stint (reset on
+    /// retry requeue) — the basis of the queue-wait metric.
     enqueued: Instant,
+    /// When the job was first enqueued — the basis of submit-to-
+    /// completion sojourn, which spans failed attempts.
+    first_enqueued: Instant,
 }
 
 type TaskFn = Box<dyn FnOnce(&DeviceLease<'_>) + Send>;
@@ -610,6 +700,20 @@ impl Job {
         match self {
             Job::Offload(j) => j.target_device,
             Job::Task(_) => None,
+        }
+    }
+
+    /// Has this job already failed on `device_id` with a device fault?
+    /// (Retried jobs must land on a *different* device.)
+    fn tried_on(&self, device_id: usize) -> bool {
+        self.tried().contains(&device_id)
+    }
+
+    /// Devices this job already failed on (empty for tasks).
+    fn tried(&self) -> &[usize] {
+        match self {
+            Job::Offload(j) => &j.tried,
+            Job::Task(_) => &[],
         }
     }
 
@@ -772,9 +876,13 @@ impl SchedQueue {
     /// Can the DRR scan claim `job` for the worker of `spec`? Pinned
     /// jobs are deliberately excluded — they are claimable only through
     /// [`SchedQueue::pop_pinned`], which is what keeps the pool's
-    /// `reserved` counters balanced.
-    fn eligible(job: &Job, spec: DeviceSpec, _device_id: usize) -> bool {
-        job.affinity().matches(spec.arch, spec.kind) && job.target_device().is_none()
+    /// `reserved` counters balanced. Jobs that already failed on this
+    /// device with an injected fault are excluded too: the retry
+    /// contract is "a different device".
+    fn eligible(job: &Job, spec: DeviceSpec, device_id: usize) -> bool {
+        job.affinity().matches(spec.arch, spec.kind)
+            && job.target_device().is_none()
+            && !job.tried_on(device_id)
     }
 
     /// Remove the oldest job pinned to `device_id` (reserved shard
@@ -886,7 +994,7 @@ impl SchedQueue {
             Job::Offload(leader) => {
                 let mut batch = vec![leader];
                 if limit > 1 && !batch[0].is_shard {
-                    self.coalesce(&mut batch, i, spec, limit);
+                    self.coalesce(&mut batch, i, spec, device_id, limit);
                 }
                 Some(Work::Batch(batch))
             }
@@ -941,7 +1049,7 @@ impl SchedQueue {
                     Job::Offload(leader) => {
                         let mut batch = vec![leader];
                         if limit > 1 && !batch[0].is_shard {
-                            self.coalesce(&mut batch, i, spec, limit);
+                            self.coalesce(&mut batch, i, spec, device_id, limit);
                         }
                         return Some((Work::Batch(batch), false));
                     }
@@ -998,6 +1106,7 @@ impl SchedQueue {
         batch: &mut Vec<OffloadJob>,
         leader_lane: usize,
         spec: DeviceSpec,
+        device_id: usize,
         limit: usize,
     ) {
         let key = batch[0].key;
@@ -1015,6 +1124,7 @@ impl SchedQueue {
                     Job::Offload(o) if o.key == key
                         && !o.is_shard
                         && o.target_device.is_none()
+                        && !o.tried.contains(&device_id)
                         && o.req.affinity.matches(spec.arch, spec.kind)
                 );
                 if compatible {
@@ -1032,6 +1142,58 @@ impl SchedQueue {
                 lane.deficit = 0.0;
             }
         }
+    }
+
+    /// Preemptive shard re-planning: retarget every still-queued job
+    /// pinned to `device` (just quarantined). `choose` picks a
+    /// replacement device for one job — typically a currently idle
+    /// healthy device, claimed by the caller as it chooses — or `None`
+    /// to unpin the job, which makes it visible to the normal DRR scan
+    /// (any matching worker may then claim it). Returns how many jobs
+    /// were re-planned; the caller owns the `reserved`-counter
+    /// rebalancing and must run under the queue lock it already holds.
+    fn replan_pinned(
+        &mut self,
+        device: usize,
+        mut choose: impl FnMut(&OffloadJob) -> Option<usize>,
+    ) -> usize {
+        let mut moved = 0;
+        for lane in &mut self.lanes {
+            for job in &mut lane.jobs {
+                if let Job::Offload(o) = job {
+                    if o.target_device == Some(device) {
+                        o.target_device = choose(o);
+                        moved += 1;
+                    }
+                }
+            }
+        }
+        moved
+    }
+
+    /// Remove every queued *unpinned* job for which `stranded` holds
+    /// (its affinity matches no live device — see the quarantine sweep
+    /// in `quarantine_and_replan`), so its client fails fast instead of
+    /// waiting on a dead device. Pinned jobs are skipped: re-planning
+    /// has already routed them, and their reservation accounting is
+    /// owned elsewhere.
+    fn remove_stranded(&mut self, stranded: impl Fn(&Job) -> bool) -> Vec<Job> {
+        let mut out = vec![];
+        for lane in &mut self.lanes {
+            let mut i = 0;
+            while i < lane.jobs.len() {
+                if lane.jobs[i].target_device().is_none() && stranded(&lane.jobs[i]) {
+                    out.push(lane.jobs.remove(i).expect("index is in range"));
+                    self.len -= 1;
+                } else {
+                    i += 1;
+                }
+            }
+            if lane.jobs.is_empty() {
+                lane.deficit = 0.0;
+            }
+        }
+        out
     }
 
     /// Remove every queued job (shutdown path).
@@ -1061,6 +1223,11 @@ struct DeviceSlot {
     /// Nanoseconds this device's worker spent executing work (occupancy
     /// = busy / uptime).
     busy_ns: AtomicU64,
+    /// Health lifecycle state + progress timestamps (see
+    /// [`crate::sched::health`]).
+    health: DeviceHealth,
+    /// Scripted fault, armed at pool construction (`[pool] faults`).
+    fault: Option<FaultState>,
 }
 
 /// Per-client sojourn samples kept for percentile reporting: a ring of
@@ -1127,12 +1294,61 @@ struct Shared {
     /// Queue pops that went through the EDF panic path instead of the
     /// DRR rotation.
     preemptions: AtomicU64,
+    /// Health monitor on/off (`[pool] watchdog`).
+    watchdog: bool,
+    /// Watchdog floor: minimum in-flight age before suspicion.
+    watchdog_min: Duration,
+    /// Device-fault retry cap per job.
+    retry_max: u32,
+    /// Quarantine incidents that triggered a pinned-job re-plan sweep.
+    replans: AtomicU64,
+    /// Still-queued pinned jobs retargeted/unpinned by those sweeps.
+    replanned_jobs: AtomicU64,
+    /// Jobs re-queued onto a different device after a device fault.
+    retries: AtomicU64,
+    /// Jobs whose retry budget ran out (original fault surfaced).
+    retries_exhausted: AtomicU64,
+    /// Quarantine re-admission probes attempted.
+    probes: AtomicU64,
+    /// Probes that passed and returned a device to service.
+    readmissions: AtomicU64,
+    /// Bumped on every queue push — submissions *and* retry requeues.
+    /// Probe-failure sweeps compare it against `last_sweep_gen` so a
+    /// long-dead device doesn't re-scan an unchanged queue, while any
+    /// job that entered since the last sweep (including a retry that
+    /// raced a quarantine) is guaranteed a rescue sweep.
+    queue_gen: AtomicU64,
+    /// `queue_gen` as of the last stranded sweep.
+    last_sweep_gen: AtomicU64,
     submitted: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
     sharded_requests: AtomicU64,
     shard_jobs: AtomicU64,
     started: Instant,
+}
+
+impl Shared {
+    /// Nanoseconds since the pool started (the watchdog's clock).
+    fn now_ns(&self) -> u64 {
+        self.started.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// Is there a non-quarantined device matching `affinity` outside
+    /// `tried`? The shared core of the submit/lease fail-fast, retry
+    /// eligibility and stranded-sweep policies — one rule, one place.
+    fn any_live_candidate(&self, affinity: Affinity, tried: &[usize]) -> bool {
+        self.slots.iter().any(|s| {
+            s.health.state() != HealthState::Quarantined
+                && !tried.contains(&s.id)
+                && affinity.matches(s.spec.arch, s.spec.kind)
+        })
+    }
+
+    /// Is there a live (non-quarantined) device matching `affinity`?
+    fn any_live_match(&self, affinity: Affinity) -> bool {
+        self.any_live_candidate(affinity, &[])
+    }
 }
 
 /// Append one completed/failed request to `map` (the `Shared::clients`
@@ -1206,6 +1422,8 @@ fn record_client(
 pub struct DevicePool {
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// The health monitor ("pool-health"), when the watchdog is on.
+    monitor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl DevicePool {
@@ -1213,6 +1431,21 @@ impl DevicePool {
     pub fn new(config: &PoolConfig) -> Result<DevicePool, Error> {
         if config.devices.is_empty() {
             return Err(Error::Sched("pool needs at least one device".into()));
+        }
+        for f in &config.faults {
+            if f.device >= config.devices.len() {
+                return Err(Error::Config(format!(
+                    "fault `{f}` references device {} but the pool has {}",
+                    f.device,
+                    config.devices.len()
+                )));
+            }
+            if config.faults.iter().filter(|o| o.device == f.device).count() > 1 {
+                return Err(Error::Config(format!(
+                    "device {} has more than one fault spec",
+                    f.device
+                )));
+            }
         }
         let slots: Vec<DeviceSlot> = config
             .devices
@@ -1230,6 +1463,12 @@ impl DevicePool {
                 batched_jobs: AtomicU64::new(0),
                 max_batch: AtomicUsize::new(0),
                 busy_ns: AtomicU64::new(0),
+                health: DeviceHealth::new(),
+                fault: config
+                    .faults
+                    .iter()
+                    .find(|f| f.device == id)
+                    .map(|f| FaultState::arm(f.clone())),
             })
             .collect();
         let reserved = (0..config.devices.len()).map(|_| AtomicUsize::new(0)).collect();
@@ -1255,6 +1494,17 @@ impl DevicePool {
                 .collect(),
             service: ServiceEwma::new(),
             preemptions: AtomicU64::new(0),
+            watchdog: config.watchdog,
+            watchdog_min: Duration::from_millis(config.watchdog_min_ms.max(1)),
+            retry_max: config.retry_max,
+            replans: AtomicU64::new(0),
+            replanned_jobs: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            retries_exhausted: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            readmissions: AtomicU64::new(0),
+            queue_gen: AtomicU64::new(0),
+            last_sweep_gen: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
@@ -1271,7 +1521,18 @@ impl DevicePool {
                 .map_err(|e| Error::Sched(format!("cannot spawn pool worker: {e}")))?;
             workers.push(handle);
         }
-        Ok(DevicePool { shared, workers })
+        let monitor = if config.watchdog {
+            let shared = shared.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("pool-health".into())
+                    .spawn(move || monitor_loop(&shared))
+                    .map_err(|e| Error::Sched(format!("cannot spawn health monitor: {e}")))?,
+            )
+        } else {
+            None
+        };
+        Ok(DevicePool { shared, workers, monitor })
     }
 
     /// Number of devices.
@@ -1313,6 +1574,16 @@ impl DevicePool {
                 "affinity {:?} matches no device in the pool ({:?})",
                 req.affinity,
                 self.specs().iter().map(|s| s.to_string()).collect::<Vec<_>>()
+            )));
+        }
+        // Deadline work must never wait on a dead device: when every
+        // matching device sits in quarantine, fail fast — the client can
+        // shed or retry; re-admission lifts this the moment a probe
+        // passes.
+        if !self.shared.any_live_match(req.affinity) {
+            return Err(Error::Fault(format!(
+                "every device matching affinity {:?} is quarantined",
+                req.affinity
             )));
         }
         if let Some(spec) = &req.shard {
@@ -1496,6 +1767,13 @@ impl DevicePool {
                 self.specs().iter().map(|s| s.to_string()).collect::<Vec<_>>()
             )));
         }
+        // Same fail-fast as `submit`: a lease must never sit waiting on
+        // a pool corner that is entirely quarantined.
+        if !self.shared.any_live_match(affinity) {
+            return Err(Error::Fault(format!(
+                "every device matching affinity {affinity:?} is quarantined"
+            )));
+        }
         let (tx, rx) = mpsc::channel();
         let run: TaskFn = Box::new(move |lease: &DeviceLease<'_>| {
             let _ = tx.send(f(lease));
@@ -1526,6 +1804,7 @@ impl DevicePool {
     /// queue's own `peak` so no transient depth escapes it.
     fn push_locked(&self, q: &mut SchedQueue, job: Job) {
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.queue_gen.fetch_add(1, Ordering::Relaxed);
         if let Some(d) = job.target_device() {
             self.shared.reserved[d].fetch_add(1, Ordering::Relaxed);
         }
@@ -1621,12 +1900,21 @@ impl DevicePool {
     fn shard_plan(&self, req: &OffloadRequest) -> Option<ShardPlan> {
         let spec = req.shard.as_ref()?;
         // Matching devices grouped by arch, with the subset that is idle.
+        // Quarantined devices are invisible here — neither counted nor
+        // reserved — and Suspect devices count as eligible but never as
+        // idle (a possibly-stalling device must not be handed a shard
+        // the stitch will serialize on).
         let mut archs: Vec<(Arch, Vec<usize>, Vec<usize>)> = vec![];
         for s in &self.shared.slots {
             if !req.affinity.matches(s.spec.arch, s.spec.kind) {
                 continue;
             }
-            let idle = s.inflight.load(Ordering::Relaxed) == 0
+            let health = s.health.state();
+            if health == HealthState::Quarantined {
+                continue;
+            }
+            let idle = health == HealthState::Healthy
+                && s.inflight.load(Ordering::Relaxed) == 0
                 && self.shared.reserved[s.id].load(Ordering::Relaxed) == 0;
             let entry = match archs.iter_mut().find(|(a, _, _)| *a == s.spec.arch) {
                 Some(e) => e,
@@ -1762,6 +2050,10 @@ impl DevicePool {
                 max_batch: s.max_batch.load(Ordering::Relaxed),
                 occupancy: (s.busy_ns.load(Ordering::Relaxed) as f64 / uptime_ns as f64)
                     .min(1.0),
+                health: s.health.state(),
+                quarantines: s.health.quarantine_count(),
+                fault: s.fault.as_ref().map(|f| f.spec().to_string()),
+                fault_injected: s.fault.as_ref().map_or(0, |f| f.injected()),
                 cache: s.cache.stats(),
                 cached_images: s.cache.len(),
                 cache_bytes: s.cache.bytes(),
@@ -1803,6 +2095,13 @@ impl DevicePool {
             adaptive: self.shared.adaptive,
             adaptive_stats: self.shared.controller.stats(),
             preemptions: self.shared.preemptions.load(Ordering::Relaxed),
+            watchdog: self.shared.watchdog,
+            replans: self.shared.replans.load(Ordering::Relaxed),
+            replanned_jobs: self.shared.replanned_jobs.load(Ordering::Relaxed),
+            retries: self.shared.retries.load(Ordering::Relaxed),
+            retries_exhausted: self.shared.retries_exhausted.load(Ordering::Relaxed),
+            probes: self.shared.probes.load(Ordering::Relaxed),
+            readmissions: self.shared.readmissions.load(Ordering::Relaxed),
             uptime,
             devices,
             clients,
@@ -1855,7 +2154,19 @@ fn make_offload_job(
     deadline: Option<Instant>,
 ) -> OffloadJob {
     let key = BatchKey { content: req.module.content_hash(), opt: req.opt };
-    OffloadJob { req, key, is_shard, target_device, deadline, reply, enqueued: Instant::now() }
+    let now = Instant::now();
+    OffloadJob {
+        req,
+        key,
+        is_shard,
+        target_device,
+        deadline,
+        tried: vec![],
+        first_fault: None,
+        reply,
+        enqueued: now,
+        first_enqueued: now,
+    }
 }
 
 /// Spawn the result-stitcher for a sharded request; resolves the returned
@@ -2025,6 +2336,9 @@ impl Drop for DevicePool {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
         // Fail any requests still queued so waiting clients unblock with
         // an error instead of a channel disconnect. (Dropped task jobs
         // disconnect their handles, which also unblocks their waiters.)
@@ -2062,6 +2376,28 @@ fn worker_loop(shared: &Shared, id: usize) {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
+                // A quarantined device claims nothing — not even work
+                // pinned to it (re-planning re-routes that). A pinned
+                // job can still *race* in behind the quarantine sweep
+                // (the shard planner's idle sample is lock-free), so
+                // drain any such pins here instead of letting them — and
+                // their reservations — strand forever. Both wake paths
+                // notify the cv (pushes and the monitor's readmit), so
+                // the timeout is only a backstop — sized to the watchdog
+                // floor rather than a busy poll.
+                if slot.health.is_quarantined() {
+                    if shared.reserved[id].load(Ordering::Relaxed) > 0 {
+                        if replan_pinned_locked(shared, id, &mut q) > 0 {
+                            shared.cv.notify_all();
+                        }
+                    }
+                    let backstop = shared
+                        .watchdog_min
+                        .clamp(Duration::from_millis(2), Duration::from_millis(250));
+                    let (qq, _) = shared.cv.wait_timeout(q, backstop).unwrap();
+                    q = qq;
+                    continue 'wait;
+                }
                 // `reserved` is incremented in the same critical section
                 // as the pinned push and we hold the queue lock here, so
                 // this guard is exact: the O(queue) pinned scan runs only
@@ -2074,10 +2410,16 @@ fn worker_loop(shared: &Shared, id: usize) {
                 }
                 let now = Instant::now();
                 let limit = if shared.adaptive {
+                    // Quarantined devices are not idle capacity: counting
+                    // them would both oversize shard fan-outs and shrink
+                    // batch limits for the healthy rest.
                     let idle = shared
                         .slots
                         .iter()
-                        .filter(|s| s.inflight.load(Ordering::Relaxed) == 0)
+                        .filter(|s| {
+                            s.inflight.load(Ordering::Relaxed) == 0
+                                && s.health.state() != HealthState::Quarantined
+                        })
                         .count();
                     let signals = SchedSignals {
                         queue_depth: q.len(),
@@ -2111,6 +2453,12 @@ fn worker_loop(shared: &Shared, id: usize) {
             Work::Task(task) => {
                 let queue_wait = task.enqueued.elapsed();
                 slot.inflight.fetch_add(1, Ordering::Relaxed);
+                // Leased closures run for as long as they like (whole
+                // benchmarks); flag the lease so the stall watchdog
+                // skips this device instead of quarantining a legitimate
+                // multi-second run.
+                slot.health.set_leased(true);
+                slot.health.begin_work(shared.now_ns(), 1, None);
                 let lease = DeviceLease {
                     id: slot.id,
                     spec: slot.spec,
@@ -2127,6 +2475,11 @@ fn worker_loop(shared: &Shared, id: usize) {
                         (task.run)(&lease)
                     }))
                 });
+                // end_lease, not end_work: a completing lease says
+                // nothing about device faults and must not reset the
+                // quarantine streak a failing offload mix is building.
+                slot.health.end_lease();
+                slot.health.set_leased(false);
                 slot.inflight.fetch_sub(1, Ordering::Relaxed);
                 slot.busy_ns
                     .fetch_add(elapsed.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
@@ -2165,6 +2518,245 @@ fn worker_loop(shared: &Shared, id: usize) {
     }
 }
 
+/// Health-monitor body (the "pool-health" thread), one tick per
+/// iteration:
+///
+/// * judge every watchable in-flight device against the stall watchdog
+///   ([`judge`]): in-flight age vs. the service EWMA's prediction for
+///   the executing batch, floored by `[pool] watchdog_min_ms` —
+///   Suspect devices receive no *new* shard reservations (existing pins
+///   stay until quarantine), Quarantined devices are taken out of
+///   service and their queued pinned jobs re-planned;
+/// * probe quarantined devices (at most once per `watchdog_min` each)
+///   and re-admit the ones that pass.
+///
+/// Leased tasks are exempt from judgment ([`DeviceHealth::watchable_busy`])
+/// — a benchmark legitimately holds a device for seconds.
+fn monitor_loop(shared: &Shared) {
+    // Tick scales with the watchdog floor: detection latency only needs
+    // to be small *relative to the thresholds* (suspect at ≥ floor,
+    // quarantine at ≥ 2x floor), so a conservative floor — the
+    // fault-free default — does not buy a kilohertz wakeup loop.
+    let tick = (shared.watchdog_min / 8)
+        .clamp(Duration::from_millis(1), Duration::from_millis(50));
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let now_ns = shared.now_ns();
+        for slot in &shared.slots {
+            match slot.health.state() {
+                HealthState::Quarantined => {
+                    let last = slot.health.last_probe_ns();
+                    if now_ns.saturating_sub(last)
+                        >= shared.watchdog_min.as_nanos().min(u64::MAX as u128) as u64
+                    {
+                        slot.health.set_last_probe_ns(now_ns);
+                        shared.probes.fetch_add(1, Ordering::Relaxed);
+                        if probe_device(slot).is_ok() {
+                            slot.health.readmit();
+                            shared.readmissions.fetch_add(1, Ordering::Relaxed);
+                            // The readmitted worker polls its state, but
+                            // waiting peers may hold claimable work too.
+                            shared.cv.notify_all();
+                        } else {
+                            // Still dark: fail anything that slipped into
+                            // the queue for this (or any) dead corner of
+                            // the pool since the quarantine sweep — but
+                            // only when jobs actually entered the queue
+                            // since (submissions or retry requeues), so a
+                            // long-dead device doesn't re-scan an
+                            // unchanged queue on every probe.
+                            let seen = shared.queue_gen.load(Ordering::Relaxed);
+                            if shared.last_sweep_gen.swap(seen, Ordering::Relaxed) != seen {
+                                sweep_stranded(shared);
+                            }
+                        }
+                    }
+                }
+                state => {
+                    if let Some((since_ns, jobs, key)) = slot.health.watchable_busy() {
+                        let age = Duration::from_nanos(now_ns.saturating_sub(since_ns));
+                        // Per-key prediction when the batch has an image
+                        // key (falls back to the global EWMA inside
+                        // `predict`): a legitimately heavy image with
+                        // established history must not read as a stall.
+                        let predicted = shared
+                            .service
+                            .predict(key)
+                            .saturating_mul(jobs.min(u32::MAX as u64) as u32);
+                        match judge(age, predicted, shared.watchdog_min) {
+                            WatchdogVerdict::Quarantine => {
+                                quarantine_and_replan(shared, slot.id)
+                            }
+                            WatchdogVerdict::Suspect => slot.health.mark_suspect(),
+                            WatchdogVerdict::Ok => {}
+                        }
+                    } else if state == HealthState::Suspect {
+                        // Whatever looked stuck finished while we slept
+                        // (`end_work` clears Suspect too; this covers a
+                        // worker that raced the transition). CAS so a
+                        // concurrent fault-streak quarantine survives.
+                        slot.health.clear_suspect();
+                    }
+                }
+            }
+        }
+        std::thread::sleep(tick);
+    }
+}
+
+/// A cheap probe launch for quarantine re-admission: consult the
+/// scripted fault layer (the only failure source in the simulator),
+/// then do a tiny global-memory write/read roundtrip so the probe
+/// actually exercises the device.
+fn probe_device(slot: &DeviceSlot) -> Result<(), Error> {
+    if let Some(f) = slot.fault.as_ref() {
+        f.probe_ok()?;
+    }
+    let addr = slot.device.gmem.alloc(8, 8)?;
+    let result = (|| {
+        let pattern = 0xA5A5_5A5A_A5A5_5A5Au64.to_le_bytes();
+        slot.device.gmem.write_bytes(addr, &pattern)?;
+        let mut back = [0u8; 8];
+        slot.device.gmem.read_bytes(addr, &mut back)?;
+        if back != pattern {
+            return Err(Error::Fault("probe readback mismatch".into()));
+        }
+        Ok(())
+    })();
+    let _ = slot.device.gmem.free(addr);
+    result
+}
+
+/// Quarantine `device` (idempotent — only the first caller sweeps) and
+/// **preemptively re-plan** its still-queued pinned shard jobs: each is
+/// retargeted to a currently idle healthy device matching its affinity
+/// (whose reservation is bumped as it is chosen, in the same queue
+/// critical section that rebalances the quarantined device's counter),
+/// or unpinned into normal DRR visibility when no idle device exists —
+/// the reservation-free fallback placement. Queued jobs whose affinity
+/// no longer matches any live device are failed immediately: deadline
+/// work must never sit waiting on a dead device.
+fn quarantine_and_replan(shared: &Shared, device: usize) {
+    let slot = &shared.slots[device];
+    if !slot.health.quarantine() {
+        return;
+    }
+    {
+        let mut q = shared.queue.lock().unwrap();
+        replan_pinned_locked(shared, device, &mut q);
+        shared.replans.fetch_add(1, Ordering::Relaxed);
+    }
+    // Re-planned pins are claimable immediately.
+    shared.cv.notify_all();
+    sweep_stranded(shared);
+}
+
+/// The re-plan body shared by [`quarantine_and_replan`] and the gated
+/// worker (which drains pins that *raced* onto the device after the
+/// quarantine sweep — the shard planner's idle sample is lock-free, so
+/// a pinned push can land just behind the sweep). Must run under the
+/// queue lock `q` was taken from.
+fn replan_pinned_locked(shared: &Shared, device: usize, q: &mut SchedQueue) -> usize {
+    let moved = q.replan_pinned(device, |job| {
+        let target = shared.slots.iter().find(|s| {
+            s.id != device
+                && s.health.state() == HealthState::Healthy
+                && s.inflight.load(Ordering::Relaxed) == 0
+                && shared.reserved[s.id].load(Ordering::Relaxed) == 0
+                && !job.tried.contains(&s.id)
+                && job.req.affinity.matches(s.spec.arch, s.spec.kind)
+        })?;
+        shared.reserved[target.id].fetch_add(1, Ordering::Relaxed);
+        Some(target.id)
+    });
+    if moved > 0 {
+        shared.reserved[device].fetch_sub(moved, Ordering::Relaxed);
+        shared.replanned_jobs.fetch_add(moved as u64, Ordering::Relaxed);
+        // Unpinning makes jobs visible to the stranded sweep for the
+        // first time (it skips pinned jobs), so arm the next
+        // probe-failure sweep even if no new push ever arrives.
+        shared.queue_gen.fetch_add(1, Ordering::Relaxed);
+    }
+    moved
+}
+
+/// Fail every queued job that no live device can ever claim — each
+/// remaining device is quarantined, fails the job's affinity, or
+/// already failed the job (retry excludes it via `tried`). Deadline
+/// work must never sit waiting on a dead device. Runs at every
+/// quarantine and again whenever a re-admission probe fails, which also
+/// closes the submit/quarantine race: a request validated just before
+/// its only device went dark is caught by the next probe's sweep.
+fn sweep_stranded(shared: &Shared) {
+    shared
+        .last_sweep_gen
+        .store(shared.queue_gen.load(Ordering::Relaxed), Ordering::Relaxed);
+    let stranded = {
+        let mut q = shared.queue.lock().unwrap();
+        // Stranded = no live device can ever claim it: every device is
+        // quarantined, fails the affinity, or already failed this very
+        // job (retry excludes it via `tried`).
+        q.remove_stranded(|job| !shared.any_live_candidate(job.affinity(), job.tried()))
+    };
+    if stranded.is_empty() {
+        return;
+    }
+    // Removals freed queue slots for blocked submitters.
+    shared.space.notify_all();
+    let done = Instant::now();
+    // One clients-table lock for the whole sweep, matching the batched
+    // reply loop's discipline.
+    let mut accounts = shared.clients.lock().unwrap();
+    for job in stranded {
+        shared.failed.fetch_add(1, Ordering::Relaxed);
+        match job {
+            Job::Offload(j) => {
+                // Shard jobs are accounted by their stitcher (which sees
+                // the error reply); everything else records here.
+                // Queue-wait covers the current stint only (reset on
+                // retry requeue); sojourn spans the whole journey.
+                if !j.is_shard {
+                    record_into(
+                        &mut accounts,
+                        &j.req.client,
+                        done.saturating_duration_since(j.enqueued),
+                        done.saturating_duration_since(j.first_enqueued),
+                        false,
+                        j.deadline,
+                        done,
+                    );
+                }
+                let err = match j.first_fault.clone() {
+                    // A retry orphan keeps its original incident.
+                    Some(first) => first,
+                    None => format!(
+                        "no live device matches affinity {:?} (quarantine)",
+                        j.req.affinity
+                    ),
+                };
+                let _ = j.reply.send(Err(Error::Fault(err)));
+            }
+            // Dropping a task drops its reply sender (the TaskHandle
+            // resolves to a pool error), but the client's books must
+            // still balance: completed + failed == submitted per client.
+            Job::Task(t) => {
+                let sojourn = done.saturating_duration_since(t.enqueued);
+                record_into(
+                    &mut accounts,
+                    &t.client,
+                    sojourn,
+                    sojourn,
+                    false,
+                    t.deadline,
+                    done,
+                );
+            }
+        }
+    }
+}
+
 /// Execute a popped batch (size ≥ 1) on `slot` and reply to every job.
 ///
 /// The image lookup/prepare is paid once per batch; follower jobs are
@@ -2177,6 +2769,7 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
     let n = batch.len();
     let t_busy = Instant::now();
     slot.inflight.fetch_add(n, Ordering::Relaxed);
+    slot.health.begin_work(shared.now_ns(), n, Some(batch[0].key.content));
     slot.batches.fetch_add(1, Ordering::Relaxed);
     if n > 1 {
         slot.batched_jobs.fetch_add(n as u64, Ordering::Relaxed);
@@ -2184,8 +2777,35 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
     slot.max_batch.fetch_max(n, Ordering::Relaxed);
     let waits: Vec<Duration> = batch.iter().map(|j| j.enqueued.elapsed()).collect();
 
-    let results: Vec<Result<OffloadResponse, Error>> =
-        match slot.cache.get_or_prepare(&slot.device, &batch[0].req.module, batch[0].req.opt) {
+    // Scripted-fault gate. An injected stall sleeps *here* — in flight,
+    // so the watchdog sees the age grow exactly as it would for a real
+    // wedged launch; fail/die turn the whole batch into device-fault
+    // errors (eligible for retry below); slow hands back a factor
+    // applied after execution. `fault_touched` covers *any* injection,
+    // including a stall that then returns Ok (detected via the injected
+    // counter) — the EWMA guard below needs to know.
+    let (gate, slow_factor, fault_touched) = match slot.fault.as_ref() {
+        Some(f) => {
+            let injected_before = f.injected();
+            match f.on_batch_start(n, &shared.shutdown) {
+                Ok(factor) => {
+                    (None, factor, factor > 1.0 || f.injected() > injected_before)
+                }
+                // Keep the bare message: it is re-wrapped as
+                // `Error::Fault` per job below, and stringifying the
+                // whole error here would double the Display prefix.
+                Err(Error::Fault(m)) => (Some(m), 1.0, true),
+                Err(e) => (Some(e.to_string()), 1.0, true),
+            }
+        }
+        None => (None, 1.0, false),
+    };
+    let fault_failed = gate.is_some();
+
+    let results: Vec<Result<OffloadResponse, Error>> = match gate {
+        Some(msg) => batch.iter().map(|_| Err(Error::Fault(msg.clone()))).collect(),
+        None => match slot.cache.get_or_prepare(&slot.device, &batch[0].req.module, batch[0].req.opt)
+        {
             Err(e) => {
                 let msg = format!("prepare failed: {e}");
                 batch.iter().map(|_| Err(Error::Sched(msg.clone()))).collect()
@@ -2207,7 +2827,11 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
                         .collect()
                 }
             }
-        };
+        },
+    };
+    if slow_factor > 1.0 {
+        FaultState::apply_slowdown(slow_factor, t_busy.elapsed(), &shared.shutdown);
+    }
 
     slot.inflight.fetch_sub(n, Ordering::Relaxed);
     let busy = t_busy.elapsed();
@@ -2218,39 +2842,101 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
     // prediction for this image key. Shard batches are skipped: a shard
     // runs a fraction of the full request under the same content key,
     // and folding its time in would teach the predictor that unsharded
-    // runs of the image are several times faster than they are.
-    if !batch[0].is_shard {
+    // runs of the image are several times faster than they are. Batches
+    // the fault layer touched are skipped too — an injected stall or
+    // slowdown is the *device* misbehaving, not the image's service
+    // time, and folding it in would both poison the panic predictor and
+    // teach the watchdog to tolerate the very stall it should catch.
+    if !batch[0].is_shard && !fault_touched {
         shared
             .service
             .record(Some(batch[0].key.content), busy.as_secs_f64() / n as f64);
     }
-    // One clients-table lock for the whole batch, not one per job.
-    let mut accounts = shared.clients.lock().unwrap();
-    for ((i, job), result) in batch.into_iter().enumerate().zip(results) {
-        match &result {
-            Ok(_) => {
-                slot.completed.fetch_add(1, Ordering::Relaxed);
-                shared.completed.fetch_add(1, Ordering::Relaxed);
+    // Fault-streak quarantine: a fast-failing (dead) device never trips
+    // the stall watchdog, so consecutive injected-fault batches trip it
+    // here instead.
+    if slot.health.end_work(fault_failed) && shared.watchdog {
+        quarantine_and_replan(shared, slot.id);
+    }
+
+    // Reply / retry split. Device-fault failures are re-queued onto a
+    // different healthy device while the bounded budget lasts; whatever
+    // ends here is accounted and replied exactly once.
+    let mut requeue: Vec<OffloadJob> = vec![];
+    {
+        // One clients-table lock for the whole batch, not one per job.
+        let mut accounts = shared.clients.lock().unwrap();
+        for ((i, mut job), result) in batch.into_iter().enumerate().zip(results) {
+            let result = match result {
+                Err(Error::Fault(msg)) => {
+                    if job.first_fault.is_none() {
+                        job.first_fault = Some(msg.clone());
+                    }
+                    if !job.tried.contains(&slot.id) {
+                        job.tried.push(slot.id);
+                    }
+                    // `tried` already contains this device, so the
+                    // candidate scan naturally demands a different one.
+                    let can_retry = (job.tried.len() as u64) <= shared.retry_max as u64
+                        && shared.any_live_candidate(job.req.affinity, &job.tried);
+                    if can_retry {
+                        // The pin (if any) pointed at this misbehaving
+                        // device; the retry goes wherever the DRR scan
+                        // sends it. Queue-wait restarts for the new
+                        // stint (sojourn keeps the original clock).
+                        job.target_device = None;
+                        job.enqueued = Instant::now();
+                        shared.retries.fetch_add(1, Ordering::Relaxed);
+                        requeue.push(job);
+                        continue;
+                    }
+                    shared.retries_exhausted.fetch_add(1, Ordering::Relaxed);
+                    // Past the cap the *original* fault is surfaced, not
+                    // whichever device failed last.
+                    Err(Error::Fault(job.first_fault.clone().expect("set above")))
+                }
+                other => other,
+            };
+            match &result {
+                Ok(_) => {
+                    slot.completed.fetch_add(1, Ordering::Relaxed);
+                    shared.completed.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    shared.failed.fetch_add(1, Ordering::Relaxed);
+                }
             }
-            Err(_) => {
-                shared.failed.fetch_add(1, Ordering::Relaxed);
+            // Shard jobs are accounted by their request's stitcher, so the
+            // per-client metrics count split requests once.
+            if !job.is_shard {
+                record_into(
+                    &mut accounts,
+                    &job.req.client,
+                    waits[i],
+                    done.saturating_duration_since(job.first_enqueued),
+                    result.is_ok(),
+                    job.deadline,
+                    done,
+                );
             }
+            // A dropped handle is fine: the work still ran.
+            let _ = job.reply.send(result);
         }
-        // Shard jobs are accounted by their request's stitcher, so the
-        // per-client metrics count split requests once.
-        if !job.is_shard {
-            record_into(
-                &mut accounts,
-                &job.req.client,
-                waits[i],
-                done.saturating_duration_since(job.enqueued),
-                result.is_ok(),
-                job.deadline,
-                done,
-            );
+    }
+    if !requeue.is_empty() {
+        // Retries re-enter the queue directly: they were already counted
+        // in `submitted` at their original enqueue, and backpressure
+        // must not apply (the job was admitted once; blocking a worker
+        // thread on `queue_cap` here could deadlock the pool). The
+        // generation bump keeps the probe-failure sweep armed: a retry
+        // whose target quarantined in this window must still be swept.
+        let mut q = shared.queue.lock().unwrap();
+        for job in requeue {
+            shared.queue_gen.fetch_add(1, Ordering::Relaxed);
+            q.push(Job::Offload(job));
         }
-        // A dropped handle is fine: the work still ran.
-        let _ = job.reply.send(result);
+        drop(q);
+        shared.cv.notify_all();
     }
 }
 
@@ -2456,6 +3142,15 @@ pub struct DeviceMetrics {
     /// Fraction of pool uptime this device's worker spent executing
     /// work, in `[0, 1]`.
     pub occupancy: f64,
+    /// Health lifecycle state (see [`crate::sched::health`]).
+    pub health: HealthState,
+    /// Times this device entered quarantine.
+    pub quarantines: u64,
+    /// The armed fault spec, when the device is scripted to misbehave
+    /// (`[pool] faults` echo).
+    pub fault: Option<String>,
+    /// Times the fault layer actually injected misbehavior here.
+    pub fault_injected: u64,
     /// Image-cache counters.
     pub cache: CacheStats,
     /// Images currently cached.
@@ -2493,6 +3188,22 @@ pub struct PoolMetrics {
     /// Queue pops taken through the EDF panic path (deadline work
     /// jumping the DRR rotation inside its panic window).
     pub preemptions: u64,
+    /// Whether the health monitor (watchdog/quarantine/probes) is on.
+    pub watchdog: bool,
+    /// Quarantine incidents that swept the queue for pinned re-planning.
+    pub replans: u64,
+    /// Still-queued pinned shard jobs retargeted or unpinned by those
+    /// sweeps.
+    pub replanned_jobs: u64,
+    /// Device-fault jobs re-queued onto a different healthy device.
+    pub retries: u64,
+    /// Device-fault jobs whose retry budget ran out (original error
+    /// surfaced to the client).
+    pub retries_exhausted: u64,
+    /// Quarantine re-admission probes attempted.
+    pub probes: u64,
+    /// Probes that passed and returned a device to service.
+    pub readmissions: u64,
     /// Time since the pool started.
     pub uptime: Duration,
     /// Per-device breakdown.
@@ -2602,6 +3313,125 @@ impl PoolMetrics {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Test harness over the internal queue
+// ---------------------------------------------------------------------------
+
+/// Deterministic, single-threaded harness over the pool's internal
+/// scheduling queue, exposed (hidden) for the crate's property-based
+/// tests in `tests/proptests.rs`: random op sequences drive `push`/
+/// `pop`/`pop_pinned` directly and check the queue's invariants —
+/// deficit floor, pinned-job invisibility, the panic-streak bound and
+/// exact job accounting across lane compaction — without threads or
+/// devices. Not part of the public API.
+#[doc(hidden)]
+pub struct QueueTestHarness {
+    q: SchedQueue,
+    svc: ServiceEwma,
+}
+
+#[doc(hidden)]
+impl QueueTestHarness {
+    /// Fresh queue with the given fairness flag and client weights.
+    pub fn new(fairness: bool, client_weights: &[(String, f64)]) -> QueueTestHarness {
+        QueueTestHarness { q: SchedQueue::new(fairness, client_weights), svc: ServiceEwma::new() }
+    }
+
+    fn spec() -> DeviceSpec {
+        DeviceSpec { kind: RuntimeKind::Portable, arch: Arch::Nvptx64 }
+    }
+
+    /// Queue one any-affinity job for `client`, optionally pinned to a
+    /// device and optionally carrying an already-expired deadline (so it
+    /// is inside its panic window from the first pop).
+    pub fn push(&mut self, client: &str, pinned: Option<usize>, past_deadline: bool) {
+        let req = OffloadRequest {
+            module: Module::new("harness"),
+            kernel: "k".into(),
+            region: "r".into(),
+            cfg: LaunchConfig::new(1, 32),
+            opt: OptLevel::O2,
+            buffers: vec![],
+            args: vec![],
+            affinity: Affinity::any(),
+            shard: None,
+            client: client.to_string(),
+            deadline: None,
+        };
+        let deadline = past_deadline.then(Instant::now);
+        let (tx, _rx) = mpsc::channel();
+        self.q
+            .push(Job::Offload(make_offload_job(req, tx, pinned.is_some(), pinned, deadline)));
+    }
+
+    /// One DRR/EDF pop for the worker of `device_id`; returns
+    /// `(leader client, was a panic preemption, batch size)`. Asserts
+    /// the invariant that no pinned job ever leaves through this path.
+    pub fn pop(&mut self, device_id: usize, limit: usize) -> Option<(String, bool, usize)> {
+        let (work, preempted) =
+            self.q.pop(Self::spec(), device_id, limit.max(1), Instant::now(), &self.svc)?;
+        match work {
+            Work::Task(_) => unreachable!("harness only queues offload jobs"),
+            Work::Batch(batch) => {
+                for job in &batch {
+                    assert!(
+                        job.target_device.is_none(),
+                        "pinned job leaked through the DRR/EDF pop"
+                    );
+                }
+                Some((batch[0].req.client.clone(), preempted, batch.len()))
+            }
+        }
+    }
+
+    /// Claim the oldest job pinned to `device_id`; asserts the pin
+    /// matches. Returns whether a job was claimed.
+    pub fn pop_pinned(&mut self, device_id: usize) -> bool {
+        match self.q.pop_pinned(device_id) {
+            Some(job) => {
+                assert_eq!(job.target_device, Some(device_id), "pop_pinned crossed devices");
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Jobs currently queued.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.q.len() == 0
+    }
+
+    /// Lanes currently allocated (compaction bound checks).
+    pub fn lane_count(&self) -> usize {
+        self.q.lanes.len()
+    }
+
+    /// Smallest lane deficit right now.
+    pub fn min_deficit(&self) -> f64 {
+        self.q.lanes.iter().map(|l| l.deficit).fold(0.0, f64::min)
+    }
+
+    /// Consecutive panic preemptions since the last normal pop.
+    pub fn panic_streak(&self) -> usize {
+        self.q.panic_streak
+    }
+
+    /// The queue's deficit floor (most negative legal deficit).
+    pub fn deficit_floor() -> f64 {
+        DEFICIT_FLOOR
+    }
+
+    /// The starvation bound on consecutive panic preemptions.
+    pub fn panic_streak_max() -> usize {
+        PANIC_STREAK_MAX
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2680,6 +3510,45 @@ mod tests {
         assert!(PoolConfig::from_config(&cfg).is_err());
         let cfg = Config::parse("[pool]\nclient_slos = [\"qmc=0\"]").unwrap();
         assert!(PoolConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn pool_config_parses_faults_and_health_knobs() {
+        let cfg = Config::parse(
+            "[pool]\ndevices = [\"portable:nvptx64\", \"legacy:amdgcn\"]\n\
+             faults = [\"1=stall:120ms:10s@launch:40\", \"0=die@t:200ms\"]\n\
+             watchdog = false\nwatchdog_min_ms = 50\nretry_max = 5",
+        )
+        .unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.faults.len(), 2);
+        assert_eq!(pc.faults[0].device, 1);
+        assert_eq!(pc.faults[1].device, 0);
+        assert!(!pc.watchdog);
+        assert_eq!(pc.watchdog_min_ms, 50);
+        assert_eq!(pc.retry_max, 5);
+        // Defaults: watchdog on, conservative floor, bounded retry, no faults.
+        let d = PoolConfig::mixed4();
+        assert!(d.faults.is_empty());
+        assert!(d.watchdog);
+        assert_eq!(d.retry_max, 2);
+        // Bad specs and out-of-range knobs error.
+        let cfg = Config::parse("[pool]\nfaults = [\"0=melt@launch:1\"]").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[pool]\nwatchdog_min_ms = 0").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        // A fault referencing a device outside the pool is rejected at
+        // construction, as is a device with two fault scripts.
+        let bad = PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)
+            .with_fault_spec("3=die@launch:0")
+            .unwrap();
+        assert!(DevicePool::new(&bad).is_err());
+        let twice = PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)
+            .with_fault_spec("0=die@launch:9999999")
+            .unwrap()
+            .with_fault_spec("0=fail:1@launch:9999999")
+            .unwrap();
+        assert!(DevicePool::new(&twice).is_err());
     }
 
     #[test]
@@ -2969,5 +3838,141 @@ mod tests {
         r.shard = Some(ShardSpec { partitioned: vec![0], elem_bytes: 4, count_arg: 1, elems: 8 });
         assert!(pool.submit(r).is_err());
         assert_eq!(pool.metrics().submitted, 0);
+    }
+
+    /// Occupy every pool worker with a lease that blocks until released;
+    /// returns one release sender per device id (index = device id).
+    fn block_all_workers(pool: &DevicePool) -> Vec<mpsc::Sender<()>> {
+        let n = pool.device_count();
+        let (started_tx, started_rx) = mpsc::channel::<(usize, mpsc::Sender<()>)>();
+        for _ in 0..n {
+            let started = started_tx.clone();
+            pool.run_on(Affinity::any(), move |lease| {
+                let (release_tx, release_rx) = mpsc::channel::<()>();
+                started.send((lease.id, release_tx)).unwrap();
+                let _ = release_rx.recv();
+            })
+            .unwrap();
+        }
+        let mut releases: Vec<Option<mpsc::Sender<()>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (id, tx) = started_rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("every worker must claim one blocking lease");
+            releases[id] = Some(tx);
+        }
+        releases.into_iter().map(|r| r.expect("one lease per device")).collect()
+    }
+
+    /// Tentpole regression: quarantining a device re-plans its
+    /// still-queued pinned shard jobs and rebalances the reservation
+    /// counters in the same sweep.
+    #[test]
+    fn quarantine_replans_queued_pinned_jobs() {
+        use crate::sched::workload::scale_request;
+        let pool = DevicePool::new(
+            &PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 3).with_watchdog(false),
+        )
+        .unwrap();
+        let releases = block_all_workers(&pool);
+        // A shard-style job pinned to device 0, queued while its worker
+        // is busy — exactly the "reserved device stalls with the shard
+        // still queued" shape.
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        let (tx, rx) = mpsc::channel();
+        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(req, tx, true, Some(0), None))])
+            .unwrap_or_else(|_| panic!("queue has room"));
+        assert_eq!(pool.shared.reserved[0].load(Ordering::Relaxed), 1);
+
+        quarantine_and_replan(&pool.shared, 0);
+        // Devices 1/2 are busy (blocked leases), so the job cannot be
+        // re-pinned — it must drop into DRR visibility with device 0's
+        // reservation released.
+        assert_eq!(pool.shared.reserved[0].load(Ordering::Relaxed), 0);
+        let m = pool.metrics();
+        assert_eq!(m.replans, 1);
+        assert_eq!(m.replanned_jobs, 1);
+        assert_eq!(m.devices[0].health, HealthState::Quarantined);
+
+        // Release the healthy workers: one of them claims the unpinned
+        // job; the quarantined device 0 must not (its worker stays
+        // gated).
+        for r in &releases[1..] {
+            let _ = r.send(());
+        }
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("re-planned job must complete")
+            .expect("scale kernel runs");
+        assert_ne!(resp.device_id, 0, "quarantined device must claim nothing");
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+        for d in pool.metrics().devices {
+            assert_eq!(d.reserved, 0, "no reservation may leak (device {})", d.id);
+        }
+        let _ = releases[0].send(());
+    }
+
+    /// PR-4 hardening regression (previously untested): `enqueue_bulk`
+    /// strips stale shard device pins after a backpressure wait — the
+    /// idle sample that chose the pins predates the wait. The job must
+    /// come out DRR-visible (claimable by a different device) with no
+    /// reservation recorded for the stale target.
+    #[test]
+    fn enqueue_bulk_strips_stale_pins_after_backpressure_wait() {
+        use crate::sched::workload::scale_request;
+        let pool = DevicePool::new(
+            &PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 2)
+                .with_queue_cap(1)
+                .with_watchdog(false),
+        )
+        .unwrap();
+        let releases = block_all_workers(&pool);
+        // Fill the 1-slot queue with an unpinned filler only device 0
+        // will get to claim (we release only device 0 below).
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let (filler, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        let (ftx, frx) = mpsc::channel();
+        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(filler, ftx, false, None, None))])
+            .unwrap_or_else(|_| panic!("queue has room for the filler"));
+
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        let (tx, rx) = mpsc::channel();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                // Pinned to device 1 — whose worker stays blocked for the
+                // whole test. Stripping the stale pin is the only way
+                // this job can ever run.
+                pool.enqueue_bulk(vec![Job::Offload(make_offload_job(
+                    req,
+                    tx,
+                    true,
+                    Some(1),
+                    None,
+                ))])
+                .expect("bulk enqueue succeeds after the wait");
+            });
+            // Let the spawned enqueue reach the backpressure wait, then
+            // free device 0 so it drains the filler and opens a slot.
+            std::thread::sleep(Duration::from_millis(100));
+            assert_eq!(pool.metrics().queue_depth, 1, "enqueue must be blocked on the cap");
+            releases[0].send(()).unwrap();
+            let resp = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("job with a stripped pin must be claimable by device 0")
+                .expect("scale kernel runs");
+            assert_eq!(
+                resp.device_id, 0,
+                "device 1 never ran: only a stripped pin lets device 0 serve the job"
+            );
+            assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+            assert_eq!(
+                pool.metrics().devices[1].reserved,
+                0,
+                "a stripped pin must leave no reservation behind"
+            );
+            let _ = frx.recv_timeout(Duration::from_secs(10));
+            releases[1].send(()).unwrap();
+        });
     }
 }

@@ -1,0 +1,601 @@
+//! Deterministic fault injection for simulated devices.
+//!
+//! The pool's failure half — the progress watchdog, quarantine,
+//! preemptive shard re-planning and bounded retry in [`crate::sched`] —
+//! is only testable if a device can be made to misbehave *on demand and
+//! reproducibly*. Real accelerators stall, slow down, drop launches and
+//! die; the simulator never does. This module scripts those behaviors
+//! per device:
+//!
+//! * **stall** — launches hang for a fixed duration before executing
+//!   (a wedged DMA engine / driver timeout);
+//! * **slow** — launches take a multiple of their real time (thermal
+//!   throttling, a degraded link);
+//! * **fail** — a bounded run of launches returns a transient error
+//!   (ECC hiccup, spurious launch failure);
+//! * **die** — every launch from the trigger on fails permanently
+//!   (the device fell off the bus).
+//!
+//! Faults are *scripted*, not random: each is armed by a trigger — a
+//! device-local launch index or elapsed time since the pool started —
+//! so a test or bench provokes exactly the same failure at exactly the
+//! same point every run.
+//!
+//! ## Spec grammar
+//!
+//! One fault per device, written `"<dev>=<kind>@<trigger>"`:
+//!
+//! ```text
+//! kind    := stall:<dur>[:<window>]   # each launch in the window hangs <dur> first
+//!          | slow:<factor>x[:<window>]# launches take <factor> x their real time
+//!          | fail:<count>             # <count> launches fail transiently
+//!          | die                      # permanent failure from the trigger on
+//! trigger := launch:<n>               # n-th launch on this device (0-based)
+//!          | t:<dur>                  # elapsed time since the pool started
+//! dur     := <float>ms | <float>s
+//! ```
+//!
+//! `stall`'s window defaults to one stall's worth (a single hang);
+//! `slow`'s window defaults to forever. Examples:
+//!
+//! ```text
+//! [pool]
+//! faults = ["2=stall:120ms:10s@launch:40", "1=slow:8x@t:50ms",
+//!           "0=fail:25@launch:40", "3=die@t:200ms"]
+//! ```
+//!
+//! The same strings are accepted by `--fault` on `omprt pool` /
+//! `omprt bench --pool` (comma-separated) and by
+//! [`crate::sched::PoolConfig::with_fault_spec`].
+
+use crate::util::Error;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// What kind of misbehavior to inject.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Each launch inside the active window sleeps `dur` before
+    /// executing. `window` bounds how long (from the first triggered
+    /// launch) the degradation lasts; `None` = a single stall.
+    Stall {
+        /// Per-launch hang.
+        dur: Duration,
+        /// Degradation window measured from the first stalled launch.
+        window: Option<Duration>,
+    },
+    /// Launches inside the window take `factor` times their real time
+    /// (the extra time is slept after execution). `None` window =
+    /// degraded forever.
+    Slow {
+        /// Slowdown multiple (> 1.0).
+        factor: f64,
+        /// Degradation window measured from the first slowed launch.
+        window: Option<Duration>,
+    },
+    /// The first `count` launches at/after the trigger fail with a
+    /// transient [`Error::Fault`]; later launches succeed again.
+    Fail {
+        /// How many consecutive launches fail.
+        count: u64,
+    },
+    /// Every launch from the trigger on fails permanently, and probes
+    /// never succeed — the device is gone.
+    Die,
+}
+
+/// When the fault activates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultTrigger {
+    /// The `n`-th launch on the device (0-based, counted per device).
+    Launch(u64),
+    /// Elapsed time since the fault was armed (pool construction).
+    Elapsed(Duration),
+}
+
+/// One scripted fault: which device, what happens, when.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Pool-local device id the fault applies to.
+    pub device: usize,
+    /// The misbehavior.
+    pub kind: FaultKind,
+    /// Activation point.
+    pub trigger: FaultTrigger,
+}
+
+/// Parse `"<float>ms"` / `"<float>s"` into a duration.
+fn parse_dur(s: &str) -> Option<Duration> {
+    let (num, scale) = if let Some(n) = s.strip_suffix("ms") {
+        (n, 1e-3)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1.0)
+    } else {
+        return None;
+    };
+    let v: f64 = num.parse().ok()?;
+    (v >= 0.0 && v.is_finite()).then(|| Duration::from_secs_f64(v * scale))
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s}s")
+    } else {
+        // Sub-second durations echo in ms without rounding away
+        // fractions: the Display string is what reports surface and
+        // users copy back into `[pool] faults`, so it must roundtrip.
+        let ms = s * 1e3;
+        if (ms - ms.round()).abs() < 1e-9 {
+            format!("{}ms", ms.round() as u64)
+        } else {
+            format!("{ms}ms")
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse one spec string (see the module docs for the grammar).
+    pub fn parse(s: &str) -> Result<FaultSpec, Error> {
+        let bad = |why: &str| Error::Config(format!("bad fault spec `{s}`: {why}"));
+        let (dev, rest) = s.split_once('=').ok_or_else(|| bad("want `<dev>=<kind>@<trigger>`"))?;
+        let device: usize =
+            dev.trim().parse().map_err(|_| bad("device must be a pool-local index"))?;
+        let (kind_s, trig_s) =
+            rest.split_once('@').ok_or_else(|| bad("missing `@<trigger>`"))?;
+        let mut kp = kind_s.trim().split(':');
+        let kind = match kp.next().unwrap_or("") {
+            "stall" => {
+                let dur = kp.next().and_then(parse_dur).ok_or_else(|| {
+                    bad("stall wants `stall:<dur>[:<window>]` with ms/s durations")
+                })?;
+                let window = match kp.next() {
+                    Some(w) => Some(parse_dur(w).ok_or_else(|| bad("bad stall window"))?),
+                    None => None,
+                };
+                FaultKind::Stall { dur, window }
+            }
+            "slow" => {
+                let f = kp
+                    .next()
+                    .and_then(|f| f.strip_suffix('x'))
+                    .and_then(|f| f.parse::<f64>().ok())
+                    .filter(|f| *f > 1.0 && f.is_finite())
+                    .ok_or_else(|| bad("slow wants `slow:<factor>x` with factor > 1"))?;
+                let window = match kp.next() {
+                    Some(w) => Some(parse_dur(w).ok_or_else(|| bad("bad slow window"))?),
+                    None => None,
+                };
+                FaultKind::Slow { factor: f, window }
+            }
+            "fail" => {
+                let count = kp
+                    .next()
+                    .and_then(|c| c.parse::<u64>().ok())
+                    .filter(|c| *c > 0)
+                    .ok_or_else(|| bad("fail wants `fail:<count>` with count > 0"))?;
+                FaultKind::Fail { count }
+            }
+            "die" => FaultKind::Die,
+            other => return Err(bad(&format!("unknown fault kind `{other}`"))),
+        };
+        if kp.next().is_some() {
+            return Err(bad("trailing fields after the fault kind"));
+        }
+        let trigger = {
+            let t = trig_s.trim();
+            if let Some(n) = t.strip_prefix("launch:") {
+                FaultTrigger::Launch(
+                    n.parse().map_err(|_| bad("launch trigger wants an index"))?,
+                )
+            } else if let Some(d) = t.strip_prefix("t:") {
+                FaultTrigger::Elapsed(parse_dur(d).ok_or_else(|| bad("bad time trigger"))?)
+            } else {
+                return Err(bad("trigger must be `launch:<n>` or `t:<dur>`"));
+            }
+        };
+        Ok(FaultSpec { device, kind, trigger })
+    }
+
+    /// Parse a comma-separated list of specs (the `--fault` CLI shape).
+    pub fn parse_list(s: &str) -> Result<Vec<FaultSpec>, Error> {
+        s.split(',')
+            .map(|item| FaultSpec::parse(item.trim()))
+            .collect()
+    }
+}
+
+impl std::fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}=", self.device)?;
+        match &self.kind {
+            FaultKind::Stall { dur, window } => {
+                write!(f, "stall:{}", fmt_dur(*dur))?;
+                if let Some(w) = window {
+                    write!(f, ":{}", fmt_dur(*w))?;
+                }
+            }
+            FaultKind::Slow { factor, window } => {
+                write!(f, "slow:{factor}x")?;
+                if let Some(w) = window {
+                    write!(f, ":{}", fmt_dur(*w))?;
+                }
+            }
+            FaultKind::Fail { count } => write!(f, "fail:{count}")?,
+            FaultKind::Die => write!(f, "die")?,
+        }
+        match self.trigger {
+            FaultTrigger::Launch(n) => write!(f, "@launch:{n}"),
+            FaultTrigger::Elapsed(d) => write!(f, "@t:{}", fmt_dur(d)),
+        }
+    }
+}
+
+/// Granularity of the shutdown-aware sleep used by stall/slow injection:
+/// a long hang must not pin a worker thread past pool shutdown.
+const SLEEP_CHUNK: Duration = Duration::from_millis(5);
+
+/// Sleep `total` in [`SLEEP_CHUNK`] steps, returning early (false) when
+/// `shutdown` flips.
+fn chunked_sleep(total: Duration, shutdown: &AtomicBool) -> bool {
+    let t0 = Instant::now();
+    loop {
+        let left = total.saturating_sub(t0.elapsed());
+        if left.is_zero() {
+            return true;
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            return false;
+        }
+        std::thread::sleep(SLEEP_CHUNK.min(left));
+    }
+}
+
+/// Armed runtime state of one device's scripted fault. The pool holds
+/// one per faulted device and consults it around every launch batch;
+/// the health monitor consults [`FaultState::probe_ok`] to decide
+/// quarantine re-admission.
+pub struct FaultState {
+    spec: FaultSpec,
+    /// When the fault was armed (pool construction) — the zero point of
+    /// `t:` triggers.
+    armed: Instant,
+    /// Device-local launch counter (each job of a batch counts once).
+    launches: AtomicU64,
+    /// Launches that failed after an elapsed-time `fail` trigger.
+    fail_seq: AtomicU64,
+    /// Times the fault actually injected something (stalls slept,
+    /// launches failed/slowed).
+    injected: AtomicU64,
+    /// First instant the (stall/slow) window activated.
+    window_start: Mutex<Option<Instant>>,
+    /// A stall sleep is in progress right now (probes fail during it).
+    stalling: AtomicBool,
+    /// `Die` has issued its first failure.
+    died: AtomicBool,
+}
+
+impl FaultState {
+    /// Arm `spec` now.
+    pub fn arm(spec: FaultSpec) -> FaultState {
+        FaultState {
+            spec,
+            armed: Instant::now(),
+            launches: AtomicU64::new(0),
+            fail_seq: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+            window_start: Mutex::new(None),
+            stalling: AtomicBool::new(false),
+            died: AtomicBool::new(false),
+        }
+    }
+
+    /// The armed spec.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// How many times the fault has injected misbehavior.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Has the trigger point been reached for a batch whose first job is
+    /// launch `first` and last is `last`?
+    fn triggered(&self, first: u64, last: u64) -> bool {
+        match self.spec.trigger {
+            FaultTrigger::Launch(n) => last >= n,
+            FaultTrigger::Elapsed(d) => {
+                let _ = first;
+                self.armed.elapsed() >= d
+            }
+        }
+    }
+
+    /// Is the degradation window (started at the first triggered launch)
+    /// still active at `now`? Opens the window if unset.
+    fn window_active(&self, window: Option<Duration>, now: Instant) -> bool {
+        let mut ws = self.window_start.lock().unwrap();
+        let start = *ws.get_or_insert(now);
+        match window {
+            None => true,
+            Some(w) => now.saturating_duration_since(start) <= w,
+        }
+    }
+
+    /// Gate one launch batch of `jobs` jobs about to execute on the
+    /// device. Consumes `jobs` launch indices. Returns the slowdown
+    /// factor to apply after execution (1.0 = none), sleeps through an
+    /// injected stall (abandoning it early on `shutdown`), or returns
+    /// the injected failure every job of the batch must report.
+    pub fn on_batch_start(&self, jobs: usize, shutdown: &AtomicBool) -> Result<f64, Error> {
+        let n = (jobs as u64).max(1);
+        let first = self.launches.fetch_add(n, Ordering::Relaxed);
+        let last = first + n - 1;
+        if !self.triggered(first, last) {
+            return Ok(1.0);
+        }
+        match &self.spec.kind {
+            FaultKind::Die => {
+                self.died.store(true, Ordering::SeqCst);
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Fault(format!(
+                    "injected permanent death of device {} ({})",
+                    self.spec.device, self.spec
+                )))
+            }
+            FaultKind::Fail { count } => {
+                let in_window = match self.spec.trigger {
+                    FaultTrigger::Launch(t) => first < t + count,
+                    // Time trigger: the first `count` *launches* after
+                    // the trigger fail — a batch consumes its job count,
+                    // matching the launch-indexed variant's accounting.
+                    FaultTrigger::Elapsed(_) => {
+                        self.fail_seq.fetch_add(n, Ordering::Relaxed) < *count
+                    }
+                };
+                if in_window {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    Err(Error::Fault(format!(
+                        "injected transient launch failure on device {} ({})",
+                        self.spec.device, self.spec
+                    )))
+                } else {
+                    Ok(1.0)
+                }
+            }
+            FaultKind::Stall { dur, window } => {
+                let now = Instant::now();
+                let w = window.unwrap_or(*dur);
+                if self.window_active(Some(w), now) {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    self.stalling.store(true, Ordering::SeqCst);
+                    chunked_sleep(*dur, shutdown);
+                    self.stalling.store(false, Ordering::SeqCst);
+                }
+                Ok(1.0)
+            }
+            FaultKind::Slow { factor, window } => {
+                if self.window_active(*window, Instant::now()) {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    Ok(*factor)
+                } else {
+                    Ok(1.0)
+                }
+            }
+        }
+    }
+
+    /// Apply a slowdown factor returned by
+    /// [`FaultState::on_batch_start`]: sleep the extra `(factor - 1)`
+    /// share of the observed execution time (shutdown-aware).
+    pub fn apply_slowdown(factor: f64, elapsed: Duration, shutdown: &AtomicBool) {
+        if factor > 1.0 {
+            let extra = elapsed.mul_f64(factor - 1.0);
+            let _ = chunked_sleep(extra, shutdown);
+        }
+    }
+
+    /// Would a health probe of the device succeed right now? Dead
+    /// devices and devices inside an active stall window fail the probe
+    /// (still wedged); slowed and transiently-failing devices pass — they
+    /// respond, just badly, and the watchdog re-judges them on the next
+    /// incident.
+    pub fn probe_ok(&self) -> Result<(), Error> {
+        match &self.spec.kind {
+            FaultKind::Die => {
+                let dead = self.died.load(Ordering::SeqCst)
+                    || match self.spec.trigger {
+                        FaultTrigger::Elapsed(d) => self.armed.elapsed() >= d,
+                        FaultTrigger::Launch(_) => false,
+                    };
+                if dead {
+                    Err(Error::Fault(format!(
+                        "probe failed: device {} is dead ({})",
+                        self.spec.device, self.spec
+                    )))
+                } else {
+                    Ok(())
+                }
+            }
+            FaultKind::Stall { dur, window } => {
+                if self.stalling.load(Ordering::SeqCst) {
+                    return Err(Error::Fault(format!(
+                        "probe failed: device {} is mid-stall",
+                        self.spec.device
+                    )));
+                }
+                let ws = self.window_start.lock().unwrap();
+                match *ws {
+                    Some(start)
+                        if start.elapsed() <= window.unwrap_or(*dur) =>
+                    {
+                        Err(Error::Fault(format!(
+                            "probe failed: device {} still inside its stall window",
+                            self.spec.device
+                        )))
+                    }
+                    _ => Ok(()),
+                }
+            }
+            FaultKind::Slow { .. } | FaultKind::Fail { .. } => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_roundtrips() {
+        for s in [
+            "2=stall:120ms:10s@launch:40",
+            "1=slow:8x@t:50ms",
+            "0=fail:25@launch:40",
+            "3=die@t:200ms",
+            "0=stall:5ms@launch:0",
+            "1=slow:2.5x:1s@launch:3",
+            "0=stall:0.4ms@launch:0",
+            "1=fail:1@t:1.5s",
+        ] {
+            let spec = FaultSpec::parse(s).unwrap_or_else(|e| panic!("`{s}`: {e}"));
+            let again = FaultSpec::parse(&spec.to_string()).unwrap();
+            assert_eq!(spec, again, "`{s}` must roundtrip through Display");
+        }
+    }
+
+    #[test]
+    fn spec_grammar_rejects_garbage() {
+        for s in [
+            "",
+            "0",
+            "0=die",               // missing trigger
+            "0=die@soon",          // bad trigger
+            "0=stall@launch:1",    // stall needs a duration
+            "0=stall:xyz@launch:1",
+            "0=slow:1x@launch:1",  // factor must exceed 1
+            "0=slow:4@launch:1",   // missing the `x`
+            "0=fail:0@launch:1",   // zero count
+            "0=melt@launch:1",     // unknown kind
+            "x=die@launch:1",      // bad device
+            "0=die:1:2:3@launch:1",
+        ] {
+            assert!(FaultSpec::parse(s).is_err(), "`{s}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn parse_list_splits_on_commas() {
+        let specs = FaultSpec::parse_list("0=die@launch:5, 1=fail:2@t:10ms").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].device, 0);
+        assert_eq!(specs[1].device, 1);
+        assert!(FaultSpec::parse_list("0=die@launch:5,bogus").is_err());
+    }
+
+    fn no_shutdown() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+
+    #[test]
+    fn launch_triggered_fail_covers_exactly_its_window() {
+        let f = FaultState::arm(FaultSpec::parse("0=fail:3@launch:2").unwrap());
+        let sd = no_shutdown();
+        // Launches 0-1 fine, 2-4 fail, 5+ fine again.
+        assert!(f.on_batch_start(1, &sd).is_ok()); // 0
+        assert!(f.on_batch_start(1, &sd).is_ok()); // 1
+        for _ in 0..3 {
+            assert!(matches!(f.on_batch_start(1, &sd), Err(Error::Fault(_))));
+        }
+        assert!(f.on_batch_start(1, &sd).is_ok()); // 5
+        assert_eq!(f.injected(), 3);
+        // Transient faults never fail a probe.
+        assert!(f.probe_ok().is_ok());
+    }
+
+    #[test]
+    fn batch_spanning_the_trigger_fails_whole() {
+        let f = FaultState::arm(FaultSpec::parse("0=fail:4@launch:2").unwrap());
+        let sd = no_shutdown();
+        // A 4-job batch covering launches 0-3 reaches index 2: it fails.
+        assert!(f.on_batch_start(4, &sd).is_err());
+    }
+
+    #[test]
+    fn die_is_permanent_and_fails_probes() {
+        let f = FaultState::arm(FaultSpec::parse("1=die@launch:1").unwrap());
+        let sd = no_shutdown();
+        assert!(f.probe_ok().is_ok(), "not dead before the trigger");
+        assert!(f.on_batch_start(1, &sd).is_ok()); // launch 0
+        for _ in 0..4 {
+            assert!(f.on_batch_start(1, &sd).is_err());
+        }
+        assert!(f.probe_ok().is_err(), "dead devices never pass probes");
+    }
+
+    #[test]
+    fn stall_sleeps_then_recovers() {
+        let f = FaultState::arm(FaultSpec::parse("0=stall:20ms@launch:1").unwrap());
+        let sd = no_shutdown();
+        let t0 = Instant::now();
+        assert!(f.on_batch_start(1, &sd).is_ok()); // launch 0: clean
+        assert!(t0.elapsed() < Duration::from_millis(15), "no stall before trigger");
+        let t1 = Instant::now();
+        assert!(f.on_batch_start(1, &sd).is_ok()); // launch 1: stalls 20ms
+        assert!(
+            t1.elapsed() >= Duration::from_millis(18),
+            "triggered launch must stall: {:?}",
+            t1.elapsed()
+        );
+        assert_eq!(f.injected(), 1);
+        // Default window = one stall's worth: once it has passed, later
+        // launches run clean and probes succeed.
+        std::thread::sleep(Duration::from_millis(25));
+        let t2 = Instant::now();
+        assert!(f.on_batch_start(1, &sd).is_ok());
+        assert!(t2.elapsed() < Duration::from_millis(15), "window over: no more stalls");
+        assert!(f.probe_ok().is_ok());
+    }
+
+    #[test]
+    fn stall_window_fails_probes_while_active() {
+        let f = FaultState::arm(FaultSpec::parse("0=stall:10ms:300ms@launch:0").unwrap());
+        let sd = no_shutdown();
+        assert!(f.on_batch_start(1, &sd).is_ok()); // stalls 10ms, opens the window
+        assert!(f.probe_ok().is_err(), "window still active");
+    }
+
+    #[test]
+    fn stall_abandons_on_shutdown() {
+        let f = FaultState::arm(FaultSpec::parse("0=stall:10s@launch:0").unwrap());
+        let sd = AtomicBool::new(true);
+        let t0 = Instant::now();
+        assert!(f.on_batch_start(1, &sd).is_ok());
+        assert!(t0.elapsed() < Duration::from_secs(1), "shutdown must cut the stall short");
+    }
+
+    #[test]
+    fn slow_returns_its_factor_and_probes_pass() {
+        let f = FaultState::arm(FaultSpec::parse("0=slow:4x@launch:0").unwrap());
+        let sd = no_shutdown();
+        let factor = f.on_batch_start(1, &sd).unwrap();
+        assert!((factor - 4.0).abs() < 1e-12);
+        assert!(f.probe_ok().is_ok(), "slow devices respond to probes");
+        // The slowdown sleep scales with observed time.
+        let t0 = Instant::now();
+        FaultState::apply_slowdown(3.0, Duration::from_millis(10), &sd);
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn elapsed_trigger_uses_armed_clock() {
+        let f = FaultState::arm(FaultSpec::parse("0=die@t:30ms").unwrap());
+        let sd = no_shutdown();
+        assert!(f.on_batch_start(1, &sd).is_ok(), "alive before the trigger time");
+        std::thread::sleep(Duration::from_millis(35));
+        assert!(f.on_batch_start(1, &sd).is_err());
+        assert!(f.probe_ok().is_err());
+    }
+}

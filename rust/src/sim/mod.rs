@@ -18,6 +18,7 @@
 //!   runtime is built on.
 
 pub mod device;
+pub mod fault;
 pub mod intrinsics;
 pub mod interp;
 pub mod launch;
@@ -25,6 +26,7 @@ pub mod loader;
 pub mod memory;
 
 pub use device::{Arch, DeviceDesc};
+pub use fault::{FaultKind, FaultSpec, FaultState, FaultTrigger};
 pub use launch::{
     launch_kernel, launch_kernel_batch, BatchKernelSpec, Bindings, LaunchConfig, LaunchStats,
     RtFn,

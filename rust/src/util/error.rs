@@ -42,6 +42,13 @@ pub enum Error {
     /// Scheduler (device-pool) failure.
     Sched(String),
 
+    /// An *injected* device fault (see [`crate::sim::fault`]): a
+    /// transient launch failure or a permanent death scripted by the
+    /// fault-injection layer. Kept distinct from [`Error::Sched`] so the
+    /// pool's retry policy can tell "the device misbehaved" (retryable on
+    /// a different device) from "the request is wrong" (not retryable).
+    Fault(String),
+
     /// Wrapped I/O error.
     Io(std::io::Error),
 }
@@ -58,6 +65,7 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Verify(m) => write!(f, "verification failed: {m}"),
             Error::Sched(m) => write!(f, "scheduler error: {m}"),
+            Error::Fault(m) => write!(f, "device fault: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

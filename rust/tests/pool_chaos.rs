@@ -1,0 +1,350 @@
+//! Chaos battery for the pool's failure half: scripted device faults
+//! (stall / transient failure / permanent death — `sim::fault`) driving
+//! the health machinery (watchdog, quarantine, preemptive shard
+//! re-planning, bounded retry, probe re-admission — `sched::health` +
+//! `sched::pool`).
+//!
+//! The soak is the headline: 1,000 launches over the mixed 4-device
+//! pool with a stalling device, a transiently failing device and a
+//! dying device, all scripted by launch index so every run provokes the
+//! same incidents. The invariants:
+//!
+//! * every accepted request **completes or fails deterministically** —
+//!   per-client `completed + failed` equals what the client submitted;
+//! * reservation counters all drain to 0 (re-planning rebalances, never
+//!   leaks);
+//! * the dead device ends the run Quarantined and visibly so in the
+//!   `PoolCoordinator` report;
+//! * no deadline is judged twice (per-client slack sample count equals
+//!   the deadline count).
+
+use omprt::coordinator::PoolCoordinator;
+use omprt::devrt::RuntimeKind;
+use omprt::ir::passes::OptLevel;
+use omprt::sched::workload::{saxpy_request, scale_request, sharded_scale_request};
+use omprt::sched::{bytes_to_f32, Affinity, HealthState, OffloadHandle, PoolConfig};
+use omprt::sim::Arch;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Poll `metrics()` until `pred` holds or `timeout` passes; returns
+/// whether it held.
+fn wait_for(
+    pc: &PoolCoordinator,
+    timeout: Duration,
+    pred: impl Fn(&omprt::sched::PoolMetrics) -> bool,
+) -> bool {
+    let t0 = Instant::now();
+    loop {
+        if pred(&pc.metrics()) {
+            return true;
+        }
+        if t0.elapsed() > timeout {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn thousand_launch_chaos_soak() {
+    const TOTAL: usize = 1000;
+    const ELEMS: usize = 192;
+    // Mixed pool: dev0 portable:nvptx64, dev1 portable:amdgcn,
+    // dev2 legacy:nvptx64 (never faulted — the always-healthy fallback),
+    // dev3 legacy:amdgcn.
+    let cfg = PoolConfig::mixed4()
+        .with_queue_cap(64)
+        .with_batch_max(4)
+        .with_watchdog_min_ms(100)
+        .with_retry_max(2)
+        .with_client_slo("slo", 250.0)
+        .with_fault_spec("0=fail:25@launch:40")
+        .unwrap()
+        .with_fault_spec("1=stall:600ms:1500ms@launch:30")
+        .unwrap()
+        .with_fault_spec("3=die@launch:60")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let clients = ["c0", "c1", "c2", "slo"];
+    let mut handles: Vec<(String, OffloadHandle, Vec<f32>)> = vec![];
+    let mut accepted: HashMap<String, u64> = HashMap::new();
+    let mut rejected = 0u64;
+    for i in 0..TOTAL {
+        let client = clients[i % clients.len()].to_string();
+        let (mut req, want) = if i % 50 == 17 {
+            // Cross-device sharded request (16K elems, partitioned).
+            let data: Vec<f32> = (0..16 * 1024).map(|k| ((k + i) % 83) as f32).collect();
+            sharded_scale_request(&data, Affinity::any(), OptLevel::O2)
+        } else if i % 37 == 5 {
+            // Pinned to the arch+runtime only the dying device serves:
+            // before its death these run there; afterwards they fail
+            // deterministically (at submit or via the stranded sweep)
+            // instead of waiting on a dead device forever.
+            let data: Vec<f32> = (0..ELEMS).map(|k| ((k + i) % 89) as f32).collect();
+            scale_request(
+                &data,
+                Affinity { arch: Some(Arch::Amdgcn), kind: Some(RuntimeKind::Legacy) },
+                OptLevel::O2,
+            )
+        } else if i % 2 == 0 {
+            let data: Vec<f32> = (0..ELEMS).map(|k| ((k + i) % 83) as f32).collect();
+            scale_request(&data, Affinity::any(), OptLevel::O2)
+        } else {
+            let x: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
+            let y: Vec<f32> = (0..ELEMS).map(|k| ((k * 3 + i) % 59) as f32).collect();
+            saxpy_request(0.5, &x, &y, Affinity::any(), OptLevel::O2)
+        };
+        req.client = client.clone();
+        match pc.submit(req) {
+            Ok(h) => {
+                *accepted.entry(client.clone()).or_default() += 1;
+                handles.push((client, h, want));
+            }
+            Err(e) => {
+                // Only the dead-device-only affinity may be turned away,
+                // and only with the fail-fast quarantine error.
+                assert!(
+                    e.to_string().contains("quarantined"),
+                    "unexpected submit rejection: {e}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+
+    // Every accepted request resolves: success with the right data, or
+    // a deterministic error.
+    let mut ok: HashMap<String, u64> = HashMap::new();
+    let mut failed: HashMap<String, u64> = HashMap::new();
+    for (client, h, want) in handles {
+        match h.wait() {
+            Ok(resp) => {
+                assert_eq!(
+                    bytes_to_f32(resp.buffers[0].as_ref().unwrap()),
+                    want,
+                    "chaos survivor must still compute the right answer"
+                );
+                *ok.entry(client).or_default() += 1;
+            }
+            Err(_) => {
+                *failed.entry(client).or_default() += 1;
+            }
+        }
+    }
+    pc.pool.quiesce();
+
+    let m = pc.metrics();
+    // Per-client accounting is exact: completed + failed == accepted.
+    for client in clients {
+        let a = accepted.get(client).copied().unwrap_or(0);
+        let cm = m.clients.iter().find(|c| c.client == client);
+        let (done, fail) = cm.map_or((0, 0), |c| (c.completed, c.failed));
+        assert_eq!(
+            done + fail,
+            a,
+            "client {client}: completed {done} + failed {fail} != accepted {a}"
+        );
+        assert_eq!(done, ok.get(client).copied().unwrap_or(0), "client {client} completions");
+        assert_eq!(
+            fail,
+            failed.get(client).copied().unwrap_or(0),
+            "client {client} failures"
+        );
+        // No deadline judged twice: exactly one signed-slack sample per
+        // deadlined request.
+        let cm = cm.expect("every client saw traffic");
+        assert_eq!(
+            cm.slack.count(),
+            cm.deadlines,
+            "client {client}: slack samples must equal deadlined requests"
+        );
+        if client == "slo" {
+            assert_eq!(cm.deadlines, a, "every accepted slo request carries a deadline");
+        } else {
+            assert_eq!(cm.deadlines, 0, "best-effort client {client} has no deadlines");
+        }
+    }
+
+    // Queue fully drained, reservations rebalanced to zero everywhere.
+    assert_eq!(m.queue_depth, 0);
+    for d in &m.devices {
+        assert_eq!(d.reserved, 0, "device {} leaks a reservation", d.id);
+    }
+
+    // The dead device ends the run Quarantined (its probes can never
+    // pass) and the incidents are visible.
+    assert_eq!(m.devices[3].health, HealthState::Quarantined, "dead device stays out");
+    assert!(m.devices[3].quarantines >= 1);
+    assert!(m.devices[1].quarantines >= 1, "stalled device must have been quarantined");
+    assert!(m.devices[0].fault_injected >= 1, "transient-failure script must have fired");
+    assert!(m.retries >= 1, "transient failures must have been retried elsewhere");
+    // dev2 never carries a fault script.
+    assert!(m.devices[2].fault.is_none());
+
+    let report = pc.format_report();
+    assert!(report.contains("quar"), "quarantine must surface in the report:\n{report}");
+    assert!(report.contains("health: watchdog on"), "{report}");
+    assert!(report.contains("fault: dev 3"), "fault echo must surface:\n{report}");
+
+    // The always-healthy fallback plus retry kept the pool useful: the
+    // only hard failures permitted are (a) requests pinned to the dead
+    // device's unique (kind, arch) and (b) sharded requests whose
+    // shards were stranded on quarantined amdgcn devices. Anything
+    // with a healthy-device escape hatch must have succeeded.
+    let any_failed: u64 = ["c0", "c1", "c2", "slo"]
+        .iter()
+        .map(|c| failed.get(*c).copied().unwrap_or(0))
+        .sum();
+    let pinned_accepted: u64 = (0..TOTAL)
+        .filter(|i| i % 50 != 17 && i % 37 == 5)
+        .count() as u64;
+    let sharded: u64 = (0..TOTAL).filter(|i| i % 50 == 17).count() as u64;
+    assert!(
+        any_failed <= pinned_accepted + sharded + rejected,
+        "failures ({any_failed}) exceed the deterministic fault budget \
+         ({pinned_accepted} dead-pinned + {sharded} sharded + {rejected} rejected)"
+    );
+}
+
+#[test]
+fn stalled_device_quarantines_shards_replan_and_probe_readmits() {
+    // Uniform pool so sharding spans all four devices; device 2 wedges
+    // hard (600ms hangs for 1.5s) after a handful of launches.
+    let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
+        .with_batch_max(4)
+        .with_watchdog_min_ms(100)
+        .with_shard_min_trips(2048)
+        .with_fault_spec("2=stall:600ms:1500ms@launch:6")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    // Enough traffic to walk device 2 past launch 6 mid-run.
+    let data: Vec<f32> = (0..256).map(|k| k as f32).collect();
+    let mut handles = vec![];
+    for i in 0..64 {
+        let (mut req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        req.client = format!("burst{}", i % 2);
+        handles.push((pc.submit(req).unwrap(), want));
+    }
+
+    // The watchdog must catch the wedged device while the stall is
+    // still in progress.
+    assert!(
+        wait_for(&pc, Duration::from_secs(20), |m| {
+            m.devices[2].health == HealthState::Quarantined
+        }),
+        "watchdog never quarantined the stalled device: {:?}",
+        pc.metrics().devices.iter().map(|d| d.health).collect::<Vec<_>>()
+    );
+
+    // A sharded request planned *now* must route around the quarantined
+    // device and still finish correctly.
+    let big: Vec<f32> = (0..16 * 1024).map(|k| (k % 97) as f32).collect();
+    let (req, want) = sharded_scale_request(&big, Affinity::any(), OptLevel::O2);
+    let resp = pc.submit(req).unwrap().wait().unwrap();
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    assert_ne!(resp.device_id, 2, "a quarantined device must serve no shard");
+
+    // Every pre-stall request still completes (the wedged batch finishes
+    // once its injected hang ends; nothing is lost).
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    pc.pool.quiesce();
+
+    // Once the scripted window closes, the probe readmits the device.
+    assert!(
+        wait_for(&pc, Duration::from_secs(20), |m| {
+            m.devices[2].health == HealthState::Healthy
+        }),
+        "probe must readmit the device after its stall window"
+    );
+    let m = pc.metrics();
+    assert!(m.probes >= 1, "re-admission requires probes");
+    assert!(m.readmissions >= 1);
+    assert!(m.devices[2].quarantines >= 1);
+    assert!(m.devices[2].fault_injected >= 1);
+    for d in &m.devices {
+        assert_eq!(d.reserved, 0, "device {} leaks a reservation", d.id);
+    }
+    assert_eq!(m.failed, 0, "a stall must delay work, never lose it");
+}
+
+#[test]
+fn dead_device_work_retries_onto_healthy_devices() {
+    let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 2)
+        .with_batch_max(4)
+        .with_watchdog_min_ms(100)
+        .with_retry_max(2)
+        .with_fault_spec("0=die@launch:2")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let data: Vec<f32> = (0..128).map(|k| k as f32).collect();
+    let mut handles = vec![];
+    for _ in 0..40 {
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        handles.push((pc.submit(req).unwrap(), want));
+    }
+    for (h, want) in handles {
+        let resp = h.wait().expect("every request must be rescued by retry");
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    pc.pool.quiesce();
+
+    let m = pc.metrics();
+    assert_eq!(m.failed, 0, "with a healthy sibling, death must cost nothing");
+    assert!(m.retries >= 1, "jobs claimed by the dead device must have been retried");
+    assert_eq!(m.retries_exhausted, 0);
+    // The dead device is quarantined by its fault streak and stays out
+    // (its probes never pass).
+    assert!(
+        wait_for(&pc, Duration::from_secs(20), |m| {
+            m.devices[0].health == HealthState::Quarantined
+        }),
+        "fault streak must quarantine the dead device"
+    );
+    std::thread::sleep(Duration::from_millis(250));
+    assert_eq!(
+        pc.metrics().devices[0].health,
+        HealthState::Quarantined,
+        "probes must never readmit a dead device"
+    );
+    let report = pc.format_report();
+    assert!(report.contains("die"), "the fault echo names the script:\n{report}");
+}
+
+#[test]
+fn retry_cap_surfaces_the_original_fault() {
+    // Single device: there is never a *different* device to retry on,
+    // so the first injected fault must come straight back to the
+    // client — and it must be the original error text.
+    let cfg = PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)
+        .with_watchdog(false)
+        .with_retry_max(2)
+        .with_fault_spec("0=fail:4@launch:0")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let data: Vec<f32> = (0..64).map(|k| k as f32).collect();
+    for i in 0..4 {
+        let (req, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        let err = pc.submit(req).unwrap().wait().expect_err("launches 0-3 are scripted to fail");
+        let msg = err.to_string();
+        assert!(msg.contains("device fault"), "launch {i}: {msg}");
+        assert!(msg.contains("injected transient launch failure"), "launch {i}: {msg}");
+    }
+    // The window is spent: the device works again.
+    let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+    let resp = pc.submit(req).unwrap().wait().unwrap();
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+
+    let m = pc.metrics();
+    assert_eq!(m.retries, 0, "no sibling device: nothing can be retried");
+    assert_eq!(m.retries_exhausted, 4);
+    assert_eq!(m.failed, 4);
+    assert_eq!(m.completed, 1);
+}

@@ -199,6 +199,143 @@ fn prop_omp_atomics_equal_intrinsic_atomics() {
     );
 }
 
+/// Scheduling-queue invariants under random op sequences, driven
+/// through the `QueueTestHarness` over the pool's internal
+/// weighted-DRR/EDF queue:
+///
+/// * the deficit floor holds: no lane's deficit ever drops below −8
+///   (bounded borrowing, whatever mix of coalescing and preemption);
+/// * pinned jobs are invisible to DRR/EDF pops (asserted inside the
+///   harness on every pop) and claimable only via `pop_pinned` on the
+///   right device;
+/// * the panic streak never exceeds `PANIC_STREAK_MAX`;
+/// * lane compaction never drops jobs: pushes − pops == len, exactly,
+///   at every step — even with hundreds of one-off client tags forcing
+///   compaction.
+#[test]
+fn prop_sched_queue_invariants_under_random_ops() {
+    use omprt::sched::pool::QueueTestHarness;
+
+    forall(
+        Config { cases: 24, seed: 0xC4A05 },
+        |r| {
+            // An op sequence: (op selector, client selector, device/pin
+            // selector, deadline flag) tuples.
+            let ops: Vec<(u8, u8, u8, bool)> = (0..200)
+                .map(|_| {
+                    (
+                        r.below(10) as u8,
+                        r.below(12) as u8,
+                        r.below(3) as u8,
+                        r.below(4) == 0,
+                    )
+                })
+                .collect();
+            let weighted = r.below(2) == 0;
+            (ops, weighted)
+        },
+        |(ops, weighted)| {
+            let weights: Vec<(String, f64)> = if *weighted {
+                vec![("a".to_string(), 3.0), ("b".to_string(), 0.5)]
+            } else {
+                vec![]
+            };
+            let mut q = QueueTestHarness::new(true, &weights);
+            let mut pushed = 0usize;
+            let mut popped = 0usize;
+            let mut oneoff = 0usize;
+            for (i, &(op, client_sel, dev, deadline)) in ops.iter().enumerate() {
+                match op {
+                    // 0-5: push. Client 0-2 from a small stable set;
+                    // selector 3+ mints one-off tags to force lane
+                    // compaction. Occasionally pinned, occasionally
+                    // already past its deadline (panic-eligible).
+                    0..=5 => {
+                        let name;
+                        let client = match client_sel {
+                            0 => "a",
+                            1 => "b",
+                            2 => "c",
+                            _ => {
+                                oneoff += 1;
+                                name = format!("oneoff{oneoff}-{i}");
+                                name.as_str()
+                            }
+                        };
+                        let pin = (op == 5).then_some(dev as usize);
+                        q.push(client, pin, deadline);
+                        pushed += 1;
+                    }
+                    // 6-8: a DRR/EDF pop for a random device with a
+                    // random batch limit.
+                    6..=8 => {
+                        if let Some((_, _, batch)) = q.pop(dev as usize, 1 + (op - 6) as usize * 3)
+                        {
+                            popped += batch;
+                        }
+                    }
+                    // 9: claim a pinned job.
+                    _ => {
+                        if q.pop_pinned(dev as usize) {
+                            popped += 1;
+                        }
+                    }
+                }
+                // Invariants hold after *every* op.
+                if q.len() != pushed - popped {
+                    return Err(format!(
+                        "op {i}: accounting broke: len {} != pushed {pushed} - popped {popped}",
+                        q.len()
+                    ));
+                }
+                if q.min_deficit() < QueueTestHarness::deficit_floor() - 1e-9 {
+                    return Err(format!(
+                        "op {i}: deficit floor violated: {}",
+                        q.min_deficit()
+                    ));
+                }
+                if q.panic_streak() > QueueTestHarness::panic_streak_max() {
+                    return Err(format!(
+                        "op {i}: panic streak {} exceeds the bound",
+                        q.panic_streak()
+                    ));
+                }
+            }
+            // Drain completely: every job pushed must come back out —
+            // compaction may have dropped empty lanes, never jobs.
+            for dev in 0..3usize {
+                while q.pop_pinned(dev) {
+                    popped += 1;
+                }
+            }
+            loop {
+                let mut progress = false;
+                for dev in 0..3usize {
+                    if let Some((_, _, batch)) = q.pop(dev, 4) {
+                        popped += batch;
+                        progress = true;
+                    }
+                }
+                if !progress {
+                    break;
+                }
+            }
+            if popped != pushed || !q.is_empty() {
+                return Err(format!(
+                    "drain incomplete: pushed {pushed}, popped {popped}, {} left",
+                    q.len()
+                ));
+            }
+            // The one-off tags must not have grown the lane table
+            // without bound (compaction reclaims drained lanes).
+            if q.lane_count() > 130 {
+                return Err(format!("{} lanes survived compaction", q.lane_count()));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Data-environment invariant: map/unmap with random refcounts never
 /// leaks mappings and roundtrips data.
 #[test]
