@@ -26,7 +26,11 @@
 //!    4-device pool while device 2 is scripted to wedge (150ms hang per
 //!    launch) mid-run: without the watchdog every stitch serializes on
 //!    the wedged reservation; with quarantine + re-planning, completion
-//!    must beat that no-re-plan baseline.
+//!    must beat that no-re-plan baseline;
+//! 8. **trace overhead** — identical async small-launch workloads with
+//!    the event tracer gated off vs recording, interleaved best-of-3:
+//!    the gated-off pool (tracing compiled in, one branch per would-be
+//!    event) must stay within 2% of the fastest configuration.
 //!
 //! Results are also written as JSON to `BENCH_pool.json` (override the
 //! path with the `BENCH_POOL_JSON` env var) so CI can archive them.
@@ -39,7 +43,7 @@ use omprt::sched::workload::{
 };
 use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig};
 use omprt::sim::Arch;
-use omprt::util::stats::percentile;
+use omprt::trace::Histogram;
 use std::time::Instant;
 
 const ELEMS: usize = 256;
@@ -409,13 +413,11 @@ fn slo_run(with_slo: bool, per_client: usize) -> (f64, f64, f64, u64, u64) {
         .find(|c| c.client == "slo")
         .expect("slo client metrics")
         .latency_p95_us();
-    let bulk_samples: Vec<f64> = m
-        .clients
-        .iter()
-        .filter(|c| c.client.starts_with("bulk"))
-        .flat_map(|c| c.latency_samples_us.iter().copied())
-        .collect();
-    let bulk_median = percentile(&bulk_samples, 0.5);
+    let mut bulk_hist = Histogram::new();
+    for c in m.clients.iter().filter(|c| c.client.starts_with("bulk")) {
+        bulk_hist.merge(&c.latency_us);
+    }
+    let bulk_median = bulk_hist.percentile_us(0.5);
     let bulk_rate = (BULK * per_client) as f64 / elapsed;
     let (_, misses) = m.deadline_totals();
     (slo_p95, bulk_median, bulk_rate, misses, m.preemptions)
@@ -510,6 +512,47 @@ fn degraded_device_scenario(requests: usize) -> (f64, f64, u64) {
     (t_noreplan, t_replan, q1)
 }
 
+/// Tracing overhead: identical async small-launch workloads on warm
+/// mixed pools with the event tracer gated off vs recording. Both pools
+/// are measured in interleaved best-of-3 rounds so machine noise hits
+/// the two configurations alike. Returns `(off_rate, on_rate)`.
+fn trace_overhead_scenario(batch: usize) -> (f64, f64) {
+    println!("\n--- trace overhead: {batch} x scale({ELEMS}), gated off vs recording ---");
+    let off_pool = DevicePool::new(&PoolConfig::mixed4().with_batch_max(32)).unwrap();
+    let on_pool = DevicePool::new(
+        &PoolConfig::mixed4().with_batch_max(32).with_trace(true).with_trace_capacity(1 << 16),
+    )
+    .unwrap();
+    assert!(!off_pool.trace_enabled() && on_pool.trace_enabled());
+    // Warm both pools' image caches before measuring.
+    run_small_scales(&off_pool, batch, false);
+    run_small_scales(&on_pool, batch, false);
+    let (mut off, mut on) = (0.0f64, 0.0f64);
+    for _ in 0..3 {
+        off = off.max(run_small_scales(&off_pool, batch, false));
+        on = on.max(run_small_scales(&on_pool, batch, false));
+    }
+    let stats = on_pool.trace_stats();
+    assert!(stats.recorded > 0, "the recording pool must have captured events");
+    println!(
+        "gated off {off:>8.1} launches/s | recording {on:>8.1} launches/s ({:.3}x) | \
+         {} events recorded ({} dropped)",
+        on / off,
+        stats.recorded,
+        stats.dropped
+    );
+    // Tracing is compile-always: the gated-off pool IS the production
+    // no-tracing path, paying one branch per would-be event. It must not
+    // trail the fastest measured configuration by more than 2%.
+    let best = off.max(on);
+    assert!(
+        off >= 0.98 * best,
+        "gated-off tracing must stay within 2% of the fastest configuration \
+         (off {off:.1} vs best {best:.1} launches/s)"
+    );
+    (off, on)
+}
+
 /// Minimal hand-rolled JSON (the offline crate set has no serde).
 fn write_bench_json(path: &str, json: &str) {
     match std::fs::write(path, json) {
@@ -565,6 +608,7 @@ fn main() {
         slo_scenario(per_client);
     let (t_noreplan_ms, t_replan_ms, quarantines) =
         degraded_device_scenario(if smoke { 4 } else { 8 });
+    let (trace_off, trace_on) = trace_overhead_scenario(batch);
 
     let min_share = shares.iter().cloned().fold(f64::INFINITY, f64::min);
     let json = format!(
@@ -583,11 +627,14 @@ fn main() {
          \"bulk_rate_baseline\": {bulk_base:.1}, \"bulk_rate_slo\": {bulk_slo:.1}, \
          \"bulk_ratio\": {:.3}, \"misses\": {misses}, \"preemptions\": {preemptions}}},\n  \
          \"degraded\": {{\"t_noreplan_ms\": {t_noreplan_ms:.1}, \"t_replan_ms\": {t_replan_ms:.1}, \
-         \"speedup\": {:.3}, \"quarantines\": {quarantines}}}\n}}\n",
+         \"speedup\": {:.3}, \"quarantines\": {quarantines}}},\n  \
+         \"trace\": {{\"gated_off\": {trace_off:.1}, \"recording\": {trace_on:.1}, \
+         \"recording_ratio\": {:.3}}}\n}}\n",
         adaptive_rate / static_rate,
         shares.iter().map(|s| format!("{s:.4}")).collect::<Vec<_>>().join(", "),
         bulk_slo / bulk_base,
         t_noreplan_ms / t_replan_ms.max(1e-9),
+        trace_on / trace_off.max(1e-9),
     );
     let path =
         std::env::var("BENCH_POOL_JSON").unwrap_or_else(|_| "BENCH_pool.json".to_string());

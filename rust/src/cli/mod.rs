@@ -7,13 +7,23 @@
 //! omprt conformance
 //! omprt code-compare
 //! omprt bench NAME  [--arch A] [--runtime legacy|portable] [--scale S] [--pool] [--client C]
-//!                   [--slo-ms MS]
+//!                   [--slo-ms MS] [--trace-out FILE] [--capture-out FILE] [--metrics-json FILE]
 //! omprt pool        [--config FILE] [--requests N] [--elems N] [--client C] [--slo-ms MS]
 //!                   [--batch N] [--queue-cap N] [--cache-budget BYTES] [--shard-elems N]
 //!                   [--adaptive | --no-adaptive] [--fault "DEV=SPEC[,...]"]
 //!                   [--no-watchdog] [--watchdog-min-ms MS] [--retry-max N]
+//!                   [--trace-out FILE] [--trace-capacity N] [--capture-out FILE]
+//!                   [--metrics-json FILE]
+//! omprt trace-validate FILE
 //! omprt info
 //! ```
+//!
+//! `--trace-out` / `--capture-out` switch event tracing on for the run
+//! and write the drained trace as Chrome trace-event JSON (load it at
+//! <https://ui.perfetto.dev>) / the line-oriented replay capture;
+//! `--metrics-json` writes the named-metrics registry. `trace-validate`
+//! structurally checks a written Chrome trace (CI runs it over the
+//! smoke-bench trace).
 
 use crate::benchmarks::{by_name, harness, Scale};
 use crate::coordinator::Coordinator;
@@ -154,6 +164,16 @@ impl Args {
                 ))
             })?;
         }
+        // Asking for a trace or capture file implies recording one.
+        // `--trace-capacity` only sizes the rings (0 = default), so a
+        // config file with `[pool] trace = true` keeps working with the
+        // default capacity.
+        if self.has("trace-out") || self.has("capture-out") {
+            cfg.trace = true;
+        }
+        if let Some(n) = self.uint("trace-capacity") {
+            cfg.trace_capacity = n as usize;
+        }
         Ok(cfg)
     }
 
@@ -275,7 +295,18 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(256usize);
             let shard_elems = args.uint("shard-elems").map(|n| n as usize);
-            run_pool_demo(&pool_cfg, requests, elems, shard_elems, &args.client())
+            run_pool_demo(&pool_cfg, requests, elems, shard_elems, &args.client(), args)
+        }
+        "trace-validate" => {
+            let path = args.positional.first().ok_or_else(|| {
+                crate::util::Error::Config("trace-validate needs a FILE".into())
+            })?;
+            let json = std::fs::read_to_string(path)
+                .map_err(|e| crate::util::Error::Config(format!("reading `{path}`: {e}")))?;
+            let n = crate::trace::validate_chrome_trace(&json)
+                .map_err(|e| crate::util::Error::Config(format!("`{path}`: {e}")))?;
+            println!("{path}: valid Chrome trace ({n} events)");
+            Ok(())
         }
         "info" => {
             for arch in Arch::all() {
@@ -351,10 +382,44 @@ fn run_bench_pool(name: &str, args: &Args) -> Result<(), crate::util::Error> {
         r.checksum
     );
     print!("{}", pc.format_report());
+    write_exports(&pc, args)?;
     if !r.verified {
         return Err(crate::util::Error::Verify(format!(
             "`{name}` failed verification against the host reference"
         )));
+    }
+    Ok(())
+}
+
+/// Write the observability exports requested on the command line:
+/// `--trace-out` (Perfetto-loadable Chrome trace-event JSON),
+/// `--capture-out` (line-oriented replay capture), `--metrics-json`
+/// (named-metrics registry). Quiesces the pool first so the drained
+/// trace covers every accepted request end to end.
+fn write_exports(
+    pc: &crate::coordinator::PoolCoordinator,
+    args: &Args,
+) -> Result<(), crate::util::Error> {
+    if !args.has("trace-out") && !args.has("capture-out") && !args.has("metrics-json") {
+        return Ok(());
+    }
+    pc.pool.quiesce();
+    let write = |path: &str, payload: String| {
+        std::fs::write(path, payload)
+            .map_err(|e| crate::util::Error::Config(format!("writing `{path}`: {e}")))
+    };
+    if let Some(path) = args.flags.get("trace-out") {
+        write(path, pc.trace_chrome_json())?;
+        let s = pc.pool.trace_stats();
+        println!("trace: {} events ({} dropped) -> {path}", s.recorded, s.dropped);
+    }
+    if let Some(path) = args.flags.get("capture-out") {
+        write(path, pc.trace_capture())?;
+        println!("capture -> {path}");
+    }
+    if let Some(path) = args.flags.get("metrics-json") {
+        write(path, pc.metrics_json())?;
+        println!("metrics -> {path}");
     }
     Ok(())
 }
@@ -370,6 +435,7 @@ fn run_pool_demo(
     elems: usize,
     shard_elems: Option<usize>,
     client: &str,
+    args: &Args,
 ) -> Result<(), crate::util::Error> {
     use crate::sched::workload::{saxpy_request, scale_request};
     use crate::sched::{bytes_to_f32, Affinity};
@@ -430,6 +496,7 @@ fn run_pool_demo(
         }
     }
     print!("{}", pc.format_report());
+    write_exports(&pc, args)?;
     if bad > 0 {
         return Err(crate::util::Error::Verify(format!(
             "{bad}/{requests} pool results differ from the host reference"
@@ -453,6 +520,7 @@ fn print_help() {
          \x20 bench NAME    run one benchmark (postencil|polbm|pomriq|pep|pcg|pbt|miniqmc);\n\
          \x20               --pool routes it through the device pool\n\
          \x20 pool          drive a mixed device pool (batching/sharding scheduler demo)\n\
+         \x20 trace-validate FILE  structurally check a Chrome trace written by --trace-out\n\
          \x20 info          device + artifact info\n\
          \n\
          FLAGS: --arch nvptx64|amdgcn  --scale small|paper  --reps N  --runtime legacy|portable\n\
@@ -461,6 +529,9 @@ fn print_help() {
          \x20            --adaptive|--no-adaptive (occupancy-driven batch/shard sizing)\n\
          \x20            --slo-ms MS (latency target for --client: deadline-aware EDF pull)\n\
          \x20            --fault \"DEV=SPEC[,..]\" (scripted stall/slow/fail/die faults)\n\
-         \x20            --watchdog|--no-watchdog  --watchdog-min-ms MS  --retry-max N (health)"
+         \x20            --watchdog|--no-watchdog  --watchdog-min-ms MS  --retry-max N (health)\n\
+         \x20            --trace-out FILE (Perfetto/Chrome trace JSON; enables tracing)\n\
+         \x20            --trace-capacity N (per-ring record slots)  --capture-out FILE (replay)\n\
+         \x20            --metrics-json FILE (named counters + latency histograms)"
     );
 }

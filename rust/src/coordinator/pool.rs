@@ -52,6 +52,24 @@ impl PoolCoordinator {
         self.pool.metrics()
     }
 
+    /// Named counters/gauges/histograms as a JSON document (the
+    /// `--metrics-json` export; see [`DevicePool::metrics_registry`]).
+    pub fn metrics_json(&self) -> String {
+        self.pool.metrics_registry().to_json()
+    }
+
+    /// Drained trace as Chrome trace-event JSON (empty-event document
+    /// when tracing is off; see [`DevicePool::trace_chrome_json`]).
+    pub fn trace_chrome_json(&self) -> String {
+        self.pool.trace_chrome_json()
+    }
+
+    /// Drained trace as the compact line-oriented replay capture (see
+    /// [`DevicePool::trace_capture`]).
+    pub fn trace_capture(&self) -> String {
+        self.pool.trace_capture()
+    }
+
     /// Merge every device's profiler report into per-region totals.
     pub fn region_report(&self) -> Vec<PoolRegionReport> {
         let mut merged: BTreeMap<String, (Summary, usize)> = BTreeMap::new();
@@ -138,6 +156,13 @@ impl PoolCoordinator {
         } else {
             out.push_str("health: watchdog off (stalled devices are waited on)\n");
         }
+        let ts = self.pool.trace_stats();
+        if ts.enabled {
+            out.push_str(&format!(
+                "trace: on | {} events recorded ({} dropped) across {} rings x {} slots\n",
+                ts.recorded, ts.dropped, ts.rings, ts.capacity
+            ));
+        }
         out.push_str(
             "dev | runtime  | arch    | hlth | done  | maxbat | occ%  | images | hits/miss/evict | mem live/peak\n",
         );
@@ -173,10 +198,10 @@ impl PoolCoordinator {
         if !m.clients.is_empty() {
             let uptime = m.uptime.as_secs_f64().max(1e-9);
             out.push_str(
-                "client           | weight | slo(ms) | done  | fail | share% | req/s   | avg wait (us) | avg sojourn (us) | p95 (us)  | miss | slack avg (ms)\n",
+                "client           | weight | slo(ms) | done  | fail | share% | req/s   | avg wait (us) | avg sojourn (us) | p50 (us)  | p95 (us)  | p99 (us)  | miss | slack avg (ms)\n",
             );
             out.push_str(
-                "-----------------+--------+---------+-------+------+--------+---------+---------------+------------------+-----------+------+---------------\n",
+                "-----------------+--------+---------+-------+------+--------+---------+---------------+------------------+-----------+-----------+-----------+------+---------------\n",
             );
             for c in &m.clients {
                 let name = if c.client.is_empty() { "(default)" } else { &c.client };
@@ -185,7 +210,7 @@ impl PoolCoordinator {
                     None => "-".to_string(),
                 };
                 out.push_str(&format!(
-                    "{:<17}| {:>6.2} | {:>7} | {:>5} | {:>4} | {:>5.1} | {:>7.1} | {:>13.3} | {:>16.3} | {:>9.1} | {:>4} | {:>13.3}\n",
+                    "{:<17}| {:>6.2} | {:>7} | {:>5} | {:>4} | {:>5.1} | {:>7.1} | {:>13.3} | {:>16.3} | {:>9.1} | {:>9.1} | {:>9.1} | {:>4} | {:>13.3}\n",
                     name,
                     c.weight,
                     slo,
@@ -195,7 +220,9 @@ impl PoolCoordinator {
                     c.completed as f64 / uptime,
                     c.queue_wait.avg_us(),
                     c.latency.avg_us(),
+                    c.latency_p50_us(),
                     c.latency_p95_us(),
+                    c.latency_p99_us(),
                     c.deadline_miss,
                     c.slack.avg_us() / 1e3
                 ));
@@ -265,6 +292,13 @@ mod tests {
         assert!(text.contains("slo:"), "{text}");
         assert!(text.contains("miss"), "{text}");
         assert!(text.contains("slack avg"), "{text}");
+        assert!(text.contains("p50 (us)") && text.contains("p99 (us)"), "{text}");
+        // mixed4 leaves tracing off: no trace line, but the metrics
+        // export still works.
+        assert!(!text.contains("trace: on"), "{text}");
+        let mj = pc.metrics_json();
+        assert!(mj.contains("\"pool.completed\""), "{mj}");
+        assert!(mj.contains("latency_us"), "{mj}");
         assert!(text.contains("health: watchdog on"), "{text}");
         assert!(text.contains("hlth"), "{text}");
         // A fault-free healthy pool: every device reads `ok`, nothing

@@ -34,6 +34,10 @@
 //!   deadline-aware (SLO) preemption, and a kernel-image cache keyed
 //!   by `(module content hash, arch, runtime kind, opt level)`. See
 //!   `ARCHITECTURE.md` at the repo root for the end-to-end picture.
+//! * [`trace`] — structured event tracing for the pool: per-request
+//!   spans through lock-free per-thread rings, Chrome/Perfetto JSON and
+//!   replay-capture exports, and the log-bucketed histogram metrics
+//!   registry behind `--metrics-json`.
 //! * [`benchmarks`] — the SPEC ACCEL analogs (postencil, polbm, pomriq,
 //!   pep, pcg, pbt) and the miniQMC proxy app with its two target regions
 //!   (`evaluate_vgh`, `evaluateDetRatios`).
@@ -51,6 +55,7 @@ pub mod ir;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result type.

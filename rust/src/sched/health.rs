@@ -32,6 +32,12 @@
 //! re-planning, bounded retry — live in [`crate::sched::pool`]; this
 //! module keeps the pure, unit-testable pieces: the state machine, the
 //! thresholds, and the per-device atomic state block.
+//!
+//! Every lifecycle transition is also visible on the pool's trace
+//! timeline when tracing is enabled: `Quarantine`, `Probe` (with
+//! pass/fail) and `Readmit` events carry the device id, and the retry
+//! path stamps `Retry` events with the faulted device — see
+//! [`crate::trace::EventKind`].
 
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::time::Duration;

@@ -184,6 +184,22 @@
 //! its profiler). This is how multi-launch workloads that do not fit the
 //! single-launch request shape — the SPEC-analog benchmark suite behind
 //! `omprt bench --pool` — run through the pool's scheduler and metrics.
+//!
+//! ## Observability
+//!
+//! With `[pool] trace = true` (or `--trace-out` on the CLI) every
+//! accepted request gets a [`crate::trace::RequestId`] at submit and the
+//! whole request path — queue, workers, stitchers, the health monitor,
+//! the retry loop — emits typed [`crate::trace::Event`]s into lock-free
+//! per-thread rings. [`DevicePool::trace_chrome_json`] renders the drained
+//! trace as Perfetto-loadable Chrome trace-event JSON,
+//! [`DevicePool::trace_capture`] as the compact replay capture, and
+//! [`DevicePool::metrics_registry`] exports named counters/gauges plus
+//! the per-client log-bucketed latency/queue-wait/slack histograms
+//! ([`crate::trace::Histogram`]) behind `--metrics-json`. Tracing is
+//! compile-always but runtime-gated: a disabled tracer costs one branch
+//! per would-be event (the `trace_overhead` bench scenario holds this
+//! within 2% of the untraced build).
 
 pub mod adaptive;
 pub mod cache;
@@ -199,5 +215,5 @@ pub use slo::{ServiceEwma, SlackSummary};
 pub use pool::{
     bytes_to_f32, f32_to_bytes, Affinity, ClientMetrics, DeviceLease, DeviceMetrics, DevicePool,
     DeviceSpec, KernelArg, MapBuf, OffloadHandle, OffloadRequest, OffloadResponse, PoolConfig,
-    PoolMetrics, ShardSpec, TaskHandle, TrySubmitError,
+    PoolMetrics, ShardSpec, TaskHandle, TrySubmitError, ARCH_LABELS,
 };

@@ -16,6 +16,10 @@ use crate::hostrt::{KernelImage, MapType, OffloadDevice};
 use crate::ir::passes::OptLevel;
 use crate::ir::Module;
 use crate::sim::{Arch, BatchKernelSpec, FaultSpec, FaultState, LaunchConfig, LaunchStats, MemStats};
+use crate::trace::{
+    capture_text, chrome_trace_json, Event, EventKind, ExportMeta, Histogram, MetricsRegistry,
+    RequestId, TraceSnapshot, TraceStats, Tracer,
+};
 use crate::util::{Error, Summary};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -346,6 +350,18 @@ pub struct PoolConfig {
     /// device up to this many times before the original error is
     /// surfaced to the client. 0 disables retry.
     pub retry_max: u32,
+    /// Record structured trace events (see [`crate::trace`]): every
+    /// request's span through the queue, workers, stitchers and the
+    /// health layer, drained on demand for the Chrome/Perfetto and
+    /// replay-capture exports. Tracing is compile-always but
+    /// runtime-gated: with `false` (the default) the emission sites cost
+    /// one branch each.
+    pub trace: bool,
+    /// Per-ring trace capacity in records (one ring per device worker
+    /// plus a few shared stripes). 0 selects
+    /// [`crate::trace::DEFAULT_TRACE_CAPACITY`]; rings overwrite their
+    /// oldest records past capacity and report the drop count.
+    pub trace_capacity: usize,
 }
 
 impl Default for PoolConfig {
@@ -378,6 +394,8 @@ impl PoolConfig {
             watchdog: true,
             watchdog_min_ms: 5000,
             retry_max: 2,
+            trace: false,
+            trace_capacity: 0,
         }
     }
 
@@ -486,6 +504,20 @@ impl PoolConfig {
         self
     }
 
+    /// Enable/disable structured event tracing (see [`PoolConfig::trace`]).
+    pub fn with_trace(mut self, trace: bool) -> PoolConfig {
+        self.trace = trace;
+        self
+    }
+
+    /// Override the per-ring trace capacity in records (0 = default).
+    /// Implies nothing about enablement; combine with
+    /// [`PoolConfig::with_trace`].
+    pub fn with_trace_capacity(mut self, records: usize) -> PoolConfig {
+        self.trace_capacity = records;
+        self
+    }
+
     /// Read the `[pool]` section of a config document:
     ///
     /// ```text
@@ -504,6 +536,8 @@ impl PoolConfig {
     /// watchdog = true         # stall watchdog + quarantine + probes
     /// watchdog_min_ms = 5000  # floor below which nothing is suspect
     /// retry_max = 2           # device-fault retries on another device
+    /// trace = false           # structured event tracing (see crate::trace)
+    /// trace_capacity = 0      # per-ring trace records (0 = default)
     /// ```
     ///
     /// Missing section or keys fall back to [`PoolConfig::mixed4`].
@@ -589,6 +623,9 @@ impl PoolConfig {
         out.retry_max = u32::try_from(retry_max).map_err(|_| {
             Error::Config(format!("[pool] retry_max too large (max {})", u32::MAX))
         })?;
+        out.trace = read_bool(sec, "trace", out.trace)?;
+        out.trace_capacity =
+            read_uint(sec, "trace_capacity", out.trace_capacity as i64, 0)? as usize;
         Ok(out)
     }
 }
@@ -662,6 +699,10 @@ struct OffloadJob {
     /// When the job was first enqueued — the basis of submit-to-
     /// completion sojourn, which spans failed attempts.
     first_enqueued: Instant,
+    /// Trace identity: the accepted request this job belongs to. Shard
+    /// jobs carry the *parent* request's id; a retried job keeps its id
+    /// (the `Retry` event carries the attempt count instead).
+    req_id: RequestId,
 }
 
 type TaskFn = Box<dyn FnOnce(&DeviceLease<'_>) + Send>;
@@ -674,6 +715,8 @@ struct TaskJob {
     /// per-request budget).
     deadline: Option<Instant>,
     enqueued: Instant,
+    /// Trace identity (leased tasks are requests too).
+    req_id: RequestId,
 }
 
 enum Job {
@@ -730,6 +773,22 @@ impl Job {
         match self {
             Job::Offload(j) => Some(j.key.content),
             Job::Task(_) => None,
+        }
+    }
+
+    /// Trace identity: the request this job belongs to.
+    fn req_id(&self) -> RequestId {
+        match self {
+            Job::Offload(j) => j.req_id,
+            Job::Task(t) => t.req_id,
+        }
+    }
+
+    /// Is this one shard of a split request?
+    fn is_shard(&self) -> bool {
+        match self {
+            Job::Offload(j) => j.is_shard,
+            Job::Task(_) => false,
         }
     }
 }
@@ -1230,13 +1289,6 @@ struct DeviceSlot {
     fault: Option<FaultState>,
 }
 
-/// Per-client sojourn samples kept for percentile reporting: a ring of
-/// the most recent this-many samples (the online [`Summary`] keeps
-/// exact lifetime totals regardless). A sliding window — rather than
-/// the first N — so p50/p95 track *current* tail behavior on
-/// long-lived pools, which is what SLO monitoring needs.
-const LATENCY_SAMPLE_CAP: usize = 8192;
-
 /// Per-client completion accounting (behind `Shared::clients`).
 #[derive(Default)]
 struct ClientAccum {
@@ -1246,10 +1298,16 @@ struct ClientAccum {
     queue_wait: Summary,
     /// Submit-to-completion sojourn time.
     latency: Summary,
-    /// Ring of the most recent sojourn samples in µs (size
-    /// [`LATENCY_SAMPLE_CAP`]; write position derived from
-    /// `latency.count()`).
-    latency_samples_us: Vec<f64>,
+    /// Log-bucketed sojourn distribution (µs). Unlike the capped sample
+    /// ring it replaced, this covers *every* completion with bounded
+    /// memory and merges exactly across clients, so p50/p95/p99 are
+    /// lifetime quantiles (exact within a ~1.5× bucket), not a window.
+    latency_hist: Histogram,
+    /// Log-bucketed queue-wait distribution (µs).
+    queue_wait_hist: Histogram,
+    /// Log-bucketed signed deadline-slack distribution (µs; negative =
+    /// missed).
+    slack_hist: Histogram,
     /// Requests that carried a deadline (explicit budget or client SLO).
     deadlines: u64,
     /// Deadlined requests that completed after their deadline. A sharded
@@ -1326,6 +1384,9 @@ struct Shared {
     sharded_requests: AtomicU64,
     shard_jobs: AtomicU64,
     started: Instant,
+    /// Event tracing: request-id allocation always, ring emission only
+    /// when `[pool] trace = true`.
+    tracer: Tracer,
 }
 
 impl Shared {
@@ -1357,8 +1418,14 @@ impl Shared {
 /// a `deadline`, its outcome is compared against completion time *here*
 /// — exactly once per request, which is what keeps miss counts correct
 /// for sharded requests (recorded by their stitcher, never per shard).
+/// This is also the one place every request terminates, so it closes the
+/// request's trace span: a `DeadlineJudged` event when a deadline was
+/// judged, then the terminal `Done` event.
+#[allow(clippy::too_many_arguments)]
 fn record_into(
     map: &mut BTreeMap<String, ClientAccum>,
+    tracer: &Tracer,
+    req: RequestId,
     client: &str,
     queue_wait: Duration,
     latency: Duration,
@@ -1377,36 +1444,53 @@ fn record_into(
     }
     acc.queue_wait.record(queue_wait);
     acc.latency.record(latency);
-    let us = latency.as_secs_f64() * 1e6;
-    if acc.latency_samples_us.len() < LATENCY_SAMPLE_CAP {
-        acc.latency_samples_us.push(us);
-    } else {
-        // `latency.count()` was just incremented, so this walks the ring
-        // one slot per record: the window holds the newest CAP samples.
-        let i = ((acc.latency.count() - 1) % LATENCY_SAMPLE_CAP as u64) as usize;
-        acc.latency_samples_us[i] = us;
-    }
+    acc.latency_hist.record(latency);
+    acc.queue_wait_hist.record(queue_wait);
     if let Some(dl) = deadline {
         acc.deadlines += 1;
         // Judged against when the work actually finished (`completed`,
         // captured by the worker/stitcher before taking this lock), not
         // the accounting instant — lock contention on the clients table
         // must not turn met deadlines into recorded misses.
-        match dl.checked_duration_since(completed) {
-            Some(slack) => acc.slack.record_secs(slack.as_secs_f64()),
+        let (miss, slack_us) = match dl.checked_duration_since(completed) {
+            Some(slack) => {
+                acc.slack.record_secs(slack.as_secs_f64());
+                acc.slack_hist.record_us(slack.as_secs_f64() * 1e6);
+                (false, slack.as_secs_f64() * 1e6)
+            }
             None => {
                 acc.deadline_miss += 1;
-                acc.slack
-                    .record_secs(-completed.saturating_duration_since(dl).as_secs_f64());
+                let over = completed.saturating_duration_since(dl).as_secs_f64();
+                acc.slack.record_secs(-over);
+                acc.slack_hist.record_us(-over * 1e6);
+                (true, -over * 1e6)
             }
-        }
+        };
+        tracer.emit(
+            None,
+            Event::new(EventKind::DeadlineJudged)
+                .req(req)
+                .a(miss as u64)
+                .b((slack_us as i64) as u64)
+                .c(tracer.client_id(client)),
+        );
     }
+    tracer.emit(
+        None,
+        Event::new(EventKind::Done)
+            .req(req)
+            .a(ok as u64)
+            .b(latency.as_nanos().min(u64::MAX as u128) as u64)
+            .c(tracer.client_id(client)),
+    );
 }
 
 /// Single-record convenience (task and stitcher paths; the batched reply
 /// loop locks once for the whole batch instead).
+#[allow(clippy::too_many_arguments)]
 fn record_client(
     shared: &Shared,
+    req: RequestId,
     client: &str,
     queue_wait: Duration,
     latency: Duration,
@@ -1415,7 +1499,17 @@ fn record_client(
     completed: Instant,
 ) {
     let mut map = shared.clients.lock().unwrap();
-    record_into(&mut map, client, queue_wait, latency, ok, deadline, completed);
+    record_into(
+        &mut map,
+        &shared.tracer,
+        req,
+        client,
+        queue_wait,
+        latency,
+        ok,
+        deadline,
+        completed,
+    );
 }
 
 /// A pool of offload devices with per-device worker threads.
@@ -1511,6 +1605,7 @@ impl DevicePool {
             sharded_requests: AtomicU64::new(0),
             shard_jobs: AtomicU64::new(0),
             started: Instant::now(),
+            tracer: Tracer::new(config.trace, config.trace_capacity, config.devices.len()),
         });
         let mut workers = vec![];
         for id in 0..config.devices.len() {
@@ -1642,10 +1737,19 @@ impl DevicePool {
     /// jobs inherit the parent's deadline, so a panicking sharded
     /// request pulls **all** its shards ahead.
     pub fn submit(&self, req: OffloadRequest) -> Result<OffloadHandle, Error> {
+        // Span anchor: captured on entry so the request's trace span
+        // covers validation, shard planning and any backpressure wait.
+        // The `Submit` event itself is only emitted after the request is
+        // *accepted* (enqueued), so every `Submit` in a trace is a real
+        // admission — the replay capture needs no filtering.
+        let t0 = self.shared.tracer.now_ns();
         self.validate(&req)?;
+        let rid = self.shared.tracer.next_request_id();
         let deadline = self.stamp_deadline(&req);
         if let Some(plan) = self.shard_plan(&req) {
-            let (jobs, parts) = self.build_shards(&req, &plan, deadline);
+            let fanout = plan.ranges.len();
+            let arch = plan.arch;
+            let (jobs, parts) = self.build_shards(&req, &plan, deadline, rid);
             let n = jobs.len();
             // Spawn first (so a spawn failure queues nothing), then
             // enqueue all shard jobs in one critical section — the
@@ -1653,16 +1757,34 @@ impl DevicePool {
             // it is visible — and only then arm the stitcher. A failed
             // enqueue drops `arm` and the stitcher exits without a
             // trace.
-            let (frx, arm) = spawn_stitcher(&req, parts, self.shared.clone(), deadline)?;
+            let (frx, arm) = spawn_stitcher(&req, parts, self.shared.clone(), deadline, rid)?;
             self.enqueue_bulk(jobs.into_iter().map(Job::Offload).collect())?;
             let _ = arm.send(());
             self.shared.sharded_requests.fetch_add(1, Ordering::Relaxed);
             self.shared.shard_jobs.fetch_add(n as u64, Ordering::Relaxed);
+            self.emit_submit(t0, rid, &req.client, req.module.content_hash(), deadline);
+            self.shared.tracer.emit(
+                None,
+                Event::new(EventKind::ShardPlanned)
+                    .req(rid)
+                    .a(fanout as u64)
+                    .b(arch_code(arch)),
+            );
             return Ok(OffloadHandle { rx: frx });
         }
         let (reply, rx) = mpsc::channel();
-        let job = make_offload_job(req, reply, false, None, deadline);
+        let job = make_offload_job(req, reply, false, None, deadline, rid);
+        let key = job.key.content;
+        // The job (and its request) moves into the queue; clone the
+        // client tag for the post-acceptance Submit event only when it
+        // will actually be emitted.
+        let client = if self.shared.tracer.enabled() {
+            job.req.client.clone()
+        } else {
+            String::new()
+        };
         self.enqueue_bulk(vec![Job::Offload(job)])?;
+        self.emit_submit(t0, rid, &client, key, deadline);
         Ok(OffloadHandle { rx })
     }
 
@@ -1681,9 +1803,11 @@ impl DevicePool {
     /// blocking. A sharded request is accepted only if **all** its shard
     /// jobs fit at once.
     pub fn try_submit(&self, req: OffloadRequest) -> Result<OffloadHandle, TrySubmitError> {
+        let t0 = self.shared.tracer.now_ns();
         if let Err(e) = self.validate(&req) {
             return Err(TrySubmitError::Rejected(e));
         }
+        let rid = self.shared.tracer.next_request_id();
         let deadline = self.stamp_deadline(&req);
         if let Some(plan) = self.shard_plan(&req) {
             // Cheap capacity check before materializing shard buffers and
@@ -1696,10 +1820,13 @@ impl DevicePool {
                     return Err(TrySubmitError::Full(req));
                 }
             }
-            let (jobs, parts) = self.build_shards(&req, &plan, deadline);
+            let fanout = plan.ranges.len();
+            let arch = plan.arch;
+            let (jobs, parts) = self.build_shards(&req, &plan, deadline, rid);
             let n = jobs.len();
             // Spawn-then-enqueue-then-arm, exactly as in `submit`.
-            let (frx, arm) = match spawn_stitcher(&req, parts, self.shared.clone(), deadline) {
+            let (frx, arm) = match spawn_stitcher(&req, parts, self.shared.clone(), deadline, rid)
+            {
                 Ok(pair) => pair,
                 Err(e) => return Err(TrySubmitError::Rejected(e)),
             };
@@ -1709,18 +1836,37 @@ impl DevicePool {
             {
                 // Dropping `arm` makes the disarmed stitcher exit without
                 // recording anything; the untouched original goes back to
-                // the caller and no metrics show a trace.
+                // the caller and no metrics show a trace. (The allocated
+                // request id goes unused — ids are not required to be
+                // dense, only unique.)
                 return Err(TrySubmitError::Full(req));
             }
             let _ = arm.send(());
             self.shared.sharded_requests.fetch_add(1, Ordering::Relaxed);
             self.shared.shard_jobs.fetch_add(n as u64, Ordering::Relaxed);
+            self.emit_submit(t0, rid, &req.client, req.module.content_hash(), deadline);
+            self.shared.tracer.emit(
+                None,
+                Event::new(EventKind::ShardPlanned)
+                    .req(rid)
+                    .a(fanout as u64)
+                    .b(arch_code(arch)),
+            );
             return Ok(OffloadHandle { rx: frx });
         }
         let (reply, rx) = mpsc::channel();
-        let job = make_offload_job(req, reply, false, None, deadline);
+        let job = make_offload_job(req, reply, false, None, deadline, rid);
+        let key = job.key.content;
+        let client = if self.shared.tracer.enabled() {
+            job.req.client.clone()
+        } else {
+            String::new()
+        };
         match self.try_enqueue_bulk(vec![Job::Offload(job)]) {
-            Ok(()) => Ok(OffloadHandle { rx }),
+            Ok(()) => {
+                self.emit_submit(t0, rid, &client, key, deadline);
+                Ok(OffloadHandle { rx })
+            }
             Err(mut jobs) => match jobs.pop() {
                 Some(Job::Offload(j)) => Err(TrySubmitError::Full(j.req)),
                 _ => unreachable!("bulk enqueue returns the jobs it was given"),
@@ -1786,14 +1932,47 @@ impl DevicePool {
             .slos
             .get(client)
             .and_then(|t| Instant::now().checked_add(*t));
+        let t0 = self.shared.tracer.now_ns();
+        let rid = self.shared.tracer.next_request_id();
         self.enqueue_bulk(vec![Job::Task(TaskJob {
             affinity,
             client: client.to_string(),
             run,
             deadline,
             enqueued: Instant::now(),
+            req_id: rid,
         })])?;
+        // Tasks have no kernel image; key word = 0.
+        self.emit_submit(t0, rid, client, 0, deadline);
         Ok(TaskHandle { rx })
+    }
+
+    /// Emit the `Submit` trace event for an *accepted* request, anchored
+    /// at `t0` (captured on entry to the submitting call, so the span
+    /// includes validation, planning and backpressure). Payload: `a` =
+    /// interned client id, `b` = image content key (0 for tasks), `c` =
+    /// remaining deadline budget in ns (0 = best-effort).
+    fn emit_submit(
+        &self,
+        t0: u64,
+        rid: RequestId,
+        client: &str,
+        key: u64,
+        deadline: Option<Instant>,
+    ) {
+        let tracer = &self.shared.tracer;
+        if !tracer.enabled() {
+            return;
+        }
+        tracer.emit_at(
+            None,
+            t0,
+            Event::new(EventKind::Submit)
+                .req(rid)
+                .a(tracer.client_id(client))
+                .b(key)
+                .c(deadline_budget_ns(deadline)),
+        );
     }
 
     /// Make `job` visible in the queue. Must run with the queue lock
@@ -1808,7 +1987,18 @@ impl DevicePool {
         if let Some(d) = job.target_device() {
             self.shared.reserved[d].fetch_add(1, Ordering::Relaxed);
         }
+        let (rid, is_shard, target) = (job.req_id(), job.is_shard(), job.target_device());
         q.push(job);
+        // Payload: a = queue depth after the push, b = shard-job flag,
+        // c = pinned device + 1 (0 = unpinned).
+        self.shared.tracer.emit(
+            None,
+            Event::new(EventKind::Enqueue)
+                .req(rid)
+                .a(q.len() as u64)
+                .b(is_shard as u64)
+                .c(target.map_or(0, |d| d as u64 + 1)),
+        );
     }
 
     /// Blocking all-or-nothing enqueue honoring `queue_cap`
@@ -1829,12 +2019,24 @@ impl DevicePool {
         let mut q = shared.queue.lock().unwrap();
         let mut waited = false;
         if shared.queue_cap > 0 {
+            let t_wait = if shared.tracer.enabled() { shared.tracer.now_ns() } else { 0 };
             while q.len() + jobs.len() > shared.queue_cap {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return Err(Error::Sched("pool is shut down".into()));
                 }
                 waited = true;
                 q = shared.space.wait(q).unwrap();
+            }
+            if waited {
+                // Payload: a = how long the submitter blocked on a full
+                // queue (ns). Tagged with the first job's request id (for
+                // a sharded submission, every job carries the parent id).
+                shared.tracer.emit(
+                    None,
+                    Event::new(EventKind::BackpressureWait)
+                        .req(jobs.first().map_or(0, |j| j.req_id()))
+                        .a(shared.tracer.now_ns().saturating_sub(t_wait)),
+                );
             }
         }
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -1979,6 +2181,7 @@ impl DevicePool {
         req: &OffloadRequest,
         plan: &ShardPlan,
         deadline: Option<Instant>,
+        req_id: RequestId,
     ) -> (Vec<OffloadJob>, Vec<ShardPart>) {
         let spec = req.shard.as_ref().expect("a plan implies a spec");
         let n = plan.ranges.len();
@@ -2020,7 +2223,9 @@ impl DevicePool {
             };
             let (tx, rx) = mpsc::channel();
             let target = plan.targets.as_ref().map(|t| t[si]);
-            jobs.push(make_offload_job(sreq, tx, true, target, deadline));
+            // Shard jobs carry the *parent* request's id: every event
+            // they emit joins the parent's span.
+            jobs.push(make_offload_job(sreq, tx, true, target, deadline, req_id));
             parts.push(ShardPart { rx, lo, hi });
         }
         (jobs, parts)
@@ -2076,7 +2281,9 @@ impl DevicePool {
                     failed: acc.failed,
                     queue_wait: acc.queue_wait.clone(),
                     latency: acc.latency.clone(),
-                    latency_samples_us: acc.latency_samples_us.clone(),
+                    latency_us: acc.latency_hist.clone(),
+                    queue_wait_us: acc.queue_wait_hist.clone(),
+                    slack_us: acc.slack_hist.clone(),
                     deadlines: acc.deadlines,
                     deadline_miss: acc.deadline_miss,
                     slack: acc.slack.clone(),
@@ -2129,6 +2336,103 @@ impl DevicePool {
             std::thread::sleep(Duration::from_millis(1));
         }
     }
+
+    /// Whether event tracing is recording (`[pool] trace = true` /
+    /// `--trace-out`).
+    pub fn trace_enabled(&self) -> bool {
+        self.shared.tracer.enabled()
+    }
+
+    /// Trace-ring accounting (recorded/dropped event counts).
+    pub fn trace_stats(&self) -> TraceStats {
+        self.shared.tracer.stats()
+    }
+
+    /// Drain the trace rings into a time-sorted snapshot. Non-destructive;
+    /// quiesce first for a complete capture.
+    pub fn trace_snapshot(&self) -> TraceSnapshot {
+        self.shared.tracer.snapshot()
+    }
+
+    /// Export labels for this pool's traces: device tracks named by
+    /// spec, clients from the tracer's interner, arch names in
+    /// [`ARCH_LABELS`] order.
+    fn export_meta(&self, snap: &TraceSnapshot) -> ExportMeta {
+        ExportMeta {
+            process: "omprt pool".to_string(),
+            device_labels: self
+                .shared
+                .slots
+                .iter()
+                .map(|s| format!("dev{} {}", s.id, s.spec))
+                .collect(),
+            clients: snap.clients.clone(),
+            arch_labels: ARCH_LABELS.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Render the current trace as Chrome trace-event JSON
+    /// (Perfetto-loadable; the `--trace-out` payload).
+    pub fn trace_chrome_json(&self) -> String {
+        let snap = self.trace_snapshot();
+        let meta = self.export_meta(&snap);
+        chrome_trace_json(&snap.records, &meta)
+    }
+
+    /// Render the current trace as the line-oriented replay capture
+    /// (the `--capture-out` payload).
+    pub fn trace_capture(&self) -> String {
+        let snap = self.trace_snapshot();
+        let meta = self.export_meta(&snap);
+        capture_text(&snap.records, &meta)
+    }
+
+    /// Snapshot the pool's named metrics: scheduler counters, per-device
+    /// gauges and the per-client latency/queue-wait/slack histograms —
+    /// the `--metrics-json` payload.
+    pub fn metrics_registry(&self) -> MetricsRegistry {
+        let m = self.metrics();
+        let mut reg = MetricsRegistry::new();
+        reg.set_counter("pool.submitted", m.submitted);
+        reg.set_counter("pool.completed", m.completed);
+        reg.set_counter("pool.failed", m.failed);
+        reg.set_counter("pool.sharded_requests", m.sharded_requests);
+        reg.set_counter("pool.shard_jobs", m.shard_jobs);
+        reg.set_counter("pool.preemptions", m.preemptions);
+        reg.set_counter("pool.retries", m.retries);
+        reg.set_counter("pool.retries_exhausted", m.retries_exhausted);
+        reg.set_counter("pool.replans", m.replans);
+        reg.set_counter("pool.replanned_jobs", m.replanned_jobs);
+        reg.set_counter("pool.probes", m.probes);
+        reg.set_counter("pool.readmissions", m.readmissions);
+        reg.set_counter("pool.queue_depth", m.queue_depth as u64);
+        reg.set_counter("pool.peak_queue_depth", m.peak_queue_depth as u64);
+        reg.set_gauge("pool.uptime_s", m.uptime.as_secs_f64());
+        let t = self.trace_stats();
+        reg.set_counter("trace.recorded", t.recorded);
+        reg.set_counter("trace.dropped", t.dropped);
+        for d in &m.devices {
+            let p = format!("device.{}", d.id);
+            reg.set_counter(&format!("{p}.completed"), d.completed);
+            reg.set_counter(&format!("{p}.batches"), d.batches);
+            reg.set_counter(&format!("{p}.quarantines"), d.quarantines);
+            reg.set_gauge(&format!("{p}.occupancy"), d.occupancy);
+        }
+        for c in &m.clients {
+            let name = if c.client.is_empty() { "default" } else { &c.client };
+            let p = format!("client.{name}");
+            reg.set_counter(&format!("{p}.completed"), c.completed);
+            reg.set_counter(&format!("{p}.failed"), c.failed);
+            reg.set_counter(&format!("{p}.deadlines"), c.deadlines);
+            reg.set_counter(&format!("{p}.deadline_miss"), c.deadline_miss);
+            reg.set_histogram(&format!("{p}.latency_us"), c.latency_us.clone());
+            reg.set_histogram(&format!("{p}.queue_wait_us"), c.queue_wait_us.clone());
+            if c.slack_us.count() > 0 {
+                reg.set_histogram(&format!("{p}.slack_us"), c.slack_us.clone());
+            }
+        }
+        reg
+    }
 }
 
 struct ShardPlan {
@@ -2152,6 +2456,7 @@ fn make_offload_job(
     is_shard: bool,
     target_device: Option<usize>,
     deadline: Option<Instant>,
+    req_id: RequestId,
 ) -> OffloadJob {
     let key = BatchKey { content: req.module.content_hash(), opt: req.opt };
     let now = Instant::now();
@@ -2166,6 +2471,33 @@ fn make_offload_job(
         reply,
         enqueued: now,
         first_enqueued: now,
+        req_id,
+    }
+}
+
+/// Numeric architecture code used in `ShardPlanned` trace payloads;
+/// [`ARCH_LABELS`] maps it back to a name for exports.
+fn arch_code(arch: Arch) -> u64 {
+    match arch {
+        Arch::Nvptx64 => 0,
+        Arch::Amdgcn => 1,
+    }
+}
+
+/// Labels for [`arch_code`] values, in code order (feeds
+/// [`crate::trace::ExportMeta::arch_labels`]).
+pub const ARCH_LABELS: [&str; 2] = ["nvptx64", "amdgcn"];
+
+/// Remaining deadline budget in ns at submit time — the `Submit` event's
+/// `c` word. 0 = best-effort; an already-expired deadline clamps to 1 so
+/// "has a deadline" stays distinguishable.
+fn deadline_budget_ns(deadline: Option<Instant>) -> u64 {
+    match deadline {
+        None => 0,
+        Some(d) => d
+            .saturating_duration_since(Instant::now())
+            .as_nanos()
+            .clamp(1, u64::MAX as u128) as u64,
     }
 }
 
@@ -2186,6 +2518,7 @@ fn spawn_stitcher(
     parts: Vec<ShardPart>,
     shared: Arc<Shared>,
     deadline: Option<Instant>,
+    req_id: RequestId,
 ) -> Result<(mpsc::Receiver<Result<OffloadResponse, Error>>, mpsc::Sender<()>), Error> {
     let spec = req.shard.as_ref().expect("sharded request has a spec");
     let buf_meta: Vec<(MapType, usize)> =
@@ -2207,6 +2540,7 @@ fn spawn_stitcher(
                 client,
                 enqueued,
                 deadline,
+                req_id,
             })
         })
         .map_err(|e| Error::Sched(format!("cannot spawn shard stitcher: {e}")))?;
@@ -2222,6 +2556,9 @@ struct StitchAccount {
     /// the request as a whole — shard jobs are skipped at reply time, so
     /// a missed sharded request increments `deadline_miss` exactly once.
     deadline: Option<Instant>,
+    /// The parent request's trace id: the stitcher emits the `Stitch`
+    /// event and (via `record_client`) the request's single `Done`.
+    req_id: RequestId,
 }
 
 /// Wait for all shard responses and assemble the full-request response:
@@ -2261,8 +2598,18 @@ fn stitch(
     // the clients-table lock so contention cannot skew miss judgments.
     let done = Instant::now();
     let max_wait = got.iter().map(|(r, _, _)| r.queue_wait).max().unwrap_or(Duration::ZERO);
+    // Payload: a = shards that reported a result, b = whether the whole
+    // request stitched cleanly.
+    account.shared.tracer.emit(
+        None,
+        Event::new(EventKind::Stitch)
+            .req(account.req_id)
+            .a(got.len() as u64)
+            .b(first_err.is_none() as u64),
+    );
     record_client(
         &account.shared,
+        account.req_id,
         &account.client,
         max_wait,
         done.saturating_duration_since(account.enqueued),
@@ -2342,12 +2689,27 @@ impl Drop for DevicePool {
         // Fail any requests still queued so waiting clients unblock with
         // an error instead of a channel disconnect. (Dropped task jobs
         // disconnect their handles, which also unblocks their waiters.)
+        // Each drained non-shard request gets a terminal `Done {ok: 0}`
+        // so shutdown leaves no open trace spans; drained shard jobs
+        // resolve through their stitcher, which emits the parent's Done.
         let mut q = self.shared.queue.lock().unwrap();
         for job in q.drain() {
-            if let Job::Offload(j) = job {
-                let _ = j
-                    .reply
-                    .send(Err(Error::Sched("pool shut down before the request ran".into())));
+            match job {
+                Job::Offload(j) => {
+                    if !j.is_shard {
+                        self.shared
+                            .tracer
+                            .emit(None, Event::new(EventKind::Done).req(j.req_id));
+                    }
+                    let _ = j
+                        .reply
+                        .send(Err(Error::Sched("pool shut down before the request ran".into())));
+                }
+                Job::Task(t) => {
+                    self.shared
+                        .tracer
+                        .emit(None, Event::new(EventKind::Done).req(t.req_id));
+                }
             }
         }
     }
@@ -2370,7 +2732,7 @@ enum Work {
 fn worker_loop(shared: &Shared, id: usize) {
     let slot = &shared.slots[id];
     loop {
-        let (work, decided) = {
+        let (work, decided, preempted, pinned) = {
             let mut q = shared.queue.lock().unwrap();
             'wait: loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
@@ -2405,7 +2767,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                 if shared.reserved[id].load(Ordering::Relaxed) > 0 {
                     if let Some(job) = q.pop_pinned(id) {
                         shared.reserved[id].fetch_sub(1, Ordering::Relaxed);
-                        break 'wait (Work::Batch(vec![job]), 1);
+                        break 'wait (Work::Batch(vec![job]), 1, false, true);
                     }
                 }
                 let now = Instant::now();
@@ -2438,7 +2800,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                     if preempted {
                         shared.preemptions.fetch_add(1, Ordering::Relaxed);
                     }
-                    break 'wait (work, limit);
+                    break 'wait (work, limit, preempted, false);
                 }
                 q = shared.cv.wait(q).unwrap();
             }
@@ -2449,6 +2811,34 @@ fn worker_loop(shared: &Shared, id: usize) {
         // would leave the rest blocked until the *next* pop even though
         // space exists (the lost-wakeup shape this queue is tested for).
         shared.space.notify_all();
+        // Pop + batch-formation events go to this worker's private ring,
+        // emitted after the queue lock is released. Payload: a = jobs
+        // claimed, c = pinned-claim flag; a pop through the EDF panic
+        // path is `PopPanic`, the DRR rotation is `PopNormal`.
+        if shared.tracer.enabled() {
+            let (rid, count) = match &work {
+                Work::Batch(batch) => (batch[0].req_id, batch.len()),
+                Work::Task(t) => (t.req_id, 1),
+            };
+            let kind = if preempted { EventKind::PopPanic } else { EventKind::PopNormal };
+            shared.tracer.emit(
+                Some(id),
+                Event::new(kind).device(id).req(rid).a(count as u64).c(pinned as u64),
+            );
+            if let Work::Batch(batch) = &work {
+                if batch.len() > 1 {
+                    // Payload: a = batch size, b = shared image key.
+                    shared.tracer.emit(
+                        Some(id),
+                        Event::new(EventKind::BatchFormed)
+                            .device(id)
+                            .req(batch[0].req_id)
+                            .a(batch.len() as u64)
+                            .b(batch[0].key.content),
+                    );
+                }
+            }
+        }
         match work {
             Work::Task(task) => {
                 let queue_wait = task.enqueued.elapsed();
@@ -2500,6 +2890,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                 }
                 record_client(
                     shared,
+                    task.req_id,
                     &task.client,
                     queue_wait,
                     done.saturating_duration_since(task.enqueued),
@@ -2553,9 +2944,20 @@ fn monitor_loop(shared: &Shared) {
                     {
                         slot.health.set_last_probe_ns(now_ns);
                         shared.probes.fetch_add(1, Ordering::Relaxed);
-                        if probe_device(slot).is_ok() {
+                        let probe_ok = probe_device(slot).is_ok();
+                        // Payload: a = probe outcome.
+                        shared.tracer.emit(
+                            None,
+                            Event::new(EventKind::Probe)
+                                .device(slot.id)
+                                .a(probe_ok as u64),
+                        );
+                        if probe_ok {
                             slot.health.readmit();
                             shared.readmissions.fetch_add(1, Ordering::Relaxed);
+                            shared
+                                .tracer
+                                .emit(None, Event::new(EventKind::Readmit).device(slot.id));
                             // The readmitted worker polls its state, but
                             // waiting peers may hold claimable work too.
                             shared.cv.notify_all();
@@ -2643,6 +3045,7 @@ fn quarantine_and_replan(shared: &Shared, device: usize) {
     if !slot.health.quarantine() {
         return;
     }
+    shared.tracer.emit(None, Event::new(EventKind::Quarantine).device(device));
     {
         let mut q = shared.queue.lock().unwrap();
         replan_pinned_locked(shared, device, &mut q);
@@ -2720,6 +3123,8 @@ fn sweep_stranded(shared: &Shared) {
                 if !j.is_shard {
                     record_into(
                         &mut accounts,
+                        &shared.tracer,
+                        j.req_id,
                         &j.req.client,
                         done.saturating_duration_since(j.enqueued),
                         done.saturating_duration_since(j.first_enqueued),
@@ -2745,6 +3150,8 @@ fn sweep_stranded(shared: &Shared) {
                 let sojourn = done.saturating_duration_since(t.enqueued);
                 record_into(
                     &mut accounts,
+                    &shared.tracer,
+                    t.req_id,
                     &t.client,
                     sojourn,
                     sojourn,
@@ -2770,6 +3177,16 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
     let t_busy = Instant::now();
     slot.inflight.fetch_add(n, Ordering::Relaxed);
     slot.health.begin_work(shared.now_ns(), n, Some(batch[0].key.content));
+    // Payload: a = jobs in the launch, b = image key. Tagged with the
+    // leader's request id (followers share the span via BatchFormed).
+    shared.tracer.emit(
+        Some(slot.id),
+        Event::new(EventKind::LaunchStart)
+            .device(slot.id)
+            .req(batch[0].req_id)
+            .a(n as u64)
+            .b(batch[0].key.content),
+    );
     slot.batches.fetch_add(1, Ordering::Relaxed);
     if n > 1 {
         slot.batched_jobs.fetch_add(n as u64, Ordering::Relaxed);
@@ -2838,6 +3255,17 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
     let done = Instant::now();
     slot.busy_ns
         .fetch_add(busy.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    // Payload: a = jobs, b = whether every job in the launch succeeded,
+    // c = device wall time for the launch (ns).
+    shared.tracer.emit(
+        Some(slot.id),
+        Event::new(EventKind::LaunchEnd)
+            .device(slot.id)
+            .req(batch[0].req_id)
+            .a(n as u64)
+            .b(results.iter().all(|r| r.is_ok()) as u64)
+            .c(busy.as_nanos().min(u64::MAX as u128) as u64),
+    );
     // One per-job service observation per batch, feeding the panic-window
     // prediction for this image key. Shard batches are skipped: a shard
     // runs a fraction of the full request under the same content key,
@@ -2887,6 +3315,16 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
                         job.target_device = None;
                         job.enqueued = Instant::now();
                         shared.retries.fetch_add(1, Ordering::Relaxed);
+                        // Same request id, incremented attempt: a =
+                        // attempt number (1-based = devices tried so
+                        // far), device = the device that faulted.
+                        shared.tracer.emit(
+                            Some(slot.id),
+                            Event::new(EventKind::Retry)
+                                .device(slot.id)
+                                .req(job.req_id)
+                                .a(job.tried.len() as u64),
+                        );
                         requeue.push(job);
                         continue;
                     }
@@ -2911,6 +3349,8 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
             if !job.is_shard {
                 record_into(
                     &mut accounts,
+                    &shared.tracer,
+                    job.req_id,
                     &job.req.client,
                     waits[i],
                     done.saturating_duration_since(job.first_enqueued),
@@ -2933,7 +3373,17 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
         let mut q = shared.queue.lock().unwrap();
         for job in requeue {
             shared.queue_gen.fetch_add(1, Ordering::Relaxed);
+            let rid = job.req_id;
+            let is_shard = job.is_shard;
             q.push(Job::Offload(job));
+            // Re-entry into the queue under the same request id.
+            shared.tracer.emit(
+                Some(slot.id),
+                Event::new(EventKind::Enqueue)
+                    .req(rid)
+                    .a(q.len() as u64)
+                    .b(is_shard as u64),
+            );
         }
         drop(q);
         shared.cv.notify_all();
@@ -3232,9 +3682,16 @@ pub struct ClientMetrics {
     pub queue_wait: Summary,
     /// Submit-to-completion sojourn times.
     pub latency: Summary,
-    /// Raw sojourn samples in µs (capped; see
-    /// [`ClientMetrics::latency_p95_us`]).
-    pub latency_samples_us: Vec<f64>,
+    /// Log-bucketed sojourn distribution in µs, covering every
+    /// completion (see [`Histogram`]; backs
+    /// [`ClientMetrics::latency_p95_us`] and merges exactly across
+    /// clients).
+    pub latency_us: Histogram,
+    /// Log-bucketed queue-wait distribution in µs.
+    pub queue_wait_us: Histogram,
+    /// Log-bucketed signed deadline-slack distribution in µs (negative
+    /// = missed); empty when the client never carried a deadline.
+    pub slack_us: Histogram,
     /// Requests that carried a deadline (explicit budget or client SLO).
     pub deadlines: u64,
     /// Deadlined requests that completed past their deadline. Sharded
@@ -3249,14 +3706,19 @@ pub struct ClientMetrics {
 impl ClientMetrics {
     /// Median submit-to-completion sojourn in µs (0 with no samples).
     pub fn latency_p50_us(&self) -> f64 {
-        crate::util::stats::percentile(&self.latency_samples_us, 0.50)
+        self.latency_us.percentile_us(0.50)
     }
 
     /// 95th-percentile sojourn in µs (0 with no samples). Tail latency
     /// is what SLOs are judged on — the SLO bench compares this against
     /// bulk clients' medians.
     pub fn latency_p95_us(&self) -> f64 {
-        crate::util::stats::percentile(&self.latency_samples_us, 0.95)
+        self.latency_us.percentile_us(0.95)
+    }
+
+    /// 99th-percentile sojourn in µs (0 with no samples).
+    pub fn latency_p99_us(&self) -> f64 {
+        self.latency_us.percentile_us(0.99)
     }
 }
 
@@ -3361,7 +3823,7 @@ impl QueueTestHarness {
         let deadline = past_deadline.then(Instant::now);
         let (tx, _rx) = mpsc::channel();
         self.q
-            .push(Job::Offload(make_offload_job(req, tx, pinned.is_some(), pinned, deadline)));
+            .push(Job::Offload(make_offload_job(req, tx, pinned.is_some(), pinned, deadline, 0)));
     }
 
     /// One DRR/EDF pop for the worker of `device_id`; returns
@@ -3595,7 +4057,7 @@ mod tests {
         let mut req = base_request(Affinity::any());
         req.client = client.to_string();
         let (tx, _rx) = mpsc::channel();
-        Job::Offload(make_offload_job(req, tx, target.is_some(), target, deadline))
+        Job::Offload(make_offload_job(req, tx, target.is_some(), target, deadline, 0))
     }
 
     fn pop_client(q: &mut SchedQueue, spec: DeviceSpec, limit: usize) -> Option<String> {
@@ -3881,7 +4343,7 @@ mod tests {
         let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
         let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
         let (tx, rx) = mpsc::channel();
-        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(req, tx, true, Some(0), None))])
+        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(req, tx, true, Some(0), None, 0))])
             .unwrap_or_else(|_| panic!("queue has room"));
         assert_eq!(pool.shared.reserved[0].load(Ordering::Relaxed), 1);
 
@@ -3933,7 +4395,7 @@ mod tests {
         let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
         let (filler, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
         let (ftx, frx) = mpsc::channel();
-        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(filler, ftx, false, None, None))])
+        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(filler, ftx, false, None, None, 0))])
             .unwrap_or_else(|_| panic!("queue has room for the filler"));
 
         let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
@@ -3949,6 +4411,7 @@ mod tests {
                     true,
                     Some(1),
                     None,
+                    0,
                 ))])
                 .expect("bulk enqueue succeeds after the wait");
             });

@@ -122,6 +122,13 @@ impl ServiceEwma {
 /// time, in microseconds. Positive = met with room, negative = missed by
 /// that much. All statistics are finite for any finite inputs (the
 /// deadline-miss accounting tests assert this).
+///
+/// This is the report-level aggregate (count/mean/min/max). Quantiles of
+/// the same samples come from the per-client slack
+/// [`crate::trace::Histogram`] in
+/// [`crate::sched::ClientMetrics::slack_us`], and each judged sample is
+/// also emitted as a `DeadlineJudged` trace event
+/// ([`crate::trace::EventKind::DeadlineJudged`]) when tracing is on.
 #[derive(Debug, Clone, Default)]
 pub struct SlackSummary {
     n: u64,
@@ -139,10 +146,18 @@ impl SlackSummary {
     /// Record one slack sample in seconds (may be negative: a miss).
     /// Non-finite samples are discarded so the aggregates stay finite.
     pub fn record_secs(&mut self, secs: f64) {
-        if !secs.is_finite() {
+        self.record_us(secs * 1e6);
+    }
+
+    /// Record one slack sample in microseconds (may be negative: a
+    /// miss). Non-finite samples are discarded so the aggregates stay
+    /// finite. This is the unit the pool's completion path works in —
+    /// the same value feeds [`crate::trace::Histogram::record_us`] for
+    /// per-client quantiles.
+    pub fn record_us(&mut self, us: f64) {
+        if !us.is_finite() {
             return;
         }
-        let us = secs * 1e6;
         if self.n == 0 {
             self.min_us = us;
             self.max_us = us;
@@ -256,10 +271,14 @@ mod tests {
         assert!((s.avg_us() - 500.0).abs() < 1e-9);
         assert!((s.min_us() - -1000.0).abs() < 1e-9);
         assert!((s.max_us() - 2000.0).abs() < 1e-9);
+        // record_us is the same accumulator in µs directly.
+        s.record_us(2000.0);
+        assert_eq!(s.count(), 3);
+        assert!((s.max_us() - 2000.0).abs() < 1e-9);
         // Aggregates stay finite; garbage is discarded.
         s.record_secs(f64::INFINITY);
         s.record_secs(f64::NAN);
-        assert_eq!(s.count(), 2);
+        assert_eq!(s.count(), 3);
         assert!(s.avg_us().is_finite() && s.min_us().is_finite() && s.max_us().is_finite());
     }
 

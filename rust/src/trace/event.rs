@@ -1,0 +1,255 @@
+//! Typed trace events and their packed record form.
+//!
+//! Every event is a fixed-size POD so the hot path never allocates: a
+//! [`TraceRecord`] is eight `u64` words (global sequence number,
+//! monotonic timestamp, packed kind + device, request id and three
+//! kind-specific payload words). The payload meaning per [`EventKind`]:
+//!
+//! | kind | `a` | `b` | `c` |
+//! |------|-----|-----|-----|
+//! | `Submit` | client id | image key | deadline budget (ns, 0 = none) |
+//! | `Enqueue` | queue depth after push | 1 = shard job | pinned device + 1 (0 = unpinned) |
+//! | `BackpressureWait` | wait (ns) | — | — |
+//! | `PopNormal` | jobs popped | — | 1 = pinned claim |
+//! | `PopPanic` | jobs popped | — | — |
+//! | `BatchFormed` | batch size | image key | — |
+//! | `ShardPlanned` | fan-out | arch code | — |
+//! | `LaunchStart` | jobs in batch | image key | — |
+//! | `LaunchEnd` | jobs in batch | 1 = ok, 0 = faulted | batch wall (ns) |
+//! | `Stitch` | shards stitched | 1 = ok | — |
+//! | `Retry` | attempt (1-based) | — | — |
+//! | `Quarantine` | — | — | — |
+//! | `Probe` | 1 = passed | — | — |
+//! | `Readmit` | — | — | — |
+//! | `DeadlineJudged` | 1 = missed | slack (µs, two's-complement `i64`) | client id |
+//! | `Done` | 1 = ok | sojourn (ns) | client id |
+//!
+//! `Retry`, `Quarantine`, `Probe`, `Readmit`, `LaunchStart`/`LaunchEnd`
+//! carry the device in the record's `device` field; queue-side events
+//! leave it `None`. Client ids index the [`crate::trace::Tracer`]'s
+//! interner table (surfaced by [`crate::trace::TraceSnapshot::clients`]);
+//! arch codes index [`crate::trace::ExportMeta::arch_labels`].
+
+/// Identifier assigned to every accepted request at submit time. `0`
+/// means "no request" (device-lifecycle events such as `Quarantine`).
+/// Shard jobs carry their *parent* request's id; a retried job keeps its
+/// id and bumps the `Retry` attempt counter instead.
+pub type RequestId = u64;
+
+/// The event taxonomy: everything the scheduler does to a request, plus
+/// the device-health lifecycle. Discriminants are stable (they are the
+/// packed wire form inside the ring) — append, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A request was accepted by `submit`/`try_submit`/`run_on`.
+    Submit = 1,
+    /// One job entered the submission queue.
+    Enqueue = 2,
+    /// A submitter blocked on the bounded queue (`queue_cap`).
+    BackpressureWait = 3,
+    /// A worker claimed work through the normal DRR rotation.
+    PopNormal = 4,
+    /// A worker claimed work by EDF panic-window preemption.
+    PopPanic = 5,
+    /// A lead job coalesced followers into a multi-job batch.
+    BatchFormed = 6,
+    /// A shardable request was split at submit time.
+    ShardPlanned = 7,
+    /// A device began executing a batch.
+    LaunchStart = 8,
+    /// A device finished executing a batch.
+    LaunchEnd = 9,
+    /// A stitcher recombined shard responses into the client reply.
+    Stitch = 10,
+    /// A faulted job was requeued for a different device.
+    Retry = 11,
+    /// The health layer took a device out of service.
+    Quarantine = 12,
+    /// A quarantined device was probed.
+    Probe = 13,
+    /// A probe passed and the device was readmitted.
+    Readmit = 14,
+    /// A deadlined request was judged (exactly once) at completion.
+    DeadlineJudged = 15,
+    /// Terminal event: the request's reply was resolved (ok or error).
+    Done = 16,
+}
+
+impl EventKind {
+    /// Decode a packed discriminant; `None` for garbage (a torn ring
+    /// slot), which the drain discards.
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        Some(match v {
+            1 => EventKind::Submit,
+            2 => EventKind::Enqueue,
+            3 => EventKind::BackpressureWait,
+            4 => EventKind::PopNormal,
+            5 => EventKind::PopPanic,
+            6 => EventKind::BatchFormed,
+            7 => EventKind::ShardPlanned,
+            8 => EventKind::LaunchStart,
+            9 => EventKind::LaunchEnd,
+            10 => EventKind::Stitch,
+            11 => EventKind::Retry,
+            12 => EventKind::Quarantine,
+            13 => EventKind::Probe,
+            14 => EventKind::Readmit,
+            15 => EventKind::DeadlineJudged,
+            16 => EventKind::Done,
+            _ => return None,
+        })
+    }
+
+    /// Stable display name (used by the exporters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Submit => "Submit",
+            EventKind::Enqueue => "Enqueue",
+            EventKind::BackpressureWait => "BackpressureWait",
+            EventKind::PopNormal => "PopNormal",
+            EventKind::PopPanic => "PopPanic",
+            EventKind::BatchFormed => "BatchFormed",
+            EventKind::ShardPlanned => "ShardPlanned",
+            EventKind::LaunchStart => "LaunchStart",
+            EventKind::LaunchEnd => "LaunchEnd",
+            EventKind::Stitch => "Stitch",
+            EventKind::Retry => "Retry",
+            EventKind::Quarantine => "Quarantine",
+            EventKind::Probe => "Probe",
+            EventKind::Readmit => "Readmit",
+            EventKind::DeadlineJudged => "DeadlineJudged",
+            EventKind::Done => "Done",
+        }
+    }
+}
+
+/// An event about to be emitted: kind plus the optional device, request
+/// id and payload words. Built with the chained setters so call sites
+/// read as `Event::new(LaunchStart).device(2).req(rid).a(n).b(key)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// What happened.
+    pub kind: EventKind,
+    /// Device involved, when the event is device-scoped.
+    pub device: Option<usize>,
+    /// Request this event belongs to (`0` = none).
+    pub req: RequestId,
+    /// First payload word (see the [`EventKind`] table).
+    pub a: u64,
+    /// Second payload word.
+    pub b: u64,
+    /// Third payload word.
+    pub c: u64,
+}
+
+impl Event {
+    /// A bare event of `kind` with no device, request or payload.
+    pub fn new(kind: EventKind) -> Event {
+        Event { kind, device: None, req: 0, a: 0, b: 0, c: 0 }
+    }
+
+    /// Attach the device id.
+    pub fn device(mut self, d: usize) -> Event {
+        self.device = Some(d);
+        self
+    }
+
+    /// Attach the request id.
+    pub fn req(mut self, r: RequestId) -> Event {
+        self.req = r;
+        self
+    }
+
+    /// Set payload word `a`.
+    pub fn a(mut self, v: u64) -> Event {
+        self.a = v;
+        self
+    }
+
+    /// Set payload word `b`.
+    pub fn b(mut self, v: u64) -> Event {
+        self.b = v;
+        self
+    }
+
+    /// Set payload word `c`.
+    pub fn c(mut self, v: u64) -> Event {
+        self.c = v;
+        self
+    }
+}
+
+/// One drained trace record: an [`Event`] plus its global sequence
+/// number and monotonic timestamp (ns since the tracer's epoch, which is
+/// pool construction). Snapshots are sorted by `(t_ns, seq)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    /// Global emission order (allocated from one atomic counter; ties in
+    /// `t_ns` are broken by `seq`).
+    pub seq: u64,
+    /// Monotonic timestamp, ns since the tracer epoch.
+    pub t_ns: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// Device involved, when device-scoped.
+    pub device: Option<usize>,
+    /// Request id (`0` = none).
+    pub req: RequestId,
+    /// First payload word (see the [`EventKind`] table).
+    pub a: u64,
+    /// Second payload word.
+    pub b: u64,
+    /// Third payload word.
+    pub c: u64,
+}
+
+impl TraceRecord {
+    /// The `DeadlineJudged` slack payload, decoded back to signed µs.
+    pub fn slack_us(&self) -> i64 {
+        self.b as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_through_u8() {
+        for k in 1u8..=16 {
+            let kind = EventKind::from_u8(k).expect("contiguous discriminants");
+            assert_eq!(kind as u8, k);
+            assert!(!kind.name().is_empty());
+        }
+        assert_eq!(EventKind::from_u8(0), None);
+        assert_eq!(EventKind::from_u8(17), None);
+        assert_eq!(EventKind::from_u8(255), None);
+    }
+
+    #[test]
+    fn event_builder_sets_fields() {
+        let e = Event::new(EventKind::LaunchStart).device(3).req(7).a(4).b(0xdead).c(9);
+        assert_eq!(e.kind, EventKind::LaunchStart);
+        assert_eq!(e.device, Some(3));
+        assert_eq!(e.req, 7);
+        assert_eq!((e.a, e.b, e.c), (4, 0xdead, 9));
+    }
+
+    #[test]
+    fn slack_payload_roundtrips_signed() {
+        let mut r = TraceRecord {
+            seq: 0,
+            t_ns: 0,
+            kind: EventKind::DeadlineJudged,
+            device: None,
+            req: 1,
+            a: 1,
+            b: (-1500i64) as u64,
+            c: 0,
+        };
+        assert_eq!(r.slack_us(), -1500);
+        r.b = 2500u64;
+        assert_eq!(r.slack_us(), 2500);
+    }
+}

@@ -1,0 +1,746 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto-loadable), the
+//! line-oriented replay capture, and a dependency-free JSON checker.
+//!
+//! The Chrome export lays the pool out as one process with three kinds
+//! of tracks:
+//!
+//! * one track per device (`B`/`E` duration pairs around every executed
+//!   batch, plus quarantine/probe/readmit instants);
+//! * one `scheduler` track carrying the queue-side instants (`Submit`,
+//!   `Enqueue`, `BackpressureWait`, pops, `ShardPlanned`, `Retry`,
+//!   `Stitch`, `DeadlineJudged`);
+//! * one track per client holding each request's complete span as an
+//!   `X` event from `Submit` to `Done`, tied to the device batches that
+//!   executed it by `s`/`f` flow events.
+//!
+//! Open the file in <https://ui.perfetto.dev> (or `chrome://tracing`)
+//! directly — it is the standard `{"traceEvents": [...]}` envelope.
+//!
+//! [`validate_chrome_trace`] re-parses an export with the hand-rolled
+//! [`parse_json`] (the offline crate set has no serde) and checks the
+//! structural invariants Perfetto needs: well-formed JSON, a
+//! `traceEvents` array, `ph`/`pid`/`tid` on every event, timestamps on
+//! every non-metadata event, and strictly matched `B`/`E` pairs per
+//! track. CI runs it over the smoke-mode bench trace via
+//! `omprt trace-validate`.
+
+use super::event::{EventKind, TraceRecord};
+use super::metrics::json_escape;
+use std::collections::BTreeMap;
+
+/// Labels needed to render a trace for humans: where devices, clients
+/// and shard-plan arch codes get their names.
+#[derive(Debug, Clone, Default)]
+pub struct ExportMeta {
+    /// Process name shown in the trace viewer (e.g. `omprt pool`).
+    pub process: String,
+    /// Per-device track labels, indexed by device id.
+    pub device_labels: Vec<String>,
+    /// Client interner table (from [`super::TraceSnapshot::clients`]).
+    pub clients: Vec<String>,
+    /// Arch names indexed by the `ShardPlanned` arch code.
+    pub arch_labels: Vec<String>,
+}
+
+impl ExportMeta {
+    fn client(&self, id: u64) -> &str {
+        self.clients.get(id as usize).map_or("?", |s| s.as_str())
+    }
+
+    fn arch(&self, code: u64) -> &str {
+        self.arch_labels.get(code as usize).map_or("?", |s| s.as_str())
+    }
+}
+
+const PID: u64 = 1;
+const SCHED_TID: u64 = 100;
+const CLIENT_TID_BASE: u64 = 200;
+
+fn ts_us(t_ns: u64) -> String {
+    format!("{:.3}", t_ns as f64 / 1e3)
+}
+
+fn device_tid(dev: usize) -> u64 {
+    1 + dev as u64
+}
+
+fn meta_event(out: &mut Vec<String>, name: &str, tid: u64, label: &str) {
+    out.push(format!(
+        "{{\"name\": \"{}\", \"ph\": \"M\", \"pid\": {PID}, \"tid\": {tid}, \
+         \"args\": {{\"name\": \"{}\"}}}}",
+        json_escape(name),
+        json_escape(label)
+    ));
+}
+
+/// Render a drained record set as Chrome trace-event JSON. Records must
+/// be time-sorted (as [`super::Tracer::snapshot`] returns them).
+pub fn chrome_trace_json(records: &[TraceRecord], meta: &ExportMeta) -> String {
+    let mut ev: Vec<String> = Vec::new();
+    let process = if meta.process.is_empty() { "omprt pool" } else { &meta.process };
+    meta_event(&mut ev, "process_name", 0, process);
+    for (d, label) in meta.device_labels.iter().enumerate() {
+        meta_event(&mut ev, "thread_name", device_tid(d), label);
+    }
+    meta_event(&mut ev, "thread_name", SCHED_TID, "scheduler");
+    for (c, name) in meta.clients.iter().enumerate() {
+        let label = if name.is_empty() { "requests:(default)".to_string() } else { format!("requests:{name}") };
+        meta_event(&mut ev, "thread_name", CLIENT_TID_BASE + c as u64, &label);
+    }
+
+    // Pass 1: request spans (Submit → Done) as X events per client
+    // track, with an `s` flow origin at submit time.
+    let mut submits: BTreeMap<u64, &TraceRecord> = BTreeMap::new();
+    let mut dones: BTreeMap<u64, &TraceRecord> = BTreeMap::new();
+    for r in records {
+        match r.kind {
+            EventKind::Submit => {
+                submits.entry(r.req).or_insert(r);
+            }
+            EventKind::Done => {
+                dones.insert(r.req, r);
+            }
+            _ => {}
+        }
+    }
+    for (req, sub) in &submits {
+        let tid = CLIENT_TID_BASE + sub.a;
+        match dones.get(req) {
+            Some(done) => {
+                let dur_ns = done.t_ns.saturating_sub(sub.t_ns);
+                let ok = done.a == 1;
+                ev.push(format!(
+                    "{{\"name\": \"req {req}\", \"cat\": \"request\", \"ph\": \"X\", \
+                     \"pid\": {PID}, \"tid\": {tid}, \"ts\": {}, \"dur\": {}, \
+                     \"args\": {{\"req\": {req}, \"client\": \"{}\", \"ok\": {ok}, \
+                     \"key\": \"{:#x}\"}}}}",
+                    ts_us(sub.t_ns),
+                    ts_us(dur_ns),
+                    json_escape(meta.client(sub.a)),
+                    sub.b
+                ));
+            }
+            None => {
+                // Incomplete span (snapshot taken mid-flight): an
+                // instant, so the B/E discipline stays intact.
+                ev.push(format!(
+                    "{{\"name\": \"req {req} (in flight)\", \"cat\": \"request\", \
+                     \"ph\": \"i\", \"s\": \"t\", \"pid\": {PID}, \"tid\": {tid}, \
+                     \"ts\": {}, \"args\": {{\"req\": {req}}}}}",
+                    ts_us(sub.t_ns)
+                ));
+            }
+        }
+        ev.push(format!(
+            "{{\"name\": \"req\", \"cat\": \"flow\", \"ph\": \"s\", \"id\": {req}, \
+             \"pid\": {PID}, \"tid\": {tid}, \"ts\": {}}}",
+            ts_us(sub.t_ns)
+        ));
+    }
+
+    // Pass 2: per-device batch spans. One worker per device executes
+    // sequentially, so Start/End pair up in order; an unpaired Start
+    // (snapshot mid-batch, or End lost to ring overwrite) degrades to an
+    // instant so B/E always match.
+    let ndev = records
+        .iter()
+        .filter_map(|r| r.device)
+        .max()
+        .map_or(meta.device_labels.len(), |m| (m + 1).max(meta.device_labels.len()));
+    for dev in 0..ndev {
+        let tid = device_tid(dev);
+        let mut open: Option<&TraceRecord> = None;
+        for r in records.iter().filter(|r| r.device == Some(dev)) {
+            match r.kind {
+                EventKind::LaunchStart => {
+                    if let Some(stale) = open.take() {
+                        launch_instant(&mut ev, stale, tid, "launch (no end)");
+                    }
+                    open = Some(r);
+                }
+                EventKind::LaunchEnd => {
+                    if let Some(start) = open.take() {
+                        ev.push(format!(
+                            "{{\"name\": \"batch x{}\", \"cat\": \"launch\", \"ph\": \"B\", \
+                             \"pid\": {PID}, \"tid\": {tid}, \"ts\": {}, \
+                             \"args\": {{\"req\": {}, \"jobs\": {}, \"key\": \"{:#x}\"}}}}",
+                            start.a,
+                            ts_us(start.t_ns),
+                            start.req,
+                            start.a,
+                            start.b
+                        ));
+                        ev.push(format!(
+                            "{{\"name\": \"batch x{}\", \"cat\": \"launch\", \"ph\": \"E\", \
+                             \"pid\": {PID}, \"tid\": {tid}, \"ts\": {}, \
+                             \"args\": {{\"ok\": {}, \"wall_ns\": {}}}}}",
+                            start.a,
+                            ts_us(r.t_ns.max(start.t_ns)),
+                            r.b == 1,
+                            r.c
+                        ));
+                        // Flow target: tie the request span to the batch
+                        // that executed its lead job.
+                        if start.req != 0 {
+                            ev.push(format!(
+                                "{{\"name\": \"req\", \"cat\": \"flow\", \"ph\": \"f\", \
+                                 \"bp\": \"e\", \"id\": {}, \"pid\": {PID}, \"tid\": {tid}, \
+                                 \"ts\": {}}}",
+                                start.req,
+                                ts_us(start.t_ns)
+                            ));
+                        }
+                    }
+                }
+                EventKind::Quarantine | EventKind::Probe | EventKind::Readmit => {
+                    launch_instant(&mut ev, r, tid, r.kind.name());
+                }
+                _ => {}
+            }
+        }
+        if let Some(stale) = open {
+            launch_instant(&mut ev, stale, tid, "launch (in flight)");
+        }
+    }
+
+    // Pass 3: queue-side instants on the scheduler track.
+    for r in records {
+        let name = match r.kind {
+            EventKind::Submit
+            | EventKind::Done
+            | EventKind::LaunchStart
+            | EventKind::LaunchEnd
+            | EventKind::Quarantine
+            | EventKind::Probe
+            | EventKind::Readmit => continue,
+            EventKind::ShardPlanned => {
+                format!("ShardPlanned x{} ({})", r.a, meta.arch(r.b))
+            }
+            k => k.name().to_string(),
+        };
+        ev.push(format!(
+            "{{\"name\": \"{}\", \"cat\": \"queue\", \"ph\": \"i\", \"s\": \"t\", \
+             \"pid\": {PID}, \"tid\": {SCHED_TID}, \"ts\": {}, \
+             \"args\": {{\"req\": {}, \"a\": {}, \"b\": {}, \"c\": {}}}}}",
+            json_escape(&name),
+            ts_us(r.t_ns),
+            r.req,
+            r.a,
+            r.b,
+            r.c
+        ));
+    }
+
+    format!(
+        "{{\"displayTimeUnit\": \"ms\",\n\"traceEvents\": [\n{}\n]}}\n",
+        ev.join(",\n")
+    )
+}
+
+fn launch_instant(ev: &mut Vec<String>, r: &TraceRecord, tid: u64, name: &str) {
+    ev.push(format!(
+        "{{\"name\": \"{}\", \"cat\": \"device\", \"ph\": \"i\", \"s\": \"t\", \
+         \"pid\": {PID}, \"tid\": {tid}, \"ts\": {}, \"args\": {{\"req\": {}, \"a\": {}}}}}",
+        json_escape(name),
+        ts_us(r.t_ns),
+        r.req,
+        r.a
+    ));
+}
+
+/// Render the replay capture: one line per accepted request with
+/// everything a replay driver needs to re-issue the same workload shape
+/// — client, image key, shard fan-out + arch, deadline budget and the
+/// original submit timestamp (µs since pool start, for paced replay).
+pub fn capture_text(records: &[TraceRecord], meta: &ExportMeta) -> String {
+    let mut shard: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+    for r in records {
+        if r.kind == EventKind::ShardPlanned {
+            shard.insert(r.req, (r.a, r.b));
+        }
+    }
+    let mut out = String::from("# omprt-capture v1\n");
+    out.push_str("# req t_us client key deadline_us shards arch\n");
+    for r in records {
+        if r.kind != EventKind::Submit {
+            continue;
+        }
+        let client = meta.client(r.a);
+        let client = if client.is_empty() {
+            "-".to_string()
+        } else {
+            client.replace(char::is_whitespace, "_")
+        };
+        let deadline = if r.c == 0 {
+            "-".to_string()
+        } else {
+            format!("{}", r.c / 1_000)
+        };
+        let (shards, arch) = match shard.get(&r.req) {
+            Some(&(fanout, code)) => (fanout, meta.arch(code).to_string()),
+            None => (1, "-".to_string()),
+        };
+        out.push_str(&format!(
+            "req={} t_us={} client={} key={:#x} deadline_us={} shards={} arch={}\n",
+            r.req,
+            ts_us(r.t_ns),
+            client,
+            r.b,
+            deadline,
+            shards,
+            arch
+        ));
+    }
+    out
+}
+
+/// A parsed JSON value — the minimal tree the validator (and tests)
+/// need; the offline crate set has no serde.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any number (parsed as `f64`).
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<JsonValue>),
+    /// An object, field order preserved.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Field lookup on an object (`None` for other variants).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The string payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload, if this is a number.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> String {
+        format!("JSON error at byte {}: {msg}", self.pos)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", b as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected `{}`", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: JsonValue) -> Result<JsonValue, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{lit}`")))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|_| self.err("bad utf8"))?;
+        text.parse::<f64>()
+            .map(JsonValue::Num)
+            .map_err(|_| self.err(&format!("bad number `{text}`")))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            if self.pos + 4 >= self.bytes.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
+                                    .map_err(|_| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            // Surrogates (paired or lone) degrade to the
+                            // replacement char — the validator only needs
+                            // structure, not full fidelity.
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar.
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("bad utf8"))?;
+                    let ch = rest.chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                _ => return Err(self.err("expected `,` or `]`")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(fields));
+                }
+                _ => return Err(self.err("expected `,` or `}`")),
+            }
+        }
+    }
+}
+
+/// Parse a JSON document (trailing whitespace allowed, trailing garbage
+/// rejected).
+pub fn parse_json(input: &str) -> Result<JsonValue, String> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing garbage"));
+    }
+    Ok(v)
+}
+
+/// Validate a Chrome trace-event export: well-formed JSON, a
+/// `traceEvents` array, `ph`/`pid`/`tid` on every event, a `ts` on every
+/// non-metadata event, and strictly matched `B`/`E` pairs per
+/// `(pid, tid)` track (checked in timestamp order). Returns the event
+/// count.
+pub fn validate_chrome_trace(json: &str) -> Result<usize, String> {
+    let root = parse_json(json)?;
+    let events = match root.get("traceEvents") {
+        Some(JsonValue::Arr(events)) => events,
+        _ => return Err("missing `traceEvents` array".to_string()),
+    };
+    // (pid, tid) -> [(ts, is_begin, file order)]
+    let mut tracks: BTreeMap<(i64, i64), Vec<(f64, bool, usize)>> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| format!("event {i}: missing `ph`"))?;
+        let pid = e
+            .get("pid")
+            .and_then(JsonValue::as_num)
+            .ok_or_else(|| format!("event {i}: missing `pid`"))? as i64;
+        let tid = e
+            .get("tid")
+            .and_then(JsonValue::as_num)
+            .ok_or_else(|| format!("event {i}: missing `tid`"))? as i64;
+        let ts = e.get("ts").and_then(JsonValue::as_num);
+        if ph != "M" && ts.is_none() {
+            return Err(format!("event {i}: `{ph}` event without `ts`"));
+        }
+        match ph {
+            "B" => tracks.entry((pid, tid)).or_default().push((ts.unwrap(), true, i)),
+            "E" => tracks.entry((pid, tid)).or_default().push((ts.unwrap(), false, i)),
+            _ => {}
+        }
+    }
+    for ((pid, tid), mut evs) in tracks {
+        evs.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap().then(x.2.cmp(&y.2)));
+        let mut depth: i64 = 0;
+        for (ts, is_b, _) in evs {
+            if is_b {
+                depth += 1;
+            } else {
+                depth -= 1;
+                if depth < 0 {
+                    return Err(format!(
+                        "track pid={pid} tid={tid}: `E` at ts={ts} without a matching `B`"
+                    ));
+                }
+            }
+        }
+        if depth != 0 {
+            return Err(format!("track pid={pid} tid={tid}: {depth} unclosed `B` event(s)"));
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::{Event, EventKind};
+    use super::super::sink::Tracer;
+    use super::*;
+
+    fn sample_meta() -> ExportMeta {
+        ExportMeta {
+            process: "omprt pool".to_string(),
+            device_labels: vec!["dev0 portable:nvptx64".to_string(), "dev1 legacy:amdgcn".to_string()],
+            clients: vec!["".to_string(), "bulk".to_string()],
+            arch_labels: vec!["nvptx64".to_string(), "amdgcn".to_string()],
+        }
+    }
+
+    /// A plausible two-request trace: one plain request batch-executed
+    /// on dev0, one sharded request split over both devices.
+    fn sample_records() -> Vec<TraceRecord> {
+        let t = Tracer::new(true, 1024, 2);
+        let r1 = t.next_request_id();
+        let r2 = t.next_request_id();
+        t.emit_at(None, 100, Event::new(EventKind::Submit).req(r1).a(1).b(0xabc).c(250_000_000));
+        t.emit_at(None, 150, Event::new(EventKind::Enqueue).req(r1).a(1));
+        t.emit_at(None, 200, Event::new(EventKind::Submit).req(r2).a(0).b(0xdef));
+        t.emit_at(None, 210, Event::new(EventKind::ShardPlanned).req(r2).a(2).b(0));
+        t.emit_at(None, 220, Event::new(EventKind::Enqueue).req(r2).a(2).b(1).c(1));
+        t.emit_at(None, 225, Event::new(EventKind::Enqueue).req(r2).a(3).b(1).c(2));
+        t.emit_at(Some(0), 300, Event::new(EventKind::PopNormal).device(0).req(r1).a(1));
+        t.emit_at(Some(0), 310, Event::new(EventKind::LaunchStart).device(0).req(r1).a(1).b(0xabc));
+        t.emit_at(Some(0), 400, Event::new(EventKind::LaunchEnd).device(0).req(r1).a(1).b(1).c(90));
+        t.emit_at(None, 420, Event::new(EventKind::DeadlineJudged).req(r1).a(0).b(1000).c(1));
+        t.emit_at(None, 430, Event::new(EventKind::Done).req(r1).a(1).b(330).c(1));
+        t.emit_at(Some(0), 500, Event::new(EventKind::LaunchStart).device(0).req(r2).a(1).b(0xdef));
+        t.emit_at(Some(0), 560, Event::new(EventKind::LaunchEnd).device(0).req(r2).a(1).b(1).c(60));
+        t.emit_at(Some(1), 505, Event::new(EventKind::LaunchStart).device(1).req(r2).a(1).b(0xdef));
+        t.emit_at(Some(1), 590, Event::new(EventKind::LaunchEnd).device(1).req(r2).a(1).b(1).c(85));
+        t.emit_at(None, 600, Event::new(EventKind::Stitch).req(r2).a(2).b(1));
+        t.emit_at(None, 610, Event::new(EventKind::Done).req(r2).a(1).b(410));
+        t.snapshot().records
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_matched_pairs() {
+        let records = sample_records();
+        let json = chrome_trace_json(&records, &sample_meta());
+        let n = validate_chrome_trace(&json).expect("export must validate");
+        assert!(n > records.len() / 2, "export carries a useful event count: {n}");
+        // Both complete request spans render as X events.
+        assert_eq!(json.matches("\"ph\": \"X\"").count(), 2);
+        // Three executed batches → three B/E pairs.
+        assert_eq!(json.matches("\"ph\": \"B\"").count(), 3);
+        assert_eq!(json.matches("\"ph\": \"E\"").count(), 3);
+        // Flow events tie submits to launches.
+        assert_eq!(json.matches("\"ph\": \"s\"").count(), 2);
+        assert_eq!(json.matches("\"ph\": \"f\"").count(), 3);
+        assert!(json.contains("ShardPlanned x2 (nvptx64)"), "{json}");
+    }
+
+    #[test]
+    fn incomplete_span_degrades_to_instants_and_still_validates() {
+        let t = Tracer::new(true, 64, 1);
+        let r = t.next_request_id();
+        t.emit_at(None, 10, Event::new(EventKind::Submit).req(r).a(0).b(1));
+        t.emit_at(Some(0), 20, Event::new(EventKind::LaunchStart).device(0).req(r).a(1).b(1));
+        // No LaunchEnd, no Done: mid-flight snapshot.
+        let json = chrome_trace_json(&t.snapshot().records, &sample_meta());
+        validate_chrome_trace(&json).expect("mid-flight snapshot still validates");
+        assert!(json.contains("in flight"), "{json}");
+        assert_eq!(json.matches("\"ph\": \"B\"").count(), 0);
+    }
+
+    #[test]
+    fn capture_lists_accepted_requests_with_shard_and_deadline() {
+        let records = sample_records();
+        let text = capture_text(&records, &sample_meta());
+        assert!(text.starts_with("# omprt-capture v1\n"), "{text}");
+        let lines: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
+        assert_eq!(lines.len(), 2, "one line per accepted request:\n{text}");
+        assert!(
+            lines[0].contains("client=bulk")
+                && lines[0].contains("deadline_us=250000")
+                && lines[0].contains("shards=1")
+                && lines[0].contains("key=0xabc"),
+            "{}",
+            lines[0]
+        );
+        assert!(
+            lines[1].contains("client=-")
+                && lines[1].contains("deadline_us=-")
+                && lines[1].contains("shards=2")
+                && lines[1].contains("arch=nvptx64"),
+            "{}",
+            lines[1]
+        );
+    }
+
+    #[test]
+    fn parser_accepts_valid_documents() {
+        let v = parse_json(r#"{"a": [1, -2.5e3, "x\n\"yA"], "b": {"c": true, "d": null}}"#)
+            .unwrap();
+        assert_eq!(
+            v.get("a"),
+            Some(&JsonValue::Arr(vec![
+                JsonValue::Num(1.0),
+                JsonValue::Num(-2500.0),
+                JsonValue::Str("x\n\"yA".to_string()),
+            ]))
+        );
+        assert_eq!(v.get("b").and_then(|b| b.get("c")), Some(&JsonValue::Bool(true)));
+        assert_eq!(v.get("b").and_then(|b| b.get("d")), Some(&JsonValue::Null));
+        assert_eq!(parse_json("[]").unwrap(), JsonValue::Arr(vec![]));
+        assert_eq!(parse_json(" {} ").unwrap(), JsonValue::Obj(vec![]));
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        for bad in ["", "{", "[1,", "{\"a\" 1}", "tru", "1 2", "\"unterminated", "{]}"] {
+            assert!(parse_json(bad).is_err(), "must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn validator_rejects_unbalanced_pairs() {
+        let unbalanced = r#"{"traceEvents": [
+            {"name": "x", "ph": "B", "pid": 1, "tid": 1, "ts": 1.0},
+            {"name": "x", "ph": "B", "pid": 1, "tid": 1, "ts": 2.0},
+            {"name": "x", "ph": "E", "pid": 1, "tid": 1, "ts": 3.0}
+        ]}"#;
+        let err = validate_chrome_trace(unbalanced).unwrap_err();
+        assert!(err.contains("unclosed"), "{err}");
+        let orphan = r#"{"traceEvents": [
+            {"name": "x", "ph": "E", "pid": 1, "tid": 1, "ts": 1.0}
+        ]}"#;
+        let err = validate_chrome_trace(orphan).unwrap_err();
+        assert!(err.contains("without a matching"), "{err}");
+        // Per-track isolation: pairs on different tids don't cancel.
+        let cross = r#"{"traceEvents": [
+            {"name": "x", "ph": "B", "pid": 1, "tid": 1, "ts": 1.0},
+            {"name": "x", "ph": "E", "pid": 1, "tid": 2, "ts": 2.0}
+        ]}"#;
+        assert!(validate_chrome_trace(cross).is_err());
+        // Missing required keys.
+        assert!(validate_chrome_trace(r#"{"traceEvents": [{"pid": 1, "tid": 1}]}"#).is_err());
+        assert!(
+            validate_chrome_trace(r#"{"traceEvents": [{"ph": "i", "pid": 1, "tid": 1}]}"#)
+                .is_err(),
+            "non-metadata event without ts must fail"
+        );
+        assert!(validate_chrome_trace(r#"{"notTraceEvents": []}"#).is_err());
+    }
+
+    #[test]
+    fn validator_accepts_metadata_without_ts() {
+        let ok = r#"{"traceEvents": [
+            {"name": "process_name", "ph": "M", "pid": 1, "tid": 0, "args": {"name": "p"}}
+        ]}"#;
+        assert_eq!(validate_chrome_trace(ok).unwrap(), 1);
+    }
+}

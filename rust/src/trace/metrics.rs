@@ -1,0 +1,430 @@
+//! Log-bucketed histograms and the named-metrics registry.
+//!
+//! [`Histogram`] replaces the pool's old capped-sample latency rings
+//! (`latency_samples_us`): a fixed 129-bucket power-of-two layout over
+//! signed nanosecond magnitudes, so recording is O(1) with no
+//! allocation, percentiles are **exact within a bucket** (the reported
+//! quantile lands in the same factor-of-two bucket as the true one,
+//! clamped to the observed min/max), histograms **merge losslessly**
+//! across clients, and — unlike a sliding sample window — the quantiles
+//! cover the whole run instead of the most recent 8192 samples.
+//! Negative support exists for signed deadline slack (negative = miss).
+//!
+//! [`MetricsRegistry`] is the export surface: named counters, gauges and
+//! histograms collected from a pool snapshot and rendered as the
+//! `--metrics-json` dump.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Power-of-two histogram over signed values measured in microseconds
+/// (stored with nanosecond bucketing): bucket `pos[i]` counts magnitudes
+/// in `[2^i, 2^(i+1))` ns, `neg` mirrors that for negative values, plus
+/// a dedicated zero bucket.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    zero: u64,
+    pos: [u64; 64],
+    neg: [u64; 64],
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            zero: 0,
+            pos: [0; 64],
+            neg: [0; 64],
+            count: 0,
+            sum_us: 0.0,
+            min_us: 0.0,
+            max_us: 0.0,
+        }
+    }
+
+    /// Record one signed sample in microseconds. Non-finite samples are
+    /// discarded so aggregates stay finite.
+    pub fn record_us(&mut self, us: f64) {
+        if !us.is_finite() {
+            return;
+        }
+        if self.count == 0 {
+            self.min_us = us;
+            self.max_us = us;
+        } else {
+            self.min_us = self.min_us.min(us);
+            self.max_us = self.max_us.max(us);
+        }
+        self.count += 1;
+        self.sum_us += us;
+        // Clamp to i64 ns; magnitudes beyond ~292 years saturate into
+        // the top bucket rather than wrapping.
+        let ns = (us * 1e3).clamp(i64::MIN as f64, i64::MAX as f64) as i64;
+        if ns == 0 {
+            self.zero += 1;
+        } else if ns > 0 {
+            self.pos[63 - (ns as u64).leading_zeros() as usize] += 1;
+        } else {
+            self.neg[63 - (ns.unsigned_abs()).leading_zeros() as usize] += 1;
+        }
+    }
+
+    /// Record one (non-negative) duration sample.
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    /// Merge another histogram into this one (lossless: bucket counts
+    /// add, extrema combine).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.zero += other.zero;
+        for i in 0..64 {
+            self.pos[i] += other.pos[i];
+            self.neg[i] += other.neg[i];
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean in microseconds (0 when empty).
+    pub fn avg_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Smallest (most negative) sample in microseconds.
+    pub fn min_us(&self) -> f64 {
+        self.min_us
+    }
+
+    /// Largest sample in microseconds.
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Nearest-rank quantile in microseconds, `q` in `[0, 1]`. The
+    /// result is the midpoint of the bucket holding the ranked sample,
+    /// clamped to the observed `[min, max]` — exact within a
+    /// factor-of-two bucket. Empty histograms yield 0.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut cum = 0u64;
+        // Ascending order: most-negative buckets first, then zero, then
+        // positive buckets.
+        for i in (0..64).rev() {
+            cum += self.neg[i];
+            if cum > rank {
+                return (-bucket_mid_us(i)).clamp(self.min_us, self.max_us);
+            }
+        }
+        cum += self.zero;
+        if cum > rank {
+            return 0.0f64.clamp(self.min_us, self.max_us);
+        }
+        for i in 0..64 {
+            cum += self.pos[i];
+            if cum > rank {
+                return bucket_mid_us(i).clamp(self.min_us, self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// JSON object fragment (`{"count":..,"avg_us":..,...}`) used by the
+    /// registry dump.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"count\": {}, \"avg_us\": {:.3}, \"min_us\": {:.3}, \"max_us\": {:.3}, \
+             \"p50_us\": {:.3}, \"p95_us\": {:.3}, \"p99_us\": {:.3}}}",
+            self.count,
+            self.avg_us(),
+            self.min_us(),
+            self.max_us(),
+            self.percentile_us(0.50),
+            self.percentile_us(0.95),
+            self.percentile_us(0.99),
+        )
+    }
+}
+
+/// Midpoint of positive bucket `i` (`[2^i, 2^(i+1))` ns) in µs.
+fn bucket_mid_us(i: usize) -> f64 {
+    1.5 * (i as f64).exp2() / 1e3
+}
+
+/// Escape a string for embedding inside a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Named counters, gauges and histograms: the pool's metrics export
+/// surface, rendered as the `--metrics-json` dump. Built fresh from a
+/// [`crate::sched::PoolMetrics`] snapshot by
+/// [`crate::sched::DevicePool::metrics_registry`].
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Set a named counter.
+    pub fn set_counter(&mut self, name: &str, v: u64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
+    /// Set a named gauge.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Set a named histogram.
+    pub fn set_histogram(&mut self, name: &str, h: Histogram) {
+        self.histograms.insert(name.to_string(), h);
+    }
+
+    /// Look up a counter.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    /// Look up a gauge.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Look up a histogram.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Number of named metrics of all kinds.
+    pub fn len(&self) -> usize {
+        self.counters.len() + self.gauges.len() + self.histograms.len()
+    }
+
+    /// Whether the registry is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render the whole registry as a JSON document (hand-rolled; the
+    /// offline crate set has no serde).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"counters\": {");
+        let mut first = true;
+        for (k, v) in &self.counters {
+            out.push_str(if first { "\n" } else { ",\n" });
+            out.push_str(&format!("    \"{}\": {}", json_escape(k), v));
+            first = false;
+        }
+        out.push_str(if first { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"gauges\": {");
+        first = true;
+        for (k, v) in &self.gauges {
+            let v = if v.is_finite() { *v } else { 0.0 };
+            out.push_str(if first { "\n" } else { ",\n" });
+            out.push_str(&format!("    \"{}\": {:.4}", json_escape(k), v));
+            first = false;
+        }
+        out.push_str(if first { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"histograms\": {");
+        first = true;
+        for (k, h) in &self.histograms {
+            out.push_str(if first { "\n" } else { ",\n" });
+            out.push_str(&format!("    \"{}\": {}", json_escape(k), h.to_json()));
+            first = false;
+        }
+        out.push_str(if first { "}\n}\n" } else { "\n  }\n}\n" });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.avg_us(), 0.0);
+        assert_eq!(h.percentile_us(0.5), 0.0);
+    }
+
+    #[test]
+    fn percentiles_are_exact_within_bucket() {
+        let mut h = Histogram::new();
+        for v in 1..=1000 {
+            h.record_us(v as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.avg_us() - 500.5).abs() < 1e-6);
+        for (q, truth) in [(0.5, 500.0), (0.95, 950.0), (0.99, 990.0)] {
+            let got = h.percentile_us(q);
+            // Same power-of-two bucket as the true quantile: within 2x
+            // either way.
+            assert!(
+                got >= truth / 2.0 && got <= truth * 2.0,
+                "p{q}: got {got}, true {truth}"
+            );
+        }
+        // Quantiles are monotone in q.
+        assert!(h.percentile_us(0.5) <= h.percentile_us(0.95));
+        assert!(h.percentile_us(0.95) <= h.percentile_us(0.99));
+        assert!(h.percentile_us(0.99) <= h.percentile_us(1.0));
+        assert_eq!(h.percentile_us(1.0), 1000.0, "p100 clamps to the observed max");
+        assert_eq!(h.percentile_us(0.0), 1.0, "p0 clamps to the observed min");
+    }
+
+    #[test]
+    fn signed_samples_order_correctly() {
+        let mut h = Histogram::new();
+        h.record_us(-5000.0); // a 5ms miss
+        h.record_us(-100.0);
+        h.record_us(0.0);
+        h.record_us(2000.0);
+        h.record_us(40000.0);
+        assert_eq!(h.count(), 5);
+        assert!(h.percentile_us(0.0) < 0.0, "p0 is the worst miss");
+        assert!((h.min_us() - -5000.0).abs() < 1e-9);
+        assert!((h.max_us() - 40000.0).abs() < 1e-9);
+        assert!(h.percentile_us(1.0) > 0.0);
+        // Median of {-5000,-100,0,2000,40000} is 0.
+        assert_eq!(h.percentile_us(0.5), 0.0);
+        // Garbage discarded.
+        h.record_us(f64::NAN);
+        h.record_us(f64::INFINITY);
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn merge_is_lossless() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for v in 1..=100 {
+            let us = (v * 17) as f64;
+            if v % 2 == 0 {
+                a.record_us(us);
+            } else {
+                b.record_us(us);
+            }
+            whole.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min_us(), whole.min_us());
+        assert_eq!(a.max_us(), whole.max_us());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(a.percentile_us(q), whole.percentile_us(q), "q={q}");
+        }
+        // Merge into empty adopts.
+        let mut c = Histogram::new();
+        c.merge(&a);
+        assert_eq!(c.count(), a.count());
+        // Merging an empty histogram is a no-op.
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), whole.count());
+    }
+
+    #[test]
+    fn duration_recording_lands_in_microseconds() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(1500));
+        assert_eq!(h.count(), 1);
+        assert!((h.avg_us() - 1500.0).abs() < 1e-6);
+        let p = h.percentile_us(0.5);
+        assert!((1500.0 / 2.0..=1500.0).contains(&p), "single sample clamps to max: {p}");
+    }
+
+    #[test]
+    fn registry_json_is_well_formed() {
+        let mut reg = MetricsRegistry::new();
+        reg.set_counter("pool.completed", 42);
+        reg.set_counter("pool.failed", 0);
+        reg.set_gauge("pool.occupancy", 0.75);
+        let mut h = Histogram::new();
+        h.record_us(100.0);
+        reg.set_histogram("client.\"x\".latency", h);
+        assert_eq!(reg.len(), 4);
+        assert!(!reg.is_empty());
+        assert_eq!(reg.counter("pool.completed"), Some(42));
+        assert_eq!(reg.gauge("pool.occupancy"), Some(0.75));
+        assert!(reg.histogram("client.\"x\".latency").is_some());
+        let json = reg.to_json();
+        // The hand-rolled dump must parse with our own checker.
+        let v = crate::trace::parse_json(&json).expect("registry JSON parses");
+        match v {
+            crate::trace::JsonValue::Obj(fields) => {
+                let keys: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+                assert!(keys.contains(&"counters"));
+                assert!(keys.contains(&"gauges"));
+                assert!(keys.contains(&"histograms"));
+            }
+            other => panic!("registry dump must be an object, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_registry_json_parses() {
+        let json = MetricsRegistry::new().to_json();
+        crate::trace::parse_json(&json).expect("empty registry JSON parses");
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("a\nb\tc"), "a\\nb\\tc");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,42 @@
+//! `trace` — structured event tracing and metrics export for the device
+//! pool.
+//!
+//! The scheduler's five policy layers (batching, sharding, DRR
+//! fairness, EDF/SLO, health) interact in ways aggregate counters can't
+//! show. This subsystem records *what the scheduler actually did*, per
+//! request, on a timeline:
+//!
+//! * every accepted request gets a [`RequestId`] at submit; workers, the
+//!   queue, the stitchers, the health monitor and the retry path emit
+//!   typed [`Event`]s ([`EventKind`] is the taxonomy) carrying that id —
+//!   shard jobs carry the parent's id, retries reuse the id with an
+//!   incremented attempt;
+//! * events land in fixed-capacity [`ring::TraceRing`]s — one per device
+//!   worker plus a few shared stripes — as seqno + monotonic-timestamp
+//!   POD records, with no allocation or locking on the hot path; the
+//!   [`Tracer`] gates emission at runtime (a disabled tracer costs one
+//!   branch) and drains rings on demand into a [`TraceSnapshot`];
+//! * [`chrome_trace_json`] renders a snapshot as Perfetto-loadable
+//!   Chrome trace-event JSON (devices as tracks, request spans as flow
+//!   events; `--trace-out` on `omprt pool` / `omprt bench --pool`);
+//!   [`capture_text`] renders the compact replay capture (client, image
+//!   key, shard spec, deadline, submit time) the ROADMAP's trace-replay
+//!   item consumes; [`validate_chrome_trace`] is the structural checker
+//!   CI runs over generated traces;
+//! * [`Histogram`] (log-bucketed, signed, mergeable) replaces the old
+//!   capped-sample latency rings for per-client sojourn / queue-wait /
+//!   slack quantiles, and [`MetricsRegistry`] is the named-metrics
+//!   export behind `--metrics-json`.
+
+pub mod event;
+pub mod export;
+pub mod metrics;
+pub mod ring;
+pub mod sink;
+
+pub use event::{Event, EventKind, RequestId, TraceRecord};
+pub use export::{
+    capture_text, chrome_trace_json, parse_json, validate_chrome_trace, ExportMeta, JsonValue,
+};
+pub use metrics::{json_escape, Histogram, MetricsRegistry};
+pub use sink::{Tracer, TraceSnapshot, TraceStats, DEFAULT_TRACE_CAPACITY};

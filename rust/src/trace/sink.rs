@@ -1,0 +1,280 @@
+//! The [`Tracer`]: request-id allocation, gated event emission into the
+//! per-thread rings, and the drain side ([`TraceSnapshot`]).
+//!
+//! Tracing is compile-always but **runtime-gated**: a disabled tracer
+//! allocates no rings and every `emit` is a single predictable branch on
+//! a plain `bool`, so the pool's hot path pays effectively nothing when
+//! `[pool] trace = false` (the `trace_overhead` bench scenario holds the
+//! gated-off path within 2% of baseline). When enabled, each device
+//! worker writes to its own ring and every other thread (submitters,
+//! stitchers, the health monitor) hashes onto one of a few shared stripe
+//! rings — multi-writer pushes stay wait-free either way.
+
+use super::event::{Event, EventKind, RequestId, TraceRecord};
+use super::ring::TraceRing;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared stripe rings for non-worker threads. Submit-side traffic is
+/// far lighter than worker traffic, so a few stripes suffice to keep
+/// contention (which is only a `fetch_add` anyway) negligible.
+const STRIPES: usize = 4;
+
+/// Default per-ring capacity (records). At ~64 B/record this is ~1 MB
+/// per ring; a 1k-request chaos soak emits well under this in total.
+pub const DEFAULT_TRACE_CAPACITY: usize = 16384;
+
+/// Global round-robin assignment of non-worker threads to stripes.
+static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's stripe, assigned on first emission.
+    static STRIPE: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+
+fn stripe_index() -> usize {
+    STRIPE.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            v = NEXT_STRIPE.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v % STRIPES
+    })
+}
+
+/// Aggregate ring accounting for one tracer, surfaced in the
+/// `PoolCoordinator` report and asserted by the completeness tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Whether tracing is on.
+    pub enabled: bool,
+    /// Number of rings (worker rings + shared stripes).
+    pub rings: usize,
+    /// Per-ring slot capacity.
+    pub capacity: usize,
+    /// Total events emitted across all rings.
+    pub recorded: u64,
+    /// Events lost to ring overwrite (0 while every ring stays under
+    /// its capacity).
+    pub dropped: u64,
+}
+
+/// A point-in-time drain of every ring: all readable records sorted by
+/// `(t_ns, seq)`, the client interner table, and the ring accounting.
+#[derive(Debug, Clone)]
+pub struct TraceSnapshot {
+    /// All records, timestamp-ordered.
+    pub records: Vec<TraceRecord>,
+    /// Client interner table; `Submit`/`Done`/`DeadlineJudged` records
+    /// carry indexes into this.
+    pub clients: Vec<String>,
+    /// Ring accounting at drain time.
+    pub stats: TraceStats,
+}
+
+impl TraceSnapshot {
+    /// Client name for an interned id (`"?"` for an unknown id).
+    pub fn client_name(&self, id: u64) -> &str {
+        self.clients.get(id as usize).map_or("?", |s| s.as_str())
+    }
+
+    /// All records for one request, in time order.
+    pub fn for_request(&self, req: RequestId) -> Vec<&TraceRecord> {
+        self.records.iter().filter(|r| r.req == req).collect()
+    }
+
+    /// Count of records of one kind.
+    pub fn count(&self, kind: EventKind) -> usize {
+        self.records.iter().filter(|r| r.kind == kind).count()
+    }
+}
+
+/// The trace sink: allocates request ids, interns client names, stamps
+/// monotonic timestamps and routes events to rings. One per
+/// [`crate::sched::DevicePool`], shared by reference with every worker
+/// and stitcher thread.
+pub struct Tracer {
+    enabled: bool,
+    capacity: usize,
+    n_workers: usize,
+    epoch: Instant,
+    next_req: AtomicU64,
+    next_seq: AtomicU64,
+    /// Worker rings `0..n_workers`, then `STRIPES` shared stripe rings.
+    /// Empty when disabled — a disabled tracer costs one `bool` check.
+    rings: Vec<TraceRing>,
+    /// Client-name interner. Only consulted on the submit path and only
+    /// when enabled; workers never touch it.
+    clients: Mutex<Vec<String>>,
+}
+
+impl Tracer {
+    /// A tracer for a pool with `n_workers` device workers. When
+    /// `enabled`, allocates one ring per worker plus the shared stripes,
+    /// each of `capacity` records (floored at 64; 0 selects
+    /// [`DEFAULT_TRACE_CAPACITY`]).
+    pub fn new(enabled: bool, capacity: usize, n_workers: usize) -> Tracer {
+        let cap = if capacity == 0 { DEFAULT_TRACE_CAPACITY } else { capacity.max(64) };
+        let rings = if enabled {
+            (0..n_workers + STRIPES).map(|_| TraceRing::new(cap)).collect()
+        } else {
+            Vec::new()
+        };
+        Tracer {
+            enabled,
+            capacity: cap,
+            n_workers,
+            epoch: Instant::now(),
+            next_req: AtomicU64::new(1),
+            next_seq: AtomicU64::new(1),
+            rings,
+            clients: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// A no-op tracer (no rings; every emit returns immediately).
+    pub fn disabled() -> Tracer {
+        Tracer::new(false, 0, 0)
+    }
+
+    /// Whether events are being recorded.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Nanoseconds since the tracer epoch (pool construction).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// Allocate the next request id (never 0; ids are allocated even
+    /// when tracing is off so jobs always carry a stable identity).
+    pub fn next_request_id(&self) -> RequestId {
+        self.next_req.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Intern a client name, returning its stable id. Call only on the
+    /// submit/accounting path (takes a mutex) and only when enabled.
+    pub fn client_id(&self, name: &str) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let mut table = self.clients.lock().unwrap();
+        if let Some(i) = table.iter().position(|c| c == name) {
+            return i as u64;
+        }
+        table.push(name.to_string());
+        table.len() as u64 - 1
+    }
+
+    /// Emit one event, stamped with the current time. `worker` selects
+    /// the emitting worker's private ring; `None` routes to a shared
+    /// stripe ring. A disabled tracer returns after one branch.
+    pub fn emit(&self, worker: Option<usize>, ev: Event) {
+        if !self.enabled {
+            return;
+        }
+        self.emit_at(worker, self.now_ns(), ev);
+    }
+
+    /// Emit one event with an explicit timestamp (used by `Submit`,
+    /// whose span anchor is captured before the enqueue work).
+    pub fn emit_at(&self, worker: Option<usize>, t_ns: u64, ev: Event) {
+        if !self.enabled {
+            return;
+        }
+        let ring = match worker {
+            Some(w) if w < self.n_workers => w,
+            _ => self.n_workers + stripe_index(),
+        };
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        self.rings[ring].push(seq, t_ns, ev.kind, ev.device, ev.req, ev.a, ev.b, ev.c);
+    }
+
+    /// Current ring accounting.
+    pub fn stats(&self) -> TraceStats {
+        TraceStats {
+            enabled: self.enabled,
+            rings: self.rings.len(),
+            capacity: self.capacity,
+            recorded: self.rings.iter().map(|r| r.written()).sum(),
+            dropped: self.rings.iter().map(|r| r.dropped()).sum(),
+        }
+    }
+
+    /// Drain every ring into a sorted snapshot. Non-destructive (rings
+    /// keep their contents); safe to call while the pool is running,
+    /// though records written concurrently with the drain may be torn
+    /// and skipped — quiesce first for a complete capture.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let mut records = Vec::new();
+        for ring in &self.rings {
+            ring.read_into(&mut records);
+        }
+        records.sort_by_key(|r| (r.t_ns, r.seq));
+        TraceSnapshot { records, clients: self.clients.lock().unwrap().clone(), stats: self.stats() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::EventKind;
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing_but_allocates_ids() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        let a = t.next_request_id();
+        let b = t.next_request_id();
+        assert!(a >= 1 && b == a + 1);
+        t.emit(None, Event::new(EventKind::Submit).req(a));
+        let snap = t.snapshot();
+        assert!(snap.records.is_empty());
+        assert_eq!(snap.stats.recorded, 0);
+        assert_eq!(snap.stats.rings, 0);
+    }
+
+    #[test]
+    fn enabled_tracer_drains_sorted_with_interned_clients() {
+        let t = Tracer::new(true, 256, 2);
+        let cid = t.client_id("bulk");
+        assert_eq!(t.client_id("bulk"), cid, "interning is stable");
+        let other = t.client_id("slo");
+        assert_ne!(other, cid);
+        let rid = t.next_request_id();
+        t.emit_at(None, 100, Event::new(EventKind::Submit).req(rid).a(cid));
+        t.emit_at(Some(0), 300, Event::new(EventKind::LaunchStart).device(0).req(rid));
+        t.emit_at(Some(1), 200, Event::new(EventKind::Enqueue).req(rid));
+        let snap = t.snapshot();
+        assert_eq!(snap.records.len(), 3);
+        let times: Vec<u64> = snap.records.iter().map(|r| r.t_ns).collect();
+        assert_eq!(times, vec![100, 200, 300], "drain is time-sorted across rings");
+        assert_eq!(snap.client_name(cid), "bulk");
+        assert_eq!(snap.client_name(other), "slo");
+        assert_eq!(snap.client_name(99), "?");
+        assert_eq!(snap.for_request(rid).len(), 3);
+        assert_eq!(snap.count(EventKind::Submit), 1);
+        assert_eq!(snap.stats.recorded, 3);
+        assert_eq!(snap.stats.dropped, 0);
+        assert_eq!(snap.stats.rings, 2 + STRIPES);
+    }
+
+    #[test]
+    fn capacity_floor_and_default() {
+        assert_eq!(Tracer::new(true, 0, 1).stats().capacity, DEFAULT_TRACE_CAPACITY);
+        assert_eq!(Tracer::new(true, 7, 1).stats().capacity, 64);
+        assert_eq!(Tracer::new(true, 1000, 1).stats().capacity, 1000);
+    }
+
+    #[test]
+    fn out_of_range_worker_routes_to_a_stripe() {
+        let t = Tracer::new(true, 64, 1);
+        t.emit(Some(42), Event::new(EventKind::Probe).device(42));
+        let snap = t.snapshot();
+        assert_eq!(snap.records.len(), 1);
+        assert_eq!(snap.records[0].device, Some(42));
+    }
+}

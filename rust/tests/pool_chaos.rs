@@ -17,6 +17,14 @@
 //!   `PoolCoordinator` report;
 //! * no deadline is judged twice (per-client slack sample count equals
 //!   the deadline count).
+//!
+//! The trace battery re-runs the soak with event tracing on and judges
+//! *span completeness*: every accepted request must show exactly one
+//! `Submit` and exactly one terminal `Done` on the drained timeline —
+//! through retries, re-plans, stranded sweeps and stitchers — with
+//! retry attempts 1-based and increasing, and zero ring drops. A
+//! fault-free shard test pins down the parent-id convention and checks
+//! the Chrome/capture exports structurally.
 
 use omprt::coordinator::PoolCoordinator;
 use omprt::devrt::RuntimeKind;
@@ -24,7 +32,8 @@ use omprt::ir::passes::OptLevel;
 use omprt::sched::workload::{saxpy_request, scale_request, sharded_scale_request};
 use omprt::sched::{bytes_to_f32, Affinity, HealthState, OffloadHandle, PoolConfig};
 use omprt::sim::Arch;
-use std::collections::HashMap;
+use omprt::trace::{validate_chrome_trace, EventKind};
+use std::collections::{HashMap, HashSet};
 use std::time::{Duration, Instant};
 
 /// Poll `metrics()` until `pred` holds or `timeout` passes; returns
@@ -205,6 +214,211 @@ fn thousand_launch_chaos_soak() {
         any_failed <= pinned_accepted + sharded + rejected,
         "failures ({any_failed}) exceed the deterministic fault budget \
          ({pinned_accepted} dead-pinned + {sharded} sharded + {rejected} rejected)"
+    );
+}
+
+#[test]
+fn trace_spans_complete_after_chaos_soak() {
+    const TOTAL: usize = 1000;
+    const ELEMS: usize = 192;
+    // The headline soak's fault script, with tracing on and rings sized
+    // so nothing can be dropped (asserted below).
+    let cfg = PoolConfig::mixed4()
+        .with_queue_cap(64)
+        .with_batch_max(4)
+        .with_watchdog_min_ms(100)
+        .with_retry_max(2)
+        .with_client_slo("slo", 250.0)
+        .with_trace(true)
+        .with_trace_capacity(1 << 15)
+        .with_fault_spec("0=fail:25@launch:40")
+        .unwrap()
+        .with_fault_spec("1=stall:600ms:1500ms@launch:30")
+        .unwrap()
+        .with_fault_spec("3=die@launch:60")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+    assert!(pc.pool.trace_enabled());
+
+    let clients = ["c0", "c1", "c2", "slo"];
+    let mut accepted = 0u64;
+    let mut handles = vec![];
+    for i in 0..TOTAL {
+        let (mut req, _) = if i % 50 == 17 {
+            let data: Vec<f32> = (0..16 * 1024).map(|k| ((k + i) % 83) as f32).collect();
+            sharded_scale_request(&data, Affinity::any(), OptLevel::O2)
+        } else if i % 37 == 5 {
+            // Pinned to the dying device's unique (kind, arch).
+            let data: Vec<f32> = (0..ELEMS).map(|k| ((k + i) % 89) as f32).collect();
+            scale_request(
+                &data,
+                Affinity { arch: Some(Arch::Amdgcn), kind: Some(RuntimeKind::Legacy) },
+                OptLevel::O2,
+            )
+        } else {
+            let data: Vec<f32> = (0..ELEMS).map(|k| ((k + i) % 83) as f32).collect();
+            scale_request(&data, Affinity::any(), OptLevel::O2)
+        };
+        req.client = clients[i % clients.len()].to_string();
+        if let Ok(h) = pc.submit(req) {
+            accepted += 1;
+            handles.push(h);
+        }
+    }
+    // Resolve everything; success vs deterministic failure is judged by
+    // the headline soak — here only the spans matter.
+    for h in handles {
+        let _ = h.wait();
+    }
+    pc.pool.quiesce();
+
+    let snap = pc.pool.trace_snapshot();
+    assert_eq!(snap.stats.dropped, 0, "rings sized for the soak must drop nothing");
+
+    let mut submits: HashMap<u64, usize> = HashMap::new();
+    let mut dones: HashMap<u64, usize> = HashMap::new();
+    let mut sharded: HashSet<u64> = HashSet::new();
+    let mut retries: HashMap<u64, Vec<u64>> = HashMap::new();
+    for r in &snap.records {
+        match r.kind {
+            EventKind::Submit => *submits.entry(r.req).or_default() += 1,
+            EventKind::Done => *dones.entry(r.req).or_default() += 1,
+            EventKind::ShardPlanned => {
+                sharded.insert(r.req);
+            }
+            EventKind::Retry => retries.entry(r.req).or_default().push(r.a),
+            _ => {}
+        }
+    }
+    // One Submit per accepted request (Submit is emitted only after
+    // acceptance, so rejected dead-pinned requests leave no span)...
+    assert_eq!(submits.len() as u64, accepted, "one span root per accepted request");
+    // ...and exactly one terminal Done per span, no matter how the
+    // request ended: batch completion, retry rescue, stranded sweep or
+    // stitcher. Sharded requests terminate once, at their stitcher.
+    for (rid, n) in &submits {
+        assert_eq!(*n, 1, "request {rid} submitted more than once");
+        assert_eq!(
+            dones.get(rid).copied().unwrap_or(0),
+            1,
+            "request {rid} must terminate exactly once"
+        );
+    }
+    assert_eq!(dones.len(), submits.len(), "no Done without a matching Submit");
+
+    // Retries reuse the parent's id with a 1-based attempt bounded by
+    // retry_max. Shard fan-outs share one id across shard jobs, so only
+    // unsharded requests promise strict attempt monotonicity.
+    let m = pc.metrics();
+    assert!(m.retries >= 1, "the fault script must provoke retries");
+    for (rid, attempts) in &retries {
+        assert!(submits.contains_key(rid), "Retry for unknown request {rid}");
+        assert!(
+            attempts.iter().all(|&a| a >= 1 && a <= 2),
+            "request {rid}: attempts {attempts:?} outside 1..=retry_max"
+        );
+        if !sharded.contains(rid) {
+            assert_eq!(attempts[0], 1, "request {rid}: first retry is attempt 1");
+            for w in attempts.windows(2) {
+                assert!(
+                    w[1] > w[0],
+                    "request {rid}: attempts {attempts:?} must increase"
+                );
+            }
+        }
+    }
+
+    // Deadline judgments mirror the metrics: one per deadlined request,
+    // and only the SLO client carries deadlines.
+    let slo = m.clients.iter().find(|c| c.client == "slo").expect("slo client traffic");
+    assert_eq!(snap.count(EventKind::DeadlineJudged) as u64, slo.deadlines);
+}
+
+#[test]
+fn trace_shard_and_capture_exports() {
+    // Fault-free uniform pool: sharding spans all four devices and the
+    // exports can be checked deterministically.
+    let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
+        .with_shard_min_trips(2048)
+        .with_client_slo("slo", 250.0)
+        .with_trace(true);
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let data: Vec<f32> = (0..256).map(|k| k as f32).collect();
+    let mut handles = vec![];
+    for i in 0..8 {
+        let (mut req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        req.client = if i % 2 == 0 { "slo".to_string() } else { "bulk".to_string() };
+        handles.push((pc.submit(req).unwrap(), want));
+    }
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    let big: Vec<f32> = (0..16 * 1024).map(|k| (k % 97) as f32).collect();
+    let (req, want) = sharded_scale_request(&big, Affinity::any(), OptLevel::O2);
+    let resp = pc.submit(req).unwrap().wait().unwrap();
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    assert!(resp.shards >= 2, "a 4-device uniform pool must shard, got {}", resp.shards);
+    pc.pool.quiesce();
+
+    let snap = pc.pool.trace_snapshot();
+    assert_eq!(snap.stats.dropped, 0);
+    // One ShardPlanned, fan-out matching the response; every shard
+    // launch carries the *parent's* request id (shards never batch, so
+    // launches and shards correspond one to one).
+    let planned: Vec<_> =
+        snap.records.iter().filter(|r| r.kind == EventKind::ShardPlanned).collect();
+    assert_eq!(planned.len(), 1);
+    let parent = planned[0].req;
+    assert_eq!(planned[0].a, resp.shards as u64);
+    let shard_launches = snap
+        .records
+        .iter()
+        .filter(|r| r.kind == EventKind::LaunchStart && r.req == parent)
+        .count();
+    assert_eq!(shard_launches, resp.shards, "one launch per shard, all under the parent id");
+    let stitches: Vec<_> = snap.records.iter().filter(|r| r.kind == EventKind::Stitch).collect();
+    assert_eq!(stitches.len(), 1);
+    assert_eq!(stitches[0].req, parent);
+    assert_eq!(stitches[0].a, resp.shards as u64);
+    assert_eq!(stitches[0].b, 1, "a fault-free stitch succeeds");
+    assert_eq!(
+        snap.records.iter().filter(|r| r.kind == EventKind::Done && r.req == parent).count(),
+        1,
+        "a sharded request terminates once, at its stitcher"
+    );
+    // Half the plain requests ran under the SLO tag: each judged once.
+    assert_eq!(snap.count(EventKind::DeadlineJudged), 4);
+
+    // The Chrome export is structurally valid: parseable JSON, a
+    // traceEvents array, matched B/E pairs per (pid, tid) track.
+    let chrome = pc.trace_chrome_json();
+    let n = validate_chrome_trace(&chrome).expect("chrome export must validate");
+    assert!(n > 0, "the export must carry events");
+
+    // The replay capture holds one line per accepted request; the
+    // sharded parent carries its fan-out and arch, and only SLO-tagged
+    // requests carry a deadline budget.
+    let capture = pc.trace_capture();
+    let lines: Vec<&str> = capture.lines().filter(|l| !l.starts_with('#')).collect();
+    assert_eq!(lines.len(), 9, "8 plain + 1 sharded accepted requests:\n{capture}");
+    for l in &lines {
+        assert!(l.starts_with("req="), "malformed capture line: {l}");
+        for field in ["t_us=", "client=", "key=0x", "deadline_us=", "shards=", "arch="] {
+            assert!(l.contains(field), "capture line missing {field}: {l}");
+        }
+    }
+    let parent_line = lines
+        .iter()
+        .find(|l| l.starts_with(&format!("req={parent} ")))
+        .expect("sharded parent must appear in the capture");
+    assert!(parent_line.contains(&format!("shards={}", resp.shards)), "{parent_line}");
+    assert!(parent_line.contains("arch=nvptx64"), "{parent_line}");
+    assert!(parent_line.contains("deadline_us=-"), "{parent_line}");
+    assert!(
+        lines.iter().any(|l| l.contains("client=slo") && !l.contains("deadline_us=-")),
+        "SLO requests must carry a deadline budget:\n{capture}"
     );
 }
 
