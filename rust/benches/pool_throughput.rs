@@ -30,7 +30,15 @@
 //! 8. **trace overhead** — identical async small-launch workloads with
 //!    the event tracer gated off vs recording, interleaved best-of-3:
 //!    the gated-off pool (tracing compiled in, one branch per would-be
-//!    event) must stay within 2% of the fastest configuration.
+//!    event) must stay within 2% of the fastest configuration;
+//! 9. **hedged** — closed-loop requests on a uniform 4-device pool
+//!    whose device 2 wedges 150 ms on its first launch: watchdog-only
+//!    re-planning quarantines the device but the in-flight victim still
+//!    eats the whole hang, so its p99 carries the stall; with hedging a
+//!    duplicate rescues the victim at the ~4 ms hedge floor and the p99
+//!    must beat the watchdog-only run. A clean-pool companion (hedge on
+//!    vs off, no faults, interleaved best-of-3) gates the idle overhead
+//!    of the in-flight registry to within noise.
 //!
 //! Results are also written as JSON to `BENCH_pool.json` (override the
 //! path with the `BENCH_POOL_JSON` env var) so CI can archive them.
@@ -553,6 +561,86 @@ fn trace_overhead_scenario(batch: usize) -> (f64, f64) {
     (off, on)
 }
 
+/// Hedged-execution scenario. Tail half: closed-loop small requests on
+/// a uniform 4-device pool, device 2 scripted to hang 150 ms on its
+/// first launch — with the watchdog alone the victim request waits out
+/// the hang (quarantine protects *later* requests only), so the
+/// client's p99 sojourn carries the stall; with hedging the monitor
+/// duplicates the victim at max(3 x EWMA, watchdog_min/4 ≈ 4 ms) and
+/// the duplicate's reply bounds the tail. Overhead half: hedge on vs
+/// off on clean warm pools, interleaved best-of-3. Returns
+/// `(p99_watchdog_us, p99_hedged_us, hedge_wins, idle_off, idle_on)`.
+fn hedged_scenario(requests: usize, batch: usize) -> (f64, f64, u64, f64, f64) {
+    println!("\n--- hedged: {requests} closed-loop requests, 1 of 4 devices wedged ---");
+    let data: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
+    let run = |hedge: bool| -> (f64, u64, u64) {
+        let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
+            .with_batch_max(1)
+            .with_watchdog(true)
+            .with_watchdog_min_ms(15)
+            .with_hedge(hedge)
+            .with_hedge_after_factor(3)
+            .with_fault_spec("2=stall:150ms:30s@launch:0")
+            .expect("valid fault spec");
+        let pool = DevicePool::new(&cfg).unwrap();
+        for _ in 0..requests {
+            let (mut req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+            req.client = "tail".into();
+            let resp = pool.submit(req).unwrap().wait().unwrap();
+            assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+        }
+        pool.quiesce();
+        let m = pool.metrics();
+        let p99 = m
+            .clients
+            .iter()
+            .find(|c| c.client == "tail")
+            .expect("tail client metrics")
+            .latency_p99_us();
+        (p99, m.hedge_wins, m.devices[2].quarantines)
+    };
+    let (p99_watchdog, _, q0) = run(false);
+    assert!(q0 >= 1, "the wedged device must end up quarantined");
+    let (p99_hedged, wins, _) = run(true);
+    println!(
+        "watchdog-only p99 {p99_watchdog:>9.1} us | hedged p99 {p99_hedged:>9.1} us \
+         ({:.2}x) | {wins} hedge win(s)",
+        p99_watchdog / p99_hedged.max(1e-9)
+    );
+    assert!(wins >= 1, "the stalled victim must have been rescued by a duplicate");
+    assert!(
+        p99_hedged < 0.7 * p99_watchdog,
+        "hedging must beat watchdog-only re-planning on the degraded p99 \
+         (got {p99_hedged:.1} us vs {p99_watchdog:.1} us)"
+    );
+
+    // Idle overhead: a healthy pool with hedging on runs the monitor and
+    // registers every in-flight batch, but must never launch a duplicate
+    // — and must stay within noise of hedging off.
+    let off_pool = DevicePool::new(&PoolConfig::mixed4().with_batch_max(32)).unwrap();
+    let on_pool =
+        DevicePool::new(&PoolConfig::mixed4().with_batch_max(32).with_hedge(true)).unwrap();
+    run_small_scales(&off_pool, batch, false);
+    run_small_scales(&on_pool, batch, false);
+    let (mut idle_off, mut idle_on) = (0.0f64, 0.0f64);
+    for _ in 0..3 {
+        idle_off = idle_off.max(run_small_scales(&off_pool, batch, false));
+        idle_on = idle_on.max(run_small_scales(&on_pool, batch, false));
+    }
+    assert_eq!(on_pool.metrics().hedges, 0, "a healthy pool must never hedge");
+    println!(
+        "idle overhead: hedge off {idle_off:>8.1} launches/s | on {idle_on:>8.1} launches/s \
+         ({:.3}x)",
+        idle_on / idle_off.max(1e-9)
+    );
+    assert!(
+        idle_on >= 0.95 * idle_off,
+        "idle-pool hedge overhead must stay in noise \
+         (got {idle_on:.1} vs {idle_off:.1} launches/s)"
+    );
+    (p99_watchdog, p99_hedged, wins, idle_off, idle_on)
+}
+
 /// Minimal hand-rolled JSON (the offline crate set has no serde).
 fn write_bench_json(path: &str, json: &str) {
     match std::fs::write(path, json) {
@@ -609,6 +697,8 @@ fn main() {
     let (t_noreplan_ms, t_replan_ms, quarantines) =
         degraded_device_scenario(if smoke { 4 } else { 8 });
     let (trace_off, trace_on) = trace_overhead_scenario(batch);
+    let (p99_watchdog, p99_hedged, hedge_wins, idle_off, idle_on) =
+        hedged_scenario(if smoke { 48 } else { 96 }, batch);
 
     let min_share = shares.iter().cloned().fold(f64::INFINITY, f64::min);
     let json = format!(
@@ -629,12 +719,18 @@ fn main() {
          \"degraded\": {{\"t_noreplan_ms\": {t_noreplan_ms:.1}, \"t_replan_ms\": {t_replan_ms:.1}, \
          \"speedup\": {:.3}, \"quarantines\": {quarantines}}},\n  \
          \"trace\": {{\"gated_off\": {trace_off:.1}, \"recording\": {trace_on:.1}, \
-         \"recording_ratio\": {:.3}}}\n}}\n",
+         \"recording_ratio\": {:.3}}},\n  \
+         \"hedged\": {{\"p99_watchdog_us\": {p99_watchdog:.1}, \
+         \"p99_hedged_us\": {p99_hedged:.1}, \"speedup\": {:.3}, \
+         \"hedge_wins\": {hedge_wins}, \"idle_off\": {idle_off:.1}, \
+         \"idle_on\": {idle_on:.1}, \"idle_ratio\": {:.3}}}\n}}\n",
         adaptive_rate / static_rate,
         shares.iter().map(|s| format!("{s:.4}")).collect::<Vec<_>>().join(", "),
         bulk_slo / bulk_base,
         t_noreplan_ms / t_replan_ms.max(1e-9),
         trace_on / trace_off.max(1e-9),
+        p99_watchdog / p99_hedged.max(1e-9),
+        idle_on / idle_off.max(1e-9),
     );
     let path =
         std::env::var("BENCH_POOL_JSON").unwrap_or_else(|_| "BENCH_pool.json".to_string());

@@ -12,6 +12,7 @@
 //!                   [--batch N] [--queue-cap N] [--cache-budget BYTES] [--shard-elems N]
 //!                   [--adaptive | --no-adaptive] [--fault "DEV=SPEC[,...]"]
 //!                   [--no-watchdog] [--watchdog-min-ms MS] [--retry-max N]
+//!                   [--hedge | --no-hedge] [--hedge-after-factor N] [--hedge-max N]
 //!                   [--trace-out FILE] [--trace-capacity N] [--capture-out FILE]
 //!                   [--metrics-json FILE]
 //! omprt trace-validate FILE
@@ -22,8 +23,9 @@
 //! and write the drained trace as Chrome trace-event JSON (load it at
 //! <https://ui.perfetto.dev>) / the line-oriented replay capture;
 //! `--metrics-json` writes the named-metrics registry. `trace-validate`
-//! structurally checks a written Chrome trace (CI runs it over the
-//! smoke-bench trace).
+//! structurally checks a written Chrome trace or (sniffed by the
+//! `# omprt-capture` magic) a replay capture; CI runs it over both
+//! smoke-bench exports.
 
 use crate::benchmarks::{by_name, harness, Scale};
 use crate::coordinator::Coordinator;
@@ -38,7 +40,8 @@ struct Args {
 }
 
 /// Flags that take no value (presence-only switches).
-const BOOL_FLAGS: &[&str] = &["pool", "adaptive", "no-adaptive", "watchdog", "no-watchdog"];
+const BOOL_FLAGS: &[&str] =
+    &["pool", "adaptive", "no-adaptive", "watchdog", "no-watchdog", "hedge", "no-hedge"];
 
 fn parse_args(argv: &[String]) -> Args {
     let mut positional = vec![];
@@ -163,6 +166,35 @@ impl Args {
                     u32::MAX
                 ))
             })?;
+        }
+        // `--no-hedge` wins when both switches are passed (matching the
+        // other on/off pairs).
+        if self.has("hedge") {
+            cfg.hedge = true;
+        }
+        if self.has("no-hedge") {
+            cfg.hedge = false;
+        }
+        if let Some(n) = self.uint("hedge-after-factor") {
+            if n == 0 {
+                return Err(crate::util::Error::Config(
+                    "--hedge-after-factor wants an integer >= 1".into(),
+                ));
+            }
+            cfg.hedge_after_factor = u32::try_from(n).map_err(|_| {
+                crate::util::Error::Config(format!(
+                    "--hedge-after-factor wants an integer <= {}, got `{n}`",
+                    u32::MAX
+                ))
+            })?;
+        }
+        if let Some(n) = self.uint("hedge-max") {
+            if n == 0 {
+                return Err(crate::util::Error::Config(
+                    "--hedge-max wants an integer >= 1".into(),
+                ));
+            }
+            cfg.hedge_max = n as usize;
         }
         // Asking for a trace or capture file implies recording one.
         // `--trace-capacity` only sizes the rings (0 = default), so a
@@ -301,11 +333,19 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
             let path = args.positional.first().ok_or_else(|| {
                 crate::util::Error::Config("trace-validate needs a FILE".into())
             })?;
-            let json = std::fs::read_to_string(path)
+            let text = std::fs::read_to_string(path)
                 .map_err(|e| crate::util::Error::Config(format!("reading `{path}`: {e}")))?;
-            let n = crate::trace::validate_chrome_trace(&json)
-                .map_err(|e| crate::util::Error::Config(format!("`{path}`: {e}")))?;
-            println!("{path}: valid Chrome trace ({n} events)");
+            // Sniff the format: replay captures lead with their magic,
+            // anything else is expected to be a Chrome trace JSON.
+            if text.starts_with("# omprt-capture") {
+                let n = crate::trace::validate_capture(&text)
+                    .map_err(|e| crate::util::Error::Config(format!("`{path}`: {e}")))?;
+                println!("{path}: valid replay capture ({n} requests)");
+            } else {
+                let n = crate::trace::validate_chrome_trace(&text)
+                    .map_err(|e| crate::util::Error::Config(format!("`{path}`: {e}")))?;
+                println!("{path}: valid Chrome trace ({n} events)");
+            }
             Ok(())
         }
         "info" => {
@@ -520,7 +560,8 @@ fn print_help() {
          \x20 bench NAME    run one benchmark (postencil|polbm|pomriq|pep|pcg|pbt|miniqmc);\n\
          \x20               --pool routes it through the device pool\n\
          \x20 pool          drive a mixed device pool (batching/sharding scheduler demo)\n\
-         \x20 trace-validate FILE  structurally check a Chrome trace written by --trace-out\n\
+         \x20 trace-validate FILE  structurally check a Chrome trace (--trace-out) or a\n\
+         \x20               replay capture (--capture-out)\n\
          \x20 info          device + artifact info\n\
          \n\
          FLAGS: --arch nvptx64|amdgcn  --scale small|paper  --reps N  --runtime legacy|portable\n\
@@ -530,6 +571,8 @@ fn print_help() {
          \x20            --slo-ms MS (latency target for --client: deadline-aware EDF pull)\n\
          \x20            --fault \"DEV=SPEC[,..]\" (scripted stall/slow/fail/die faults)\n\
          \x20            --watchdog|--no-watchdog  --watchdog-min-ms MS  --retry-max N (health)\n\
+         \x20            --hedge|--no-hedge  --hedge-after-factor N  --hedge-max N (speculative\n\
+         \x20            duplicates of at-risk in-flight work; first completion wins)\n\
          \x20            --trace-out FILE (Perfetto/Chrome trace JSON; enables tracing)\n\
          \x20            --trace-capacity N (per-ring record slots)  --capture-out FILE (replay)\n\
          \x20            --metrics-json FILE (named counters + latency histograms)"

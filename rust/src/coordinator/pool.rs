@@ -156,6 +156,14 @@ impl PoolCoordinator {
         } else {
             out.push_str("health: watchdog off (stalled devices are waited on)\n");
         }
+        if m.hedge {
+            out.push_str(&format!(
+                "hedge: on | {} launched, {} won, {} wasted\n",
+                m.hedges, m.hedge_wins, m.hedge_wasted
+            ));
+        } else {
+            out.push_str("hedge: off (at-risk in-flight work is not duplicated)\n");
+        }
         let ts = self.pool.trace_stats();
         if ts.enabled {
             out.push_str(&format!(
@@ -164,14 +172,25 @@ impl PoolCoordinator {
             ));
         }
         out.push_str(
-            "dev | runtime  | arch    | hlth | done  | maxbat | occ%  | images | hits/miss/evict | mem live/peak\n",
+            "dev | runtime  | arch    | hlth | done  | maxbat | occ%  | images | hits/miss/evict | mem live/peak | inflight age/pred\n",
         );
         out.push_str(
-            "----+----------+---------+------+-------+--------+-------+--------+-----------------+--------------\n",
+            "----+----------+---------+------+-------+--------+-------+--------+-----------------+---------------+------------------\n",
         );
         for d in &m.devices {
+            // Age of the batch executing *right now* vs the EWMA's
+            // prediction for it — a wedged-in-flight device shows age
+            // racing past pred long before the watchdog verdict flips.
+            let inflight = match (d.inflight_age, d.inflight_predicted) {
+                (Some(age), Some(pred)) => format!(
+                    "{:.1}/{:.1} ms",
+                    age.as_secs_f64() * 1e3,
+                    pred.as_secs_f64() * 1e3
+                ),
+                _ => "-".to_string(),
+            };
             out.push_str(&format!(
-                "{:>3} | {:<8} | {:<7} | {:<4} | {:>5} | {:>6} | {:>5.1} | {:>6} | {}/{}/{} | {}/{}\n",
+                "{:>3} | {:<8} | {:<7} | {:<4} | {:>5} | {:>6} | {:>5.1} | {:>6} | {}/{}/{} | {}/{} | {}\n",
                 d.id,
                 d.kind.to_string(),
                 d.arch.to_string(),
@@ -184,7 +203,8 @@ impl PoolCoordinator {
                 d.cache.misses,
                 d.cache.evictions,
                 d.mem.live_bytes,
-                d.mem.peak_bytes
+                d.mem.peak_bytes,
+                inflight
             ));
         }
         for d in &m.devices {
@@ -301,6 +321,11 @@ mod tests {
         assert!(mj.contains("latency_us"), "{mj}");
         assert!(text.contains("health: watchdog on"), "{text}");
         assert!(text.contains("hlth"), "{text}");
+        // mixed4 leaves hedging off; the report says so, and the
+        // in-flight age column reads `-` once the pool has drained.
+        assert!(text.contains("hedge: off"), "{text}");
+        assert!(text.contains("inflight age/pred"), "{text}");
+        assert_eq!((m.hedges, m.hedge_wins, m.hedge_wasted), (0, 0, 0));
         // A fault-free healthy pool: every device reads `ok`, nothing
         // quarantined, no retries.
         assert!(text.contains("| ok "), "{text}");

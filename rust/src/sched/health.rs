@@ -145,6 +145,21 @@ pub fn judge(inflight_age: Duration, predicted: Duration, floor: Duration) -> Wa
     }
 }
 
+/// Pure hedging-trigger policy: how old may in-flight work grow before
+/// the monitor launches a speculative duplicate for it?
+///
+/// `factor x predicted`, floored — the same shape as [`judge`]'s
+/// thresholds, for the same reason: the trigger must scale with a
+/// legitimately heavy image's expected time, and a cold prediction of
+/// zero must not spawn duplicates the instant a first launch starts
+/// paying `prepare` costs. The pool passes a quarter of the watchdog
+/// floor here, so (at the default `hedge_after_factor`) hedging fires
+/// *before* the device is even marked Suspect — rescuing the request is
+/// cheaper than quarantining the device and should happen sooner.
+pub fn hedge_after(predicted: Duration, factor: u32, floor: Duration) -> Duration {
+    predicted.saturating_mul(factor.max(1)).max(floor)
+}
+
 /// Per-device health block: the state machine plus the progress
 /// timestamps the monitor reads. All fields are atomics — workers and
 /// the monitor touch them without extra locking (transitions are
@@ -364,6 +379,21 @@ mod tests {
                 assert!(seen_quarantine, "large ages must quarantine");
             }
         }
+    }
+
+    #[test]
+    fn hedge_after_scales_and_floors() {
+        // Warm prediction: trigger at factor x predicted.
+        assert_eq!(hedge_after(10 * MS, 3, 5 * MS), 30 * MS);
+        // Cold prediction: the floor is the whole trigger.
+        assert_eq!(hedge_after(Duration::ZERO, 3, 5 * MS), 5 * MS);
+        // The floor also wins when factor x predicted undercuts it.
+        assert_eq!(hedge_after(MS, 2, 25 * MS), 25 * MS);
+        // A zero factor is clamped to 1, never to "hedge instantly".
+        assert_eq!(hedge_after(10 * MS, 0, 5 * MS), 10 * MS);
+        // Saturates instead of overflowing on absurd predictions.
+        let huge = hedge_after(Duration::from_secs(u64::MAX / 2), u32::MAX, MS);
+        assert!(huge >= Duration::from_secs(u64::MAX / 2));
     }
 
     #[test]

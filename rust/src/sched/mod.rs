@@ -153,6 +153,27 @@
 //! Health states, re-plans, retries and probe counts surface in
 //! [`PoolMetrics`] and the `PoolCoordinator` report.
 //!
+//! ## Hedging (speculative re-execution)
+//!
+//! The watchdog bounds how long a stalled device can hold a job, but its
+//! verdicts are deliberately slow (quarantine is drastic). With
+//! `[pool] hedge = true` the same `pool-health` thread also rescues the
+//! *request*: when an in-flight job's age reaches
+//! [`health::hedge_after`] — `hedge_after_factor` x the service EWMA's
+//! prediction for its batch, floored at a quarter of the watchdog
+//! threshold — or when its SLO deadline can no longer be met even by an
+//! on-prediction finish, the monitor enqueues a **duplicate** pinned to
+//! an idle healthy device the original's retry history has not touched
+//! (at most one per in-flight stint, at most `hedge_max` pool-wide).
+//! First completion wins: original and duplicate share a *settled*
+//! latch, the winner owns the reply, the per-client counters, the
+//! deadline judgment and the trace `Done` — each fired exactly once per
+//! request — while the loser is suppressed on arrival and its service
+//! observation is excluded from the EWMA (a stall must not poison the
+//! predictor that detects stalls). Hedge launches, wins and wasted
+//! duplicates surface in [`PoolMetrics`] and the `PoolCoordinator`
+//! report's `hedge:` line.
+//!
 //! ## Backpressure
 //!
 //! The submission queue is bounded by `[pool] queue_cap` (0 = unbounded):
@@ -210,7 +231,7 @@ pub mod workload;
 
 pub use adaptive::{AdaptiveController, AdaptiveStats, SchedSignals};
 pub use cache::{CacheKey, CacheStats, ImageCache};
-pub use health::{HealthState, WatchdogVerdict};
+pub use health::{hedge_after, HealthState, WatchdogVerdict};
 pub use slo::{ServiceEwma, SlackSummary};
 pub use pool::{
     bytes_to_f32, f32_to_bytes, Affinity, ClientMetrics, DeviceLease, DeviceMetrics, DevicePool,

@@ -7,7 +7,7 @@
 
 use super::adaptive::{decide_batch_max, AdaptiveController, AdaptiveStats, SchedSignals};
 use super::cache::{CacheStats, ImageCache};
-use super::health::{judge, DeviceHealth, HealthState, WatchdogVerdict};
+use super::health::{hedge_after, judge, DeviceHealth, HealthState, WatchdogVerdict};
 use super::slo::{ServiceEwma, SlackSummary};
 use crate::config::Config;
 use crate::coordinator::profiler::{Profiler, RegionReport};
@@ -350,6 +350,22 @@ pub struct PoolConfig {
     /// device up to this many times before the original error is
     /// surfaced to the client. 0 disables retry.
     pub retry_max: u32,
+    /// Tail-latency hedging: the health monitor watches in-flight work
+    /// and, when a job's age exceeds [`PoolConfig::hedge_after_factor`]
+    /// times its EWMA-predicted service time (or its deadline is at
+    /// risk), speculatively enqueues a duplicate pinned to an idle
+    /// healthy device. First completion wins; the loser is ignored on
+    /// arrival, so replies, per-client accounting, deadline judgments
+    /// and the trace `Done` still fire exactly once per request.
+    pub hedge: bool,
+    /// Hedge trigger multiple: a job becomes hedge-worthy once its
+    /// in-flight age exceeds this many times the predicted service time
+    /// of its executing batch (floored at a quarter of the watchdog
+    /// floor, so cold predictions cannot trigger instantly). Min 1.
+    pub hedge_after_factor: u32,
+    /// Most speculative duplicates allowed in flight at once (bounds the
+    /// extra device time hedging may burn). Min 1.
+    pub hedge_max: usize,
     /// Record structured trace events (see [`crate::trace`]): every
     /// request's span through the queue, workers, stitchers and the
     /// health layer, drained on demand for the Chrome/Perfetto and
@@ -394,6 +410,9 @@ impl PoolConfig {
             watchdog: true,
             watchdog_min_ms: 5000,
             retry_max: 2,
+            hedge: false,
+            hedge_after_factor: 3,
+            hedge_max: 2,
             trace: false,
             trace_capacity: 0,
         }
@@ -504,6 +523,25 @@ impl PoolConfig {
         self
     }
 
+    /// Enable/disable tail-latency hedging (speculative re-execution of
+    /// at-risk in-flight work; see [`PoolConfig::hedge`]).
+    pub fn with_hedge(mut self, hedge: bool) -> PoolConfig {
+        self.hedge = hedge;
+        self
+    }
+
+    /// Override the hedge trigger multiple (clamped to ≥ 1).
+    pub fn with_hedge_after_factor(mut self, factor: u32) -> PoolConfig {
+        self.hedge_after_factor = factor.max(1);
+        self
+    }
+
+    /// Override the in-flight hedge-duplicate cap (clamped to ≥ 1).
+    pub fn with_hedge_max(mut self, max: usize) -> PoolConfig {
+        self.hedge_max = max.max(1);
+        self
+    }
+
     /// Enable/disable structured event tracing (see [`PoolConfig::trace`]).
     pub fn with_trace(mut self, trace: bool) -> PoolConfig {
         self.trace = trace;
@@ -536,6 +574,9 @@ impl PoolConfig {
     /// watchdog = true         # stall watchdog + quarantine + probes
     /// watchdog_min_ms = 5000  # floor below which nothing is suspect
     /// retry_max = 2           # device-fault retries on another device
+    /// hedge = false           # tail-latency hedging of at-risk in-flight work
+    /// hedge_after_factor = 3  # hedge when age > factor x predicted service
+    /// hedge_max = 2           # most hedge duplicates in flight at once
     /// trace = false           # structured event tracing (see crate::trace)
     /// trace_capacity = 0      # per-ring trace records (0 = default)
     /// ```
@@ -623,6 +664,12 @@ impl PoolConfig {
         out.retry_max = u32::try_from(retry_max).map_err(|_| {
             Error::Config(format!("[pool] retry_max too large (max {})", u32::MAX))
         })?;
+        out.hedge = read_bool(sec, "hedge", out.hedge)?;
+        let hedge_after = read_uint(sec, "hedge_after_factor", out.hedge_after_factor as i64, 1)?;
+        out.hedge_after_factor = u32::try_from(hedge_after).map_err(|_| {
+            Error::Config(format!("[pool] hedge_after_factor too large (max {})", u32::MAX))
+        })?;
+        out.hedge_max = read_uint(sec, "hedge_max", out.hedge_max as i64, 1)? as usize;
         out.trace = read_bool(sec, "trace", out.trace)?;
         out.trace_capacity =
             read_uint(sec, "trace_capacity", out.trace_capacity as i64, 0)? as usize;
@@ -670,7 +717,9 @@ struct BatchKey {
 }
 
 struct OffloadJob {
-    req: OffloadRequest,
+    /// Shared with the hedging registry: a speculative duplicate reuses
+    /// the original's request without copying argument buffers.
+    req: Arc<OffloadRequest>,
     key: BatchKey,
     /// Shard jobs are never coalesced: a batch runs on one device, which
     /// would defeat the point of splitting the request. They are also
@@ -703,6 +752,18 @@ struct OffloadJob {
     /// jobs carry the *parent* request's id; a retried job keeps its id
     /// (the `Retry` event carries the attempt count instead).
     req_id: RequestId,
+    /// Hedging winner latch, shared between a request's original job and
+    /// any speculative duplicate: the first terminal outcome to swap it
+    /// owns the reply, the per-client record, the deadline judgment and
+    /// the trace `Done`; the loser is ignored on arrival. Unhedged jobs
+    /// carry (and trivially win) their own private latch, so the check
+    /// is one uncontended atomic swap on the normal path.
+    settled: Arc<AtomicBool>,
+    /// Is this job a speculative hedge duplicate launched by the health
+    /// monitor? Duplicates resolve into `hedge_wins`/`hedge_wasted`,
+    /// are never retried, are never themselves hedged, and a losing
+    /// duplicate's service observation never feeds the EWMA.
+    is_hedge: bool,
 }
 
 type TaskFn = Box<dyn FnOnce(&DeviceLease<'_>) + Send>;
@@ -1317,6 +1378,35 @@ struct ClientAccum {
     slack: SlackSummary,
 }
 
+/// One executing job as seen by the hedging monitor (the value side of
+/// `Shared::inflight_reg`). Everything a speculative duplicate needs is
+/// captured here — shared request `Arc`, reply sender clone, settle
+/// latch — so the monitor can mint the duplicate without touching the
+/// worker that owns the original.
+struct InflightEntry {
+    req: Arc<OffloadRequest>,
+    key: BatchKey,
+    is_shard: bool,
+    deadline: Option<Instant>,
+    /// Devices the original already failed on — the duplicate must not
+    /// land there (nor on the device the original is running on now).
+    tried: Vec<usize>,
+    /// Device the original is executing on.
+    device: usize,
+    /// When the enclosing batch began executing.
+    started: Instant,
+    /// Jobs in the executing batch: the service prediction scales with
+    /// it, since the EWMA tracks per-job time.
+    batch_jobs: u64,
+    req_id: RequestId,
+    reply: mpsc::Sender<Result<OffloadResponse, Error>>,
+    settled: Arc<AtomicBool>,
+    first_enqueued: Instant,
+    /// A duplicate was already launched for this entry (one hedge per
+    /// in-flight stint).
+    hedged: bool,
+}
+
 struct Shared {
     queue: Mutex<SchedQueue>,
     /// Workers wait here for jobs.
@@ -1358,6 +1448,32 @@ struct Shared {
     watchdog_min: Duration,
     /// Device-fault retry cap per job.
     retry_max: u32,
+    /// Tail-latency hedging on/off (`[pool] hedge`).
+    hedge: bool,
+    /// Hedge trigger multiple: duplicate once in-flight age exceeds
+    /// `hedge_after_factor x` the predicted batch service time.
+    hedge_after_factor: u32,
+    /// Most hedge duplicates in flight at once.
+    hedge_max: usize,
+    /// Hedge duplicates launched by the monitor.
+    hedges: AtomicU64,
+    /// Duplicates that completed first and owned their request's reply.
+    hedge_wins: AtomicU64,
+    /// Duplicates that lost the settle race, failed, or drained
+    /// unresolved at shutdown/stranding.
+    hedge_wasted: AtomicU64,
+    /// Duplicates launched but not yet resolved (capped at `hedge_max`).
+    hedges_inflight: AtomicUsize,
+    /// Token allocator for the in-flight registry.
+    hedge_seq: AtomicU64,
+    /// The hedging monitor's view of executing work: one entry per
+    /// hedge-eligible job currently inside `run_offload_batch`, keyed by
+    /// a per-job token. Workers register on launch start and deregister
+    /// on launch end; the monitor scans for at-risk entries. The lock is
+    /// never held together with the queue lock (registration happens
+    /// after the pop, hedge enqueues take the queue lock only after
+    /// releasing this one), so no lock-order cycle exists.
+    inflight_reg: Mutex<HashMap<u64, InflightEntry>>,
     /// Quarantine incidents that triggered a pinned-job re-plan sweep.
     replans: AtomicU64,
     /// Still-queued pinned jobs retargeted/unpinned by those sweeps.
@@ -1591,6 +1707,15 @@ impl DevicePool {
             watchdog: config.watchdog,
             watchdog_min: Duration::from_millis(config.watchdog_min_ms.max(1)),
             retry_max: config.retry_max,
+            hedge: config.hedge,
+            hedge_after_factor: config.hedge_after_factor.max(1),
+            hedge_max: config.hedge_max.max(1),
+            hedges: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            hedge_wasted: AtomicU64::new(0),
+            hedges_inflight: AtomicUsize::new(0),
+            hedge_seq: AtomicU64::new(0),
+            inflight_reg: Mutex::new(HashMap::new()),
             replans: AtomicU64::new(0),
             replanned_jobs: AtomicU64::new(0),
             retries: AtomicU64::new(0),
@@ -1616,7 +1741,9 @@ impl DevicePool {
                 .map_err(|e| Error::Sched(format!("cannot spawn pool worker: {e}")))?;
             workers.push(handle);
         }
-        let monitor = if config.watchdog {
+        // The monitor thread hosts both the watchdog and the hedging
+        // scan; either feature needs it running.
+        let monitor = if config.watchdog || config.hedge {
             let shared = shared.clone();
             Some(
                 std::thread::Builder::new()
@@ -1868,7 +1995,13 @@ impl DevicePool {
                 Ok(OffloadHandle { rx })
             }
             Err(mut jobs) => match jobs.pop() {
-                Some(Job::Offload(j)) => Err(TrySubmitError::Full(j.req)),
+                // No clones of the request `Arc` exist until a job is
+                // registered in flight, so a rejected job always hands
+                // the untouched original back to the caller.
+                Some(Job::Offload(j)) => match Arc::try_unwrap(j.req) {
+                    Ok(req) => Err(TrySubmitError::Full(req)),
+                    Err(_) => unreachable!("queued request has no clones"),
+                },
                 _ => unreachable!("bulk enqueue returns the jobs it was given"),
             },
         }
@@ -2239,30 +2372,45 @@ impl DevicePool {
         };
         let uptime = self.shared.started.elapsed();
         let uptime_ns = uptime.as_nanos().max(1);
+        let now_ns = self.shared.now_ns();
         let devices: Vec<DeviceMetrics> = self
             .shared
             .slots
             .iter()
-            .map(|s| DeviceMetrics {
-                id: s.id,
-                kind: s.spec.kind,
-                arch: s.spec.arch,
-                inflight: s.inflight.load(Ordering::Relaxed),
-                reserved: self.shared.reserved[s.id].load(Ordering::Relaxed),
-                completed: s.completed.load(Ordering::Relaxed),
-                batches: s.batches.load(Ordering::Relaxed),
-                batched_jobs: s.batched_jobs.load(Ordering::Relaxed),
-                max_batch: s.max_batch.load(Ordering::Relaxed),
-                occupancy: (s.busy_ns.load(Ordering::Relaxed) as f64 / uptime_ns as f64)
-                    .min(1.0),
-                health: s.health.state(),
-                quarantines: s.health.quarantine_count(),
-                fault: s.fault.as_ref().map(|f| f.spec().to_string()),
-                fault_injected: s.fault.as_ref().map_or(0, |f| f.injected()),
-                cache: s.cache.stats(),
-                cached_images: s.cache.len(),
-                cache_bytes: s.cache.bytes(),
-                mem: s.device.gmem.stats(),
+            .map(|s| {
+                // In-flight age of the executing batch vs. its service
+                // prediction — what the watchdog and hedging triggers
+                // judge. None = idle (or leased, which is exempt).
+                let busy = s.health.watchable_busy().map(|(since_ns, jobs, key)| {
+                    (
+                        Duration::from_nanos(now_ns.saturating_sub(since_ns)),
+                        self.shared.service.predict_batch(key, jobs),
+                    )
+                });
+                DeviceMetrics {
+                    id: s.id,
+                    kind: s.spec.kind,
+                    arch: s.spec.arch,
+                    inflight: s.inflight.load(Ordering::Relaxed),
+                    inflight_age: busy.map(|(age, _)| age),
+                    inflight_predicted: busy.map(|(_, p)| p),
+                    reserved: self.shared.reserved[s.id].load(Ordering::Relaxed),
+                    completed: s.completed.load(Ordering::Relaxed),
+                    batches: s.batches.load(Ordering::Relaxed),
+                    batched_jobs: s.batched_jobs.load(Ordering::Relaxed),
+                    max_batch: s.max_batch.load(Ordering::Relaxed),
+                    occupancy: (s.busy_ns.load(Ordering::Relaxed) as f64
+                        / uptime_ns as f64)
+                        .min(1.0),
+                    health: s.health.state(),
+                    quarantines: s.health.quarantine_count(),
+                    fault: s.fault.as_ref().map(|f| f.spec().to_string()),
+                    fault_injected: s.fault.as_ref().map_or(0, |f| f.injected()),
+                    cache: s.cache.stats(),
+                    cached_images: s.cache.len(),
+                    cache_bytes: s.cache.bytes(),
+                    mem: s.device.gmem.stats(),
+                }
             })
             .collect();
         let clients: Vec<ClientMetrics> = {
@@ -2309,6 +2457,10 @@ impl DevicePool {
             retries_exhausted: self.shared.retries_exhausted.load(Ordering::Relaxed),
             probes: self.shared.probes.load(Ordering::Relaxed),
             readmissions: self.shared.readmissions.load(Ordering::Relaxed),
+            hedge: self.shared.hedge,
+            hedges: self.shared.hedges.load(Ordering::Relaxed),
+            hedge_wins: self.shared.hedge_wins.load(Ordering::Relaxed),
+            hedge_wasted: self.shared.hedge_wasted.load(Ordering::Relaxed),
             uptime,
             devices,
             clients,
@@ -2405,6 +2557,9 @@ impl DevicePool {
         reg.set_counter("pool.replanned_jobs", m.replanned_jobs);
         reg.set_counter("pool.probes", m.probes);
         reg.set_counter("pool.readmissions", m.readmissions);
+        reg.set_counter("pool.hedges", m.hedges);
+        reg.set_counter("pool.hedge_wins", m.hedge_wins);
+        reg.set_counter("pool.hedge_wasted", m.hedge_wasted);
         reg.set_counter("pool.queue_depth", m.queue_depth as u64);
         reg.set_counter("pool.peak_queue_depth", m.peak_queue_depth as u64);
         reg.set_gauge("pool.uptime_s", m.uptime.as_secs_f64());
@@ -2461,7 +2616,7 @@ fn make_offload_job(
     let key = BatchKey { content: req.module.content_hash(), opt: req.opt };
     let now = Instant::now();
     OffloadJob {
-        req,
+        req: Arc::new(req),
         key,
         is_shard,
         target_device,
@@ -2472,6 +2627,8 @@ fn make_offload_job(
         enqueued: now,
         first_enqueued: now,
         req_id,
+        settled: Arc::new(AtomicBool::new(false)),
+        is_hedge: false,
     }
 }
 
@@ -2696,6 +2853,24 @@ impl Drop for DevicePool {
         for job in q.drain() {
             match job {
                 Job::Offload(j) => {
+                    // A drained hedge duplicate resolves as wasted with
+                    // no reply and no Done — the original (drained in
+                    // this same loop, or already settled) owns the
+                    // request's termination.
+                    if j.is_hedge {
+                        self.shared.hedges_inflight.fetch_sub(1, Ordering::Relaxed);
+                        self.shared.hedge_wasted.fetch_add(1, Ordering::Relaxed);
+                        self.shared.tracer.emit(
+                            None,
+                            Event::new(EventKind::HedgeWasted).req(j.req_id).a(2),
+                        );
+                        continue;
+                    }
+                    // An original whose duplicate already won needs no
+                    // shutdown error: its reply and Done already fired.
+                    if j.settled.swap(true, Ordering::SeqCst) {
+                        continue;
+                    }
                     if !j.is_shard {
                         self.shared
                             .tracer
@@ -2923,6 +3098,11 @@ fn worker_loop(shared: &Shared, id: usize) {
 ///
 /// Leased tasks are exempt from judgment ([`DeviceHealth::watchable_busy`])
 /// — a benchmark legitimately holds a device for seconds.
+///
+/// The same tick drives the hedging scan ([`maybe_hedge`]) when
+/// `[pool] hedge` is on: hedging triggers *earlier* than suspicion
+/// (quarter-floor vs. full floor), which is the point — rescue the
+/// in-flight request before the device is even formally suspect.
 fn monitor_loop(shared: &Shared) {
     // Tick scales with the watchdog floor: detection latency only needs
     // to be small *relative to the thresholds* (suspect at ≥ floor,
@@ -2933,6 +3113,14 @@ fn monitor_loop(shared: &Shared) {
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             return;
+        }
+        if shared.hedge {
+            maybe_hedge(shared);
+        }
+        if !shared.watchdog {
+            // Hedge-only mode: no judgments, no probes.
+            std::thread::sleep(tick);
+            continue;
         }
         let now_ns = shared.now_ns();
         for slot in &shared.slots {
@@ -2983,10 +3171,7 @@ fn monitor_loop(shared: &Shared) {
                         // key (falls back to the global EWMA inside
                         // `predict`): a legitimately heavy image with
                         // established history must not read as a stall.
-                        let predicted = shared
-                            .service
-                            .predict(key)
-                            .saturating_mul(jobs.min(u32::MAX as u64) as u32);
+                        let predicted = shared.service.predict_batch(key, jobs);
                         match judge(age, predicted, shared.watchdog_min) {
                             WatchdogVerdict::Quarantine => {
                                 quarantine_and_replan(shared, slot.id)
@@ -3006,6 +3191,130 @@ fn monitor_loop(shared: &Shared) {
         }
         std::thread::sleep(tick);
     }
+}
+
+/// One hedging pass over the in-flight registry: find jobs whose age
+/// says the device is wedged — or whose deadline the prediction says is
+/// about to be blown — and enqueue a speculative duplicate for each,
+/// pinned to an idle healthy device the original's `tried` set (plus
+/// the device it is wedged on) excludes.
+///
+/// Trigger math, per entry:
+/// * **stall**: `age ≥ hedge_after(predicted, factor, floor)` where
+///   `predicted` is the EWMA prediction scaled to the executing batch
+///   and `floor = max(watchdog_min / 4, 1ms)` — a quarter of the
+///   watchdog's suspicion floor, so rescue starts before quarantine
+///   machinery does, but cold keys (prediction 0) still cannot trigger
+///   instantly;
+/// * **deadline risk**: the job carries a deadline, has already run
+///   past its prediction, and `now + predicted` lands past the
+///   deadline — waiting the prediction out again cannot make it.
+///
+/// One duplicate per in-flight stint (`hedged` latches the entry), at
+/// most `hedge_max` unresolved duplicates pool-wide, one per target
+/// device per pass. Duplicates re-enter the queue exactly like retries:
+/// direct push under the queue lock — no `submitted` bump, no
+/// backpressure (the request was admitted once) — with a generation
+/// bump and a pin reservation so the planner sees the target as taken.
+fn maybe_hedge(shared: &Shared) {
+    let now = Instant::now();
+    let floor = (shared.watchdog_min / 4).max(Duration::from_millis(1));
+    let mut dups: Vec<OffloadJob> = vec![];
+    // Devices already claimed by a duplicate minted this pass.
+    let mut taken: Vec<usize> = vec![];
+    {
+        let mut reg = shared.inflight_reg.lock().unwrap();
+        for entry in reg.values_mut() {
+            if entry.hedged || entry.settled.load(Ordering::SeqCst) {
+                continue;
+            }
+            if shared.hedges_inflight.load(Ordering::Relaxed) + dups.len() >= shared.hedge_max {
+                break;
+            }
+            let age = now.saturating_duration_since(entry.started);
+            let predicted = shared
+                .service
+                .predict_batch(Some(entry.key.content), entry.batch_jobs);
+            let stalled = age >= hedge_after(predicted, shared.hedge_after_factor, floor);
+            let deadline_risk = match entry.deadline {
+                Some(dl) => age >= floor && age > predicted && now + predicted > dl,
+                None => false,
+            };
+            if !stalled && !deadline_risk {
+                continue;
+            }
+            let Some(target) = shared.slots.iter().find(|s| {
+                s.id != entry.device
+                    && !taken.contains(&s.id)
+                    && s.health.state() == HealthState::Healthy
+                    && s.inflight.load(Ordering::Relaxed) == 0
+                    && shared.reserved[s.id].load(Ordering::Relaxed) == 0
+                    && !entry.tried.contains(&s.id)
+                    && entry.req.affinity.matches(s.spec.arch, s.spec.kind)
+            }) else {
+                // No idle healthy device to speculate on; the entry
+                // stays unhedged and the next pass reconsiders it.
+                continue;
+            };
+            taken.push(target.id);
+            entry.hedged = true;
+            let mut tried = entry.tried.clone();
+            if !tried.contains(&entry.device) {
+                tried.push(entry.device);
+            }
+            dups.push(OffloadJob {
+                req: entry.req.clone(),
+                key: entry.key,
+                is_shard: entry.is_shard,
+                target_device: Some(target.id),
+                deadline: entry.deadline,
+                tried,
+                first_fault: None,
+                reply: entry.reply.clone(),
+                enqueued: now,
+                first_enqueued: entry.first_enqueued,
+                req_id: entry.req_id,
+                settled: entry.settled.clone(),
+                is_hedge: true,
+            });
+            shared.hedges.fetch_add(1, Ordering::Relaxed);
+            shared.hedges_inflight.fetch_add(1, Ordering::Relaxed);
+            // Payload: a = the device the original is wedged on, b =
+            // in-flight age (ns), c = predicted batch service (ns);
+            // `device` is the duplicate's target.
+            shared.tracer.emit(
+                None,
+                Event::new(EventKind::HedgeLaunched)
+                    .device(target.id)
+                    .req(entry.req_id)
+                    .a(entry.device as u64)
+                    .b(age.as_nanos().min(u64::MAX as u128) as u64)
+                    .c(predicted.as_nanos().min(u64::MAX as u128) as u64),
+            );
+        }
+    }
+    if dups.is_empty() {
+        return;
+    }
+    // Registry lock released before the queue lock — the documented
+    // ordering that keeps the two from ever deadlocking.
+    let mut q = shared.queue.lock().unwrap();
+    for job in dups {
+        shared.queue_gen.fetch_add(1, Ordering::Relaxed);
+        let target = job.target_device.expect("hedge duplicates are pinned");
+        shared.reserved[target].fetch_add(1, Ordering::Relaxed);
+        let (rid, is_shard) = (job.req_id, job.is_shard);
+        q.push(Job::Offload(job));
+        shared.tracer.emit(
+            None,
+            Event::new(EventKind::Enqueue)
+                .req(rid)
+                .a(q.len() as u64)
+                .b(is_shard as u64),
+        );
+    }
+    drop(q);
+    shared.cv.notify_all();
 }
 
 /// A cheap probe launch for quarantine re-admission: consult the
@@ -3113,9 +3422,28 @@ fn sweep_stranded(shared: &Shared) {
     // reply loop's discipline.
     let mut accounts = shared.clients.lock().unwrap();
     for job in stranded {
-        shared.failed.fetch_add(1, Ordering::Relaxed);
         match job {
             Job::Offload(j) => {
+                // A stranded hedge duplicate resolves as wasted, full
+                // stop: the original (running, queued, or already
+                // settled) owns the request's termination, so nothing
+                // fails, records, or replies here.
+                if j.is_hedge {
+                    shared.hedges_inflight.fetch_sub(1, Ordering::Relaxed);
+                    shared.hedge_wasted.fetch_add(1, Ordering::Relaxed);
+                    shared.tracer.emit(
+                        None,
+                        Event::new(EventKind::HedgeWasted).req(j.req_id).a(2),
+                    );
+                    continue;
+                }
+                // A stranded original whose hedge duplicate already won
+                // is equally silent — its reply, record and `Done`
+                // happened when the duplicate settled.
+                if j.settled.swap(true, Ordering::SeqCst) {
+                    continue;
+                }
+                shared.failed.fetch_add(1, Ordering::Relaxed);
                 // Shard jobs are accounted by their stitcher (which sees
                 // the error reply); everything else records here.
                 // Queue-wait covers the current stint only (reset on
@@ -3147,6 +3475,7 @@ fn sweep_stranded(shared: &Shared) {
             // resolves to a pool error), but the client's books must
             // still balance: completed + failed == submitted per client.
             Job::Task(t) => {
+                shared.failed.fetch_add(1, Ordering::Relaxed);
                 let sojourn = done.saturating_duration_since(t.enqueued);
                 record_into(
                     &mut accounts,
@@ -3193,6 +3522,44 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
     }
     slot.max_batch.fetch_max(n, Ordering::Relaxed);
     let waits: Vec<Duration> = batch.iter().map(|j| j.enqueued.elapsed()).collect();
+
+    // Register the batch with the hedging monitor before anything that
+    // can block (the scripted-fault stall sleeps below, exactly like a
+    // real wedged launch). Hedge duplicates are themselves never
+    // registered — one speculative copy per request is the ceiling —
+    // and with hedging off the registry stays empty and untouched.
+    let reg_tokens: Vec<u64> = if shared.hedge {
+        let started = Instant::now();
+        let mut reg = shared.inflight_reg.lock().unwrap();
+        batch
+            .iter()
+            .filter(|j| !j.is_hedge)
+            .map(|j| {
+                let tok = shared.hedge_seq.fetch_add(1, Ordering::Relaxed);
+                reg.insert(
+                    tok,
+                    InflightEntry {
+                        req: j.req.clone(),
+                        key: j.key,
+                        is_shard: j.is_shard,
+                        deadline: j.deadline,
+                        tried: j.tried.clone(),
+                        device: slot.id,
+                        started,
+                        batch_jobs: n as u64,
+                        req_id: j.req_id,
+                        reply: j.reply.clone(),
+                        settled: j.settled.clone(),
+                        first_enqueued: j.first_enqueued,
+                        hedged: false,
+                    },
+                );
+                tok
+            })
+            .collect()
+    } else {
+        vec![]
+    };
 
     // Scripted-fault gate. An injected stall sleeps *here* — in flight,
     // so the watchdog sees the age grow exactly as it would for a real
@@ -3266,20 +3633,19 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
             .b(results.iter().all(|r| r.is_ok()) as u64)
             .c(busy.as_nanos().min(u64::MAX as u128) as u64),
     );
-    // One per-job service observation per batch, feeding the panic-window
-    // prediction for this image key. Shard batches are skipped: a shard
-    // runs a fraction of the full request under the same content key,
-    // and folding its time in would teach the predictor that unsharded
-    // runs of the image are several times faster than they are. Batches
-    // the fault layer touched are skipped too — an injected stall or
-    // slowdown is the *device* misbehaving, not the image's service
-    // time, and folding it in would both poison the panic predictor and
-    // teach the watchdog to tolerate the very stall it should catch.
-    if !batch[0].is_shard && !fault_touched {
-        shared
-            .service
-            .record(Some(batch[0].key.content), busy.as_secs_f64() / n as f64);
+    // The batch is no longer hedge-worthy: results are in hand.
+    if !reg_tokens.is_empty() {
+        let mut reg = shared.inflight_reg.lock().unwrap();
+        for tok in &reg_tokens {
+            reg.remove(tok);
+        }
     }
+    // The EWMA observation for this batch is recorded *after* the reply
+    // loop below: a batch containing a hedge loser (either side of the
+    // race) measured a stalled or redundant run, and folding that into
+    // the service prediction would poison the very trigger that hedged
+    // it. `suppressed_any` is only known once the loop has settled.
+    let (key0, shard0) = (batch[0].key.content, batch[0].is_shard);
     // Fault-streak quarantine: a fast-failing (dead) device never trips
     // the stall watchdog, so consecutive injected-fault batches trip it
     // here instead.
@@ -3291,12 +3657,54 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
     // different healthy device while the bounded budget lasts; whatever
     // ends here is accounted and replied exactly once.
     let mut requeue: Vec<OffloadJob> = vec![];
+    let mut suppressed_any = false;
     {
         // One clients-table lock for the whole batch, not one per job.
         let mut accounts = shared.clients.lock().unwrap();
         for ((i, mut job), result) in batch.into_iter().enumerate().zip(results) {
+            // Hedge duplicates resolve right here, whatever happened: a
+            // duplicate is never retried, and only a *successful* one
+            // that wins the settle race owns the request's reply. The
+            // short-circuit matters — a failed duplicate must not latch
+            // the race, because the original may still succeed.
+            if job.is_hedge {
+                let won = result.is_ok() && !job.settled.swap(true, Ordering::SeqCst);
+                shared.hedges_inflight.fetch_sub(1, Ordering::Relaxed);
+                if !won {
+                    shared.hedge_wasted.fetch_add(1, Ordering::Relaxed);
+                    suppressed_any = true;
+                    // Payload: a = why it was wasted (0 = lost the race,
+                    // 1 = the duplicate itself failed).
+                    shared.tracer.emit(
+                        Some(slot.id),
+                        Event::new(EventKind::HedgeWasted)
+                            .device(slot.id)
+                            .req(job.req_id)
+                            .a(u64::from(result.is_err())),
+                    );
+                    continue;
+                }
+                shared.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                shared.tracer.emit(
+                    Some(slot.id),
+                    Event::new(EventKind::HedgeWon).device(slot.id).req(job.req_id),
+                );
+                // Fall through: the winning duplicate takes the normal
+                // accounting + reply path as if it were the original.
+            }
             let result = match result {
                 Err(Error::Fault(msg)) => {
+                    if job.is_hedge {
+                        unreachable!("failed hedge duplicates resolve above");
+                    }
+                    // A hedge duplicate already owns this request: the
+                    // original's fault is moot — no retry, no reply, no
+                    // accounting. (Unsettled originals retry normally
+                    // even while a duplicate races them.)
+                    if job.settled.load(Ordering::SeqCst) {
+                        suppressed_any = true;
+                        continue;
+                    }
                     if job.first_fault.is_none() {
                         job.first_fault = Some(msg.clone());
                     }
@@ -3335,6 +3743,16 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
                 }
                 other => other,
             };
+            // Exactly-once settle: the first terminal outcome for a
+            // request — original or hedge duplicate — owns the pool
+            // counters, the per-client record, the deadline judgment,
+            // the reply and the trace `Done`. A loser is ignored on
+            // arrival. (A winning duplicate already swapped the latch
+            // above; unhedged jobs win their private latch trivially.)
+            if !job.is_hedge && job.settled.swap(true, Ordering::SeqCst) {
+                suppressed_any = true;
+                continue;
+            }
             match &result {
                 Ok(_) => {
                     slot.completed.fetch_add(1, Ordering::Relaxed);
@@ -3362,6 +3780,20 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
             // A dropped handle is fine: the work still ran.
             let _ = job.reply.send(result);
         }
+    }
+    // One per-job service observation per batch, feeding the panic-window
+    // prediction for this image key. Shard batches are skipped: a shard
+    // runs a fraction of the full request under the same content key,
+    // and folding its time in would teach the predictor that unsharded
+    // runs of the image are several times faster than they are. Batches
+    // the fault layer touched are skipped too — an injected stall or
+    // slowdown is the *device* misbehaving, not the image's service
+    // time, and folding it in would both poison the panic predictor and
+    // teach the watchdog to tolerate the very stall it should catch.
+    // Batches with a suppressed hedge loser are skipped for the same
+    // reason: the loser's time measures the race, not the image.
+    if !shard0 && !fault_touched && !suppressed_any {
+        shared.service.record(Some(key0), busy.as_secs_f64() / n as f64);
     }
     if !requeue.is_empty() {
         // Retries re-enter the queue directly: they were already counted
@@ -3579,6 +4011,13 @@ pub struct DeviceMetrics {
     /// Requests currently executing on this device (a whole batch counts
     /// each of its jobs).
     pub inflight: usize,
+    /// Age of the batch currently executing on this device (`None` =
+    /// idle, or held by a lease, which the watchdog exempts). This is
+    /// the left side of the watchdog/hedging trigger comparison.
+    pub inflight_age: Option<Duration>,
+    /// EWMA service prediction for that executing batch (the right side
+    /// of the comparison; zero = cold key, `None` = idle/leased).
+    pub inflight_predicted: Option<Duration>,
     /// Shard jobs queued with this device reserved for them.
     pub reserved: usize,
     /// Requests completed on this device.
@@ -3654,6 +4093,15 @@ pub struct PoolMetrics {
     pub probes: u64,
     /// Probes that passed and returned a device to service.
     pub readmissions: u64,
+    /// Whether tail-latency hedging is on.
+    pub hedge: bool,
+    /// Speculative duplicates launched for at-risk in-flight work.
+    pub hedges: u64,
+    /// Duplicates that completed first and owned their request's reply.
+    pub hedge_wins: u64,
+    /// Duplicates that lost the race, failed, or drained unresolved —
+    /// after the pool settles, `hedges == hedge_wins + hedge_wasted`.
+    pub hedge_wasted: u64,
     /// Time since the pool started.
     pub uptime: Duration,
     /// Per-device breakdown.
@@ -3790,13 +4238,21 @@ impl PoolMetrics {
 pub struct QueueTestHarness {
     q: SchedQueue,
     svc: ServiceEwma,
+    /// Settle latches minted by `push_hedge`, in creation order, so the
+    /// proptests can race `settle` against pops the way an original
+    /// racing its duplicate would.
+    latches: Vec<Arc<AtomicBool>>,
 }
 
 #[doc(hidden)]
 impl QueueTestHarness {
     /// Fresh queue with the given fairness flag and client weights.
     pub fn new(fairness: bool, client_weights: &[(String, f64)]) -> QueueTestHarness {
-        QueueTestHarness { q: SchedQueue::new(fairness, client_weights), svc: ServiceEwma::new() }
+        QueueTestHarness {
+            q: SchedQueue::new(fairness, client_weights),
+            svc: ServiceEwma::new(),
+            latches: vec![],
+        }
     }
 
     fn spec() -> DeviceSpec {
@@ -3856,6 +4312,48 @@ impl QueueTestHarness {
             }
             None => false,
         }
+    }
+
+    /// Queue a hedge-duplicate-shaped job for `client`: pinned to
+    /// `device` and flagged `is_hedge`, exactly as [`maybe_hedge`] mints
+    /// them. Returns the index of the duplicate's settle latch (see
+    /// [`QueueTestHarness::settle`]). From the queue's point of view a
+    /// duplicate is just another pinned job — which is precisely the
+    /// invariant the proptests pound on: accounting, reservations and
+    /// pinned-invisibility must hold with duplicates in flight.
+    pub fn push_hedge(&mut self, client: &str, device: usize) -> usize {
+        let req = OffloadRequest {
+            module: Module::new("harness"),
+            kernel: "k".into(),
+            region: "r".into(),
+            cfg: LaunchConfig::new(1, 32),
+            opt: OptLevel::O2,
+            buffers: vec![],
+            args: vec![],
+            affinity: Affinity::any(),
+            shard: None,
+            client: client.to_string(),
+            deadline: None,
+        };
+        let (tx, _rx) = mpsc::channel();
+        let mut job = make_offload_job(req, tx, false, Some(device), None, 0);
+        job.is_hedge = true;
+        let latch = job.settled.clone();
+        self.q.push(Job::Offload(job));
+        self.latches.push(latch);
+        self.latches.len() - 1
+    }
+
+    /// Settle latch `idx` the way a completing original (or duplicate)
+    /// would; returns whether this call won the race — false means the
+    /// other side already settled and this outcome would be suppressed.
+    pub fn settle(&mut self, idx: usize) -> bool {
+        !self.latches[idx].swap(true, Ordering::SeqCst)
+    }
+
+    /// Settle latches minted so far (`push_hedge` count).
+    pub fn latch_count(&self) -> usize {
+        self.latches.len()
     }
 
     /// Jobs currently queued.
@@ -4011,6 +4509,65 @@ mod tests {
             .with_fault_spec("0=fail:1@launch:9999999")
             .unwrap();
         assert!(DevicePool::new(&twice).is_err());
+    }
+
+    #[test]
+    fn pool_config_parses_hedge_knobs() {
+        let cfg = Config::parse("[pool]\nhedge = true\nhedge_after_factor = 5\nhedge_max = 4")
+            .unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert!(pc.hedge);
+        assert_eq!(pc.hedge_after_factor, 5);
+        assert_eq!(pc.hedge_max, 4);
+        // Defaults: hedging off, trigger at 3x predicted, 2 duplicates.
+        let d = PoolConfig::mixed4();
+        assert!(!d.hedge);
+        assert_eq!(d.hedge_after_factor, 3);
+        assert_eq!(d.hedge_max, 2);
+        // Builders clamp to the sane minimum of 1.
+        let b = PoolConfig::mixed4()
+            .with_hedge(true)
+            .with_hedge_after_factor(0)
+            .with_hedge_max(0);
+        assert!(b.hedge);
+        assert_eq!(b.hedge_after_factor, 1);
+        assert_eq!(b.hedge_max, 1);
+        // Zero (or non-boolean) knobs in a config file are rejected.
+        let cfg = Config::parse("[pool]\nhedge_after_factor = 0").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[pool]\nhedge_max = 0").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[pool]\nhedge = 7").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn hedge_settle_latch_is_exactly_once() {
+        let (tx, _rx) = mpsc::channel();
+        let job = make_offload_job(base_request(Affinity::any()), tx, false, None, None, 0);
+        // The duplicate shares the original's latch (as `maybe_hedge`
+        // arranges); whichever side swaps first owns the termination.
+        let dup_latch = job.settled.clone();
+        assert!(!job.settled.swap(true, Ordering::SeqCst), "first settle wins");
+        assert!(dup_latch.swap(true, Ordering::SeqCst), "second settle is suppressed");
+    }
+
+    #[test]
+    fn harness_hedge_push_is_pinned_and_settles_once() {
+        let mut h = QueueTestHarness::new(true, &[]);
+        h.push("a", None, false);
+        let latch = h.push_hedge("a", 1);
+        assert_eq!(h.len(), 2);
+        // The duplicate is pinned: invisible to the DRR pop path.
+        let (client, _, n) = h.pop(0, 8).expect("original is claimable");
+        assert_eq!((client.as_str(), n), ("a", 1));
+        assert!(!h.pop_pinned(0), "duplicate is pinned to device 1, not 0");
+        assert!(h.pop_pinned(1), "duplicate claimable only by its target");
+        assert!(h.is_empty());
+        // Original settles first; the duplicate's outcome is suppressed.
+        assert!(h.settle(latch));
+        assert!(!h.settle(latch));
+        assert_eq!(h.latch_count(), 1);
     }
 
     #[test]

@@ -112,6 +112,17 @@ impl ServiceEwma {
         Duration::from_secs_f64(secs.clamp(0.0, 60.0))
     }
 
+    /// Predicted service time for a whole executing batch: the per-job
+    /// prediction for `key` scaled by the batch size (saturating). This
+    /// is the quantity in-flight age is compared against — by the stall
+    /// watchdog ([`crate::sched::health::judge`]), the hedging trigger
+    /// ([`crate::sched::health::hedge_after`]) and the report's
+    /// in-flight age column — so all three judge with the same yardstick.
+    /// Zero when the key (and the global fallback) is still cold.
+    pub fn predict_batch(&self, key: Option<u64>, jobs: u64) -> Duration {
+        self.predict(key).saturating_mul(jobs.clamp(1, u32::MAX as u64) as u32)
+    }
+
     /// Distinct image keys currently tracked (tests/report only).
     pub fn tracked_keys(&self) -> usize {
         self.per_key.lock().unwrap().len()
@@ -244,6 +255,24 @@ mod tests {
         // Unknown keys fall back to the global EWMA, which sits between.
         let g = s.predict(Some(999)).as_secs_f64();
         assert!(g > 0.0 && g < 0.011, "global fallback in range: {g}");
+    }
+
+    #[test]
+    fn predict_batch_scales_with_jobs_and_saturates() {
+        let s = ServiceEwma::new();
+        // Cold: zero regardless of batch size.
+        assert_eq!(s.predict_batch(Some(1), 16), Duration::ZERO);
+        for _ in 0..32 {
+            s.record(Some(1), 0.010);
+        }
+        let one = s.predict_batch(Some(1), 1).as_secs_f64();
+        let four = s.predict_batch(Some(1), 4).as_secs_f64();
+        assert!((four / one - 4.0).abs() < 1e-6, "batch prediction scales linearly");
+        // A zero-job batch is judged as one job, never as "free".
+        assert_eq!(s.predict_batch(Some(1), 0), s.predict_batch(Some(1), 1));
+        // Absurd batch sizes saturate instead of overflowing.
+        let huge = s.predict_batch(Some(1), u64::MAX);
+        assert!(huge >= s.predict_batch(Some(1), 1));
     }
 
     #[test]

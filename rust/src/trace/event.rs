@@ -23,6 +23,9 @@
 //! | `Readmit` | — | — | — |
 //! | `DeadlineJudged` | 1 = missed | slack (µs, two's-complement `i64`) | client id |
 //! | `Done` | 1 = ok | sojourn (ns) | client id |
+//! | `HedgeLaunched` | original device | in-flight age (ns) | predicted service (ns) |
+//! | `HedgeWon` | — | — | — |
+//! | `HedgeWasted` | 0 = lost race, 1 = dup faulted, 2 = drained | — | — |
 //!
 //! `Retry`, `Quarantine`, `Probe`, `Readmit`, `LaunchStart`/`LaunchEnd`
 //! carry the device in the record's `device` field; queue-side events
@@ -74,6 +77,13 @@ pub enum EventKind {
     DeadlineJudged = 15,
     /// Terminal event: the request's reply was resolved (ok or error).
     Done = 16,
+    /// The monitor speculatively duplicated an at-risk in-flight job.
+    /// `device` is the hedge *target*; `a` is the original device.
+    HedgeLaunched = 17,
+    /// A hedge duplicate completed first and owns the reply.
+    HedgeWon = 18,
+    /// A hedge duplicate was suppressed (`a` says why).
+    HedgeWasted = 19,
 }
 
 impl EventKind {
@@ -97,6 +107,9 @@ impl EventKind {
             14 => EventKind::Readmit,
             15 => EventKind::DeadlineJudged,
             16 => EventKind::Done,
+            17 => EventKind::HedgeLaunched,
+            18 => EventKind::HedgeWon,
+            19 => EventKind::HedgeWasted,
             _ => return None,
         })
     }
@@ -120,6 +133,9 @@ impl EventKind {
             EventKind::Readmit => "Readmit",
             EventKind::DeadlineJudged => "DeadlineJudged",
             EventKind::Done => "Done",
+            EventKind::HedgeLaunched => "HedgeLaunched",
+            EventKind::HedgeWon => "HedgeWon",
+            EventKind::HedgeWasted => "HedgeWasted",
         }
     }
 }
@@ -217,13 +233,13 @@ mod tests {
 
     #[test]
     fn kind_roundtrips_through_u8() {
-        for k in 1u8..=16 {
+        for k in 1u8..=19 {
             let kind = EventKind::from_u8(k).expect("contiguous discriminants");
             assert_eq!(kind as u8, k);
             assert!(!kind.name().is_empty());
         }
         assert_eq!(EventKind::from_u8(0), None);
-        assert_eq!(EventKind::from_u8(17), None);
+        assert_eq!(EventKind::from_u8(20), None);
         assert_eq!(EventKind::from_u8(255), None);
     }
 

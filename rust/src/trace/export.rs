@@ -23,6 +23,11 @@
 //! every non-metadata event, and strictly matched `B`/`E` pairs per
 //! track. CI runs it over the smoke-mode bench trace via
 //! `omprt trace-validate`.
+//!
+//! [`validate_capture`] does the same job for the line-oriented
+//! `# omprt-capture v1` replay format: header magic, the fixed
+//! seven-token line grammar, monotone submit timestamps, unique request
+//! ids, and shard/arch consistency (`shards > 1` iff a real arch label).
 
 use super::event::{EventKind, TraceRecord};
 use super::metrics::json_escape;
@@ -585,6 +590,98 @@ pub fn validate_chrome_trace(json: &str) -> Result<usize, String> {
     Ok(events.len())
 }
 
+/// Validate a `# omprt-capture v1` replay capture (the [`capture_text`]
+/// output): the version header on line 1, then per non-comment line the
+/// fixed grammar `req= t_us= client= key= deadline_us= shards= arch=`
+/// with parseable values — unique `u64` request ids, finite
+/// non-decreasing `t_us`, a `0x`-hex image key, `deadline_us` either `-`
+/// or a `u64`, `shards >= 1`, and `shards > 1` exactly when `arch` is a
+/// real label (not `-`). Returns the request-line count.
+pub fn validate_capture(text: &str) -> Result<usize, String> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some("# omprt-capture v1") => {}
+        other => {
+            return Err(format!(
+                "line 1: expected `# omprt-capture v1` header, got {other:?}"
+            ))
+        }
+    }
+    const KEYS: [&str; 7] = ["req", "t_us", "client", "key", "deadline_us", "shards", "arch"];
+    let mut seen_req = std::collections::BTreeSet::new();
+    let mut last_t = f64::NEG_INFINITY;
+    let mut count = 0usize;
+    for (i, line) in lines.enumerate() {
+        let lineno = i + 2; // 1-based, after the header
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        if tokens.len() != KEYS.len() {
+            return Err(format!(
+                "line {lineno}: expected {} `key=value` tokens, got {}",
+                KEYS.len(),
+                tokens.len()
+            ));
+        }
+        let mut vals = [""; 7];
+        for (slot, (tok, key)) in tokens.iter().zip(KEYS).enumerate() {
+            vals[slot] = match tok.strip_prefix(key).and_then(|r| r.strip_prefix('=')) {
+                Some(v) if !v.is_empty() => v,
+                _ => {
+                    return Err(format!(
+                        "line {lineno}: token {} must be `{key}=<value>`, got `{tok}`",
+                        slot + 1
+                    ))
+                }
+            };
+        }
+        let [req, t_us, _client, key, deadline, shards, arch] = vals;
+        let req: u64 = req
+            .parse()
+            .map_err(|_| format!("line {lineno}: bad req id `{req}`"))?;
+        if !seen_req.insert(req) {
+            return Err(format!("line {lineno}: duplicate req id {req}"));
+        }
+        let t: f64 = t_us
+            .parse()
+            .map_err(|_| format!("line {lineno}: bad t_us `{t_us}`"))?;
+        if !t.is_finite() {
+            return Err(format!("line {lineno}: non-finite t_us `{t_us}`"));
+        }
+        if t < last_t {
+            return Err(format!(
+                "line {lineno}: t_us {t} goes backwards (previous {last_t})"
+            ));
+        }
+        last_t = t;
+        let hex = key
+            .strip_prefix("0x")
+            .ok_or_else(|| format!("line {lineno}: key must be 0x-hex, got `{key}`"))?;
+        u64::from_str_radix(hex, 16)
+            .map_err(|_| format!("line {lineno}: bad hex key `{key}`"))?;
+        if deadline != "-" {
+            deadline
+                .parse::<u64>()
+                .map_err(|_| format!("line {lineno}: bad deadline_us `{deadline}`"))?;
+        }
+        let fanout: u64 = shards
+            .parse()
+            .map_err(|_| format!("line {lineno}: bad shards `{shards}`"))?;
+        if fanout == 0 {
+            return Err(format!("line {lineno}: shards must be >= 1"));
+        }
+        if (fanout > 1) != (arch != "-") {
+            return Err(format!(
+                "line {lineno}: shards={fanout} inconsistent with arch={arch} \
+                 (fan-out > 1 exactly when a shard arch is recorded)"
+            ));
+        }
+        count += 1;
+    }
+    Ok(count)
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::event::{Event, EventKind};
@@ -679,6 +776,52 @@ mod tests {
             "{}",
             lines[1]
         );
+    }
+
+    #[test]
+    fn capture_validator_accepts_real_exports() {
+        let text = capture_text(&sample_records(), &sample_meta());
+        assert_eq!(validate_capture(&text).unwrap(), 2, "{text}");
+        // An empty capture (header only) is valid with zero requests.
+        assert_eq!(validate_capture("# omprt-capture v1\n").unwrap(), 0);
+    }
+
+    #[test]
+    fn capture_validator_rejects_malformed_lines() {
+        let hdr = "# omprt-capture v1\n";
+        let ok = "req=1 t_us=0.100 client=bulk key=0xabc deadline_us=250 shards=1 arch=-\n";
+        assert_eq!(validate_capture(&format!("{hdr}{ok}")).unwrap(), 1);
+        // Wrong or missing header.
+        assert!(validate_capture("").unwrap_err().contains("header"));
+        assert!(validate_capture(&format!("# omprt-capture v2\n{ok}"))
+            .unwrap_err()
+            .contains("header"));
+        // Token-level grammar failures, each with the line number.
+        for (bad, why) in [
+            ("req=1 t_us=0.1 client=c key=0xa deadline_us=- shards=1\n", "tokens"),
+            ("req=1 t_us=0.1 key=0xa client=c deadline_us=- shards=1 arch=-\n", "client="),
+            ("req=x t_us=0.1 client=c key=0xa deadline_us=- shards=1 arch=-\n", "bad req"),
+            ("req=1 t_us=zz client=c key=0xa deadline_us=- shards=1 arch=-\n", "bad t_us"),
+            ("req=1 t_us=0.1 client=c key=abc deadline_us=- shards=1 arch=-\n", "0x-hex"),
+            ("req=1 t_us=0.1 client=c key=0xzz deadline_us=- shards=1 arch=-\n", "bad hex"),
+            ("req=1 t_us=0.1 client=c key=0xa deadline_us=soon shards=1 arch=-\n", "deadline"),
+            ("req=1 t_us=0.1 client=c key=0xa deadline_us=- shards=0 arch=-\n", ">= 1"),
+        ] {
+            let err = validate_capture(&format!("{hdr}{bad}")).unwrap_err();
+            assert!(err.contains("line 2") && err.contains(why), "{bad:?} -> {err}");
+        }
+        // Duplicate request ids and backwards timestamps span lines.
+        let dup = format!("{hdr}{ok}req=1 t_us=0.200 client=c key=0xb deadline_us=- shards=1 arch=-\n");
+        assert!(validate_capture(&dup).unwrap_err().contains("duplicate req"));
+        let back = format!("{hdr}{ok}req=2 t_us=0.050 client=c key=0xb deadline_us=- shards=1 arch=-\n");
+        assert!(validate_capture(&back).unwrap_err().contains("backwards"));
+        // Shard/arch consistency, both directions.
+        let sharded_no_arch =
+            format!("{hdr}req=1 t_us=0.1 client=c key=0xa deadline_us=- shards=2 arch=-\n");
+        assert!(validate_capture(&sharded_no_arch).unwrap_err().contains("inconsistent"));
+        let plain_with_arch =
+            format!("{hdr}req=1 t_us=0.1 client=c key=0xa deadline_us=- shards=1 arch=nvptx64\n");
+        assert!(validate_capture(&plain_with_arch).unwrap_err().contains("inconsistent"));
     }
 
     #[test]

@@ -21,8 +21,9 @@
 //!   events; `--trace-out` on `omprt pool` / `omprt bench --pool`);
 //!   [`capture_text`] renders the compact replay capture (client, image
 //!   key, shard spec, deadline, submit time) the ROADMAP's trace-replay
-//!   item consumes; [`validate_chrome_trace`] is the structural checker
-//!   CI runs over generated traces;
+//!   item consumes; [`validate_chrome_trace`] and [`validate_capture`]
+//!   are the structural checkers CI runs over generated traces and
+//!   captures (`omprt trace-validate` sniffs the format);
 //! * [`Histogram`] (log-bucketed, signed, mergeable) replaces the old
 //!   capped-sample latency rings for per-client sojourn / queue-wait /
 //!   slack quantiles, and [`MetricsRegistry`] is the named-metrics
@@ -36,7 +37,8 @@ pub mod sink;
 
 pub use event::{Event, EventKind, RequestId, TraceRecord};
 pub use export::{
-    capture_text, chrome_trace_json, parse_json, validate_chrome_trace, ExportMeta, JsonValue,
+    capture_text, chrome_trace_json, parse_json, validate_capture, validate_chrome_trace,
+    ExportMeta, JsonValue,
 };
 pub use metrics::{json_escape, Histogram, MetricsRegistry};
 pub use sink::{Tracer, TraceSnapshot, TraceStats, DEFAULT_TRACE_CAPACITY};

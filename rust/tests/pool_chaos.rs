@@ -25,6 +25,14 @@
 //! retry attempts 1-based and increasing, and zero ring drops. A
 //! fault-free shard test pins down the parent-id convention and checks
 //! the Chrome/capture exports structurally.
+//!
+//! The hedge battery (`*hedge*` — CI runs these by name) re-runs the
+//! soak shape with speculative re-execution on: a deterministic
+//! stall-rescue test proving the duplicate's reply bounds the tail, and
+//! a mixed-fault soak proving the exactly-once ledger — one `Done` and
+//! one deadline judgment per accepted request, `hedges == hedge_wins +
+//! hedge_wasted`, reservations drained — however copies race faults,
+//! retries and shards.
 
 use omprt::coordinator::PoolCoordinator;
 use omprt::devrt::RuntimeKind;
@@ -529,6 +537,228 @@ fn dead_device_work_retries_onto_healthy_devices() {
     );
     let report = pc.format_report();
     assert!(report.contains("die"), "the fault echo names the script:\n{report}");
+}
+
+/// Poll until every device is idle (no in-flight batch) and the hedge
+/// ledger has resolved (`hedges == hedge_wins + hedge_wasted`). Quiesce
+/// returns when every *request* has terminated, but a losing copy may
+/// still be executing — trace and counter assertions must wait it out.
+fn wait_hedges_resolved(pc: &PoolCoordinator) -> bool {
+    wait_for(pc, Duration::from_secs(30), |m| {
+        m.devices.iter().all(|d| d.inflight_age.is_none())
+            && m.hedges == m.hedge_wins + m.hedge_wasted
+    })
+}
+
+#[test]
+fn stalled_inflight_job_is_hedged_and_wins() {
+    // Two uniform devices; dev0 wedges for 2.5s on its second launch.
+    // The watchdog is off, so only hedging can rescue the stuck request:
+    // the monitor sees its in-flight age pass max(3 x EWMA, min/4 =
+    // 500ms), duplicates it onto idle dev1, and the duplicate's reply
+    // resolves the handle roughly 2s before the original unwedges.
+    let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 2)
+        .with_batch_max(1)
+        .with_watchdog(false)
+        .with_watchdog_min_ms(2000)
+        .with_hedge(true)
+        .with_hedge_after_factor(3)
+        .with_hedge_max(2)
+        .with_trace(true)
+        .with_fault_spec("0=stall:2500ms:10s@launch:1")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let data: Vec<f32> = (0..128).map(|k| k as f32).collect();
+    let mut handles = vec![];
+    for _ in 0..8 {
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        handles.push((pc.submit(req).unwrap(), want));
+    }
+    let t0 = Instant::now();
+    for (h, want) in handles {
+        let resp = h.wait().expect("every request resolves, hedged or not");
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    // The duplicate, not the 2.5s stall, bounded the tail.
+    assert!(
+        t0.elapsed() < Duration::from_millis(2300),
+        "replies must not wait out the stall: {:?}",
+        t0.elapsed()
+    );
+    pc.pool.quiesce();
+    assert!(wait_hedges_resolved(&pc), "hedge ledger never resolved");
+
+    let m = pc.metrics();
+    assert!(m.hedge);
+    assert!(m.hedges >= 1, "the stalled launch must have been hedged");
+    assert!(m.hedge_wins >= 1, "the duplicate beats a 2.5s stall");
+    assert_eq!(m.hedges, m.hedge_wins + m.hedge_wasted);
+    assert_eq!(m.failed, 0, "hedging must lose nothing");
+    for d in &m.devices {
+        assert_eq!(d.reserved, 0, "device {} leaks a reservation", d.id);
+    }
+    let report = pc.format_report();
+    assert!(report.contains("hedge: on"), "{report}");
+
+    // Exactly-once on the timeline: one Done per accepted request even
+    // though two copies of the stalled one executed to completion, and
+    // the hedge events mirror the counters.
+    let snap = pc.pool.trace_snapshot();
+    let mut dones: HashMap<u64, usize> = HashMap::new();
+    for r in &snap.records {
+        if r.kind == EventKind::Done {
+            *dones.entry(r.req).or_default() += 1;
+        }
+    }
+    assert_eq!(dones.len(), 8, "every accepted request terminates");
+    assert!(dones.values().all(|&n| n == 1), "a hedged request must Done once: {dones:?}");
+    assert_eq!(snap.count(EventKind::HedgeLaunched) as u64, m.hedges);
+    assert_eq!(snap.count(EventKind::HedgeWon) as u64, m.hedge_wins);
+    assert_eq!(snap.count(EventKind::HedgeWasted) as u64, m.hedge_wasted);
+}
+
+#[test]
+fn hedged_chaos_soak_keeps_exactly_once_accounting() {
+    const TOTAL: usize = 600;
+    const ELEMS: usize = 192;
+    // The headline soak's shape — shards, retries, SLO deadlines, a
+    // stalling device, a degraded device and a dying device — with
+    // hedging on top. The point: however the copies race the faults,
+    // every accepted request terminates exactly once and the hedge
+    // ledger balances.
+    let cfg = PoolConfig::mixed4()
+        .with_queue_cap(64)
+        .with_batch_max(4)
+        .with_watchdog_min_ms(100)
+        .with_retry_max(2)
+        .with_client_slo("slo", 250.0)
+        .with_hedge(true)
+        .with_hedge_after_factor(3)
+        .with_hedge_max(3)
+        .with_trace(true)
+        .with_trace_capacity(1 << 15)
+        .with_fault_spec("0=slow:8x:2s@launch:40")
+        .unwrap()
+        .with_fault_spec("1=stall:600ms:1500ms@launch:30")
+        .unwrap()
+        .with_fault_spec("3=die@launch:60")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let clients = ["c0", "c1", "slo"];
+    let mut accepted: HashMap<String, u64> = HashMap::new();
+    let mut handles: Vec<(String, OffloadHandle, Vec<f32>)> = vec![];
+    for i in 0..TOTAL {
+        let client = clients[i % clients.len()].to_string();
+        let (mut req, want) = if i % 50 == 17 {
+            let data: Vec<f32> = (0..16 * 1024).map(|k| ((k + i) % 83) as f32).collect();
+            sharded_scale_request(&data, Affinity::any(), OptLevel::O2)
+        } else if i % 37 == 5 {
+            // Pinned to the dying device's unique (kind, arch): fails
+            // deterministically after the death — terminating exactly
+            // once either way is precisely what's under test.
+            let data: Vec<f32> = (0..ELEMS).map(|k| ((k + i) % 89) as f32).collect();
+            scale_request(
+                &data,
+                Affinity { arch: Some(Arch::Amdgcn), kind: Some(RuntimeKind::Legacy) },
+                OptLevel::O2,
+            )
+        } else if i % 2 == 0 {
+            let data: Vec<f32> = (0..ELEMS).map(|k| ((k + i) % 83) as f32).collect();
+            scale_request(&data, Affinity::any(), OptLevel::O2)
+        } else {
+            let x: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
+            let y: Vec<f32> = (0..ELEMS).map(|k| ((k * 3 + i) % 59) as f32).collect();
+            saxpy_request(0.5, &x, &y, Affinity::any(), OptLevel::O2)
+        };
+        req.client = client.clone();
+        if let Ok(h) = pc.submit(req) {
+            *accepted.entry(client.clone()).or_default() += 1;
+            handles.push((client, h, want));
+        }
+    }
+    let mut ok: HashMap<String, u64> = HashMap::new();
+    let mut failed: HashMap<String, u64> = HashMap::new();
+    for (client, h, want) in handles {
+        match h.wait() {
+            Ok(resp) => {
+                assert_eq!(
+                    bytes_to_f32(resp.buffers[0].as_ref().unwrap()),
+                    want,
+                    "a hedged winner must still compute the right answer"
+                );
+                *ok.entry(client).or_default() += 1;
+            }
+            Err(_) => {
+                *failed.entry(client).or_default() += 1;
+            }
+        }
+    }
+    pc.pool.quiesce();
+    assert!(wait_hedges_resolved(&pc), "hedge ledger never resolved");
+
+    let m = pc.metrics();
+    assert!(m.hedges >= 1, "600ms stalls against a 25ms hedge floor must hedge");
+    assert_eq!(
+        m.hedges,
+        m.hedge_wins + m.hedge_wasted,
+        "every launched duplicate is judged exactly once"
+    );
+    // Exactly-once per client: completed + failed == accepted, one
+    // slack sample per deadlined request, through every copy in flight.
+    for client in clients {
+        let a = accepted.get(client).copied().unwrap_or(0);
+        let cm = m.clients.iter().find(|c| c.client == client).expect("client traffic");
+        assert_eq!(
+            cm.completed + cm.failed,
+            a,
+            "client {client}: completed {} + failed {} != accepted {a}",
+            cm.completed,
+            cm.failed
+        );
+        assert_eq!(cm.completed, ok.get(client).copied().unwrap_or(0));
+        assert_eq!(cm.failed, failed.get(client).copied().unwrap_or(0));
+        assert_eq!(
+            cm.slack.count(),
+            cm.deadlines,
+            "client {client}: one deadline judgment per deadlined request"
+        );
+    }
+    assert_eq!(m.queue_depth, 0);
+    for d in &m.devices {
+        assert_eq!(d.reserved, 0, "device {} leaks a reservation", d.id);
+    }
+
+    // The drained timeline agrees: one Submit and one terminal Done per
+    // accepted request, hedge events matching the counters exactly.
+    let snap = pc.pool.trace_snapshot();
+    assert_eq!(snap.stats.dropped, 0, "rings sized for the soak must drop nothing");
+    let mut submits: HashMap<u64, usize> = HashMap::new();
+    let mut dones: HashMap<u64, usize> = HashMap::new();
+    for r in &snap.records {
+        match r.kind {
+            EventKind::Submit => *submits.entry(r.req).or_default() += 1,
+            EventKind::Done => *dones.entry(r.req).or_default() += 1,
+            _ => {}
+        }
+    }
+    let total_accepted: u64 = accepted.values().sum();
+    assert_eq!(submits.len() as u64, total_accepted);
+    for (rid, n) in &submits {
+        assert_eq!(*n, 1, "request {rid} submitted more than once");
+        assert_eq!(
+            dones.get(rid).copied().unwrap_or(0),
+            1,
+            "request {rid} must terminate exactly once, hedged or not"
+        );
+    }
+    assert_eq!(dones.len(), submits.len(), "no Done without a matching Submit");
+    assert_eq!(snap.count(EventKind::HedgeLaunched) as u64, m.hedges);
+    assert_eq!(snap.count(EventKind::HedgeWon) as u64, m.hedge_wins);
+    assert_eq!(snap.count(EventKind::HedgeWasted) as u64, m.hedge_wasted);
+    let slo = m.clients.iter().find(|c| c.client == "slo").unwrap();
+    assert_eq!(snap.count(EventKind::DeadlineJudged) as u64, slo.deadlines);
 }
 
 #[test]

@@ -211,7 +211,11 @@ fn prop_omp_atomics_equal_intrinsic_atomics() {
 /// * the panic streak never exceeds `PANIC_STREAK_MAX`;
 /// * lane compaction never drops jobs: pushes − pops == len, exactly,
 ///   at every step — even with hundreds of one-off client tags forcing
-///   compaction.
+///   compaction;
+/// * hedge duplicates obey the same accounting (a hedge push is one
+///   queue entry, pinned, so only `pop_pinned` on its device sees it)
+///   and every winner latch settles exactly once however the settle
+///   ops interleave.
 #[test]
 fn prop_sched_queue_invariants_under_random_ops() {
     use omprt::sched::pool::QueueTestHarness;
@@ -224,7 +228,7 @@ fn prop_sched_queue_invariants_under_random_ops() {
             let ops: Vec<(u8, u8, u8, bool)> = (0..200)
                 .map(|_| {
                     (
-                        r.below(10) as u8,
+                        r.below(12) as u8,
                         r.below(12) as u8,
                         r.below(3) as u8,
                         r.below(4) == 0,
@@ -244,6 +248,8 @@ fn prop_sched_queue_invariants_under_random_ops() {
             let mut pushed = 0usize;
             let mut popped = 0usize;
             let mut oneoff = 0usize;
+            let mut hedges: Vec<usize> = vec![];
+            let mut settled = 0usize;
             for (i, &(op, client_sel, dev, deadline)) in ops.iter().enumerate() {
                 match op {
                     // 0-5: push. Client 0-2 from a small stable set;
@@ -275,9 +281,27 @@ fn prop_sched_queue_invariants_under_random_ops() {
                         }
                     }
                     // 9: claim a pinned job.
-                    _ => {
+                    9 => {
                         if q.pop_pinned(dev as usize) {
                             popped += 1;
+                        }
+                    }
+                    // 10: enqueue a hedge duplicate pinned to `dev` —
+                    // one queue entry like any other push, but invisible
+                    // to the DRR/EDF pops above.
+                    10 => {
+                        hedges.push(q.push_hedge("a", dev as usize));
+                        pushed += 1;
+                    }
+                    // 11: race a settle against whatever already
+                    // happened to that latch; `settle` may only win the
+                    // first time for any given hedge.
+                    _ => {
+                        if !hedges.is_empty() {
+                            let idx = hedges[client_sel as usize % hedges.len()];
+                            if q.settle(idx) {
+                                settled += 1;
+                            }
                         }
                     }
                 }
@@ -330,6 +354,28 @@ fn prop_sched_queue_invariants_under_random_ops() {
             // without bound (compaction reclaims drained lanes).
             if q.lane_count() > 130 {
                 return Err(format!("{} lanes survived compaction", q.lane_count()));
+            }
+            // Exactly-once settling: after force-settling every hedge
+            // latch, each must have yielded `true` exactly once across
+            // the whole run, however the random settles interleaved.
+            if q.latch_count() != hedges.len() {
+                return Err(format!(
+                    "latch count {} != {} hedge pushes",
+                    q.latch_count(),
+                    hedges.len()
+                ));
+            }
+            let mut total = settled;
+            for &idx in &hedges {
+                if q.settle(idx) {
+                    total += 1;
+                }
+            }
+            if total != hedges.len() {
+                return Err(format!(
+                    "settle accounting broke: {total} wins over {} latches",
+                    hedges.len()
+                ));
             }
             Ok(())
         },
