@@ -9,6 +9,7 @@ use omprt::hostrt::{DataEnv, MapType};
 use omprt::ir::passes::OptLevel;
 use omprt::ir::{FunctionBuilder, Module, Operand, Type};
 use omprt::sim::{Arch, LaunchConfig};
+use omprt::util::clock;
 
 fn atomic_loop_module(iters: i32) -> Module {
     let mut m = Module::new("abl");
@@ -35,7 +36,7 @@ fn main() {
         c.device.offload(&image, "k", &[d], LaunchConfig::new(2, 64)).unwrap(); // warmup
         let mut best = f64::MAX;
         for _ in 0..5 {
-            let t0 = std::time::Instant::now();
+            let t0 = clock::now();
             c.device.offload(&image, "k", &[d], LaunchConfig::new(2, 64)).unwrap();
             best = best.min(t0.elapsed().as_secs_f64());
         }

@@ -6,6 +6,7 @@
 use omprt::devrt::variant::{Selector, Variant, VariantRegistry, VariantSet};
 use omprt::devrt::{self, irlib, RuntimeKind};
 use omprt::sim::Arch;
+use omprt::util::clock;
 
 fn build_registry(n: usize) -> VariantRegistry {
     let mut reg = VariantRegistry::new();
@@ -33,7 +34,7 @@ fn main() {
     // resolution throughput
     for n in [10usize, 100, 1000] {
         let reg = build_registry(n);
-        let t0 = std::time::Instant::now();
+        let t0 = clock::now();
         let mut total = 0;
         for _ in 0..100 {
             total += reg.resolve_all(Arch::Nvptx64).len();
@@ -46,7 +47,7 @@ fn main() {
     }
     // full runtime build cost, both kinds (the packaging-time cost).
     for kind in RuntimeKind::all() {
-        let t0 = std::time::Instant::now();
+        let t0 = clock::now();
         for _ in 0..50 {
             let rt = devrt::build(kind, Arch::Amdgcn);
             std::hint::black_box(rt.ir_library.funcs.len());

@@ -8,6 +8,7 @@ use omprt::hostrt::{DataEnv, MapType};
 use omprt::ir::passes::OptLevel;
 use omprt::ir::{FunctionBuilder, Module, Operand, Type};
 use omprt::sim::{Arch, LaunchConfig};
+use omprt::util::clock;
 use omprt::util::stats::rel_diff;
 
 fn kernel(op: &'static str, iters: i32) -> Module {
@@ -44,7 +45,7 @@ fn time_op(kind: RuntimeKind, op: &'static str, iters: i32) -> f64 {
     c.device.offload(&image, "k", &[d], LaunchConfig::new(2, 64)).unwrap();
     let mut best = f64::MAX;
     for _ in 0..5 {
-        let t0 = std::time::Instant::now();
+        let t0 = clock::now();
         c.device.offload(&image, "k", &[d], LaunchConfig::new(2, 64)).unwrap();
         best = best.min(t0.elapsed().as_secs_f64());
     }

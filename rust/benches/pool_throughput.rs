@@ -52,14 +52,14 @@ use omprt::sched::workload::{
 use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig};
 use omprt::sim::Arch;
 use omprt::trace::Histogram;
-use std::time::Instant;
+use omprt::util::clock;
 
 const ELEMS: usize = 256;
 
 /// Submit one mixed batch asynchronously and wait for every result;
 /// returns launches/sec.
 fn run_batch(pool: &DevicePool, batch: usize) -> f64 {
-    let t0 = Instant::now();
+    let t0 = clock::now();
     let mut handles = Vec::with_capacity(batch);
     for i in 0..batch {
         let (req, want) = if i % 2 == 0 {
@@ -101,7 +101,7 @@ fn bench_pool(name: &str, config: &PoolConfig, batch: usize) -> (f64, f64) {
 /// after each submit — the per-request baseline) or asynchronously.
 fn run_small_scales(pool: &DevicePool, count: usize, sync: bool) -> f64 {
     let data: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
-    let t0 = Instant::now();
+    let t0 = clock::now();
     if sync {
         for _ in 0..count {
             let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
@@ -172,7 +172,7 @@ fn sharded_large_launch_scenario(n: usize) -> (f64, f64, usize) {
     // but a 1-device pool always falls back to a single shard).
     let (req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
     single.submit(req).unwrap().wait().unwrap();
-    let t0 = Instant::now();
+    let t0 = clock::now();
     let (req, _) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
     let resp = single.submit(req).unwrap().wait().unwrap();
     let t_single = t0.elapsed().as_secs_f64();
@@ -183,7 +183,7 @@ fn sharded_large_launch_scenario(n: usize) -> (f64, f64, usize) {
         DevicePool::new(&PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)).unwrap();
     let (req, _) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
     quad.submit(req).unwrap().wait().unwrap(); // warm all shards' caches
-    let t0 = Instant::now();
+    let t0 = clock::now();
     let (req, _) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
     let resp = quad.submit(req).unwrap().wait().unwrap();
     let t_quad = t0.elapsed().as_secs_f64();
@@ -206,7 +206,7 @@ fn sharded_large_launch_scenario(n: usize) -> (f64, f64, usize) {
 /// 8 concurrent client threads, each submitting `per_client` mixed small
 /// requests asynchronously; returns aggregate launches/sec.
 fn run_multi_client(pool: &DevicePool, per_client: usize) -> f64 {
-    let t0 = Instant::now();
+    let t0 = clock::now();
     std::thread::scope(|scope| {
         for client in 0..8 {
             let pool = &pool;
@@ -374,7 +374,7 @@ fn slo_run(with_slo: bool, per_client: usize) -> (f64, f64, f64, u64, u64) {
     pool.quiesce();
     // Warm-up traffic ran under the default client tag, so the per-client
     // samples below cover only the measured window.
-    let t0 = Instant::now();
+    let t0 = clock::now();
     std::thread::scope(|scope| {
         for b in 0..BULK {
             let pool = &pool;
@@ -485,7 +485,7 @@ fn degraded_device_scenario(requests: usize) -> (f64, f64, u64) {
             let resp = pool.submit(req).unwrap().wait().unwrap();
             assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
         }
-        let t0 = Instant::now();
+        let t0 = clock::now();
         for _ in 0..requests {
             let (req, want) = sharded_scale_request(&data, Affinity::any(), OptLevel::O2);
             let resp = pool.submit(req).unwrap().wait().unwrap();

@@ -3,7 +3,7 @@
 //! Accumulates, per target region, the exact columns of the paper's
 //! Table 1: total Time (ms), #Calls, Avg/Min/Max (µs).
 
-use crate::util::Summary;
+use crate::util::{clock, Summary};
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
@@ -37,7 +37,7 @@ impl Profiler {
 
     /// Time a closure under a region.
     pub fn time<R>(&self, region: &str, f: impl FnOnce() -> R) -> R {
-        let t0 = std::time::Instant::now();
+        let t0 = clock::now();
         let r = f();
         self.record(region, t0.elapsed());
         r

@@ -20,7 +20,7 @@ use crate::trace::{
     capture_text, chrome_trace_json, Event, EventKind, ExportMeta, Histogram, MetricsRegistry,
     RequestId, TraceSnapshot, TraceStats, Tracer,
 };
-use crate::util::{Error, Summary};
+use crate::util::{clock, Error, Summary};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -1729,7 +1729,7 @@ impl DevicePool {
             failed: AtomicU64::new(0),
             sharded_requests: AtomicU64::new(0),
             shard_jobs: AtomicU64::new(0),
-            started: Instant::now(),
+            started: clock::now(),
             tracer: Tracer::new(config.trace, config.trace_capacity, config.devices.len()),
         });
         let mut workers = vec![];
@@ -1922,7 +1922,7 @@ impl DevicePool {
         let budget = req
             .deadline
             .or_else(|| self.shared.slos.get(&req.client).copied())?;
-        Instant::now().checked_add(budget)
+        clock::now().checked_add(budget)
     }
 
     /// Non-blocking [`DevicePool::submit`]: when the queue is at capacity
@@ -2064,7 +2064,7 @@ impl DevicePool {
             .shared
             .slos
             .get(client)
-            .and_then(|t| Instant::now().checked_add(*t));
+            .and_then(|t| clock::now().checked_add(*t));
         let t0 = self.shared.tracer.now_ns();
         let rid = self.shared.tracer.next_request_id();
         self.enqueue_bulk(vec![Job::Task(TaskJob {
@@ -2072,7 +2072,7 @@ impl DevicePool {
             client: client.to_string(),
             run,
             deadline,
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
             req_id: rid,
         })])?;
         // Tasks have no kernel image; key word = 0.
@@ -2485,7 +2485,7 @@ impl DevicePool {
             if m.queue_depth == 0 && m.completed + m.failed >= m.submitted {
                 return;
             }
-            std::thread::sleep(Duration::from_millis(1));
+            clock::sleep(Duration::from_millis(1));
         }
     }
 
@@ -2614,7 +2614,7 @@ fn make_offload_job(
     req_id: RequestId,
 ) -> OffloadJob {
     let key = BatchKey { content: req.module.content_hash(), opt: req.opt };
-    let now = Instant::now();
+    let now = clock::now();
     OffloadJob {
         req: Arc::new(req),
         key,
@@ -2652,7 +2652,7 @@ fn deadline_budget_ns(deadline: Option<Instant>) -> u64 {
     match deadline {
         None => 0,
         Some(d) => d
-            .saturating_duration_since(Instant::now())
+            .saturating_duration_since(clock::now())
             .as_nanos()
             .clamp(1, u64::MAX as u128) as u64,
     }
@@ -2683,7 +2683,7 @@ fn spawn_stitcher(
     let partitioned = spec.partitioned.clone();
     let elem_bytes = spec.elem_bytes;
     let client = req.client.clone();
-    let enqueued = Instant::now();
+    let enqueued = clock::now();
     let (ftx, frx) = mpsc::channel();
     let (arm_tx, arm_rx) = mpsc::channel::<()>();
     std::thread::Builder::new()
@@ -2753,7 +2753,7 @@ fn stitch(
     // cannot double-count a split request.
     // Completion = the moment the last shard reported, captured before
     // the clients-table lock so contention cannot skew miss judgments.
-    let done = Instant::now();
+    let done = clock::now();
     let max_wait = got.iter().map(|(r, _, _)| r.queue_wait).max().unwrap_or(Duration::ZERO);
     // Payload: a = shards that reported a result, b = whether the whole
     // request stitched cleanly.
@@ -2945,7 +2945,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                         break 'wait (Work::Batch(vec![job]), 1, false, true);
                     }
                 }
-                let now = Instant::now();
+                let now = clock::now();
                 let limit = if shared.adaptive {
                     // Quarantined devices are not idle capacity: counting
                     // them would both oversize shard fan-outs and shrink
@@ -3052,7 +3052,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                 // multi-second leased benchmark would poison the global
                 // fallback and make every unseen image key look
                 // permanently panicked.
-                let done = Instant::now();
+                let done = clock::now();
                 let ok = outcome.is_ok();
                 match outcome {
                     Ok(()) => {
@@ -3119,7 +3119,7 @@ fn monitor_loop(shared: &Shared) {
         }
         if !shared.watchdog {
             // Hedge-only mode: no judgments, no probes.
-            std::thread::sleep(tick);
+            clock::sleep(tick);
             continue;
         }
         let now_ns = shared.now_ns();
@@ -3189,7 +3189,7 @@ fn monitor_loop(shared: &Shared) {
                 }
             }
         }
-        std::thread::sleep(tick);
+        clock::sleep(tick);
     }
 }
 
@@ -3217,7 +3217,7 @@ fn monitor_loop(shared: &Shared) {
 /// backpressure (the request was admitted once) — with a generation
 /// bump and a pin reservation so the planner sees the target as taken.
 fn maybe_hedge(shared: &Shared) {
-    let now = Instant::now();
+    let now = clock::now();
     let floor = (shared.watchdog_min / 4).max(Duration::from_millis(1));
     let mut dups: Vec<OffloadJob> = vec![];
     // Devices already claimed by a duplicate minted this pass.
@@ -3417,7 +3417,7 @@ fn sweep_stranded(shared: &Shared) {
     }
     // Removals freed queue slots for blocked submitters.
     shared.space.notify_all();
-    let done = Instant::now();
+    let done = clock::now();
     // One clients-table lock for the whole sweep, matching the batched
     // reply loop's discipline.
     let mut accounts = shared.clients.lock().unwrap();
@@ -3503,7 +3503,7 @@ fn sweep_stranded(shared: &Shared) {
 /// back to per-job sequential launches.
 fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>) {
     let n = batch.len();
-    let t_busy = Instant::now();
+    let t_busy = clock::now();
     slot.inflight.fetch_add(n, Ordering::Relaxed);
     slot.health.begin_work(shared.now_ns(), n, Some(batch[0].key.content));
     // Payload: a = jobs in the launch, b = image key. Tagged with the
@@ -3529,7 +3529,7 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
     // registered — one speculative copy per request is the ceiling —
     // and with hedging off the registry stays empty and untouched.
     let reg_tokens: Vec<u64> = if shared.hedge {
-        let started = Instant::now();
+        let started = clock::now();
         let mut reg = shared.inflight_reg.lock().unwrap();
         batch
             .iter()
@@ -3619,7 +3619,7 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
 
     slot.inflight.fetch_sub(n, Ordering::Relaxed);
     let busy = t_busy.elapsed();
-    let done = Instant::now();
+    let done = clock::now();
     slot.busy_ns
         .fetch_add(busy.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
     // Payload: a = jobs, b = whether every job in the launch succeeded,
@@ -3721,7 +3721,7 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
                         // sends it. Queue-wait restarts for the new
                         // stint (sojourn keeps the original clock).
                         job.target_device = None;
-                        job.enqueued = Instant::now();
+                        job.enqueued = clock::now();
                         shared.retries.fetch_add(1, Ordering::Relaxed);
                         // Same request id, incremented attempt: a =
                         // attempt number (1-based = devices tried so
@@ -4276,7 +4276,7 @@ impl QueueTestHarness {
             client: client.to_string(),
             deadline: None,
         };
-        let deadline = past_deadline.then(Instant::now);
+        let deadline = past_deadline.then(clock::now);
         let (tx, _rx) = mpsc::channel();
         self.q
             .push(Job::Offload(make_offload_job(req, tx, pinned.is_some(), pinned, deadline, 0)));
@@ -4287,7 +4287,7 @@ impl QueueTestHarness {
     /// the invariant that no pinned job ever leaves through this path.
     pub fn pop(&mut self, device_id: usize, limit: usize) -> Option<(String, bool, usize)> {
         let (work, preempted) =
-            self.q.pop(Self::spec(), device_id, limit.max(1), Instant::now(), &self.svc)?;
+            self.q.pop(Self::spec(), device_id, limit.max(1), clock::now(), &self.svc)?;
         match work {
             Work::Task(_) => unreachable!("harness only queues offload jobs"),
             Work::Batch(batch) => {
@@ -4619,7 +4619,7 @@ mod tests {
 
     fn pop_client(q: &mut SchedQueue, spec: DeviceSpec, limit: usize) -> Option<String> {
         let svc = ServiceEwma::new();
-        match q.pop(spec, 0, limit, Instant::now(), &svc)?.0 {
+        match q.pop(spec, 0, limit, clock::now(), &svc)?.0 {
             Work::Batch(batch) => Some(batch[0].req.client.clone()),
             Work::Task(_) => None,
         }
@@ -4638,7 +4638,7 @@ mod tests {
         }
         let order: Vec<String> = (0..6).map(|_| pop_client(&mut q, SPEC, 1).unwrap()).collect();
         assert_eq!(order, ["a", "b", "a", "b", "a", "a"], "chatty a must not starve b");
-        assert!(q.pop(SPEC, 0, 1, Instant::now(), &ServiceEwma::new()).is_none());
+        assert!(q.pop(SPEC, 0, 1, clock::now(), &ServiceEwma::new()).is_none());
         assert_eq!(q.len(), 0);
     }
 
@@ -4663,7 +4663,7 @@ mod tests {
             q.push(queued_job("b", None));
         }
         // All four jobs share one module, so a limit-4 pop takes them all.
-        match q.pop(SPEC, 0, 4, Instant::now(), &ServiceEwma::new()).unwrap().0 {
+        match q.pop(SPEC, 0, 4, clock::now(), &ServiceEwma::new()).unwrap().0 {
             Work::Batch(batch) => {
                 assert_eq!(batch.len(), 4);
                 assert_eq!(batch[0].req.client, "a", "leader comes from the served lane");
@@ -4688,7 +4688,7 @@ mod tests {
         let mut q = SchedQueue::new(true, &[]);
         q.push(queued_job("a", Some(1)));
         // Worker 0 sees nothing poppable.
-        assert!(q.pop(SPEC, 0, 4, Instant::now(), &ServiceEwma::new()).is_none());
+        assert!(q.pop(SPEC, 0, 4, clock::now(), &ServiceEwma::new()).is_none());
         assert!(q.pop_pinned(0).is_none());
         // Worker 1 claims it via the pinned path.
         let job = q.pop_pinned(1).expect("pinned job for device 1");
@@ -4720,12 +4720,12 @@ mod tests {
             q.push(queued_job("bulk", None));
         }
         // ...and one deadlined job already past its deadline.
-        q.push(queued_job_dl("slo", None, Some(Instant::now())));
-        let (client, preempted) = pop_flag(&mut q, Instant::now(), &svc).unwrap();
+        q.push(queued_job_dl("slo", None, Some(clock::now())));
+        let (client, preempted) = pop_flag(&mut q, clock::now(), &svc).unwrap();
         assert_eq!(client, "slo", "panic work must jump the DRR rotation");
         assert!(preempted, "the pop must be flagged as a preemption");
         // With the panic drained, normal DRR resumes.
-        let (client, preempted) = pop_flag(&mut q, Instant::now(), &svc).unwrap();
+        let (client, preempted) = pop_flag(&mut q, clock::now(), &svc).unwrap();
         assert_eq!((client.as_str(), preempted), ("bulk", false));
     }
 
@@ -4733,14 +4733,14 @@ mod tests {
     fn panic_window_opens_at_predicted_service_time() {
         let mut q = SchedQueue::new(true, &[]);
         q.push(queued_job("bulk", None));
-        let job = queued_job_dl("slo", None, Some(Instant::now() + Duration::from_secs(5)));
+        let job = queued_job_dl("slo", None, Some(clock::now() + Duration::from_secs(5)));
         let key = job.image_key().unwrap();
         q.push(job);
         // With no service history (predicted service 0) five seconds of
         // slack looks comfortable: no preemption.
         let fresh = ServiceEwma::new();
-        assert!(!q.any_panic(SPEC, 0, Instant::now(), &fresh));
-        let (client, preempted) = pop_flag(&mut q, Instant::now(), &fresh).unwrap();
+        assert!(!q.any_panic(SPEC, 0, clock::now(), &fresh));
+        let (client, preempted) = pop_flag(&mut q, clock::now(), &fresh).unwrap();
         assert_eq!((client.as_str(), preempted), ("bulk", false));
         // A service EWMA slower than the remaining slack opens the panic
         // window before the deadline itself arrives.
@@ -4748,8 +4748,8 @@ mod tests {
         for _ in 0..8 {
             slow.record(Some(key), 10.0);
         }
-        assert!(q.any_panic(SPEC, 0, Instant::now(), &slow));
-        let (client, preempted) = pop_flag(&mut q, Instant::now(), &slow).unwrap();
+        assert!(q.any_panic(SPEC, 0, clock::now(), &slow));
+        let (client, preempted) = pop_flag(&mut q, clock::now(), &slow).unwrap();
         assert_eq!((client.as_str(), preempted), ("slo", true));
     }
 
@@ -4757,7 +4757,7 @@ mod tests {
     fn edf_serves_the_earliest_deadline_first() {
         let mut q = SchedQueue::new(true, &[]);
         let svc = ServiceEwma::new();
-        let base = Instant::now();
+        let base = clock::now();
         q.push(queued_job_dl("later", None, Some(base + Duration::from_millis(2))));
         q.push(queued_job_dl("sooner", None, Some(base + Duration::from_millis(1))));
         // Both are past deadline at pop time: earliest must win even
@@ -4775,13 +4775,13 @@ mod tests {
         let svc = ServiceEwma::new();
         // A pathological SLO client: every job is already past deadline.
         for _ in 0..32 {
-            q.push(queued_job_dl("slo", None, Some(Instant::now())));
+            q.push(queued_job_dl("slo", None, Some(clock::now())));
         }
         for _ in 0..4 {
             q.push(queued_job("bulk", None));
         }
         let order: Vec<(String, bool)> =
-            (0..(2 * (PANIC_STREAK_MAX + 1))).map(|_| pop_flag(&mut q, Instant::now(), &svc).unwrap()).collect();
+            (0..(2 * (PANIC_STREAK_MAX + 1))).map(|_| pop_flag(&mut q, clock::now(), &svc).unwrap()).collect();
         // The first PANIC_STREAK_MAX pops may all be preemptions, but the
         // streak cap forces a normal DRR pop — which must reach the
         // best-effort lane — before preemption resumes.
@@ -4806,8 +4806,8 @@ mod tests {
         for _ in 0..4 {
             q.push(queued_job("a", None));
         }
-        assert!(!q.any_panic(SPEC, 0, Instant::now(), &svc));
-        let (_, preempted) = pop_flag(&mut q, Instant::now(), &svc).unwrap();
+        assert!(!q.any_panic(SPEC, 0, clock::now(), &svc));
+        let (_, preempted) = pop_flag(&mut q, clock::now(), &svc).unwrap();
         assert!(!preempted);
     }
 
@@ -4816,7 +4816,7 @@ mod tests {
         let mut q = SchedQueue::new(true, &[]);
         for i in 0..200 {
             q.push(queued_job(&format!("oneoff{i}"), None));
-            let _ = q.pop(SPEC, 0, 1, Instant::now(), &ServiceEwma::new());
+            let _ = q.pop(SPEC, 0, 1, clock::now(), &ServiceEwma::new());
         }
         assert!(
             q.lanes.len() <= 130,
@@ -4833,7 +4833,7 @@ mod tests {
             q.push(queued_job("a", None));
         }
         assert_eq!((q.len(), q.peak()), (3, 3));
-        let _ = q.pop(SPEC, 0, 1, Instant::now(), &ServiceEwma::new());
+        let _ = q.pop(SPEC, 0, 1, clock::now(), &ServiceEwma::new());
         q.push(queued_job("b", None));
         assert_eq!((q.len(), q.peak()), (3, 3));
         q.push(queued_job("b", None));
@@ -4974,7 +4974,7 @@ mod tests {
             });
             // Let the spawned enqueue reach the backpressure wait, then
             // free device 0 so it drains the filler and opens a slot.
-            std::thread::sleep(Duration::from_millis(100));
+            clock::sleep(Duration::from_millis(100));
             assert_eq!(pool.metrics().queue_depth, 1, "enqueue must be blocked on the cap");
             releases[0].send(()).unwrap();
             let resp = rx

@@ -48,7 +48,7 @@
 //! `omprt bench --pool` (comma-separated) and by
 //! [`crate::sched::PoolConfig::with_fault_spec`].
 
-use crate::util::Error;
+use crate::util::{clock, Error};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -239,7 +239,7 @@ const SLEEP_CHUNK: Duration = Duration::from_millis(5);
 /// Sleep `total` in [`SLEEP_CHUNK`] steps, returning early (false) when
 /// `shutdown` flips.
 fn chunked_sleep(total: Duration, shutdown: &AtomicBool) -> bool {
-    let t0 = Instant::now();
+    let t0 = clock::now();
     loop {
         let left = total.saturating_sub(t0.elapsed());
         if left.is_zero() {
@@ -248,7 +248,7 @@ fn chunked_sleep(total: Duration, shutdown: &AtomicBool) -> bool {
         if shutdown.load(Ordering::SeqCst) {
             return false;
         }
-        std::thread::sleep(SLEEP_CHUNK.min(left));
+        clock::sleep(SLEEP_CHUNK.min(left));
     }
 }
 
@@ -281,7 +281,7 @@ impl FaultState {
     pub fn arm(spec: FaultSpec) -> FaultState {
         FaultState {
             spec,
-            armed: Instant::now(),
+            armed: clock::now(),
             launches: AtomicU64::new(0),
             fail_seq: AtomicU64::new(0),
             injected: AtomicU64::new(0),
@@ -366,7 +366,7 @@ impl FaultState {
                 }
             }
             FaultKind::Stall { dur, window } => {
-                let now = Instant::now();
+                let now = clock::now();
                 let w = window.unwrap_or(*dur);
                 if self.window_active(Some(w), now) {
                     self.injected.fetch_add(1, Ordering::Relaxed);
@@ -377,7 +377,7 @@ impl FaultState {
                 Ok(1.0)
             }
             FaultKind::Slow { factor, window } => {
-                if self.window_active(*window, Instant::now()) {
+                if self.window_active(*window, clock::now()) {
                     self.injected.fetch_add(1, Ordering::Relaxed);
                     Ok(*factor)
                 } else {
@@ -539,10 +539,10 @@ mod tests {
     fn stall_sleeps_then_recovers() {
         let f = FaultState::arm(FaultSpec::parse("0=stall:20ms@launch:1").unwrap());
         let sd = no_shutdown();
-        let t0 = Instant::now();
+        let t0 = clock::now();
         assert!(f.on_batch_start(1, &sd).is_ok()); // launch 0: clean
         assert!(t0.elapsed() < Duration::from_millis(15), "no stall before trigger");
-        let t1 = Instant::now();
+        let t1 = clock::now();
         assert!(f.on_batch_start(1, &sd).is_ok()); // launch 1: stalls 20ms
         assert!(
             t1.elapsed() >= Duration::from_millis(18),
@@ -552,8 +552,8 @@ mod tests {
         assert_eq!(f.injected(), 1);
         // Default window = one stall's worth: once it has passed, later
         // launches run clean and probes succeed.
-        std::thread::sleep(Duration::from_millis(25));
-        let t2 = Instant::now();
+        clock::sleep(Duration::from_millis(25));
+        let t2 = clock::now();
         assert!(f.on_batch_start(1, &sd).is_ok());
         assert!(t2.elapsed() < Duration::from_millis(15), "window over: no more stalls");
         assert!(f.probe_ok().is_ok());
@@ -571,7 +571,7 @@ mod tests {
     fn stall_abandons_on_shutdown() {
         let f = FaultState::arm(FaultSpec::parse("0=stall:10s@launch:0").unwrap());
         let sd = AtomicBool::new(true);
-        let t0 = Instant::now();
+        let t0 = clock::now();
         assert!(f.on_batch_start(1, &sd).is_ok());
         assert!(t0.elapsed() < Duration::from_secs(1), "shutdown must cut the stall short");
     }
@@ -584,7 +584,7 @@ mod tests {
         assert!((factor - 4.0).abs() < 1e-12);
         assert!(f.probe_ok().is_ok(), "slow devices respond to probes");
         // The slowdown sleep scales with observed time.
-        let t0 = Instant::now();
+        let t0 = clock::now();
         FaultState::apply_slowdown(3.0, Duration::from_millis(10), &sd);
         assert!(t0.elapsed() >= Duration::from_millis(18));
     }
@@ -594,7 +594,7 @@ mod tests {
         let f = FaultState::arm(FaultSpec::parse("0=die@t:30ms").unwrap());
         let sd = no_shutdown();
         assert!(f.on_batch_start(1, &sd).is_ok(), "alive before the trigger time");
-        std::thread::sleep(Duration::from_millis(35));
+        clock::sleep(Duration::from_millis(35));
         assert!(f.on_batch_start(1, &sd).is_err());
         assert!(f.probe_ok().is_err());
     }

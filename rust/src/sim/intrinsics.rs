@@ -136,13 +136,7 @@ pub fn dispatch(
         }
 
         // ---- misc -------------------------------------------------------
-        "gpu.clock" => {
-            let now = std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .unwrap_or_default()
-                .as_nanos() as u64;
-            Ok(uniform(now))
-        }
+        "gpu.clock" => Ok(uniform(crate::util::clock::unix_nanos())),
         _ => Err(Error::trap("intrinsic", format!("unknown intrinsic `{name}`"))),
     }
 }

@@ -5,7 +5,7 @@ use super::device::DeviceDesc;
 use super::interp::{CallEnv, Interp};
 use super::loader::LoadedModule;
 use super::memory::{GlobalMemory, SharedMemory};
-use crate::util::Error;
+use crate::util::{clock, Error};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -235,7 +235,7 @@ pub fn launch_kernel(
     let stats = StatsCollector::default();
     let first_error: Mutex<Option<Error>> = Mutex::new(None);
     let next_block = AtomicUsize::new(0);
-    let t0 = std::time::Instant::now();
+    let t0 = clock::now();
 
     let workers = desc.sm_count.min(cfg.grid_dim).max(1);
     std::thread::scope(|scope| {
@@ -336,7 +336,7 @@ pub fn launch_kernel_batch(
     let stats: Vec<StatsCollector> =
         (0..items.len()).map(|_| StatsCollector::default()).collect();
     let cursor = AtomicUsize::new(0);
-    let t0 = std::time::Instant::now();
+    let t0 = clock::now();
 
     if !flat.is_empty() {
         let workers = desc.sm_count.min(flat.len() as u32).max(1);
@@ -519,7 +519,7 @@ mod tests {
         let b = Arc::new(BlockBarrier::new(2));
         let b2 = b.clone();
         let waiter = std::thread::spawn(move || b2.wait());
-        std::thread::sleep(Duration::from_millis(50));
+        clock::sleep(Duration::from_millis(50));
         b.leave(); // the other warp exits the kernel instead of arriving
         waiter.join().unwrap().unwrap();
     }
@@ -529,7 +529,7 @@ mod tests {
         let b = Arc::new(BlockBarrier::new(2));
         let b2 = b.clone();
         let waiter = std::thread::spawn(move || b2.wait());
-        std::thread::sleep(Duration::from_millis(50));
+        clock::sleep(Duration::from_millis(50));
         b.poison();
         assert!(waiter.join().unwrap().is_err());
     }

@@ -12,6 +12,7 @@
 
 use super::event::{Event, EventKind, RequestId, TraceRecord};
 use super::ring::TraceRing;
+use crate::util::clock;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -126,7 +127,7 @@ impl Tracer {
             enabled,
             capacity: cap,
             n_workers,
-            epoch: Instant::now(),
+            epoch: clock::now(),
             next_req: AtomicU64::new(1),
             next_seq: AtomicU64::new(1),
             rings,

@@ -1,0 +1,117 @@
+//! The wall-clock facade: the **only** file in the tree allowed to call
+//! `Instant::now`, `SystemTime::now` or `thread::sleep`.
+//!
+//! Everything above the simulator — service EWMAs, watchdog judgments,
+//! SLO deadlines, fault triggers, stall sleeps, trace timestamps — asks
+//! *this* module for the time. That single choke point is what makes the
+//! ROADMAP's "deterministic virtual time" item a local change instead of
+//! a tree-wide hunt: a discrete-event [`Clock`] implementation (events on
+//! a virtual timeline, `sleep` jumping time to the next event) slots in
+//! behind the same trait without touching a single call site again.
+//!
+//! The invariant is *enforced*, not aspirational: `omprt lint` (and the
+//! toolchain-less `python/lint/run.py` subset) fails the build on any
+//! `Instant::now` / `SystemTime::now` / `thread::sleep` token outside
+//! the files listed in `lint/rules/wallclock.allow` — which names
+//! exactly this file.
+
+use std::time::{Duration, Instant};
+
+/// A source of time and sleep. [`WallClock`] is the process clock; the
+/// planned discrete-event implementation advances a virtual timeline
+/// instead (see ROADMAP "deterministic virtual time").
+pub trait Clock: Send + Sync {
+    /// Current monotonic instant.
+    fn now(&self) -> Instant;
+    /// Wall time as nanoseconds since the Unix epoch (used by the
+    /// `gpu.clock` simulator intrinsic; 0 is never returned).
+    fn unix_nanos(&self) -> u64;
+    /// Block the calling thread for `d` (virtual clocks advance the
+    /// timeline instead of blocking).
+    fn sleep(&self, d: Duration);
+}
+
+/// The real process clock.
+pub struct WallClock;
+
+impl Clock for WallClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+
+    fn unix_nanos(&self) -> u64 {
+        let ns = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default()
+            .as_nanos() as u64;
+        ns.max(1)
+    }
+
+    fn sleep(&self, d: Duration) {
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+/// Monotonic now from the process clock. Call-site shorthand for
+/// `WallClock.now()`; code that already holds a `&dyn Clock` should use
+/// the trait method instead.
+pub fn now() -> Instant {
+    WallClock.now()
+}
+
+/// Nanoseconds since the Unix epoch from the process clock.
+pub fn unix_nanos() -> u64 {
+    WallClock.unix_nanos()
+}
+
+/// Sleep on the process clock. Zero-duration sleeps return immediately
+/// (a virtual clock treats them as "yield nothing", so callers must not
+/// rely on a zero sleep rescheduling the OS thread).
+pub fn sleep(d: Duration) {
+    WallClock.sleep(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_is_monotone() {
+        let a = now();
+        let b = now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn sleep_blocks_for_at_least_the_duration() {
+        let t0 = now();
+        sleep(Duration::from_millis(5));
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn zero_sleep_returns_immediately() {
+        let t0 = now();
+        sleep(Duration::ZERO);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn unix_nanos_is_nonzero_and_advances() {
+        let a = unix_nanos();
+        assert!(a > 0);
+        sleep(Duration::from_millis(1));
+        assert!(unix_nanos() >= a);
+    }
+
+    #[test]
+    fn clock_is_object_safe() {
+        let c: &dyn Clock = &WallClock;
+        let t0 = c.now();
+        c.sleep(Duration::ZERO);
+        assert!(c.now() >= t0);
+        assert!(c.unix_nanos() > 0);
+    }
+}

@@ -1,7 +1,9 @@
-//! Shared utilities: the crate error type, a deterministic PRNG, summary
-//! statistics, and a minimal property-testing harness (the offline build
-//! has no `proptest`; `prop.rs` provides the subset we need).
+//! Shared utilities: the crate error type, the wall-clock facade, a
+//! deterministic PRNG, summary statistics, and a minimal
+//! property-testing harness (the offline build has no `proptest`;
+//! `prop.rs` provides the subset we need).
 
+pub mod clock;
 pub mod error;
 pub mod prng;
 pub mod prop;

@@ -2,6 +2,7 @@
 //! `nvprof`-analog profiler that regenerates the paper's Table 1 columns
 //! (Time, #Calls, Avg, Min, Max).
 
+use super::clock;
 use std::time::Duration;
 
 /// Online summary of a series of duration samples.
@@ -105,7 +106,7 @@ impl Summary {
 
 /// Time a closure, returning (result, elapsed).
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
-    let t0 = std::time::Instant::now();
+    let t0 = clock::now();
     let r = f();
     (r, t0.elapsed())
 }

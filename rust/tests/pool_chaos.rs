@@ -41,8 +41,9 @@ use omprt::sched::workload::{saxpy_request, scale_request, sharded_scale_request
 use omprt::sched::{bytes_to_f32, Affinity, HealthState, OffloadHandle, PoolConfig};
 use omprt::sim::Arch;
 use omprt::trace::{validate_chrome_trace, EventKind};
+use omprt::util::clock;
 use std::collections::{HashMap, HashSet};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Poll `metrics()` until `pred` holds or `timeout` passes; returns
 /// whether it held.
@@ -51,7 +52,7 @@ fn wait_for(
     timeout: Duration,
     pred: impl Fn(&omprt::sched::PoolMetrics) -> bool,
 ) -> bool {
-    let t0 = Instant::now();
+    let t0 = clock::now();
     loop {
         if pred(&pc.metrics()) {
             return true;
@@ -59,7 +60,7 @@ fn wait_for(
         if t0.elapsed() > timeout {
             return false;
         }
-        std::thread::sleep(Duration::from_millis(5));
+        clock::sleep(Duration::from_millis(5));
     }
 }
 
@@ -529,7 +530,7 @@ fn dead_device_work_retries_onto_healthy_devices() {
         }),
         "fault streak must quarantine the dead device"
     );
-    std::thread::sleep(Duration::from_millis(250));
+    clock::sleep(Duration::from_millis(250));
     assert_eq!(
         pc.metrics().devices[0].health,
         HealthState::Quarantined,
@@ -575,7 +576,7 @@ fn stalled_inflight_job_is_hedged_and_wins() {
         let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
         handles.push((pc.submit(req).unwrap(), want));
     }
-    let t0 = Instant::now();
+    let t0 = clock::now();
     for (h, want) in handles {
         let resp = h.wait().expect("every request resolves, hedged or not");
         assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);

@@ -11,6 +11,7 @@ use omprt::sched::workload::{
 };
 use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig, TrySubmitError};
 use omprt::sim::Arch;
+use omprt::util::clock;
 use std::time::Duration;
 
 const CLIENTS: usize = 8;
@@ -338,7 +339,7 @@ fn backpressure_bounds_the_queue() {
         .unwrap();
     // Wait until the worker has actually claimed the task.
     while pool.metrics().queue_depth > 0 || pool.metrics().devices[0].inflight == 0 {
-        std::thread::sleep(std::time::Duration::from_millis(1));
+        clock::sleep(std::time::Duration::from_millis(1));
     }
     let data = vec![1.0f32; 16];
     // Fill the queue to the cap without blocking.
@@ -364,7 +365,7 @@ fn backpressure_bounds_the_queue() {
             let h = pool.submit(returned).unwrap(); // blocks until space
             h.wait().unwrap()
         });
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        clock::sleep(std::time::Duration::from_millis(20));
         assert!(!blocker.is_finished(), "submit must block while the queue is full");
         gate_tx.send(()).unwrap();
         blocker.join().unwrap()
@@ -404,7 +405,7 @@ fn batched_pop_unblocks_every_waiting_submitter() {
         })
         .unwrap();
     while pool.metrics().queue_depth > 0 || pool.metrics().devices[0].inflight == 0 {
-        std::thread::sleep(Duration::from_millis(1));
+        clock::sleep(Duration::from_millis(1));
     }
     // Fill the queue to the cap with same-image requests: the worker's
     // next visit coalesces all four into one pop, freeing 4 slots.
@@ -427,7 +428,7 @@ fn batched_pop_unblocks_every_waiting_submitter() {
                 })
             })
             .collect();
-        std::thread::sleep(Duration::from_millis(30));
+        clock::sleep(Duration::from_millis(30));
         for b in &blockers {
             assert!(!b.is_finished(), "submit must block while the queue is full");
         }
@@ -480,7 +481,7 @@ fn quiet_clients_are_not_starved_by_a_chatty_one() {
     while pool.metrics().queue_depth > 0
         || pool.metrics().devices.iter().any(|d| d.inflight == 0)
     {
-        std::thread::sleep(Duration::from_millis(1));
+        clock::sleep(Duration::from_millis(1));
     }
     // Distinct scale factors → distinct modules per client, so quiet
     // jobs cannot ride the chatty client's fused batches.
