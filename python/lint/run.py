@@ -1,0 +1,608 @@
+#!/usr/bin/env python3
+"""omprt-lint, Python driver.
+
+A toolchain-less subset of `omprt lint` (see `rust/src/lint/`): the
+containers that authored PRs 1-7 had no `cargo`/`rustc`, so the three
+rules that need nothing but a Rust *lexer* are reimplemented here from
+the same rule manifests under `lint/rules/`:
+
+  wallclock  `Instant::now` / `SystemTime::now` / `thread::sleep` are
+             permitted only in the files listed in
+             `lint/rules/wallclock.allow` (the `util/clock.rs` facade).
+  fmtargs    format-argument arity for the `format!` / `println!` /
+             `write!` macro families (positional placeholder count vs
+             provided positional args; unused named args).
+  delims     per-file balance of `()` `[]` `{}` outside strings,
+             char literals and comments.
+
+The lexer handles line/nested-block comments, string literals with
+escapes, raw strings (`r"…"`, `r#"…"#`, byte/C variants), char literals
+and lifetimes — exactly the cases that made the manual review ritual
+error-prone. The Rust implementation is the authority; this driver must
+stay behaviourally identical for the three rules it implements (the
+fixture tests in `rust/src/lint/` encode the contract).
+
+Usage:
+    python3 python/lint/run.py [--root DIR] [--report FILE]
+
+Exit status: 0 when clean, 1 when any finding is reported, 2 on usage
+or manifest errors.
+"""
+
+import os
+import sys
+
+# --------------------------------------------------------------------------
+# Lexer
+# --------------------------------------------------------------------------
+
+# Token kinds: "ident", "str" (text = body between the quotes), "char",
+# "num", "life" (lifetime), "punct" (single char, or the two-char "::").
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind = kind
+        self.text = text
+        self.line = line
+
+    def __repr__(self):
+        return f"Tok({self.kind!r}, {self.text!r}, {self.line})"
+
+
+def _is_ident_start(c):
+    return c.isalpha() or c == "_"
+
+
+def _is_ident_cont(c):
+    return c.isalnum() or c == "_"
+
+
+def _raw_string_prefix(s, i):
+    """Length of a raw/byte/C string prefix at `i` ("r", "br", "cr", "b",
+    "c" + hashes + quote), or None. Returns (prefix_len, n_hashes, raw)."""
+    j = i
+    seen_r = False
+    head = s[j : j + 2]
+    if head[:1] in ("b", "c"):
+        j += 1
+        if s[j : j + 1] == "r":
+            j += 1
+            seen_r = True
+    elif head[:1] == "r":
+        j += 1
+        seen_r = True
+    else:
+        return None
+    hashes = 0
+    if seen_r:
+        while s[j : j + 1] == "#":
+            j += 1
+            hashes += 1
+    if s[j : j + 1] != '"':
+        return None
+    return (j - i, hashes, seen_r)
+
+
+def lex(src):
+    """Tokenize Rust source. Comments vanish; strings become single
+    tokens carrying their body."""
+    toks = []
+    i = 0
+    line = 1
+    n = len(src)
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # Comments.
+        if c == "/" and src[i + 1 : i + 2] == "/":
+            j = src.find("\n", i)
+            i = n if j < 0 else j
+            continue
+        if c == "/" and src[i + 1 : i + 2] == "*":
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if src[i] == "\n":
+                    line += 1
+                    i += 1
+                elif src[i : i + 2] == "/*":
+                    depth += 1
+                    i += 2
+                elif src[i : i + 2] == "*/":
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            continue
+        # Raw / byte / C strings (must check before plain idents: `r#"`).
+        if c in "rbc":
+            pre = _raw_string_prefix(src, i)
+            if pre is not None:
+                plen, hashes, raw = pre
+                start_line = line
+                i += plen + 1  # past the opening quote
+                body_start = i
+                if raw:
+                    close = '"' + "#" * hashes
+                    j = src.find(close, i)
+                    j = n if j < 0 else j
+                    body = src[i:j]
+                    line += body.count("\n")
+                    i = min(n, j + len(close))
+                else:
+                    while i < n and src[i] != '"':
+                        if src[i] == "\\":
+                            i += 1
+                        if i < n and src[i] == "\n":
+                            line += 1
+                        i += 1
+                    body = src[body_start:i]
+                    i += 1
+                toks.append(Tok("str", body, start_line))
+                continue
+        # Plain strings.
+        if c == '"':
+            start_line = line
+            i += 1
+            body_start = i
+            while i < n and src[i] != '"':
+                if src[i] == "\\":
+                    i += 1
+                if i < n and src[i] == "\n":
+                    line += 1
+                i += 1
+            toks.append(Tok("str", src[body_start:i], start_line))
+            i += 1
+            continue
+        # Char literal vs lifetime.
+        if c == "'":
+            nxt = src[i + 1 : i + 2]
+            if _is_ident_start(nxt) and src[i + 2 : i + 3] != "'":
+                j = i + 1
+                while j < n and _is_ident_cont(src[j]):
+                    j += 1
+                toks.append(Tok("life", src[i:j], line))
+                i = j
+                continue
+            j = i + 1
+            while j < n and src[j] != "'":
+                if src[j] == "\\":
+                    j += 1
+                j += 1
+            toks.append(Tok("char", src[i + 1 : j], line))
+            i = j + 1
+            continue
+        # Numbers (incl. hex and float forms; `1..4` must not eat dots).
+        if c.isdigit():
+            j = i
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            if src[j : j + 1] == "." and src[j + 1 : j + 2].isdigit():
+                j += 1
+                while j < n and (src[j].isalnum() or src[j] == "_"):
+                    j += 1
+                if src[j - 1 : j] in ("e", "E") and src[j : j + 1] in ("+", "-"):
+                    j += 1
+                    while j < n and src[j].isdigit():
+                        j += 1
+            toks.append(Tok("num", src[i:j], line))
+            i = j
+            continue
+        # Identifiers / keywords.
+        if _is_ident_start(c):
+            j = i
+            while j < n and _is_ident_cont(src[j]):
+                j += 1
+            toks.append(Tok("ident", src[i:j], line))
+            i = j
+            continue
+        # Punctuation; "::" kept as one token for path matching.
+        if c == ":" and src[i + 1 : i + 2] == ":":
+            toks.append(Tok("punct", "::", line))
+            i += 2
+            continue
+        toks.append(Tok("punct", c, line))
+        i += 1
+    return toks
+
+
+# --------------------------------------------------------------------------
+# Manifests
+# --------------------------------------------------------------------------
+
+
+def load_manifest(path):
+    """Manifest = one entry per line; `#` starts a comment; blank lines
+    ignored. Returns the list of entry strings (whitespace-stripped)."""
+    entries = []
+    with open(path, encoding="utf-8") as f:
+        for raw in f:
+            entry = raw.split("#", 1)[0].strip()
+            if entry:
+                entries.append(entry)
+    return entries
+
+
+# --------------------------------------------------------------------------
+# Rule: wallclock
+# --------------------------------------------------------------------------
+
+WALLCLOCK_PATTERNS = [
+    ("Instant", "now"),
+    ("SystemTime", "now"),
+    ("thread", "sleep"),
+]
+
+
+def check_wallclock(rel, toks, allowed_files):
+    if rel in allowed_files:
+        return []
+    findings = []
+    for k in range(len(toks) - 2):
+        a, b, c = toks[k], toks[k + 1], toks[k + 2]
+        if a.kind != "ident" or b.text != "::" or c.kind != "ident":
+            continue
+        for head, tail in WALLCLOCK_PATTERNS:
+            if a.text == head and c.text == tail:
+                findings.append(
+                    (
+                        rel,
+                        a.line,
+                        "wallclock",
+                        f"`{head}::{tail}` outside the clock facade — "
+                        "route through `util::clock` (lint/rules/wallclock.allow)",
+                    )
+                )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Rule: delims
+# --------------------------------------------------------------------------
+
+_OPEN = {"(": ")", "[": "]", "{": "}"}
+_CLOSE = {")": "(", "]": "[", "}": "{"}
+
+
+def check_delims(rel, toks, allow):
+    if rel in allow:
+        return []
+    stack = []
+    findings = []
+    for t in toks:
+        if t.kind != "punct":
+            continue
+        if t.text in _OPEN:
+            stack.append(t)
+        elif t.text in _CLOSE:
+            if not stack:
+                findings.append(
+                    (rel, t.line, "delims", f"unmatched closing `{t.text}`")
+                )
+            elif _OPEN[stack[-1].text] != t.text:
+                o = stack.pop()
+                findings.append(
+                    (
+                        rel,
+                        t.line,
+                        "delims",
+                        f"`{o.text}` from line {o.line} closed by `{t.text}`",
+                    )
+                )
+            else:
+                stack.pop()
+    for o in stack:
+        findings.append((rel, o.line, "delims", f"unclosed `{o.text}`"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Rule: fmtargs
+# --------------------------------------------------------------------------
+
+# macro name -> index of the format-string argument. Entries whose format
+# string is optional (assert!/panic! forms) are skipped when the argument
+# at that index is not a string literal.
+FMT_MACROS = {
+    "format": 0,
+    "format_args": 0,
+    "print": 0,
+    "println": 0,
+    "eprint": 0,
+    "eprintln": 0,
+    "panic": 0,
+    "todo": 0,
+    "unimplemented": 0,
+    "unreachable": 0,
+    "error": 0,
+    "warn": 0,
+    "info": 0,
+    "debug": 0,
+    "trace": 0,
+    "write": 1,
+    "writeln": 1,
+    "assert": 1,
+    "debug_assert": 1,
+    "assert_eq": 2,
+    "assert_ne": 2,
+    "debug_assert_eq": 2,
+    "debug_assert_ne": 2,
+}
+
+_DELIM_PAIR = {"(": ")", "[": "]", "{": "}"}
+
+
+def _split_macro_args(toks, start):
+    """`start` indexes the opening delimiter token. Returns
+    (args, end_index) where args is a list of token slices split on
+    top-level commas. Turbofish `::<...>` commas are not split points."""
+    close = _DELIM_PAIR[toks[start].text]
+    depth = {"(": 0, "[": 0, "{": 0}
+    angle = 0
+    args = []
+    cur = []
+    k = start + 1
+    n = len(toks)
+    while k < n:
+        t = toks[k]
+        if t.kind == "punct":
+            if t.text in _DELIM_PAIR:
+                depth[t.text] += 1
+            elif t.text in _CLOSE:
+                opener = _CLOSE[t.text]
+                if t.text == close and depth[opener] == 0:
+                    if cur:
+                        args.append(cur)
+                    return args, k
+                depth[opener] -= 1
+            elif t.text == "::" and k + 1 < n and toks[k + 1].text == "<":
+                angle += 1
+                cur.append(t)
+                cur.append(toks[k + 1])
+                k += 2
+                continue
+            elif t.text == ">" and angle > 0:
+                angle -= 1
+            elif (
+                t.text == ","
+                and angle == 0
+                and not any(depth.values())
+            ):
+                args.append(cur)
+                cur = []
+                k += 1
+                continue
+        cur.append(t)
+        k += 1
+    return args, n  # unterminated; delims rule reports it
+
+
+def _ident_like(name):
+    return name and _is_ident_start(name[0]) and all(_is_ident_cont(c) for c in name)
+
+
+def parse_placeholders(body):
+    """Count positional placeholders in a format-string body. Returns
+    (implicit, max_explicit, named_used:set) following std::fmt:
+    `{}`/`{:spec}` implicit, `{0}` explicit, `{name}` named,
+    `width$`/`.prec$` in the spec consume named/explicit args, `.*`
+    consumes one implicit positional."""
+    implicit = 0
+    max_explicit = -1
+    named = set()
+    i = 0
+    n = len(body)
+    while i < n:
+        c = body[i]
+        if c == "{":
+            if body[i + 1 : i + 2] == "{":
+                i += 2
+                continue
+            j = body.find("}", i)
+            if j < 0:
+                break
+            spec = body[i + 1 : j]
+            arg, colon, fmt = spec.partition(":")
+            if arg == "":
+                implicit += 1
+            elif arg.isdigit():
+                max_explicit = max(max_explicit, int(arg))
+            elif _ident_like(arg):
+                named.add(arg)
+            if colon:
+                # width / precision may name their own argument.
+                k = 0
+                m = len(fmt)
+                while k < m:
+                    if fmt[k : k + 2] == ".*":
+                        implicit += 1
+                        k += 2
+                        continue
+                    if _is_ident_start(fmt[k]) or fmt[k].isdigit():
+                        e = k
+                        while e < m and _is_ident_cont(fmt[e]):
+                            e += 1
+                        if fmt[e : e + 1] == "$":
+                            word = fmt[k:e]
+                            if word.isdigit():
+                                max_explicit = max(max_explicit, int(word))
+                            else:
+                                named.add(word)
+                            k = e + 1
+                            continue
+                        k = e
+                        continue
+                    k += 1
+            i = j + 1
+        elif c == "}":
+            if body[i + 1 : i + 2] == "}":
+                i += 2
+            else:
+                i += 1
+        else:
+            i += 1
+    return implicit, max_explicit, named
+
+
+def check_fmtargs(rel, toks, allow):
+    findings = []
+    n = len(toks)
+    for k in range(n - 2):
+        t = toks[k]
+        if t.kind != "ident" or t.text not in FMT_MACROS:
+            continue
+        if toks[k + 1].text != "!" or toks[k + 2].text not in _DELIM_PAIR:
+            continue
+        # `macro_rules! name` definitions and attribute paths don't apply.
+        if k > 0 and toks[k - 1].text in ("macro_rules", "::", "fn"):
+            continue
+        args, _end = _split_macro_args(toks, k + 2)
+        fmt_idx = FMT_MACROS[t.text]
+        if len(args) <= fmt_idx:
+            continue  # no format string present (bare assert!/panic!)
+        fmt_arg = args[fmt_idx]
+        if len(fmt_arg) != 1 or fmt_arg[0].kind != "str":
+            continue  # dynamic format string; out of scope
+        body = fmt_arg[0].text
+        implicit, max_explicit, named_used = parse_placeholders(body)
+        required = max(implicit, max_explicit + 1)
+        positional = 0
+        named_given = set()
+        for a in args[fmt_idx + 1 :]:
+            if (
+                len(a) >= 2
+                and a[0].kind == "ident"
+                and a[1].text == "="
+                and (len(a) == 2 or a[2].text != "=")
+            ):
+                named_given.add(a[0].text)
+            else:
+                positional += 1
+        key = f"{rel}:{t.line}"
+        if key in allow:
+            continue
+        if positional != required:
+            findings.append(
+                (
+                    rel,
+                    t.line,
+                    "fmtargs",
+                    f"`{t.text}!` wants {required} positional argument(s) "
+                    f"for \"{body[:40]}\", got {positional}",
+                )
+            )
+        for name in sorted(named_given - named_used):
+            findings.append(
+                (
+                    rel,
+                    t.line,
+                    "fmtargs",
+                    f"`{t.text}!` named argument `{name}` never used by the format string",
+                )
+            )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+#: Directories walked for Rust sources, relative to the repo root.
+LINT_DIRS = ("rust/src", "rust/tests", "rust/benches", "examples")
+
+
+def rust_files(root):
+    out = []
+    for d in LINT_DIRS:
+        top = os.path.join(root, d)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(top):
+            for f in sorted(filenames):
+                if f.endswith(".rs"):
+                    full = os.path.join(dirpath, f)
+                    out.append(os.path.relpath(full, root).replace(os.sep, "/"))
+    return sorted(out)
+
+
+def find_root(start):
+    d = os.path.abspath(start)
+    while True:
+        if os.path.isdir(os.path.join(d, "lint", "rules")) and os.path.isfile(
+            os.path.join(d, "Cargo.toml")
+        ):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return None
+        d = parent
+
+
+def main(argv):
+    root = None
+    report_path = None
+    it = iter(range(len(argv)))
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--root" and i + 1 < len(argv):
+            root = argv[i + 1]
+            i += 2
+        elif a == "--report" and i + 1 < len(argv):
+            report_path = argv[i + 1]
+            i += 2
+        elif a in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        else:
+            print(f"unknown argument `{a}`", file=sys.stderr)
+            return 2
+    root = root or find_root(os.getcwd()) or find_root(os.path.dirname(__file__))
+    if root is None or not os.path.isdir(os.path.join(root, "lint", "rules")):
+        print("cannot find repo root (lint/rules/ + Cargo.toml)", file=sys.stderr)
+        return 2
+
+    rules_dir = os.path.join(root, "lint", "rules")
+    try:
+        wallclock_allow = set(load_manifest(os.path.join(rules_dir, "wallclock.allow")))
+        fmt_allow = set(load_manifest(os.path.join(rules_dir, "fmtargs.allow")))
+        delims_allow = set(load_manifest(os.path.join(rules_dir, "delims.allow")))
+    except OSError as e:
+        print(f"manifest error: {e}", file=sys.stderr)
+        return 2
+
+    findings = []
+    files = rust_files(root)
+    for rel in files:
+        with open(os.path.join(root, rel), encoding="utf-8") as f:
+            src = f.read()
+        toks = lex(src)
+        findings += check_wallclock(rel, toks, wallclock_allow)
+        findings += check_fmtargs(rel, toks, fmt_allow)
+        findings += check_delims(rel, toks, delims_allow)
+
+    findings.sort(key=lambda f: (f[0], f[1]))
+    lines = [f"{rel}:{line}: [{rule}] {msg}" for rel, line, rule, msg in findings]
+    summary = (
+        f"omprt-lint (python subset: wallclock fmtargs delims): "
+        f"{len(files)} files, {len(findings)} finding(s)"
+    )
+    out = "\n".join(lines + [summary]) + "\n"
+    sys.stdout.write(out)
+    if report_path:
+        with open(report_path, "w", encoding="utf-8") as f:
+            f.write(out)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -16,6 +16,7 @@
 //!                   [--trace-out FILE] [--trace-capacity N] [--capture-out FILE]
 //!                   [--metrics-json FILE]
 //! omprt trace-validate FILE
+//! omprt lint        [--root DIR] [--report FILE]
 //! omprt info
 //! ```
 //!
@@ -348,6 +349,41 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
             }
             Ok(())
         }
+        "lint" => {
+            // Root defaults to the nearest ancestor holding Cargo.toml +
+            // lint/rules/ so `omprt lint` works from any subdirectory.
+            let root = match args.flags.get("root") {
+                Some(r) if !r.is_empty() => std::path::PathBuf::from(r),
+                _ => {
+                    let cwd = std::env::current_dir().map_err(|e| {
+                        crate::util::Error::Config(format!("current dir: {e}"))
+                    })?;
+                    crate::lint::find_root(&cwd).ok_or_else(|| {
+                        crate::util::Error::Config(
+                            "no repo root (Cargo.toml + lint/rules/) above the current \
+                             directory; pass --root DIR"
+                                .into(),
+                        )
+                    })?
+                }
+            };
+            let report = crate::lint::run(&root)?;
+            let rendered = report.render();
+            if let Some(path) = args.flags.get("report").filter(|p| !p.is_empty()) {
+                std::fs::write(path, &rendered).map_err(|e| {
+                    crate::util::Error::Config(format!("writing report `{path}`: {e}"))
+                })?;
+            }
+            print!("{rendered}");
+            if report.is_clean() {
+                Ok(())
+            } else {
+                Err(crate::util::Error::Config(format!(
+                    "lint: {} finding(s)",
+                    report.findings.len()
+                )))
+            }
+        }
         "info" => {
             for arch in Arch::all() {
                 let d = crate::sim::DeviceDesc::for_arch(arch);
@@ -562,6 +598,8 @@ fn print_help() {
          \x20 pool          drive a mixed device pool (batching/sharding scheduler demo)\n\
          \x20 trace-validate FILE  structurally check a Chrome trace (--trace-out) or a\n\
          \x20               replay capture (--capture-out)\n\
+         \x20 lint          run the repo's static invariant checks over its own sources\n\
+         \x20               (--root DIR: repo root; --report FILE: also write the report)\n\
          \x20 info          device + artifact info\n\
          \n\
          FLAGS: --arch nvptx64|amdgcn  --scale small|paper  --reps N  --runtime legacy|portable\n\

@@ -43,6 +43,11 @@
 //!   (`evaluate_vgh`, `evaluateDetRatios`).
 //! * [`conformance`] — the SOLLVE-V&V-analog functional test suite.
 //! * [`config`] / [`cli`] — a mini-TOML config system and the CLI.
+//! * [`lint`] — `omprt lint`, the repo's own static invariant checker:
+//!   a dependency-free lexer + rule passes that keep the concurrency
+//!   core honest (wall-clock facade, atomics orderings, lock order,
+//!   format arity, cross-file enum/config consistency), driven by the
+//!   manifests in `lint/rules/`.
 
 pub mod benchmarks;
 pub mod cli;
@@ -52,6 +57,7 @@ pub mod coordinator;
 pub mod devrt;
 pub mod hostrt;
 pub mod ir;
+pub mod lint;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

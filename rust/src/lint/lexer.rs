@@ -1,0 +1,372 @@
+//! A small Rust lexer for the lint rules: just enough token structure to
+//! make string literals, char literals, lifetimes and comments *opaque*,
+//! which is exactly what the manual review ritual kept getting wrong.
+//!
+//! The token stream drops comments entirely, collapses every string form
+//! (plain, raw `r#"…"#`, byte, C) into a single [`TokKind::Str`] token
+//! carrying the body between the quotes, keeps `::` as one token for
+//! path matching, and distinguishes lifetimes from char literals. It is
+//! *not* a parser: rules pattern-match short token windows.
+//!
+//! `python/lint/run.py` carries a line-for-line port of this lexer; the
+//! fixture tests below are the shared contract — any behavior change
+//! here must land in the Python driver too.
+
+/// What a token is. `Str` carries the body between the quotes (escapes
+/// unprocessed); `Punct` is a single character except for `::`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Any string literal form; `text` is the body between the quotes.
+    Str,
+    /// Char literal; `text` is the body between the quotes.
+    Char,
+    /// Numeric literal.
+    Num,
+    /// Lifetime (`'a`, `'static`).
+    Life,
+    /// Punctuation: one character, or the two-character `::`.
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Token class.
+    pub kind: TokKind,
+    /// Source text (for `Str`/`Char`: the body between the quotes).
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+impl Tok {
+    /// True for an identifier with exactly this text.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// True for punctuation with exactly this text.
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Raw/byte/C string prefix at `b[i]`: (`prefix_len`, `hashes`, `raw`).
+/// Matches `r`, `br`, `b`, `c`, `cr` followed (for raw forms) by hashes,
+/// then a double quote.
+fn string_prefix(b: &[u8], i: usize) -> Option<(usize, usize, bool)> {
+    let mut j = i;
+    let mut raw = false;
+    match b.get(j) {
+        Some(b'b') | Some(b'c') => {
+            j += 1;
+            if b.get(j) == Some(&b'r') {
+                j += 1;
+                raw = true;
+            }
+        }
+        Some(b'r') => {
+            j += 1;
+            raw = true;
+        }
+        _ => return None,
+    }
+    let mut hashes = 0;
+    if raw {
+        while b.get(j) == Some(&b'#') {
+            j += 1;
+            hashes += 1;
+        }
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((j - i, hashes, raw))
+    } else {
+        None
+    }
+}
+
+/// Tokenize Rust source. Never fails: unterminated constructs consume to
+/// end-of-input (the delimiter-balance rule reports the damage).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // Comments: line, and nested block.
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw / byte / C strings (checked before plain idents: `r#"`).
+        if (c == b'r' || c == b'b' || c == b'c') && string_prefix(b, i).is_some() {
+            let (plen, hashes, raw) = string_prefix(b, i).unwrap();
+            let start_line = line;
+            i += plen + 1; // past the opening quote
+            let body_start = i;
+            let body_end;
+            if raw {
+                // Scan for `"` followed by `hashes` hash marks.
+                loop {
+                    if i >= n {
+                        body_end = n;
+                        break;
+                    }
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    if b[i] == b'"' && b[i + 1..].iter().take(hashes).filter(|&&h| h == b'#').count() == hashes {
+                        body_end = i;
+                        i += 1 + hashes;
+                        break;
+                    }
+                    i += 1;
+                }
+            } else {
+                while i < n && b[i] != b'"' {
+                    if b[i] == b'\\' {
+                        i += 1;
+                    }
+                    if i < n && b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                body_end = i;
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::from_utf8_lossy(&b[body_start..body_end.min(n)]).into_owned(),
+                line: start_line,
+            });
+            continue;
+        }
+        // Plain strings.
+        if c == b'"' {
+            let start_line = line;
+            i += 1;
+            let body_start = i;
+            while i < n && b[i] != b'"' {
+                if b[i] == b'\\' {
+                    i += 1;
+                }
+                if i < n && b[i] == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::from_utf8_lossy(&b[body_start..i.min(n)]).into_owned(),
+                line: start_line,
+            });
+            i += 1;
+            continue;
+        }
+        // Char literal vs lifetime: `'a'` is a char, `'a` a lifetime.
+        if c == b'\'' {
+            let next = b.get(i + 1).copied().unwrap_or(0) as char;
+            if is_ident_start(next) && b.get(i + 2) != Some(&b'\'') {
+                let start = i;
+                i += 1;
+                while i < n && is_ident_cont(b[i] as char) {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Life,
+                    text: String::from_utf8_lossy(&b[start..i]).into_owned(),
+                    line,
+                });
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && b[j] != b'\'' {
+                if b[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Char,
+                text: String::from_utf8_lossy(&b[i + 1..j.min(n)]).into_owned(),
+                line,
+            });
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Numbers; `1..4` must not swallow the dots.
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            if b.get(i) == Some(&b'.') && b.get(i + 1).is_some_and(|d| d.is_ascii_digit()) {
+                i += 1;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                if (b.get(i.wrapping_sub(1)) == Some(&b'e') || b.get(i.wrapping_sub(1)) == Some(&b'E'))
+                    && (b.get(i) == Some(&b'+') || b.get(i) == Some(&b'-'))
+                {
+                    i += 1;
+                    while i < n && b[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: String::from_utf8_lossy(&b[start..i]).into_owned(),
+                line,
+            });
+            continue;
+        }
+        // Identifiers / keywords.
+        if is_ident_start(c as char) {
+            let start = i;
+            while i < n && is_ident_cont(b[i] as char) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: String::from_utf8_lossy(&b[start..i]).into_owned(),
+                line,
+            });
+            continue;
+        }
+        // Punctuation; `::` kept whole for path matching.
+        if c == b':' && b.get(i + 1) == Some(&b':') {
+            toks.push(Tok { kind: TokKind::Punct, text: "::".into(), line });
+            i += 2;
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: (c as char).to_string(),
+            line,
+        });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_vanish_including_nested_blocks() {
+        let toks = kinds("a // Instant::now()\n/* x /* nested */ y */ b");
+        assert_eq!(
+            toks,
+            vec![(TokKind::Ident, "a".into()), (TokKind::Ident, "b".into())]
+        );
+    }
+
+    #[test]
+    fn strings_are_opaque_single_tokens() {
+        let toks = kinds("f(\"Instant::now() }} {\", x)");
+        assert_eq!(toks[2].0, TokKind::Str);
+        assert_eq!(toks[2].1, "Instant::now() }} {");
+        // The brace inside the string must not unbalance anything.
+        assert_eq!(toks.iter().filter(|t| t.0 == TokKind::Punct && t.1 == "{").count(), 0);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_quotes() {
+        let src = "let s = r#\"quote \" and { brace\"#; done";
+        let toks = kinds(src);
+        let s = toks.iter().find(|t| t.0 == TokKind::Str).unwrap();
+        assert_eq!(s.1, "quote \" and { brace");
+        assert!(toks.iter().any(|t| t.0 == TokKind::Ident && t.1 == "done"));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let toks = kinds(r#"x("a\"b")"#);
+        let s = toks.iter().find(|t| t.0 == TokKind::Str).unwrap();
+        assert_eq!(s.1, r#"a\"b"#);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'a'; let nl = '\\n'; }");
+        let lifes: Vec<_> = toks.iter().filter(|t| t.0 == TokKind::Life).collect();
+        assert_eq!(lifes.len(), 2);
+        let chars: Vec<_> = toks.iter().filter(|t| t.0 == TokKind::Char).collect();
+        assert_eq!(chars.len(), 2);
+        assert_eq!(chars[0].1, "a");
+        assert_eq!(chars[1].1, "\\n");
+    }
+
+    #[test]
+    fn double_colon_is_one_token_and_ranges_stay_numbers() {
+        let toks = lex("a::b 1..4 2.5 0x1f");
+        assert!(toks.iter().any(|t| t.is_punct("::")));
+        let nums: Vec<_> = toks.iter().filter(|t| t.kind == TokKind::Num).map(|t| t.text.clone()).collect();
+        assert_eq!(nums, vec!["1", "4", "2.5", "0x1f"]);
+    }
+
+    #[test]
+    fn lines_are_tracked_across_strings_and_comments() {
+        let src = "a\n\"two\nlines\"\n/* c\nc */ b";
+        let toks = lex(src);
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2); // string starts on line 2
+        assert_eq!(toks[2].line, 5); // `b` after the two-line comment
+    }
+
+    #[test]
+    fn unterminated_string_consumes_to_eof_without_panicking() {
+        let toks = lex("x \"never closed");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[1].kind, TokKind::Str);
+    }
+}

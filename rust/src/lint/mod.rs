@@ -1,0 +1,247 @@
+//! `omprt lint` — the repo's own static invariant checker.
+//!
+//! Seven PRs of this tree were authored in containers without a Rust
+//! toolchain, each repeating the same manual review ritual: delimiter
+//! balance, format-argument arity, event-kind cross-checks, atomics
+//! ordering audits. This module codifies that ritual as a real,
+//! dependency-free static analysis pass over the repo's own sources: a
+//! lexer that makes strings/comments opaque ([`lexer`]), then rule
+//! passes over the token stream ([`rules`]).
+//!
+//! The rule catalog (each rule reads an allowlist manifest from
+//! `lint/rules/` at the repo root — shared verbatim with the
+//! toolchain-less Python driver `python/lint/run.py`):
+//!
+//! | rule | invariant | manifest |
+//! |------|-----------|----------|
+//! | `wallclock` | `Instant::now`/`SystemTime::now`/`thread::sleep` only inside the `util::clock` facade | `wallclock.allow` |
+//! | `atomics` | every `Ordering::Relaxed` is an allowlisted counter; latch/CAS/seqlock fields may never relax | `atomics.allow` |
+//! | `locks` | the declared sched lock order (`inflight_reg` < `queue` < `clients`) via guard-scope tracking | `locks.order` |
+//! | `fmtargs` | format-string placeholder arity matches the supplied arguments | `fmtargs.allow` |
+//! | `delims` | `()`/`[]`/`{}` balance per file, outside strings and comments | `delims.allow` |
+//! | `consistency` | `EventKind` variants ↔ `from_u8` ↔ `name()` ↔ roundtrip test; `[pool]` config keys ↔ CLI flags ↔ README flag table | `consistency.list` |
+//!
+//! Policy: fix the violation. An allowlist entry needs a one-line `#`
+//! justification in the manifest and review scrutiny; the self-check
+//! test (`rust/tests/lint_clean.rs`) keeps the shipped tree at zero
+//! findings, so any new finding fails `cargo test` and CI.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint violation: file, 1-based line, rule id, message.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based source line (0 for file-level findings).
+    pub line: u32,
+    /// Rule id (`wallclock`, `atomics`, …).
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Parsed rule manifests from `lint/rules/`.
+#[derive(Debug, Default)]
+pub struct Manifests {
+    /// Files allowed to touch the wall clock (`wallclock.allow`).
+    pub wallclock_allow: Vec<String>,
+    /// `file:context` pairs allowed to use `Ordering::Relaxed`, plus the
+    /// deny-listed field names that may *never* relax (`atomics.allow`).
+    pub atomics_allow: Vec<String>,
+    /// Field names that must never be accessed with `Ordering::Relaxed`.
+    pub atomics_deny: Vec<String>,
+    /// Declared lock ranks `file:lockname -> rank` (`locks.order`).
+    pub lock_ranks: BTreeMap<String, u32>,
+    /// `file:fn:lock` lock-order exceptions (`locks.order` `allow` lines).
+    pub lock_allow: Vec<String>,
+    /// `file:line` format-arity exceptions (`fmtargs.allow`).
+    pub fmtargs_allow: Vec<String>,
+    /// Files exempt from delimiter balance (`delims.allow`).
+    pub delims_allow: Vec<String>,
+    /// `[pool]` key ↔ CLI flag ↔ README token rows (`consistency.list`).
+    pub consistency: Vec<rules::consistency::Row>,
+}
+
+/// Read one manifest: `#` starts a comment, blank lines ignored, entries
+/// whitespace-trimmed. Missing manifests are an error — the rule set and
+/// its manifests ship together.
+pub fn load_manifest(path: &Path) -> crate::Result<Vec<String>> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        crate::util::Error::Config(format!("lint manifest `{}`: {e}", path.display()))
+    })?;
+    Ok(text
+        .lines()
+        .filter_map(|l| {
+            let entry = l.split('#').next().unwrap_or("").trim();
+            (!entry.is_empty()).then(|| entry.to_string())
+        })
+        .collect())
+}
+
+impl Manifests {
+    /// Load every manifest under `<root>/lint/rules/`.
+    pub fn load(root: &Path) -> crate::Result<Manifests> {
+        let dir = root.join("lint").join("rules");
+        let mut m = Manifests {
+            wallclock_allow: load_manifest(&dir.join("wallclock.allow"))?,
+            fmtargs_allow: load_manifest(&dir.join("fmtargs.allow"))?,
+            delims_allow: load_manifest(&dir.join("delims.allow"))?,
+            ..Manifests::default()
+        };
+        for entry in load_manifest(&dir.join("atomics.allow"))? {
+            if let Some(rest) = entry.strip_prefix("allow ") {
+                m.atomics_allow.push(rest.trim().to_string());
+            } else if let Some(rest) = entry.strip_prefix("deny ") {
+                m.atomics_deny.push(rest.trim().to_string());
+            } else {
+                return Err(crate::util::Error::Config(format!(
+                    "atomics.allow: entry `{entry}` must start with `allow ` or `deny `"
+                )));
+            }
+        }
+        for entry in load_manifest(&dir.join("locks.order"))? {
+            if let Some(rest) = entry.strip_prefix("lock ") {
+                let mut it = rest.split_whitespace();
+                let (name, rank) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+                let rank: u32 = rank.parse().map_err(|_| {
+                    crate::util::Error::Config(format!(
+                        "locks.order: `lock {rest}` wants `lock file:name RANK`"
+                    ))
+                })?;
+                m.lock_ranks.insert(name.to_string(), rank);
+            } else if let Some(rest) = entry.strip_prefix("allow ") {
+                m.lock_allow.push(rest.trim().to_string());
+            } else {
+                return Err(crate::util::Error::Config(format!(
+                    "locks.order: entry `{entry}` must start with `lock ` or `allow `"
+                )));
+            }
+        }
+        for entry in load_manifest(&dir.join("consistency.list"))? {
+            m.consistency.push(rules::consistency::Row::parse(&entry)?);
+        }
+        Ok(m)
+    }
+}
+
+/// Directories walked for Rust sources, relative to the repo root. The
+/// Python driver walks the same list.
+pub const LINT_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Every `.rs` file under [`LINT_DIRS`], as sorted repo-relative paths.
+pub fn rust_files(root: &Path) -> crate::Result<Vec<String>> {
+    let mut files = Vec::new();
+    for d in LINT_DIRS {
+        let top = root.join(d);
+        if top.is_dir() {
+            walk(&top, &mut files).map_err(|e| {
+                crate::util::Error::Config(format!("walking `{}`: {e}", top.display()))
+            })?;
+        }
+    }
+    let mut rels: Vec<String> = files
+        .iter()
+        .filter_map(|p| p.strip_prefix(root).ok())
+        .map(|p| p.to_string_lossy().replace('\\', "/"))
+        .collect();
+    rels.sort();
+    Ok(rels)
+}
+
+/// The lint report: every finding plus the run's coverage stats.
+#[derive(Debug)]
+pub struct Report {
+    /// All findings, sorted by (file, line).
+    pub findings: Vec<Finding>,
+    /// How many files were scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// True when the tree is clean.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Render the report in the `file:line: [rule] msg` format both
+    /// drivers share, with a trailing summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.to_string());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "omprt-lint: {} files, {} finding(s)\n",
+            self.files_scanned,
+            self.findings.len()
+        ));
+        out
+    }
+}
+
+/// Run every rule over the tree rooted at `root` (the directory holding
+/// `Cargo.toml` and `lint/rules/`).
+pub fn run(root: &Path) -> crate::Result<Report> {
+    let manifests = Manifests::load(root)?;
+    let files = rust_files(root)?;
+    let mut sources: BTreeMap<String, String> = BTreeMap::new();
+    for rel in &files {
+        let text = std::fs::read_to_string(root.join(rel)).map_err(|e| {
+            crate::util::Error::Config(format!("reading `{rel}`: {e}"))
+        })?;
+        sources.insert(rel.clone(), text);
+    }
+    let mut findings = Vec::new();
+    for (rel, src) in &sources {
+        let toks = lexer::lex(src);
+        findings.extend(rules::wallclock::check(rel, &toks, &manifests));
+        findings.extend(rules::atomics::check(rel, &toks, &manifests));
+        findings.extend(rules::locks::check(rel, &toks, &manifests));
+        findings.extend(rules::fmtargs::check(rel, &toks, &manifests));
+        findings.extend(rules::delims::check(rel, &toks, &manifests));
+    }
+    findings.extend(rules::consistency::check(root, &sources, &manifests));
+    findings.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+/// Locate the repo root by walking up from `start` until a directory
+/// holding both `Cargo.toml` and `lint/rules/` is found.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut d = start.to_path_buf();
+    loop {
+        if d.join("Cargo.toml").is_file() && d.join("lint").join("rules").is_dir() {
+            return Some(d);
+        }
+        if !d.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Rule `atomics`: every `Ordering::Relaxed` is a counter.
+//!
+//! The sched/trace core mixes two kinds of atomics: monotone stat
+//! counters (where `Relaxed` is correct and cheapest) and
+//! synchronization fields whose orderings *are* the correctness
+//! argument — the hedge `settled` latch, the `DeviceHealth` state
+//! machine, the trace ring's seqlock `stamp`. This rule keeps the two
+//! from blurring: each `Ordering::Relaxed` site must resolve to a
+//! receiver field on the `allow file:field` list in
+//! `lint/rules/atomics.allow`, and the `deny field` entries (the latch
+//! and seqlock fields) may never relax regardless of allowlisting.
+//!
+//! Receiver resolution is syntactic: from the atomic method call the
+//! rule walks left over the `.`, skipping balanced `[…]`/`(…)` index
+//! and call groups, to the nearest identifier — so `self.stats.hits`,
+//! `devices[i].busy_jobs` and `slot.load` all resolve to the field
+//! actually being relaxed, not to an intermediate expression.
+
+use crate::lint::lexer::{Tok, TokKind};
+use crate::lint::{Finding, Manifests};
+
+/// Atomic methods that take an `Ordering` argument.
+const METHODS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_or",
+    "fetch_and",
+    "fetch_xor",
+    "fetch_update",
+    "fetch_max",
+    "fetch_min",
+    "fetch_nand",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+/// How far back (in tokens) to search for the method a `Relaxed` belongs
+/// to. Generous enough for multi-line `fetch_update` closures.
+const WINDOW: usize = 60;
+
+/// Walk left from the method identifier at `mi` to the receiver field:
+/// expect a `.`, then skip balanced `]`/`)` groups, and return the first
+/// identifier found.
+fn receiver(toks: &[Tok], mi: usize) -> Option<String> {
+    let mut i = mi.checked_sub(1)?;
+    if !toks[i].is_punct(".") {
+        return None;
+    }
+    loop {
+        i = i.checked_sub(1)?;
+        if toks[i].kind != TokKind::Punct {
+            return (toks[i].kind == TokKind::Ident).then(|| toks[i].text.clone());
+        }
+        match toks[i].text.as_str() {
+            "]" | ")" => {
+                let (open, close) = if toks[i].text == "]" { ("[", "]") } else { ("(", ")") };
+                let mut depth = 1u32;
+                while depth > 0 {
+                    i = i.checked_sub(1)?;
+                    if toks[i].kind != TokKind::Punct {
+                        continue;
+                    }
+                    if toks[i].text == close {
+                        depth += 1;
+                    } else if toks[i].text == open {
+                        depth -= 1;
+                    }
+                }
+            }
+            "." => {}
+            _ => return None,
+        }
+    }
+}
+
+/// Audit every `Ordering::Relaxed` in `toks`.
+pub fn check(file: &str, toks: &[Tok], m: &Manifests) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for k in 2..toks.len() {
+        if !(toks[k].is_ident("Relaxed")
+            && toks[k - 1].is_punct("::")
+            && toks[k - 2].is_ident("Ordering"))
+        {
+            continue;
+        }
+        let line = toks[k].line;
+        // Nearest atomic method to the left owns this ordering argument.
+        let lo = k.saturating_sub(WINDOW);
+        let Some(mi) = (lo..k).rev().find(|&i| {
+            toks[i].kind == TokKind::Ident && METHODS.contains(&toks[i].text.as_str())
+        }) else {
+            out.push(Finding {
+                file: file.to_string(),
+                line,
+                rule: "atomics",
+                msg: "`Ordering::Relaxed` with no atomic method in range — \
+                      move it next to its call site or allowlist it"
+                    .to_string(),
+            });
+            continue;
+        };
+        let field = receiver(toks, mi).unwrap_or_else(|| "?".to_string());
+        if m.atomics_deny.iter().any(|d| *d == field) {
+            out.push(Finding {
+                file: file.to_string(),
+                line,
+                rule: "atomics",
+                msg: format!(
+                    "`Ordering::Relaxed` on deny-listed field `{field}` — this field is a \
+                     synchronization point (latch/CAS/seqlock) and must use \
+                     Acquire/Release/AcqRel/SeqCst"
+                ),
+            });
+            continue;
+        }
+        let key = format!("{file}:{field}");
+        if !m.atomics_allow.iter().any(|a| *a == key) {
+            out.push(Finding {
+                file: file.to_string(),
+                line,
+                rule: "atomics",
+                msg: format!(
+                    "`Ordering::Relaxed` on `{field}` ({}) is not on the counter allowlist \
+                     (lint/rules/atomics.allow)",
+                    toks[mi].text
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn m(allow: &[&str], deny: &[&str]) -> Manifests {
+        Manifests {
+            atomics_allow: allow.iter().map(|s| s.to_string()).collect(),
+            atomics_deny: deny.iter().map(|s| s.to_string()).collect(),
+            ..Manifests::default()
+        }
+    }
+
+    #[test]
+    fn allowlisted_counter_passes() {
+        let src = "fn f(&self) { self.stats.hits.fetch_add(1, Ordering::Relaxed); }";
+        let got = check("x.rs", &lex(src), &m(&["x.rs:hits"], &[]));
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn unlisted_relaxed_is_flagged() {
+        let src = "fn f(&self) { self.stats.hits.fetch_add(1, Ordering::Relaxed); }";
+        let got = check("x.rs", &lex(src), &m(&[], &[]));
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("`hits`"), "{}", got[0].msg);
+        assert!(got[0].msg.contains("fetch_add"));
+    }
+
+    #[test]
+    fn deny_wins_over_allow() {
+        let src = "fn f(&self) { self.settled.store(true, Ordering::Relaxed); }";
+        let got = check("x.rs", &lex(src), &m(&["x.rs:settled"], &["settled"]));
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("deny-listed"));
+    }
+
+    #[test]
+    fn strong_orderings_pass_everywhere() {
+        let src = "fn f(&self) {\n\
+                   self.settled.compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst);\n\
+                   self.state.store(2, Ordering::Release);\n\
+                   let s = self.stamp.load(Ordering::Acquire);\n\
+                   }";
+        assert!(check("x.rs", &lex(src), &m(&[], &["settled", "state", "stamp"])).is_empty());
+    }
+
+    #[test]
+    fn indexed_and_chained_receivers_resolve_to_the_field() {
+        let src = "fn f(&self) {\n\
+                   devices[i + 1].busy_jobs.fetch_sub(1, Ordering::Relaxed);\n\
+                   self.slots[k].stats().load.load(Ordering::Relaxed);\n\
+                   }";
+        let got = check("x.rs", &lex(src), &m(&["x.rs:busy_jobs", "x.rs:load"], &[]));
+        assert!(got.is_empty(), "{got:?}");
+        // Without the allow entries, both resolve to field names (not `]`).
+        let got = check("x.rs", &lex(src), &m(&[], &[]));
+        assert_eq!(got.len(), 2);
+        assert!(got[0].msg.contains("`busy_jobs`"));
+        assert!(got[1].msg.contains("`load`"));
+    }
+
+    #[test]
+    fn relaxed_failure_ordering_of_cas_attributes_to_the_cas_field() {
+        let src = "fn f(&self) { self.gate.compare_exchange_weak(0, 1,\n\
+                   Ordering::AcqRel, Ordering::Relaxed); }";
+        let got = check("x.rs", &lex(src), &m(&[], &["gate"]));
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("`gate`"));
+    }
+
+    #[test]
+    fn orphan_relaxed_is_flagged() {
+        let src = "fn f() { let o = Ordering::Relaxed; }";
+        let got = check("x.rs", &lex(src), &m(&[], &[]));
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("no atomic method"));
+    }
+}

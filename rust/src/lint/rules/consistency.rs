@@ -1,0 +1,493 @@
+//! Rule `consistency`: cross-file enumerations stay in lockstep.
+//!
+//! Two families of drift this repo has had to re-check by hand on every
+//! PR:
+//!
+//! 1. **Trace schema.** `EventKind` appears four times in
+//!    `rust/src/trace/event.rs`: the enum declaration (with explicit
+//!    discriminants), the `from_u8` decode match, the `name()` string
+//!    match, and the roundtrip test's `1u8..=19` range literal. Adding a
+//!    variant and missing one of the four compiles fine (`_ => None`
+//!    swallows it) but silently drops events from `trace-validate` and
+//!    the exporter. The rule re-derives all four sets and diffs them.
+//!
+//! 2. **Config surface.** Every `[pool]` key read in
+//!    `rust/src/sched/pool.rs::from_config` should be reachable from the
+//!    CLI (where a flag exists) and documented in README's flag table.
+//!    `lint/rules/consistency.list` declares the mapping
+//!    (`key|flag,flag|readme-token,…`); the rule checks it
+//!    bidirectionally against the actual `read_*`/`sec.get` calls, the
+//!    string literals in `rust/src/cli/mod.rs`, and README.md.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::lint::lexer::{lex, Tok, TokKind};
+use crate::lint::{Finding, Manifests};
+
+const EVENT: &str = "rust/src/trace/event.rs";
+const POOL: &str = "rust/src/sched/pool.rs";
+const CLI: &str = "rust/src/cli/mod.rs";
+
+/// One `key|flags|readme-tokens` row of `consistency.list`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Row {
+    /// `[pool]` config key.
+    pub key: String,
+    /// CLI flag names (without `--`) that feed this key; empty when the
+    /// key is config-file-only.
+    pub flags: Vec<String>,
+    /// Tokens that must appear in README.md; empty to skip.
+    pub readme: Vec<String>,
+}
+
+impl Row {
+    /// Parse `key|flag,flag|--tok,--tok` (both lists may be empty).
+    pub fn parse(entry: &str) -> crate::Result<Row> {
+        let parts: Vec<&str> = entry.split('|').collect();
+        if parts.len() != 3 || parts[0].trim().is_empty() {
+            return Err(crate::util::Error::Config(format!(
+                "consistency.list: `{entry}` wants `key|flags|readme` (3 `|`-separated fields)"
+            )));
+        }
+        let list = |s: &str| {
+            s.split(',')
+                .map(str::trim)
+                .filter(|x| !x.is_empty())
+                .map(str::to_string)
+                .collect()
+        };
+        Ok(Row { key: parts[0].trim().to_string(), flags: list(parts[1]), readme: list(parts[2]) })
+    }
+}
+
+fn finding(file: &str, line: u32, msg: String) -> Finding {
+    Finding { file: file.to_string(), line, rule: "consistency", msg }
+}
+
+fn leading_digits(s: &str) -> Option<u32> {
+    let d: String = s.chars().take_while(|c| c.is_ascii_digit()).collect();
+    d.parse().ok()
+}
+
+/// Index of the first occurrence of consecutive idents `a b`, if any.
+fn find_fn(toks: &[Tok], name: &str) -> Option<usize> {
+    (1..toks.len()).find(|&i| toks[i - 1].is_ident("fn") && toks[i].is_ident(name))
+}
+
+/// Extract the `EventKind` enum's `(variant, discriminant, line)` rows.
+fn enum_variants(toks: &[Tok]) -> Vec<(String, u32, u32)> {
+    let mut out = Vec::new();
+    let Some(start) = (1..toks.len())
+        .find(|&i| toks[i - 1].is_ident("enum") && toks[i].is_ident("EventKind"))
+    else {
+        return out;
+    };
+    let mut depth = 0i32;
+    let mut i = start + 1;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if depth == 1
+            && t.kind == TokKind::Ident
+            && toks.get(i + 1).is_some_and(|e| e.is_punct("="))
+            && toks.get(i + 2).is_some_and(|v| v.kind == TokKind::Num)
+        {
+            if let Some(v) = leading_digits(&toks[i + 2].text) {
+                out.push((t.text.clone(), v, t.line));
+            }
+            i += 3;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Collect `N => EventKind::Variant` arms between `fn from_u8` and the
+/// next `fn`.
+fn from_u8_arms(toks: &[Tok]) -> Vec<(u32, String, u32)> {
+    let mut out = Vec::new();
+    let Some(start) = find_fn(toks, "from_u8") else { return out };
+    for i in start..toks.len() {
+        if toks[i].is_ident("fn") && i > start {
+            break;
+        }
+        if toks[i].kind == TokKind::Num
+            && toks.get(i + 1).is_some_and(|a| a.is_punct("="))
+            && toks.get(i + 2).is_some_and(|a| a.is_punct(">"))
+            && toks.get(i + 3).is_some_and(|a| a.is_ident("EventKind"))
+            && toks.get(i + 4).is_some_and(|a| a.is_punct("::"))
+            && toks.get(i + 5).is_some_and(|a| a.kind == TokKind::Ident)
+        {
+            if let Some(v) = leading_digits(&toks[i].text) {
+                out.push((v, toks[i + 5].text.clone(), toks[i].line));
+            }
+        }
+    }
+    out
+}
+
+/// Collect `EventKind::Variant => "Str"` arms between `fn name` and the
+/// next `fn`.
+fn name_arms(toks: &[Tok]) -> Vec<(String, String, u32)> {
+    let mut out = Vec::new();
+    let Some(start) = find_fn(toks, "name") else { return out };
+    for i in start..toks.len() {
+        if toks[i].is_ident("fn") && i > start {
+            break;
+        }
+        if toks[i].is_ident("EventKind")
+            && toks.get(i + 1).is_some_and(|a| a.is_punct("::"))
+            && toks.get(i + 2).is_some_and(|a| a.kind == TokKind::Ident)
+            && toks.get(i + 3).is_some_and(|a| a.is_punct("="))
+            && toks.get(i + 4).is_some_and(|a| a.is_punct(">"))
+            && toks.get(i + 5).is_some_and(|a| a.kind == TokKind::Str)
+        {
+            out.push((toks[i + 2].text.clone(), toks[i + 5].text.clone(), toks[i].line));
+        }
+    }
+    out
+}
+
+/// Does any `lo..=hi` range literal in `toks` cover exactly `min..=max`?
+fn has_roundtrip_range(toks: &[Tok], min: u32, max: u32) -> bool {
+    (0..toks.len().saturating_sub(4)).any(|i| {
+        toks[i].kind == TokKind::Num
+            && toks[i + 1].is_punct(".")
+            && toks[i + 2].is_punct(".")
+            && toks[i + 3].is_punct("=")
+            && toks[i + 4].kind == TokKind::Num
+            && leading_digits(&toks[i].text) == Some(min)
+            && leading_digits(&toks[i + 4].text) == Some(max)
+    })
+}
+
+fn check_trace_schema(sources: &BTreeMap<String, String>, out: &mut Vec<Finding>) {
+    let Some(src) = sources.get(EVENT) else {
+        out.push(finding(EVENT, 0, "file missing — trace schema checks skipped".into()));
+        return;
+    };
+    let toks = lex(src);
+    let variants = enum_variants(&toks);
+    if variants.is_empty() {
+        out.push(finding(EVENT, 0, "no `enum EventKind` variants found".into()));
+        return;
+    }
+    let decode = from_u8_arms(&toks);
+    let names = name_arms(&toks);
+    for (var, val, line) in &variants {
+        match decode.iter().find(|(_, v, _)| v == var) {
+            None => out.push(finding(
+                EVENT,
+                *line,
+                format!("`EventKind::{var}` has no `from_u8` arm — decode drops it"),
+            )),
+            Some((dv, _, dline)) if dv != val => out.push(finding(
+                EVENT,
+                *dline,
+                format!("`from_u8` maps {dv} to `EventKind::{var}` but the discriminant is {val}"),
+            )),
+            _ => {}
+        }
+        match names.iter().find(|(v, _, _)| v == var) {
+            None => out.push(finding(
+                EVENT,
+                *line,
+                format!("`EventKind::{var}` has no `name()` arm"),
+            )),
+            Some((_, s, nline)) if s != var => out.push(finding(
+                EVENT,
+                *nline,
+                format!("`name()` renders `EventKind::{var}` as \"{s}\""),
+            )),
+            _ => {}
+        }
+    }
+    for (val, var, line) in &decode {
+        if !variants.iter().any(|(v, _, _)| v == var) {
+            out.push(finding(
+                EVENT,
+                *line,
+                format!("`from_u8` arm {val} => `EventKind::{var}`: no such variant"),
+            ));
+        }
+    }
+    let min = variants.iter().map(|(_, v, _)| *v).min().unwrap_or(0);
+    let max = variants.iter().map(|(_, v, _)| *v).max().unwrap_or(0);
+    if !has_roundtrip_range(&toks, min, max) {
+        out.push(finding(
+            EVENT,
+            0,
+            format!(
+                "no `{min}u8..={max}` roundtrip range found — the roundtrip test no longer \
+                 covers every variant"
+            ),
+        ));
+    }
+}
+
+/// `[pool]` keys actually read in `from_config`: `read_*(sec, "key", …)`
+/// and `sec.get("key")` call sites.
+fn pool_keys(toks: &[Tok]) -> Vec<(String, u32)> {
+    let mut out: Vec<(String, u32)> = Vec::new();
+    for i in 0..toks.len() {
+        let key = if toks[i].kind == TokKind::Ident
+            && toks[i].text.starts_with("read_")
+            && toks.get(i + 1).is_some_and(|a| a.is_punct("("))
+            && toks.get(i + 2).is_some_and(|a| a.is_ident("sec"))
+            && toks.get(i + 3).is_some_and(|a| a.is_punct(","))
+            && toks.get(i + 4).is_some_and(|a| a.kind == TokKind::Str)
+        {
+            Some(&toks[i + 4])
+        } else if toks[i].is_ident("sec")
+            && toks.get(i + 1).is_some_and(|a| a.is_punct("."))
+            && toks.get(i + 2).is_some_and(|a| a.is_ident("get"))
+            && toks.get(i + 3).is_some_and(|a| a.is_punct("("))
+            && toks.get(i + 4).is_some_and(|a| a.kind == TokKind::Str)
+        {
+            Some(&toks[i + 4])
+        } else {
+            None
+        };
+        if let Some(t) = key {
+            if !out.iter().any(|(k, _)| *k == t.text) {
+                out.push((t.text.clone(), t.line));
+            }
+        }
+    }
+    out
+}
+
+fn check_config_surface(
+    sources: &BTreeMap<String, String>,
+    readme: &str,
+    rows: &[Row],
+    out: &mut Vec<Finding>,
+) {
+    let Some(pool_src) = sources.get(POOL) else {
+        out.push(finding(POOL, 0, "file missing — config surface checks skipped".into()));
+        return;
+    };
+    let keys = pool_keys(&lex(pool_src));
+    let cli_strings: Vec<String> = sources
+        .get(CLI)
+        .map(|src| {
+            lex(src)
+                .into_iter()
+                .filter(|t| t.kind == TokKind::Str)
+                .map(|t| t.text)
+                .collect()
+        })
+        .unwrap_or_default();
+    for (key, line) in &keys {
+        if !rows.iter().any(|r| r.key == *key) {
+            out.push(finding(
+                POOL,
+                *line,
+                format!(
+                    "`[pool]` key \"{key}\" is read here but missing from \
+                     lint/rules/consistency.list"
+                ),
+            ));
+        }
+    }
+    for row in rows {
+        if !keys.iter().any(|(k, _)| *k == row.key) {
+            out.push(finding(
+                POOL,
+                0,
+                format!(
+                    "consistency.list declares `[pool]` key \"{}\" but from_config never \
+                     reads it",
+                    row.key
+                ),
+            ));
+        }
+        for flag in &row.flags {
+            if !cli_strings.iter().any(|s| s == flag) {
+                out.push(finding(
+                    CLI,
+                    0,
+                    format!(
+                        "flag \"{flag}\" (for `[pool]` key \"{}\") is not a string literal \
+                         in the CLI parser",
+                        row.key
+                    ),
+                ));
+            }
+        }
+        for tok in &row.readme {
+            if !readme.contains(tok.as_str()) {
+                out.push(finding(
+                    "README.md",
+                    0,
+                    format!("\"{tok}\" (for `[pool]` key \"{}\") missing from README.md", row.key),
+                ));
+            }
+        }
+    }
+}
+
+fn check_impl(
+    sources: &BTreeMap<String, String>,
+    readme: &str,
+    m: &Manifests,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    check_trace_schema(sources, &mut out);
+    check_config_surface(sources, readme, &m.consistency, &mut out);
+    out
+}
+
+/// Run the cross-file checks over the whole source map.
+pub fn check(root: &Path, sources: &BTreeMap<String, String>, m: &Manifests) -> Vec<Finding> {
+    let readme = std::fs::read_to_string(root.join("README.md")).unwrap_or_default();
+    let mut out = check_impl(sources, &readme, m);
+    if readme.is_empty() {
+        out.push(finding("README.md", 0, "README.md missing or empty".into()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD_EVENT: &str = r#"
+        pub enum EventKind { Submit = 1, Done = 2 }
+        impl EventKind {
+            pub fn from_u8(v: u8) -> Option<EventKind> {
+                Some(match v { 1 => EventKind::Submit, 2 => EventKind::Done, _ => return None })
+            }
+            pub fn name(&self) -> &'static str {
+                match self { EventKind::Submit => "Submit", EventKind::Done => "Done" }
+            }
+        }
+        #[test] fn roundtrip() { for k in 1u8..=2 { let _ = EventKind::from_u8(k); } }
+    "#;
+
+    const GOOD_POOL: &str = r#"
+        fn from_config(sec: &Section) {
+            out.batch_max = read_uint(sec, "batch_max", 1, 1)?;
+            out.hedge = read_bool(sec, "hedge", true)?;
+            if let Some(v) = sec.get("devices") {}
+        }
+    "#;
+
+    const GOOD_CLI: &str = r#"fn parse() { uint("batch"); flag("hedge"); flag("no-hedge"); }"#;
+    const GOOD_README: &str = "| `--batch N` | … | | `--hedge` / `--no-hedge` | … |";
+
+    fn rows() -> Vec<Row> {
+        vec![
+            Row::parse("batch_max|batch|--batch").unwrap(),
+            Row::parse("hedge|hedge,no-hedge|--hedge,--no-hedge").unwrap(),
+            Row::parse("devices||").unwrap(),
+        ]
+    }
+
+    fn srcs(event: &str, pool: &str, cli: &str) -> BTreeMap<String, String> {
+        let mut s = BTreeMap::new();
+        s.insert(EVENT.to_string(), event.to_string());
+        s.insert(POOL.to_string(), pool.to_string());
+        s.insert(CLI.to_string(), cli.to_string());
+        s
+    }
+
+    fn run(event: &str, pool: &str, cli: &str, readme: &str) -> Vec<Finding> {
+        let m = Manifests { consistency: rows(), ..Manifests::default() };
+        check_impl(&srcs(event, pool, cli), readme, &m)
+    }
+
+    #[test]
+    fn consistent_tree_passes() {
+        let got = run(GOOD_EVENT, GOOD_POOL, GOOD_CLI, GOOD_README);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn row_parse_rejects_malformed_entries() {
+        assert!(Row::parse("only_key").is_err());
+        assert!(Row::parse("|flags|readme").is_err());
+        let r = Row::parse("k | a,b | --a").unwrap();
+        assert_eq!((r.key.as_str(), r.flags.len(), r.readme.len()), ("k", 2, 1));
+    }
+
+    #[test]
+    fn variant_missing_from_decode_or_name_is_flagged() {
+        let event = r#"
+            pub enum EventKind { Submit = 1, Done = 2 }
+            impl EventKind {
+                pub fn from_u8(v: u8) -> Option<EventKind> {
+                    Some(match v { 1 => EventKind::Submit, _ => return None })
+                }
+                pub fn name(&self) -> &'static str {
+                    match self { EventKind::Submit => "Submit", _ => "?" }
+                }
+            }
+            #[test] fn roundtrip() { for k in 1u8..=2 {} }
+        "#;
+        let got = run(event, GOOD_POOL, GOOD_CLI, GOOD_README);
+        assert!(got.iter().any(|f| f.msg.contains("`EventKind::Done` has no `from_u8` arm")));
+        assert!(got.iter().any(|f| f.msg.contains("`EventKind::Done` has no `name()` arm")));
+    }
+
+    #[test]
+    fn decode_value_drift_and_name_drift_are_flagged() {
+        let event = r#"
+            pub enum EventKind { Submit = 1, Done = 2 }
+            impl EventKind {
+                pub fn from_u8(v: u8) -> Option<EventKind> {
+                    Some(match v { 1 => EventKind::Submit, 3 => EventKind::Done, _ => return None })
+                }
+                pub fn name(&self) -> &'static str {
+                    match self { EventKind::Submit => "Submit", EventKind::Done => "Finished" }
+                }
+            }
+            #[test] fn roundtrip() { for k in 1u8..=2 {} }
+        "#;
+        let got = run(event, GOOD_POOL, GOOD_CLI, GOOD_README);
+        assert!(got.iter().any(|f| f.msg.contains("maps 3 to `EventKind::Done`")));
+        assert!(got.iter().any(|f| f.msg.contains("as \"Finished\"")));
+    }
+
+    #[test]
+    fn stale_roundtrip_range_is_flagged() {
+        let event = GOOD_EVENT.replace("1u8..=2", "1u8..=1");
+        let got = run(&event, GOOD_POOL, GOOD_CLI, GOOD_README);
+        assert!(got.iter().any(|f| f.msg.contains("roundtrip range")), "{got:?}");
+    }
+
+    #[test]
+    fn undeclared_and_stale_config_keys_are_flagged() {
+        let pool = r#"
+            fn from_config(sec: &Section) {
+                out.batch_max = read_uint(sec, "batch_max", 1, 1)?;
+                out.queue_cap = read_uint(sec, "queue_cap", 0, 0)?;
+            }
+        "#;
+        let got = run(GOOD_EVENT, pool, GOOD_CLI, GOOD_README);
+        assert!(got.iter().any(|f| f.msg.contains("\"queue_cap\" is read here but missing")));
+        assert!(got.iter().any(|f| f.msg.contains("\"hedge\" but from_config never reads")));
+        assert!(got.iter().any(|f| f.msg.contains("\"devices\" but from_config never reads")));
+    }
+
+    #[test]
+    fn missing_cli_flag_and_readme_token_are_flagged() {
+        let cli = r#"fn parse() { uint("batch"); }"#;
+        let got = run(GOOD_EVENT, GOOD_POOL, cli, "| `--batch N` |");
+        assert!(got.iter().any(|f| f.file == CLI && f.msg.contains("\"hedge\"")), "{got:?}");
+        assert!(got.iter().any(|f| f.file == "README.md" && f.msg.contains("--no-hedge")));
+    }
+}

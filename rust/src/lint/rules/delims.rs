@@ -1,0 +1,112 @@
+//! Rule `delims`: per-file `()` `[]` `{}` balance.
+//!
+//! This automates the manual "delimiter balance pass" verbatim: because
+//! the lexer has already made strings, char literals and comments
+//! opaque, any imbalance left in the token stream is a real one. The
+//! rule reports the earliest witness: an unmatched closer, a mismatched
+//! pair (with the opener's line), or an opener left unclosed at EOF.
+
+use crate::lint::lexer::{Tok, TokKind};
+use crate::lint::{Finding, Manifests};
+
+fn closer(open: &str) -> &'static str {
+    match open {
+        "(" => ")",
+        "[" => "]",
+        _ => "}",
+    }
+}
+
+/// Check delimiter balance over `toks`.
+pub fn check(file: &str, toks: &[Tok], m: &Manifests) -> Vec<Finding> {
+    if m.delims_allow.iter().any(|f| f == file) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut stack: Vec<&Tok> = Vec::new();
+    for t in toks {
+        if t.kind != TokKind::Punct {
+            continue; // a Str token's text may itself be `(` etc.
+        }
+        match t.text.as_str() {
+            "(" | "[" | "{" => stack.push(t),
+            ")" | "]" | "}" => match stack.last() {
+                None => out.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "delims",
+                    msg: format!("unmatched closing `{}`", t.text),
+                }),
+                Some(o) if closer(&o.text) != t.text => {
+                    let o = stack.pop().unwrap();
+                    out.push(Finding {
+                        file: file.to_string(),
+                        line: t.line,
+                        rule: "delims",
+                        msg: format!("`{}` from line {} closed by `{}`", o.text, o.line, t.text),
+                    });
+                }
+                Some(_) => {
+                    stack.pop();
+                }
+            },
+            _ => {}
+        }
+    }
+    for o in stack {
+        out.push(Finding {
+            file: file.to_string(),
+            line: o.line,
+            rule: "delims",
+            msg: format!("unclosed `{}`", o.text),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn run(src: &str) -> Vec<Finding> {
+        check("x.rs", &lex(src), &Manifests::default())
+    }
+
+    #[test]
+    fn balanced_source_passes() {
+        assert!(run("fn f(a: [u8; 4]) { g(a[0], (1 + 2)); }").is_empty());
+    }
+
+    #[test]
+    fn missing_close_is_reported_at_the_opener() {
+        let got = run("fn f() { g(1; }");
+        assert!(!got.is_empty());
+        assert!(got.iter().any(|f| f.msg.contains('(')));
+    }
+
+    #[test]
+    fn mismatched_pair_names_both_lines() {
+        let got = run("fn f() {\n  g(1]\n}");
+        assert!(got.iter().any(|f| f.msg.contains("from line 2") && f.msg.contains(']')));
+    }
+
+    #[test]
+    fn extra_closer_is_unmatched() {
+        let got = run("fn f() { } }");
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("unmatched closing"));
+    }
+
+    #[test]
+    fn braces_inside_strings_comments_and_chars_are_ignored() {
+        let src = "fn f() { let s = \"}}}\"; let r = r#\"((\"#; let c = '{'; /* ]] */ }";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn allowlisted_file_passes() {
+        let m = Manifests { delims_allow: vec!["x.rs".into()], ..Manifests::default() };
+        assert!(check("x.rs", &lex("fn f() {"), &m).is_empty());
+    }
+}

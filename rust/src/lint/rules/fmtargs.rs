@@ -1,0 +1,345 @@
+//! Rule `fmtargs`: format-argument arity for the `format!` /
+//! `println!` / `write!` macro families.
+//!
+//! For every call with a *literal* format string, the number of
+//! positional placeholders (implicit `{}`, explicit `{0}`, `width$` /
+//! `.prec$` / `.*` spec arguments) must equal the number of positional
+//! arguments supplied, and every `name = value` argument must be used
+//! by some `{name…}` placeholder. Named placeholders without a matching
+//! `name =` argument are fine — Rust 2021 captures them from scope, and
+//! scope resolution is beyond a lexer. Dynamic format strings are out of
+//! scope.
+
+use crate::lint::lexer::{Tok, TokKind};
+use crate::lint::{Finding, Manifests};
+
+/// Macro name → index of its format-string argument. The format string
+/// is optional for the `assert!`/`panic!` shapes: when the argument at
+/// that index is not a string literal the call is skipped.
+const FMT_MACROS: &[(&str, usize)] = &[
+    ("format", 0),
+    ("format_args", 0),
+    ("print", 0),
+    ("println", 0),
+    ("eprint", 0),
+    ("eprintln", 0),
+    ("panic", 0),
+    ("todo", 0),
+    ("unimplemented", 0),
+    ("unreachable", 0),
+    // The vendored `log` shim forwards `format_args!`, so std arity
+    // rules apply to the log macros too.
+    ("error", 0),
+    ("warn", 0),
+    ("info", 0),
+    ("debug", 0),
+    ("trace", 0),
+    ("write", 1),
+    ("writeln", 1),
+    ("assert", 1),
+    ("debug_assert", 1),
+    ("assert_eq", 2),
+    ("assert_ne", 2),
+    ("debug_assert_eq", 2),
+    ("debug_assert_ne", 2),
+];
+
+fn is_open(s: &str) -> bool {
+    matches!(s, "(" | "[" | "{")
+}
+
+fn matching_close(open: &str) -> &'static str {
+    match open {
+        "(" => ")",
+        "[" => "]",
+        _ => "}",
+    }
+}
+
+/// Split the macro invocation opening at `toks[start]` into top-level
+/// argument slices. Turbofish `::<…>` commas are not split points.
+fn split_args<'t>(toks: &'t [Tok], start: usize) -> Vec<&'t [Tok]> {
+    let close = matching_close(&toks[start].text);
+    let (mut paren, mut bracket, mut brace, mut angle) = (0i32, 0i32, 0i32, 0i32);
+    let mut args: Vec<&[Tok]> = Vec::new();
+    let mut arg_start = start + 1;
+    let mut k = start + 1;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" => paren += 1,
+                "[" => bracket += 1,
+                "{" => brace += 1,
+                ")" | "]" | "}" => {
+                    let depth = match t.text.as_str() {
+                        ")" => &mut paren,
+                        "]" => &mut bracket,
+                        _ => &mut brace,
+                    };
+                    if t.text == close && *depth == 0 {
+                        if k > arg_start {
+                            args.push(&toks[arg_start..k]);
+                        }
+                        return args;
+                    }
+                    *depth -= 1;
+                }
+                "::" if toks.get(k + 1).is_some_and(|n| n.is_punct("<")) => {
+                    angle += 1;
+                    k += 2;
+                    continue;
+                }
+                ">" if angle > 0 => angle -= 1,
+                "," if paren == 0 && bracket == 0 && brace == 0 && angle == 0 => {
+                    args.push(&toks[arg_start..k]);
+                    arg_start = k + 1;
+                }
+                _ => {}
+            }
+        }
+        k += 1;
+    }
+    args // unterminated: the delims rule reports the real problem
+}
+
+fn is_ident_like(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Placeholder census of a format-string body: number of implicit
+/// positionals, highest explicit index (`-1` if none), set of named
+/// arguments used.
+pub fn parse_placeholders(body: &str) -> (usize, i64, Vec<String>) {
+    let b: Vec<char> = body.chars().collect();
+    let n = b.len();
+    let mut implicit = 0usize;
+    let mut max_explicit: i64 = -1;
+    let mut named: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    let note_named = |named: &mut Vec<String>, s: &str| {
+        if !named.iter().any(|x| x == s) {
+            named.push(s.to_string());
+        }
+    };
+    while i < n {
+        match b[i] {
+            '{' if b.get(i + 1) == Some(&'{') => i += 2,
+            '{' => {
+                let Some(jrel) = b[i..].iter().position(|&c| c == '}') else { break };
+                let j = i + jrel;
+                let spec: String = b[i + 1..j].iter().collect();
+                let (arg, fmt) = match spec.split_once(':') {
+                    Some((a, f)) => (a, Some(f)),
+                    None => (spec.as_str(), None),
+                };
+                if arg.is_empty() {
+                    implicit += 1;
+                } else if arg.chars().all(|c| c.is_ascii_digit()) {
+                    max_explicit = max_explicit.max(arg.parse::<i64>().unwrap_or(-1));
+                } else if is_ident_like(arg) {
+                    note_named(&mut named, arg);
+                }
+                if let Some(fmt) = fmt {
+                    // width / precision may name their own argument.
+                    let f: Vec<char> = fmt.chars().collect();
+                    let m = f.len();
+                    let mut k = 0usize;
+                    while k < m {
+                        if f[k] == '.' && f.get(k + 1) == Some(&'*') {
+                            implicit += 1;
+                            k += 2;
+                            continue;
+                        }
+                        if f[k].is_alphanumeric() || f[k] == '_' {
+                            let mut e = k;
+                            while e < m && (f[e].is_alphanumeric() || f[e] == '_') {
+                                e += 1;
+                            }
+                            if f.get(e) == Some(&'$') {
+                                let word: String = f[k..e].iter().collect();
+                                if word.chars().all(|c| c.is_ascii_digit()) {
+                                    max_explicit =
+                                        max_explicit.max(word.parse::<i64>().unwrap_or(-1));
+                                } else {
+                                    note_named(&mut named, &word);
+                                }
+                                k = e + 1;
+                                continue;
+                            }
+                            k = e;
+                            continue;
+                        }
+                        k += 1;
+                    }
+                }
+                i = j + 1;
+            }
+            '}' if b.get(i + 1) == Some(&'}') => i += 2,
+            _ => i += 1,
+        }
+    }
+    (implicit, max_explicit, named)
+}
+
+/// Check format-argument arity over `toks`.
+pub fn check(file: &str, toks: &[Tok], m: &Manifests) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for k in 0..toks.len().saturating_sub(2) {
+        let t = &toks[k];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let Some(&(_, fmt_idx)) = FMT_MACROS.iter().find(|(name, _)| *name == t.text) else {
+            continue;
+        };
+        if !toks[k + 1].is_punct("!")
+            || toks[k + 2].kind != TokKind::Punct
+            || !is_open(&toks[k + 2].text)
+        {
+            continue;
+        }
+        // Skip definitions and paths (`macro_rules! assert`, `std::print`).
+        if k > 0 && (toks[k - 1].is_ident("macro_rules") || toks[k - 1].is_punct("::")) {
+            continue;
+        }
+        let args = split_args(toks, k + 2);
+        if args.len() <= fmt_idx {
+            continue; // bare `assert!(cond)` / `panic!()` — no format string
+        }
+        let fmt_arg = args[fmt_idx];
+        if fmt_arg.len() != 1 || fmt_arg[0].kind != TokKind::Str {
+            continue; // dynamic format string
+        }
+        let key = format!("{file}:{}", t.line);
+        if m.fmtargs_allow.iter().any(|e| *e == key) {
+            continue;
+        }
+        let body = &fmt_arg[0].text;
+        let (implicit, max_explicit, named_used) = parse_placeholders(body);
+        let required = implicit.max((max_explicit + 1) as usize);
+        let mut positional = 0usize;
+        let mut named_given: Vec<&str> = Vec::new();
+        for a in &args[fmt_idx + 1..] {
+            if a.len() >= 2
+                && a[0].kind == TokKind::Ident
+                && a[1].is_punct("=")
+                && a.get(2).map_or(true, |t2| !t2.is_punct("="))
+            {
+                named_given.push(&a[0].text);
+            } else {
+                positional += 1;
+            }
+        }
+        if positional != required {
+            let head: String = body.chars().take(40).collect();
+            out.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: "fmtargs",
+                msg: format!(
+                    "`{}!` wants {required} positional argument(s) for \"{head}\", got {positional}",
+                    t.text
+                ),
+            });
+        }
+        for name in named_given {
+            if !named_used.iter().any(|u| u == name) {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "fmtargs",
+                    msg: format!(
+                        "`{}!` named argument `{name}` never used by the format string",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn run(src: &str) -> Vec<Finding> {
+        check("x.rs", &lex(src), &Manifests::default())
+    }
+
+    #[test]
+    fn correct_arity_passes() {
+        let src = r#"fn f() {
+            println!("{} and {}", a, b);
+            format!("{0} {1} {0}", a, b);
+            write!(w, "{x}", x = 3)?;
+            println!("{name} captured from scope");
+            assert!(ok, "ctx {} {}", a, b);
+            assert_eq!(a, b, "mismatch at {}", i);
+            println!("{{escaped}} {}", only_one);
+            info!("{:>8} {:.3}", wide, precise);
+            println!("{:w$}", v, w = 8);
+            println!("{:.*} end", prec, v);
+        }"#;
+        assert!(run(src).is_empty(), "{:?}", run(src));
+    }
+
+    #[test]
+    fn missing_and_extra_positionals_flagged() {
+        let got = run(r#"fn f() { println!("{} {}", a); format!("{}", a, b); }"#);
+        assert_eq!(got.len(), 2);
+        assert!(got[0].msg.contains("wants 2"));
+        assert!(got[1].msg.contains("wants 1"));
+    }
+
+    #[test]
+    fn explicit_index_beyond_args_flagged() {
+        let got = run(r#"fn f() { format!("{0} {2}", a, b); }"#);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("wants 3"));
+    }
+
+    #[test]
+    fn unused_named_argument_flagged() {
+        let got = run(r#"fn f() { write!(w, "{a}", a = 1, b = 2); }"#);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("`b` never used"));
+    }
+
+    #[test]
+    fn width_prec_spec_args_counted() {
+        // `{:w$}` names `w`; `{:.*}` consumes one positional before the value.
+        let got = run(r#"fn f() { println!("{:.*}", v); }"#);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("wants 2"));
+    }
+
+    #[test]
+    fn dynamic_format_and_bare_asserts_skipped() {
+        let src = r#"fn f() { let s = fmt_var; println!("{}", x); format!(s); assert!(cond); panic!(); }"#;
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn nested_calls_and_turbofish_commas_are_one_argument() {
+        let src = r#"fn f() {
+            println!("{}", v.iter().map(|(a, b)| a + b).collect::<HashMap<u64, u64>>().len());
+            format!("{}", g(1, 2));
+        }"#;
+        assert!(run(src).is_empty(), "{:?}", run(src));
+    }
+
+    #[test]
+    fn allowlisted_line_is_skipped() {
+        let m = Manifests { fmtargs_allow: vec!["x.rs:1".into()], ..Manifests::default() };
+        let got = check("x.rs", &lex(r#"fn f() { println!("{}", a, b); }"#), &m);
+        assert!(got.is_empty());
+    }
+}

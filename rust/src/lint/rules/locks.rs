@@ -1,0 +1,256 @@
+//! Rule `locks`: the declared sched lock order is acquired in order.
+//!
+//! `lint/rules/locks.order` declares a rank per lock field
+//! (`lock rust/src/sched/pool.rs:queue 1` …). Within each function body
+//! the rule tracks mutex guard lifetimes syntactically:
+//!
+//! * `let g = self.queue.lock()…;` — named guard, held until its brace
+//!   scope closes or an explicit `drop(g)`;
+//! * `self.queue.lock().unwrap().push(x);` — temporary guard, released
+//!   at the end of the statement (the next `;`);
+//!
+//! and flags any acquisition whose rank is not strictly greater than
+//! every rank already held — which covers both order inversions
+//! (`clients` then `queue`) and re-entrant double-locks of the same
+//! mutex. `allow file:fn:lock` entries exempt a reviewed site.
+//!
+//! This is a syntactic over-approximation (it cannot see guards moved
+//! across function boundaries), but the pool deliberately never passes
+//! guards around, and the self-check test keeps it that way.
+
+use crate::lint::lexer::{Tok, TokKind};
+use crate::lint::{Finding, Manifests};
+
+struct Guard {
+    lock: String,
+    rank: u32,
+    /// Binding name, `None` for statement temporaries.
+    name: Option<String>,
+    /// Brace depth the guard lives at.
+    depth: u32,
+}
+
+/// Scan backwards from the acquisition to its statement start and pick
+/// out a `let … NAME =` binding name, if any.
+fn binding_name(toks: &[Tok], acq: usize) -> Option<String> {
+    let mut start = acq;
+    while start > 0 {
+        let t = &toks[start - 1];
+        if t.is_punct(";") || t.is_punct("{") || t.is_punct("}") {
+            break;
+        }
+        start -= 1;
+    }
+    if !toks[start..acq].iter().any(|t| t.is_ident("let")) {
+        return None;
+    }
+    let eq = (start..acq).find(|&i| {
+        toks[i].is_punct("=") && !toks.get(i + 1).is_some_and(|n| n.is_punct("="))
+    })?;
+    toks[start..eq]
+        .iter()
+        .rev()
+        .find(|t| t.kind == TokKind::Ident && t.text != "mut" && t.text != "let")
+        .map(|t| t.text.clone())
+}
+
+/// Check lock-order discipline over `toks`.
+pub fn check(file: &str, toks: &[Tok], m: &Manifests) -> Vec<Finding> {
+    let prefix = format!("{file}:");
+    let ranks: Vec<(&str, u32)> = m
+        .lock_ranks
+        .iter()
+        .filter_map(|(k, &r)| k.strip_prefix(&prefix).map(|name| (name, r)))
+        .collect();
+    if ranks.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut depth: u32 = 0;
+    let mut held: Vec<Guard> = Vec::new();
+    // Function tracking: `fn NAME … {` at paren depth 0 opens a body.
+    let mut cur_fn = String::from("?");
+    let mut pending_fn: Option<String> = None;
+    let mut paren: i32 = 0;
+    for k in 0..toks.len() {
+        let t = &toks[k];
+        match t.text.as_str() {
+            "(" if t.kind == TokKind::Punct => paren += 1,
+            ")" if t.kind == TokKind::Punct => paren -= 1,
+            "{" if t.kind == TokKind::Punct => {
+                depth += 1;
+                if paren == 0 {
+                    if let Some(name) = pending_fn.take() {
+                        cur_fn = name;
+                    }
+                }
+            }
+            "}" if t.kind == TokKind::Punct => {
+                depth = depth.saturating_sub(1);
+                held.retain(|g| g.depth <= depth);
+                if depth == 0 {
+                    cur_fn = String::from("?");
+                }
+            }
+            ";" if t.kind == TokKind::Punct && paren == 0 => {
+                held.retain(|g| g.name.is_some() || g.depth != depth);
+            }
+            "fn" if t.kind == TokKind::Ident => {
+                if let Some(n) = toks.get(k + 1) {
+                    if n.kind == TokKind::Ident {
+                        pending_fn = Some(n.text.clone());
+                    }
+                }
+            }
+            "drop" if t.kind == TokKind::Ident => {
+                if toks.get(k + 1).is_some_and(|a| a.is_punct("("))
+                    && toks.get(k + 3).is_some_and(|b| b.is_punct(")"))
+                {
+                    if let Some(victim) = toks.get(k + 2) {
+                        held.retain(|g| g.name.as_deref() != Some(victim.text.as_str()));
+                    }
+                }
+            }
+            _ => {}
+        }
+        // `NAME.lock(` where NAME is a declared lock field.
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let Some(&(lock, rank)) = ranks.iter().find(|(name, _)| *name == t.text) else {
+            continue;
+        };
+        if !(toks.get(k + 1).is_some_and(|a| a.is_punct("."))
+            && toks.get(k + 2).is_some_and(|b| b.is_ident("lock"))
+            && toks.get(k + 3).is_some_and(|c| c.is_punct("(")))
+        {
+            continue;
+        }
+        for g in &held {
+            if g.rank >= rank {
+                let key = format!("{file}:{cur_fn}:{lock}");
+                if m.lock_allow.iter().any(|a| *a == key) {
+                    continue;
+                }
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "locks",
+                    msg: format!(
+                        "in `{cur_fn}`: acquiring `{lock}` (rank {rank}) while holding \
+                         `{}` (rank {}) — declared order in lint/rules/locks.order",
+                        g.lock, g.rank
+                    ),
+                });
+            }
+        }
+        held.push(Guard {
+            lock: lock.to_string(),
+            rank,
+            name: binding_name(toks, k),
+            depth,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+    use std::collections::BTreeMap;
+
+    fn m(allow: &[&str]) -> Manifests {
+        let mut lock_ranks = BTreeMap::new();
+        lock_ranks.insert("x.rs:inflight_reg".to_string(), 0);
+        lock_ranks.insert("x.rs:queue".to_string(), 1);
+        lock_ranks.insert("x.rs:clients".to_string(), 2);
+        Manifests {
+            lock_ranks,
+            lock_allow: allow.iter().map(|s| s.to_string()).collect(),
+            ..Manifests::default()
+        }
+    }
+
+    fn run(src: &str) -> Vec<Finding> {
+        check("x.rs", &lex(src), &m(&[]))
+    }
+
+    #[test]
+    fn in_order_acquisition_passes() {
+        let src = "fn f(&self) {\n\
+                   let q = self.queue.lock().unwrap();\n\
+                   let c = self.clients.lock().unwrap();\n\
+                   }";
+        assert!(run(src).is_empty(), "{:?}", run(src));
+    }
+
+    #[test]
+    fn inverted_order_is_flagged_with_fn_name() {
+        let src = "fn sweep(&self) {\n\
+                   let c = self.clients.lock().unwrap();\n\
+                   let q = self.queue.lock().unwrap();\n\
+                   }";
+        let got = run(src);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].line, 3);
+        assert!(got[0].msg.contains("`sweep`"));
+        assert!(got[0].msg.contains("acquiring `queue` (rank 1) while holding `clients` (rank 2)"));
+    }
+
+    #[test]
+    fn block_scope_releases_the_guard() {
+        let src = "fn f(&self) {\n\
+                   { let c = self.clients.lock().unwrap(); c.len(); }\n\
+                   let q = self.queue.lock().unwrap();\n\
+                   }";
+        assert!(run(src).is_empty(), "{:?}", run(src));
+    }
+
+    #[test]
+    fn explicit_drop_releases_the_guard() {
+        let src = "fn f(&self) {\n\
+                   let c = self.clients.lock().unwrap();\n\
+                   drop(c);\n\
+                   let q = self.queue.lock().unwrap();\n\
+                   }";
+        assert!(run(src).is_empty(), "{:?}", run(src));
+    }
+
+    #[test]
+    fn statement_temporary_releases_at_semicolon() {
+        let src = "fn f(&self) {\n\
+                   self.clients.lock().unwrap().len();\n\
+                   let q = self.queue.lock().unwrap();\n\
+                   }";
+        assert!(run(src).is_empty(), "{:?}", run(src));
+    }
+
+    #[test]
+    fn double_lock_of_the_same_mutex_is_flagged() {
+        let src = "fn f(&self) {\n\
+                   let a = self.queue.lock().unwrap();\n\
+                   let b = self.queue.lock().unwrap();\n\
+                   }";
+        let got = run(src);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("acquiring `queue` (rank 1) while holding `queue` (rank 1)"));
+    }
+
+    #[test]
+    fn guards_do_not_leak_across_functions() {
+        let src = "fn a(&self) { let c = self.clients.lock().unwrap(); }\n\
+                   fn b(&self) { let q = self.queue.lock().unwrap(); }";
+        assert!(run(src).is_empty(), "{:?}", run(src));
+    }
+
+    #[test]
+    fn allow_entry_exempts_a_reviewed_site() {
+        let src = "fn sweep(&self) {\n\
+                   let c = self.clients.lock().unwrap();\n\
+                   let q = self.queue.lock().unwrap();\n\
+                   }";
+        let got = check("x.rs", &lex(src), &m(&["x.rs:sweep:queue"]));
+        assert!(got.is_empty(), "{got:?}");
+    }
+}

@@ -1,0 +1,13 @@
+//! The rule passes. Each submodule exposes
+//! `check(file, tokens, manifests) -> Vec<Finding>` (the consistency
+//! rule works on whole sources instead of one token stream) and carries
+//! its own fixture tests: at least one passing and one failing snippet
+//! per rule, so a behavior change in the lexer or a rule shows up as a
+//! test failure rather than as silently rotten enforcement.
+
+pub mod atomics;
+pub mod consistency;
+pub mod delims;
+pub mod fmtargs;
+pub mod locks;
+pub mod wallclock;

@@ -1,0 +1,97 @@
+//! Rule `wallclock`: the clock stays behind the facade.
+//!
+//! Any `Instant::now`, `SystemTime::now` or `thread::sleep` path outside
+//! the files listed in `lint/rules/wallclock.allow` (i.e. outside
+//! `rust/src/util/clock.rs`) is a violation. This is the mechanical
+//! precondition for the ROADMAP's deterministic-virtual-time refactor: a
+//! discrete-event `Clock` only works if nothing reads the process clock
+//! behind its back.
+
+use crate::lint::lexer::{Tok, TokKind};
+use crate::lint::{Finding, Manifests};
+
+/// Banned `Head::tail` path segments.
+const BANNED: &[(&str, &str)] = &[
+    ("Instant", "now"),
+    ("SystemTime", "now"),
+    ("thread", "sleep"),
+];
+
+/// Scan `toks` for banned wall-clock paths.
+pub fn check(file: &str, toks: &[Tok], m: &Manifests) -> Vec<Finding> {
+    if m.wallclock_allow.iter().any(|f| f == file) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for w in toks.windows(3) {
+        let (a, b, c) = (&w[0], &w[1], &w[2]);
+        if a.kind != TokKind::Ident || !b.is_punct("::") || c.kind != TokKind::Ident {
+            continue;
+        }
+        for (head, tail) in BANNED {
+            if a.text == *head && c.text == *tail {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: a.line,
+                    rule: "wallclock",
+                    msg: format!(
+                        "`{head}::{tail}` outside the clock facade — route through \
+                         `util::clock` (lint/rules/wallclock.allow)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn run(file: &str, src: &str, allow: &[&str]) -> Vec<Finding> {
+        let m = Manifests {
+            wallclock_allow: allow.iter().map(|s| s.to_string()).collect(),
+            ..Manifests::default()
+        };
+        check(file, &lex(src), &m)
+    }
+
+    #[test]
+    fn flags_every_banned_path() {
+        let src = "fn f() { let a = Instant::now(); let b = std::time::SystemTime::now(); std::thread::sleep(d); }";
+        let got = run("x.rs", src, &[]);
+        assert_eq!(got.len(), 3);
+        assert!(got[0].msg.contains("Instant::now"));
+        assert!(got[1].msg.contains("SystemTime::now"));
+        assert!(got[2].msg.contains("thread::sleep"));
+    }
+
+    #[test]
+    fn facade_calls_pass() {
+        let src = "fn f() { let a = clock::now(); clock::sleep(d); let e = t0.elapsed(); }";
+        assert!(run("x.rs", src, &[]).is_empty());
+    }
+
+    #[test]
+    fn allowlisted_file_passes() {
+        let src = "fn now() -> Instant { Instant::now() }";
+        assert!(run("rust/src/util/clock.rs", src, &["rust/src/util/clock.rs"]).is_empty());
+        assert_eq!(run("rust/src/other.rs", src, &["rust/src/util/clock.rs"]).len(), 1);
+    }
+
+    #[test]
+    fn tokens_inside_strings_and_comments_pass() {
+        let src = "// Instant::now() is banned\nfn f() { let s = \"thread::sleep\"; let r = r#\"SystemTime::now\"#; }";
+        assert!(run("x.rs", src, &[]).is_empty());
+    }
+
+    #[test]
+    fn instant_as_a_type_passes() {
+        // Only the `::now` path is banned; `Instant` as a type (struct
+        // fields, signatures) is fine.
+        let src = "struct S { t: Instant } fn f(t: Instant) -> Duration { t.elapsed() }";
+        assert!(run("x.rs", src, &[]).is_empty());
+    }
+}

@@ -1,0 +1,60 @@
+//! Self-check: the shipped tree passes its own lint.
+//!
+//! This is the enforcement point for the whole rule set — any new
+//! finding (a wall-clock call outside the facade, an unlisted Relaxed,
+//! a lock-order inversion, a format-arity slip, an `EventKind` /
+//! config-surface drift) fails `cargo test` with the full report, so
+//! violations cannot land without either a fix or a reviewed manifest
+//! entry.
+
+use std::path::Path;
+
+fn repo_root() -> &'static Path {
+    // CARGO_MANIFEST_DIR is the directory holding Cargo.toml, which is
+    // also where lint/rules/ lives.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let report = omprt::lint::run(repo_root()).expect("lint run");
+    assert!(
+        report.is_clean(),
+        "lint findings in the shipped tree:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn lint_scans_the_whole_tree() {
+    // Guard against a silently-degenerate run (wrong root, empty walk):
+    // the tree has far more than 50 Rust files and must keep scanning
+    // the lint module itself.
+    let report = omprt::lint::run(repo_root()).expect("lint run");
+    assert!(
+        report.files_scanned > 50,
+        "only {} files scanned — wrong root?",
+        report.files_scanned
+    );
+    let files = omprt::lint::rust_files(repo_root()).expect("walk");
+    assert!(files.iter().any(|f| f == "rust/src/lint/mod.rs"));
+    assert!(files.iter().any(|f| f == "rust/tests/lint_clean.rs"));
+}
+
+#[test]
+fn manifests_parse_and_declare_the_sched_lock_order() {
+    let m = omprt::lint::Manifests::load(repo_root()).expect("manifests");
+    // The facade file itself must be allowlisted for the wallclock rule.
+    assert!(m.wallclock_allow.iter().any(|f| f == "rust/src/util/clock.rs"));
+    // The declared sched lock order: inflight_reg < queue < clients.
+    let rank = |name: &str| m.lock_ranks[&format!("rust/src/sched/pool.rs:{name}")];
+    assert!(rank("inflight_reg") < rank("queue"));
+    assert!(rank("queue") < rank("clients"));
+    // The seqlock/latch fields stay deny-listed.
+    for f in ["settled", "state", "stamp"] {
+        assert!(m.atomics_deny.iter().any(|d| d == f), "`{f}` missing from deny list");
+    }
+    // Config rows cover the full `[pool]` surface (drift in either
+    // direction is a lint finding; this just pins the floor).
+    assert!(m.consistency.len() >= 19, "only {} consistency rows", m.consistency.len());
+}
