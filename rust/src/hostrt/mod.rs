@@ -17,9 +17,10 @@ use crate::devrt::{self, DeviceRuntime, RuntimeKind};
 use crate::ir::passes::{OptLevel, PassStats};
 use crate::ir::Module;
 use crate::sim::{
-    launch_kernel, launch_kernel_batch, Arch, BatchKernelSpec, Bindings, DeviceDesc,
-    GlobalMemory, LaunchConfig, LaunchStats, LoadedModule,
+    launch_kernel_batch_with_clock, launch_kernel_with_clock, Arch, BatchKernelSpec, Bindings,
+    DeviceDesc, GlobalMemory, LaunchConfig, LaunchStats, LoadedModule,
 };
+use crate::util::clock::{Clock, WallClock};
 use crate::util::Error;
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock};
@@ -48,6 +49,11 @@ pub struct OffloadDevice {
     /// clone off the per-launch hot path. Invalidated by
     /// [`OffloadDevice::bindings_mut`].
     merged: OnceLock<Bindings>,
+    /// Wall-time source for launch stats. The pool replaces this with
+    /// its configured clock ([`OffloadDevice::with_clock`]) so launch
+    /// timing lives on the same (possibly virtual) timeline as
+    /// scheduling; standalone devices use the process clock.
+    clock: Arc<dyn Clock>,
 }
 
 // The device-pool scheduler (`crate::sched`) shares one `OffloadDevice`
@@ -71,7 +77,15 @@ impl OffloadDevice {
             runtime: devrt::build(kind, arch),
             extra_bindings: Bindings::new(),
             merged: OnceLock::new(),
+            clock: Arc::new(WallClock),
         }
+    }
+
+    /// Replace the launch-timing clock (builder style; the pool injects
+    /// its configured clock here at construction).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self
     }
 
     /// Architecture of this device.
@@ -119,7 +133,8 @@ impl OffloadDevice {
         args: &[u64],
         cfg: LaunchConfig,
     ) -> Result<LaunchStats, Error> {
-        launch_kernel(
+        launch_kernel_with_clock(
+            &*self.clock,
             &self.desc,
             &image.module,
             kernel,
@@ -138,7 +153,14 @@ impl OffloadDevice {
         image: &KernelImage,
         items: &[BatchKernelSpec<'_>],
     ) -> Vec<Result<LaunchStats, Error>> {
-        launch_kernel_batch(&self.desc, &image.module, items, &self.gmem, self.merged_bindings())
+        launch_kernel_batch_with_clock(
+            &*self.clock,
+            &self.desc,
+            &image.module,
+            items,
+            &self.gmem,
+            self.merged_bindings(),
+        )
     }
 
     /// `__tgt_target` with host fallback: if device launch fails, run the

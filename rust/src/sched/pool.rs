@@ -20,7 +20,8 @@ use crate::trace::{
     capture_text, chrome_trace_json, Event, EventKind, ExportMeta, Histogram, MetricsRegistry,
     RequestId, TraceSnapshot, TraceStats, Tracer,
 };
-use crate::util::{clock, Error, Summary};
+use crate::util::clock::{self, Clock, ClockHandle, IdleGuard, Participant};
+use crate::util::{stats, Error, Summary};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -189,11 +190,17 @@ pub struct OffloadResponse {
 /// request (or the pool shuts down first).
 pub struct OffloadHandle {
     rx: mpsc::Receiver<Result<OffloadResponse, Error>>,
+    /// The pool's clock: `wait` parks inside an [`IdleGuard`] so a
+    /// driver registered with a virtual clock releases the timeline
+    /// while it blocks.
+    clock: Arc<dyn Clock>,
 }
 
 impl OffloadHandle {
     /// Block until the request completes.
     pub fn wait(self) -> Result<OffloadResponse, Error> {
+        let clock = Arc::clone(&self.clock);
+        let _idle = IdleGuard::new(&*clock);
         match self.rx.recv() {
             Ok(r) => r,
             Err(_) => Err(Error::Sched("pool dropped before the request completed".into())),
@@ -235,11 +242,15 @@ impl std::fmt::Debug for TrySubmitError {
 /// Handle for a device task submitted with [`DevicePool::run_on`].
 pub struct TaskHandle<R> {
     rx: mpsc::Receiver<R>,
+    /// See [`OffloadHandle`]: `wait` is an idle window on this clock.
+    clock: Arc<dyn Clock>,
 }
 
 impl<R> TaskHandle<R> {
     /// Block until the task ran on a pool device.
     pub fn wait(self) -> Result<R, Error> {
+        let clock = Arc::clone(&self.clock);
+        let _idle = IdleGuard::new(&*clock);
         self.rx
             .recv()
             .map_err(|_| Error::Sched("pool dropped before the task ran".into()))
@@ -378,6 +389,13 @@ pub struct PoolConfig {
     /// [`crate::trace::DEFAULT_TRACE_CAPACITY`]; rings overwrite their
     /// oldest records past capacity and report the drop count.
     pub trace_capacity: usize,
+    /// Time source for the whole pool: worker waits, the monitor tick,
+    /// EWMA/watchdog/SLO/hedge timestamps, fault triggers and trace
+    /// stamps all read this clock. Defaults to the wall clock; inject a
+    /// [`crate::util::VirtualClock`] via [`PoolConfig::with_clock`] for
+    /// discrete-event time. Not a `[pool]` config key — a clock is
+    /// environment, not policy (it compares equal on all configs).
+    pub clock: ClockHandle,
 }
 
 impl Default for PoolConfig {
@@ -415,6 +433,7 @@ impl PoolConfig {
             hedge_max: 2,
             trace: false,
             trace_capacity: 0,
+            clock: ClockHandle::default(),
         }
     }
 
@@ -553,6 +572,15 @@ impl PoolConfig {
     /// [`PoolConfig::with_trace`].
     pub fn with_trace_capacity(mut self, records: usize) -> PoolConfig {
         self.trace_capacity = records;
+        self
+    }
+
+    /// Inject the pool's time source (see [`PoolConfig::clock`]): every
+    /// scheduler, fault, hedge and trace timing site reads this clock.
+    /// Pass an `Arc<`[`crate::util::VirtualClock`]`>` to run the pool on
+    /// deterministic discrete-event time.
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> PoolConfig {
+        self.clock = ClockHandle::new(clock);
         self
     }
 
@@ -1503,12 +1531,18 @@ struct Shared {
     /// Event tracing: request-id allocation always, ring emission only
     /// when `[pool] trace = true`.
     tracer: Tracer,
+    /// The pool's time source ([`PoolConfig::clock`]): every timing
+    /// site below reads this handle, never the free-function facade, so
+    /// an injected [`crate::util::VirtualClock`] governs the whole
+    /// scheduler.
+    clock: Arc<dyn Clock>,
 }
 
 impl Shared {
     /// Nanoseconds since the pool started (the watchdog's clock).
     fn now_ns(&self) -> u64 {
-        self.started.elapsed().as_nanos().min(u64::MAX as u128) as u64
+        let since = self.clock.now().saturating_duration_since(self.started);
+        since.as_nanos().min(u64::MAX as u128) as u64
     }
 
     /// Is there a non-quarantined device matching `affinity` outside
@@ -1657,6 +1691,7 @@ impl DevicePool {
                 )));
             }
         }
+        let clock: Arc<dyn Clock> = Arc::clone(&config.clock.0);
         let slots: Vec<DeviceSlot> = config
             .devices
             .iter()
@@ -1664,7 +1699,9 @@ impl DevicePool {
             .map(|(id, spec)| DeviceSlot {
                 id,
                 spec: *spec,
-                device: Arc::new(OffloadDevice::new(spec.kind, spec.arch)),
+                device: Arc::new(
+                    OffloadDevice::new(spec.kind, spec.arch).with_clock(Arc::clone(&clock)),
+                ),
                 cache: ImageCache::with_budget(config.cache_budget_bytes),
                 profiler: Profiler::new(),
                 inflight: AtomicUsize::new(0),
@@ -1678,7 +1715,7 @@ impl DevicePool {
                     .faults
                     .iter()
                     .find(|f| f.device == id)
-                    .map(|f| FaultState::arm(f.clone())),
+                    .map(|f| FaultState::arm_with_clock(f.clone(), Arc::clone(&clock))),
             })
             .collect();
         let reserved = (0..config.devices.len()).map(|_| AtomicUsize::new(0)).collect();
@@ -1729,8 +1766,14 @@ impl DevicePool {
             failed: AtomicU64::new(0),
             sharded_requests: AtomicU64::new(0),
             shard_jobs: AtomicU64::new(0),
-            started: clock::now(),
-            tracer: Tracer::new(config.trace, config.trace_capacity, config.devices.len()),
+            started: clock.now(),
+            tracer: Tracer::with_clock(
+                config.trace,
+                config.trace_capacity,
+                config.devices.len(),
+                Arc::clone(&clock),
+            ),
+            clock,
         });
         let mut workers = vec![];
         for id in 0..config.devices.len() {
@@ -1897,10 +1940,10 @@ impl DevicePool {
                     .a(fanout as u64)
                     .b(arch_code(arch)),
             );
-            return Ok(OffloadHandle { rx: frx });
+            return Ok(OffloadHandle { rx: frx, clock: Arc::clone(&self.shared.clock) });
         }
         let (reply, rx) = mpsc::channel();
-        let job = make_offload_job(req, reply, false, None, deadline, rid);
+        let job = make_offload_job(req, reply, false, None, deadline, rid, self.shared.clock.now());
         let key = job.key.content;
         // The job (and its request) moves into the queue; clone the
         // client tag for the post-acceptance Submit event only when it
@@ -1912,7 +1955,7 @@ impl DevicePool {
         };
         self.enqueue_bulk(vec![Job::Offload(job)])?;
         self.emit_submit(t0, rid, &client, key, deadline);
-        Ok(OffloadHandle { rx })
+        Ok(OffloadHandle { rx, clock: Arc::clone(&self.shared.clock) })
     }
 
     /// Absolute deadline for `req`, if it has a latency budget: the
@@ -1922,7 +1965,7 @@ impl DevicePool {
         let budget = req
             .deadline
             .or_else(|| self.shared.slos.get(&req.client).copied())?;
-        clock::now().checked_add(budget)
+        self.shared.clock.now().checked_add(budget)
     }
 
     /// Non-blocking [`DevicePool::submit`]: when the queue is at capacity
@@ -1979,10 +2022,10 @@ impl DevicePool {
                     .a(fanout as u64)
                     .b(arch_code(arch)),
             );
-            return Ok(OffloadHandle { rx: frx });
+            return Ok(OffloadHandle { rx: frx, clock: Arc::clone(&self.shared.clock) });
         }
         let (reply, rx) = mpsc::channel();
-        let job = make_offload_job(req, reply, false, None, deadline, rid);
+        let job = make_offload_job(req, reply, false, None, deadline, rid, self.shared.clock.now());
         let key = job.key.content;
         let client = if self.shared.tracer.enabled() {
             job.req.client.clone()
@@ -1992,7 +2035,7 @@ impl DevicePool {
         match self.try_enqueue_bulk(vec![Job::Offload(job)]) {
             Ok(()) => {
                 self.emit_submit(t0, rid, &client, key, deadline);
-                Ok(OffloadHandle { rx })
+                Ok(OffloadHandle { rx, clock: Arc::clone(&self.shared.clock) })
             }
             Err(mut jobs) => match jobs.pop() {
                 // No clones of the request `Arc` exist until a job is
@@ -2064,7 +2107,7 @@ impl DevicePool {
             .shared
             .slos
             .get(client)
-            .and_then(|t| clock::now().checked_add(*t));
+            .and_then(|t| self.shared.clock.now().checked_add(*t));
         let t0 = self.shared.tracer.now_ns();
         let rid = self.shared.tracer.next_request_id();
         self.enqueue_bulk(vec![Job::Task(TaskJob {
@@ -2072,12 +2115,12 @@ impl DevicePool {
             client: client.to_string(),
             run,
             deadline,
-            enqueued: clock::now(),
+            enqueued: self.shared.clock.now(),
             req_id: rid,
         })])?;
         // Tasks have no kernel image; key word = 0.
         self.emit_submit(t0, rid, client, 0, deadline);
-        Ok(TaskHandle { rx })
+        Ok(TaskHandle { rx, clock: Arc::clone(&self.shared.clock) })
     }
 
     /// Emit the `Submit` trace event for an *accepted* request, anchored
@@ -2104,7 +2147,7 @@ impl DevicePool {
                 .req(rid)
                 .a(tracer.client_id(client))
                 .b(key)
-                .c(deadline_budget_ns(deadline)),
+                .c(deadline_budget_ns(deadline, self.shared.clock.now())),
         );
     }
 
@@ -2158,6 +2201,9 @@ impl DevicePool {
                     return Err(Error::Sched("pool is shut down".into()));
                 }
                 waited = true;
+                // The submitter is parked, not working: tell the clock so
+                // virtual time can advance past the backpressure window.
+                let _idle = IdleGuard::new(&*shared.clock);
                 q = shared.space.wait(q).unwrap();
             }
             if waited {
@@ -2358,7 +2404,7 @@ impl DevicePool {
             let target = plan.targets.as_ref().map(|t| t[si]);
             // Shard jobs carry the *parent* request's id: every event
             // they emit joins the parent's span.
-            jobs.push(make_offload_job(sreq, tx, true, target, deadline, req_id));
+            jobs.push(make_offload_job(sreq, tx, true, target, deadline, req_id, self.shared.clock.now()));
             parts.push(ShardPart { rx, lo, hi });
         }
         (jobs, parts)
@@ -2370,7 +2416,7 @@ impl DevicePool {
             let q = self.shared.queue.lock().unwrap();
             (q.len(), q.peak())
         };
-        let uptime = self.shared.started.elapsed();
+        let uptime = self.shared.clock.now().saturating_duration_since(self.shared.started);
         let uptime_ns = uptime.as_nanos().max(1);
         let now_ns = self.shared.now_ns();
         let devices: Vec<DeviceMetrics> = self
@@ -2485,7 +2531,7 @@ impl DevicePool {
             if m.queue_depth == 0 && m.completed + m.failed >= m.submitted {
                 return;
             }
-            clock::sleep(Duration::from_millis(1));
+            self.shared.clock.sleep(Duration::from_millis(1));
         }
     }
 
@@ -2605,6 +2651,7 @@ struct ShardPart {
     hi: usize,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn make_offload_job(
     req: OffloadRequest,
     reply: mpsc::Sender<Result<OffloadResponse, Error>>,
@@ -2612,9 +2659,9 @@ fn make_offload_job(
     target_device: Option<usize>,
     deadline: Option<Instant>,
     req_id: RequestId,
+    now: Instant,
 ) -> OffloadJob {
     let key = BatchKey { content: req.module.content_hash(), opt: req.opt };
-    let now = clock::now();
     OffloadJob {
         req: Arc::new(req),
         key,
@@ -2648,11 +2695,11 @@ pub const ARCH_LABELS: [&str; 2] = ["nvptx64", "amdgcn"];
 /// Remaining deadline budget in ns at submit time — the `Submit` event's
 /// `c` word. 0 = best-effort; an already-expired deadline clamps to 1 so
 /// "has a deadline" stays distinguishable.
-fn deadline_budget_ns(deadline: Option<Instant>) -> u64 {
+fn deadline_budget_ns(deadline: Option<Instant>, now: Instant) -> u64 {
     match deadline {
         None => 0,
         Some(d) => d
-            .saturating_duration_since(clock::now())
+            .saturating_duration_since(now)
             .as_nanos()
             .clamp(1, u64::MAX as u128) as u64,
     }
@@ -2683,7 +2730,7 @@ fn spawn_stitcher(
     let partitioned = spec.partitioned.clone();
     let elem_bytes = spec.elem_bytes;
     let client = req.client.clone();
-    let enqueued = clock::now();
+    let enqueued = shared.clock.now();
     let (ftx, frx) = mpsc::channel();
     let (arm_tx, arm_rx) = mpsc::channel::<()>();
     std::thread::Builder::new()
@@ -2753,7 +2800,7 @@ fn stitch(
     // cannot double-count a split request.
     // Completion = the moment the last shard reported, captured before
     // the clients-table lock so contention cannot skew miss judgments.
-    let done = clock::now();
+    let done = account.shared.clock.now();
     let max_wait = got.iter().map(|(r, _, _)| r.queue_wait).max().unwrap_or(Duration::ZERO);
     // Payload: a = shards that reported a result, b = whether the whole
     // request stitched cleanly.
@@ -2837,6 +2884,13 @@ impl Drop for DevicePool {
             self.shared.cv.notify_all();
             self.shared.space.notify_all();
         }
+        // With shutdown visible, drain the clock: a virtual clock parks
+        // sleepers on its timeline, and a worker mid-stall (or the
+        // monitor mid-tick) must wake *now*, not at its virtual
+        // deadline. Sleeps re-checked after this return immediately
+        // because chunked sleeps test `shutdown` per chunk. No-op on the
+        // wall clock.
+        self.shared.clock.wake_sleepers();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -2905,6 +2959,10 @@ enum Work {
 ///    and take one weighted-DRR pop (leader + same-image followers);
 /// 3. run it, reply to every job, account per-client completion.
 fn worker_loop(shared: &Shared, id: usize) {
+    // Workers participate in virtual time for the thread's whole life:
+    // while any worker is runnable the clock is frozen, and the idle
+    // guards around the two condvar waits below are what let it move.
+    let _clock = Participant::new(&*shared.clock);
     let slot = &shared.slots[id];
     loop {
         let (work, decided, preempted, pinned) = {
@@ -2931,6 +2989,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                     let backstop = shared
                         .watchdog_min
                         .clamp(Duration::from_millis(2), Duration::from_millis(250));
+                    let _idle = IdleGuard::new(&*shared.clock);
                     let (qq, _) = shared.cv.wait_timeout(q, backstop).unwrap();
                     q = qq;
                     continue 'wait;
@@ -2945,7 +3004,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                         break 'wait (Work::Batch(vec![job]), 1, false, true);
                     }
                 }
-                let now = clock::now();
+                let now = shared.clock.now();
                 let limit = if shared.adaptive {
                     // Quarantined devices are not idle capacity: counting
                     // them would both oversize shard fan-outs and shrink
@@ -2977,6 +3036,9 @@ fn worker_loop(shared: &Shared, id: usize) {
                     }
                     break 'wait (work, limit, preempted, false);
                 }
+                // Parked with an empty (eligible) queue: mark the worker
+                // idle so a virtual clock can advance to the next event.
+                let _idle = IdleGuard::new(&*shared.clock);
                 q = shared.cv.wait(q).unwrap();
             }
         };
@@ -3016,7 +3078,8 @@ fn worker_loop(shared: &Shared, id: usize) {
         }
         match work {
             Work::Task(task) => {
-                let queue_wait = task.enqueued.elapsed();
+                let queue_wait =
+                    shared.clock.now().saturating_duration_since(task.enqueued);
                 slot.inflight.fetch_add(1, Ordering::Relaxed);
                 // Leased closures run for as long as they like (whole
                 // benchmarks); flag the lease so the stall watchdog
@@ -3035,7 +3098,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                 // to the device would starve forever). The panicked
                 // task's handle resolves to an error via its dropped
                 // sender.
-                let (outcome, elapsed) = crate::util::stats::timed(|| {
+                let (outcome, elapsed) = stats::timed_with(&*shared.clock, || {
                     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         (task.run)(&lease)
                     }))
@@ -3052,7 +3115,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                 // multi-second leased benchmark would poison the global
                 // fallback and make every unseen image key look
                 // permanently panicked.
-                let done = clock::now();
+                let done = shared.clock.now();
                 let ok = outcome.is_ok();
                 match outcome {
                     Ok(()) => {
@@ -3104,6 +3167,11 @@ fn worker_loop(shared: &Shared, id: usize) {
 /// (quarter-floor vs. full floor), which is the point — rescue the
 /// in-flight request before the device is even formally suspect.
 fn monitor_loop(shared: &Shared) {
+    // The monitor participates in virtual time too — its tick sleeps use
+    // the low-priority `sleep_tick` class, so an otherwise idle pool does
+    // not see virtual time gallop forward at watchdog cadence, yet the
+    // tick still interleaves correctly with real (normal-class) events.
+    let _clock = Participant::new(&*shared.clock);
     // Tick scales with the watchdog floor: detection latency only needs
     // to be small *relative to the thresholds* (suspect at ≥ floor,
     // quarantine at ≥ 2x floor), so a conservative floor — the
@@ -3119,7 +3187,7 @@ fn monitor_loop(shared: &Shared) {
         }
         if !shared.watchdog {
             // Hedge-only mode: no judgments, no probes.
-            clock::sleep(tick);
+            shared.clock.sleep_tick(tick);
             continue;
         }
         let now_ns = shared.now_ns();
@@ -3189,7 +3257,7 @@ fn monitor_loop(shared: &Shared) {
                 }
             }
         }
-        clock::sleep(tick);
+        shared.clock.sleep_tick(tick);
     }
 }
 
@@ -3217,7 +3285,7 @@ fn monitor_loop(shared: &Shared) {
 /// backpressure (the request was admitted once) — with a generation
 /// bump and a pin reservation so the planner sees the target as taken.
 fn maybe_hedge(shared: &Shared) {
-    let now = clock::now();
+    let now = shared.clock.now();
     let floor = (shared.watchdog_min / 4).max(Duration::from_millis(1));
     let mut dups: Vec<OffloadJob> = vec![];
     // Devices already claimed by a duplicate minted this pass.
@@ -3417,7 +3485,7 @@ fn sweep_stranded(shared: &Shared) {
     }
     // Removals freed queue slots for blocked submitters.
     shared.space.notify_all();
-    let done = clock::now();
+    let done = shared.clock.now();
     // One clients-table lock for the whole sweep, matching the batched
     // reply loop's discipline.
     let mut accounts = shared.clients.lock().unwrap();
@@ -3503,7 +3571,7 @@ fn sweep_stranded(shared: &Shared) {
 /// back to per-job sequential launches.
 fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>) {
     let n = batch.len();
-    let t_busy = clock::now();
+    let t_busy = shared.clock.now();
     slot.inflight.fetch_add(n, Ordering::Relaxed);
     slot.health.begin_work(shared.now_ns(), n, Some(batch[0].key.content));
     // Payload: a = jobs in the launch, b = image key. Tagged with the
@@ -3521,7 +3589,9 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
         slot.batched_jobs.fetch_add(n as u64, Ordering::Relaxed);
     }
     slot.max_batch.fetch_max(n, Ordering::Relaxed);
-    let waits: Vec<Duration> = batch.iter().map(|j| j.enqueued.elapsed()).collect();
+    let now = shared.clock.now();
+    let waits: Vec<Duration> =
+        batch.iter().map(|j| now.saturating_duration_since(j.enqueued)).collect();
 
     // Register the batch with the hedging monitor before anything that
     // can block (the scripted-fault stall sleeps below, exactly like a
@@ -3529,7 +3599,7 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
     // registered — one speculative copy per request is the ceiling —
     // and with hedging off the registry stays empty and untouched.
     let reg_tokens: Vec<u64> = if shared.hedge {
-        let started = clock::now();
+        let started = shared.clock.now();
         let mut reg = shared.inflight_reg.lock().unwrap();
         batch
             .iter()
@@ -3599,14 +3669,14 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
                     slot.cache.note_batched_hits(n as u64 - 1);
                 }
                 if n > 1 && image.module.global_addrs.is_empty() {
-                    run_fused(slot, &image, &batch, &waits, first_hit)
+                    run_fused(&*shared.clock, slot, &image, &batch, &waits, first_hit)
                 } else {
                     batch
                         .iter()
                         .enumerate()
                         .map(|(i, job)| {
                             let hit = if i == 0 { first_hit } else { true };
-                            run_one(slot, &image, &job.req, waits[i], hit)
+                            run_one(&*shared.clock, slot, &image, &job.req, waits[i], hit)
                         })
                         .collect()
                 }
@@ -3614,12 +3684,15 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
         },
     };
     if slow_factor > 1.0 {
-        FaultState::apply_slowdown(slow_factor, t_busy.elapsed(), &shared.shutdown);
+        if let Some(f) = slot.fault.as_ref() {
+            let elapsed = shared.clock.now().saturating_duration_since(t_busy);
+            f.apply_slowdown(slow_factor, elapsed, &shared.shutdown);
+        }
     }
 
     slot.inflight.fetch_sub(n, Ordering::Relaxed);
-    let busy = t_busy.elapsed();
-    let done = clock::now();
+    let done = shared.clock.now();
+    let busy = done.saturating_duration_since(t_busy);
     slot.busy_ns
         .fetch_add(busy.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
     // Payload: a = jobs, b = whether every job in the launch succeeded,
@@ -3721,7 +3794,7 @@ fn run_offload_batch(shared: &Shared, slot: &DeviceSlot, batch: Vec<OffloadJob>)
                         // sends it. Queue-wait restarts for the new
                         // stint (sojourn keeps the original clock).
                         job.target_device = None;
-                        job.enqueued = clock::now();
+                        job.enqueued = shared.clock.now();
                         shared.retries.fetch_add(1, Ordering::Relaxed);
                         // Same request id, incremented attempt: a =
                         // attempt number (1-based = devices tried so
@@ -3885,6 +3958,7 @@ fn read_back(
 
 /// Execute one request on `slot`: map, launch, read back, free.
 fn run_one(
+    clock: &dyn Clock,
     slot: &DeviceSlot,
     image: &Arc<KernelImage>,
     req: &OffloadRequest,
@@ -3894,7 +3968,7 @@ fn run_one(
     let dev_addrs = map_buffers(&slot.device, req)?;
     let args = resolve_args(req, &dev_addrs);
     let (launch, elapsed) =
-        crate::util::stats::timed(|| slot.device.offload(image, &req.kernel, &args, req.cfg));
+        stats::timed_with(clock, || slot.device.offload(image, &req.kernel, &args, req.cfg));
     slot.profiler.record(&req.region, elapsed);
     let result = (|| {
         let stats = launch?;
@@ -3918,6 +3992,7 @@ fn run_one(
 /// attribution inside a fused grid is not measurable; each job's region
 /// is charged an equal share of the batch.
 fn run_fused(
+    clock: &dyn Clock,
     slot: &DeviceSlot,
     image: &Arc<KernelImage>,
     batch: &[OffloadJob],
@@ -3952,7 +4027,7 @@ fn run_fused(
     }
 
     let (launch_results, elapsed) =
-        crate::util::stats::timed(|| slot.device.offload_batch(image, &items));
+        stats::timed_with(clock, || slot.device.offload_batch(image, &items));
     // Equal-share attribution over the jobs that actually launched;
     // map-failed jobs ran nothing and are not charged.
     let share = elapsed / items.len().max(1) as u32;
@@ -4279,7 +4354,7 @@ impl QueueTestHarness {
         let deadline = past_deadline.then(clock::now);
         let (tx, _rx) = mpsc::channel();
         self.q
-            .push(Job::Offload(make_offload_job(req, tx, pinned.is_some(), pinned, deadline, 0)));
+            .push(Job::Offload(make_offload_job(req, tx, pinned.is_some(), pinned, deadline, 0, clock::now())));
     }
 
     /// One DRR/EDF pop for the worker of `device_id`; returns
@@ -4336,7 +4411,7 @@ impl QueueTestHarness {
             deadline: None,
         };
         let (tx, _rx) = mpsc::channel();
-        let mut job = make_offload_job(req, tx, false, Some(device), None, 0);
+        let mut job = make_offload_job(req, tx, false, Some(device), None, 0, clock::now());
         job.is_hedge = true;
         let latch = job.settled.clone();
         self.q.push(Job::Offload(job));
@@ -4544,7 +4619,7 @@ mod tests {
     #[test]
     fn hedge_settle_latch_is_exactly_once() {
         let (tx, _rx) = mpsc::channel();
-        let job = make_offload_job(base_request(Affinity::any()), tx, false, None, None, 0);
+        let job = make_offload_job(base_request(Affinity::any()), tx, false, None, None, 0, clock::now());
         // The duplicate shares the original's latch (as `maybe_hedge`
         // arranges); whichever side swaps first owns the termination.
         let dup_latch = job.settled.clone();
@@ -4614,7 +4689,7 @@ mod tests {
         let mut req = base_request(Affinity::any());
         req.client = client.to_string();
         let (tx, _rx) = mpsc::channel();
-        Job::Offload(make_offload_job(req, tx, target.is_some(), target, deadline, 0))
+        Job::Offload(make_offload_job(req, tx, target.is_some(), target, deadline, 0, clock::now()))
     }
 
     fn pop_client(q: &mut SchedQueue, spec: DeviceSpec, limit: usize) -> Option<String> {
@@ -4900,7 +4975,7 @@ mod tests {
         let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
         let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
         let (tx, rx) = mpsc::channel();
-        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(req, tx, true, Some(0), None, 0))])
+        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(req, tx, true, Some(0), None, 0, clock::now()))])
             .unwrap_or_else(|_| panic!("queue has room"));
         assert_eq!(pool.shared.reserved[0].load(Ordering::Relaxed), 1);
 
@@ -4952,7 +5027,7 @@ mod tests {
         let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
         let (filler, _) = scale_request(&data, Affinity::any(), OptLevel::O2);
         let (ftx, frx) = mpsc::channel();
-        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(filler, ftx, false, None, None, 0))])
+        pool.try_enqueue_bulk(vec![Job::Offload(make_offload_job(filler, ftx, false, None, None, 0, clock::now()))])
             .unwrap_or_else(|_| panic!("queue has room for the filler"));
 
         let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
@@ -4969,6 +5044,7 @@ mod tests {
                     Some(1),
                     None,
                     0,
+                    clock::now(),
                 ))])
                 .expect("bulk enqueue succeeds after the wait");
             });

@@ -48,9 +48,10 @@
 //! `omprt bench --pool` (comma-separated) and by
 //! [`crate::sched::PoolConfig::with_fault_spec`].
 
-use crate::util::{clock, Error};
+use crate::util::clock::{Clock, WallClock};
+use crate::util::Error;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// What kind of misbehavior to inject.
@@ -236,19 +237,21 @@ impl std::fmt::Display for FaultSpec {
 /// a long hang must not pin a worker thread past pool shutdown.
 const SLEEP_CHUNK: Duration = Duration::from_millis(5);
 
-/// Sleep `total` in [`SLEEP_CHUNK`] steps, returning early (false) when
-/// `shutdown` flips.
-fn chunked_sleep(total: Duration, shutdown: &AtomicBool) -> bool {
-    let t0 = clock::now();
+/// Sleep `total` on `clock` in [`SLEEP_CHUNK`] steps, returning early
+/// (false) when `shutdown` flips. On a virtual clock each chunk is a
+/// discrete event, so the pool's watchdog ticks interleave with a long
+/// stall exactly as they do in wall time.
+fn chunked_sleep(clock: &dyn Clock, total: Duration, shutdown: &AtomicBool) -> bool {
+    let t0 = clock.now();
     loop {
-        let left = total.saturating_sub(t0.elapsed());
+        let left = total.saturating_sub(clock.now().saturating_duration_since(t0));
         if left.is_zero() {
             return true;
         }
         if shutdown.load(Ordering::SeqCst) {
             return false;
         }
-        clock::sleep(SLEEP_CHUNK.min(left));
+        clock.sleep(SLEEP_CHUNK.min(left));
     }
 }
 
@@ -258,6 +261,10 @@ fn chunked_sleep(total: Duration, shutdown: &AtomicBool) -> bool {
 /// quarantine re-admission.
 pub struct FaultState {
     spec: FaultSpec,
+    /// Timing source: stall sleeps, windows and `t:` triggers all read
+    /// this clock, so a pool on a virtual clock injects faults on the
+    /// virtual timeline.
+    clock: Arc<dyn Clock>,
     /// When the fault was armed (pool construction) — the zero point of
     /// `t:` triggers.
     armed: Instant,
@@ -277,11 +284,19 @@ pub struct FaultState {
 }
 
 impl FaultState {
-    /// Arm `spec` now.
+    /// Arm `spec` now, on the wall clock.
     pub fn arm(spec: FaultSpec) -> FaultState {
+        FaultState::arm_with_clock(spec, Arc::new(WallClock))
+    }
+
+    /// Arm `spec` now, reading all times from `clock` (the pool passes
+    /// its configured clock).
+    pub fn arm_with_clock(spec: FaultSpec, clock: Arc<dyn Clock>) -> FaultState {
+        let armed = clock.now();
         FaultState {
             spec,
-            armed: clock::now(),
+            clock,
+            armed,
             launches: AtomicU64::new(0),
             fail_seq: AtomicU64::new(0),
             injected: AtomicU64::new(0),
@@ -308,7 +323,7 @@ impl FaultState {
             FaultTrigger::Launch(n) => last >= n,
             FaultTrigger::Elapsed(d) => {
                 let _ = first;
-                self.armed.elapsed() >= d
+                self.clock.now().saturating_duration_since(self.armed) >= d
             }
         }
     }
@@ -366,18 +381,18 @@ impl FaultState {
                 }
             }
             FaultKind::Stall { dur, window } => {
-                let now = clock::now();
+                let now = self.clock.now();
                 let w = window.unwrap_or(*dur);
                 if self.window_active(Some(w), now) {
                     self.injected.fetch_add(1, Ordering::Relaxed);
                     self.stalling.store(true, Ordering::SeqCst);
-                    chunked_sleep(*dur, shutdown);
+                    chunked_sleep(&*self.clock, *dur, shutdown);
                     self.stalling.store(false, Ordering::SeqCst);
                 }
                 Ok(1.0)
             }
             FaultKind::Slow { factor, window } => {
-                if self.window_active(*window, clock::now()) {
+                if self.window_active(*window, self.clock.now()) {
                     self.injected.fetch_add(1, Ordering::Relaxed);
                     Ok(*factor)
                 } else {
@@ -389,11 +404,12 @@ impl FaultState {
 
     /// Apply a slowdown factor returned by
     /// [`FaultState::on_batch_start`]: sleep the extra `(factor - 1)`
-    /// share of the observed execution time (shutdown-aware).
-    pub fn apply_slowdown(factor: f64, elapsed: Duration, shutdown: &AtomicBool) {
+    /// share of the observed execution time on this fault's clock
+    /// (shutdown-aware).
+    pub fn apply_slowdown(&self, factor: f64, elapsed: Duration, shutdown: &AtomicBool) {
         if factor > 1.0 {
             let extra = elapsed.mul_f64(factor - 1.0);
-            let _ = chunked_sleep(extra, shutdown);
+            let _ = chunked_sleep(&*self.clock, extra, shutdown);
         }
     }
 
@@ -407,7 +423,9 @@ impl FaultState {
             FaultKind::Die => {
                 let dead = self.died.load(Ordering::SeqCst)
                     || match self.spec.trigger {
-                        FaultTrigger::Elapsed(d) => self.armed.elapsed() >= d,
+                        FaultTrigger::Elapsed(d) => {
+                            self.clock.now().saturating_duration_since(self.armed) >= d
+                        }
                         FaultTrigger::Launch(_) => false,
                     };
                 if dead {
@@ -429,7 +447,8 @@ impl FaultState {
                 let ws = self.window_start.lock().unwrap();
                 match *ws {
                     Some(start)
-                        if start.elapsed() <= window.unwrap_or(*dur) =>
+                        if self.clock.now().saturating_duration_since(start)
+                            <= window.unwrap_or(*dur) =>
                     {
                         Err(Error::Fault(format!(
                             "probe failed: device {} still inside its stall window",
@@ -447,6 +466,8 @@ impl FaultState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::clock;
+    use crate::util::vclock::VirtualClock;
 
     #[test]
     fn spec_grammar_roundtrips() {
@@ -585,8 +606,8 @@ mod tests {
         assert!(f.probe_ok().is_ok(), "slow devices respond to probes");
         // The slowdown sleep scales with observed time.
         let t0 = clock::now();
-        FaultState::apply_slowdown(3.0, Duration::from_millis(10), &sd);
-        assert!(t0.elapsed() >= Duration::from_millis(18));
+        f.apply_slowdown(3.0, Duration::from_millis(10), &sd);
+        assert!(clock::now() - t0 >= Duration::from_millis(18));
     }
 
     #[test]
@@ -597,5 +618,24 @@ mod tests {
         clock::sleep(Duration::from_millis(35));
         assert!(f.on_batch_start(1, &sd).is_err());
         assert!(f.probe_ok().is_err());
+    }
+
+    #[test]
+    fn virtual_clock_drives_triggers_and_stalls() {
+        let vc = Arc::new(VirtualClock::new());
+        let sd = no_shutdown();
+        let f = FaultState::arm_with_clock(FaultSpec::parse("0=die@t:30ms").unwrap(), vc.clone());
+        assert!(f.on_batch_start(1, &sd).is_ok(), "alive before the virtual trigger");
+        vc.sleep(Duration::from_millis(35)); // no wall time passes
+        assert!(f.on_batch_start(1, &sd).is_err());
+        assert!(f.probe_ok().is_err());
+
+        // A virtual stall advances virtual time by exactly its duration.
+        let s =
+            FaultState::arm_with_clock(FaultSpec::parse("0=stall:600ms@launch:0").unwrap(), vc.clone());
+        let t0 = vc.elapsed();
+        assert!(s.on_batch_start(1, &sd).is_ok());
+        assert_eq!(vc.elapsed() - t0, Duration::from_millis(600));
+        assert!(s.injected() >= 1);
     }
 }

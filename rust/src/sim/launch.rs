@@ -5,6 +5,7 @@ use super::device::DeviceDesc;
 use super::interp::{CallEnv, Interp};
 use super::loader::LoadedModule;
 use super::memory::{GlobalMemory, SharedMemory};
+use crate::util::clock::Clock;
 use crate::util::{clock, Error};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -229,13 +230,31 @@ pub fn launch_kernel(
     bindings: &Bindings,
     cfg: LaunchConfig,
 ) -> Result<LaunchStats, Error> {
+    launch_kernel_with_clock(&clock::WallClock, desc, module, kernel, args, gmem, bindings, cfg)
+}
+
+/// [`launch_kernel`] with an injected wall-time source for the returned
+/// [`LaunchStats::wall`] stamp (the pool passes its configured clock so
+/// profiler rows stay on the virtual timeline). The SM worker threads
+/// themselves are compute-bound and never sleep, so they need no clock.
+#[allow(clippy::too_many_arguments)]
+pub fn launch_kernel_with_clock(
+    timer: &dyn Clock,
+    desc: &DeviceDesc,
+    module: &LoadedModule,
+    kernel: &str,
+    args: &[u64],
+    gmem: &GlobalMemory,
+    bindings: &Bindings,
+    cfg: LaunchConfig,
+) -> Result<LaunchStats, Error> {
     let f = resolve_kernel(desc, module, kernel, args, cfg)?;
     let width = desc.arch.warp_width();
     let warps_per_block = cfg.block_dim.div_ceil(width);
     let stats = StatsCollector::default();
     let first_error: Mutex<Option<Error>> = Mutex::new(None);
     let next_block = AtomicUsize::new(0);
-    let t0 = clock::now();
+    let t0 = timer.now();
 
     let workers = desc.sm_count.min(cfg.grid_dim).max(1);
     std::thread::scope(|scope| {
@@ -264,7 +283,7 @@ pub fn launch_kernel(
         lane_ops: stats.lane_ops.load(Ordering::Relaxed),
         warp_steps: stats.warp_steps.load(Ordering::Relaxed),
         blocks: cfg.grid_dim,
-        wall: t0.elapsed(),
+        wall: timer.now().saturating_duration_since(t0),
     })
 }
 
@@ -304,6 +323,19 @@ pub fn launch_kernel_batch(
     gmem: &GlobalMemory,
     bindings: &Bindings,
 ) -> Vec<Result<LaunchStats, Error>> {
+    launch_kernel_batch_with_clock(&clock::WallClock, desc, module, items, gmem, bindings)
+}
+
+/// [`launch_kernel_batch`] with an injected wall-time source (see
+/// [`launch_kernel_with_clock`]).
+pub fn launch_kernel_batch_with_clock(
+    timer: &dyn Clock,
+    desc: &DeviceDesc,
+    module: &LoadedModule,
+    items: &[BatchKernelSpec<'_>],
+    gmem: &GlobalMemory,
+    bindings: &Bindings,
+) -> Vec<Result<LaunchStats, Error>> {
     // Validate every item up front; invalid ones fail without running and
     // are excluded from the fused grid.
     let mut preps: Vec<Option<(Arc<crate::ir::Function>, u32)>> = Vec::with_capacity(items.len());
@@ -336,7 +368,7 @@ pub fn launch_kernel_batch(
     let stats: Vec<StatsCollector> =
         (0..items.len()).map(|_| StatsCollector::default()).collect();
     let cursor = AtomicUsize::new(0);
-    let t0 = clock::now();
+    let t0 = timer.now();
 
     if !flat.is_empty() {
         let workers = desc.sm_count.min(flat.len() as u32).max(1);
@@ -376,7 +408,7 @@ pub fn launch_kernel_batch(
         });
     }
 
-    let wall = t0.elapsed();
+    let wall = timer.now().saturating_duration_since(t0);
     errors
         .into_iter()
         .enumerate()

@@ -28,8 +28,8 @@ pub mod memory;
 pub use device::{Arch, DeviceDesc};
 pub use fault::{FaultKind, FaultSpec, FaultState, FaultTrigger};
 pub use launch::{
-    launch_kernel, launch_kernel_batch, BatchKernelSpec, Bindings, LaunchConfig, LaunchStats,
-    RtFn,
+    launch_kernel, launch_kernel_batch, launch_kernel_batch_with_clock, launch_kernel_with_clock,
+    BatchKernelSpec, Bindings, LaunchConfig, LaunchStats, RtFn,
 };
 pub use loader::LoadedModule;
 pub use memory::{GlobalMemory, MemStats, SharedMemory};

@@ -12,9 +12,9 @@
 
 use super::event::{Event, EventKind, RequestId, TraceRecord};
 use super::ring::TraceRing;
-use crate::util::clock;
+use crate::util::clock::{Clock, WallClock};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Shared stripe rings for non-worker threads. Submit-side traffic is
@@ -100,6 +100,10 @@ pub struct Tracer {
     enabled: bool,
     capacity: usize,
     n_workers: usize,
+    /// Timestamp source; the pool injects its configured clock so
+    /// trace timestamps live on the same (possibly virtual) timeline
+    /// as scheduling decisions.
+    clock: Arc<dyn Clock>,
     epoch: Instant,
     next_req: AtomicU64,
     next_seq: AtomicU64,
@@ -117,17 +121,31 @@ impl Tracer {
     /// each of `capacity` records (floored at 64; 0 selects
     /// [`DEFAULT_TRACE_CAPACITY`]).
     pub fn new(enabled: bool, capacity: usize, n_workers: usize) -> Tracer {
+        Tracer::with_clock(enabled, capacity, n_workers, Arc::new(WallClock))
+    }
+
+    /// [`Tracer::new`] with an injected timestamp source. The epoch is
+    /// read from `clock` at construction, so on a virtual clock every
+    /// `t_ns` is a pure virtual offset from pool start.
+    pub fn with_clock(
+        enabled: bool,
+        capacity: usize,
+        n_workers: usize,
+        clock: Arc<dyn Clock>,
+    ) -> Tracer {
         let cap = if capacity == 0 { DEFAULT_TRACE_CAPACITY } else { capacity.max(64) };
         let rings = if enabled {
             (0..n_workers + STRIPES).map(|_| TraceRing::new(cap)).collect()
         } else {
             Vec::new()
         };
+        let epoch = clock.now();
         Tracer {
             enabled,
             capacity: cap,
             n_workers,
-            epoch: clock::now(),
+            clock,
+            epoch,
             next_req: AtomicU64::new(1),
             next_seq: AtomicU64::new(1),
             rings,
@@ -145,9 +163,11 @@ impl Tracer {
         self.enabled
     }
 
-    /// Nanoseconds since the tracer epoch (pool construction).
+    /// Nanoseconds since the tracer epoch (pool construction), read
+    /// from the injected clock.
     pub fn now_ns(&self) -> u64 {
-        self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
+        let since = self.clock.now().saturating_duration_since(self.epoch);
+        since.as_nanos().min(u64::MAX as u128) as u64
     }
 
     /// Allocate the next request id (never 0; ids are allocated even
@@ -268,6 +288,19 @@ mod tests {
         assert_eq!(Tracer::new(true, 0, 1).stats().capacity, DEFAULT_TRACE_CAPACITY);
         assert_eq!(Tracer::new(true, 7, 1).stats().capacity, 64);
         assert_eq!(Tracer::new(true, 1000, 1).stats().capacity, 1000);
+    }
+
+    #[test]
+    fn injected_virtual_clock_stamps_virtual_offsets() {
+        let vc = Arc::new(crate::util::vclock::VirtualClock::new());
+        let t = Tracer::with_clock(true, 64, 1, vc.clone());
+        assert_eq!(t.now_ns(), 0, "epoch is pool start on the virtual timeline");
+        vc.sleep(std::time::Duration::from_millis(3));
+        assert_eq!(t.now_ns(), 3_000_000);
+        let rid = t.next_request_id();
+        t.emit(Some(0), Event::new(EventKind::LaunchStart).req(rid));
+        let snap = t.snapshot();
+        assert_eq!(snap.records[0].t_ns, 3_000_000, "records carry virtual stamps");
     }
 
     #[test]

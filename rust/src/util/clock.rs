@@ -3,32 +3,148 @@
 //!
 //! Everything above the simulator — service EWMAs, watchdog judgments,
 //! SLO deadlines, fault triggers, stall sleeps, trace timestamps — asks
-//! *this* module for the time. That single choke point is what makes the
-//! ROADMAP's "deterministic virtual time" item a local change instead of
-//! a tree-wide hunt: a discrete-event [`Clock`] implementation (events on
-//! a virtual timeline, `sleep` jumping time to the next event) slots in
-//! behind the same trait without touching a single call site again.
+//! *this* module (or an injected [`Clock`] handle) for the time. That
+//! single choke point is what made the ROADMAP's "deterministic virtual
+//! time" item a local change instead of a tree-wide hunt: the
+//! discrete-event [`crate::util::vclock::VirtualClock`] slots in behind
+//! the same trait, and the pool threads an `Arc<dyn Clock>` through
+//! every scheduler/fault/trace timing site
+//! (`PoolConfig::with_clock`).
 //!
 //! The invariant is *enforced*, not aspirational: `omprt lint` (and the
 //! toolchain-less `python/lint/run.py` subset) fails the build on any
 //! `Instant::now` / `SystemTime::now` / `thread::sleep` token outside
 //! the files listed in `lint/rules/wallclock.allow` — which names
-//! exactly this file.
+//! exactly this file. (`vclock.rs` needs no entry: it derives its base
+//! instant from the free functions here and never reads the process
+//! clock afterwards.)
 
+use std::fmt;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A source of time and sleep. [`WallClock`] is the process clock; the
-/// planned discrete-event implementation advances a virtual timeline
-/// instead (see ROADMAP "deterministic virtual time").
+/// A source of time and sleep. [`WallClock`] is the process clock;
+/// [`crate::util::vclock::VirtualClock`] advances a discrete-event
+/// virtual timeline instead.
+///
+/// The participation methods (`register_thread`, `idle_enter`, …)
+/// default to no-ops so wall-clock behaviour is unchanged; a virtual
+/// clock uses them to learn when every participating thread is parked
+/// and advancing time is safe. Use [`Participant`] / [`IdleGuard`]
+/// rather than calling the raw methods — the guards keep enter/exit
+/// balanced across early returns.
 pub trait Clock: Send + Sync {
     /// Current monotonic instant.
     fn now(&self) -> Instant;
     /// Wall time as nanoseconds since the Unix epoch (used by the
     /// `gpu.clock` simulator intrinsic; 0 is never returned).
     fn unix_nanos(&self) -> u64;
-    /// Block the calling thread for `d` (virtual clocks advance the
-    /// timeline instead of blocking).
+    /// Block the calling thread for `d` (virtual clocks park the caller
+    /// on the virtual timeline instead).
     fn sleep(&self, d: Duration);
+    /// Like [`Clock::sleep`], but *low-priority*: a periodic tick (the
+    /// pool's health-monitor cadence) that should never drive time
+    /// forward on its own. A virtual clock only advances past a tick
+    /// sleeper when some normal sleeper also wants the time; on the
+    /// wall clock this is a plain sleep.
+    fn sleep_tick(&self, d: Duration) {
+        self.sleep(d);
+    }
+    /// Declare the calling thread a timeline participant: a virtual
+    /// clock will not advance while this thread is runnable. No-op on
+    /// the wall clock. Prefer [`Participant`].
+    fn register_thread(&self) {}
+    /// Undo [`Clock::register_thread`] for the calling thread.
+    fn deregister_thread(&self) {}
+    /// Mark a registered thread as parked outside the clock (e.g. a
+    /// condvar wait or channel recv): it should not hold time back
+    /// while blocked. No-op for unregistered threads and on the wall
+    /// clock. Prefer [`IdleGuard`].
+    fn idle_enter(&self) {}
+    /// Undo [`Clock::idle_enter`].
+    fn idle_exit(&self) {}
+    /// Cancel every pending virtual sleep and make all future sleeps on
+    /// this clock return immediately (terminal; used at pool shutdown
+    /// so parked workers and the monitor tick drain promptly). No-op on
+    /// the wall clock, whose sleeps are bounded by construction.
+    fn wake_sleepers(&self) {}
+}
+
+/// RAII registration of the current thread as a timeline participant
+/// (see [`Clock::register_thread`]). Held by pool worker and monitor
+/// threads for their whole loop, and by test drivers that submit
+/// against a virtual clock.
+pub struct Participant<'a> {
+    clock: &'a dyn Clock,
+}
+
+impl<'a> Participant<'a> {
+    /// Register the current thread until the guard drops.
+    pub fn new(clock: &'a dyn Clock) -> Self {
+        clock.register_thread();
+        Participant { clock }
+    }
+}
+
+impl Drop for Participant<'_> {
+    fn drop(&mut self) {
+        self.clock.deregister_thread();
+    }
+}
+
+/// RAII idle window (see [`Clock::idle_enter`]): wrap any blocking wait
+/// that is *not* a clock sleep — condvar waits, channel recvs — so a
+/// registered thread does not hold virtual time back while parked.
+pub struct IdleGuard<'a> {
+    clock: &'a dyn Clock,
+}
+
+impl<'a> IdleGuard<'a> {
+    /// Mark the current thread idle until the guard drops.
+    pub fn new(clock: &'a dyn Clock) -> Self {
+        clock.idle_enter();
+        IdleGuard { clock }
+    }
+}
+
+impl Drop for IdleGuard<'_> {
+    fn drop(&mut self) {
+        self.clock.idle_exit();
+    }
+}
+
+/// A shareable clock handle with the trait impls `PoolConfig` needs.
+///
+/// The clock is *environment*, not *policy*: two configs that differ
+/// only in their clock describe the same pool, so `PartialEq` always
+/// returns `true` and `Debug` prints an opaque tag. `Default` is the
+/// wall clock.
+#[derive(Clone)]
+pub struct ClockHandle(pub Arc<dyn Clock>);
+
+impl ClockHandle {
+    /// Wrap a clock for injection via `PoolConfig::with_clock`.
+    pub fn new(clock: Arc<dyn Clock>) -> Self {
+        ClockHandle(clock)
+    }
+}
+
+impl Default for ClockHandle {
+    fn default() -> Self {
+        ClockHandle(Arc::new(WallClock))
+    }
+}
+
+impl fmt::Debug for ClockHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("ClockHandle(..)")
+    }
+}
+
+impl PartialEq for ClockHandle {
+    fn eq(&self, _other: &ClockHandle) -> bool {
+        true
+    }
 }
 
 /// The real process clock.
@@ -113,5 +229,28 @@ mod tests {
         c.sleep(Duration::ZERO);
         assert!(c.now() >= t0);
         assert!(c.unix_nanos() > 0);
+    }
+
+    #[test]
+    fn participation_defaults_are_noops_on_wallclock() {
+        let c: &dyn Clock = &WallClock;
+        let _p = Participant::new(c);
+        {
+            let _idle = IdleGuard::new(c);
+            c.sleep_tick(Duration::ZERO);
+        }
+        c.wake_sleepers();
+        let t0 = c.now();
+        assert!(c.now() >= t0, "wall clock still ticks under guards");
+    }
+
+    #[test]
+    fn clock_handle_is_environment_not_policy() {
+        let a = ClockHandle::default();
+        let b = ClockHandle::new(Arc::new(WallClock));
+        assert_eq!(a, b, "handles compare equal regardless of clock");
+        assert_eq!(format!("{a:?}"), "ClockHandle(..)");
+        let c = a.clone();
+        assert!(c.0.unix_nanos() > 0);
     }
 }

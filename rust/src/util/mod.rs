@@ -1,14 +1,16 @@
-//! Shared utilities: the crate error type, the wall-clock facade, a
-//! deterministic PRNG, summary statistics, and a minimal
-//! property-testing harness (the offline build has no `proptest`;
-//! `prop.rs` provides the subset we need).
+//! Shared utilities: the crate error type, the wall-clock facade and
+//! its discrete-event sibling, a deterministic PRNG, summary
+//! statistics, and a minimal property-testing harness (the offline
+//! build has no `proptest`; `prop.rs` provides the subset we need).
 
 pub mod clock;
 pub mod error;
 pub mod prng;
 pub mod prop;
 pub mod stats;
+pub mod vclock;
 
 pub use error::Error;
 pub use prng::SplitMix64;
 pub use stats::Summary;
+pub use vclock::VirtualClock;

@@ -106,9 +106,16 @@ impl Summary {
 
 /// Time a closure, returning (result, elapsed).
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
-    let t0 = clock::now();
+    timed_with(&clock::WallClock, f)
+}
+
+/// Time a closure against an injected clock (the pool passes its
+/// configured clock so profiler rows stay on the virtual timeline
+/// under `VirtualClock`), returning (result, elapsed).
+pub fn timed_with<T>(clock: &dyn clock::Clock, f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = clock.now();
     let r = f();
-    (r, t0.elapsed())
+    (r, clock.now().saturating_duration_since(t0))
 }
 
 /// Nearest-rank percentile of a sample set: `q` in `[0, 1]` (0.5 =
@@ -193,6 +200,17 @@ mod tests {
         assert!((percentile(&v, 0.95) - 95.0).abs() <= 1.0);
         // Garbage samples are ignored, not propagated.
         assert!(percentile(&[1.0, f64::NAN, 3.0], 1.0).is_finite());
+    }
+
+    #[test]
+    fn timed_with_measures_on_the_injected_clock() {
+        let vc = crate::util::vclock::VirtualClock::new();
+        let (v, d) = timed_with(&vc, || {
+            vc.sleep(Duration::from_millis(7));
+            42
+        });
+        assert_eq!(v, 42);
+        assert_eq!(d, Duration::from_millis(7));
     }
 
     #[test]

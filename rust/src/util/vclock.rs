@@ -1,0 +1,398 @@
+//! [`VirtualClock`]: a discrete-event implementation of
+//! [`crate::util::clock::Clock`].
+//!
+//! Time is an offset from a base instant captured at construction (via
+//! the wall facade — this file never reads the process clock directly).
+//! `sleep` does not block for real time: it parks the caller on the
+//! virtual timeline, and the clock **advances by jumping** straight to
+//! the earliest pending wake-up once every registered thread is parked.
+//! A simulated hour of fault traffic therefore costs exactly as much
+//! wall time as the work scheduled inside it.
+//!
+//! # Advance rule
+//!
+//! The clock keeps two counters — `registered` (threads that declared
+//! themselves timeline participants) and `blocked` (registered threads
+//! currently parked in a virtual sleep or inside an [`IdleGuard`]) —
+//! plus two sleeper lists: *normal* sleepers ([`Clock::sleep`]) and
+//! low-priority *tick* sleepers ([`Clock::sleep_tick`], the pool's
+//! health-monitor cadence). Time advances only when **all** of:
+//!
+//! 1. every registered thread is blocked (`blocked == registered`,
+//!    `registered > 0`) — someone runnable might still schedule an
+//!    earlier event, so jumping would be premature;
+//! 2. no sleeper is already due (`wake_at <= now`) — due threads are
+//!    logically runnable and must drain before time moves again,
+//!    otherwise a woken sleeper could find the timeline jumped past
+//!    the event it was about to schedule;
+//! 3. at least one **normal** sleeper exists — tick sleepers never
+//!    drive time forward on their own, so an otherwise-idle pool does
+//!    not free-run its monitor through simulated eternity.
+//!
+//! When it advances, the clock jumps to the earliest wake-up across
+//! *both* lists (ticks included): during a 600 ms virtual stall the
+//! watchdog still observes every 50 ms tick in between, preserving
+//! wall-clock interleaving semantics.
+//!
+//! # Determinism contract
+//!
+//! What is deterministic is the *capture level*, not the OS schedule:
+//! while any registered thread is runnable, `now()` is frozen, so every
+//! event stamped by a running driver (e.g. the `Submit` records behind
+//! the `# omprt-capture v1` export) gets an identical timestamp on
+//! every run regardless of how worker threads race for the queue.
+//! Which worker serviced which request may differ between runs; *when*
+//! each request was submitted, its id order, and the pool's outcome
+//! ledger do not. See ARCHITECTURE.md "Virtual time".
+
+use super::clock::{self, Clock};
+use std::cell::Cell;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+thread_local! {
+    /// Whether the current thread registered with *some* virtual clock.
+    /// A plain flag (not a clock identity) suffices: the pool never
+    /// crosses two virtual clocks on one thread, and the flag only
+    /// gates participation bookkeeping.
+    static REGISTERED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// One parked sleeper on the virtual timeline.
+struct Sleeper {
+    /// Virtual offset at which this sleeper becomes due.
+    wake_at: Duration,
+    /// Identity of the entry, so the owning thread can remove exactly
+    /// its own record on wake-up.
+    id: u64,
+}
+
+/// Mutable clock state, behind the single `state` mutex (leaf rank in
+/// `lint/rules/locks.order`: clock methods never take pool locks).
+struct VState {
+    /// Virtual offset since `base`.
+    now: Duration,
+    /// Threads participating in the timeline.
+    registered: usize,
+    /// Registered threads currently parked (virtual sleep or idle).
+    blocked: usize,
+    /// Normal sleepers — these pace the advance.
+    sleepers: Vec<Sleeper>,
+    /// Low-priority tick sleepers — woken in passing, never the reason
+    /// to advance.
+    ticks: Vec<Sleeper>,
+    /// Next sleeper id.
+    seq: u64,
+    /// Terminal drain flag (see [`Clock::wake_sleepers`]).
+    drained: bool,
+}
+
+/// Discrete-event virtual clock. See the module docs for the advance
+/// rule and determinism contract.
+pub struct VirtualClock {
+    /// Monotonic anchor; `now()` returns `base + offset`.
+    base: Instant,
+    /// Unix-epoch anchor for [`Clock::unix_nanos`].
+    base_nanos: u64,
+    state: Mutex<VState>,
+    cv: Condvar,
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl VirtualClock {
+    /// A virtual clock anchored at the current wall time. All further
+    /// progress is purely virtual.
+    pub fn new() -> Self {
+        VirtualClock {
+            base: clock::now(),
+            base_nanos: clock::unix_nanos(),
+            state: Mutex::new(VState {
+                now: Duration::ZERO,
+                registered: 0,
+                blocked: 0,
+                sleepers: Vec::new(),
+                ticks: Vec::new(),
+                seq: 0,
+                drained: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Virtual time elapsed since construction.
+    pub fn elapsed(&self) -> Duration {
+        self.state.lock().unwrap().now
+    }
+
+    /// Jump `now` to the earliest pending wake-up if the advance rule
+    /// allows it (module docs), waking every thread whose deadline is
+    /// reached.
+    fn try_advance(&self, s: &mut VState) {
+        if s.drained || s.registered == 0 || s.blocked < s.registered {
+            return;
+        }
+        // A due sleeper is logically runnable; let it drain first.
+        if s.sleepers.iter().chain(s.ticks.iter()).any(|e| e.wake_at <= s.now) {
+            self.cv.notify_all();
+            return;
+        }
+        // Only a normal sleeper justifies moving time at all…
+        let Some(target) = s.sleepers.iter().map(|e| e.wake_at).min() else {
+            return;
+        };
+        // …but the jump lands on the earliest wake-up of *any* class,
+        // so monitor ticks interleave with long stalls exactly as they
+        // would on the wall clock.
+        let t = match s.ticks.iter().map(|e| e.wake_at).min() {
+            Some(tick) => target.min(tick),
+            None => target,
+        };
+        s.now = t;
+        self.cv.notify_all();
+    }
+
+    /// Shared body of `sleep` / `sleep_tick`.
+    fn park(&self, d: Duration, tick: bool) {
+        if d.is_zero() {
+            return;
+        }
+        let mut s = self.state.lock().unwrap();
+        if s.drained {
+            return;
+        }
+        // An unregistered caller participates transiently: while it is
+        // parked it must not be invisible (time could never advance if
+        // it were the only sleeper), and while it is due it must hold
+        // time back like any other runnable thread.
+        let transient = !REGISTERED.with(|r| r.get());
+        if transient {
+            s.registered += 1;
+        }
+        s.blocked += 1;
+        let id = s.seq;
+        s.seq += 1;
+        let wake_at = s.now.saturating_add(d);
+        if tick {
+            s.ticks.push(Sleeper { wake_at, id });
+        } else {
+            s.sleepers.push(Sleeper { wake_at, id });
+        }
+        self.try_advance(&mut s);
+        while s.now < wake_at && !s.drained {
+            s = self.cv.wait(s).unwrap();
+        }
+        let list = if tick { &mut s.ticks } else { &mut s.sleepers };
+        if let Some(i) = list.iter().position(|e| e.id == id) {
+            list.remove(i);
+        }
+        s.blocked -= 1;
+        if transient {
+            s.registered -= 1;
+            // Our departure may complete a quorum for the remaining
+            // participants.
+            self.try_advance(&mut s);
+        }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Instant {
+        self.base + self.state.lock().unwrap().now
+    }
+
+    fn unix_nanos(&self) -> u64 {
+        let off = self.state.lock().unwrap().now;
+        self.base_nanos
+            .saturating_add(off.as_nanos().min(u64::MAX as u128) as u64)
+            .max(1)
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.park(d, false);
+    }
+
+    fn sleep_tick(&self, d: Duration) {
+        self.park(d, true);
+    }
+
+    fn register_thread(&self) {
+        let fresh = REGISTERED.with(|r| !r.replace(true));
+        if fresh {
+            self.state.lock().unwrap().registered += 1;
+        }
+    }
+
+    fn deregister_thread(&self) {
+        let was = REGISTERED.with(|r| r.replace(false));
+        if was {
+            let mut s = self.state.lock().unwrap();
+            s.registered = s.registered.saturating_sub(1);
+            self.try_advance(&mut s);
+        }
+    }
+
+    fn idle_enter(&self) {
+        if !REGISTERED.with(|r| r.get()) {
+            return;
+        }
+        let mut s = self.state.lock().unwrap();
+        s.blocked += 1;
+        self.try_advance(&mut s);
+    }
+
+    fn idle_exit(&self) {
+        if !REGISTERED.with(|r| r.get()) {
+            return;
+        }
+        let mut s = self.state.lock().unwrap();
+        s.blocked = s.blocked.saturating_sub(1);
+    }
+
+    fn wake_sleepers(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.drained = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::Participant;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn unregistered_sleep_advances_time_without_blocking() {
+        let vc = VirtualClock::new();
+        let t0 = vc.now();
+        vc.sleep(Duration::from_secs(3600));
+        assert_eq!(vc.now().duration_since(t0), Duration::from_secs(3600));
+        assert_eq!(vc.elapsed(), Duration::from_secs(3600));
+    }
+
+    #[test]
+    fn zero_sleep_does_not_move_time() {
+        let vc = VirtualClock::new();
+        vc.sleep(Duration::ZERO);
+        assert_eq!(vc.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn unix_nanos_tracks_virtual_offset() {
+        let vc = VirtualClock::new();
+        let a = vc.unix_nanos();
+        assert!(a > 0);
+        vc.sleep(Duration::from_millis(250));
+        assert_eq!(vc.unix_nanos() - a, 250_000_000);
+    }
+
+    #[test]
+    fn time_is_frozen_while_a_registered_thread_runs() {
+        let vc = Arc::new(VirtualClock::new());
+        let _me = Participant::new(&*vc);
+        let peer = {
+            let vc = Arc::clone(&vc);
+            std::thread::spawn(move || vc.sleep(Duration::from_secs(5)))
+        };
+        // The peer's sleep cannot advance time while this registered
+        // thread is runnable; give it real time to park, then verify.
+        clock::sleep(Duration::from_millis(20));
+        assert_eq!(vc.elapsed(), Duration::ZERO);
+        assert!(!peer.is_finished(), "sleep must stay parked while we run");
+        // Parking this thread (an idle window) releases the timeline.
+        {
+            let _idle = crate::util::clock::IdleGuard::new(&*vc);
+            peer.join().unwrap();
+        }
+        assert_eq!(vc.elapsed(), Duration::from_secs(5));
+    }
+
+    #[test]
+    fn sequential_sleeps_land_on_each_deadline() {
+        let vc = VirtualClock::new();
+        vc.sleep(Duration::from_millis(10));
+        assert_eq!(vc.elapsed(), Duration::from_millis(10));
+        vc.sleep(Duration::from_millis(15));
+        assert_eq!(vc.elapsed(), Duration::from_millis(25));
+    }
+
+    #[test]
+    fn tick_sleepers_alone_do_not_advance() {
+        let vc = Arc::new(VirtualClock::new());
+        let ticker = {
+            let vc = Arc::clone(&vc);
+            std::thread::spawn(move || vc.sleep_tick(Duration::from_millis(10)))
+        };
+        // Let the tick park; with no normal sleeper it must stay parked
+        // and virtual time must not move.
+        clock::sleep(Duration::from_millis(20));
+        assert_eq!(vc.elapsed(), Duration::ZERO);
+        assert!(!ticker.is_finished(), "tick sleeper must not self-advance");
+        // A normal sleeper paces the advance; the jump lands on the
+        // *tick's* earlier deadline first, waking it in passing.
+        vc.sleep(Duration::from_millis(40));
+        ticker.join().unwrap();
+        assert_eq!(vc.elapsed(), Duration::from_millis(40));
+    }
+
+    #[test]
+    fn concurrent_sleepers_wake_at_or_after_their_deadline() {
+        let vc = Arc::new(VirtualClock::new());
+        let woke = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for ms in [30u64, 10, 20] {
+            let vc = Arc::clone(&vc);
+            let woke = Arc::clone(&woke);
+            joins.push(std::thread::spawn(move || {
+                vc.sleep(Duration::from_millis(ms));
+                woke.fetch_add(1, Ordering::SeqCst);
+                // Observed on wake, possibly after a later jump — but
+                // never before this sleeper's own deadline, and never
+                // past the latest one.
+                vc.elapsed()
+            }));
+        }
+        for (j, ms) in joins.into_iter().zip([30u64, 10, 20]) {
+            let at = j.join().unwrap();
+            assert!(at >= Duration::from_millis(ms), "woke early at {at:?}");
+            assert!(at <= Duration::from_millis(30), "overshot to {at:?}");
+        }
+        assert_eq!(woke.load(Ordering::SeqCst), 3);
+        assert_eq!(vc.elapsed(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn wake_sleepers_drains_current_and_future_sleeps() {
+        let vc = Arc::new(VirtualClock::new());
+        let _me = Participant::new(&*vc);
+        let parked = {
+            let vc = Arc::clone(&vc);
+            std::thread::spawn(move || vc.sleep(Duration::from_secs(3600)))
+        };
+        // The registered main thread keeps time frozen, so the parked
+        // sleeper can only exit via the drain.
+        clock::sleep(Duration::from_millis(5));
+        vc.wake_sleepers();
+        parked.join().unwrap();
+        assert_eq!(vc.elapsed(), Duration::ZERO, "drain wakes without advancing");
+        vc.sleep(Duration::from_secs(1));
+        assert_eq!(vc.elapsed(), Duration::ZERO, "drained clock sleeps are no-ops");
+    }
+
+    #[test]
+    fn register_is_idempotent_per_thread() {
+        let vc = VirtualClock::new();
+        vc.register_thread();
+        vc.register_thread();
+        assert_eq!(vc.state.lock().unwrap().registered, 1);
+        vc.deregister_thread();
+        vc.deregister_thread();
+        assert_eq!(vc.state.lock().unwrap().registered, 0);
+    }
+}

@@ -4,35 +4,41 @@
 //! re-planning, bounded retry, probe re-admission — `sched::health` +
 //! `sched::pool`).
 //!
-//! The soak is the headline: 1,000 launches over the mixed 4-device
-//! pool with a stalling device, a transiently failing device and a
-//! dying device, all scripted by launch index so every run provokes the
-//! same incidents. The invariants:
+//! Since the `util::vclock` PR the battery runs on **virtual time**: the
+//! `virtual_*` tests inject a discrete-event [`VirtualClock`] via
+//! `PoolConfig::with_clock`, so every multi-second scripted stall, hedge
+//! window and probe cadence costs zero wall time — CI runs them as the
+//! named "Pool virtual-time chaos" step (`cargo test --test pool_chaos
+//! virtual`). One wall-clock smoke per lifecycle stays behind
+//! (`wall_*`, plus the dead-device and retry-cap tests) so the default
+//! clock path keeps end-to-end coverage.
+//!
+//! The virtual soak is the headline: 100,000 launches across a
+//! simulated hour of mixed fault/SLO/hedge traffic, finishing in
+//! seconds of wall time, with the exactly-once ledger invariants
+//! asserted at the end:
 //!
 //! * every accepted request **completes or fails deterministically** —
-//!   per-client `completed + failed` equals what the client submitted;
+//!   `completed + failed` equals what the clients submitted;
 //! * reservation counters all drain to 0 (re-planning rebalances, never
 //!   leaks);
-//! * the dead device ends the run Quarantined and visibly so in the
-//!   `PoolCoordinator` report;
+//! * the hedge ledger balances (`hedges == hedge_wins + hedge_wasted`);
 //! * no deadline is judged twice (per-client slack sample count equals
 //!   the deadline count).
 //!
-//! The trace battery re-runs the soak with event tracing on and judges
-//! *span completeness*: every accepted request must show exactly one
-//! `Submit` and exactly one terminal `Done` on the drained timeline —
-//! through retries, re-plans, stranded sweeps and stitchers — with
-//! retry attempts 1-based and increasing, and zero ring drops. A
-//! fault-free shard test pins down the parent-id convention and checks
-//! the Chrome/capture exports structurally.
+//! The determinism test is the other new capability: two identical
+//! seeded chaos runs on fresh virtual clocks must produce byte-identical
+//! `# omprt-capture v1` exports (same request ids, same `t_us`, same
+//! shard fan-outs) and identical outcome counters — the capture-level
+//! determinism contract documented in ARCHITECTURE.md "Virtual time".
 //!
-//! The hedge battery (`*hedge*` — CI runs these by name) re-runs the
-//! soak shape with speculative re-execution on: a deterministic
-//! stall-rescue test proving the duplicate's reply bounds the tail, and
-//! a mixed-fault soak proving the exactly-once ledger — one `Done` and
-//! one deadline judgment per accepted request, `hedges == hedge_wins +
-//! hedge_wasted`, reservations drained — however copies race faults,
-//! retries and shards.
+//! The trace battery re-runs the soak shape with event tracing on and
+//! judges *span completeness*: every accepted request must show exactly
+//! one `Submit` and exactly one terminal `Done` on the drained timeline
+//! — through retries, re-plans, stranded sweeps and stitchers — with
+//! retry attempts 1-based and increasing, and zero ring drops. The
+//! hedge battery (`*hedge*` — CI runs these by name) proves the
+//! exactly-once ledger with speculative re-execution on.
 
 use omprt::coordinator::PoolCoordinator;
 use omprt::devrt::RuntimeKind;
@@ -41,33 +47,44 @@ use omprt::sched::workload::{saxpy_request, scale_request, sharded_scale_request
 use omprt::sched::{bytes_to_f32, Affinity, HealthState, OffloadHandle, PoolConfig};
 use omprt::sim::Arch;
 use omprt::trace::{validate_chrome_trace, EventKind};
-use omprt::util::clock;
+use omprt::util::clock::{self, Clock, Participant, WallClock};
+use omprt::util::VirtualClock;
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 use std::time::Duration;
 
-/// Poll `metrics()` until `pred` holds or `timeout` passes; returns
-/// whether it held.
+/// Poll `metrics()` until `pred` holds or `timeout` passes *on the
+/// given clock*; returns whether it held. On a [`VirtualClock`] the
+/// 5 ms poll sleeps are what pace virtual time while the driver waits,
+/// so the predicate is re-checked every time the timeline moves.
 fn wait_for(
+    clock: &dyn Clock,
     pc: &PoolCoordinator,
     timeout: Duration,
     pred: impl Fn(&omprt::sched::PoolMetrics) -> bool,
 ) -> bool {
-    let t0 = clock::now();
+    let t0 = clock.now();
     loop {
         if pred(&pc.metrics()) {
             return true;
         }
-        if t0.elapsed() > timeout {
+        if clock.now().saturating_duration_since(t0) > timeout {
             return false;
         }
-        clock::sleep(Duration::from_millis(5));
+        clock.sleep(Duration::from_millis(5));
     }
 }
 
 #[test]
-fn thousand_launch_chaos_soak() {
+fn virtual_thousand_launch_chaos_soak() {
     const TOTAL: usize = 1000;
     const ELEMS: usize = 192;
+    // The driver registers with the virtual clock: while it is runnable
+    // time is frozen, and its blocking waits (backpressure, handle
+    // replies) are the idle windows that let the timeline advance
+    // through the scripted 600 ms stalls at zero wall cost.
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
     // Mixed pool: dev0 portable:nvptx64, dev1 portable:amdgcn,
     // dev2 legacy:nvptx64 (never faulted — the always-healthy fallback),
     // dev3 legacy:amdgcn.
@@ -77,6 +94,7 @@ fn thousand_launch_chaos_soak() {
         .with_watchdog_min_ms(100)
         .with_retry_max(2)
         .with_client_slo("slo", 250.0)
+        .with_clock(vc.clone())
         .with_fault_spec("0=fail:25@launch:40")
         .unwrap()
         .with_fault_spec("1=stall:600ms:1500ms@launch:30")
@@ -227,11 +245,15 @@ fn thousand_launch_chaos_soak() {
 }
 
 #[test]
-fn trace_spans_complete_after_chaos_soak() {
+fn virtual_trace_spans_complete_after_chaos_soak() {
     const TOTAL: usize = 1000;
     const ELEMS: usize = 192;
     // The headline soak's fault script, with tracing on and rings sized
-    // so nothing can be dropped (asserted below).
+    // so nothing can be dropped (asserted below). Virtual time: the
+    // trace timestamps come from the injected clock too, so the drained
+    // timeline is stamped in virtual nanoseconds.
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
     let cfg = PoolConfig::mixed4()
         .with_queue_cap(64)
         .with_batch_max(4)
@@ -240,6 +262,7 @@ fn trace_spans_complete_after_chaos_soak() {
         .with_client_slo("slo", 250.0)
         .with_trace(true)
         .with_trace_capacity(1 << 15)
+        .with_clock(vc.clone())
         .with_fault_spec("0=fail:25@launch:40")
         .unwrap()
         .with_fault_spec("1=stall:600ms:1500ms@launch:30")
@@ -345,8 +368,8 @@ fn trace_spans_complete_after_chaos_soak() {
 
 #[test]
 fn trace_shard_and_capture_exports() {
-    // Fault-free uniform pool: sharding spans all four devices and the
-    // exports can be checked deterministically.
+    // Fault-free uniform pool on the default wall clock: sharding spans
+    // all four devices and the exports can be checked deterministically.
     let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
         .with_shard_min_trips(2048)
         .with_client_slo("slo", 250.0)
@@ -431,14 +454,213 @@ fn trace_shard_and_capture_exports() {
     );
 }
 
+/// The capture-level determinism contract, end to end: two chaos runs
+/// with identical configs and fresh virtual clocks must export
+/// byte-identical `# omprt-capture v1` documents and identical outcome
+/// counters. While the registered driver is runnable virtual time is
+/// frozen, so every `Submit` is stamped `t_us=0` in driver order with
+/// sequential request ids; the shard fan-out is pinned to 2 by sizing
+/// the sharded payload at exactly `2 x shard_min_trips` elements (the
+/// element bound dominates the idle-device sample, which is the only
+/// schedule-dependent input). Hedge/retry racing may place work
+/// differently between runs — the capture and the completed/failed
+/// ledger must not notice.
+fn deterministic_chaos_run() -> (String, u64, u64, u64) {
+    const TOTAL: usize = 300;
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
+    let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
+        .with_queue_cap(0)
+        .with_batch_max(4)
+        .with_watchdog_min_ms(100)
+        .with_retry_max(2)
+        .with_client_slo("slo", 250.0)
+        .with_hedge(true)
+        .with_hedge_after_factor(3)
+        .with_hedge_max(2)
+        .with_trace(true)
+        .with_trace_capacity(1 << 14)
+        .with_clock(vc.clone())
+        .with_fault_spec("0=fail:10@launch:5")
+        .unwrap()
+        // 50 ms stalls stay below the 200 ms quarantine threshold: the
+        // stalled device remains eligible, so the shard planner's
+        // eligible set — and with it the fan-out — never changes.
+        .with_fault_spec("1=stall:50ms:400ms@launch:10")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let clients = ["alpha", "bulk", "slo"];
+    let mut handles = vec![];
+    for i in 0..TOTAL {
+        let (mut req, _want) = if i % 40 == 7 {
+            // Exactly 2 x shard_min_trips (4096) elements: max_by_elems
+            // == 2 pins the fan-out whatever the idle sample says.
+            let data: Vec<f32> = (0..8192).map(|k| ((k + i) % 83) as f32).collect();
+            sharded_scale_request(&data, Affinity::any(), OptLevel::O2)
+        } else {
+            let data: Vec<f32> = (0..96).map(|k| ((k + i) % 89) as f32).collect();
+            scale_request(&data, Affinity::any(), OptLevel::O2)
+        };
+        req.client = clients[i % clients.len()].to_string();
+        handles.push(pc.submit(req).expect("an unbounded queue accepts everything"));
+    }
+    for h in handles {
+        h.wait().expect("a uniform pool with retries loses nothing to these faults");
+    }
+    pc.pool.quiesce();
+    let m = pc.metrics();
+    (pc.trace_capture(), m.submitted, m.completed, m.failed)
+}
+
 #[test]
-fn stalled_device_quarantines_shards_replan_and_probe_readmits() {
+fn virtual_identical_runs_produce_identical_captures() {
+    let (cap1, sub1, done1, fail1) = deterministic_chaos_run();
+    let (cap2, sub2, done2, fail2) = deterministic_chaos_run();
+
+    // Structure first, so a mismatch fails with a readable cause.
+    let lines: Vec<&str> = cap1.lines().filter(|l| !l.starts_with('#')).collect();
+    assert_eq!(lines.len(), 300, "one capture line per accepted request");
+    for l in &lines {
+        assert!(
+            l.contains("t_us=0.000 "),
+            "submission happens under frozen virtual time: {l}"
+        );
+    }
+    assert!(
+        lines.iter().any(|l| l.contains("shards=2")),
+        "the sharded parents must record the pinned fan-out:\n{cap1}"
+    );
+
+    assert_eq!(cap1, cap2, "two identical virtual-time runs must capture identically");
+    assert_eq!((sub1, done1, fail1), (sub2, done2, fail2), "outcome counters must agree");
+    assert_eq!(sub1, 300);
+    assert_eq!(fail1, 0, "fail faults are always rescued by retry on a uniform pool");
+}
+
+/// The long-horizon soak the virtual clock unlocks: 100,000 launches of
+/// mixed fault/SLO/hedge traffic spread across a simulated hour — 100
+/// bursts of 1,000 requests with a 37 s virtual gap between bursts — in
+/// seconds of wall time. The scripted stalls, hedge windows, watchdog
+/// cadence and inter-burst idle gaps all elapse on the virtual
+/// timeline; the only wall time spent is the actual kernel execution.
+#[test]
+fn virtual_hour_soak_hundred_thousand_launches() {
+    const BURSTS: usize = 100;
+    const PER_BURST: usize = 1000;
+    // Tiny payloads: the wall cost of this test is pure launch overhead
+    // x 100k, so keep per-launch data movement minimal.
+    const ELEMS: usize = 32;
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
+    let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
+        .with_queue_cap(256)
+        .with_batch_max(8)
+        // A conservative watchdog floor keeps the monitor tick at its
+        // 50 ms clamp: the hour-long timeline is then ~72k monitor
+        // wakeups, not millions.
+        .with_watchdog_min_ms(400)
+        .with_retry_max(2)
+        .with_client_slo("slo", 250.0)
+        .with_hedge(true)
+        .with_hedge_after_factor(3)
+        .with_hedge_max(3)
+        .with_clock(vc.clone())
+        .with_fault_spec("0=fail:50@launch:200")
+        .unwrap()
+        .with_fault_spec("1=stall:300ms:2s@launch:500")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let clients = ["c0", "c1", "slo"];
+    let mut accepted = 0u64;
+    let mut ok = 0u64;
+    let mut err = 0u64;
+    let x: Vec<f32> = (0..ELEMS).map(|k| k as f32).collect();
+    for burst in 0..BURSTS {
+        let mut handles = Vec::with_capacity(PER_BURST);
+        for i in 0..PER_BURST {
+            let (mut req, _want) = if (burst + i) % 2 == 0 {
+                let data: Vec<f32> = (0..ELEMS).map(|k| ((k + i) % 83) as f32).collect();
+                scale_request(&data, Affinity::any(), OptLevel::O2)
+            } else {
+                let y: Vec<f32> = (0..ELEMS).map(|k| ((k * 3 + burst) % 59) as f32).collect();
+                saxpy_request(0.5, &x, &y, Affinity::any(), OptLevel::O2)
+            };
+            req.client = clients[i % clients.len()].to_string();
+            // Backpressure (cap 256) parks the driver in an idle window;
+            // virtual time advances through any concurrent stall.
+            handles.push(pc.submit(req).expect("uniform pool accepts Affinity::any"));
+            accepted += 1;
+        }
+        for h in handles {
+            match h.wait() {
+                Ok(_) => ok += 1,
+                Err(_) => err += 1,
+            }
+        }
+        // The idle gap between bursts: pure virtual time. 100 of these
+        // alone push the timeline past the one-hour mark.
+        vc.sleep(Duration::from_secs(37));
+    }
+    pc.pool.quiesce();
+    // A losing speculative copy may still be draining when quiesce
+    // returns (quiesce waits for *requests*, not copies).
+    assert!(wait_hedges_resolved(&*vc, &pc), "hedge ledger never resolved");
+
+    let m = pc.metrics();
+    assert_eq!(accepted, (BURSTS * PER_BURST) as u64);
+    assert_eq!(m.submitted, accepted, "every request admitted exactly once");
+    // The exactly-once ledger, after 100k launches and a simulated hour:
+    // completed + failed == accepted, nothing double-resolved, nothing
+    // lost.
+    assert_eq!(
+        m.completed + m.failed,
+        accepted,
+        "ledger must balance: {} completed + {} failed != {accepted}",
+        m.completed,
+        m.failed
+    );
+    assert_eq!(m.completed, ok, "pool and client views of success agree");
+    assert_eq!(m.failed, err, "pool and client views of failure agree");
+    assert_eq!(m.queue_depth, 0, "a drained soak leaves nothing queued");
+    for d in &m.devices {
+        assert_eq!(d.reserved, 0, "device {} leaks a reservation", d.id);
+    }
+    assert_eq!(
+        m.hedges,
+        m.hedge_wins + m.hedge_wasted,
+        "every speculative duplicate is judged exactly once"
+    );
+    for c in &m.clients {
+        assert_eq!(
+            c.slack.count(),
+            c.deadlines,
+            "client {}: one deadline judgment per deadlined request",
+            c.client
+        );
+    }
+    assert!(
+        vc.elapsed() >= Duration::from_secs(3600),
+        "the soak must span a simulated hour, got {:?}",
+        vc.elapsed()
+    );
+}
+
+#[test]
+fn virtual_stalled_device_quarantines_shards_replan_and_probe_readmits() {
     // Uniform pool so sharding spans all four devices; device 2 wedges
-    // hard (600ms hangs for 1.5s) after a handful of launches.
+    // hard (600ms hangs for 1.5s) after a handful of launches. On the
+    // virtual clock the stall, the watchdog judgment and the probe
+    // cadence all elapse in virtual time — the 20 s predicates below
+    // are virtual seconds, paced by the driver's poll sleeps.
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
     let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
         .with_batch_max(4)
         .with_watchdog_min_ms(100)
         .with_shard_min_trips(2048)
+        .with_clock(vc.clone())
         .with_fault_spec("2=stall:600ms:1500ms@launch:6")
         .unwrap();
     let pc = PoolCoordinator::new(&cfg).unwrap();
@@ -455,7 +677,7 @@ fn stalled_device_quarantines_shards_replan_and_probe_readmits() {
     // The watchdog must catch the wedged device while the stall is
     // still in progress.
     assert!(
-        wait_for(&pc, Duration::from_secs(20), |m| {
+        wait_for(&*vc, &pc, Duration::from_secs(20), |m| {
             m.devices[2].health == HealthState::Quarantined
         }),
         "watchdog never quarantined the stalled device: {:?}",
@@ -480,7 +702,7 @@ fn stalled_device_quarantines_shards_replan_and_probe_readmits() {
 
     // Once the scripted window closes, the probe readmits the device.
     assert!(
-        wait_for(&pc, Duration::from_secs(20), |m| {
+        wait_for(&*vc, &pc, Duration::from_secs(20), |m| {
             m.devices[2].health == HealthState::Healthy
         }),
         "probe must readmit the device after its stall window"
@@ -494,6 +716,47 @@ fn stalled_device_quarantines_shards_replan_and_probe_readmits() {
         assert_eq!(d.reserved, 0, "device {} leaks a reservation", d.id);
     }
     assert_eq!(m.failed, 0, "a stall must delay work, never lose it");
+}
+
+/// Wall-clock smoke for the stall -> quarantine -> probe -> readmit
+/// lifecycle: the virtual battery carries the heavy variants, this keeps
+/// the default-clock path covered end to end with a sub-second script.
+#[test]
+fn wall_stall_smoke_quarantine_and_readmit() {
+    let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 2)
+        .with_batch_max(1)
+        .with_watchdog_min_ms(50)
+        .with_fault_spec("0=stall:250ms:600ms@launch:3")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let data: Vec<f32> = (0..128).map(|k| k as f32).collect();
+    let mut handles = vec![];
+    for _ in 0..16 {
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        handles.push((pc.submit(req).unwrap(), want));
+    }
+    assert!(
+        wait_for(&WallClock, &pc, Duration::from_secs(10), |m| {
+            m.devices[0].health == HealthState::Quarantined
+        }),
+        "watchdog must quarantine the wedged device on the wall clock too"
+    );
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    pc.pool.quiesce();
+    assert!(
+        wait_for(&WallClock, &pc, Duration::from_secs(10), |m| {
+            m.devices[0].health == HealthState::Healthy
+        }),
+        "probe must readmit once the wall-clock window closes"
+    );
+    let m = pc.metrics();
+    assert_eq!(m.failed, 0, "a stall must delay work, never lose it");
+    assert!(m.devices[0].quarantines >= 1);
+    assert!(m.readmissions >= 1);
 }
 
 #[test]
@@ -525,7 +788,7 @@ fn dead_device_work_retries_onto_healthy_devices() {
     // The dead device is quarantined by its fault streak and stays out
     // (its probes never pass).
     assert!(
-        wait_for(&pc, Duration::from_secs(20), |m| {
+        wait_for(&WallClock, &pc, Duration::from_secs(20), |m| {
             m.devices[0].health == HealthState::Quarantined
         }),
         "fault streak must quarantine the dead device"
@@ -544,20 +807,23 @@ fn dead_device_work_retries_onto_healthy_devices() {
 /// ledger has resolved (`hedges == hedge_wins + hedge_wasted`). Quiesce
 /// returns when every *request* has terminated, but a losing copy may
 /// still be executing — trace and counter assertions must wait it out.
-fn wait_hedges_resolved(pc: &PoolCoordinator) -> bool {
-    wait_for(pc, Duration::from_secs(30), |m| {
+fn wait_hedges_resolved(clock: &dyn Clock, pc: &PoolCoordinator) -> bool {
+    wait_for(clock, pc, Duration::from_secs(30), |m| {
         m.devices.iter().all(|d| d.inflight_age.is_none())
             && m.hedges == m.hedge_wins + m.hedge_wasted
     })
 }
 
 #[test]
-fn stalled_inflight_job_is_hedged_and_wins() {
+fn virtual_stalled_inflight_job_is_hedged_and_wins() {
     // Two uniform devices; dev0 wedges for 2.5s on its second launch.
     // The watchdog is off, so only hedging can rescue the stuck request:
     // the monitor sees its in-flight age pass max(3 x EWMA, min/4 =
     // 500ms), duplicates it onto idle dev1, and the duplicate's reply
-    // resolves the handle roughly 2s before the original unwedges.
+    // resolves the handle roughly 2s before the original unwedges — all
+    // of it in virtual time, so the test costs no wall-clock waiting.
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
     let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 2)
         .with_batch_max(1)
         .with_watchdog(false)
@@ -566,6 +832,7 @@ fn stalled_inflight_job_is_hedged_and_wins() {
         .with_hedge_after_factor(3)
         .with_hedge_max(2)
         .with_trace(true)
+        .with_clock(vc.clone())
         .with_fault_spec("0=stall:2500ms:10s@launch:1")
         .unwrap();
     let pc = PoolCoordinator::new(&cfg).unwrap();
@@ -576,19 +843,19 @@ fn stalled_inflight_job_is_hedged_and_wins() {
         let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
         handles.push((pc.submit(req).unwrap(), want));
     }
-    let t0 = clock::now();
+    let t0 = vc.now();
     for (h, want) in handles {
         let resp = h.wait().expect("every request resolves, hedged or not");
         assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
     }
-    // The duplicate, not the 2.5s stall, bounded the tail.
+    // The duplicate, not the 2.5s stall, bounded the (virtual) tail.
+    let waited = vc.now().saturating_duration_since(t0);
     assert!(
-        t0.elapsed() < Duration::from_millis(2300),
-        "replies must not wait out the stall: {:?}",
-        t0.elapsed()
+        waited < Duration::from_millis(2300),
+        "replies must not wait out the stall: {waited:?}"
     );
     pc.pool.quiesce();
-    assert!(wait_hedges_resolved(&pc), "hedge ledger never resolved");
+    assert!(wait_hedges_resolved(&*vc, &pc), "hedge ledger never resolved");
 
     let m = pc.metrics();
     assert!(m.hedge);
@@ -619,15 +886,57 @@ fn stalled_inflight_job_is_hedged_and_wins() {
     assert_eq!(snap.count(EventKind::HedgeWasted) as u64, m.hedge_wasted);
 }
 
+/// Wall-clock smoke for the hedge lifecycle: a sub-second stall rescued
+/// by a duplicate on the default clock. The heavy hedge soaks run on
+/// virtual time.
 #[test]
-fn hedged_chaos_soak_keeps_exactly_once_accounting() {
+fn wall_hedge_rescue_smoke() {
+    let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 2)
+        .with_batch_max(1)
+        .with_watchdog(false)
+        .with_watchdog_min_ms(400)
+        .with_hedge(true)
+        .with_hedge_after_factor(3)
+        .with_hedge_max(2)
+        .with_fault_spec("0=stall:800ms:5s@launch:1")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let data: Vec<f32> = (0..128).map(|k| k as f32).collect();
+    let mut handles = vec![];
+    for _ in 0..4 {
+        let (req, want) = scale_request(&data, Affinity::any(), OptLevel::O2);
+        handles.push((pc.submit(req).unwrap(), want));
+    }
+    let t0 = clock::now();
+    for (h, want) in handles {
+        let resp = h.wait().expect("every request resolves, hedged or not");
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(700),
+        "the duplicate must bound the tail below the 800ms stall: {:?}",
+        t0.elapsed()
+    );
+    pc.pool.quiesce();
+    assert!(wait_hedges_resolved(&WallClock, &pc), "hedge ledger never resolved");
+    let m = pc.metrics();
+    assert!(m.hedge_wins >= 1, "the duplicate beats the stall on the wall clock too");
+    assert_eq!(m.hedges, m.hedge_wins + m.hedge_wasted);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn virtual_hedged_chaos_soak_keeps_exactly_once_accounting() {
     const TOTAL: usize = 600;
     const ELEMS: usize = 192;
     // The headline soak's shape — shards, retries, SLO deadlines, a
     // stalling device, a degraded device and a dying device — with
-    // hedging on top. The point: however the copies race the faults,
-    // every accepted request terminates exactly once and the hedge
-    // ledger balances.
+    // hedging on top, all on virtual time. The point: however the
+    // copies race the faults, every accepted request terminates exactly
+    // once and the hedge ledger balances.
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
     let cfg = PoolConfig::mixed4()
         .with_queue_cap(64)
         .with_batch_max(4)
@@ -639,6 +948,7 @@ fn hedged_chaos_soak_keeps_exactly_once_accounting() {
         .with_hedge_max(3)
         .with_trace(true)
         .with_trace_capacity(1 << 15)
+        .with_clock(vc.clone())
         .with_fault_spec("0=slow:8x:2s@launch:40")
         .unwrap()
         .with_fault_spec("1=stall:600ms:1500ms@launch:30")
@@ -697,7 +1007,7 @@ fn hedged_chaos_soak_keeps_exactly_once_accounting() {
         }
     }
     pc.pool.quiesce();
-    assert!(wait_hedges_resolved(&pc), "hedge ledger never resolved");
+    assert!(wait_hedges_resolved(&*vc, &pc), "hedge ledger never resolved");
 
     let m = pc.metrics();
     assert!(m.hedges >= 1, "600ms stalls against a 25ms hedge floor must hedge");
