@@ -39,6 +39,13 @@
 //!    must beat the watchdog-only run. A clean-pool companion (hedge on
 //!    vs off, no faults, interleaved best-of-3) gates the idle overhead
 //!    of the in-flight registry to within noise.
+//! 10. **replayed** — the committed steady multi-tenant trace fixture
+//!    replayed twice on fresh virtual-clock pools: the recorded
+//!    inter-arrival gaps elapse on the virtual timeline (wall time pays
+//!    only execution), the two runs' re-captures must be byte-identical
+//!    (the reproducibility contract `omprt replay --virtual` rests on),
+//!    and the run reports replay throughput plus the deadline miss
+//!    count under the recorded SLO budgets.
 //!
 //! Results are also written as JSON to `BENCH_pool.json` (override the
 //! path with the `BENCH_POOL_JSON` env var) so CI can archive them.
@@ -49,10 +56,13 @@ use omprt::ir::passes::OptLevel;
 use omprt::sched::workload::{
     saxpy_request, scale_request, scale_request_by, sharded_scale_request,
 };
-use omprt::sched::{bytes_to_f32, Affinity, DevicePool, PoolConfig};
+use omprt::sched::{bytes_to_f32, replay_capture, Affinity, DevicePool, PoolConfig, ReplayOptions};
 use omprt::sim::Arch;
-use omprt::trace::Histogram;
+use omprt::trace::{parse_capture, Histogram};
 use omprt::util::clock;
+use omprt::util::clock::Participant;
+use omprt::util::VirtualClock;
+use std::sync::Arc;
 
 const ELEMS: usize = 256;
 
@@ -641,6 +651,59 @@ fn hedged_scenario(requests: usize, batch: usize) -> (f64, f64, u64, f64, f64) {
     (p99_watchdog, p99_hedged, wins, idle_off, idle_on)
 }
 
+/// Replayed-trace scenario: replay the committed steady multi-tenant
+/// fixture twice, each time on a fresh uniform 4-device pool driven by
+/// its own virtual clock. The recorded gaps elapse on the virtual
+/// timeline, so wall time pays only execution; every replayed result is
+/// verified against the host reference inside `replay_capture`; and the
+/// two runs' re-captures must be **byte-identical** — the
+/// reproducibility contract behind `omprt replay --virtual`. Returns
+/// `(requests, wall_rate, virtual_elapsed_us, deadline_misses)`.
+fn replayed_scenario() -> (usize, f64, f64, u64) {
+    const TRACE: &str = include_str!("../../traces/steady_multi_tenant.capture");
+    println!("\n--- replayed: traces/steady_multi_tenant.capture on a virtual-clock pool ---");
+    let cap = parse_capture(TRACE).expect("committed fixture must parse");
+    let run = || -> (String, f64, f64, u64) {
+        let vc = Arc::new(VirtualClock::new());
+        // The bench thread is the pacing driver: register it before the
+        // pool spawns so virtual time only advances while it sleeps.
+        let _driver = Participant::new(&*vc);
+        let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
+            .with_trace(true)
+            .with_trace_capacity(1 << 14)
+            .with_clock(vc.clone());
+        let pool = DevicePool::new(&cfg).unwrap();
+        let t0 = clock::now();
+        let report = replay_capture(&pool, &cap, &ReplayOptions::new()).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(report.submitted as usize, cap.records.len(), "{report:?}");
+        assert_eq!(report.rejected, 0, "{report:?}");
+        assert_eq!(report.failed, 0, "{report:?}");
+        assert_eq!(report.mismatched, 0, "replayed results must match the host reference");
+        pool.quiesce();
+        let recapture = pool.trace_capture();
+        assert_eq!(pool.trace_stats().dropped, 0, "ring must hold the whole replay");
+        let (_, misses) = pool.metrics().deadline_totals();
+        (recapture, wall, report.elapsed.as_secs_f64() * 1e6, misses)
+    };
+    let (recap_a, wall_a, virtual_us, misses) = run();
+    let (recap_b, _, _, _) = run();
+    assert_eq!(
+        recap_a, recap_b,
+        "two virtual-clock replays of the same trace must re-capture identically"
+    );
+    let n = parse_capture(&recap_a).expect("re-capture must validate").records.len();
+    assert_eq!(n, cap.records.len(), "re-capture must cover every replayed request");
+    let rate = cap.records.len() as f64 / wall_a.max(1e-9);
+    println!(
+        "{} requests | {rate:>8.1} replayed/s wall | {:.0} us virtual | {misses} deadline \
+         miss(es) | re-captures identical",
+        cap.records.len(),
+        virtual_us
+    );
+    (cap.records.len(), rate, virtual_us, misses)
+}
+
 /// Minimal hand-rolled JSON (the offline crate set has no serde).
 fn write_bench_json(path: &str, json: &str) {
     match std::fs::write(path, json) {
@@ -699,6 +762,7 @@ fn main() {
     let (trace_off, trace_on) = trace_overhead_scenario(batch);
     let (p99_watchdog, p99_hedged, hedge_wins, idle_off, idle_on) =
         hedged_scenario(if smoke { 48 } else { 96 }, batch);
+    let (replay_n, replay_rate, replay_virtual_us, replay_misses) = replayed_scenario();
 
     let min_share = shares.iter().cloned().fold(f64::INFINITY, f64::min);
     let json = format!(
@@ -723,7 +787,11 @@ fn main() {
          \"hedged\": {{\"p99_watchdog_us\": {p99_watchdog:.1}, \
          \"p99_hedged_us\": {p99_hedged:.1}, \"speedup\": {:.3}, \
          \"hedge_wins\": {hedge_wins}, \"idle_off\": {idle_off:.1}, \
-         \"idle_on\": {idle_on:.1}, \"idle_ratio\": {:.3}}}\n}}\n",
+         \"idle_on\": {idle_on:.1}, \"idle_ratio\": {:.3}}},\n  \
+         \"replayed\": {{\"trace\": \"traces/steady_multi_tenant.capture\", \
+         \"requests\": {replay_n}, \"wall_rate\": {replay_rate:.1}, \
+         \"virtual_elapsed_us\": {replay_virtual_us:.0}, \
+         \"deadline_misses\": {replay_misses}, \"identical_recapture\": true}}\n}}\n",
         adaptive_rate / static_rate,
         shares.iter().map(|s| format!("{s:.4}")).collect::<Vec<_>>().join(", "),
         bulk_slo / bulk_base,

@@ -15,6 +15,9 @@
 //!                   [--hedge | --no-hedge] [--hedge-after-factor N] [--hedge-max N]
 //!                   [--trace-out FILE] [--trace-capacity N] [--capture-out FILE]
 //!                   [--metrics-json FILE]
+//! omprt replay FILE [--virtual] [--replay-speed X] [--allow-lossy] [--elems N]
+//!                   [pool flags as above] [--trace-out FILE] [--capture-out FILE]
+//!                   [--metrics-json FILE]
 //! omprt trace-validate FILE
 //! omprt lint        [--root DIR] [--report FILE]
 //! omprt info
@@ -26,7 +29,16 @@
 //! `--metrics-json` writes the named-metrics registry. `trace-validate`
 //! structurally checks a written Chrome trace or (sniffed by the
 //! `# omprt-capture` magic) a replay capture; CI runs it over both
-//! smoke-bench exports.
+//! smoke-bench exports and every committed `traces/` fixture.
+//!
+//! `replay` re-issues a `--capture-out` capture (or a committed
+//! `traces/` fixture) against a fresh pool, pacing submits by the
+//! recorded timestamps: `--replay-speed 2` halves every recorded gap,
+//! `--virtual` runs the pool on a discrete-event clock so the recorded
+//! offsets elapse on the *virtual* timeline (instantaneous in wall time
+//! and deterministic run to run), and `--allow-lossy` opts into
+//! replaying a capture whose `# dropped=N` trailer marks it as
+//! incomplete. Combine with `--capture-out` to write the re-capture.
 
 use crate::benchmarks::{by_name, harness, Scale};
 use crate::coordinator::Coordinator;
@@ -41,8 +53,17 @@ struct Args {
 }
 
 /// Flags that take no value (presence-only switches).
-const BOOL_FLAGS: &[&str] =
-    &["pool", "adaptive", "no-adaptive", "watchdog", "no-watchdog", "hedge", "no-hedge"];
+const BOOL_FLAGS: &[&str] = &[
+    "pool",
+    "adaptive",
+    "no-adaptive",
+    "watchdog",
+    "no-watchdog",
+    "hedge",
+    "no-hedge",
+    "allow-lossy",
+    "virtual",
+];
 
 fn parse_args(argv: &[String]) -> Args {
     let mut positional = vec![];
@@ -339,9 +360,18 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
             // Sniff the format: replay captures lead with their magic,
             // anything else is expected to be a Chrome trace JSON.
             if text.starts_with("# omprt-capture") {
-                let n = crate::trace::validate_capture(&text)
+                let cap = crate::trace::parse_capture(&text)
                     .map_err(|e| crate::util::Error::Config(format!("`{path}`: {e}")))?;
-                println!("{path}: valid replay capture ({n} requests)");
+                if cap.dropped > 0 {
+                    println!(
+                        "{path}: valid replay capture ({} requests; LOSSY — {} more dropped \
+                         at record time, replay needs --allow-lossy)",
+                        cap.records.len(),
+                        cap.dropped
+                    );
+                } else {
+                    println!("{path}: valid replay capture ({} requests)", cap.records.len());
+                }
             } else {
                 let n = crate::trace::validate_chrome_trace(&text)
                     .map_err(|e| crate::util::Error::Config(format!("`{path}`: {e}")))?;
@@ -349,6 +379,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), crate::util::Error> {
             }
             Ok(())
         }
+        "replay" => run_replay(args),
         "lint" => {
             // Root defaults to the nearest ancestor holding Cargo.toml +
             // lint/rules/ so `omprt lint` works from any subdirectory.
@@ -462,6 +493,84 @@ fn run_bench_pool(name: &str, args: &Args) -> Result<(), crate::util::Error> {
     if !r.verified {
         return Err(crate::util::Error::Verify(format!(
             "`{name}` failed verification against the host reference"
+        )));
+    }
+    Ok(())
+}
+
+/// `omprt replay FILE`: re-issue a recorded capture against a fresh
+/// pool, pacing submits by the recorded timestamps. Every replayed
+/// request is synthesized from its capture line (client, deadline
+/// budget, shard fan-out, arch hint, key-derived kernel) and verified
+/// against a host reference; the run then prints the replay counters
+/// and the pool report, so a recorded incident can be re-examined under
+/// different pool flags.
+fn run_replay(args: &Args) -> Result<(), crate::util::Error> {
+    use crate::coordinator::PoolCoordinator;
+    use crate::sched::{replay_capture, ReplayOptions};
+    use crate::util::clock::Participant;
+    use crate::util::VirtualClock;
+    use std::sync::Arc;
+
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| crate::util::Error::Config("replay needs a capture FILE".into()))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| crate::util::Error::Config(format!("reading `{path}`: {e}")))?;
+    let cap = crate::trace::parse_capture(&text)
+        .map_err(|e| crate::util::Error::Config(format!("`{path}`: {e}")))?;
+
+    let mut cfg = args.pool_config()?;
+    // `--virtual` swaps in a discrete-event clock: recorded gaps elapse
+    // on the virtual timeline, so the replay is wall-instantaneous and
+    // deterministic run to run (same trace in, same capture out).
+    let vclock = if args.has("virtual") {
+        let vc = Arc::new(VirtualClock::new());
+        cfg = cfg.with_clock(vc.clone());
+        Some(vc)
+    } else {
+        None
+    };
+    let mut opts = ReplayOptions::new().with_allow_lossy(args.has("allow-lossy"));
+    if let Some(s) = args.flags.get("replay-speed") {
+        let speed: f64 = s.parse().map_err(|_| {
+            crate::util::Error::Config(format!("--replay-speed wants a number, got `{s}`"))
+        })?;
+        opts = opts.with_speed(speed);
+    }
+    if let Some(n) = args.uint("elems") {
+        opts = opts.with_elems(n as usize);
+    }
+    // The pacing thread must register with the virtual clock *before*
+    // the pool spawns its own participants, and stay registered for the
+    // pool's whole lifetime (declaration order: `_driver` before `pc`
+    // drops the pool first).
+    let _driver = vclock.as_ref().map(|vc| Participant::new(&**vc));
+    let pc = PoolCoordinator::new(&cfg)?;
+    println!(
+        "replaying {path}: {} request(s) over devices {:?}",
+        cap.records.len(),
+        pc.pool.specs().iter().map(|s| s.to_string()).collect::<Vec<_>>()
+    );
+    let report = replay_capture(&pc.pool, &cap, &opts)?;
+    println!(
+        "replay: {} submitted ({} rejected), {} completed, {} failed, {} mismatched; \
+         {} client(s), {:.3}s elapsed",
+        report.submitted,
+        report.rejected,
+        report.completed,
+        report.failed,
+        report.mismatched,
+        report.clients,
+        report.elapsed.as_secs_f64()
+    );
+    print!("{}", pc.format_report());
+    write_exports(&pc, args)?;
+    if report.mismatched > 0 {
+        return Err(crate::util::Error::Verify(format!(
+            "{} replayed result(s) differ from the host reference",
+            report.mismatched
         )));
     }
     Ok(())
@@ -596,6 +705,11 @@ fn print_help() {
          \x20 bench NAME    run one benchmark (postencil|polbm|pomriq|pep|pcg|pbt|miniqmc);\n\
          \x20               --pool routes it through the device pool\n\
          \x20 pool          drive a mixed device pool (batching/sharding scheduler demo)\n\
+         \x20 replay FILE   re-issue a recorded capture against a fresh pool, pacing by\n\
+         \x20               recorded timestamps (--replay-speed X: scale the gaps;\n\
+         \x20               --virtual: discrete-event clock, wall-instantaneous and\n\
+         \x20               deterministic; --allow-lossy: accept `# dropped=N` captures;\n\
+         \x20               --elems N: unsharded payload size; plus any pool flag)\n\
          \x20 trace-validate FILE  structurally check a Chrome trace (--trace-out) or a\n\
          \x20               replay capture (--capture-out)\n\
          \x20 lint          run the repo's static invariant checks over its own sources\n\

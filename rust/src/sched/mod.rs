@@ -221,17 +221,30 @@
 //! compile-always but runtime-gated: a disabled tracer costs one branch
 //! per would-be event (the `trace_overhead` bench scenario holds this
 //! within 2% of the untraced build).
+//!
+//! ## Trace replay
+//!
+//! The capture a traced pool exports is itself a first-class workload:
+//! [`replay::replay_capture`] re-issues a parsed
+//! [`crate::trace::Capture`] against a live pool, pacing submits by the
+//! recorded timestamps (time-scalable; deterministic and instantaneous
+//! under a [`crate::util::VirtualClock`]) and reconstructing client,
+//! deadline and shard shape per line — `omprt replay`, the `replayed`
+//! bench scenario and the committed `traces/` fixtures all sit on it
+//! (see ARCHITECTURE.md "Trace replay").
 
 pub mod adaptive;
 pub mod cache;
 pub mod health;
 pub mod pool;
+pub mod replay;
 pub mod slo;
 pub mod workload;
 
 pub use adaptive::{AdaptiveController, AdaptiveStats, SchedSignals};
 pub use cache::{CacheKey, CacheStats, ImageCache};
 pub use health::{hedge_after, HealthState, WatchdogVerdict};
+pub use replay::{replay_capture, synth_capture, ReplayOptions, ReplayReport, SCENARIOS};
 pub use slo::{ServiceEwma, SlackSummary};
 pub use pool::{
     bytes_to_f32, f32_to_bytes, Affinity, ClientMetrics, DeviceLease, DeviceMetrics, DevicePool,

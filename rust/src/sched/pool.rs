@@ -1810,6 +1810,22 @@ impl DevicePool {
         self.shared.slots.iter().map(|s| s.spec).collect()
     }
 
+    /// The pool's time source. External drivers that pace submissions
+    /// against recorded timelines (the trace replay engine) must sleep
+    /// on *this* clock, so pacing is wall time on a wall pool and
+    /// discrete-event time under a [`crate::util::VirtualClock`].
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        Arc::clone(&self.shared.clock)
+    }
+
+    /// The configured shard granularity (`[pool] shard_min_trips`):
+    /// the planner never fans out below this many elements per shard.
+    /// Replay uses it to size payloads so a recorded fan-out is
+    /// reproduced exactly.
+    pub fn shard_min_trips(&self) -> usize {
+        self.shared.shard_min_trips
+    }
+
     /// Fail fast when the request is malformed, its affinity matches no
     /// pool device, or its shard spec is inconsistent.
     fn validate(&self, req: &OffloadRequest) -> Result<(), Error> {
@@ -1819,6 +1835,7 @@ impl DevicePool {
         if req.kernel.is_empty() {
             return Err(Error::Sched("request has no kernel name".into()));
         }
+        validate_client_name(&req.client)?;
         for a in &req.args {
             if let KernelArg::Buf(i) = a {
                 if *i >= req.buffers.len() {
@@ -2077,6 +2094,7 @@ impl DevicePool {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Sched("pool is shut down".into()));
         }
+        validate_client_name(client)?;
         if !self
             .shared
             .slots
@@ -2578,11 +2596,13 @@ impl DevicePool {
     }
 
     /// Render the current trace as the line-oriented replay capture
-    /// (the `--capture-out` payload).
+    /// (the `--capture-out` payload). When the trace ring overwrote
+    /// records, the capture carries a `# dropped=N` trailer so replay
+    /// consumers can tell a complete capture from a truncated one.
     pub fn trace_capture(&self) -> String {
         let snap = self.trace_snapshot();
         let meta = self.export_meta(&snap);
-        capture_text(&snap.records, &meta)
+        capture_text(&snap.records, &meta, self.trace_stats().dropped)
     }
 
     /// Snapshot the pool's named metrics: scheduler counters, per-device
@@ -2691,6 +2711,24 @@ fn arch_code(arch: Arch) -> u64 {
 /// Labels for [`arch_code`] values, in code order (feeds
 /// [`crate::trace::ExportMeta::arch_labels`]).
 pub const ARCH_LABELS: [&str; 2] = ["nvptx64", "amdgcn"];
+
+/// Reject client names that cannot be carried through reports and
+/// trace captures. The capture exporter percent-escapes whitespace,
+/// `=`, `%` and control characters (see [`crate::trace::escape_client`]),
+/// so almost anything survives a capture round-trip — but a control
+/// character (NUL, BEL, a newline or tab…) in a client tag is never
+/// intentional and would corrupt every plain-text report line it is
+/// printed into, so it is refused at the door instead of being carried
+/// through fairness lanes, metrics and captures.
+fn validate_client_name(client: &str) -> Result<(), Error> {
+    if client.chars().any(|c| c.is_control()) {
+        return Err(Error::Sched(format!(
+            "client name {client:?} contains control characters and cannot be \
+             represented in reports or trace captures"
+        )));
+    }
+    Ok(())
+}
 
 /// Remaining deadline budget in ns at submit time — the `Submit` event's
 /// `c` word. 0 = best-effort; an already-expired deadline clamps to 1 so

@@ -1,0 +1,453 @@
+//! Trace replay: re-issue a `# omprt-capture v1` capture against a live
+//! [`DevicePool`], turning recorded traffic into the unit of
+//! reproducibility for every bench and chaos claim.
+//!
+//! [`replay_capture`] walks the parsed [`Capture`] in submit order and,
+//! per line, reconstructs the request the capture describes:
+//!
+//! * **pacing** — the driver sleeps on the *pool's* clock until the
+//!   recorded `t_us` offset (scaled by [`ReplayOptions::speed`]) from
+//!   replay start. On a wall-clock pool that reproduces the original
+//!   arrival process in real time; under a
+//!   [`crate::util::VirtualClock`] the same offsets elapse on the
+//!   virtual timeline, so the replay completes as fast as execution
+//!   allows while every submit still lands on its exact recorded
+//!   instant — which is what makes two virtual replays of the same
+//!   capture produce **byte-identical** re-captures;
+//! * **client identity** — the escaped `client` token is already
+//!   decoded by the parser; the request re-joins the same fairness
+//!   lane / SLO bucket it was recorded under;
+//! * **deadline budget** — `deadline_us` (recorded rounded-up, never 0)
+//!   becomes the request's [`OffloadRequest::deadline`];
+//! * **image key** — the recorded content hash is mapped through a
+//!   deterministic factor to a distinct `scale`-by-factor kernel image
+//!   ([`super::workload::scale_module_by`]), so equal recorded keys hit
+//!   the image cache together and distinct keys stay distinct (the
+//!   re-captured keys are the *new* images' hashes — replay preserves
+//!   the key partition, not the key values);
+//! * **shard fan-out / arch** — a `shards=N` line gets a
+//!   [`crate::sched::pool::ShardSpec`] payload sized at exactly
+//!   `N × shard_min_trips` elements, which pins the planner's
+//!   element-bound to the recorded fan-out, plus an
+//!   [`Affinity::on_arch`] hint when the pool has devices of the
+//!   recorded architecture (a capture from a differently-shaped pool
+//!   replays unpinned instead of being rejected).
+//!
+//! A capture whose ring overwrote records (`# dropped=N`) is **refused**
+//! unless [`ReplayOptions::allow_lossy`] is set: its request lines
+//! under-represent the original workload, and silently replaying them
+//! would launder a truncated recording into a reproducibility claim.
+//!
+//! [`synth_capture`] is the workload-shaped emitter behind the
+//! `traces/` fixtures: three canonical scenarios (steady multi-tenant,
+//! diurnal burst, adversarial hot-key) generated deterministically from
+//! fixed seeds, so the committed files are regenerable byte-for-byte.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use super::pool::{bytes_to_f32, Affinity, DevicePool, OffloadRequest};
+use super::workload::{scale_request_by, sharded_scale_request_by};
+use crate::ir::passes::OptLevel;
+use crate::sim::Arch;
+use crate::trace::{Capture, CaptureRecord};
+use crate::util::{Error, SplitMix64};
+
+/// Replay knobs. Defaults replay at recorded speed, refuse lossy
+/// captures, and issue 96-element payloads for unsharded lines.
+#[derive(Debug, Clone)]
+pub struct ReplayOptions {
+    /// Time-scale: recorded inter-arrival gaps are divided by this
+    /// (2.0 = twice as fast, 0.5 = half speed). Must be finite and
+    /// positive.
+    pub speed: f64,
+    /// Replay a capture carrying a `# dropped=N` trailer anyway.
+    pub allow_lossy: bool,
+    /// Payload elements for unsharded lines (sharded lines are sized
+    /// from the recorded fan-out instead).
+    pub elems: usize,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        ReplayOptions::new()
+    }
+}
+
+impl ReplayOptions {
+    /// Defaults: recorded speed, lossless-only, 96-element payloads.
+    pub fn new() -> ReplayOptions {
+        ReplayOptions { speed: 1.0, allow_lossy: false, elems: 96 }
+    }
+
+    /// Set the time-scale factor.
+    pub fn with_speed(mut self, speed: f64) -> ReplayOptions {
+        self.speed = speed;
+        self
+    }
+
+    /// Allow replaying lossy captures.
+    pub fn with_allow_lossy(mut self, allow: bool) -> ReplayOptions {
+        self.allow_lossy = allow;
+        self
+    }
+
+    /// Set the unsharded payload size in elements.
+    pub fn with_elems(mut self, elems: usize) -> ReplayOptions {
+        self.elems = elems.max(1);
+        self
+    }
+}
+
+/// What a replay did: submit-side and completion-side tallies. Queue
+/// and deadline behaviour beyond this (miss counts, slack quantiles)
+/// comes from the pool's own metrics as usual.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayReport {
+    /// Capture lines re-issued (accepted by the pool).
+    pub submitted: u64,
+    /// Capture lines the pool refused at submit (e.g. an affinity that
+    /// matches nothing on this pool shape).
+    pub rejected: u64,
+    /// Requests that completed with a response.
+    pub completed: u64,
+    /// Requests that failed after acceptance.
+    pub failed: u64,
+    /// Completed requests whose payload bytes did not match the
+    /// host-computed expectation (always 0 on a healthy pool).
+    pub mismatched: u64,
+    /// Distinct client names re-issued.
+    pub clients: usize,
+    /// Elapsed time on the pool's clock from first pace to last
+    /// completion (virtual time under a `VirtualClock`).
+    pub elapsed: Duration,
+}
+
+/// Re-issue `cap` against `pool`, pacing by recorded `t_us`. Blocks
+/// until every re-issued request completed or failed; see the module
+/// docs for the per-line reconstruction rules.
+///
+/// The calling thread is the pacing driver: on a virtual-clock pool it
+/// must be registered with the clock (a
+/// [`crate::util::clock::Participant`]) like any other driver thread,
+/// so its pacing sleeps advance virtual time deterministically.
+pub fn replay_capture(
+    pool: &DevicePool,
+    cap: &Capture,
+    opts: &ReplayOptions,
+) -> Result<ReplayReport, Error> {
+    if cap.dropped > 0 && !opts.allow_lossy {
+        return Err(Error::Config(format!(
+            "capture is lossy ({} trace records were overwritten at record time), so its \
+             request lines under-represent the original workload; pass --allow-lossy to \
+             replay it anyway",
+            cap.dropped
+        )));
+    }
+    if !(opts.speed.is_finite() && opts.speed > 0.0) {
+        return Err(Error::Config(format!(
+            "replay speed must be finite and > 0, got {}",
+            opts.speed
+        )));
+    }
+    let clock = pool.clock();
+    let min_trips = pool.shard_min_trips();
+    let pool_archs: Vec<Arch> = pool.specs().iter().map(|s| s.arch).collect();
+    let distinct_clients =
+        cap.records.iter().map(|r| r.client.as_str()).collect::<BTreeSet<_>>().len();
+    let mut report = ReplayReport { clients: distinct_clients, ..ReplayReport::default() };
+    let start = clock.now();
+    let mut pending = Vec::with_capacity(cap.records.len());
+    for r in &cap.records {
+        let target = start + scaled_offset(r, opts.speed);
+        let now = clock.now();
+        if target > now {
+            clock.sleep(target.saturating_duration_since(now));
+        }
+        let (req, want) = synth_request(r, opts, min_trips, &pool_archs);
+        match pool.submit(req) {
+            Ok(handle) => {
+                report.submitted += 1;
+                pending.push((handle, want));
+            }
+            Err(_) => report.rejected += 1,
+        }
+    }
+    for (handle, want) in pending {
+        match handle.wait() {
+            Ok(resp) => {
+                report.completed += 1;
+                let ok = resp.buffers.first().and_then(|b| b.as_ref()).is_some_and(|bytes| {
+                    bytes_to_f32(bytes) == want
+                });
+                if !ok {
+                    report.mismatched += 1;
+                }
+            }
+            Err(_) => report.failed += 1,
+        }
+    }
+    report.elapsed = clock.now().saturating_duration_since(start);
+    Ok(report)
+}
+
+/// The recorded submit offset scaled by `speed`, exact to the
+/// nanosecond at `speed == 1.0` (the 3-decimal `t_us` rendering is a
+/// lossless ns encoding).
+fn scaled_offset(r: &CaptureRecord, speed: f64) -> Duration {
+    Duration::from_nanos((r.t_us * 1e3 / speed).round() as u64)
+}
+
+/// Map a recorded image key to a kernel scale factor: equal keys →
+/// equal factors (same image, cache hits preserved); distinct keys →
+/// distinct factors for any workload with fewer than 8192 distinct
+/// images (beyond that, keys may merge — replay preserves the key
+/// *partition*, not the values).
+fn key_factor(key: u64) -> f32 {
+    1.0 + (key % 8192) as f32 / 16384.0
+}
+
+/// Deterministic payload for a capture line: a function of the key and
+/// length only, so identical replays issue identical bytes.
+fn synth_payload(key: u64, elems: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(key ^ 0x0FF1_0AD5_EED5);
+    (0..elems).map(|_| rng.below(64) as f32).collect()
+}
+
+/// Build the request a capture line describes (see the module docs),
+/// plus the host-computed expected output for verification.
+fn synth_request(
+    r: &CaptureRecord,
+    opts: &ReplayOptions,
+    min_trips: usize,
+    pool_archs: &[Arch],
+) -> (OffloadRequest, Vec<f32>) {
+    let factor = key_factor(r.key);
+    let affinity = r
+        .arch
+        .as_deref()
+        .and_then(Arch::parse)
+        .filter(|a| pool_archs.contains(a))
+        .map_or_else(Affinity::any, Affinity::on_arch);
+    let (mut req, want) = if r.shards > 1 {
+        // Size the payload so the planner's element bound equals the
+        // recorded fan-out: `elems / shard_min_trips == shards`. On a
+        // pool with at least `shards` eligible devices this reproduces
+        // the recorded split exactly (the element bound dominates the
+        // racy idle-device sample); on a smaller pool it degrades to
+        // the widest split that pool supports.
+        let elems = (r.shards as usize).saturating_mul(min_trips);
+        let data = synth_payload(r.key, elems);
+        sharded_scale_request_by(factor, &data, affinity, OptLevel::O2)
+    } else {
+        let data = synth_payload(r.key, opts.elems);
+        scale_request_by(factor, &data, affinity, OptLevel::O2)
+    };
+    req.client = r.client.clone();
+    req.deadline = r.deadline();
+    (req, want)
+}
+
+/// The canonical fixture scenarios under `traces/`, by name.
+pub const SCENARIOS: [&str; 3] = ["steady-multi-tenant", "diurnal-burst", "adversarial-hot-key"];
+
+/// Synthesize one of the canonical workload-shaped captures. Fully
+/// deterministic (fixed [`SplitMix64`] seeds, integer-µs timestamps),
+/// so the committed `traces/` fixtures can be regenerated
+/// byte-for-byte; `rust/tests/trace_replay.rs` asserts they match.
+pub fn synth_capture(scenario: &str) -> Result<Capture, Error> {
+    match scenario {
+        "steady-multi-tenant" => Ok(steady_multi_tenant()),
+        "diurnal-burst" => Ok(diurnal_burst()),
+        "adversarial-hot-key" => Ok(adversarial_hot_key()),
+        other => Err(Error::Config(format!(
+            "unknown trace scenario `{other}` (expected one of {SCENARIOS:?})"
+        ))),
+    }
+}
+
+fn record(
+    req: u64,
+    t_us: u64,
+    client: &str,
+    key: u64,
+    deadline_us: Option<u64>,
+    sharded: bool,
+) -> CaptureRecord {
+    CaptureRecord {
+        req,
+        t_us: t_us as f64,
+        client: client.to_string(),
+        key,
+        deadline_us,
+        shards: if sharded { 2 } else { 1 },
+        arch: sharded.then(|| "nvptx64".to_string()),
+    }
+}
+
+/// Four tenants at a steady aggregate rate: two latency-sensitive (with
+/// deadline budgets), one best-effort, one bulk; a small per-tenant
+/// image working set plus a shared pool of sharded images.
+fn steady_multi_tenant() -> Capture {
+    const CLIENTS: [&str; 4] = ["tenant-a", "tenant-b", "tenant-c", "bulk"];
+    let mut rng = SplitMix64::new(0x51EA_D711);
+    let mut t_us: u64 = 0;
+    let mut records = Vec::new();
+    for i in 0..160u64 {
+        t_us += 200 + rng.below(1_200);
+        let c = (i % 4) as usize;
+        let sharded = i % 20 == 7;
+        let key = if sharded {
+            0x5000 + rng.below(4)
+        } else {
+            0x100 * (c as u64 + 1) + rng.below(8)
+        };
+        let deadline_us = match c {
+            0 => Some(5_000),
+            1 => Some(2_500),
+            _ => None,
+        };
+        records.push(record(i + 1, t_us, CLIENTS[c], key, deadline_us, sharded));
+    }
+    Capture { records, dropped: 0 }
+}
+
+/// Bursty diurnal traffic: three cycles of a low-rate background
+/// shoulder followed by a tight two-client interactive burst with
+/// sub-millisecond budgets.
+fn diurnal_burst() -> Capture {
+    let mut rng = SplitMix64::new(0xD10C_0FFE);
+    let mut t_us: u64 = 0;
+    let mut records = Vec::new();
+    let mut req = 0u64;
+    for _cycle in 0..3 {
+        for _ in 0..10 {
+            t_us += 4_000 + rng.below(2_000);
+            req += 1;
+            records.push(record(req, t_us, "background", 0x900 + rng.below(3), None, false));
+        }
+        for j in 0..40u64 {
+            t_us += 80 + rng.below(120);
+            req += 1;
+            let client = if j % 2 == 0 { "peak-a" } else { "peak-b" };
+            let sharded = j % 13 == 5;
+            let key = if sharded { 0xb00 + rng.below(2) } else { 0xa00 + rng.below(6) };
+            let deadline_us = Some(if j % 2 == 0 { 1_000 } else { 800 });
+            records.push(record(req, t_us, client, key, deadline_us, sharded));
+        }
+    }
+    Capture { records, dropped: 0 }
+}
+
+/// Adversarial traffic: hostile client names that stress the capture
+/// escaping (`tenant a`, `a=b`, a literal `-`, `100%`), 70% of requests
+/// hammering one hot image key, and `deadline_us=1` lines — the
+/// rounded-up form of a sub-microsecond budget.
+fn adversarial_hot_key() -> Capture {
+    const HOSTILE: [&str; 4] = ["tenant a", "a=b", "-", "100%"];
+    let mut rng = SplitMix64::new(0xAD5E_4B1A);
+    let mut t_us: u64 = 0;
+    let mut records = Vec::new();
+    for i in 0..120u64 {
+        t_us += 100 + rng.below(400);
+        let hot = rng.below(10) < 7;
+        let key = if hot { 0xBEEF } else { 0xC000 + rng.below(32) };
+        let sharded = i % 30 == 11;
+        let deadline_us = match i % 5 {
+            0 => Some(1),
+            1 => Some(250),
+            _ => None,
+        };
+        records.push(record(i + 1, t_us, HOSTILE[(i % 4) as usize], key, deadline_us, sharded));
+    }
+    Capture { records, dropped: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pool::PoolConfig;
+    use super::*;
+    use crate::devrt::RuntimeKind;
+    use crate::trace::parse_capture;
+
+    #[test]
+    fn synthesized_scenarios_render_to_valid_captures() {
+        for name in SCENARIOS {
+            let cap = synth_capture(name).unwrap();
+            assert!(!cap.records.is_empty(), "{name}");
+            assert_eq!(cap.dropped, 0, "{name}");
+            let text = cap.to_text();
+            let back = parse_capture(&text).unwrap_or_else(|e| panic!("{name}: {e}\n{text}"));
+            assert_eq!(back, cap, "{name} must round-trip through its rendering");
+            // Identical inputs regenerate identical bytes.
+            assert_eq!(synth_capture(name).unwrap().to_text(), text, "{name}");
+        }
+        assert!(synth_capture("nope").is_err());
+    }
+
+    #[test]
+    fn adversarial_scenario_exercises_the_hard_cases() {
+        let cap = synth_capture("adversarial-hot-key").unwrap();
+        let clients: BTreeSet<&str> = cap.records.iter().map(|r| r.client.as_str()).collect();
+        for hostile in ["tenant a", "a=b", "-", "100%"] {
+            assert!(clients.contains(hostile), "missing {hostile:?}");
+        }
+        assert!(cap.records.iter().any(|r| r.deadline_us == Some(1)));
+        assert!(cap.records.iter().any(|r| r.shards == 2));
+        let hot = cap.records.iter().filter(|r| r.key == 0xBEEF).count();
+        assert!(hot * 2 > cap.records.len(), "hot key must dominate: {hot}");
+    }
+
+    #[test]
+    fn replay_refuses_lossy_captures_without_opt_in() {
+        let pool =
+            DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, crate::sim::Arch::Nvptx64))
+                .unwrap();
+        let cap = Capture { records: vec![], dropped: 5 };
+        let err = replay_capture(&pool, &cap, &ReplayOptions::new()).unwrap_err();
+        assert!(err.to_string().contains("lossy"), "{err}");
+        // Opting in replays the (empty) capture fine.
+        let report =
+            replay_capture(&pool, &cap, &ReplayOptions::new().with_allow_lossy(true)).unwrap();
+        assert_eq!(report.submitted, 0);
+    }
+
+    #[test]
+    fn replay_rejects_nonsense_speeds() {
+        let pool =
+            DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, crate::sim::Arch::Nvptx64))
+                .unwrap();
+        for speed in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = replay_capture(
+                &pool,
+                &Capture::default(),
+                &ReplayOptions::new().with_speed(speed),
+            )
+            .unwrap_err();
+            assert!(err.to_string().contains("speed"), "{speed}: {err}");
+        }
+    }
+
+    #[test]
+    fn replay_reissues_and_verifies_a_small_capture() {
+        let pool =
+            DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, crate::sim::Arch::Nvptx64))
+                .unwrap();
+        let text = "# omprt-capture v1\n\
+                    req=1 t_us=0.000 client=tenant%20a key=0xbeef deadline_us=- shards=1 arch=-\n\
+                    req=2 t_us=50.000 client=%2D key=0xbeef deadline_us=250000 shards=1 arch=-\n\
+                    req=3 t_us=100.000 client=- key=0x7 deadline_us=- shards=1 arch=-\n";
+        let cap = parse_capture(text).unwrap();
+        let report = replay_capture(&pool, &cap, &ReplayOptions::new()).unwrap();
+        assert_eq!(report.submitted, 3, "{report:?}");
+        assert_eq!(report.completed, 3, "{report:?}");
+        assert_eq!(report.rejected, 0, "{report:?}");
+        assert_eq!(report.failed, 0, "{report:?}");
+        assert_eq!(report.mismatched, 0, "{report:?}");
+        assert_eq!(report.clients, 3, "tenant a, -, and the default client");
+        pool.quiesce();
+        let m = pool.metrics();
+        assert_eq!(m.submitted, 3);
+        assert_eq!(m.completed, 3);
+    }
+}

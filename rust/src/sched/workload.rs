@@ -133,7 +133,19 @@ pub fn sharded_scale_request(
     affinity: Affinity,
     opt: OptLevel,
 ) -> (OffloadRequest, Vec<f32>) {
-    let (mut req, expected) = scale_request(data, affinity, opt);
+    sharded_scale_request_by(2.0, data, affinity, opt)
+}
+
+/// [`sharded_scale_request`] with an explicit scale factor (distinct
+/// factors → distinct images), so replay can re-issue a recorded
+/// sharded request under the image key its capture line implies.
+pub fn sharded_scale_request_by(
+    factor: f32,
+    data: &[f32],
+    affinity: Affinity,
+    opt: OptLevel,
+) -> (OffloadRequest, Vec<f32>) {
+    let (mut req, expected) = scale_request_by(factor, data, affinity, opt);
     let grid = (data.len() as u32).div_ceil(4096).clamp(2, 64);
     req.cfg = LaunchConfig::new(grid, 64);
     req.shard = Some(ShardSpec {

@@ -1,0 +1,480 @@
+//! The `# omprt-capture v1` replay-capture format: a typed parser and
+//! renderer for the line-oriented export written by `--capture-out`.
+//!
+//! One line per *accepted* request, in submit order:
+//!
+//! ```text
+//! # omprt-capture v1
+//! # req t_us client key deadline_us shards arch
+//! req=1 t_us=0.000 client=bulk key=0xabc deadline_us=250000 shards=1 arch=-
+//! req=2 t_us=503.000 client=- key=0xdef deadline_us=- shards=2 arch=nvptx64
+//! # dropped=0-or-more, only present when the trace ring overwrote records
+//! ```
+//!
+//! Grammar contract (shared with [`super::export::validate_capture`],
+//! which is a thin wrapper over [`parse_capture`]):
+//!
+//! * line 1 is exactly `# omprt-capture v1`;
+//! * every other non-empty line is either a comment (`#`) or exactly
+//!   seven `key=value` tokens in the fixed order
+//!   `req t_us client key deadline_us shards arch`;
+//! * `req` ids are unique `u64`s, `t_us` is finite and non-decreasing,
+//!   `key` is `0x`-hex, `deadline_us` is `-` (best-effort) or a `u64`,
+//!   `shards >= 1`, and `shards > 1` exactly when `arch` is a real
+//!   label;
+//! * `client` is `-` for the default client or an escaped name (see
+//!   below);
+//! * a `# dropped=N` trailer, when present, must be well-formed, appear
+//!   once, and not be followed by further request lines. It marks a
+//!   **lossy** capture: the ring overwrote `N` records, so the request
+//!   lines under-represent the recorded workload.
+//!
+//! ## Client-name escaping
+//!
+//! Client names are arbitrary strings, but the capture grammar reserves
+//! whitespace (token separator), `=` (key/value separator), `-` (the
+//! whole-token no-client sentinel) and `%` (the escape introducer).
+//! [`escape_client`] percent-encodes each reserved or control character
+//! as `%XX` per UTF-8 byte, and renders the one name whose escaped form
+//! would collide with the sentinel (`-`) as `%2D`. Because `%` always
+//! escapes itself the encoding is injective, and [`unescape_client`]
+//! inverts it exactly — two distinct clients can never merge in a
+//! capture, and a replay reconstructs the original names byte-for-byte.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+use super::event::{EventKind, TraceRecord};
+use super::export::ExportMeta;
+
+/// The line-1 magic every capture starts with.
+pub const CAPTURE_HEADER: &str = "# omprt-capture v1";
+
+const COLUMNS: &str = "# req t_us client key deadline_us shards arch";
+
+/// Whether `c` must be percent-encoded in a `client=` value: the
+/// grammar's reserved characters plus anything a terminal or diff tool
+/// would mangle.
+fn reserved(c: char) -> bool {
+    c.is_whitespace() || c.is_control() || c == '%' || c == '='
+}
+
+/// Encode a client name for a `client=` token. Empty names render as
+/// the `-` sentinel; reserved characters (see [`reserved`]) become
+/// `%XX` per UTF-8 byte; a name whose encoding would otherwise read as
+/// the bare sentinel renders as `%2D`. Injective over all names.
+pub fn escape_client(name: &str) -> String {
+    if name.is_empty() {
+        return "-".to_string();
+    }
+    let mut out = String::with_capacity(name.len());
+    for c in name.chars() {
+        if reserved(c) {
+            let mut buf = [0u8; 4];
+            for b in c.encode_utf8(&mut buf).bytes() {
+                out.push_str(&format!("%{b:02X}"));
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    // `-` is never escaped, so `out == "-"` iff the name itself is `-`:
+    // encode it so the token cannot collide with the no-client sentinel.
+    if out == "-" {
+        "%2D".to_string()
+    } else {
+        out
+    }
+}
+
+/// Decode a `client=` token back to the original client name. `-` is
+/// the default (empty) client. Rejects tokens [`escape_client`] cannot
+/// produce: a raw `=`, a truncated or non-hex `%` escape, or bytes that
+/// do not decode to UTF-8.
+pub fn unescape_client(tok: &str) -> Result<String, String> {
+    if tok == "-" {
+        return Ok(String::new());
+    }
+    let bytes = tok.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = tok
+                    .get(i + 1..i + 3)
+                    .ok_or_else(|| format!("truncated `%` escape in client `{tok}`"))?;
+                let v = u8::from_str_radix(hex, 16)
+                    .map_err(|_| format!("bad `%` escape `%{hex}` in client `{tok}`"))?;
+                out.push(v);
+                i += 3;
+            }
+            b'=' => return Err(format!("unescaped `=` in client `{tok}`")),
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).map_err(|_| format!("client `{tok}` does not decode to UTF-8"))
+}
+
+/// One parsed capture line: everything a replay driver needs to
+/// re-issue the request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaptureRecord {
+    /// Original request id (unique within the capture).
+    pub req: u64,
+    /// Submit time in microseconds since pool start.
+    pub t_us: f64,
+    /// Decoded client name; empty = the default client.
+    pub client: String,
+    /// Kernel-image content key (`0x0` for non-image requests).
+    pub key: u64,
+    /// Remaining deadline budget at submit, rounded **up** to whole
+    /// microseconds; `None` = best-effort.
+    pub deadline_us: Option<u64>,
+    /// Shard fan-out the planner chose (1 = unsharded).
+    pub shards: u64,
+    /// Shard target architecture label; `Some` exactly when `shards > 1`.
+    pub arch: Option<String>,
+}
+
+impl CaptureRecord {
+    /// Submit offset from pool start, exact to the nanosecond (the
+    /// 3-decimal `t_us` rendering is a lossless ns encoding).
+    pub fn offset(&self) -> Duration {
+        Duration::from_nanos((self.t_us * 1e3).round() as u64)
+    }
+
+    /// Deadline budget to re-issue with. A recorded budget is never
+    /// zero (zero means absent), so clamp defensively to 1 µs.
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline_us.map(|us| Duration::from_micros(us.max(1)))
+    }
+
+    /// Render this record as one capture line (no trailing newline).
+    pub fn line(&self) -> String {
+        let deadline = match self.deadline_us {
+            Some(d) => d.to_string(),
+            None => "-".to_string(),
+        };
+        format!(
+            "req={} t_us={:.3} client={} key={:#x} deadline_us={} shards={} arch={}",
+            self.req,
+            self.t_us,
+            escape_client(&self.client),
+            self.key,
+            deadline,
+            self.shards,
+            self.arch.as_deref().unwrap_or("-"),
+        )
+    }
+}
+
+/// A parsed (or synthesized) capture: the request lines plus the lossy
+/// marker from the `# dropped=N` trailer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Capture {
+    /// Request lines in submit order.
+    pub records: Vec<CaptureRecord>,
+    /// Trace records overwritten at capture time; `> 0` means the
+    /// request lines under-represent the recorded workload.
+    pub dropped: u64,
+}
+
+impl Capture {
+    /// Build a capture from a drained trace snapshot: one record per
+    /// `Submit`, joined with its `ShardPlanned` fan-out/arch when one
+    /// was recorded. `dropped` is the ring's overwrite count — when
+    /// non-zero the rendering carries a `# dropped=N` trailer so
+    /// consumers can tell a complete capture from a truncated one.
+    pub fn from_records(records: &[TraceRecord], meta: &ExportMeta, dropped: u64) -> Capture {
+        let mut shard: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+        for r in records {
+            if r.kind == EventKind::ShardPlanned {
+                shard.insert(r.req, (r.a, r.b));
+            }
+        }
+        let mut out = Vec::new();
+        for r in records {
+            if r.kind != EventKind::Submit {
+                continue;
+            }
+            let (shards, arch) = match shard.get(&r.req) {
+                Some(&(fanout, code)) => (fanout, Some(meta.arch(code).to_string())),
+                None => (1, None),
+            };
+            out.push(CaptureRecord {
+                req: r.req,
+                t_us: r.t_ns as f64 / 1e3,
+                client: meta.client(r.a).to_string(),
+                key: r.b,
+                // Round *up*: a sub-microsecond budget (1..999 ns) must
+                // not collapse to 0, which replay could not distinguish
+                // from "already missed"; 0 is reserved for absent.
+                deadline_us: if r.c == 0 { None } else { Some(r.c.div_ceil(1_000)) },
+                shards,
+                arch,
+            });
+        }
+        Capture { records: out, dropped }
+    }
+
+    /// Render the capture in the `# omprt-capture v1` wire format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::with_capacity(64 + self.records.len() * 80);
+        out.push_str(CAPTURE_HEADER);
+        out.push('\n');
+        out.push_str(COLUMNS);
+        out.push('\n');
+        for r in &self.records {
+            out.push_str(&r.line());
+            out.push('\n');
+        }
+        if self.dropped > 0 {
+            out.push_str(&format!("# dropped={}\n", self.dropped));
+        }
+        out
+    }
+}
+
+/// Parse a `# omprt-capture v1` document into a [`Capture`], enforcing
+/// the full grammar contract (see the module docs). This is the strict
+/// counterpart of [`super::export::validate_capture`] — same grammar,
+/// but it returns the typed records instead of just counting them.
+pub fn parse_capture(text: &str) -> Result<Capture, String> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(CAPTURE_HEADER) => {}
+        other => {
+            return Err(format!(
+                "line 1: expected `{CAPTURE_HEADER}` header, got {other:?}"
+            ))
+        }
+    }
+    const KEYS: [&str; 7] = ["req", "t_us", "client", "key", "deadline_us", "shards", "arch"];
+    let mut seen_req = BTreeSet::new();
+    let mut last_t = f64::NEG_INFINITY;
+    let mut records = Vec::new();
+    let mut dropped: Option<u64> = None;
+    for (i, line) in lines.enumerate() {
+        let lineno = i + 2; // 1-based, after the header
+        if let Some(rest) = line.strip_prefix("# dropped=") {
+            if dropped.is_some() {
+                return Err(format!("line {lineno}: duplicate `# dropped=` trailer"));
+            }
+            let n: u64 = rest
+                .trim()
+                .parse()
+                .map_err(|_| format!("line {lineno}: bad `# dropped=` count `{rest}`"))?;
+            dropped = Some(n);
+            continue;
+        }
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        if dropped.is_some() {
+            return Err(format!(
+                "line {lineno}: request line after the `# dropped=` trailer"
+            ));
+        }
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        if tokens.len() != KEYS.len() {
+            return Err(format!(
+                "line {lineno}: expected {} `key=value` tokens, got {}",
+                KEYS.len(),
+                tokens.len()
+            ));
+        }
+        let mut vals = [""; 7];
+        for (slot, (tok, key)) in tokens.iter().zip(KEYS).enumerate() {
+            vals[slot] = match tok.strip_prefix(key).and_then(|r| r.strip_prefix('=')) {
+                Some(v) if !v.is_empty() => v,
+                _ => {
+                    return Err(format!(
+                        "line {lineno}: token {} must be `{key}=<value>`, got `{tok}`",
+                        slot + 1
+                    ))
+                }
+            };
+        }
+        let [req, t_us, client, key, deadline, shards, arch] = vals;
+        let req: u64 = req
+            .parse()
+            .map_err(|_| format!("line {lineno}: bad req id `{req}`"))?;
+        if !seen_req.insert(req) {
+            return Err(format!("line {lineno}: duplicate req id {req}"));
+        }
+        let t: f64 = t_us
+            .parse()
+            .map_err(|_| format!("line {lineno}: bad t_us `{t_us}`"))?;
+        if !t.is_finite() {
+            return Err(format!("line {lineno}: non-finite t_us `{t_us}`"));
+        }
+        if t < last_t {
+            return Err(format!(
+                "line {lineno}: t_us {t} goes backwards (previous {last_t})"
+            ));
+        }
+        last_t = t;
+        let client = unescape_client(client).map_err(|e| format!("line {lineno}: {e}"))?;
+        let hex = key
+            .strip_prefix("0x")
+            .ok_or_else(|| format!("line {lineno}: key must be 0x-hex, got `{key}`"))?;
+        let key = u64::from_str_radix(hex, 16)
+            .map_err(|_| format!("line {lineno}: bad hex key `0x{hex}`"))?;
+        let deadline_us = if deadline == "-" {
+            None
+        } else {
+            Some(
+                deadline
+                    .parse::<u64>()
+                    .map_err(|_| format!("line {lineno}: bad deadline_us `{deadline}`"))?,
+            )
+        };
+        let fanout: u64 = shards
+            .parse()
+            .map_err(|_| format!("line {lineno}: bad shards `{shards}`"))?;
+        if fanout == 0 {
+            return Err(format!("line {lineno}: shards must be >= 1"));
+        }
+        if (fanout > 1) != (arch != "-") {
+            return Err(format!(
+                "line {lineno}: shards={fanout} inconsistent with arch={arch} \
+                 (fan-out > 1 exactly when a shard arch is recorded)"
+            ));
+        }
+        records.push(CaptureRecord {
+            req,
+            t_us: t,
+            client,
+            key,
+            deadline_us,
+            shards: fanout,
+            arch: (arch != "-").then(|| arch.to_string()),
+        });
+    }
+    Ok(Capture {
+        records,
+        dropped: dropped.unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(req: u64, t_us: f64, client: &str) -> CaptureRecord {
+        CaptureRecord {
+            req,
+            t_us,
+            client: client.to_string(),
+            key: 0xabc,
+            deadline_us: None,
+            shards: 1,
+            arch: None,
+        }
+    }
+
+    #[test]
+    fn escape_is_injective_over_hostile_names() {
+        let hostile = [
+            "", "-", "%2D", "a b", "a\tb", "a=b", "a%b", "=", "%", "a-b", "a_b",
+            "tenant a", "100%", "x\ny", "héllo wörld",
+        ];
+        let mut seen = std::collections::BTreeMap::new();
+        for name in hostile {
+            let esc = escape_client(name);
+            // No reserved characters survive, and the token never reads
+            // as the bare sentinel unless the name is empty.
+            assert!(!esc.contains(char::is_whitespace), "{name:?} -> {esc}");
+            assert!(!esc.contains('='), "{name:?} -> {esc}");
+            assert_eq!(esc == "-", name.is_empty(), "{name:?} -> {esc}");
+            if let Some(prev) = seen.insert(esc.clone(), name) {
+                panic!("{prev:?} and {name:?} both escape to `{esc}`");
+            }
+            assert_eq!(unescape_client(&esc).unwrap(), name, "via `{esc}`");
+        }
+    }
+
+    #[test]
+    fn sentinel_and_collision_cases() {
+        assert_eq!(escape_client(""), "-");
+        assert_eq!(escape_client("-"), "%2D");
+        assert_eq!(escape_client("a=b"), "a%3Db");
+        assert_eq!(escape_client("a b"), "a%20b");
+        assert_eq!(unescape_client("-").unwrap(), "");
+        assert_eq!(unescape_client("%2D").unwrap(), "-");
+    }
+
+    #[test]
+    fn unescape_rejects_tokens_escape_never_produces() {
+        for bad in ["a=b", "%", "%2", "%zz", "a%fz"] {
+            assert!(unescape_client(bad).is_err(), "must reject `{bad}`");
+        }
+        // Escapes that decode to invalid UTF-8 are refused too.
+        assert!(unescape_client("%FF%FE").is_err());
+    }
+
+    #[test]
+    fn render_parse_round_trip_preserves_records() {
+        let cap = Capture {
+            records: vec![
+                CaptureRecord { deadline_us: Some(1), ..rec(1, 0.0, "tenant a") },
+                CaptureRecord { key: 0x1f, ..rec(2, 12.345, "a=b") },
+                CaptureRecord {
+                    shards: 2,
+                    arch: Some("nvptx64".to_string()),
+                    deadline_us: Some(250_000),
+                    ..rec(3, 500.0, "-")
+                },
+                rec(4, 500.0, ""),
+            ],
+            dropped: 0,
+        };
+        let text = cap.to_text();
+        assert!(text.starts_with("# omprt-capture v1\n"), "{text}");
+        let back = parse_capture(&text).unwrap();
+        assert_eq!(back, cap, "{text}");
+    }
+
+    #[test]
+    fn offset_is_exact_to_the_nanosecond() {
+        let r = rec(1, 12.345, "c");
+        assert_eq!(r.offset(), Duration::from_nanos(12_345));
+        assert_eq!(rec(2, 0.0, "c").offset(), Duration::ZERO);
+    }
+
+    #[test]
+    fn dropped_trailer_round_trips_and_is_strict() {
+        let cap = Capture { records: vec![rec(1, 0.0, "c")], dropped: 7 };
+        let text = cap.to_text();
+        assert!(text.ends_with("# dropped=7\n"), "{text}");
+        assert_eq!(parse_capture(&text).unwrap().dropped, 7);
+        // Absent trailer means lossless.
+        assert_eq!(parse_capture("# omprt-capture v1\n").unwrap().dropped, 0);
+        // Malformed, duplicated or non-trailing forms are errors.
+        for (bad, why) in [
+            ("# omprt-capture v1\n# dropped=x\n", "dropped"),
+            ("# omprt-capture v1\n# dropped=1\n# dropped=2\n", "duplicate"),
+            (
+                "# omprt-capture v1\n# dropped=1\nreq=1 t_us=0.1 client=c key=0xa deadline_us=- shards=1 arch=-\n",
+                "after",
+            ),
+        ] {
+            let err = parse_capture(bad).unwrap_err();
+            assert!(err.contains(why), "{bad:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_undecodable_client_tokens() {
+        let hdr = "# omprt-capture v1\n";
+        for bad in ["client=a=b", "client=%zz", "client=%2"] {
+            let line = format!("req=1 t_us=0.1 {bad} key=0xa deadline_us=- shards=1 arch=-\n");
+            let err = parse_capture(&format!("{hdr}{line}")).unwrap_err();
+            assert!(err.contains("line 2") && err.contains("client"), "{bad} -> {err}");
+        }
+    }
+}

@@ -27,7 +27,10 @@
 //! [`validate_capture`] does the same job for the line-oriented
 //! `# omprt-capture v1` replay format: header magic, the fixed
 //! seven-token line grammar, monotone submit timestamps, unique request
-//! ids, and shard/arch consistency (`shards > 1` iff a real arch label).
+//! ids, decodable escaped client names, shard/arch consistency
+//! (`shards > 1` iff a real arch label) and a well-formed `# dropped=N`
+//! lossy trailer. It is a thin wrapper over the typed parser in
+//! [`super::capture`], which replay consumers use directly.
 
 use super::event::{EventKind, TraceRecord};
 use super::metrics::json_escape;
@@ -48,11 +51,11 @@ pub struct ExportMeta {
 }
 
 impl ExportMeta {
-    fn client(&self, id: u64) -> &str {
+    pub(crate) fn client(&self, id: u64) -> &str {
         self.clients.get(id as usize).map_or("?", |s| s.as_str())
     }
 
-    fn arch(&self, code: u64) -> &str {
+    pub(crate) fn arch(&self, code: u64) -> &str {
         self.arch_labels.get(code as usize).map_or("?", |s| s.as_str())
     }
 }
@@ -257,46 +260,16 @@ fn launch_instant(ev: &mut Vec<String>, r: &TraceRecord, tid: u64, name: &str) {
 /// everything a replay driver needs to re-issue the same workload shape
 /// — client, image key, shard fan-out + arch, deadline budget and the
 /// original submit timestamp (µs since pool start, for paced replay).
-pub fn capture_text(records: &[TraceRecord], meta: &ExportMeta) -> String {
-    let mut shard: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
-    for r in records {
-        if r.kind == EventKind::ShardPlanned {
-            shard.insert(r.req, (r.a, r.b));
-        }
-    }
-    let mut out = String::from("# omprt-capture v1\n");
-    out.push_str("# req t_us client key deadline_us shards arch\n");
-    for r in records {
-        if r.kind != EventKind::Submit {
-            continue;
-        }
-        let client = meta.client(r.a);
-        let client = if client.is_empty() {
-            "-".to_string()
-        } else {
-            client.replace(char::is_whitespace, "_")
-        };
-        let deadline = if r.c == 0 {
-            "-".to_string()
-        } else {
-            format!("{}", r.c / 1_000)
-        };
-        let (shards, arch) = match shard.get(&r.req) {
-            Some(&(fanout, code)) => (fanout, meta.arch(code).to_string()),
-            None => (1, "-".to_string()),
-        };
-        out.push_str(&format!(
-            "req={} t_us={} client={} key={:#x} deadline_us={} shards={} arch={}\n",
-            r.req,
-            ts_us(r.t_ns),
-            client,
-            r.b,
-            deadline,
-            shards,
-            arch
-        ));
-    }
-    out
+///
+/// Client names are percent-escaped injectively (see
+/// [`super::capture::escape_client`]) so hostile names — whitespace,
+/// `=`, a literal `-` — survive the round trip; deadline budgets round
+/// **up** to whole microseconds so a sub-µs budget never collapses to
+/// the absent sentinel; and a non-zero `dropped` (the trace ring's
+/// overwrite count) appends a `# dropped=N` trailer marking the capture
+/// as lossy.
+pub fn capture_text(records: &[TraceRecord], meta: &ExportMeta, dropped: u64) -> String {
+    super::capture::Capture::from_records(records, meta, dropped).to_text()
 }
 
 /// A parsed JSON value — the minimal tree the validator (and tests)
@@ -594,92 +567,15 @@ pub fn validate_chrome_trace(json: &str) -> Result<usize, String> {
 /// output): the version header on line 1, then per non-comment line the
 /// fixed grammar `req= t_us= client= key= deadline_us= shards= arch=`
 /// with parseable values — unique `u64` request ids, finite
-/// non-decreasing `t_us`, a `0x`-hex image key, `deadline_us` either `-`
-/// or a `u64`, `shards >= 1`, and `shards > 1` exactly when `arch` is a
-/// real label (not `-`). Returns the request-line count.
+/// non-decreasing `t_us`, a decodable escaped client, a `0x`-hex image
+/// key, `deadline_us` either `-` or a `u64`, `shards >= 1`, and
+/// `shards > 1` exactly when `arch` is a real label (not `-`). A
+/// `# dropped=N` trailer must be well-formed and final. Returns the
+/// request-line count; a thin wrapper over
+/// [`super::capture::parse_capture`], which this shares its grammar
+/// with.
 pub fn validate_capture(text: &str) -> Result<usize, String> {
-    let mut lines = text.lines();
-    match lines.next() {
-        Some("# omprt-capture v1") => {}
-        other => {
-            return Err(format!(
-                "line 1: expected `# omprt-capture v1` header, got {other:?}"
-            ))
-        }
-    }
-    const KEYS: [&str; 7] = ["req", "t_us", "client", "key", "deadline_us", "shards", "arch"];
-    let mut seen_req = std::collections::BTreeSet::new();
-    let mut last_t = f64::NEG_INFINITY;
-    let mut count = 0usize;
-    for (i, line) in lines.enumerate() {
-        let lineno = i + 2; // 1-based, after the header
-        if line.starts_with('#') || line.trim().is_empty() {
-            continue;
-        }
-        let tokens: Vec<&str> = line.split_whitespace().collect();
-        if tokens.len() != KEYS.len() {
-            return Err(format!(
-                "line {lineno}: expected {} `key=value` tokens, got {}",
-                KEYS.len(),
-                tokens.len()
-            ));
-        }
-        let mut vals = [""; 7];
-        for (slot, (tok, key)) in tokens.iter().zip(KEYS).enumerate() {
-            vals[slot] = match tok.strip_prefix(key).and_then(|r| r.strip_prefix('=')) {
-                Some(v) if !v.is_empty() => v,
-                _ => {
-                    return Err(format!(
-                        "line {lineno}: token {} must be `{key}=<value>`, got `{tok}`",
-                        slot + 1
-                    ))
-                }
-            };
-        }
-        let [req, t_us, _client, key, deadline, shards, arch] = vals;
-        let req: u64 = req
-            .parse()
-            .map_err(|_| format!("line {lineno}: bad req id `{req}`"))?;
-        if !seen_req.insert(req) {
-            return Err(format!("line {lineno}: duplicate req id {req}"));
-        }
-        let t: f64 = t_us
-            .parse()
-            .map_err(|_| format!("line {lineno}: bad t_us `{t_us}`"))?;
-        if !t.is_finite() {
-            return Err(format!("line {lineno}: non-finite t_us `{t_us}`"));
-        }
-        if t < last_t {
-            return Err(format!(
-                "line {lineno}: t_us {t} goes backwards (previous {last_t})"
-            ));
-        }
-        last_t = t;
-        let hex = key
-            .strip_prefix("0x")
-            .ok_or_else(|| format!("line {lineno}: key must be 0x-hex, got `{key}`"))?;
-        u64::from_str_radix(hex, 16)
-            .map_err(|_| format!("line {lineno}: bad hex key `{key}`"))?;
-        if deadline != "-" {
-            deadline
-                .parse::<u64>()
-                .map_err(|_| format!("line {lineno}: bad deadline_us `{deadline}`"))?;
-        }
-        let fanout: u64 = shards
-            .parse()
-            .map_err(|_| format!("line {lineno}: bad shards `{shards}`"))?;
-        if fanout == 0 {
-            return Err(format!("line {lineno}: shards must be >= 1"));
-        }
-        if (fanout > 1) != (arch != "-") {
-            return Err(format!(
-                "line {lineno}: shards={fanout} inconsistent with arch={arch} \
-                 (fan-out > 1 exactly when a shard arch is recorded)"
-            ));
-        }
-        count += 1;
-    }
-    Ok(count)
+    super::capture::parse_capture(text).map(|c| c.records.len())
 }
 
 #[cfg(test)]
@@ -756,7 +652,7 @@ mod tests {
     #[test]
     fn capture_lists_accepted_requests_with_shard_and_deadline() {
         let records = sample_records();
-        let text = capture_text(&records, &sample_meta());
+        let text = capture_text(&records, &sample_meta(), 0);
         assert!(text.starts_with("# omprt-capture v1\n"), "{text}");
         let lines: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
         assert_eq!(lines.len(), 2, "one line per accepted request:\n{text}");
@@ -780,10 +676,86 @@ mod tests {
 
     #[test]
     fn capture_validator_accepts_real_exports() {
-        let text = capture_text(&sample_records(), &sample_meta());
+        let text = capture_text(&sample_records(), &sample_meta(), 0);
         assert_eq!(validate_capture(&text).unwrap(), 2, "{text}");
         // An empty capture (header only) is valid with zero requests.
         assert_eq!(validate_capture("# omprt-capture v1\n").unwrap(), 0);
+    }
+
+    /// A lossy ring must not produce a capture that claims full
+    /// coverage: the overwrite count surfaces as a `# dropped=N`
+    /// trailer that still validates but is visible to consumers.
+    #[test]
+    fn capture_marks_lossy_rings_with_a_dropped_trailer() {
+        let text = capture_text(&sample_records(), &sample_meta(), 3);
+        assert!(text.ends_with("# dropped=3\n"), "{text}");
+        assert_eq!(validate_capture(&text).unwrap(), 2, "{text}");
+        assert_eq!(super::super::capture::parse_capture(&text).unwrap().dropped, 3);
+        // Lossless captures carry no trailer at all.
+        assert!(!capture_text(&sample_records(), &sample_meta(), 0).contains("dropped"));
+    }
+
+    /// Regression (capture grammar): the exporter used to write client
+    /// names after only whitespace→`_` mangling, so a client literally
+    /// named `-` collided with the no-client sentinel and a name
+    /// containing `=` corrupted the `key=value` grammar. Names now
+    /// escape injectively and round-trip.
+    #[test]
+    fn capture_escapes_hostile_client_names_injectively() {
+        let meta = ExportMeta {
+            clients: vec![
+                "-".to_string(),
+                "a=b".to_string(),
+                "under_score".to_string(),
+                "under score".to_string(),
+            ],
+            ..sample_meta()
+        };
+        let t = Tracer::new(true, 64, 1);
+        for c in 0..4u64 {
+            let r = t.next_request_id();
+            t.emit_at(None, 100 * (c + 1), Event::new(EventKind::Submit).req(r).a(c).b(0xa));
+        }
+        let text = capture_text(&t.snapshot().records, &meta, 0);
+        // The sentinel collision and the grammar corruption are gone...
+        assert!(text.contains("client=%2D"), "{text}");
+        assert!(text.contains("client=a%3Db"), "{text}");
+        // ...and the two names the old `_` mangling merged stay distinct.
+        assert!(text.contains("client=under_score"), "{text}");
+        assert!(text.contains("client=under%20score"), "{text}");
+        assert_eq!(validate_capture(&text).unwrap(), 4, "{text}");
+        let cap = super::super::capture::parse_capture(&text).unwrap();
+        let names: Vec<&str> = cap.records.iter().map(|r| r.client.as_str()).collect();
+        assert_eq!(names, ["-", "a=b", "under_score", "under score"], "{text}");
+    }
+
+    /// Regression (deadline truncation): a sub-microsecond budget
+    /// (1..999 ns) used to floor-divide to `deadline_us=0`, telling a
+    /// replay the budget was already missed. Budgets now round up, with
+    /// `-` reserved for the genuinely-absent case.
+    #[test]
+    fn capture_rounds_sub_microsecond_deadlines_up() {
+        let t = Tracer::new(true, 64, 1);
+        for (i, ns) in [1u64, 999, 1_000, 1_001].into_iter().enumerate() {
+            let r = t.next_request_id();
+            t.emit_at(
+                None,
+                100 * (i as u64 + 1),
+                Event::new(EventKind::Submit).req(r).a(0).b(0xa).c(ns),
+            );
+        }
+        let text = capture_text(&t.snapshot().records, &sample_meta(), 0);
+        let deadlines: Vec<&str> = text
+            .lines()
+            .filter(|l| !l.starts_with('#'))
+            .map(|l| {
+                l.split_whitespace()
+                    .find_map(|tok| tok.strip_prefix("deadline_us="))
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(deadlines, ["1", "1", "1", "2"], "{text}");
+        assert!(!text.contains("deadline_us=0"), "{text}");
     }
 
     #[test]
@@ -804,6 +776,12 @@ mod tests {
             ("req=1 t_us=zz client=c key=0xa deadline_us=- shards=1 arch=-\n", "bad t_us"),
             ("req=1 t_us=0.1 client=c key=abc deadline_us=- shards=1 arch=-\n", "0x-hex"),
             ("req=1 t_us=0.1 client=c key=0xzz deadline_us=- shards=1 arch=-\n", "bad hex"),
+            // Hostile client names the pre-escaping exporter emitted
+            // verbatim: a raw `=` inside the value and escape sequences
+            // no encoder produces must both be rejected, not silently
+            // re-tokenized.
+            ("req=1 t_us=0.1 client=a=b key=0xa deadline_us=- shards=1 arch=-\n", "client"),
+            ("req=1 t_us=0.1 client=%zz key=0xa deadline_us=- shards=1 arch=-\n", "client"),
             ("req=1 t_us=0.1 client=c key=0xa deadline_us=soon shards=1 arch=-\n", "deadline"),
             ("req=1 t_us=0.1 client=c key=0xa deadline_us=- shards=0 arch=-\n", ">= 1"),
         ] {

@@ -20,21 +20,25 @@
 //!   Chrome trace-event JSON (devices as tracks, request spans as flow
 //!   events; `--trace-out` on `omprt pool` / `omprt bench --pool`);
 //!   [`capture_text`] renders the compact replay capture (client, image
-//!   key, shard spec, deadline, submit time) the ROADMAP's trace-replay
-//!   item consumes; [`validate_chrome_trace`] and [`validate_capture`]
-//!   are the structural checkers CI runs over generated traces and
-//!   captures (`omprt trace-validate` sniffs the format);
+//!   key, shard spec, deadline, submit time) that [`parse_capture`]
+//!   reads back as typed [`CaptureRecord`]s for the `sched` replay
+//!   engine (`omprt replay`); [`validate_chrome_trace`] and
+//!   [`validate_capture`] are the structural checkers CI runs over
+//!   generated traces and captures (`omprt trace-validate` sniffs the
+//!   format);
 //! * [`Histogram`] (log-bucketed, signed, mergeable) replaces the old
 //!   capped-sample latency rings for per-client sojourn / queue-wait /
 //!   slack quantiles, and [`MetricsRegistry`] is the named-metrics
 //!   export behind `--metrics-json`.
 
+pub mod capture;
 pub mod event;
 pub mod export;
 pub mod metrics;
 pub mod ring;
 pub mod sink;
 
+pub use capture::{escape_client, parse_capture, unescape_client, Capture, CaptureRecord};
 pub use event::{Event, EventKind, RequestId, TraceRecord};
 pub use export::{
     capture_text, chrome_trace_json, parse_json, validate_capture, validate_chrome_trace,

@@ -44,9 +44,11 @@ use omprt::coordinator::PoolCoordinator;
 use omprt::devrt::RuntimeKind;
 use omprt::ir::passes::OptLevel;
 use omprt::sched::workload::{saxpy_request, scale_request, sharded_scale_request};
-use omprt::sched::{bytes_to_f32, Affinity, HealthState, OffloadHandle, PoolConfig};
+use omprt::sched::{
+    bytes_to_f32, replay_capture, Affinity, HealthState, OffloadHandle, PoolConfig, ReplayOptions,
+};
 use omprt::sim::Arch;
-use omprt::trace::{validate_chrome_trace, EventKind};
+use omprt::trace::{parse_capture, validate_chrome_trace, EventKind};
 use omprt::util::clock::{self, Clock, Participant, WallClock};
 use omprt::util::VirtualClock;
 use std::collections::{HashMap, HashSet};
@@ -1102,4 +1104,56 @@ fn retry_cap_surfaces_the_original_fault() {
     assert_eq!(m.retries_exhausted, 4);
     assert_eq!(m.failed, 4);
     assert_eq!(m.completed, 1);
+}
+
+#[test]
+fn virtual_replay_of_the_adversarial_fixture_under_scripted_faults() {
+    // Replay the committed adversarial fixture — 70% hot-key traffic,
+    // hostile client names, deadline_us=1 lines — against a degraded
+    // virtual-clock pool: device 0 fails transiently, device 1 stalls
+    // 50 ms per launch for a window. The replay driver paces by the
+    // recorded timestamps on the virtual timeline, so the whole storm
+    // costs ~zero wall time, and the exactly-once contract must hold
+    // through retries and quarantines: every re-issued request
+    // completes or fails, nothing is lost, nothing double-counted.
+    let cap = parse_capture(include_str!("../../traces/adversarial_hot_key.capture"))
+        .expect("committed fixture must parse");
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
+    let cfg = PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
+        .with_queue_cap(64)
+        .with_watchdog_min_ms(100)
+        .with_retry_max(2)
+        .with_clock(vc.clone())
+        .with_fault_spec("0=fail:10@launch:5")
+        .unwrap()
+        .with_fault_spec("1=stall:50ms:400ms@launch:10")
+        .unwrap();
+    let pc = PoolCoordinator::new(&cfg).unwrap();
+
+    let report = replay_capture(&pc.pool, &cap, &ReplayOptions::new()).unwrap();
+    assert_eq!(report.submitted, cap.records.len() as u64, "{report:?}");
+    assert_eq!(report.rejected, 0, "{report:?}");
+    assert_eq!(
+        report.completed + report.failed,
+        report.submitted,
+        "every re-issued request must terminate exactly once: {report:?}"
+    );
+    assert_eq!(report.mismatched, 0, "completed results must match the host reference");
+    assert_eq!(report.clients, 4, "the four hostile client names");
+
+    pc.pool.quiesce();
+    let m = pc.metrics();
+    assert_eq!(m.submitted, report.submitted);
+    assert_eq!(m.completed, report.completed);
+    assert_eq!(m.failed, report.failed);
+    for d in &m.devices {
+        assert_eq!(d.reserved, 0, "reservation leak on device {}", d.id);
+    }
+    // The hostile names survive the capture round-trip into the pool's
+    // own per-client accounting (including the literal-`-` client).
+    let lanes: HashSet<&str> = m.clients.iter().map(|c| c.client.as_str()).collect();
+    for hostile in ["tenant a", "a=b", "-", "100%"] {
+        assert!(lanes.contains(hostile), "missing client lane {hostile:?} in {lanes:?}");
+    }
 }

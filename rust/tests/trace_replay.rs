@@ -1,0 +1,224 @@
+//! The capture round-trip contract, end to end: drive a random
+//! multi-client workload against a virtual-clock pool, export the
+//! `# omprt-capture v1` capture, parse it, **replay** it against a
+//! fresh pool, and re-capture — the re-capture must agree with the
+//! original line for line in every field replay promises to preserve
+//! (client identity through hostile names, rounded-up deadline budgets
+//! including the sub-microsecond case, shard fan-out and arch hints,
+//! exact `t_us` pacing), and the image-key *partition* must carry over
+//! (keys are content hashes of the re-synthesized kernels, so the
+//! values change but equal-key lines stay equal-key).
+//!
+//! Also pinned here: two virtual-clock replays of the same capture
+//! produce **byte-identical** re-captures (the acceptance criterion
+//! behind `omprt replay --virtual`), the committed `traces/` fixtures
+//! are byte-identical to their `synth_capture` emitter (edit the
+//! emitter, not the files), and `submit` rejects client names the
+//! capture grammar could only mangle (control characters).
+
+use omprt::devrt::RuntimeKind;
+use omprt::ir::passes::OptLevel;
+use omprt::sched::workload::{scale_request_by, sharded_scale_request_by};
+use omprt::sched::{
+    bytes_to_f32, replay_capture, synth_capture, Affinity, DevicePool, PoolConfig, ReplayOptions,
+    SCENARIOS,
+};
+use omprt::sim::Arch;
+use omprt::trace::{parse_capture, validate_capture, Capture};
+use omprt::util::clock::Participant;
+use omprt::util::{SplitMix64, VirtualClock};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What the workload generator expects one capture line to record.
+struct ExpectedLine {
+    client: &'static str,
+    deadline_us: Option<u64>,
+    sharded: bool,
+    factor_bits: u32,
+}
+
+const CLIENTS: [&str; 6] = ["tenant a", "a=b", "-", "100%", "norm", ""];
+
+fn virtual_pool_cfg(vc: &Arc<VirtualClock>) -> PoolConfig {
+    PoolConfig::uniform(RuntimeKind::Portable, Arch::Nvptx64, 4)
+        .with_trace(true)
+        .with_trace_capacity(1 << 14)
+        .with_clock(vc.clone())
+}
+
+/// Drive a random (seeded) multi-client workload against a fresh
+/// virtual-clock pool, paced by whole-microsecond sleeps, and return
+/// the exported capture plus the per-line expectations.
+fn captured_workload(n: usize) -> (String, Vec<ExpectedLine>) {
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
+    let pool = DevicePool::new(&virtual_pool_cfg(&vc)).unwrap();
+    let min_trips = pool.shard_min_trips();
+    let clock = pool.clock();
+
+    let mut rng = SplitMix64::new(0xCAFE_F00D);
+    let mut expected = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for i in 0..n {
+        clock.sleep(Duration::from_micros(100 + rng.below(900)));
+        let client = CLIENTS[i % CLIENTS.len()];
+        let sharded = i % 8 == 3;
+        let factor = 1.5 + (i % 6) as f32 * 0.25;
+        let deadline = match i % 4 {
+            // The sub-microsecond budget: must record as deadline_us=1,
+            // never 0 (the absent sentinel).
+            0 => Some(Duration::from_nanos(300)),
+            1 => Some(Duration::from_micros(2_500)),
+            _ => None,
+        };
+        let (mut req, want) = if sharded {
+            // Exactly 2 x shard_min_trips elements pins the planner's
+            // element bound — and thus the recorded fan-out — to 2.
+            let data: Vec<f32> = (0..2 * min_trips).map(|k| (k % 61) as f32).collect();
+            sharded_scale_request_by(factor, &data, Affinity::any(), OptLevel::O2)
+        } else {
+            let data: Vec<f32> = (0..96).map(|k| ((k + i) % 61) as f32).collect();
+            scale_request_by(factor, &data, Affinity::any(), OptLevel::O2)
+        };
+        req.client = client.to_string();
+        req.deadline = deadline;
+        expected.push(ExpectedLine {
+            client,
+            deadline_us: match i % 4 {
+                0 => Some(1),
+                1 => Some(2_500),
+                _ => None,
+            },
+            sharded,
+            factor_bits: factor.to_bits(),
+        });
+        handles.push((pool.submit(req).unwrap(), want));
+    }
+    for (h, want) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+    }
+    pool.quiesce();
+    let text = pool.trace_capture();
+    assert_eq!(pool.trace_stats().dropped, 0, "ring must hold the whole workload");
+    (text, expected)
+}
+
+/// Replay `cap` on a fresh virtual-clock pool and return the re-capture.
+fn replay_on_fresh_virtual_pool(cap: &Capture) -> String {
+    let vc = Arc::new(VirtualClock::new());
+    let _driver = Participant::new(&*vc);
+    let pool = DevicePool::new(&virtual_pool_cfg(&vc)).unwrap();
+    let report = replay_capture(&pool, cap, &ReplayOptions::new()).unwrap();
+    assert_eq!(report.submitted as usize, cap.records.len(), "{report:?}");
+    assert_eq!(report.rejected, 0, "{report:?}");
+    assert_eq!(report.failed, 0, "{report:?}");
+    assert_eq!(report.mismatched, 0, "replayed results must match the host reference");
+    pool.quiesce();
+    assert_eq!(pool.trace_stats().dropped, 0);
+    pool.trace_capture()
+}
+
+/// Assert the key partitions of two captures agree: the map from
+/// original key to replayed key is a well-defined injection.
+fn assert_same_key_partition(a: &Capture, b: &Capture) {
+    let mut forward: HashMap<u64, u64> = HashMap::new();
+    let mut backward: HashMap<u64, u64> = HashMap::new();
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        if let Some(prev) = forward.insert(ra.key, rb.key) {
+            assert_eq!(prev, rb.key, "key {:#x} split into two replay keys", ra.key);
+        }
+        if let Some(prev) = backward.insert(rb.key, ra.key) {
+            assert_eq!(prev, ra.key, "keys merged into replay key {:#x}", rb.key);
+        }
+    }
+}
+
+#[test]
+fn capture_replay_recapture_round_trip_preserves_every_promised_field() {
+    const N: usize = 48;
+    let (text, expected) = captured_workload(N);
+    let cap = parse_capture(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+    assert_eq!(cap.records.len(), N, "every request was accepted");
+    assert_eq!(cap.dropped, 0);
+
+    // The export recorded what the generator intended: hostile client
+    // names decoded back verbatim, sub-microsecond deadlines rounded up
+    // to 1 (never collapsed to the absent sentinel), fan-out pinned.
+    let mut factor_keys: BTreeMap<u32, u64> = BTreeMap::new();
+    for (r, e) in cap.records.iter().zip(&expected) {
+        assert_eq!(r.client, e.client, "req {}", r.req);
+        assert_eq!(r.deadline_us, e.deadline_us, "req {}", r.req);
+        assert_eq!(r.shards, if e.sharded { 2 } else { 1 }, "req {}", r.req);
+        assert_eq!(r.arch.as_deref(), e.sharded.then_some("nvptx64"), "req {}", r.req);
+        assert!((r.t_us * 1e3).fract() == 0.0, "req {}: sub-ns t_us {}", r.req, r.t_us);
+        // Same kernel factor <=> same image key (within a kernel shape;
+        // sharded requests use a different launch grid, hence their own
+        // module contents are still keyed by factor alone).
+        let slot = factor_keys.entry(e.factor_bits).or_insert(r.key);
+        assert_eq!(*slot, r.key, "req {}: factor must map to one key", r.req);
+    }
+
+    // Replay -> re-capture: line-for-line agreement on every field the
+    // replay engine promises to preserve, and the key partition carries
+    // over even though the key values are new content hashes.
+    let replayed = replay_on_fresh_virtual_pool(&cap);
+    let recap = parse_capture(&replayed).unwrap_or_else(|e| panic!("{e}\n{replayed}"));
+    assert_eq!(recap.records.len(), cap.records.len());
+    for (orig, rep) in cap.records.iter().zip(&recap.records) {
+        assert_eq!(rep.client, orig.client, "req {}", orig.req);
+        assert_eq!(rep.deadline_us, orig.deadline_us, "req {}", orig.req);
+        assert_eq!(rep.shards, orig.shards, "req {}", orig.req);
+        assert_eq!(rep.arch, orig.arch, "req {}", orig.req);
+        assert_eq!(
+            rep.t_us, orig.t_us,
+            "req {}: virtual-clock pacing must land on the recorded instant",
+            orig.req
+        );
+    }
+    assert_same_key_partition(&cap, &recap);
+
+    // The acceptance criterion: a second replay of the same capture on
+    // a fresh virtual-clock pool re-captures byte-identically.
+    let replayed_again = replay_on_fresh_virtual_pool(&cap);
+    assert_eq!(replayed, replayed_again, "virtual replay must be deterministic");
+}
+
+#[test]
+fn committed_fixtures_match_their_emitter() {
+    let committed: [(&str, &str); 3] = [
+        ("steady-multi-tenant", include_str!("../../traces/steady_multi_tenant.capture")),
+        ("diurnal-burst", include_str!("../../traces/diurnal_burst.capture")),
+        ("adversarial-hot-key", include_str!("../../traces/adversarial_hot_key.capture")),
+    ];
+    assert_eq!(committed.len(), SCENARIOS.len(), "every scenario has a committed fixture");
+    for (name, text) in committed {
+        let n = validate_capture(text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(n > 0, "{name}: fixture must hold request lines");
+        assert_eq!(
+            synth_capture(name).unwrap().to_text(),
+            text,
+            "{name}: committed fixture must be regenerable from its emitter \
+             (edit the emitter and re-render, never the file)"
+        );
+    }
+}
+
+#[test]
+fn submit_rejects_client_names_the_capture_grammar_cannot_carry() {
+    let pool =
+        DevicePool::new(&PoolConfig::single(RuntimeKind::Portable, Arch::Nvptx64)).unwrap();
+    let data: Vec<f32> = (0..16).map(|k| k as f32).collect();
+    let (mut req, _) = scale_request_by(2.0, &data, Affinity::any(), OptLevel::O2);
+    req.client = "bad\u{7}name".to_string();
+    let err = pool.submit(req).unwrap_err();
+    assert!(err.to_string().contains("control characters"), "{err}");
+
+    // Whitespace and grammar metacharacters are fine — they escape.
+    let (mut req, want) = scale_request_by(2.0, &data, Affinity::any(), OptLevel::O2);
+    req.client = "spaced out=name".to_string();
+    let resp = pool.submit(req).unwrap().wait().unwrap();
+    assert_eq!(bytes_to_f32(resp.buffers[0].as_ref().unwrap()), want);
+}
